@@ -1,0 +1,5 @@
+"""Build-time python package: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Never imported at runtime — the rust coordinator consumes only the HLO-text
+artifacts this package emits via `make artifacts`.
+"""

@@ -1,0 +1,172 @@
+"""AOT compiler: lower the L2 JAX functions to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every unit is lowered for a manifest of padded shapes; the rust runtime picks
+the smallest compiled shape that fits and zero-pads. `artifacts/manifest.json`
+describes every module (function, shape params, input/output signature) so
+rust never hardcodes shapes.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Stamp-based: skips lowering when sources are older than the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+# Padded-shape grid. N: examples per tile; B: features per block; K: alpha
+# grid length for the line search. Kept deliberately small — each extra shape
+# is another PJRT compile at coordinator startup.
+N_SIZES = (1024, 4096, 16384, 65536)
+B_SIZES = (64, 128)
+K_ALPHAS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(dims, F32)
+
+
+def units():
+    """Yield (name, fn, example_args, meta) for every AOT unit."""
+    for n in N_SIZES:
+        yield (
+            f"stats_n{n}",
+            model.worker_stats,
+            (_spec(n), _spec(n), _spec(n)),
+            {"fn": "stats", "n": n},
+        )
+        yield (
+            f"line_search_n{n}_k{K_ALPHAS}",
+            model.leader_line_search,
+            (_spec(n), _spec(n), _spec(n), _spec(n), _spec(K_ALPHAS)),
+            {"fn": "line_search", "n": n, "k": K_ALPHAS},
+        )
+        for b in B_SIZES:
+            yield (
+                f"cd_sweep_n{n}_b{b}",
+                model.worker_block_sweep,
+                (_spec(n, b), _spec(n), _spec(n), _spec(b), _spec(b),
+                 _spec(1), _spec(1)),
+                {"fn": "cd_sweep", "n": n, "b": b},
+            )
+            yield (
+                f"cd_sweep_cov_n{n}_b{b}",
+                model.worker_block_sweep_cov,
+                (_spec(n, b), _spec(n), _spec(n), _spec(b), _spec(b),
+                 _spec(1), _spec(1)),
+                {"fn": "cd_sweep_cov", "n": n, "b": b},
+            )
+            yield (
+                f"matvec_n{n}_b{b}",
+                model.predict_margins,
+                (_spec(n, b), _spec(b), _spec(n)),
+                {"fn": "matvec", "n": n, "b": b},
+            )
+
+
+def _sources_digest() -> str:
+    """Digest of every python source that feeds the artifacts."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    paths = sorted(
+        os.path.join(dp, f)
+        for dp, _, fs in os.walk(root)
+        for f in fs
+        if f.endswith(".py")
+    )
+    for p in paths:
+        with open(p, "rb") as fh:
+            h.update(p.encode())
+            h.update(fh.read())
+    return h.hexdigest()
+
+
+def build(out_dir: str, force: bool = False) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    digest = _sources_digest()
+    if not force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as fh:
+                old = json.load(fh)
+            if old.get("sources_sha256") == digest and all(
+                os.path.exists(os.path.join(out_dir, u["file"]))
+                for u in old.get("units", [])
+            ):
+                print(f"artifacts up to date ({len(old['units'])} units)")
+                return 0
+        except (json.JSONDecodeError, KeyError):
+            pass  # stale/corrupt manifest: rebuild
+
+    entries = []
+    for name, fn, example_args, meta in units():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        out_info = lowered.out_info
+        flat, _ = jax.tree_util.tree_flatten(out_info)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                **meta,
+                "inputs": [list(a.shape) for a in example_args],
+                "outputs": [list(o.shape) for o in flat],
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars, outputs {entries[-1]['outputs']}")
+
+    with open(manifest_path, "w") as fh:
+        json.dump(
+            {
+                "version": 1,
+                "sources_sha256": digest,
+                "n_sizes": list(N_SIZES),
+                "b_sizes": list(B_SIZES),
+                "k_alphas": K_ALPHAS,
+                "units": entries,
+            },
+            fh,
+            indent=2,
+        )
+    print(f"wrote {manifest_path} ({len(entries)} units)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    return build(args.out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

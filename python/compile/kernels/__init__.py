@@ -1,0 +1,20 @@
+"""Pallas kernels (L1) for d-GLMNET + their pure-numpy oracles.
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness is the contract here; real-TPU resource
+estimates live in EXPERIMENTS.md §Perf.
+"""
+
+from compile.kernels.cd_sweep import cd_block_sweep
+from compile.kernels.cd_sweep_cov import cd_block_sweep_cov
+from compile.kernels.line_search import line_search_grid
+from compile.kernels.matvec import matvec_block
+from compile.kernels.stats import logistic_stats
+
+__all__ = [
+    "cd_block_sweep",
+    "cd_block_sweep_cov",
+    "line_search_grid",
+    "matvec_block",
+    "logistic_stats",
+]

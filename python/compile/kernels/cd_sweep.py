@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: one cyclic coordinate-descent sweep over a dense
+feature block — the d-GLMNET per-machine hot loop (paper Alg 2 / eq. (6)).
+
+The worker's feature shard is tiled into (N, B) dense column blocks that live
+in VMEM for the whole sweep. The sweep has a true sequential dependency: each
+coordinate update changes the working residual r = z - dbeta.x that the next
+coordinate reads. We express it as a `fori_loop` over the B columns; per
+column the work is two (N,)-length fused reductions (dot products — the
+MXU-eligible part) plus an axpy, all on VMEM-resident data.
+
+Per-column closed form (eq. (6) + nu ridge term; see kernels/ref.py for the
+derivation):
+
+    A = sum w x^2 + nu
+    c = dot(w*r, x) + u*(A - nu) + beta_j*A
+    s = soft_threshold(c, lam) / A
+    r -= (s - beta_j - u) * x ;  delta_j = s - beta_j
+
+Zero columns (block padding) have A = nu, c = 0 => delta stays 0.
+Zero-weight rows (example padding) are inert in every reduction.
+
+HARDWARE ADAPTATION: the paper streams sparse columns from disk on a CPU
+cluster. On TPU the analogue is the BlockSpec HBM->VMEM schedule over column
+blocks; the per-column reductions ride the VPU/MXU instead of scalar CPU
+loops. The column-denominator precompute `wx2 = w @ (X*X)` is a single
+(1,N)x(N,B) matmul on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_threshold(x, a):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - a, 0.0)
+
+
+def _cd_sweep_kernel(x_ref, w_ref, r_ref, beta_ref, delta_ref, lam_ref, nu_ref,
+                     delta_out_ref, r_out_ref):
+    X = x_ref[...]                      # (N, B) resident for the whole sweep
+    w = w_ref[...]
+    beta = beta_ref[...]
+    lam = lam_ref[0]
+    nu = nu_ref[0]
+    b = X.shape[1]
+
+    # All column denominators in one MXU pass: A_j = sum_i w_i x_ij^2 + nu.
+    denoms = jnp.dot(w, X * X, precision=jax.lax.Precision.HIGHEST) + nu
+
+    def body(j, carry):
+        r, delta = carry
+        x = jax.lax.dynamic_slice_in_dim(X, j, 1, axis=1)[:, 0]
+        A = denoms[j]
+        u = delta[j]
+        bj = jax.lax.dynamic_slice_in_dim(beta, j, 1)[0]
+        c = jnp.dot(w * r, x, precision=jax.lax.Precision.HIGHEST) \
+            + u * (A - nu) + bj * A
+        s = _soft_threshold(c, lam) / A
+        step = s - bj - u
+        r = r - step * x
+        delta = jax.lax.dynamic_update_slice_in_dim(delta, (s - bj)[None], j, 0)
+        return r, delta
+
+    r, delta = jax.lax.fori_loop(0, b, body, (r_ref[...], delta_ref[...]))
+    delta_out_ref[...] = delta
+    r_out_ref[...] = r
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cd_block_sweep(X, w, r, beta, delta, lam, nu, *, interpret=True):
+    """One cyclic CD sweep over dense block X (N, B).
+
+    lam, nu: shape-(1,) f32 arrays (AOT modules take only array args).
+    -> (delta_new (B,), r_new (N,)).
+    """
+    n, b = X.shape
+    return pl.pallas_call(
+        _cd_sweep_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(X, w, r, beta, delta, lam, nu)

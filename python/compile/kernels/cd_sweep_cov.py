@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: covariance-update cyclic CD sweep — the OPTIMIZED hot
+path (EXPERIMENTS.md §Perf iteration 1).
+
+The naive sweep (`cd_sweep.py`) does two (N,)-length reductions per column
+inside the sequential loop: O(N·B) serial work the TPU can't batch. The
+covariance formulation hoists everything MXU-shaped out of the loop:
+
+    G = Xᵀ diag(w) X            (B × B Gram, one matmul)
+    c = Xᵀ (w ⊙ r)              (one matvec)
+    loop j = 0..B:              (all O(B) now)
+        A   = G[j,j] + nu
+        num = c[j] + u_j (A - nu) + beta_j A
+        s   = soft_threshold(num, lam) / A
+        δ   = s - beta_j - u_j
+        c  -= δ G[j, :]          # the covariance update
+        delta[j] = s - beta_j
+    r -= X @ (delta - delta_in)  (one matvec at the end)
+
+Identical math to the naive kernel (c_j tracks Σ w r x_ij exactly), but the
+sequential loop touches only (B,)-vectors: the N-dimension work is three
+MXU matmuls. Serial flops drop from O(N·B) to O(B²).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_threshold(x, a):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - a, 0.0)
+
+
+def _cd_sweep_cov_kernel(x_ref, w_ref, r_ref, beta_ref, delta_ref, lam_ref, nu_ref,
+                         delta_out_ref, r_out_ref):
+    X = x_ref[...]                        # (N, B)
+    w = w_ref[...]
+    r = r_ref[...]
+    beta = beta_ref[...]
+    delta_in = delta_ref[...]
+    lam = lam_ref[0]
+    nu = nu_ref[0]
+    b = X.shape[1]
+
+    wx = X * w[:, None]                   # (N, B) — reused by both matmuls
+    # Gram and initial covariance vector: the only O(N) work, all MXU.
+    gram = jnp.dot(wx.T, X, precision=jax.lax.Precision.HIGHEST)       # (B, B)
+    c0 = jnp.dot(wx.T, r, precision=jax.lax.Precision.HIGHEST)         # (B,)
+    diag = jnp.diagonal(gram) + nu                                     # A_j
+
+    def body(j, carry):
+        c, delta = carry
+        a = diag[j]
+        u = jax.lax.dynamic_slice_in_dim(delta, j, 1)[0]
+        bj = jax.lax.dynamic_slice_in_dim(beta, j, 1)[0]
+        num = jax.lax.dynamic_slice_in_dim(c, j, 1)[0] + u * (a - nu) + bj * a
+        s = _soft_threshold(num, lam) / a
+        step = s - bj - u
+        grow = jax.lax.dynamic_slice_in_dim(gram, j, 1, axis=0)[0]     # G[j, :]
+        c = c - step * grow
+        delta = jax.lax.dynamic_update_slice_in_dim(delta, (s - bj)[None], j, 0)
+        return c, delta
+
+    _, delta = jax.lax.fori_loop(0, b, body, (c0, delta_in))
+    # one matvec realizes every residual update at once
+    r_out_ref[...] = r - jnp.dot(
+        X, delta - delta_in, precision=jax.lax.Precision.HIGHEST
+    )
+    delta_out_ref[...] = delta
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cd_block_sweep_cov(X, w, r, beta, delta, lam, nu, *, interpret=True):
+    """Covariance-update CD sweep; same signature/contract as
+    `cd_block_sweep` (drop-in replacement on the rust side)."""
+    n, b = X.shape
+    return pl.pallas_call(
+        _cd_sweep_cov_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(X, w, r, beta, delta, lam, nu)

@@ -1,0 +1,31 @@
+"""L1 Pallas kernel: dense block mat-vec, m += X @ v.
+
+Used to (re)build margins from a coefficient block — warmstart margins at a
+new lambda on the regularization path, and test-set prediction in the XLA
+engine. (N, B) x (B,) rides the MXU with the block resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(x_ref, v_ref, acc_ref, out_ref):
+    out_ref[...] = acc_ref[...] + jnp.dot(
+        x_ref[...], v_ref[...], precision=jax.lax.Precision.HIGHEST
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matvec_block(X, v, acc, *, interpret=True):
+    """-> acc + X @ v, shape (N,)."""
+    n = X.shape[0]
+    return pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(X, v, acc)

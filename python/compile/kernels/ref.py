@@ -1,0 +1,116 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+These are deliberately written as straightforward, loop-heavy float64 numpy
+code — an *independent* code path from the Pallas kernels — so that a bug in
+the kernel cannot be mirrored in the oracle.
+
+Math (paper eq. (4)-(6), with the nu-regularized Hessian of Section 2):
+
+    p_i = sigmoid(beta . x_i)
+    w_i = p_i (1 - p_i)
+    z_i = ((y_i + 1)/2 - p_i) / w_i
+
+One cyclic coordinate-descent sweep over a feature block solves
+
+    argmin_{dbeta}  1/2 sum_i w_i (z_i - dbeta . x_i)^2
+                    + nu/2 ||dbeta||^2 + lam ||beta + dbeta||_1
+
+per-coordinate closed form (eq. (6) extended with the nu term):
+
+    A_j   = sum_i w_i x_ij^2 + nu
+    c_j   = sum_i w_i x_ij r_i + u_j (A_j - nu) + beta_j A_j
+    s_j   = soft_threshold(c_j, lam) / A_j          # new beta_j + dbeta_j
+    r_i  -= (s_j - beta_j - u_j) x_ij               # maintain r = z - dbeta.x
+
+where r_i = z_i - dbeta . x_i is the working residual and u_j the current
+dbeta_j. `w == 0` rows (padding) contribute nothing anywhere.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+W_EPS = 1e-10  # guard for z = (...)/w on saturated examples
+
+
+def soft_threshold(x: float, a: float) -> float:
+    return np.sign(x) * max(abs(x) - a, 0.0)
+
+
+def ref_logistic_stats(margins, y, mask):
+    """-> (w, z, loss_sum). float64 numpy oracle.
+
+    margins: (N,) beta.x_i ; y: (N,) in {-1,+1} (anything on masked rows);
+    mask: (N,) {0,1}. Returns masked w, z and the masked log-loss sum.
+    """
+    m = np.asarray(margins, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+    p = 1.0 / (1.0 + np.exp(-m))
+    w = p * (1.0 - p)
+    z = ((y + 1.0) / 2.0 - p) / np.maximum(w, W_EPS)
+    # stable log(1 + exp(-y m))
+    t = -y * m
+    loss = np.maximum(t, 0.0) + np.log1p(np.exp(-np.abs(t)))
+    return w * mask, z * mask, float(np.sum(loss * mask))
+
+
+def ref_cd_block_sweep(X, w, r, beta, delta, lam, nu):
+    """One cyclic CD sweep over the columns of dense block X.
+
+    X: (N, B); w, r: (N,); beta, delta: (B,) — beta is the *current* global
+    coefficient for these features, delta the accumulated update so far this
+    outer iteration. Returns (delta_new, r_new), both float64.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    r = np.array(r, dtype=np.float64)
+    beta = np.asarray(beta, dtype=np.float64)
+    delta = np.array(delta, dtype=np.float64)
+    N, B = X.shape
+    for j in range(B):
+        x = X[:, j]
+        A = float(np.dot(w, x * x)) + nu
+        u = delta[j]
+        c = float(np.dot(w * r, x)) + u * (A - nu) + beta[j] * A
+        s = soft_threshold(c, lam) / A
+        step = s - beta[j] - u
+        delta[j] = s - beta[j]
+        r = r - step * x
+    return delta, r
+
+
+def ref_line_search_grid(margins, dmargins, y, mask, alphas):
+    """Masked logistic loss at beta + alpha * dbeta for each alpha.
+
+    -> (K,) float64: sum_i mask_i log(1 + exp(-y_i (m_i + alpha_k dm_i)))
+    (the L1 term is handled by the caller; it needs only O(p) data).
+    """
+    m = np.asarray(margins, dtype=np.float64)
+    dm = np.asarray(dmargins, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+    out = []
+    for a in np.asarray(alphas, dtype=np.float64):
+        t = -y * (m + a * dm)
+        loss = np.maximum(t, 0.0) + np.log1p(np.exp(-np.abs(t)))
+        out.append(float(np.sum(loss * mask)))
+    return np.array(out)
+
+
+def ref_matvec(X, v):
+    """(N, B) @ (B,) in float64."""
+    return np.asarray(X, dtype=np.float64) @ np.asarray(v, dtype=np.float64)
+
+
+def ref_full_quadratic_objective(X, w, z, beta, delta, lam, nu):
+    """Value of the (block) quadratic subproblem objective — used by tests to
+    assert that a sweep never increases it.
+
+    1/2 sum w (z - delta.x)^2 + nu/2 ||delta||^2 + lam ||beta + delta||_1
+    """
+    X = np.asarray(X, dtype=np.float64)
+    resid = np.asarray(z, dtype=np.float64) - X @ np.asarray(delta, np.float64)
+    quad = 0.5 * float(np.dot(np.asarray(w, np.float64), resid * resid))
+    quad += 0.5 * nu * float(np.dot(delta, delta))
+    return quad + lam * float(np.sum(np.abs(np.asarray(beta) + np.asarray(delta))))

@@ -1,0 +1,99 @@
+"""L2: the JAX compute graph for d-GLMNET, composed from the L1 Pallas kernels.
+
+These are the four AOT units the rust coordinator executes on its hot path
+(via PJRT, after `aot.py` lowers them to HLO text). Everything is f32 and
+fixed-shape; the rust runtime zero-pads to the nearest compiled shape
+(padding rows carry mask = 0 => w = 0 => mathematically inert; padding
+columns are all-zero => their coordinate updates are exactly 0).
+
+Scalars (lam, nu) travel as shape-(1,) arrays: AOT modules take only arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    cd_block_sweep,
+    cd_block_sweep_cov,
+    line_search_grid,
+    logistic_stats,
+    matvec_block,
+)
+
+
+def worker_stats(margins, y, mask):
+    """Per-iteration worker prologue: (w, z, loss_sum).
+
+    One fused elementwise pass over the examples (paper eq. (4)); the loss
+    sum comes along for free and seeds the line-search bookkeeping.
+    """
+    return logistic_stats(margins, y, mask)
+
+
+def worker_block_sweep(X, w, r, beta, delta, lam, nu):
+    """One cyclic CD sweep over a dense (N, B) feature block (paper Alg 2).
+
+    Carries the working residual r = z - dbeta.x across the worker's blocks;
+    rust threads the returned r into the next block's call.
+    """
+    return cd_block_sweep(X, w, r, beta, delta, lam, nu)
+
+
+def worker_block_sweep_cov(X, w, r, beta, delta, lam, nu):
+    """Covariance-update variant of the sweep (EXPERIMENTS.md §Perf): same
+    contract, O(B²) serial work instead of O(N·B) — the production unit."""
+    return cd_block_sweep_cov(X, w, r, beta, delta, lam, nu)
+
+
+def leader_line_search(margins, dmargins, y, mask, alphas):
+    """Loss part of f(beta + alpha dbeta) for a grid of alphas (paper Alg 3).
+
+    O(n) state only — the paper's reason the line search fits one machine.
+    """
+    return line_search_grid(margins, dmargins, y, mask, alphas)
+
+
+def predict_margins(X, v, acc):
+    """acc + X @ v over a dense block — margin rebuilds and test prediction."""
+    return matvec_block(X, v, acc)
+
+
+# ---------------------------------------------------------------------------
+# Python-side composition helpers (tests / oracles only — never AOT'd).
+# ---------------------------------------------------------------------------
+
+def full_objective(margins, y, mask, beta, lam):
+    """f(beta) = masked logloss(margins) + lam * ||beta||_1 (paper eq. (2))."""
+    t = -y * margins
+    loss = jnp.maximum(t, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(t)))
+    return jnp.sum(loss * mask) + lam * jnp.sum(jnp.abs(beta))
+
+
+def single_machine_iteration(X, y, mask, beta, lam, nu, block=64):
+    """One full d-GLMNET outer iteration with M = 1 on a dense X — the
+    python oracle used by tests to pin down the exact sequence of kernel
+    calls the rust coordinator makes.
+
+    Returns (delta, dmargins, loss_before).
+    """
+    margins = X @ beta
+    w, z, loss = worker_stats(margins, y, mask)
+    n, p = X.shape
+    r = z
+    delta = jnp.zeros_like(beta)
+    lam_a = jnp.array([lam], jnp.float32)
+    nu_a = jnp.array([nu], jnp.float32)
+    for start in range(0, p, block):
+        stop = min(start + block, p)
+        width = stop - start
+        Xb = X[:, start:stop]
+        if width < block:  # pad the ragged tail block with zero columns
+            Xb = jnp.pad(Xb, ((0, 0), (0, block - width)))
+        beta_b = jnp.pad(beta[start:stop], (0, block - width))
+        delta_b = jnp.pad(delta[start:stop], (0, block - width))
+        d_new, r = worker_block_sweep(Xb, w, r, beta_b, delta_b, lam_a, nu_a)
+        delta = delta.at[start:stop].set(d_new[:width])
+    dmargins = z - r
+    return delta, dmargins, loss[0]

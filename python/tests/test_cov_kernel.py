@@ -1,0 +1,87 @@
+"""The covariance-update sweep must be numerically equivalent to both the
+naive Pallas sweep and the float64 oracle — the §Perf optimization cannot
+change the math."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cd_block_sweep, cd_block_sweep_cov
+from compile.kernels import ref
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.sampled_from([16, 128, 500]),
+    b=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    lam=st.floats(0.0, 5.0),
+)
+def test_cov_sweep_matches_oracle(n, b, seed, lam):
+    rng = np.random.default_rng(seed)
+    nu = 1e-6
+    X = rng.normal(size=(n, b)).astype(np.float32)
+    margins = (0.5 * rng.normal(size=n)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    w_r, z_r, _ = ref.ref_logistic_stats(margins, y, mask)
+    beta = (rng.normal(size=b) * (rng.random(b) < 0.5)).astype(np.float32)
+
+    d_cov, r_cov = cd_block_sweep_cov(
+        jnp.array(X), jnp.array(w_r.astype(np.float32)),
+        jnp.array(z_r.astype(np.float32)), jnp.array(beta),
+        jnp.zeros(b, jnp.float32), jnp.array([lam], jnp.float32),
+        jnp.array([nu], jnp.float32))
+    d_ref, r_ref = ref.ref_cd_block_sweep(X, w_r, z_r, beta, np.zeros(b), lam, nu)
+    np.testing.assert_allclose(np.asarray(d_cov), d_ref, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(r_cov), r_ref, rtol=5e-3, atol=5e-3)
+
+
+def test_cov_and_naive_agree_bitwise_tolerance():
+    rng = np.random.default_rng(9)
+    n, b = 300, 32
+    X = rng.normal(size=(n, b)).astype(np.float32)
+    w = (0.25 * rng.random(n)).astype(np.float32)
+    r = rng.normal(size=n).astype(np.float32)
+    beta = rng.normal(size=b).astype(np.float32)
+    args = (jnp.array(X), jnp.array(w), jnp.array(r), jnp.array(beta),
+            jnp.zeros(b, jnp.float32), jnp.array([0.3], jnp.float32),
+            jnp.array([1e-6], jnp.float32))
+    d1, r1 = cd_block_sweep(*args)
+    d2, r2 = cd_block_sweep_cov(*args)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=2e-3, atol=2e-3)
+
+
+def test_cov_sweep_nonzero_delta_in_carries():
+    """delta_in != 0 (multi-cycle contract) must be honored identically."""
+    rng = np.random.default_rng(11)
+    n, b = 200, 8
+    X = rng.normal(size=(n, b)).astype(np.float32)
+    w = (0.25 * np.ones(n)).astype(np.float32)
+    beta = rng.normal(size=b).astype(np.float32)
+    delta_in = (0.1 * rng.normal(size=b)).astype(np.float32)
+    # r consistent with delta_in: r = z - X @ delta_in
+    z = rng.normal(size=n).astype(np.float32)
+    r = z - X @ delta_in
+    args = (jnp.array(X), jnp.array(w), jnp.array(r), jnp.array(beta),
+            jnp.array(delta_in), jnp.array([0.2], jnp.float32),
+            jnp.array([1e-6], jnp.float32))
+    d1, r1 = cd_block_sweep(*args)
+    d2, r2 = cd_block_sweep_cov(*args)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=2e-3, atol=2e-3)
+
+
+def test_cov_zero_columns_stay_zero():
+    rng = np.random.default_rng(12)
+    n, b = 64, 16
+    X = rng.normal(size=(n, b)).astype(np.float32)
+    X[:, 10:] = 0.0
+    w = (0.25 * np.ones(n)).astype(np.float32)
+    r = rng.normal(size=n).astype(np.float32)
+    d, _ = cd_block_sweep_cov(
+        jnp.array(X), jnp.array(w), jnp.array(r),
+        jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.float32),
+        jnp.array([0.1], jnp.float32), jnp.array([1e-6], jnp.float32))
+    assert np.all(np.asarray(d)[10:] == 0.0)

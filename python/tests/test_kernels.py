@@ -1,0 +1,240 @@
+"""Pallas kernels vs the pure-numpy oracle (ref.py) — the CORE correctness
+signal of the L1 layer. Hypothesis sweeps shapes, seeds and padding patterns.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    cd_block_sweep,
+    line_search_grid,
+    logistic_stats,
+    matvec_block,
+)
+from compile.kernels import ref
+
+import jax.numpy as jnp
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_problem(rng, n, b, density=1.0, pad_rows=0):
+    X = rng.normal(size=(n, b)).astype(np.float32)
+    if density < 1.0:
+        X *= rng.random(size=(n, b)) < density
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    mask = np.ones(n, dtype=np.float32)
+    if pad_rows:
+        mask[n - pad_rows:] = 0.0
+        X[n - pad_rows:] = 0.0
+    margins = (0.5 * rng.normal(size=n)).astype(np.float32)
+    return X, y, mask, margins
+
+
+# ---------------------------------------------------------------------- stats
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.sampled_from([8, 64, 257, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+    pad_frac=st.floats(0.0, 0.5),
+)
+def test_stats_matches_ref(n, seed, pad_frac):
+    rng = _rng(seed)
+    _, y, mask, margins = make_problem(rng, n, 1, pad_rows=int(n * pad_frac))
+    w, z, loss = logistic_stats(jnp.array(margins), jnp.array(y), jnp.array(mask))
+    w_r, z_r, loss_r = ref.ref_logistic_stats(margins, y, mask)
+    np.testing.assert_allclose(np.asarray(w), w_r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(z), z_r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(float(loss[0]), loss_r, rtol=1e-3)
+
+
+def test_stats_extreme_margins_are_finite():
+    margins = np.array([-40.0, -5.0, 0.0, 5.0, 40.0], dtype=np.float32)
+    y = np.array([1.0, -1.0, 1.0, -1.0, 1.0], dtype=np.float32)
+    mask = np.ones(5, dtype=np.float32)
+    w, z, loss = logistic_stats(jnp.array(margins), jnp.array(y), jnp.array(mask))
+    assert np.all(np.isfinite(np.asarray(w)))
+    assert np.all(np.isfinite(np.asarray(z)))
+    assert np.isfinite(float(loss[0]))
+
+
+def test_stats_masked_rows_zeroed():
+    n = 32
+    rng = _rng(0)
+    _, y, mask, margins = make_problem(rng, n, 1, pad_rows=16)
+    w, z, _ = logistic_stats(jnp.array(margins), jnp.array(y), jnp.array(mask))
+    assert np.all(np.asarray(w)[16:] == 0.0)
+    assert np.all(np.asarray(z)[16:] == 0.0)
+
+
+# ------------------------------------------------------------------- cd sweep
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.sampled_from([16, 128, 500]),
+    b=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    lam=st.floats(0.0, 5.0),
+    density=st.sampled_from([1.0, 0.3]),
+)
+def test_cd_sweep_matches_ref(n, b, seed, lam, density):
+    rng = _rng(seed)
+    nu = 1e-6
+    X, y, mask, margins = make_problem(rng, n, b, density=density)
+    w_r, z_r, _ = ref.ref_logistic_stats(margins, y, mask)
+    w = w_r.astype(np.float32)
+    r0 = z_r.astype(np.float32)
+    beta = (rng.normal(size=b) * (rng.random(size=b) < 0.5)).astype(np.float32)
+    delta0 = np.zeros(b, dtype=np.float32)
+
+    d_k, r_k = cd_block_sweep(
+        jnp.array(X), jnp.array(w), jnp.array(r0), jnp.array(beta),
+        jnp.array(delta0), jnp.array([lam], jnp.float32),
+        jnp.array([nu], jnp.float32),
+    )
+    d_ref, r_ref = ref.ref_cd_block_sweep(X, w, r0, beta, delta0, lam, nu)
+    np.testing.assert_allclose(np.asarray(d_k), d_ref, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(r_k), r_ref, rtol=5e-3, atol=5e-3)
+
+
+def test_cd_sweep_zero_columns_stay_zero():
+    """Padding columns (all-zero) must produce exactly zero updates."""
+    rng = _rng(7)
+    n, b = 64, 16
+    X, y, mask, margins = make_problem(rng, n, b)
+    X[:, 10:] = 0.0
+    w_r, z_r, _ = ref.ref_logistic_stats(margins, y, mask)
+    d, _ = cd_block_sweep(
+        jnp.array(X), jnp.array(w_r.astype(np.float32)),
+        jnp.array(z_r.astype(np.float32)),
+        jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.float32),
+        jnp.array([0.1], jnp.float32), jnp.array([1e-6], jnp.float32),
+    )
+    assert np.all(np.asarray(d)[10:] == 0.0)
+
+
+def test_cd_sweep_large_lambda_gives_all_zero():
+    """lam > |num| for every coordinate => full shrinkage (from beta = 0)."""
+    rng = _rng(3)
+    n, b = 128, 8
+    X, y, mask, margins = make_problem(rng, n, b)
+    w_r, z_r, _ = ref.ref_logistic_stats(np.zeros(n, np.float32), y, mask)
+    lam = 1e6
+    d, _ = cd_block_sweep(
+        jnp.array(X), jnp.array(w_r.astype(np.float32)),
+        jnp.array(z_r.astype(np.float32)),
+        jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.float32),
+        jnp.array([lam], jnp.float32), jnp.array([1e-6], jnp.float32),
+    )
+    assert np.all(np.asarray(d) == 0.0)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_cd_sweep_never_increases_quadratic_objective(seed):
+    """Each sweep is exact coordinate minimization => the quadratic subproblem
+    objective is non-increasing (paper Alg 2 invariant)."""
+    rng = _rng(seed)
+    n, b = 100, 12
+    nu, lam = 1e-6, 0.3
+    X, y, mask, margins = make_problem(rng, n, b)
+    w_r, z_r, _ = ref.ref_logistic_stats(margins, y, mask)
+    beta = rng.normal(size=b).astype(np.float32)
+    before = ref.ref_full_quadratic_objective(X, w_r, z_r, beta, np.zeros(b), lam, nu)
+    d, _ = cd_block_sweep(
+        jnp.array(X), jnp.array(w_r.astype(np.float32)),
+        jnp.array(z_r.astype(np.float32)), jnp.array(beta),
+        jnp.zeros(b, jnp.float32),
+        jnp.array([lam], jnp.float32), jnp.array([nu], jnp.float32),
+    )
+    after = ref.ref_full_quadratic_objective(
+        X, w_r, z_r, beta, np.asarray(d, dtype=np.float64), lam, nu)
+    assert after <= before + 1e-4 * (1.0 + abs(before))
+
+
+def test_cd_sweep_carries_residual_across_blocks():
+    """Splitting 2B features into two sequential block calls must equal one
+    call on the concatenated block (the rust worker relies on this)."""
+    rng = _rng(11)
+    n, b = 96, 8
+    X, y, mask, margins = make_problem(rng, n, 2 * b)
+    w_r, z_r, _ = ref.ref_logistic_stats(margins, y, mask)
+    w = jnp.array(w_r.astype(np.float32))
+    lam = jnp.array([0.2], jnp.float32)
+    nu = jnp.array([1e-6], jnp.float32)
+    beta = rng.normal(size=2 * b).astype(np.float32)
+
+    d_full, r_full = cd_block_sweep(
+        jnp.array(X), w, jnp.array(z_r.astype(np.float32)),
+        jnp.array(beta), jnp.zeros(2 * b, jnp.float32), lam, nu)
+
+    d1, r_mid = cd_block_sweep(
+        jnp.array(X[:, :b]), w, jnp.array(z_r.astype(np.float32)),
+        jnp.array(beta[:b]), jnp.zeros(b, jnp.float32), lam, nu)
+    d2, r_end = cd_block_sweep(
+        jnp.array(X[:, b:]), w, r_mid,
+        jnp.array(beta[b:]), jnp.zeros(b, jnp.float32), lam, nu)
+
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(d1), np.asarray(d2)]), np.asarray(d_full),
+        rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_end), np.asarray(r_full),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- line search
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.sampled_from([8, 255, 1024]),
+    k=st.sampled_from([1, 5, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    pad_frac=st.floats(0.0, 0.5),
+)
+def test_line_search_matches_ref(n, k, seed, pad_frac):
+    rng = _rng(seed)
+    _, y, mask, margins = make_problem(rng, n, 1, pad_rows=int(n * pad_frac))
+    dm = rng.normal(size=n).astype(np.float32) * mask
+    alphas = np.linspace(0.0, 1.0, k).astype(np.float32)
+    got = line_search_grid(
+        jnp.array(margins), jnp.array(dm), jnp.array(y), jnp.array(mask),
+        jnp.array(alphas))
+    want = ref.ref_line_search_grid(margins, dm, y, mask, alphas)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3)
+
+
+def test_line_search_alpha0_equals_current_loss():
+    rng = _rng(5)
+    n = 200
+    _, y, mask, margins = make_problem(rng, n, 1)
+    dm = rng.normal(size=n).astype(np.float32)
+    _, _, loss = logistic_stats(jnp.array(margins), jnp.array(y), jnp.array(mask))
+    ls = line_search_grid(
+        jnp.array(margins), jnp.array(dm), jnp.array(y), jnp.array(mask),
+        jnp.array([0.0], jnp.float32))
+    np.testing.assert_allclose(float(ls[0]), float(loss[0]), rtol=1e-5)
+
+
+# --------------------------------------------------------------------- matvec
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.sampled_from([8, 100, 512]),
+    b=st.sampled_from([4, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(n, b, seed):
+    rng = _rng(seed)
+    X = rng.normal(size=(n, b)).astype(np.float32)
+    v = rng.normal(size=b).astype(np.float32)
+    acc = rng.normal(size=n).astype(np.float32)
+    got = matvec_block(jnp.array(X), jnp.array(v), jnp.array(acc))
+    want = ref.ref_matvec(X, v) + acc
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,149 @@
+//! P1 — hot-path micro benchmarks: one worker sweep (XLA vs native), leader
+//! stats, batched line-search evaluation, and the simulated tree AllReduce.
+//! These are the pieces the §Perf iteration log in EXPERIMENTS.md tracks.
+//!
+//! Run: `cargo bench --bench bench_iteration`
+
+use std::sync::Arc;
+
+use dglmnet::bench_harness::{bench, section};
+use dglmnet::cluster::allreduce::TreeAllReduce;
+use dglmnet::cluster::network::{NetworkLedger, NetworkModel};
+use dglmnet::cluster::partition::{FeaturePartition, PartitionStrategy};
+use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::shuffle::shard_in_memory;
+use dglmnet::data::synth;
+use dglmnet::engine::{NativeEngine, SubproblemEngine, XlaEngine};
+use dglmnet::solver::leader::LeaderCompute;
+use dglmnet::solver::quadratic::stats_native;
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    let have_artifacts = artifacts.join("manifest.json").exists();
+    if !have_artifacts {
+        eprintln!("WARNING: artifacts missing; XLA benches skipped (run `make artifacts`)");
+    }
+
+    // A webspam-like worker shard: 1000 local features over 3000 examples.
+    let ds = synth::webspam_like(3_000, 4_000, 40, 7);
+    let n = ds.n_examples();
+    let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 4_000, 4, None);
+    let shard = shard_in_memory(&ds.x, &part).remove(0);
+    let margins = vec![0f32; n];
+    let (w, z, _) = stats_native(&margins, &ds.y);
+    let beta = vec![0f32; shard.csc.n_cols];
+
+    section("worker sweep (one machine, 1000 features, n = 3000)");
+    {
+        let mut ne = NativeEngine::new(shard.clone(), n);
+        let s = bench("native sparse sweep", 2, 10, || {
+            let _ = ne.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+        });
+        println!("{}", s.row());
+    }
+    if have_artifacts {
+        let mut naive = XlaEngine::with_kernel(shard.clone(), n, 64, artifacts, true).unwrap();
+        let s = bench("xla naive sweep (b=64, per-column)", 2, 10, || {
+            let _ = naive.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+        });
+        println!("{}", s.row());
+        let mut xe = XlaEngine::new(shard.clone(), n, 64, artifacts).unwrap();
+        let s = bench("xla cov sweep (b=64, optimized)", 2, 10, || {
+            let _ = xe.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+        });
+        println!("{}", s.row());
+        let mut xe128 = XlaEngine::new(shard.clone(), n, 128, artifacts).unwrap();
+        let s = bench("xla cov sweep (b=128, optimized)", 2, 10, || {
+            let _ = xe128.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+        });
+        println!("{}", s.row());
+    }
+
+    section("worker sweep on a DENSE shard (epsilon-like, 128 features, n = 3000)");
+    {
+        let dense = synth::epsilon_like(3_000, 128, 8);
+        let dpart = FeaturePartition::build(PartitionStrategy::RoundRobin, 128, 1, None);
+        let dshard = shard_in_memory(&dense.x, &dpart).remove(0);
+        let dmargins = vec![0f32; 3_000];
+        let (dw, dz, _) = stats_native(&dmargins, &dense.y);
+        let dbeta = vec![0f32; 128];
+        let mut ne = NativeEngine::new(dshard.clone(), 3_000);
+        let s = bench("native sparse sweep (dense data)", 2, 10, || {
+            let _ = ne.sweep(&dw, &dz, &dbeta, 0.5, 1e-6).unwrap();
+        });
+        println!("{}", s.row());
+        if have_artifacts {
+            let mut xe = XlaEngine::new(dshard.clone(), 3_000, 64, artifacts).unwrap();
+            let s = bench("xla cov sweep (dense data)", 2, 10, || {
+                let _ = xe.sweep(&dw, &dz, &dbeta, 0.5, 1e-6).unwrap();
+            });
+            println!("{}", s.row());
+        }
+    }
+
+    section("leader stats (n = 3000)");
+    {
+        let cfg = TrainConfig::builder().engine(EngineKind::Native).build();
+        let mut leader = LeaderCompute::new(&cfg, &ds.y, artifacts).unwrap();
+        let s = bench("native stats", 3, 20, || {
+            let _ = leader.stats(&margins).unwrap();
+        });
+        println!("{}", s.row());
+    }
+    if have_artifacts {
+        let cfg = TrainConfig::builder().engine(EngineKind::Xla).build();
+        let mut leader = LeaderCompute::new(&cfg, &ds.y, artifacts).unwrap();
+        let s = bench("xla stats kernel", 3, 20, || {
+            let _ = leader.stats(&margins).unwrap();
+        });
+        println!("{}", s.row());
+    }
+
+    section("line-search grid evaluation (16 alphas, n = 3000)");
+    {
+        let dm = vec![0.1f32; n];
+        let alphas: Vec<f64> = (0..16).map(|i| i as f64 / 15.0).collect();
+        let cfg = TrainConfig::builder().engine(EngineKind::Native).build();
+        let mut leader = LeaderCompute::new(&cfg, &ds.y, artifacts).unwrap();
+        let s = bench("native 16-alpha grid", 3, 20, || {
+            let _ = leader.line_losses(&margins, &dm, &alphas).unwrap();
+        });
+        println!("{}", s.row());
+        if have_artifacts {
+            let cfg = TrainConfig::builder().engine(EngineKind::Xla).build();
+            let mut leader = LeaderCompute::new(&cfg, &ds.y, artifacts).unwrap();
+            let s = bench("xla 16-alpha grid kernel", 3, 20, || {
+                let _ = leader.line_losses(&margins, &dm, &alphas).unwrap();
+            });
+            println!("{}", s.row());
+        }
+    }
+
+    section("tree allreduce (n = 100k floats)");
+    for m in [4usize, 16] {
+        let contribs: Vec<Vec<f32>> = (0..m).map(|k| vec![k as f32; 100_000]).collect();
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let ledger = NetworkLedger::new();
+        let s = bench(&format!("allreduce M = {m}"), 2, 10, || {
+            let _ = ar.sum(&contribs, &ledger);
+        });
+        println!("{}", s.row());
+    }
+
+    section("full iteration via pool (M = 4, native)");
+    {
+        let cfg = TrainConfig::builder()
+            .machines(4)
+            .engine(EngineKind::Native)
+            .build();
+        let shards = shard_in_memory(&ds.x, &part);
+        let pool =
+            dglmnet::solver::pool::WorkerPool::spawn(&cfg, shards, n, "artifacts".into()).unwrap();
+        let (wa, za) = (Arc::new(w.clone()), Arc::new(z.clone()));
+        let beta_full = vec![0f32; 4_000];
+        let s = bench("pool.sweep_all (4 workers)", 2, 10, || {
+            let _ = pool.sweep_all(&wa, &za, &beta_full, 0.5, 1e-6).unwrap();
+        });
+        println!("{}", s.row());
+    }
+}

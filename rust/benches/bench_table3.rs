@@ -1,0 +1,84 @@
+//! Table 3 — execution times for the whole regularization path on each
+//! Table-2 dataset analog: total iterations, total time, % time in the
+//! line search, average time per d-GLMNET iteration, and the baseline's
+//! average time per pass (one pass over the data = one d-GLMNET iteration
+//! in complexity, both O(nnz) — the paper's comparability argument).
+//!
+//! Run: `cargo bench --bench bench_table3`
+//! (DGLMNET_FAST=1 for a reduced run)
+
+use dglmnet::baselines::distributed_online::DistributedOnlineLearner;
+use dglmnet::config::{EngineKind, PathConfig, TrainConfig};
+use dglmnet::data::dataset::SplitDataset;
+use dglmnet::data::synth;
+use dglmnet::report::Table;
+use dglmnet::solver::RegPath;
+
+fn main() -> dglmnet::Result<()> {
+    let fast = std::env::var("DGLMNET_FAST").is_ok();
+    let f = if fast { 4 } else { 1 };
+    let engine = EngineKind::Auto; // per-shard XLA/native routing
+
+    let specs: Vec<(&str, SplitDataset, usize)> = vec![
+        ("epsilon_like", synth::epsilon_like(8_000 / f, 512 / f, 21).split(0.8, 21), 4),
+        ("webspam_like", synth::webspam_like(4_000 / f, 16_000 / f, 60, 22).split(0.8, 22), 8),
+        ("dna_like", synth::dna_like(40_000 / f, 400, 12, 23).split(0.8, 23), 4),
+    ];
+
+    let mut t2 = Table::new(
+        "Table 2 analog — datasets",
+        &["dataset", "#examples (train/test)", "#features", "nnz", "avg nonzeros"],
+    );
+    let mut t3 = Table::new(
+        "Table 3 analog — execution times (whole regularization path)",
+        &["dataset", "#iter", "time, sec", "line search %", "avg time/iter, sec", "baseline avg time/pass, sec"],
+    );
+
+    for (name, split, machines) in specs {
+        let s = split.train.summary();
+        t2.add_row(vec![
+            name.to_string(),
+            format!("{}/{}", split.train.n_examples(), split.test.n_examples()),
+            s.n_features.to_string(),
+            s.nnz.to_string(),
+            format!("{:.0}", s.avg_nonzeros),
+        ]);
+
+        println!("[{name}] d-GLMNET path ({machines} machines, {engine:?} engine)...");
+        let cfg = TrainConfig::builder()
+            .machines(machines)
+            .engine(engine)
+            .max_iter(40)
+            .build();
+        let steps = if fast { 6 } else { 14 };
+        let path_cfg = PathConfig { steps, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let path = RegPath::run(&split.train, &split.test, &cfg, &path_cfg)?;
+        let total = t0.elapsed().as_secs_f64();
+
+        println!("[{name}] baseline passes...");
+        let passes = if fast { 2 } else { 5 };
+        let learner = DistributedOnlineLearner::new(machines, 0.1, 0.5, 1e-7, 9);
+        let t1 = std::time::Instant::now();
+        let _ = learner.train(&split.train, passes);
+        let per_pass = t1.elapsed().as_secs_f64() / passes as f64;
+
+        t3.add_row(vec![
+            name.to_string(),
+            path.total_iterations.to_string(),
+            format!("{total:.1}"),
+            format!("{:.0}%", path.line_search_frac * 100.0),
+            format!("{:.3}", total / path.total_iterations.max(1) as f64),
+            format!("{per_pass:.3}"),
+        ]);
+    }
+    println!();
+    t2.print();
+    println!();
+    t3.print();
+    println!(
+        "\npaper shape check: line search should be a minor fraction (5-25% in the\n\
+         paper); avg d-GLMNET iteration and baseline pass are both O(nnz)."
+    );
+    Ok(())
+}

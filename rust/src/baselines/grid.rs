@@ -1,0 +1,117 @@
+//! The §4.3 parameter grid for the online baseline: learning rates
+//! 0.1–0.5 × decays 0.5–0.9 × the λ ladder, evaluating every pass of every
+//! combination — exactly the scatter of Vowpal Wabbit points in Figure 1.
+
+use crate::baselines::distributed_online::DistributedOnlineLearner;
+use crate::data::dataset::Dataset;
+use crate::metrics;
+use crate::util::math::nnz;
+
+/// One evaluated grid point (one VW marker in Figure 1).
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub learning_rate: f64,
+    pub decay: f64,
+    pub l1_per_example: f64,
+    pub pass: usize,
+    pub nnz: usize,
+    pub auprc: f64,
+    pub auc: f64,
+    pub wall_secs: f64,
+    /// avg wall seconds per pass (Table 3's VW "avg time per iter").
+    pub secs_per_pass: f64,
+}
+
+/// Full §4.3 protocol. `lambdas` are objective-scale λ values (the same
+/// ladder d-GLMNET uses); VW's per-example arg is λ/n (paper footnote 4).
+#[allow(clippy::too_many_arguments)]
+pub fn online_grid_search(
+    train: &Dataset,
+    test: &Dataset,
+    machines: usize,
+    learning_rates: &[f64],
+    decays: &[f64],
+    lambdas: &[f64],
+    passes: usize,
+    seed: u64,
+) -> Vec<GridPoint> {
+    let n = train.n_examples() as f64;
+    let mut out = Vec::new();
+    for &lr in learning_rates {
+        for &decay in decays {
+            for &lam in lambdas {
+                let t0 = std::time::Instant::now();
+                let learner =
+                    DistributedOnlineLearner::new(machines, lr, decay, lam / n, seed);
+                let snaps = learner.train(train, passes);
+                let wall = t0.elapsed().as_secs_f64();
+                for s in &snaps {
+                    let margins = test.x.margins(&s.weights);
+                    out.push(GridPoint {
+                        learning_rate: lr,
+                        decay,
+                        l1_per_example: lam / n,
+                        pass: s.pass,
+                        nnz: nnz(&s.weights),
+                        auprc: metrics::auprc(&margins, &test.y),
+                        auc: metrics::roc_auc(&margins, &test.y),
+                        wall_secs: wall,
+                        secs_per_pass: wall / passes as f64,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The best quality achievable at each sparsity level across the whole grid
+/// (the envelope Figure 1 visually compares d-GLMNET against).
+pub fn grid_frontier(points: &[GridPoint]) -> Vec<(usize, f64)> {
+    let mut pts: Vec<(usize, f64)> = points.iter().map(|g| (g.nnz, g.auprc)).collect();
+    pts.sort_by_key(|p| p.0);
+    let mut out: Vec<(usize, f64)> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for (x, y) in pts {
+        if y > best {
+            best = y;
+            out.push((x, y));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn grid_produces_point_per_combo_per_pass() {
+        let split = synth::dna_like(400, 30, 5, 71).split(0.8, 3);
+        let pts = online_grid_search(
+            &split.train,
+            &split.test,
+            2,
+            &[0.1, 0.3],
+            &[0.5],
+            &[1.0, 4.0],
+            2,
+            1,
+        );
+        assert_eq!(pts.len(), 2 * 1 * 2 * 2);
+        assert!(pts.iter().all(|p| p.auprc >= 0.0 && p.auprc <= 1.0));
+    }
+
+    #[test]
+    fn frontier_is_monotone() {
+        let split = synth::dna_like(300, 25, 4, 72).split(0.8, 4);
+        let pts = online_grid_search(
+            &split.train, &split.test, 2, &[0.2], &[0.7], &[0.5, 8.0], 2, 2,
+        );
+        let f = grid_frontier(&pts);
+        assert!(!f.is_empty());
+        let ys: Vec<f64> = f.iter().map(|p| p.1).collect();
+        assert!(ys.windows(2).all(|w| w[1] >= w[0]));
+    }
+}

@@ -1,0 +1,20 @@
+//! Baselines the paper compares against (or motivates with):
+//!
+//! * [`truncated_gradient`] — sparse online learning via truncated gradient
+//!   (Langford, Li & Zhang 2009), the algorithm behind Vowpal Wabbit's
+//!   `--l1`.
+//! * [`distributed_online`] — the distributed variant of §4.3: per-shard
+//!   online training + weighted parameter averaging (Agarwal et al. 2011,
+//!   Algorithm 2 first part), with the paper's learning-rate/decay grid.
+//! * [`shotgun`] — parallel *stochastic* coordinate descent (Bradley et al.
+//!   2011), used by the A1 ablation to demonstrate the update-conflict
+//!   problem that motivates d-GLMNET's line-search design.
+
+pub mod distributed_online;
+pub mod grid;
+pub mod shotgun;
+pub mod truncated_gradient;
+
+pub use distributed_online::DistributedOnlineLearner;
+pub use grid::{online_grid_search, GridPoint};
+pub use truncated_gradient::TruncatedGradientLearner;

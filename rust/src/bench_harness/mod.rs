@@ -1,0 +1,130 @@
+//! Micro/meso benchmark harness (no `criterion` in the vendored set):
+//! warmup + timed samples, robust stats, and aligned reporting.
+
+use std::time::Instant;
+
+/// Summary statistics over the timed samples (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    fn from_samples(name: String, mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+        let median = if samples.len() % 2 == 1 {
+            samples[samples.len() / 2]
+        } else {
+            0.5 * (samples[samples.len() / 2 - 1] + samples[samples.len() / 2])
+        };
+        Self {
+            name,
+            mean,
+            median,
+            stddev: var.sqrt(),
+            min: samples[0],
+            max: *samples.last().unwrap(),
+            samples,
+        }
+    }
+
+    /// `name  median ± stddev  (min … max, k samples)`
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  ({} … {}, {} samples)",
+            self.name,
+            fmt_secs(self.median),
+            fmt_secs(self.stddev),
+            fmt_secs(self.min),
+            fmt_secs(self.max),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human-scale duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `samples` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(name.to_string(), times)
+}
+
+/// Measure a one-shot closure (end-to-end runs too slow to repeat).
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchStats) {
+    let t0 = Instant::now();
+    let out = f();
+    let stats = BenchStats::from_samples(name.to_string(), vec![t0.elapsed().as_secs_f64()]);
+    (out, stats)
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let s = BenchStats::from_samples("t".into(), vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_requested_samples() {
+        let mut count = 0usize;
+        let s = bench("inc", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.samples.len(), 5);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(2.5).ends_with(" s"));
+        assert!(fmt_secs(2.5e-3).ends_with(" ms"));
+        assert!(fmt_secs(2.5e-6).ends_with(" µs"));
+        assert!(fmt_secs(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, s) = bench_once("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(s.samples.len(), 1);
+    }
+}

@@ -1,0 +1,230 @@
+//! From-scratch CLI argument parser (no `clap` in the vendored set):
+//! subcommands, `--key value` options, `--flag` switches, typed getters,
+//! and generated `--help`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DlrError, Result};
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Specification of one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: vec![] }
+    }
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+}
+
+/// Parsed arguments of a subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl ParsedArgs {
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.values
+            .get(key)
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| DlrError::Cli(format!("--{key}: expected number, got '{s}'")))
+            })
+            .transpose()
+    }
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.values
+            .get(key)
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| DlrError::Cli(format!("--{key}: expected integer, got '{s}'")))
+            })
+            .transpose()
+    }
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.values
+            .get(key)
+            .map(|s| {
+                s.parse::<u64>()
+                    .map_err(|_| DlrError::Cli(format!("--{key}: expected integer, got '{s}'")))
+            })
+            .transpose()
+    }
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+}
+
+/// The application: a set of subcommands.
+#[derive(Debug, Default)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: vec![] }
+    }
+
+    pub fn command(mut self, spec: CommandSpec) -> Self {
+        self.commands.push(spec);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<16} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<command> --help' for per-command options.\n");
+        s
+    }
+
+    pub fn command_usage(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let dflt = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let kind = if o.is_flag { "" } else { " <value>" };
+            s.push_str(&format!("  --{:<18}{} {}{}\n", o.name, kind, o.help, dflt));
+        }
+        s
+    }
+
+    /// Parse `args` (without argv[0]). Returns Err with a usage string on
+    /// unknown commands/options; `--help` yields `Ok` with command "help".
+    pub fn parse(&self, args: &[String]) -> Result<ParsedArgs> {
+        let Some(cmd_name) = args.first() else {
+            return Err(DlrError::Cli(self.usage()));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Ok(ParsedArgs { command: "help".into(), ..Default::default() });
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| {
+                DlrError::Cli(format!("unknown command '{cmd_name}'\n\n{}", self.usage()))
+            })?;
+        let mut parsed = ParsedArgs { command: cmd.name.to_string(), ..Default::default() };
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                parsed.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(DlrError::Cli(self.command_usage(cmd)));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let spec = cmd.opts.iter().find(|o| o.name == name).ok_or_else(|| {
+                    DlrError::Cli(format!(
+                        "unknown option '--{name}' for '{}'\n\n{}",
+                        cmd.name,
+                        self.command_usage(cmd)
+                    ))
+                })?;
+                if spec.is_flag {
+                    parsed.flags.insert(name.to_string(), true);
+                } else {
+                    let v = args.get(i + 1).ok_or_else(|| {
+                        DlrError::Cli(format!("option '--{name}' needs a value"))
+                    })?;
+                    parsed.values.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                parsed.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("dglmnet", "test app").command(
+            CommandSpec::new("train", "train a model")
+                .opt("lambda", "L1 strength", Some("1.0"))
+                .opt("machines", "cluster size", Some("4"))
+                .flag("verbose", "chatty"),
+        )
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let p = app()
+            .parse(&sv(&["train", "--lambda", "0.5", "--verbose", "file.svm"]))
+            .unwrap();
+        assert_eq!(p.command, "train");
+        assert_eq!(p.get_f64("lambda").unwrap(), Some(0.5));
+        assert_eq!(p.get_usize("machines").unwrap(), Some(4)); // default
+        assert!(p.get_flag("verbose"));
+        assert_eq!(p.positionals, vec!["file.svm"]);
+    }
+
+    #[test]
+    fn unknown_command_and_option_error() {
+        assert!(app().parse(&sv(&["nope"])).is_err());
+        assert!(app().parse(&sv(&["train", "--bogus", "1"])).is_err());
+        assert!(app().parse(&sv(&["train", "--lambda"])).is_err());
+    }
+
+    #[test]
+    fn typed_getter_errors() {
+        let p = app().parse(&sv(&["train", "--lambda", "abc"])).unwrap();
+        assert!(p.get_f64("lambda").is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        let p = app().parse(&sv(&["--help"])).unwrap();
+        assert_eq!(p.command, "help");
+        let e = app().parse(&sv(&["train", "--help"])).unwrap_err();
+        assert!(e.to_string().contains("--lambda"));
+        let u = app().usage();
+        assert!(u.contains("train"));
+    }
+}

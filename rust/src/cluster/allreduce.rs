@@ -1,0 +1,168 @@
+//! Tree AllReduce (Alg 4 step 3). The paper uses Vowpal Wabbit's
+//! MPI_AllReduce-style tree: reduce up a binary tree, broadcast down —
+//! `2·ceil(log2 M)` rounds, each moving the full vector, which is where the
+//! `O((n + p) ln M)` communication bound comes from.
+//!
+//! We compute the sum exactly (deterministic pairwise order, so repeated
+//! runs bit-match) and charge the simulated network for every edge crossed.
+
+use crate::cluster::network::{NetworkLedger, NetworkModel};
+
+/// The result of one allreduce: the summed vector plus its simulated cost.
+#[derive(Debug, Clone)]
+pub struct AllReduceOutcome {
+    pub rounds: usize,
+    pub bytes_moved: u64,
+    pub simulated_secs: f64,
+}
+
+/// Tree AllReduce over M in-process per-machine buffers.
+#[derive(Debug)]
+pub struct TreeAllReduce {
+    pub model: NetworkModel,
+}
+
+impl TreeAllReduce {
+    pub fn new(model: NetworkModel) -> Self {
+        Self { model }
+    }
+
+    /// Sum `contributions` (all same length) into one vector, charging the
+    /// ledger as a binary-tree reduce + broadcast. Pairwise reduction order
+    /// is fixed (machine 2k + 2k+1), making the float sum deterministic.
+    pub fn sum(
+        &self,
+        contributions: &[Vec<f32>],
+        ledger: &NetworkLedger,
+    ) -> (Vec<f32>, AllReduceOutcome) {
+        assert!(!contributions.is_empty());
+        let len = contributions[0].len();
+        for c in contributions {
+            assert_eq!(c.len(), len, "ragged allreduce contribution");
+        }
+        let m = contributions.len();
+        let vec_bytes = (len * std::mem::size_of::<f32>()) as u64;
+
+        let mut layer: Vec<Vec<f64>> = contributions
+            .iter()
+            .map(|c| c.iter().map(|&x| x as f64).collect())
+            .collect();
+        let mut rounds = 0usize;
+        let mut bytes = 0u64;
+        let mut secs_total = 0f64;
+
+        // ---- reduce up the tree ----
+        while layer.len() > 1 {
+            rounds += 1;
+            // all pair-messages in a round are concurrent: charge the max,
+            // not the sum, for time; bytes are summed.
+            let pairs = layer.len() / 2;
+            let mut round_secs = 0f64;
+            let mut next: Vec<Vec<f64>> = Vec::with_capacity(pairs + layer.len() % 2);
+            let mut it = layer.into_iter();
+            loop {
+                match (it.next(), it.next()) {
+                    (Some(mut a), Some(b)) => {
+                        for (x, y) in a.iter_mut().zip(&b) {
+                            *x += *y;
+                        }
+                        let t = ledger.record(&self.model, vec_bytes);
+                        bytes += vec_bytes;
+                        round_secs = round_secs.max(t);
+                        next.push(a);
+                    }
+                    (Some(a), None) => {
+                        next.push(a);
+                        break;
+                    }
+                    _ => break,
+                }
+            }
+            secs_total += round_secs;
+            layer = next;
+        }
+
+        // ---- broadcast down: same tree depth, same concurrency ----
+        let depth = (m as f64).log2().ceil() as usize;
+        for _ in 0..depth {
+            // each broadcast round fans out to at most double the holders
+            let t = ledger.record(&self.model, vec_bytes);
+            bytes += vec_bytes;
+            secs_total += t;
+        }
+
+        let root = layer.pop().unwrap();
+        let out: Vec<f32> = root.into_iter().map(|x| x as f32).collect();
+        (out, AllReduceOutcome { rounds, bytes_moved: bytes, simulated_secs: secs_total })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_serial(contribs: &[Vec<f32>]) -> Vec<f64> {
+        let mut acc = vec![0f64; contribs[0].len()];
+        for c in contribs {
+            for (a, &x) in acc.iter_mut().zip(c) {
+                *a += x as f64;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn allreduce_equals_serial_sum() {
+        for m in [1usize, 2, 3, 5, 8, 16] {
+            let contribs: Vec<Vec<f32>> = (0..m)
+                .map(|k| (0..50).map(|i| ((k * 50 + i) as f32).sin()).collect())
+                .collect();
+            let ar = TreeAllReduce::new(NetworkModel::gigabit());
+            let ledger = NetworkLedger::new();
+            let (got, outcome) = ar.sum(&contribs, &ledger);
+            let want = sum_serial(&contribs);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g as f64 - w).abs() < 1e-4, "m={m}");
+            }
+            if m > 1 {
+                assert_eq!(outcome.rounds, (m as f64).log2().ceil() as usize);
+                assert!(outcome.bytes_moved > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_machine_is_free_reduction() {
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let ledger = NetworkLedger::new();
+        let (out, outcome) = ar.sum(&[vec![1.0, 2.0]], &ledger);
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert_eq!(outcome.rounds, 0);
+    }
+
+    #[test]
+    fn bytes_scale_log_in_machines() {
+        // O((n+p) ln M): doubling M adds ~one round, not ~double bytes/machine
+        let n = 10_000usize;
+        let cost = |m: usize| {
+            let contribs: Vec<Vec<f32>> = (0..m).map(|_| vec![1f32; n]).collect();
+            let ar = TreeAllReduce::new(NetworkModel::gigabit());
+            let ledger = NetworkLedger::new();
+            let (_, o) = ar.sum(&contribs, &ledger);
+            o.simulated_secs
+        };
+        let t4 = cost(4);
+        let t16 = cost(16);
+        // log2(16)/log2(4) = 2: simulated time should grow ~2x, not 4x
+        assert!(t16 / t4 < 2.6, "t4={t4} t16={t16}");
+        assert!(t16 > t4);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_contributions_panic() {
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let ledger = NetworkLedger::new();
+        ar.sum(&[vec![1.0], vec![1.0, 2.0]], &ledger);
+    }
+}

@@ -1,0 +1,16 @@
+//! Simulated cluster substrate: feature partitioners, a byte-accounted
+//! network model (Gigabit-Ethernet-like, the paper's testbed), and the tree
+//! AllReduce of Alg 4 step 3 whose simulated cost is `O((n+p)·ln M)`.
+//!
+//! The algorithmic content of d-GLMNET is unchanged by running workers as
+//! in-process threads; the network model exists so the communication-cost
+//! claims of §3 are *measured* (bytes, rounds, simulated seconds) rather
+//! than asserted.
+
+pub mod allreduce;
+pub mod network;
+pub mod partition;
+
+pub use allreduce::TreeAllReduce;
+pub use network::{NetworkModel, NetworkLedger};
+pub use partition::{FeaturePartition, PartitionStrategy};

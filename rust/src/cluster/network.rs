@@ -1,0 +1,110 @@
+//! Byte-accounted network model. The paper's testbed is 16 blade servers on
+//! Gigabit Ethernet; we model each transfer as `latency + bytes/bandwidth`
+//! and keep a ledger so benchmarks can report simulated network time and
+//! total volume next to wall-clock compute time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Link parameters (defaults: GigE — 1 Gbit/s, 100 µs one-way latency).
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    pub bandwidth_bytes_per_sec: f64,
+    pub latency_sec: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self { bandwidth_bytes_per_sec: 125e6, latency_sec: 100e-6 }
+    }
+}
+
+impl NetworkModel {
+    pub fn gigabit() -> Self {
+        Self::default()
+    }
+
+    pub fn ten_gigabit() -> Self {
+        Self { bandwidth_bytes_per_sec: 1.25e9, latency_sec: 50e-6 }
+    }
+
+    /// Simulated seconds for one point-to-point message.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.latency_sec + bytes as f64 / self.bandwidth_bytes_per_sec
+    }
+}
+
+/// Thread-safe accumulating ledger of simulated traffic.
+#[derive(Debug, Default)]
+pub struct NetworkLedger {
+    bytes: AtomicU64,
+    messages: AtomicU64,
+    /// nanoseconds of simulated time (atomics don't do f64)
+    sim_nanos: AtomicU64,
+}
+
+impl NetworkLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, model: &NetworkModel, bytes: u64) -> f64 {
+        let secs = model.transfer_secs(bytes);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.sim_nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        secs
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn simulated_secs(&self) -> f64 {
+        self.sim_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn reset(&self) {
+        self.bytes.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+        self.sim_nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let m = NetworkModel::gigabit();
+        let t1 = m.transfer_secs(125_000_000); // 1 s of payload
+        assert!((t1 - 1.0001).abs() < 1e-6);
+        let t0 = m.transfer_secs(0);
+        assert!((t0 - 100e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_accumulates_across_threads() {
+        let ledger = NetworkLedger::new();
+        let model = NetworkModel::gigabit();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        ledger.record(&model, 1_000);
+                    }
+                });
+            }
+        });
+        assert_eq!(ledger.total_bytes(), 400_000);
+        assert_eq!(ledger.total_messages(), 400);
+        assert!(ledger.simulated_secs() > 0.0);
+        ledger.reset();
+        assert_eq!(ledger.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Feature partitioning: split {1..p} into M disjoint sets S_1..S_M
+//! (paper §2). Strategies: round-robin, contiguous ranges, and greedy
+//! nnz-balanced (equalizes per-machine work, which is O(nnz of the shard)).
+
+/// How features are assigned to machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// feature j -> machine j mod M.
+    RoundRobin,
+    /// M near-equal contiguous ranges.
+    Contiguous,
+    /// Greedy balance by per-feature nnz (requires column counts).
+    NnzBalanced,
+}
+
+impl PartitionStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round-robin" | "roundrobin" | "rr" => Some(Self::RoundRobin),
+            "contiguous" | "range" => Some(Self::Contiguous),
+            "nnz-balanced" | "nnz" | "balanced" => Some(Self::NnzBalanced),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete disjoint cover of the feature space.
+#[derive(Debug, Clone)]
+pub struct FeaturePartition {
+    /// feature -> machine
+    assignment: Vec<u32>,
+    machines: usize,
+}
+
+impl FeaturePartition {
+    /// Build a partition of `p` features over `m` machines. `col_nnz` is
+    /// required by [`PartitionStrategy::NnzBalanced`] (ignored otherwise).
+    pub fn build(
+        strategy: PartitionStrategy,
+        p: usize,
+        m: usize,
+        col_nnz: Option<&[usize]>,
+    ) -> Self {
+        assert!(m >= 1, "need at least one machine");
+        let mut assignment = vec![0u32; p];
+        match strategy {
+            PartitionStrategy::RoundRobin => {
+                for (j, a) in assignment.iter_mut().enumerate() {
+                    *a = (j % m) as u32;
+                }
+            }
+            PartitionStrategy::Contiguous => {
+                // ceil-sized ranges; the last machines may be one shorter
+                for (j, a) in assignment.iter_mut().enumerate() {
+                    *a = ((j * m) / p.max(1)).min(m - 1) as u32;
+                }
+            }
+            PartitionStrategy::NnzBalanced => {
+                let counts = col_nnz.expect("NnzBalanced requires column nnz counts");
+                assert_eq!(counts.len(), p);
+                // greedy: heaviest feature first onto the lightest machine
+                let mut order: Vec<usize> = (0..p).collect();
+                order.sort_by_key(|&j| std::cmp::Reverse(counts[j]));
+                let mut load = vec![0usize; m];
+                for j in order {
+                    let k = (0..m).min_by_key(|&k| (load[k], k)).unwrap();
+                    assignment[j] = k as u32;
+                    load[k] += counts[j].max(1);
+                }
+            }
+        }
+        Self { assignment, machines: m }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.assignment.len()
+    }
+
+    #[inline]
+    pub fn machine_of(&self, feature: usize) -> usize {
+        self.assignment[feature] as usize
+    }
+
+    /// Global feature ids owned by machine `k`, ascending.
+    pub fn features_of(&self, k: usize) -> Vec<u32> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a as usize == k)
+            .map(|(j, _)| j as u32)
+            .collect()
+    }
+
+    /// Per-machine shard sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.machines];
+        for &a in &self.assignment {
+            s[a as usize] += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_disjoint_cover(p: &FeaturePartition) {
+        let mut seen = vec![false; p.n_features()];
+        for k in 0..p.machines() {
+            for f in p.features_of(k) {
+                assert!(!seen[f as usize], "feature {f} assigned twice");
+                seen[f as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some feature unassigned");
+    }
+
+    #[test]
+    fn round_robin_cover_and_balance() {
+        let p = FeaturePartition::build(PartitionStrategy::RoundRobin, 103, 4, None);
+        is_disjoint_cover(&p);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn contiguous_is_monotone() {
+        let p = FeaturePartition::build(PartitionStrategy::Contiguous, 100, 3, None);
+        is_disjoint_cover(&p);
+        let mut last = 0;
+        for j in 0..100 {
+            assert!(p.machine_of(j) >= last);
+            last = p.machine_of(j);
+        }
+    }
+
+    #[test]
+    fn nnz_balanced_beats_contiguous_on_skew() {
+        // heavily skewed column counts: first 10 columns hold most nnz
+        let mut counts = vec![1usize; 100];
+        for c in counts.iter_mut().take(10) {
+            *c = 1000;
+        }
+        let bal = FeaturePartition::build(PartitionStrategy::NnzBalanced, 100, 5, Some(&counts));
+        is_disjoint_cover(&bal);
+        let load = |p: &FeaturePartition| -> Vec<usize> {
+            (0..5)
+                .map(|k| p.features_of(k).iter().map(|&f| counts[f as usize]).sum())
+                .collect()
+        };
+        let bal_load = load(&bal);
+        let spread = bal_load.iter().max().unwrap() - bal_load.iter().min().unwrap();
+        assert!(spread <= 100, "balanced spread too big: {bal_load:?}");
+
+        let con = FeaturePartition::build(PartitionStrategy::Contiguous, 100, 5, None);
+        let con_load = load(&con);
+        let con_spread = con_load.iter().max().unwrap() - con_load.iter().min().unwrap();
+        assert!(spread < con_spread, "{bal_load:?} vs {con_load:?}");
+    }
+
+    #[test]
+    fn single_machine_owns_everything() {
+        let p = FeaturePartition::build(PartitionStrategy::RoundRobin, 17, 1, None);
+        assert_eq!(p.features_of(0).len(), 17);
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(PartitionStrategy::parse("rr"), Some(PartitionStrategy::RoundRobin));
+        assert_eq!(PartitionStrategy::parse("nnz"), Some(PartitionStrategy::NnzBalanced));
+        assert_eq!(PartitionStrategy::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,368 @@
+//! Typed configuration for the solver, cluster, regularization path and
+//! baselines, with a builder API and a TOML-subset file loader.
+
+pub mod toml;
+
+use std::path::Path;
+
+use crate::cluster::network::NetworkModel;
+use crate::cluster::partition::PartitionStrategy;
+use crate::error::{DlrError, Result};
+use toml::TomlDoc;
+
+/// Which subproblem engine workers run (DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Per shard: XLA when the dense-tile formulation pays off (artifacts
+    /// present, n fits a compiled tile, density/memory within budget),
+    /// otherwise the native sparse path. The production default.
+    Auto,
+    /// AOT Pallas kernels through PJRT on densified (N, B) tiles.
+    Xla,
+    /// Pure-rust sparse coordinate descent (paper's CPU formulation).
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(Self::Auto),
+            "xla" | "pjrt" => Some(Self::Xla),
+            "native" | "sparse" => Some(Self::Native),
+            _ => None,
+        }
+    }
+}
+
+/// Line-search constants of Alg 3. Paper: b = 0.5, sigma = 0.01, gamma = 0.
+#[derive(Debug, Clone, Copy)]
+pub struct LineSearchConfig {
+    pub backtrack: f64,
+    pub sigma: f64,
+    pub gamma: f64,
+    /// Lower bound delta for the alpha_init scan (Alg 3 step 2).
+    pub alpha_min: f64,
+    /// Grid size for the alpha_init scan — matches the AOT K.
+    pub grid: usize,
+    /// Step 1 shortcut: accept alpha = 1 outright when the relative
+    /// objective decrease is at least this (the sparsity precaution).
+    pub sufficient_decrease: f64,
+    /// Disable the alpha_init scan (plain Armijo from 1) — ablation A3.
+    pub skip_alpha_init: bool,
+}
+
+impl Default for LineSearchConfig {
+    fn default() -> Self {
+        Self {
+            backtrack: 0.5,
+            sigma: 0.01,
+            gamma: 0.0,
+            alpha_min: 1e-3,
+            grid: 16,
+            sufficient_decrease: 1e-4,
+            skip_alpha_init: false,
+        }
+    }
+}
+
+/// Solver configuration (Algorithms 1–4).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lambda: f64,
+    /// Ridge term nu added to the block-diagonal Hessian (paper: 1e-6).
+    pub nu: f64,
+    pub max_iter: usize,
+    /// Convergence: relative objective decrease threshold.
+    pub tol: f64,
+    /// Number of simulated machines M.
+    pub machines: usize,
+    /// Dense tile width B for the XLA engine.
+    pub block: usize,
+    pub engine: EngineKind,
+    /// Use the naive per-column sweep kernel instead of the optimized
+    /// covariance-update kernel (perf ablation; see EXPERIMENTS.md §Perf).
+    pub naive_sweep: bool,
+    pub partition: PartitionStrategy,
+    pub network: NetworkModel,
+    pub line_search: LineSearchConfig,
+    /// Tolerated relative objective increase when retrying alpha = 1 at
+    /// convergence (the second sparsity precaution of §2).
+    pub alpha_one_slack: f64,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 1.0,
+            nu: 1e-6,
+            max_iter: 100,
+            tol: 1e-5,
+            machines: 4,
+            block: 64,
+            engine: EngineKind::Auto,
+            naive_sweep: false,
+            partition: PartitionStrategy::RoundRobin,
+            network: NetworkModel::gigabit(),
+            line_search: LineSearchConfig::default(),
+            alpha_one_slack: 1e-4,
+            verbose: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn builder() -> TrainConfigBuilder {
+        TrainConfigBuilder(Self::default())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.lambda < 0.0 {
+            return Err(DlrError::Config("lambda must be >= 0".into()));
+        }
+        if self.nu <= 0.0 {
+            return Err(DlrError::Config(
+                "nu must be > 0 (positive definiteness, §2.1)".into(),
+            ));
+        }
+        if self.machines == 0 {
+            return Err(DlrError::Config("machines must be >= 1".into()));
+        }
+        if !(0.0 < self.line_search.backtrack && self.line_search.backtrack < 1.0) {
+            return Err(DlrError::Config("backtrack b must be in (0,1)".into()));
+        }
+        if !(0.0 < self.line_search.sigma && self.line_search.sigma < 1.0) {
+            return Err(DlrError::Config("sigma must be in (0,1)".into()));
+        }
+        if !(0.0..1.0).contains(&self.line_search.gamma) {
+            return Err(DlrError::Config("gamma must be in [0,1)".into()));
+        }
+        if self.block == 0 || self.block % 8 != 0 {
+            return Err(DlrError::Config("block must be a positive multiple of 8".into()));
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file (`[solver]`, `[cluster]`, `[line_search]`).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&toml::parse(&text)?)
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = Self::default();
+        let num = |sec: &str, key: &str| doc.get(sec, key).and_then(|v| v.as_f64());
+        let int = |sec: &str, key: &str| doc.get(sec, key).and_then(|v| v.as_usize());
+        if let Some(v) = num("solver", "lambda") {
+            cfg.lambda = v;
+        }
+        if let Some(v) = num("solver", "nu") {
+            cfg.nu = v;
+        }
+        if let Some(v) = int("solver", "max_iter") {
+            cfg.max_iter = v;
+        }
+        if let Some(v) = num("solver", "tol") {
+            cfg.tol = v;
+        }
+        if let Some(v) = int("solver", "machines") {
+            cfg.machines = v;
+        }
+        if let Some(v) = int("solver", "block") {
+            cfg.block = v;
+        }
+        if let Some(s) = doc.get("solver", "engine").and_then(|v| v.as_str()) {
+            cfg.engine = EngineKind::parse(s)
+                .ok_or_else(|| DlrError::Config(format!("unknown engine '{s}'")))?;
+        }
+        if let Some(s) = doc.get("solver", "partition").and_then(|v| v.as_str()) {
+            cfg.partition = PartitionStrategy::parse(s)
+                .ok_or_else(|| DlrError::Config(format!("unknown partition '{s}'")))?;
+        }
+        if let Some(v) = num("cluster", "bandwidth_gbps") {
+            cfg.network.bandwidth_bytes_per_sec = v * 125e6;
+        }
+        if let Some(v) = num("cluster", "latency_us") {
+            cfg.network.latency_sec = v * 1e-6;
+        }
+        if let Some(v) = num("line_search", "backtrack") {
+            cfg.line_search.backtrack = v;
+        }
+        if let Some(v) = num("line_search", "sigma") {
+            cfg.line_search.sigma = v;
+        }
+        if let Some(v) = num("line_search", "gamma") {
+            cfg.line_search.gamma = v;
+        }
+        if let Some(v) = doc.get("line_search", "skip_alpha_init").and_then(|v| v.as_bool()) {
+            cfg.line_search.skip_alpha_init = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Builder for [`TrainConfig`].
+pub struct TrainConfigBuilder(TrainConfig);
+
+impl TrainConfigBuilder {
+    pub fn lambda(mut self, v: f64) -> Self {
+        self.0.lambda = v;
+        self
+    }
+    pub fn nu(mut self, v: f64) -> Self {
+        self.0.nu = v;
+        self
+    }
+    pub fn max_iter(mut self, v: usize) -> Self {
+        self.0.max_iter = v;
+        self
+    }
+    pub fn tol(mut self, v: f64) -> Self {
+        self.0.tol = v;
+        self
+    }
+    pub fn machines(mut self, v: usize) -> Self {
+        self.0.machines = v;
+        self
+    }
+    pub fn block(mut self, v: usize) -> Self {
+        self.0.block = v;
+        self
+    }
+    pub fn engine(mut self, v: EngineKind) -> Self {
+        self.0.engine = v;
+        self
+    }
+    pub fn naive_sweep(mut self, v: bool) -> Self {
+        self.0.naive_sweep = v;
+        self
+    }
+    pub fn partition(mut self, v: PartitionStrategy) -> Self {
+        self.0.partition = v;
+        self
+    }
+    pub fn network(mut self, v: NetworkModel) -> Self {
+        self.0.network = v;
+        self
+    }
+    pub fn line_search(mut self, v: LineSearchConfig) -> Self {
+        self.0.line_search = v;
+        self
+    }
+    pub fn verbose(mut self, v: bool) -> Self {
+        self.0.verbose = v;
+        self
+    }
+    pub fn build(self) -> TrainConfig {
+        self.0.validate().expect("invalid TrainConfig");
+        self.0
+    }
+}
+
+/// Regularization-path configuration (Alg 5).
+#[derive(Debug, Clone)]
+pub struct PathConfig {
+    /// Number of halvings of lambda_max (paper: 20).
+    pub steps: usize,
+    /// Extra lambda values inserted (the paper adds 4 for dna).
+    pub extra_lambdas: Vec<f64>,
+    /// Per-lambda iteration cap (warmstarted fits converge fast).
+    pub max_iter_per_lambda: usize,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        Self { steps: 20, extra_lambdas: vec![], max_iter_per_lambda: 50 }
+    }
+}
+
+/// Truncated-gradient online-learning baseline configuration (§4.3).
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    pub learning_rate: f64,
+    pub decay: f64,
+    pub passes: usize,
+    /// L1 strength per example (VW's --l1; paper footnote 4: arg = lambda/n).
+    pub l1_per_example: f64,
+    /// Machines (example shards) for distributed averaging.
+    pub machines: usize,
+    pub seed: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self {
+            learning_rate: 0.1,
+            decay: 0.5,
+            passes: 10,
+            l1_per_example: 1e-6,
+            machines: 4,
+            seed: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_paper_constants() {
+        let c = TrainConfig::builder().build();
+        assert_eq!(c.line_search.backtrack, 0.5);
+        assert_eq!(c.line_search.sigma, 0.01);
+        assert_eq!(c.line_search.gamma, 0.0);
+        assert_eq!(c.nu, 1e-6);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut c = TrainConfig::default();
+        c.lambda = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.nu = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.machines = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.block = 65;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_reads_all_sections() {
+        let doc = toml::parse(
+            r#"
+[solver]
+lambda = 0.25
+machines = 8
+engine = "native"
+partition = "nnz"
+[cluster]
+bandwidth_gbps = 10.0
+latency_us = 50.0
+[line_search]
+sigma = 0.05
+skip_alpha_init = true
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.lambda, 0.25);
+        assert_eq!(c.machines, 8);
+        assert_eq!(c.engine, EngineKind::Native);
+        assert_eq!(c.partition, PartitionStrategy::NnzBalanced);
+        assert!((c.network.bandwidth_bytes_per_sec - 1.25e9).abs() < 1.0);
+        assert_eq!(c.line_search.sigma, 0.05);
+        assert!(c.line_search.skip_alpha_init);
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_engine() {
+        let doc = toml::parse("[solver]\nengine = \"gpu\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+}

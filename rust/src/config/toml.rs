@@ -1,0 +1,216 @@
+//! Minimal TOML-subset parser (no `serde`/`toml` in the vendored set).
+//! Supports what our config files use: `[section]` headers, `key = value`
+//! with string / integer / float / bool / flat-array values, `#` comments.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DlrError, Result};
+
+/// A flat TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; keys before any `[section]` land in "".
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+}
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = || format!("toml line {}", lineno + 1);
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| DlrError::parse(ctx(), "unterminated section header"))?;
+            current = name.trim().to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| DlrError::parse(ctx(), "expected key = value"))?;
+        let v = parse_value(value.trim(), &ctx())?;
+        doc.sections
+            .get_mut(&current)
+            .unwrap()
+            .insert(key.trim().to_string(), v);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ctx: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(DlrError::parse(ctx, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| DlrError::parse(ctx, "unterminated string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| DlrError::parse(ctx, "unterminated array"))?;
+        let mut out = Vec::new();
+        for item in split_top_level(inner) {
+            let item = item.trim();
+            if !item.is_empty() {
+                out.push(parse_value(item, ctx)?);
+            }
+        }
+        return Ok(TomlValue::Array(out));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(DlrError::parse(ctx, format!("cannot parse value '{s}'")))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    // arrays are flat (no nesting needed), so a simple comma split with
+    // string awareness suffices
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# top comment
+name = "run1"
+[solver]
+lambda = 0.5        # inline comment
+machines = 8
+use_xla = true
+alphas = [0.25, 0.5, 1.0]
+[data]
+path = "data/webspam.svm"   # has # inside? no
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = parse(DOC).unwrap();
+        assert_eq!(d.get("", "name").unwrap().as_str(), Some("run1"));
+        assert_eq!(d.get("solver", "lambda").unwrap().as_f64(), Some(0.5));
+        assert_eq!(d.get("solver", "machines").unwrap().as_usize(), Some(8));
+        assert_eq!(d.get("solver", "use_xla").unwrap().as_bool(), Some(true));
+        let arr = match d.get("solver", "alphas").unwrap() {
+            TomlValue::Array(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+        assert_eq!(d.get("data", "path").unwrap().as_str(), Some("data/webspam.svm"));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let d = parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(d.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("k = \n").is_err());
+        assert!(parse("k = \"open\n").is_err());
+        assert!(parse("k = what\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let d = parse("a = -3\nb = 1e-6\nc = -0.5\n").unwrap();
+        assert_eq!(d.get("", "a").unwrap().as_f64(), Some(-3.0));
+        assert_eq!(d.get("", "b").unwrap().as_f64(), Some(1e-6));
+        assert_eq!(d.get("", "c").unwrap().as_f64(), Some(-0.5));
+    }
+}

@@ -1,0 +1,124 @@
+//! Labeled dataset container + Table-2-style summaries and splitting.
+
+use crate::data::sparse::CsrMatrix;
+use crate::util::rng::Xoshiro256;
+
+/// A labeled classification dataset in by-example (CSR) layout.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub name: String,
+    pub x: CsrMatrix,
+    /// Labels in {-1, +1}.
+    pub y: Vec<f32>,
+}
+
+/// Train/test pair produced by [`Dataset::split`].
+#[derive(Debug, Clone)]
+pub struct SplitDataset {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// One row of the paper's Table 2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSummary {
+    pub name: String,
+    pub n_examples: usize,
+    pub n_features: usize,
+    pub nnz: usize,
+    pub avg_nonzeros: f64,
+    pub positives: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: CsrMatrix, y: Vec<f32>) -> Self {
+        assert_eq!(x.n_rows, y.len(), "labels must match rows");
+        Self { name: name.into(), x, y }
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.x.n_rows
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.n_cols
+    }
+
+    pub fn summary(&self) -> DatasetSummary {
+        DatasetSummary {
+            name: self.name.clone(),
+            n_examples: self.n_examples(),
+            n_features: self.n_features(),
+            nnz: self.x.nnz(),
+            avg_nonzeros: if self.n_examples() == 0 {
+                0.0
+            } else {
+                self.x.nnz() as f64 / self.n_examples() as f64
+            },
+            positives: self.y.iter().filter(|&&y| y > 0.0).count(),
+        }
+    }
+
+    /// Deterministic shuffled split: `train_frac` of rows to train.
+    pub fn split(&self, train_frac: f64, seed: u64) -> SplitDataset {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let n = self.n_examples();
+        let mut idx: Vec<usize> = (0..n).collect();
+        Xoshiro256::new(seed ^ 0x5EED_5EED).shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let (tr, te) = idx.split_at(n_train.min(n));
+        SplitDataset {
+            train: Dataset::new(
+                format!("{}-train", self.name),
+                self.x.select_rows(tr),
+                tr.iter().map(|&i| self.y[i]).collect(),
+            ),
+            test: Dataset::new(
+                format!("{}-test", self.name),
+                self.x.select_rows(te),
+                te.iter().map(|&i| self.y[i]).collect(),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let mut x = CsrMatrix::new(2);
+        let mut y = Vec::new();
+        for i in 0..n {
+            x.push_row(&[(0, i as f32 + 1.0), (1, 1.0)]);
+            y.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        Dataset::new("toy", x, y)
+    }
+
+    #[test]
+    fn summary_counts() {
+        let d = toy(10);
+        let s = d.summary();
+        assert_eq!(s.n_examples, 10);
+        assert_eq!(s.n_features, 2);
+        assert_eq!(s.nnz, 20);
+        assert!((s.avg_nonzeros - 2.0).abs() < 1e-12);
+        assert_eq!(s.positives, 5);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy(100);
+        let sp = d.split(0.8, 1);
+        assert_eq!(sp.train.n_examples(), 80);
+        assert_eq!(sp.test.n_examples(), 20);
+        assert_eq!(sp.train.n_features(), 2);
+        // determinism
+        let sp2 = d.split(0.8, 1);
+        assert_eq!(sp.train.y, sp2.train.y);
+        // different seed -> (almost surely) different assignment
+        let sp3 = d.split(0.8, 2);
+        assert_ne!(sp.train.y, sp3.train.y);
+    }
+}

@@ -1,0 +1,207 @@
+//! Text formats: libsvm (`label idx:val ...`, by-example — the ingest
+//! format) and the paper's Table-1 by-feature format
+//! (`feature_id (example_id, value) (example_id, value) ...`) that workers
+//! stream sequentially from disk.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::dataset::Dataset;
+use crate::data::sparse::{CscMatrix, CsrMatrix};
+use crate::error::{DlrError, Result};
+
+/// Parse a libsvm stream. Feature ids may be 0- or 1-based; we keep them
+/// as-is (0-based internally; 1-based files simply leave column 0 empty).
+pub fn read_libsvm(reader: impl Read, name: &str) -> Result<Dataset> {
+    let mut x = CsrMatrix::new(0);
+    let mut y = Vec::new();
+    let mut entries: Vec<(u32, f32)> = Vec::new();
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        entries.clear();
+        let mut parts = line.split_whitespace();
+        let label_tok = parts
+            .next()
+            .ok_or_else(|| DlrError::parse(format!("line {}", lineno + 1), "empty line"))?;
+        let label: f32 = label_tok.parse().map_err(|_| {
+            DlrError::parse(format!("line {}", lineno + 1), format!("bad label '{label_tok}'"))
+        })?;
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+        for tok in parts {
+            let (idx, val) = tok.split_once(':').ok_or_else(|| {
+                DlrError::parse(format!("line {}", lineno + 1), format!("bad pair '{tok}'"))
+            })?;
+            let idx: u32 = idx.parse().map_err(|_| {
+                DlrError::parse(format!("line {}", lineno + 1), format!("bad index '{idx}'"))
+            })?;
+            let val: f32 = val.parse().map_err(|_| {
+                DlrError::parse(format!("line {}", lineno + 1), format!("bad value '{val}'"))
+            })?;
+            entries.push((idx, val));
+        }
+        x.push_row(&entries);
+        y.push(label);
+    }
+    Ok(Dataset::new(name, x, y))
+}
+
+pub fn read_libsvm_file(path: impl AsRef<Path>) -> Result<Dataset> {
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    read_libsvm(std::fs::File::open(path)?, &name)
+}
+
+pub fn write_libsvm(ds: &Dataset, writer: impl Write) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    for (i, &label) in ds.y.iter().enumerate() {
+        let (cols, vals) = ds.x.row(i);
+        write!(w, "{}", if label > 0.0 { "+1" } else { "-1" })?;
+        for (&c, &v) in cols.iter().zip(vals) {
+            write!(w, " {c}:{v}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write the paper's Table-1 by-feature format: one line per feature,
+/// `feature_id (example_id,value) (example_id,value) ...`
+pub fn write_by_feature(csc: &CscMatrix, writer: impl Write) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    for j in 0..csc.n_cols {
+        let (rows, vals) = csc.col(j);
+        write!(w, "{j}")?;
+        for (&r, &v) in rows.iter().zip(vals) {
+            write!(w, " ({r},{v})")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the by-feature format back. `n_rows` is required (the format does
+/// not record the example count for features whose tail examples are zero).
+pub fn read_by_feature(reader: impl Read, n_rows: usize) -> Result<CscMatrix> {
+    let mut cols: Vec<(usize, Vec<(u32, f32)>)> = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = || format!("by-feature line {}", lineno + 1);
+        let mut it = line.split_whitespace();
+        let j: usize = it
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|_| DlrError::parse(ctx(), "bad feature id"))?;
+        max_col = max_col.max(j);
+        let mut entries = Vec::new();
+        for tok in it {
+            let inner = tok
+                .strip_prefix('(')
+                .and_then(|t| t.strip_suffix(')'))
+                .ok_or_else(|| DlrError::parse(ctx(), format!("bad pair '{tok}'")))?;
+            let (r, v) = inner
+                .split_once(',')
+                .ok_or_else(|| DlrError::parse(ctx(), format!("bad pair '{tok}'")))?;
+            let r: u32 = r.parse().map_err(|_| DlrError::parse(ctx(), "bad example id"))?;
+            if r as usize >= n_rows {
+                return Err(DlrError::parse(ctx(), "example id out of range"));
+            }
+            let v: f32 = v.parse().map_err(|_| DlrError::parse(ctx(), "bad value"))?;
+            entries.push((r, v));
+        }
+        entries.sort_by_key(|e| e.0);
+        cols.push((j, entries));
+    }
+    let n_cols = max_col + 1;
+    let mut csc = CscMatrix {
+        n_rows,
+        n_cols,
+        indptr: vec![0; n_cols + 1],
+        indices: vec![],
+        values: vec![],
+    };
+    cols.sort_by_key(|c| c.0);
+    let mut expected = 0usize;
+    for (j, entries) in cols {
+        // features between `expected` and `j` are absent => empty columns
+        for k in expected..=j {
+            csc.indptr[k] = csc.indices.len();
+        }
+        for (r, v) in entries {
+            csc.indices.push(r);
+            csc.values.push(v);
+        }
+        expected = j + 1;
+    }
+    for k in expected..=n_cols {
+        csc.indptr[k] = csc.indices.len();
+    }
+    Ok(csc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "+1 0:1.5 3:2.0\n-1 1:1.0\n# comment\n\n+1 3:0.5\n";
+
+    #[test]
+    fn read_libsvm_basics() {
+        let ds = read_libsvm(SAMPLE.as_bytes(), "s").unwrap();
+        assert_eq!(ds.n_examples(), 3);
+        assert_eq!(ds.n_features(), 4);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.row(0), (&[0u32, 3][..], &[1.5f32, 2.0][..]));
+    }
+
+    #[test]
+    fn libsvm_roundtrip() {
+        let ds = read_libsvm(SAMPLE.as_bytes(), "s").unwrap();
+        let mut buf = Vec::new();
+        write_libsvm(&ds, &mut buf).unwrap();
+        let ds2 = read_libsvm(buf.as_slice(), "s").unwrap();
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x.indices, ds2.x.indices);
+        assert_eq!(ds.x.values, ds2.x.values);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read_libsvm("+1 3-2\n".as_bytes(), "s").is_err());
+        assert!(read_libsvm("abc 0:1\n".as_bytes(), "s").is_err());
+        assert!(read_libsvm("+1 x:1\n".as_bytes(), "s").is_err());
+    }
+
+    #[test]
+    fn by_feature_roundtrip() {
+        let ds = read_libsvm(SAMPLE.as_bytes(), "s").unwrap();
+        let csc = ds.x.to_csc();
+        let mut buf = Vec::new();
+        write_by_feature(&csc, &mut buf).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.starts_with("0 (0,1.5)"), "{text}");
+        let back = read_by_feature(buf.as_slice(), ds.n_examples()).unwrap();
+        assert_eq!(back.indptr, csc.indptr);
+        assert_eq!(back.indices, csc.indices);
+        assert_eq!(back.values, csc.values);
+    }
+
+    #[test]
+    fn by_feature_out_of_range_example() {
+        assert!(read_by_feature("0 (9,1.0)\n".as_bytes(), 3).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Data substrate: sparse matrices (by-example CSR and by-feature CSC —
+//! the paper's §3 storage duality), libsvm and the paper's Table-1
+//! by-feature text formats, synthetic dataset generators with the shape
+//! signatures of the Pascal-challenge datasets, and the external
+//! by-example → by-feature shuffle (the paper's Map/Reduce preprocessing).
+
+pub mod dataset;
+pub mod libsvm;
+pub mod shuffle;
+pub mod sparse;
+pub mod synth;
+
+pub use dataset::{Dataset, SplitDataset};
+pub use sparse::{CscMatrix, CsrMatrix, Triplet};

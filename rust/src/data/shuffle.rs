@@ -1,0 +1,189 @@
+//! The paper's §3 preprocessing: transform a by-example dataset into M
+//! by-feature shards "by means of a Reduce operation". We simulate the
+//! Map/Reduce cluster with an external (spill-file) shuffle so the code path
+//! matches the paper's: map emits (feature, example, value) triplets
+//! partitioned by the feature partitioner; each reducer sorts its partition
+//! and builds the machine-local CSC shard.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::cluster::partition::FeaturePartition;
+use crate::data::sparse::{CscMatrix, CsrMatrix, Triplet};
+use crate::error::{DlrError, Result};
+
+/// Statistics of one shuffle run (the paper reports this phase at 1–5% of
+/// total path time; `bench_ablation -- comm` checks ours).
+#[derive(Debug, Clone, Default)]
+pub struct ShuffleStats {
+    pub triplets: usize,
+    pub spill_bytes: u64,
+    pub map_secs: f64,
+    pub reduce_secs: f64,
+}
+
+/// In-memory shard produced for machine m: the local CSC (columns remapped
+/// to 0..local_p) plus the global feature ids for each local column.
+#[derive(Debug, Clone)]
+pub struct FeatureShard {
+    pub machine: usize,
+    pub global_cols: Vec<u32>,
+    pub csc: CscMatrix,
+}
+
+/// External map/reduce shuffle through spill files under `spill_dir`.
+pub fn shuffle_to_feature_shards(
+    x: &CsrMatrix,
+    partition: &FeaturePartition,
+    spill_dir: &Path,
+) -> Result<(Vec<FeatureShard>, ShuffleStats)> {
+    std::fs::create_dir_all(spill_dir)?;
+    let m = partition.machines();
+    let mut stats = ShuffleStats::default();
+
+    // ---- map phase: stream rows, emit triplets into per-machine spills ----
+    let t0 = std::time::Instant::now();
+    let mut writers: Vec<BufWriter<std::fs::File>> = (0..m)
+        .map(|k| -> Result<_> {
+            let p = spill_path(spill_dir, k);
+            Ok(BufWriter::new(std::fs::File::create(p)?))
+        })
+        .collect::<Result<_>>()?;
+    for i in 0..x.n_rows {
+        let (cols, vals) = x.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let k = partition.machine_of(c as usize);
+            writeln!(writers[k], "{c}\t{i}\t{v}")?;
+            stats.triplets += 1;
+        }
+    }
+    for mut w in writers {
+        w.flush()?;
+    }
+    stats.map_secs = t0.elapsed().as_secs_f64();
+
+    // ---- reduce phase: per machine, sort by (feature, example) and build CSC
+    let t1 = std::time::Instant::now();
+    let mut shards = Vec::with_capacity(m);
+    for k in 0..m {
+        let p = spill_path(spill_dir, k);
+        stats.spill_bytes += std::fs::metadata(&p)?.len();
+        let mut triplets: Vec<Triplet> = Vec::new();
+        for line in BufReader::new(std::fs::File::open(&p)?).lines() {
+            let line = line?;
+            let mut it = line.split('\t');
+            let mut next_tok = || -> Result<&str> {
+                it.next().ok_or_else(|| DlrError::parse("spill", "short line"))
+            };
+            let c: u32 = next_tok()?
+                .parse()
+                .map_err(|_| DlrError::parse("spill", "bad col"))?;
+            let r: u32 = next_tok()?
+                .parse()
+                .map_err(|_| DlrError::parse("spill", "bad row"))?;
+            let v: f32 = next_tok()?
+                .parse()
+                .map_err(|_| DlrError::parse("spill", "bad val"))?;
+            triplets.push(Triplet { row: r, col: c, val: v });
+        }
+        std::fs::remove_file(&p)?;
+        // the reduce sort: by feature then example (Table-1 order)
+        triplets.sort_by_key(|t| (t.col, t.row));
+        let global_cols = partition.features_of(k);
+        let mut col_pos = std::collections::HashMap::with_capacity(global_cols.len());
+        for (local, &g) in global_cols.iter().enumerate() {
+            col_pos.insert(g, local);
+        }
+        let mut csc = CscMatrix {
+            n_rows: x.n_rows,
+            n_cols: global_cols.len(),
+            indptr: vec![0; global_cols.len() + 1],
+            indices: Vec::with_capacity(triplets.len()),
+            values: Vec::with_capacity(triplets.len()),
+        };
+        // counting pass
+        let mut counts = vec![0usize; global_cols.len()];
+        for t in &triplets {
+            let local = *col_pos.get(&t.col).ok_or_else(|| {
+                DlrError::Data(format!("feature {} not owned by machine {k}", t.col))
+            })?;
+            counts[local] += 1;
+        }
+        for j in 0..global_cols.len() {
+            csc.indptr[j + 1] = csc.indptr[j] + counts[j];
+        }
+        let mut next = csc.indptr.clone();
+        csc.indices.resize(triplets.len(), 0);
+        csc.values.resize(triplets.len(), 0.0);
+        for t in &triplets {
+            let local = col_pos[&t.col];
+            let dst = next[local];
+            csc.indices[dst] = t.row;
+            csc.values[dst] = t.val;
+            next[local] += 1;
+        }
+        shards.push(FeatureShard { machine: k, global_cols, csc });
+    }
+    stats.reduce_secs = t1.elapsed().as_secs_f64();
+    Ok((shards, stats))
+}
+
+/// Fast in-memory variant (no spill files) — used when the dataset already
+/// fits and by the unit tests of downstream modules.
+pub fn shard_in_memory(x: &CsrMatrix, partition: &FeaturePartition) -> Vec<FeatureShard> {
+    let csc = x.to_csc();
+    (0..partition.machines())
+        .map(|k| {
+            let global_cols = partition.features_of(k);
+            let cols_usize: Vec<usize> = global_cols.iter().map(|&c| c as usize).collect();
+            FeatureShard { machine: k, global_cols, csc: csc.select_cols(&cols_usize) }
+        })
+        .collect()
+}
+
+fn spill_path(dir: &Path, machine: usize) -> PathBuf {
+    dir.join(format!("spill_machine_{machine}.tsv"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::{FeaturePartition, PartitionStrategy};
+    use crate::data::synth;
+
+    #[test]
+    fn external_shuffle_matches_in_memory() {
+        let ds = synth::webspam_like(60, 300, 12, 5);
+        let part = FeaturePartition::build(
+            PartitionStrategy::RoundRobin,
+            ds.n_features(),
+            4,
+            None,
+        );
+        let dir = std::env::temp_dir().join(format!("dglmnet_shuffle_test_{}", std::process::id()));
+        let (ext, stats) = shuffle_to_feature_shards(&ds.x, &part, &dir).unwrap();
+        let mem = shard_in_memory(&ds.x, &part);
+        assert_eq!(stats.triplets, ds.x.nnz());
+        assert!(stats.spill_bytes > 0);
+        for (a, b) in ext.iter().zip(&mem) {
+            assert_eq!(a.global_cols, b.global_cols);
+            assert_eq!(a.csc.indptr, b.csc.indptr);
+            assert_eq!(a.csc.indices, b.csc.indices);
+            assert_eq!(a.csc.values, b.csc.values);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shards_cover_all_nnz_disjointly() {
+        let ds = synth::dna_like(200, 50, 5, 6);
+        let part =
+            FeaturePartition::build(PartitionStrategy::Contiguous, ds.n_features(), 3, None);
+        let shards = shard_in_memory(&ds.x, &part);
+        let total: usize = shards.iter().map(|s| s.csc.nnz()).sum();
+        assert_eq!(total, ds.x.nnz());
+        let mut all_cols: Vec<u32> = shards.iter().flat_map(|s| s.global_cols.clone()).collect();
+        all_cols.sort_unstable();
+        assert_eq!(all_cols, (0..ds.n_features() as u32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,340 @@
+//! Compressed sparse matrices. CSR is the by-example layout (one row per
+//! training example — what online learners and the libsvm format use); CSC
+//! is the by-feature layout d-GLMNET workers need (paper §3, Table 1:
+//! `feature_id (example_id, value) ...`).
+
+use crate::error::{DlrError, Result};
+
+/// A single (row, col, value) entry, the interchange unit of the shuffle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Triplet {
+    pub row: u32,
+    pub col: u32,
+    pub val: f32,
+}
+
+/// Compressed sparse row matrix (by-example).
+#[derive(Debug, Clone, Default)]
+pub struct CsrMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+/// Compressed sparse column matrix (by-feature).
+#[derive(Debug, Clone, Default)]
+pub struct CscMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>, // row (example) ids
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn new(n_cols: usize) -> Self {
+        Self { n_rows: 0, n_cols, indptr: vec![0], indices: vec![], values: vec![] }
+    }
+
+    /// Append one row given (col, val) pairs; extends `n_cols` if needed.
+    pub fn push_row(&mut self, entries: &[(u32, f32)]) {
+        for &(c, v) in entries {
+            if v != 0.0 {
+                self.indices.push(c);
+                self.values.push(v);
+                self.n_cols = self.n_cols.max(c as usize + 1);
+            }
+        }
+        self.indptr.push(self.indices.len());
+        self.n_rows += 1;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (col, val) slice pair for row `i`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = (&[u32], &[f32])> + '_ {
+        (0..self.n_rows).map(move |i| self.row(i))
+    }
+
+    /// margins[i] = Σ_j x_ij β_j — by-example SpMV.
+    pub fn margins(&self, beta: &[f32]) -> Vec<f32> {
+        assert!(beta.len() >= self.n_cols, "beta too short");
+        let mut out = vec![0f32; self.n_rows];
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0f64;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v as f64 * beta[c as usize] as f64;
+            }
+            out[i] = acc as f32;
+        }
+        out
+    }
+
+    pub fn from_triplets(n_rows: usize, n_cols: usize, triplets: &[Triplet]) -> Result<Self> {
+        let mut sorted: Vec<&Triplet> = triplets.iter().collect();
+        sorted.sort_by_key(|t| (t.row, t.col));
+        let mut m = CsrMatrix::new(n_cols);
+        m.n_rows = n_rows;
+        m.n_cols = n_cols;
+        m.indptr = Vec::with_capacity(n_rows + 1);
+        m.indptr.push(0);
+        let mut cur = 0u32;
+        for t in sorted {
+            if (t.row as usize) >= n_rows || (t.col as usize) >= n_cols {
+                return Err(DlrError::Data(format!(
+                    "triplet ({}, {}) out of bounds ({n_rows}, {n_cols})",
+                    t.row, t.col
+                )));
+            }
+            while cur < t.row {
+                m.indptr.push(m.indices.len());
+                cur += 1;
+            }
+            if t.val != 0.0 {
+                m.indices.push(t.col);
+                m.values.push(t.val);
+            }
+        }
+        while (m.indptr.len() as usize) < n_rows + 1 {
+            m.indptr.push(m.indices.len());
+        }
+        Ok(m)
+    }
+
+    /// Transpose into the by-feature layout (counting sort — O(nnz + p)).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for j in 0..self.n_cols {
+            counts[j + 1] += counts[j];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        let mut next = counts;
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let dst = next[c as usize];
+                indices[dst] = i as u32;
+                values[dst] = v;
+                next[c as usize] += 1;
+            }
+        }
+        CscMatrix {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Select a subset of rows (train/test splitting).
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut m = CsrMatrix::new(self.n_cols);
+        m.n_cols = self.n_cols;
+        for &i in rows {
+            let (cols, vals) = self.row(i);
+            let entries: Vec<(u32, f32)> =
+                cols.iter().copied().zip(vals.iter().copied()).collect();
+            m.push_row(&entries);
+        }
+        m.n_cols = self.n_cols; // keep width even if trailing cols unused
+        m
+    }
+}
+
+impl CscMatrix {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (row ids, vals) for feature `j`.
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.indptr[j + 1] - self.indptr[j]
+    }
+
+    /// Gather a subset of columns into a new CSC with remapped column ids
+    /// 0..cols.len() (worker shard construction).
+    pub fn select_cols(&self, cols: &[usize]) -> CscMatrix {
+        let mut m = CscMatrix {
+            n_rows: self.n_rows,
+            n_cols: cols.len(),
+            indptr: Vec::with_capacity(cols.len() + 1),
+            indices: vec![],
+            values: vec![],
+        };
+        m.indptr.push(0);
+        for &j in cols {
+            let (rows, vals) = self.col(j);
+            m.indices.extend_from_slice(rows);
+            m.values.extend_from_slice(vals);
+            m.indptr.push(m.indices.len());
+        }
+        m
+    }
+
+    /// Round-trip back to CSR (used by tests).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut counts = vec![0usize; self.n_rows + 1];
+        for &r in &self.indices {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        let mut next = counts;
+        for j in 0..self.n_cols {
+            let (rows, vals) = self.col(j);
+            for (&r, &v) in rows.iter().zip(vals) {
+                let dst = next[r as usize];
+                indices[dst] = j as u32;
+                values[dst] = v;
+                next[r as usize] += 1;
+            }
+        }
+        CsrMatrix { n_rows: self.n_rows, n_cols: self.n_cols, indptr, indices, values }
+    }
+
+    /// Densify columns `[j0, j0+width)` into a row-major (n_pad × width_pad)
+    /// tile for the XLA engine. Rows ≥ n_rows and cols ≥ width stay zero.
+    pub fn densify_block(
+        &self,
+        j0: usize,
+        width: usize,
+        n_pad: usize,
+        width_pad: usize,
+    ) -> Vec<f32> {
+        assert!(n_pad >= self.n_rows && width_pad >= width);
+        let mut tile = vec![0f32; n_pad * width_pad];
+        for (local_j, j) in (j0..(j0 + width).min(self.n_cols)).enumerate() {
+            let (rows, vals) = self.col(j);
+            for (&r, &v) in rows.iter().zip(vals) {
+                tile[r as usize * width_pad + local_j] = v;
+            }
+        }
+        tile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        let mut m = CsrMatrix::new(3);
+        m.push_row(&[(0, 1.0), (2, 2.0)]);
+        m.push_row(&[(1, 3.0)]);
+        m.push_row(&[(0, 4.0), (2, 5.0)]);
+        m
+    }
+
+    #[test]
+    fn push_row_and_access() {
+        let m = small();
+        assert_eq!(m.n_rows, 3);
+        assert_eq!(m.n_cols, 3);
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row(1), (&[1u32][..], &[3.0f32][..]));
+    }
+
+    #[test]
+    fn margins_spmv() {
+        let m = small();
+        let beta = [1.0f32, 10.0, 100.0];
+        assert_eq!(m.margins(&beta), vec![201.0, 30.0, 504.0]);
+    }
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let m = small();
+        let csc = m.to_csc();
+        assert_eq!(csc.col(0), (&[0u32, 2][..], &[1.0f32, 4.0][..]));
+        assert_eq!(csc.col(1), (&[1u32][..], &[3.0f32][..]));
+        let back = csc.to_csr();
+        assert_eq!(back.indptr, m.indptr);
+        assert_eq!(back.indices, m.indices);
+        assert_eq!(back.values, m.values);
+    }
+
+    #[test]
+    fn from_triplets_sorts_and_validates() {
+        let tr = [
+            Triplet { row: 2, col: 0, val: 4.0 },
+            Triplet { row: 0, col: 2, val: 2.0 },
+            Triplet { row: 0, col: 0, val: 1.0 },
+            Triplet { row: 1, col: 1, val: 3.0 },
+            Triplet { row: 2, col: 2, val: 5.0 },
+        ];
+        let m = CsrMatrix::from_triplets(3, 3, &tr).unwrap();
+        let s = small();
+        assert_eq!(m.indptr, s.indptr);
+        assert_eq!(m.indices, s.indices);
+        assert_eq!(m.values, s.values);
+        assert!(CsrMatrix::from_triplets(1, 1, &tr).is_err());
+    }
+
+    #[test]
+    fn empty_rows_are_preserved() {
+        let tr = [Triplet { row: 3, col: 1, val: 1.0 }];
+        let m = CsrMatrix::from_triplets(5, 2, &tr).unwrap();
+        assert_eq!(m.n_rows, 5);
+        assert_eq!(m.row(0).0.len(), 0);
+        assert_eq!(m.row(3).0, &[1u32]);
+        assert_eq!(m.row(4).0.len(), 0);
+    }
+
+    #[test]
+    fn select_cols_remaps() {
+        let csc = small().to_csc();
+        let sub = csc.select_cols(&[2, 0]);
+        assert_eq!(sub.n_cols, 2);
+        assert_eq!(sub.col(0), (&[0u32, 2][..], &[2.0f32, 5.0][..]));
+        assert_eq!(sub.col(1), (&[0u32, 2][..], &[1.0f32, 4.0][..]));
+    }
+
+    #[test]
+    fn densify_block_pads() {
+        let csc = small().to_csc();
+        let tile = csc.densify_block(1, 2, 4, 4);
+        // cols 1..3 of the matrix land in tile cols 0..2
+        assert_eq!(tile[0 * 4 + 1], 2.0); // (row 0, col 2)
+        assert_eq!(tile[1 * 4 + 0], 3.0); // (row 1, col 1)
+        assert_eq!(tile[2 * 4 + 1], 5.0); // (row 2, col 2)
+        assert_eq!(tile[3 * 4 + 0], 0.0); // padded row
+        assert_eq!(tile.iter().filter(|&&x| x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let m = small();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.n_rows, 2);
+        assert_eq!(s.row(0), (&[0u32, 2][..], &[4.0f32, 5.0][..]));
+        assert_eq!(s.row(1), (&[0u32, 2][..], &[1.0f32, 2.0][..]));
+    }
+}

@@ -1,0 +1,107 @@
+//! Subproblem engines: the per-machine solve of paper eq. (9) / Alg 2.
+//!
+//! * [`XlaEngine`] — the production hot path: the worker's feature shard is
+//!   densified once into (N, B) tiles and every sweep executes the AOT
+//!   Pallas `cd_block_sweep` through PJRT.
+//! * [`NativeEngine`] — the paper's original sparse CPU formulation in pure
+//!   rust; used for shards too large/sparse for dense tiles and as the
+//!   cross-check oracle for the XLA path.
+//!
+//! Both consume the same inputs and must produce the same update (tested in
+//! `rust/tests/engine_equivalence.rs`).
+
+pub mod native;
+pub mod streaming;
+pub mod xla_engine;
+
+pub use native::NativeEngine;
+pub use streaming::StreamingEngine;
+pub use xla_engine::XlaEngine;
+
+use crate::config::{EngineKind, TrainConfig};
+use crate::data::shuffle::FeatureShard;
+use crate::error::Result;
+
+/// Result of one machine-local subproblem solve (one cyclic CD sweep).
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Update for the shard's features, in shard-local column order.
+    pub delta_local: Vec<f32>,
+    /// Per-example margin delta contributed by this shard:
+    /// dmargins[i] = Δβ^m · x_i, length n (unpadded).
+    pub dmargins: Vec<f32>,
+    /// Wall-clock seconds of the local solve (for Table 3 / speedup).
+    pub compute_secs: f64,
+}
+
+/// A machine-local engine. Lives entirely inside one worker thread (the
+/// XLA variant holds a thread-bound PJRT client, hence `Self` need not be
+/// `Send` — only the builder inputs cross the thread boundary).
+pub trait SubproblemEngine {
+    /// One cyclic coordinate-descent sweep over the shard, given the shared
+    /// working weights `w` and responses `z` (length n) and the *current
+    /// shard-local* coefficients `beta_local`.
+    fn sweep(
+        &mut self,
+        w: &[f32],
+        z: &[f32],
+        beta_local: &[f32],
+        lam: f32,
+        nu: f32,
+    ) -> Result<SweepResult>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Per-worker dense-tile memory budget for the Auto engine (bytes).
+const AUTO_DENSE_BYTES_BUDGET: usize = 256 << 20;
+/// Minimum shard density for Auto to pick the dense-tile path: below this
+/// the O(n_pad·p) dense sweep wastes too much work vs the O(nnz) sparse one.
+const AUTO_MIN_DENSITY: f64 = 0.02;
+
+/// Resolve [`EngineKind::Auto`] for a concrete shard.
+pub fn resolve_engine(
+    cfg: &TrainConfig,
+    shard: &FeatureShard,
+    n: usize,
+    artifacts_dir: &std::path::Path,
+) -> EngineKind {
+    match cfg.engine {
+        EngineKind::Auto => {
+            let Ok(manifest) = crate::runtime::Manifest::load(artifacts_dir) else {
+                return EngineKind::Native;
+            };
+            let Ok(n_pad) = manifest.pick_n(n) else {
+                return EngineKind::Native;
+            };
+            let p_local = shard.csc.n_cols.max(1);
+            let dense_bytes = n_pad * crate::util::round_up(p_local, cfg.block) * 4;
+            let density = shard.csc.nnz() as f64 / (n.max(1) * p_local) as f64;
+            if dense_bytes <= AUTO_DENSE_BYTES_BUDGET && density >= AUTO_MIN_DENSITY {
+                EngineKind::Xla
+            } else {
+                EngineKind::Native
+            }
+        }
+        k => k,
+    }
+}
+
+/// Build an engine for `shard` inside the current thread.
+pub fn build_engine(
+    cfg: &TrainConfig,
+    shard: FeatureShard,
+    n: usize,
+    artifacts_dir: &std::path::Path,
+) -> Result<Box<dyn SubproblemEngine>> {
+    match resolve_engine(cfg, &shard, n, artifacts_dir) {
+        EngineKind::Native => Ok(Box::new(NativeEngine::new(shard, n))),
+        _ => Ok(Box::new(XlaEngine::with_kernel(
+            shard,
+            n,
+            cfg.block,
+            artifacts_dir,
+            cfg.naive_sweep,
+        )?)),
+    }
+}

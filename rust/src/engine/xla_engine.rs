@@ -1,0 +1,245 @@
+//! XLA subproblem engine: the AOT Pallas `cd_block_sweep` driven from rust.
+//!
+//! At construction the shard's sparse columns are densified once into
+//! (n_pad × B) row-major tiles and uploaded as PJRT literals; every sweep
+//! then runs `tiles` sequential kernel executions, threading the working
+//! residual `r` through them (the same residual-carry contract the kernel
+//! test `test_cd_sweep_carries_residual_across_blocks` pins down).
+
+use std::time::Instant;
+
+use crate::data::shuffle::FeatureShard;
+use crate::engine::{SubproblemEngine, SweepResult};
+use crate::error::{DlrError, Result};
+use crate::runtime::{lit_vec, pad_to, XlaContext};
+
+/// One densified (n_pad × b) column block.
+struct Tile {
+    x_lit: xla::Literal,
+    /// shard-local column range [start, start+width)
+    start: usize,
+    width: usize,
+}
+
+/// Dense-tile engine executing the AOT `cd_sweep_n{n_pad}_b{b}` unit.
+pub struct XlaEngine {
+    ctx: XlaContext,
+    unit: String,
+    shard: FeatureShard,
+    tiles: Vec<Tile>,
+    n: usize,
+    n_pad: usize,
+    b: usize,
+    /// reusable padded buffers
+    w_pad: Vec<f32>,
+    r_pad: Vec<f32>,
+}
+
+impl XlaEngine {
+    /// Default: the optimized covariance-update sweep kernel.
+    pub fn new(
+        shard: FeatureShard,
+        n: usize,
+        block: usize,
+        artifacts_dir: &std::path::Path,
+    ) -> Result<Self> {
+        Self::with_kernel(shard, n, block, artifacts_dir, false)
+    }
+
+    /// `naive = true` selects the per-column reference kernel (perf
+    /// ablation; EXPERIMENTS.md §Perf).
+    pub fn with_kernel(
+        shard: FeatureShard,
+        n: usize,
+        block: usize,
+        artifacts_dir: &std::path::Path,
+        naive: bool,
+    ) -> Result<Self> {
+        let mut ctx = XlaContext::new(artifacts_dir)?;
+        let n_pad = ctx.manifest().pick_n(n)?;
+        let b = ctx.manifest().pick_b(block)?;
+        let fn_name = if naive { "cd_sweep" } else { "cd_sweep_cov" };
+        let unit = ctx.manifest().find(fn_name, n_pad, Some(b))?.name.clone();
+        ctx.ensure_compiled(&unit)?;
+
+        let p_local = shard.csc.n_cols;
+        let mut tiles = Vec::with_capacity(p_local.div_ceil(b));
+        let mut start = 0usize;
+        while start < p_local {
+            let width = (p_local - start).min(b);
+            let dense = shard.csc.densify_block(start, width, n_pad, b);
+            let x_lit = crate::runtime::lit_mat(&dense, n_pad, b)?;
+            tiles.push(Tile { x_lit, start, width });
+            start += width;
+        }
+        if p_local == 0 {
+            return Err(DlrError::Solver("empty shard for XlaEngine".into()));
+        }
+        Ok(Self {
+            ctx,
+            unit,
+            shard,
+            tiles,
+            n,
+            n_pad,
+            b,
+            w_pad: vec![0f32; n_pad],
+            r_pad: vec![0f32; n_pad],
+        })
+    }
+
+    pub fn n_pad(&self) -> usize {
+        self.n_pad
+    }
+
+    pub fn tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn shard(&self) -> &FeatureShard {
+        &self.shard
+    }
+
+    /// Approximate VMEM-resident bytes per sweep call (the §Perf estimate).
+    pub fn vmem_bytes_per_tile(&self) -> usize {
+        // X tile + w + r (+ out r) + small block vectors
+        4 * (self.n_pad * self.b + 3 * self.n_pad + 3 * self.b + 2)
+    }
+}
+
+impl SubproblemEngine for XlaEngine {
+    fn sweep(
+        &mut self,
+        w: &[f32],
+        z: &[f32],
+        beta_local: &[f32],
+        lam: f32,
+        nu: f32,
+    ) -> Result<SweepResult> {
+        let t0 = Instant::now();
+        let n = self.n;
+        debug_assert_eq!(w.len(), n);
+        debug_assert_eq!(beta_local.len(), self.shard.csc.n_cols);
+
+        self.w_pad[..n].copy_from_slice(w);
+        self.r_pad[..n].copy_from_slice(z); // r starts at z; padded rows stay 0
+        let w_lit = lit_vec(&self.w_pad);
+        let lam_lit = lit_vec(&[lam]);
+        let nu_lit = lit_vec(&[nu]);
+
+        let mut delta = vec![0f32; beta_local.len()];
+        let mut r_lit = lit_vec(&self.r_pad);
+        for tile in &self.tiles {
+            let beta_b = pad_to(&beta_local[tile.start..tile.start + tile.width], self.b);
+            let beta_lit = lit_vec(&beta_b);
+            let delta_lit = lit_vec(&vec![0f32; self.b]);
+            let outputs = self.ctx.run(
+                &self.unit,
+                &[&tile.x_lit, &w_lit, &r_lit, &beta_lit, &delta_lit, &lam_lit, &nu_lit],
+            )?;
+            let mut it = outputs.into_iter();
+            let d_out = it
+                .next()
+                .ok_or_else(|| DlrError::Xla("cd_sweep returned no outputs".into()))?;
+            r_lit = it
+                .next()
+                .ok_or_else(|| DlrError::Xla("cd_sweep returned 1 output".into()))?;
+            let d_vec = d_out.to_vec::<f32>()?;
+            delta[tile.start..tile.start + tile.width].copy_from_slice(&d_vec[..tile.width]);
+        }
+        let r_final = r_lit.to_vec::<f32>()?;
+        let dmargins: Vec<f32> = (0..n).map(|i| z[i] - r_final[i]).collect();
+        Ok(SweepResult { delta_local: delta, dmargins, compute_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::{FeaturePartition, PartitionStrategy};
+    use crate::data::shuffle::shard_in_memory;
+    use crate::data::synth;
+    use crate::engine::NativeEngine;
+    use crate::runtime::default_artifacts_dir;
+    use crate::util::math::working_stats;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let d = default_artifacts_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn xla_engine_matches_native_engine() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ds = synth::dna_like(600, 90, 6, 11);
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 90, 1, None);
+        let shard = shard_in_memory(&ds.x, &part).remove(0);
+        let n = ds.n_examples();
+
+        let margins = vec![0f32; n];
+        let (w, z): (Vec<f32>, Vec<f32>) = margins
+            .iter()
+            .zip(&ds.y)
+            .map(|(&m, &y)| {
+                let (w, z) = working_stats(y as f64, m as f64);
+                (w as f32, z as f32)
+            })
+            .unzip();
+        let beta = vec![0f32; 90];
+        let (lam, nu) = (0.8f32, 1e-6f32);
+
+        let mut xe = XlaEngine::new(shard.clone(), n, 64, &dir).unwrap();
+        let mut ne = NativeEngine::new(shard, n);
+        let rx = xe.sweep(&w, &z, &beta, lam, nu).unwrap();
+        let rn = ne.sweep(&w, &z, &beta, lam, nu).unwrap();
+
+        assert_eq!(rx.delta_local.len(), rn.delta_local.len());
+        for (j, (a, b)) in rx.delta_local.iter().zip(&rn.delta_local).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-3 * (1.0 + b.abs()),
+                "delta[{j}]: xla {a} vs native {b}"
+            );
+        }
+        for i in (0..n).step_by(37) {
+            assert!(
+                (rx.dmargins[i] - rn.dmargins[i]).abs() < 5e-3 * (1.0 + rn.dmargins[i].abs()),
+                "dmargins[{i}]"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_tile_shard_works() {
+        let Some(dir) = artifacts() else {
+            return;
+        };
+        // 150 local features with b=64 -> 3 tiles (residual threading path)
+        let ds = synth::dna_like(300, 150, 8, 12);
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 150, 1, None);
+        let shard = shard_in_memory(&ds.x, &part).remove(0);
+        let n = ds.n_examples();
+        let mut xe = XlaEngine::new(shard.clone(), n, 64, &dir).unwrap();
+        assert_eq!(xe.tiles(), 3);
+        let (w, z): (Vec<f32>, Vec<f32>) = ds
+            .y
+            .iter()
+            .map(|&y| {
+                let (w, z) = working_stats(y as f64, 0.0);
+                (w as f32, z as f32)
+            })
+            .unzip();
+        let rx = xe.sweep(&w, &z, &vec![0f32; 150], 0.3, 1e-6).unwrap();
+        let mut ne = NativeEngine::new(shard, n);
+        let rn = ne.sweep(&w, &z, &vec![0f32; 150], 0.3, 1e-6).unwrap();
+        for (j, (a, b)) in rx.delta_local.iter().zip(&rn.delta_local).enumerate() {
+            assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "delta[{j}]: {a} vs {b}");
+        }
+    }
+}

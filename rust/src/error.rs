@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every layer of the coordinator.
+#[derive(Error, Debug)]
+pub enum DlrError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("parse error at {context}: {message}")]
+    Parse { context: String, message: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+}
+
+impl From<xla::Error> for DlrError {
+    fn from(e: xla::Error) -> Self {
+        DlrError::Xla(e.to_string())
+    }
+}
+
+impl DlrError {
+    /// Helper for parse-layer errors.
+    pub fn parse(context: impl Into<String>, message: impl Into<String>) -> Self {
+        DlrError::Parse { context: context.into(), message: message.into() }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, DlrError>;

@@ -1,0 +1,55 @@
+//! # dglmnet — Distributed Coordinate Descent for L1-regularized Logistic Regression
+//!
+//! A production-shaped reproduction of **d-GLMNET** (Trofimov & Genkin, 2014):
+//! parallel block-coordinate descent that splits *features* (not examples)
+//! across machines, solves a block-diagonal GLMNET quadratic subproblem with
+//! one cyclic coordinate-descent sweep per machine per iteration, AllReduces
+//! the `O(n + p)` update state, and line-searches on the leader (Algorithms
+//! 1–5 of the paper).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: simulated cluster (partitioning,
+//!   tree AllReduce with a byte-accounted network model), leader/worker
+//!   iteration driver, line search, regularization path, baselines, metrics.
+//! * **L2 (python/compile)** — JAX compute graph, AOT-lowered once to HLO
+//!   text under `artifacts/`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels: `cd_block_sweep`
+//!   (the per-machine hot loop), `logistic_stats`, `line_search_grid`,
+//!   `matvec_block`.
+//!
+//! Python never runs at training time: [`runtime`] loads the HLO text via
+//! the PJRT CPU client and [`engine::XlaEngine`] drives it from the hot path.
+//! [`engine::NativeEngine`] is the sparse pure-rust implementation of the
+//! same math (the paper's original CPU formulation) and doubles as a
+//! cross-check oracle.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dglmnet::data::synth;
+//! use dglmnet::config::TrainConfig;
+//! use dglmnet::solver::DGlmnetSolver;
+//!
+//! let ds = synth::epsilon_like(2_000, 200, 7).split(0.8, 7);
+//! let cfg = TrainConfig::builder().machines(4).lambda(2.0).build();
+//! let mut solver = DGlmnetSolver::from_dataset(&ds.train, &cfg).unwrap();
+//! let fit = solver.fit(None).unwrap();
+//! println!("nnz = {}, f = {}", fit.nnz(), fit.objective);
+//! ```
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod error;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+pub use error::{DlrError, Result};

@@ -1,0 +1,330 @@
+//! `dglmnet` — the d-GLMNET launcher: dataset generation, the by-feature
+//! transform, single-λ training, the full regularization path, the online
+//! baseline, and quick evaluation. The benchmark harnesses that regenerate
+//! the paper's tables/figures live under `cargo bench`.
+
+use std::process::ExitCode;
+
+use dglmnet::baselines::grid::online_grid_search;
+use dglmnet::cli::{App, CommandSpec, ParsedArgs};
+use dglmnet::config::{EngineKind, PathConfig, TrainConfig};
+use dglmnet::data::{dataset::Dataset, libsvm, synth};
+use dglmnet::error::{DlrError, Result};
+use dglmnet::metrics;
+use dglmnet::report::Table;
+use dglmnet::solver::{DGlmnetSolver, RegPath, SparseModel};
+
+fn app() -> App {
+    App::new("dglmnet", "distributed coordinate descent for L1-regularized logistic regression (Trofimov & Genkin, 2014)")
+        .command(
+            CommandSpec::new("gen-data", "generate a synthetic dataset (epsilon/webspam/dna shape signatures)")
+                .opt("kind", "epsilon | webspam | dna", Some("dna"))
+                .opt("examples", "number of examples", Some("10000"))
+                .opt("features", "number of features", Some("400"))
+                .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
+                .opt("seed", "rng seed", Some("1"))
+                .opt("out", "output libsvm path", Some("data.svm"))
+                .flag("summary", "print the Table-2 style summary only"),
+        )
+        .command(
+            CommandSpec::new("transform", "by-example libsvm -> the paper's Table-1 by-feature format")
+                .opt("input", "input libsvm path", None)
+                .opt("out", "output by-feature path", Some("data.byfeature")),
+        )
+        .command(
+            CommandSpec::new("train", "train at one lambda on a libsvm file or synthetic data")
+                .opt("input", "libsvm path (omit to use --kind synthetic data)", None)
+                .opt("kind", "synthetic kind when no --input", Some("dna"))
+                .opt("examples", "synthetic examples", Some("10000"))
+                .opt("features", "synthetic features", Some("400"))
+                .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
+                .opt("lambda", "L1 strength", Some("1.0"))
+                .opt("machines", "simulated machines M", Some("4"))
+                .opt("engine", "xla | native", Some("xla"))
+                .opt("max-iter", "iteration cap", Some("100"))
+                .opt("tol", "relative-decrease tolerance", Some("1e-5"))
+                .opt("seed", "rng seed", Some("1"))
+                .opt("model-out", "save fitted model here", None)
+                .flag("verbose", "per-iteration log"),
+        )
+        .command(
+            CommandSpec::new("path", "regularization path (Algorithm 5) with test-set scoring")
+                .opt("input", "libsvm path (omit for synthetic)", None)
+                .opt("kind", "synthetic kind when no --input", Some("dna"))
+                .opt("examples", "synthetic examples", Some("10000"))
+                .opt("features", "synthetic features", Some("400"))
+                .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
+                .opt("steps", "lambda halvings", Some("20"))
+                .opt("machines", "simulated machines M", Some("4"))
+                .opt("engine", "xla | native", Some("xla"))
+                .opt("max-iter", "per-lambda iteration cap", Some("50"))
+                .opt("tol", "relative-decrease tolerance", Some("1e-5"))
+                .opt("seed", "rng seed", Some("1"))
+                .opt("csv-out", "write (series,nnz,auprc) csv here", None),
+        )
+        .command(
+            CommandSpec::new("online", "distributed truncated-gradient baseline (§4.3 grid)")
+                .opt("kind", "synthetic kind", Some("dna"))
+                .opt("examples", "synthetic examples", Some("10000"))
+                .opt("features", "synthetic features", Some("400"))
+                .opt("machines", "example shards M", Some("4"))
+                .opt("passes", "online passes", Some("10"))
+                .opt("seed", "rng seed", Some("1")),
+        )
+        .command(
+            CommandSpec::new("evaluate", "score a saved model on a libsvm test set")
+                .opt("model", "model path", None)
+                .opt("input", "libsvm test path", None),
+        )
+}
+
+fn synth_by_kind(kind: &str, n: usize, p: usize, nnz_row: usize, seed: u64) -> Result<Dataset> {
+    match kind {
+        "epsilon" => Ok(synth::epsilon_like(n, p, seed)),
+        "webspam" => Ok(synth::webspam_like(n, p, nnz_row, seed)),
+        "dna" => Ok(synth::dna_like(n, p, nnz_row, seed)),
+        other => Err(DlrError::Cli(format!("unknown kind '{other}'"))),
+    }
+}
+
+fn load_or_generate(args: &ParsedArgs) -> Result<Dataset> {
+    if let Some(path) = args.get_str("input") {
+        libsvm::read_libsvm_file(path)
+    } else {
+        synth_by_kind(
+            args.get_str("kind").unwrap_or("dna"),
+            args.get_usize("examples")?.unwrap_or(10_000),
+            args.get_usize("features")?.unwrap_or(400),
+            args.get_usize("nnz-per-row")?.unwrap_or(12),
+            args.get_u64("seed")?.unwrap_or(1),
+        )
+    }
+}
+
+fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    if let Some(l) = args.get_f64("lambda")? {
+        cfg.lambda = l;
+    }
+    if let Some(m) = args.get_usize("machines")? {
+        cfg.machines = m;
+    }
+    if let Some(e) = args.get_str("engine") {
+        cfg.engine = EngineKind::parse(e)
+            .ok_or_else(|| DlrError::Cli(format!("unknown engine '{e}'")))?;
+    }
+    if let Some(i) = args.get_usize("max-iter")? {
+        cfg.max_iter = i;
+    }
+    if let Some(t) = args.get_f64("tol")? {
+        cfg.tol = t;
+    }
+    cfg.verbose = args.get_flag("verbose");
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn summary_table(datasets: &[&Dataset]) -> Table {
+    let mut t = Table::new(
+        "Datasets (paper Table 2 analog)",
+        &["dataset", "#examples", "#features", "nnz", "avg nonzeros", "positives"],
+    );
+    for ds in datasets {
+        let s = ds.summary();
+        t.add_row(vec![
+            s.name,
+            s.n_examples.to_string(),
+            s.n_features.to_string(),
+            s.nnz.to_string(),
+            format!("{:.1}", s.avg_nonzeros),
+            s.positives.to_string(),
+        ]);
+    }
+    t
+}
+
+fn cmd_gen_data(args: &ParsedArgs) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    summary_table(&[&ds]).print();
+    if !args.get_flag("summary") {
+        let out = args.get_str("out").unwrap_or("data.svm");
+        libsvm::write_libsvm(&ds, std::fs::File::create(out)?)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_transform(args: &ParsedArgs) -> Result<()> {
+    let input = args
+        .get_str("input")
+        .ok_or_else(|| DlrError::Cli("--input is required".into()))?;
+    let ds = libsvm::read_libsvm_file(input)?;
+    let csc = ds.x.to_csc();
+    let out = args.get_str("out").unwrap_or("data.byfeature");
+    libsvm::write_by_feature(&csc, std::fs::File::create(out)?)?;
+    println!(
+        "transformed {} ({} examples, {} features, {} nnz) -> {out}",
+        input,
+        ds.n_examples(),
+        ds.n_features(),
+        ds.x.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &ParsedArgs) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    let cfg = train_config(args)?;
+    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
+    let mut solver = DGlmnetSolver::from_dataset(&split.train, &cfg)?;
+    let fit = solver.fit(None)?;
+    let margins = fit.model.predict_margins(&split.test.x);
+    let mut t = Table::new(
+        format!("fit @ lambda = {:.5}", cfg.lambda),
+        &["iters", "converged", "objective", "nnz", "test AUPRC", "test AUC", "sim comm (s)", "bytes"],
+    );
+    t.add_row(vec![
+        fit.iterations.to_string(),
+        fit.converged.to_string(),
+        format!("{:.5}", fit.objective),
+        fit.nnz().to_string(),
+        format!("{:.4}", metrics::auprc(&margins, &split.test.y)),
+        format!("{:.4}", metrics::roc_auc(&margins, &split.test.y)),
+        format!("{:.4}", fit.sim_comm_secs),
+        fit.comm_bytes.to_string(),
+    ]);
+    t.print();
+    if let Some(path) = args.get_str("model-out") {
+        fit.model.save(path)?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_path(args: &ParsedArgs) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
+    let cfg = train_config(args)?;
+    let path_cfg = PathConfig {
+        steps: args.get_usize("steps")?.unwrap_or(20),
+        max_iter_per_lambda: args.get_usize("max-iter")?.unwrap_or(50),
+        ..Default::default()
+    };
+    let path = RegPath::run(&split.train, &split.test, &cfg, &path_cfg)?;
+    let mut t = Table::new(
+        "regularization path (Algorithm 5)",
+        &["lambda", "nnz", "test AUPRC", "test AUC", "iters", "wall (s)", "LS frac"],
+    );
+    for p in &path.points {
+        t.add_row(vec![
+            format!("{:.5}", p.lambda),
+            p.nnz.to_string(),
+            format!("{:.4}", p.auprc),
+            format!("{:.4}", p.auc),
+            p.iterations.to_string(),
+            format!("{:.3}", p.wall_secs),
+            format!("{:.0}%", p.line_search_frac * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "total: {} iters, {:.2}s wall, {:.4}s simulated comm, {} bytes moved",
+        path.total_iterations,
+        path.total_wall_secs,
+        path.total_sim_comm_secs,
+        path.total_comm_bytes
+    );
+    if let Some(csv) = args.get_str("csv-out") {
+        let mut s = dglmnet::report::Series::new("d-glmnet");
+        for p in &path.points {
+            s.push(p.nnz as f64, p.auprc);
+        }
+        dglmnet::report::write_series_csv(csv, &[s])?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_online(args: &ParsedArgs) -> Result<()> {
+    let ds = synth_by_kind(
+        args.get_str("kind").unwrap_or("dna"),
+        args.get_usize("examples")?.unwrap_or(10_000),
+        args.get_usize("features")?.unwrap_or(400),
+        12,
+        args.get_u64("seed")?.unwrap_or(1),
+    )?;
+    let split = ds.split(0.8, 1);
+    let lam_max = dglmnet::solver::lambda_max(&split.train);
+    let lambdas: Vec<f64> = (1..=8).map(|i| lam_max * 0.5f64.powi(i)).collect();
+    let pts = online_grid_search(
+        &split.train,
+        &split.test,
+        args.get_usize("machines")?.unwrap_or(4),
+        &[0.1, 0.3, 0.5],
+        &[0.5, 0.9],
+        &lambdas,
+        args.get_usize("passes")?.unwrap_or(10),
+        args.get_u64("seed")?.unwrap_or(1),
+    );
+    let mut t = Table::new(
+        "online baseline frontier (best AUPRC per sparsity)",
+        &["nnz", "AUPRC"],
+    );
+    for (nnz, auprc) in dglmnet::baselines::grid::grid_frontier(&pts) {
+        t.add_row(vec![nnz.to_string(), format!("{auprc:.4}")]);
+    }
+    t.print();
+    println!("{} grid points evaluated", pts.len());
+    Ok(())
+}
+
+fn cmd_evaluate(args: &ParsedArgs) -> Result<()> {
+    let model = SparseModel::load(
+        args.get_str("model")
+            .ok_or_else(|| DlrError::Cli("--model is required".into()))?,
+    )?;
+    let ds = libsvm::read_libsvm_file(
+        args.get_str("input")
+            .ok_or_else(|| DlrError::Cli("--input is required".into()))?,
+    )?;
+    let margins = model.predict_margins(&ds.x);
+    let mut t = Table::new("evaluation", &["nnz", "AUPRC", "AUC", "logloss", "accuracy"]);
+    t.add_row(vec![
+        model.nnz().to_string(),
+        format!("{:.4}", metrics::auprc(&margins, &ds.y)),
+        format!("{:.4}", metrics::roc_auc(&margins, &ds.y)),
+        format!("{:.4}", metrics::mean_logloss(&margins, &ds.y)),
+        format!("{:.4}", metrics::accuracy(&margins, &ds.y)),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let app = app();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = app.parse(&args)?;
+    match parsed.command.as_str() {
+        "help" => {
+            print!("{}", app.usage());
+            Ok(())
+        }
+        "gen-data" => cmd_gen_data(&parsed),
+        "transform" => cmd_transform(&parsed),
+        "train" => cmd_train(&parsed),
+        "path" => cmd_path(&parsed),
+        "online" => cmd_online(&parsed),
+        "evaluate" => cmd_evaluate(&parsed),
+        other => Err(DlrError::Cli(format!("unhandled command '{other}'"))),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}

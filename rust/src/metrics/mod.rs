@@ -1,0 +1,162 @@
+//! Evaluation metrics. Figure 1's y-axis is **area under the
+//! Precision-Recall curve**; we also provide ROC-AUC, log-loss and accuracy
+//! for the extended reports.
+
+/// Area under the precision-recall curve, computed exactly from the step
+/// curve over the ranked scores (ties handled as a block, trapezoid between
+/// distinct-score groups — the standard sklearn-style `auc(recall, precision)`
+/// on the PR points would interpolate optimistically; we use the
+/// conservative step integration a.k.a. average precision by mass).
+pub fn auprc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let total_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    if total_pos == 0 || total_pos == labels.len() {
+        return if total_pos == 0 { 0.0 } else { 1.0 };
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut area = 0f64;
+    let mut prev_recall = 0f64;
+    let mut i = 0usize;
+    while i < order.len() {
+        // consume the whole tie-block at this score
+        let s = scores[order[i]];
+        let mut j = i;
+        while j < order.len() && scores[order[j]] == s {
+            if labels[order[j]] > 0.0 {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            j += 1;
+        }
+        let recall = tp as f64 / total_pos as f64;
+        let precision = tp as f64 / (tp + fp) as f64;
+        area += (recall - prev_recall) * precision;
+        prev_recall = recall;
+        i = j;
+    }
+    area
+}
+
+/// ROC-AUC via the rank statistic (ties get midranks).
+pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut rank_sum_pos = 0f64;
+    let mut i = 0usize;
+    while i < order.len() {
+        let s = scores[order[i]];
+        let mut j = i;
+        while j < order.len() && scores[order[j]] == s {
+            j += 1;
+        }
+        // midrank of the tie block (ranks are 1-based)
+        let midrank = (i + 1 + j) as f64 / 2.0;
+        for &k in &order[i..j] {
+            if labels[k] > 0.0 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j;
+    }
+    (rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// Mean logistic loss log(1 + exp(-y m)) over margins.
+pub fn mean_logloss(margins: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(margins.len(), labels.len());
+    if margins.is_empty() {
+        return 0.0;
+    }
+    crate::util::math::logloss_sum(margins, labels) / margins.len() as f64
+}
+
+/// 0/1 accuracy at threshold 0.
+pub fn accuracy(margins: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(margins.len(), labels.len());
+    if margins.is_empty() {
+        return 0.0;
+    }
+    let correct = margins
+        .iter()
+        .zip(labels)
+        .filter(|(&m, &y)| (m >= 0.0) == (y > 0.0))
+        .count();
+    correct as f64 / margins.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auprc_perfect_ranking_is_one() {
+        let scores = [0.9f32, 0.8, 0.2, 0.1];
+        let labels = [1f32, 1.0, -1.0, -1.0];
+        assert!((auprc(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_inverted_ranking_is_low() {
+        let scores = [0.1f32, 0.2, 0.8, 0.9];
+        let labels = [1f32, 1.0, -1.0, -1.0];
+        let v = auprc(&scores, &labels);
+        assert!(v < 0.5, "v = {v}");
+    }
+
+    #[test]
+    fn auprc_known_value() {
+        // ranking: +, -, +, - => points: r=.5 p=1; r=.5 p=.5; r=1 p=2/3; r=1 p=.5
+        // step areas: .5*1 + 0 + .5*(2/3) + 0 = 0.8333...
+        let scores = [0.9f32, 0.8, 0.7, 0.6];
+        let labels = [1f32, -1.0, 1.0, -1.0];
+        assert!((auprc(&scores, &labels) - (0.5 + 1.0 / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auprc_all_ties_equals_prevalence() {
+        let scores = [0.5f32; 10];
+        let labels: Vec<f32> = (0..10).map(|i| if i < 3 { 1.0 } else { -1.0 }).collect();
+        assert!((auprc(&scores, &labels) - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roc_auc_known_values() {
+        let scores = [0.9f32, 0.8, 0.2, 0.1];
+        let labels = [1f32, 1.0, -1.0, -1.0];
+        assert!((roc_auc(&scores, &labels) - 1.0).abs() < 1e-12);
+        let labels_inv = [-1f32, -1.0, 1.0, 1.0];
+        assert!((roc_auc(&scores, &labels_inv)).abs() < 1e-12);
+        let scores_tied = [0.5f32; 4];
+        assert!((roc_auc(&scores_tied, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_and_logloss() {
+        let margins = [2.0f32, -3.0, 0.5, -0.5];
+        let labels = [1f32, -1.0, -1.0, -1.0];
+        assert!((accuracy(&margins, &labels) - 0.75).abs() < 1e-12);
+        assert!(mean_logloss(&margins, &labels) > 0.0);
+        // zero margins => ln 2
+        let z = [0f32; 3];
+        let l = [1f32, -1.0, 1.0];
+        assert!((mean_logloss(&z, &l) - (2f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_label_sets() {
+        assert_eq!(auprc(&[0.5, 0.4], &[-1.0, -1.0]), 0.0);
+        assert_eq!(auprc(&[0.5, 0.4], &[1.0, 1.0]), 1.0);
+        assert_eq!(roc_auc(&[0.5, 0.4], &[1.0, 1.0]), 0.5);
+    }
+}

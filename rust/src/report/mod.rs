@@ -1,0 +1,229 @@
+//! Reporting substrate: ASCII tables (the paper's Tables 2/3) and CSV
+//! series writers (Figure 1 curves), shared by the CLI, examples and
+//! benches.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Column-aligned ASCII table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep = |w: &Vec<usize>| -> String {
+            let mut s = String::from("+");
+            for &wi in w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..cols {
+                s.push_str(&format!(" {:<width$} |", cells[i], width = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// A named (x, y) series — one curve of Figure 1.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: vec![] }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Upper envelope: best y seen at or below each x (the paper's Figure 1
+    /// compares frontiers — for VW each (nnz, auprc) point from the grid is
+    /// plotted, but the comparison statement is about the envelope).
+    pub fn pareto_envelope(&self) -> Series {
+        let mut pts = self.points.clone();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out = Series::new(format!("{}-envelope", self.name));
+        let mut best = f64::NEG_INFINITY;
+        for (x, y) in pts {
+            if y > best {
+                best = y;
+                out.push(x, best);
+            }
+        }
+        out
+    }
+}
+
+/// Write series as tidy CSV: `series,x,y`.
+pub fn write_series_csv(path: impl AsRef<Path>, series: &[Series]) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "series,x,y")?;
+    for s in series {
+        for (x, y) in &s.points {
+            writeln!(f, "{},{},{}", s.name, x, y)?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Render series as a coarse ASCII scatter for terminal inspection.
+pub fn ascii_scatter(series: &[Series], width: usize, height: usize) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.clone()).collect();
+    if all.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 <= x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 <= y0 {
+        y1 = y0 + 1.0;
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        for &(x, y) in &s.points {
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], s.name));
+    }
+    out.push_str(&format!(
+        "  x: [{x0:.3}, {x1:.3}]  y: [{y0:.4}, {y1:.4}]\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Datasets", &["name", "n", "p"]);
+        t.add_row(vec!["epsilon_like".into(), "8000".into(), "512".into()]);
+        t.add_row(vec!["dna_like".into(), "40000".into(), "400".into()]);
+        let r = t.render();
+        assert!(r.contains("| name         | n     | p   |"), "{r}");
+        assert!(r.lines().count() >= 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.add_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn pareto_envelope_is_monotone() {
+        let mut s = Series::new("vw");
+        for &(x, y) in &[(10.0, 0.5), (5.0, 0.6), (20.0, 0.55), (30.0, 0.7)] {
+            s.push(x, y);
+        }
+        let env = s.pareto_envelope();
+        let ys: Vec<f64> = env.points.iter().map(|p| p.1).collect();
+        assert!(ys.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(env.points.first().unwrap().0, 5.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("dglmnet_csv_{}", std::process::id()));
+        let p = dir.join("fig.csv");
+        let mut s = Series::new("a");
+        s.push(1.0, 2.0);
+        write_series_csv(&p, &[s]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "series,x,y\na,1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scatter_contains_marks() {
+        let mut s = Series::new("a");
+        s.push(0.0, 0.0);
+        s.push(1.0, 1.0);
+        let plot = ascii_scatter(&[s], 20, 10);
+        assert!(plot.contains('*'));
+    }
+}

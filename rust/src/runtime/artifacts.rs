@@ -1,0 +1,183 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. The manifest records every AOT unit (function, padded
+//! shapes, file) so shape selection is data-driven, never hardcoded.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{DlrError, Result};
+use crate::util::json::{self, Json};
+
+/// One AOT-compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct UnitMeta {
+    pub name: String,
+    pub file: String,
+    /// Logical function: "stats" | "cd_sweep" | "line_search" | "matvec".
+    pub fn_name: String,
+    pub n: usize,
+    pub b: Option<usize>,
+    pub k: Option<usize>,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n_sizes: Vec<usize>,
+    pub b_sizes: Vec<usize>,
+    pub k_alphas: usize,
+    pub units: Vec<UnitMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            DlrError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let doc = json::parse(&text)?;
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            return Err(DlrError::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let usizes = |key: &str| -> Vec<usize> {
+            doc.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default()
+        };
+        let mut units = Vec::new();
+        for u in doc
+            .get("units")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| DlrError::Artifact("manifest missing units".into()))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                u.get(k)
+                    .and_then(Json::as_str)
+                    .map(String::from)
+                    .ok_or_else(|| DlrError::Artifact(format!("unit missing '{k}'")))
+            };
+            let shapes = |k: &str| -> Vec<Vec<usize>> {
+                u.get(k)
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_arr)
+                            .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            units.push(UnitMeta {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                fn_name: get_str("fn")?,
+                n: u
+                    .get("n")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| DlrError::Artifact("unit missing 'n'".into()))?,
+                b: u.get("b").and_then(Json::as_usize),
+                k: u.get("k").and_then(Json::as_usize),
+                inputs: shapes("inputs"),
+                outputs: shapes("outputs"),
+            });
+        }
+        Ok(Self { dir, n_sizes: usizes("n_sizes"), b_sizes: usizes("b_sizes"), k_alphas: doc.get("k_alphas").and_then(Json::as_usize).unwrap_or(16), units })
+    }
+
+    /// Smallest compiled `n` that fits `n_needed` (error when too large).
+    pub fn pick_n(&self, n_needed: usize) -> Result<usize> {
+        self.n_sizes
+            .iter()
+            .copied()
+            .filter(|&c| c >= n_needed)
+            .min()
+            .ok_or_else(|| {
+                DlrError::Artifact(format!(
+                    "no compiled n >= {n_needed} (available: {:?}); use the native engine",
+                    self.n_sizes
+                ))
+            })
+    }
+
+    /// Smallest compiled block width >= `b_needed`.
+    pub fn pick_b(&self, b_needed: usize) -> Result<usize> {
+        self.b_sizes
+            .iter()
+            .copied()
+            .filter(|&c| c >= b_needed)
+            .min()
+            .or_else(|| self.b_sizes.iter().copied().max())
+            .ok_or_else(|| DlrError::Artifact("manifest has no block sizes".into()))
+    }
+
+    /// Find the unit for (fn, n[, b]).
+    pub fn find(&self, fn_name: &str, n: usize, b: Option<usize>) -> Result<&UnitMeta> {
+        self.units
+            .iter()
+            .find(|u| u.fn_name == fn_name && u.n == n && u.b == b)
+            .ok_or_else(|| {
+                DlrError::Artifact(format!("no unit for fn={fn_name} n={n} b={b:?}"))
+            })
+    }
+
+    pub fn hlo_path(&self, unit: &UnitMeta) -> PathBuf {
+        self.dir.join(&unit.file)
+    }
+}
+
+/// Default artifacts directory: `$DGLMNET_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("DGLMNET_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> Option<Manifest> {
+        Manifest::load(default_artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = manifest_available() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(!m.units.is_empty());
+        assert!(m.n_sizes.contains(&1024));
+        let u = m.find("cd_sweep", 1024, Some(64)).unwrap();
+        assert!(m.hlo_path(u).exists());
+        assert_eq!(u.outputs.len(), 2);
+        let s = m.find("stats", 4096, None).unwrap();
+        assert_eq!(s.outputs.len(), 3);
+    }
+
+    #[test]
+    fn pick_n_and_b() {
+        let Some(m) = manifest_available() else {
+            return;
+        };
+        assert_eq!(m.pick_n(1).unwrap(), 1024);
+        assert_eq!(m.pick_n(5_000).unwrap(), 16384);
+        assert!(m.pick_n(10_000_000).is_err());
+        assert_eq!(m.pick_b(64).unwrap(), 64);
+        assert_eq!(m.pick_b(100).unwrap(), 128);
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let e = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

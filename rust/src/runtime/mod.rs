@@ -1,0 +1,279 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once per
+//! process-simulated machine, execute them from the rust hot path.
+//!
+//! Gotchas encoded here (see /opt/xla-example/README.md):
+//! * interchange is HLO **text** — `HloModuleProto::from_text_file`
+//!   reassigns instruction ids; serialized protos from jax >= 0.5 would be
+//!   rejected by xla_extension 0.5.1.
+//! * modules are lowered with `return_tuple=True`, so every execution
+//!   returns a 1-tuple/выше literal that we untuple here.
+//! * `PjRtClient` is not `Send`: each simulated machine (worker thread)
+//!   owns its own client, which also mirrors the paper's per-machine
+//!   processes.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+
+pub use artifacts::{default_artifacts_dir, Manifest, UnitMeta};
+
+use crate::error::{DlrError, Result};
+
+/// A per-thread PJRT context: client + compiled-executable cache.
+pub struct XlaContext {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaContext {
+    /// Build a CPU PJRT client and attach the manifest at `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the unit named `name`.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let unit = self
+            .manifest
+            .units
+            .iter()
+            .find(|u| u.name == name)
+            .ok_or_else(|| DlrError::Artifact(format!("unknown unit '{name}'")))?;
+        let path = self.manifest.hlo_path(unit);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute unit `name` on `inputs`; returns the untupled output literals.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute::<L>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Convenience: run and convert every output to `Vec<f32>`.
+    pub fn run_f32<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.run(name, inputs)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    pub fn compiled_units(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// f32 vector literal.
+pub fn lit_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Row-major (rows × cols) f32 matrix literal.
+pub fn lit_mat(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(Into::into)
+}
+
+/// Copy `src` into a zero-padded buffer of length `n_pad`.
+pub fn pad_to(src: &[f32], n_pad: usize) -> Vec<f32> {
+    debug_assert!(src.len() <= n_pad);
+    let mut out = vec![0f32; n_pad];
+    out[..src.len()].copy_from_slice(src);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Option<XlaContext> {
+        XlaContext::new(default_artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn stats_unit_executes_and_matches_native() {
+        let Some(mut ctx) = ctx() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let n_pad = 1024usize;
+        let n = 100usize;
+        let mut margins = vec![0f32; n_pad];
+        let mut y = vec![0f32; n_pad];
+        let mut mask = vec![0f32; n_pad];
+        for i in 0..n {
+            margins[i] = (i as f32 / 25.0) - 2.0;
+            y[i] = if i % 3 == 0 { 1.0 } else { -1.0 };
+            mask[i] = 1.0;
+        }
+        let out = ctx
+            .run_f32("stats_n1024", &[lit_vec(&margins), lit_vec(&y), lit_vec(&mask)])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let (w, z, loss) = (&out[0], &out[1], &out[2]);
+        assert_eq!(w.len(), n_pad);
+        assert_eq!(loss.len(), 1);
+        // native comparison
+        let mut loss_want = 0f64;
+        for i in 0..n {
+            let (ww, zz) = crate::util::math::working_stats(y[i] as f64, margins[i] as f64);
+            assert!((w[i] as f64 - ww).abs() < 1e-4, "w[{i}]");
+            assert!((z[i] as f64 - zz).abs() < 2e-3 * (1.0 + zz.abs()), "z[{i}]");
+            loss_want += crate::util::math::logistic_loss(y[i] as f64, margins[i] as f64);
+        }
+        assert!((loss[0] as f64 - loss_want).abs() / loss_want < 1e-4);
+        // padded region inert
+        assert!(w[n..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cd_sweep_unit_matches_native_math() {
+        let Some(mut ctx) = ctx() else {
+            return;
+        };
+        let (n_pad, b) = (1024usize, 64usize);
+        let n = 50usize;
+        let mut rngstate = 0x12345u64;
+        let mut next = move || {
+            rngstate = rngstate.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((rngstate >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+        };
+        let mut xt = vec![0f32; n_pad * b];
+        for i in 0..n {
+            for j in 0..8 {
+                // only first 8 columns non-zero
+                xt[i * b + j] = next();
+            }
+        }
+        let mut w = vec![0f32; n_pad];
+        let mut r = vec![0f32; n_pad];
+        for i in 0..n {
+            w[i] = 0.25;
+            r[i] = 2.0 * next();
+        }
+        let beta = vec![0f32; b];
+        let delta = vec![0f32; b];
+        let (lam, nu) = (0.05f32, 1e-6f32);
+        let out = ctx
+            .run_f32(
+                "cd_sweep_n1024_b64",
+                &[
+                    lit_mat(&xt, n_pad, b).unwrap(),
+                    lit_vec(&w),
+                    lit_vec(&r),
+                    lit_vec(&beta),
+                    lit_vec(&delta),
+                    lit_vec(&[lam]),
+                    lit_vec(&[nu]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let (delta_out, r_out) = (&out[0], &out[1]);
+        assert_eq!(delta_out.len(), b);
+        assert_eq!(r_out.len(), n_pad);
+        // columns 8.. are all-zero => exactly zero updates
+        assert!(delta_out[8..].iter().all(|&v| v == 0.0));
+        // native single-sweep reference
+        let mut r_ref: Vec<f64> = r.iter().map(|&x| x as f64).collect();
+        let mut delta_ref = vec![0f64; b];
+        for j in 0..8 {
+            let col: Vec<f64> = (0..n).map(|i| xt[i * b + j] as f64).collect();
+            let a: f64 =
+                col.iter().enumerate().map(|(i, &x)| w[i] as f64 * x * x).sum::<f64>() + nu as f64;
+            let c: f64 = col
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| w[i] as f64 * r_ref[i] * x)
+                .sum::<f64>()
+                + delta_ref[j] * (a - nu as f64);
+            let s = crate::util::math::soft_threshold(c, lam as f64) / a;
+            let step = s - delta_ref[j];
+            delta_ref[j] = s;
+            for (i, &x) in col.iter().enumerate() {
+                r_ref[i] -= step * x;
+            }
+        }
+        for j in 0..8 {
+            assert!(
+                (delta_out[j] as f64 - delta_ref[j]).abs() < 5e-4 * (1.0 + delta_ref[j].abs()),
+                "delta[{j}] = {} vs {}",
+                delta_out[j],
+                delta_ref[j]
+            );
+        }
+    }
+
+    #[test]
+    fn line_search_unit_evaluates_grid() {
+        let Some(mut ctx) = ctx() else {
+            return;
+        };
+        let n_pad = 1024usize;
+        let n = 200usize;
+        let mut m = vec![0f32; n_pad];
+        let mut dm = vec![0f32; n_pad];
+        let mut y = vec![0f32; n_pad];
+        let mut mask = vec![0f32; n_pad];
+        for i in 0..n {
+            m[i] = -0.5 + (i as f32) / 200.0;
+            dm[i] = 0.3;
+            y[i] = if i % 2 == 0 { 1.0 } else { -1.0 };
+            mask[i] = 1.0;
+        }
+        let alphas: Vec<f32> = (0..16).map(|k| k as f32 / 15.0).collect();
+        let out = ctx
+            .run_f32(
+                "line_search_n1024_k16",
+                &[lit_vec(&m), lit_vec(&dm), lit_vec(&y), lit_vec(&mask), lit_vec(&alphas)],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let losses = &out[0];
+        assert_eq!(losses.len(), 16);
+        // alpha = 0 must equal the plain masked logloss
+        let want0: f64 = (0..n)
+            .map(|i| crate::util::math::logistic_loss(y[i] as f64, m[i] as f64))
+            .sum();
+        assert!((losses[0] as f64 - want0).abs() / want0 < 1e-4);
+        // all finite and positive
+        assert!(losses.iter().all(|&l| l.is_finite() && l > 0.0));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(mut ctx) = ctx() else {
+            return;
+        };
+        assert_eq!(ctx.compiled_units(), 0);
+        ctx.ensure_compiled("stats_n1024").unwrap();
+        ctx.ensure_compiled("stats_n1024").unwrap();
+        assert_eq!(ctx.compiled_units(), 1);
+    }
+}

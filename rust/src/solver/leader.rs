@@ -1,0 +1,217 @@
+//! Leader-side compute: working statistics (paper eq. (4)) and the O(n)
+//! loss part of the line search (Alg 3). Runs the AOT `stats` /
+//! `line_search` kernels through PJRT, or the native fallback — selected by
+//! the solver's engine kind so the whole hot path stays on one stack.
+
+use crate::config::{EngineKind, TrainConfig};
+use crate::error::Result;
+use crate::runtime::{lit_vec, XlaContext};
+use crate::solver::quadratic::stats_native;
+use crate::util::math::log1pexp;
+
+/// Leader compute context.
+pub enum LeaderCompute {
+    Native {
+        y: Vec<f32>,
+    },
+    Xla {
+        ctx: XlaContext,
+        stats_unit: String,
+        ls_unit: String,
+        n: usize,
+        n_pad: usize,
+        k: usize,
+        y_pad: Vec<f32>,
+        /// prebuilt literals reused every call
+        y_lit: xla::Literal,
+        mask_lit: xla::Literal,
+        /// scratch padded buffers
+        buf_a: Vec<f32>,
+        buf_b: Vec<f32>,
+    },
+}
+
+impl LeaderCompute {
+    pub fn new(cfg: &TrainConfig, y: &[f32], artifacts_dir: &std::path::Path) -> Result<Self> {
+        // Auto: the leader kernels are plain O(n) elementwise work — use XLA
+        // whenever artifacts exist and n fits a compiled tile.
+        let kind = match cfg.engine {
+            EngineKind::Auto => {
+                let ok = crate::runtime::Manifest::load(artifacts_dir)
+                    .and_then(|m| m.pick_n(y.len()))
+                    .is_ok();
+                if ok {
+                    EngineKind::Xla
+                } else {
+                    EngineKind::Native
+                }
+            }
+            k => k,
+        };
+        match kind {
+            EngineKind::Auto => unreachable!(),
+            EngineKind::Native => Ok(LeaderCompute::Native { y: y.to_vec() }),
+            EngineKind::Xla => {
+                let mut ctx = XlaContext::new(artifacts_dir)?;
+                let n = y.len();
+                let n_pad = ctx.manifest().pick_n(n)?;
+                let k = ctx.manifest().k_alphas;
+                let stats_unit = ctx.manifest().find("stats", n_pad, None)?.name.clone();
+                let ls_unit = {
+                    let unit = ctx
+                        .manifest()
+                        .units
+                        .iter()
+                        .find(|u| u.fn_name == "line_search" && u.n == n_pad)
+                        .ok_or_else(|| {
+                            crate::error::DlrError::Artifact(format!(
+                                "no line_search unit for n = {n_pad}"
+                            ))
+                        })?;
+                    unit.name.clone()
+                };
+                ctx.ensure_compiled(&stats_unit)?;
+                ctx.ensure_compiled(&ls_unit)?;
+                let mut y_pad = vec![0f32; n_pad];
+                y_pad[..n].copy_from_slice(y);
+                let mut mask = vec![0f32; n_pad];
+                mask[..n].fill(1.0);
+                let y_lit = lit_vec(&y_pad);
+                let mask_lit = lit_vec(&mask);
+                Ok(LeaderCompute::Xla {
+                    ctx,
+                    stats_unit,
+                    ls_unit,
+                    n,
+                    n_pad,
+                    k,
+                    y_pad,
+                    y_lit,
+                    mask_lit,
+                    buf_a: vec![0f32; n_pad],
+                    buf_b: vec![0f32; n_pad],
+                })
+            }
+        }
+    }
+
+    /// (w, z, loss_sum) at the current margins.
+    pub fn stats(&mut self, margins: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f64)> {
+        match self {
+            LeaderCompute::Native { y } => Ok(stats_native(margins, y)),
+            LeaderCompute::Xla { ctx, stats_unit, n, buf_a, y_lit, mask_lit, .. } => {
+                buf_a[..*n].copy_from_slice(margins);
+                let m_lit = lit_vec(buf_a);
+                let out = ctx.run_f32(stats_unit, &[&m_lit, y_lit, mask_lit])?;
+                let mut it = out.into_iter();
+                let mut w = it.next().unwrap();
+                let mut z = it.next().unwrap();
+                let loss = it.next().unwrap()[0] as f64;
+                w.truncate(*n);
+                z.truncate(*n);
+                Ok((w, z, loss))
+            }
+        }
+    }
+
+    /// Loss part of f(β + αΔβ) for each α in `alphas` (any length — the XLA
+    /// path chunks through the compiled K-grid).
+    pub fn line_losses(
+        &mut self,
+        margins: &[f32],
+        dmargins: &[f32],
+        alphas: &[f64],
+    ) -> Result<Vec<f64>> {
+        match self {
+            LeaderCompute::Native { y } => Ok(alphas
+                .iter()
+                .map(|&a| {
+                    margins
+                        .iter()
+                        .zip(dmargins)
+                        .zip(y.iter())
+                        .map(|((&m, &dm), &yy)| {
+                            log1pexp(-(yy as f64) * (m as f64 + a * dm as f64))
+                        })
+                        .sum()
+                })
+                .collect()),
+            LeaderCompute::Xla {
+                ctx, ls_unit, n, k, buf_a, buf_b, y_lit, mask_lit, ..
+            } => {
+                buf_a[..*n].copy_from_slice(margins);
+                buf_b[..*n].copy_from_slice(dmargins);
+                let m_lit = lit_vec(buf_a);
+                let dm_lit = lit_vec(buf_b);
+                let mut out = Vec::with_capacity(alphas.len());
+                for chunk in alphas.chunks(*k) {
+                    // pad the α-grid by repeating the last entry
+                    let mut grid: Vec<f32> = chunk.iter().map(|&a| a as f32).collect();
+                    let last = *grid.last().unwrap_or(&0.0);
+                    grid.resize(*k, last);
+                    let a_lit = lit_vec(&grid);
+                    let losses =
+                        ctx.run_f32(ls_unit, &[&m_lit, &dm_lit, y_lit, mask_lit, &a_lit])?;
+                    out.extend(losses[0][..chunk.len()].iter().map(|&l| l as f64));
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        match self {
+            LeaderCompute::Native { .. } => "native",
+            LeaderCompute::Xla { .. } => "xla",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let d = crate::runtime::default_artifacts_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    fn toy(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let margins: Vec<f32> = (0..n).map(|i| (i as f32 / n as f32) - 0.5).collect();
+        let dmargins: Vec<f32> = (0..n).map(|i| 0.1 * ((i % 7) as f32 - 3.0)).collect();
+        let y: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        (margins, dmargins, y)
+    }
+
+    #[test]
+    fn xla_leader_matches_native_leader() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (margins, dmargins, y) = toy(700);
+        let cfg_n = TrainConfig::builder().engine(crate::config::EngineKind::Native).build();
+        let cfg_x = TrainConfig::builder().engine(crate::config::EngineKind::Xla).build();
+        let mut ln = LeaderCompute::new(&cfg_n, &y, &dir).unwrap();
+        let mut lx = LeaderCompute::new(&cfg_x, &y, &dir).unwrap();
+
+        let (wn, zn, lossn) = ln.stats(&margins).unwrap();
+        let (wx, zx, lossx) = lx.stats(&margins).unwrap();
+        assert_eq!(wx.len(), 700);
+        for i in (0..700).step_by(41) {
+            assert!((wn[i] - wx[i]).abs() < 1e-5, "w[{i}]");
+            assert!((zn[i] - zx[i]).abs() < 2e-3 * (1.0 + zn[i].abs()), "z[{i}]");
+        }
+        assert!((lossn - lossx).abs() / lossn < 1e-4);
+
+        // line losses across a 20-α grid (exercises chunking: 20 > K = 16)
+        let alphas: Vec<f64> = (0..20).map(|i| i as f64 / 19.0).collect();
+        let a = ln.line_losses(&margins, &dmargins, &alphas).unwrap();
+        let b = lx.line_losses(&margins, &dmargins, &alphas).unwrap();
+        assert_eq!(a.len(), 20);
+        for i in 0..20 {
+            assert!((a[i] - b[i]).abs() / a[i] < 1e-4, "alpha[{i}]: {} vs {}", a[i], b[i]);
+        }
+    }
+}

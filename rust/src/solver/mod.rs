@@ -1,0 +1,16 @@
+//! The d-GLMNET coordinator (paper Algorithms 1–5): leader/worker iteration
+//! driver, line search, convergence with sparsity precautions, and the
+//! regularization-path runner.
+
+pub mod dglmnet;
+pub mod leader;
+pub mod line_search;
+pub mod model;
+pub mod pool;
+pub mod quadratic;
+pub mod regpath;
+pub mod screening;
+
+pub use dglmnet::{DGlmnetSolver, FitResult, IterationRecord};
+pub use model::SparseModel;
+pub use regpath::{lambda_max, PathPoint, RegPath};

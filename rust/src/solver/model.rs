@@ -1,0 +1,154 @@
+//! Fitted sparse linear model: prediction, persistence, inspection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::data::sparse::CsrMatrix;
+use crate::error::{DlrError, Result};
+
+/// A sparse coefficient vector β (only non-zeros stored).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseModel {
+    pub n_features: usize,
+    /// (feature id, weight), ascending by feature id.
+    pub entries: Vec<(u32, f32)>,
+    /// λ the model was fitted at (metadata).
+    pub lambda: f64,
+}
+
+impl SparseModel {
+    pub fn from_dense(beta: &[f32], lambda: f64) -> Self {
+        Self {
+            n_features: beta.len(),
+            entries: beta
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b != 0.0)
+                .map(|(j, &b)| (j as u32, b))
+                .collect(),
+            lambda,
+        }
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut beta = vec![0f32; self.n_features];
+        for &(j, w) in &self.entries {
+            beta[j as usize] = w;
+        }
+        beta
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Decision margins βᵀx over a by-example matrix.
+    pub fn predict_margins(&self, x: &CsrMatrix) -> Vec<f32> {
+        let beta = self.to_dense();
+        let mut padded = beta;
+        if x.n_cols > padded.len() {
+            padded.resize(x.n_cols, 0.0);
+        }
+        x.margins(&padded)
+    }
+
+    /// P(y = +1 | x).
+    pub fn predict_proba(&self, x: &CsrMatrix) -> Vec<f32> {
+        self.predict_margins(x)
+            .into_iter()
+            .map(|m| crate::util::math::sigmoid(m as f64) as f32)
+            .collect()
+    }
+
+    /// Text persistence: header line + `feature weight` lines.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "dglmnet-model v1 p={} lambda={}", self.n_features, self.lambda)?;
+        for &(j, w) in &self.entries {
+            writeln!(f, "{j} {w}")?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let f = BufReader::new(std::fs::File::open(path)?);
+        let mut lines = f.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| DlrError::parse("model", "empty file"))??;
+        let mut p = None;
+        let mut lambda = 0f64;
+        for tok in header.split_whitespace() {
+            if let Some(v) = tok.strip_prefix("p=") {
+                p = v.parse::<usize>().ok();
+            }
+            if let Some(v) = tok.strip_prefix("lambda=") {
+                lambda = v.parse::<f64>().unwrap_or(0.0);
+            }
+        }
+        let n_features =
+            p.ok_or_else(|| DlrError::parse("model", "missing p= in header"))?;
+        let mut entries = Vec::new();
+        for line in lines {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (j, w) = line
+                .split_once(' ')
+                .ok_or_else(|| DlrError::parse("model", "bad entry line"))?;
+            entries.push((
+                j.parse::<u32>()
+                    .map_err(|_| DlrError::parse("model", "bad feature id"))?,
+                w.parse::<f32>()
+                    .map_err(|_| DlrError::parse("model", "bad weight"))?,
+            ));
+        }
+        Ok(Self { n_features, entries, lambda })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip_and_nnz() {
+        let beta = vec![0.0f32, 1.5, 0.0, -2.0];
+        let m = SparseModel::from_dense(&beta, 0.5);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.entries, vec![(1, 1.5), (3, -2.0)]);
+        assert_eq!(m.to_dense(), beta);
+    }
+
+    #[test]
+    fn predict_margins_on_toy() {
+        let mut x = CsrMatrix::new(3);
+        x.push_row(&[(0, 1.0), (2, 2.0)]);
+        x.push_row(&[(1, 1.0)]);
+        let m = SparseModel::from_dense(&[1.0, -1.0, 0.5], 0.0);
+        assert_eq!(m.predict_margins(&x), vec![2.0, -1.0]);
+        let p = m.predict_proba(&x);
+        assert!(p[0] > 0.5 && p[1] < 0.5);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = SparseModel::from_dense(&[0.0, 0.25, -3.5], 0.125);
+        let path = std::env::temp_dir().join(format!("dglmnet_model_{}.txt", std::process::id()));
+        m.save(&path).unwrap();
+        let m2 = SparseModel::load(&path).unwrap();
+        assert_eq!(m, m2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn predict_wider_matrix_than_model() {
+        let mut x = CsrMatrix::new(5);
+        x.push_row(&[(4, 1.0)]);
+        let m = SparseModel::from_dense(&[1.0, 2.0], 0.0);
+        assert_eq!(m.predict_margins(&x), vec![0.0]);
+    }
+}

@@ -1,0 +1,106 @@
+//! Leader-side O(n + p) pieces of the iteration: working statistics,
+//! objective evaluation and the directional derivative D of Alg 3.
+
+use crate::util::math::{l1_norm, log1pexp, sigmoid, working_stats};
+
+/// Native (w, z, loss) computation — the leader fallback when not using the
+/// AOT stats kernel; also the reference the XLA path is tested against.
+pub fn stats_native(margins: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, f64) {
+    debug_assert_eq!(margins.len(), y.len());
+    let mut w = Vec::with_capacity(margins.len());
+    let mut z = Vec::with_capacity(margins.len());
+    let mut loss = 0f64;
+    for (&m, &yy) in margins.iter().zip(y) {
+        let (wi, zi) = working_stats(yy as f64, m as f64);
+        w.push(wi as f32);
+        z.push(zi as f32);
+        loss += log1pexp(-(yy as f64) * m as f64);
+    }
+    (w, z, loss)
+}
+
+/// Full objective f(β) = L(margins) + λ‖β‖₁  (paper eq. (2)).
+pub fn objective(margins: &[f32], y: &[f32], beta: &[f32], lambda: f64) -> f64 {
+    crate::util::math::logloss_sum(margins, y) + lambda * l1_norm(beta)
+}
+
+/// ∇L(β)ᵀΔβ = Σ_i (p_i - (y_i+1)/2) · Δm_i — the smooth part of D
+/// (Alg 3). O(n), computed from margins and the allreduced Δmargins.
+pub fn grad_dot_delta(margins: &[f32], dmargins: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(margins.len(), dmargins.len());
+    let mut acc = 0f64;
+    for i in 0..margins.len() {
+        let p = sigmoid(margins[i] as f64);
+        acc += (p - (y[i] as f64 + 1.0) / 2.0) * dmargins[i] as f64;
+    }
+    acc
+}
+
+/// Support-union of β and Δβ (global feature ids) — the only coordinates the
+/// line search's L1 term needs (O(nnz(β) + nnz(Δβ)) per evaluation).
+pub fn support_union(beta: &[f32], delta: &[f32]) -> Vec<u32> {
+    debug_assert_eq!(beta.len(), delta.len());
+    (0..beta.len() as u32)
+        .filter(|&j| beta[j as usize] != 0.0 || delta[j as usize] != 0.0)
+        .collect()
+}
+
+/// λ‖β + αΔβ‖₁ evaluated over the support union.
+pub fn l1_at_alpha(beta: &[f32], delta: &[f32], support: &[u32], alpha: f64, lambda: f64) -> f64 {
+    let mut acc = 0f64;
+    for &j in support {
+        let j = j as usize;
+        acc += (beta[j] as f64 + alpha * delta[j] as f64).abs();
+    }
+    lambda * acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_native_matches_closed_form() {
+        let margins = [0f32, 1.0, -2.0];
+        let y = [1f32, -1.0, 1.0];
+        let (w, z, loss) = stats_native(&margins, &y);
+        assert!((w[0] - 0.25).abs() < 1e-7);
+        assert!((z[0] - 2.0).abs() < 1e-6);
+        assert!(loss > 0.0);
+        // loss at zero margins is n·ln2 per example with m=0
+        let (_, _, l0) = stats_native(&[0.0, 0.0], &[1.0, -1.0]);
+        assert!((l0 - 2.0 * (2f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_dot_sign_of_descent() {
+        // If Δm reduces loss (points toward labels), grad·Δβ < 0.
+        let margins = [0f32; 4];
+        let y = [1f32, 1.0, -1.0, -1.0];
+        let dm = [1f32, 1.0, -1.0, -1.0]; // moves margins toward labels
+        assert!(grad_dot_delta(&margins, &dm, &y) < 0.0);
+        let dm_bad = [-1f32, -1.0, 1.0, 1.0];
+        assert!(grad_dot_delta(&margins, &dm_bad, &y) > 0.0);
+    }
+
+    #[test]
+    fn support_and_l1() {
+        let beta = [0f32, 1.0, 0.0, -2.0];
+        let delta = [0.5f32, 0.0, 0.0, 2.0];
+        let s = support_union(&beta, &delta);
+        assert_eq!(s, vec![0, 1, 3]);
+        // α = 1: |0.5| + |1| + |0| = 1.5, λ = 2 -> 3
+        assert!((l1_at_alpha(&beta, &delta, &s, 1.0, 2.0) - 3.0).abs() < 1e-9);
+        // α = 0: |0| + |1| + |-2| = 3, λ = 2 -> 6
+        assert!((l1_at_alpha(&beta, &delta, &s, 0.0, 2.0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn objective_combines_loss_and_penalty() {
+        let margins = [0f32, 0.0];
+        let y = [1f32, -1.0];
+        let beta = [1f32, -3.0];
+        let f = objective(&margins, &y, &beta, 0.5);
+        assert!((f - (2.0 * (2f64).ln() + 0.5 * 4.0)).abs() < 1e-9);
+    }
+}

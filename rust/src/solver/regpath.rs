@@ -1,0 +1,214 @@
+//! Regularization path — paper Algorithm 5 and §4.2 protocol:
+//! find λ_max (whole β = 0), then solve at λ_max·2⁻¹ … λ_max·2⁻²⁰ with
+//! warmstarts, recording test quality (AUPRC) vs model sparsity for each λ —
+//! the points of Figure 1 — plus per-λ timing for Table 3.
+
+use crate::config::{PathConfig, TrainConfig};
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::metrics;
+use crate::solver::dglmnet::DGlmnetSolver;
+use crate::solver::model::SparseModel;
+use crate::util::timer::Stopwatch;
+
+/// λ_max: the smallest λ for which β* = 0. At β = 0, p_i = ½, w_i = ¼,
+/// z_i = 2y_i, so the per-feature screening value is
+/// |Σ_i w_i x_ij z_i| = |Σ_i x_ij y_i| / 2.
+pub fn lambda_max(ds: &Dataset) -> f64 {
+    let mut grad = vec![0f64; ds.n_features()];
+    for i in 0..ds.n_examples() {
+        let (cols, vals) = ds.x.row(i);
+        let y = ds.y[i] as f64;
+        for (&c, &v) in cols.iter().zip(vals) {
+            grad[c as usize] += v as f64 * y;
+        }
+    }
+    grad.iter().map(|g| g.abs() / 2.0).fold(0.0, f64::max)
+}
+
+/// One Figure-1 point.
+#[derive(Debug, Clone)]
+pub struct PathPoint {
+    pub lambda: f64,
+    pub nnz: usize,
+    pub auprc: f64,
+    pub auc: f64,
+    pub test_logloss: f64,
+    pub objective: f64,
+    pub iterations: usize,
+    pub wall_secs: f64,
+    pub sim_compute_secs: f64,
+    pub sim_comm_secs: f64,
+    pub line_search_frac: f64,
+    pub model: SparseModel,
+}
+
+/// Aggregate of a full path run (one Table-3 row).
+#[derive(Debug)]
+pub struct RegPath {
+    pub points: Vec<PathPoint>,
+    pub total_iterations: usize,
+    pub total_wall_secs: f64,
+    pub total_sim_comm_secs: f64,
+    pub total_comm_bytes: u64,
+    /// Fraction of solver wall time spent in the line search (Table 3's
+    /// "linear search" column).
+    pub line_search_frac: f64,
+}
+
+impl RegPath {
+    /// Run the full path on `train`, scoring each λ's model on `test`.
+    pub fn run(
+        train: &Dataset,
+        test: &Dataset,
+        cfg: &TrainConfig,
+        path_cfg: &PathConfig,
+    ) -> Result<RegPath> {
+        let mut solver = DGlmnetSolver::from_dataset(train, cfg)?;
+        Self::run_with_solver(&mut solver, train, test, cfg, path_cfg)
+    }
+
+    /// Same, reusing an existing solver (keeps the worker pool warm across
+    /// experiment sweeps).
+    pub fn run_with_solver(
+        solver: &mut DGlmnetSolver,
+        _train: &Dataset,
+        test: &Dataset,
+        cfg: &TrainConfig,
+        path_cfg: &PathConfig,
+    ) -> Result<RegPath> {
+        let lam_max = lambda_max_from_solver(solver);
+        let mut lambdas: Vec<f64> =
+            (1..=path_cfg.steps).map(|i| lam_max * 0.5f64.powi(i as i32)).collect();
+        lambdas.extend(path_cfg.extra_lambdas.iter().copied());
+        lambdas.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+
+        solver.reset();
+        solver.cfg.max_iter = path_cfg.max_iter_per_lambda.min(cfg.max_iter.max(1));
+
+        let mut points = Vec::with_capacity(lambdas.len());
+        let mut total_iters = 0usize;
+        let mut total_wall = 0f64;
+        let mut total_sim_comm = 0f64;
+        let mut total_bytes = 0u64;
+        let mut ls_secs = 0f64;
+        let mut all_secs = 0f64;
+
+        for &lam in &lambdas {
+            let sw = Stopwatch::start();
+            let fit = solver.fit_lambda(lam)?;
+            let wall = sw.elapsed_secs();
+            let margins = fit.model.predict_margins(&test.x);
+            let auprc = metrics::auprc(&margins, &test.y);
+            let auc = metrics::roc_auc(&margins, &test.y);
+            let test_logloss = metrics::mean_logloss(&margins, &test.y);
+            total_iters += fit.iterations;
+            total_wall += wall;
+            total_sim_comm += fit.sim_comm_secs;
+            total_bytes += fit.comm_bytes;
+            ls_secs += fit.timers.get("line_search").as_secs_f64();
+            all_secs += fit.timers.total().as_secs_f64();
+            points.push(PathPoint {
+                lambda: lam,
+                nnz: fit.nnz(),
+                auprc,
+                auc,
+                test_logloss,
+                objective: fit.objective,
+                iterations: fit.iterations,
+                wall_secs: wall,
+                sim_compute_secs: fit.sim_compute_secs,
+                sim_comm_secs: fit.sim_comm_secs,
+                line_search_frac: if fit.timers.total().as_secs_f64() > 0.0 {
+                    fit.timers.fraction("line_search")
+                } else {
+                    0.0
+                },
+                model: fit.model,
+            });
+        }
+        Ok(RegPath {
+            points,
+            total_iterations: total_iters,
+            total_wall_secs: total_wall,
+            total_sim_comm_secs: total_sim_comm,
+            total_comm_bytes: total_bytes,
+            line_search_frac: if all_secs > 0.0 { ls_secs / all_secs } else { 0.0 },
+        })
+    }
+
+    /// The best test AUPRC at each sparsity level (Figure 1 frontier).
+    pub fn frontier(&self) -> Vec<(usize, f64)> {
+        let mut pts: Vec<(usize, f64)> =
+            self.points.iter().map(|p| (p.nnz, p.auprc)).collect();
+        pts.sort_by_key(|p| p.0);
+        let mut out: Vec<(usize, f64)> = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        for (nnz, auprc) in pts {
+            if auprc > best {
+                best = auprc;
+                out.push((nnz, auprc));
+            }
+        }
+        out
+    }
+}
+
+/// λ_max computed from the solver's stored dataset (equivalent to
+/// [`lambda_max`]; kept separate so callers without the Dataset can use it).
+fn lambda_max_from_solver(solver: &DGlmnetSolver) -> f64 {
+    solver.lambda_max_internal()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, PathConfig, TrainConfig};
+    use crate::data::synth;
+
+    fn cfg(m: usize) -> TrainConfig {
+        TrainConfig::builder()
+            .machines(m)
+            .engine(EngineKind::Native)
+            .max_iter(30)
+            .build()
+    }
+
+    #[test]
+    fn lambda_max_zeroes_the_path_head() {
+        let ds = synth::dna_like(500, 40, 5, 41);
+        let lm = lambda_max(&ds);
+        assert!(lm > 0.0);
+        // λ slightly above λ_max keeps β = 0 (checked in dglmnet tests);
+        // here: λ_max/2 (the first path step) must activate something.
+        let mut s = DGlmnetSolver::from_dataset(&ds, &cfg(2)).unwrap();
+        let fit = s.fit_lambda(lm / 2.0).unwrap();
+        assert!(fit.nnz() > 0);
+    }
+
+    #[test]
+    fn lambda_max_matches_solver_internal() {
+        let ds = synth::webspam_like(200, 800, 12, 42);
+        let s = DGlmnetSolver::from_dataset(&ds, &cfg(2)).unwrap();
+        assert!((lambda_max(&ds) - s.lambda_max_internal()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_path_runs_and_nnz_grows() {
+        let split = synth::dna_like(900, 50, 6, 43).split(0.8, 1);
+        let path_cfg = PathConfig { steps: 6, extra_lambdas: vec![], max_iter_per_lambda: 25 };
+        let path = RegPath::run(&split.train, &split.test, &cfg(3), &path_cfg).unwrap();
+        assert_eq!(path.points.len(), 6);
+        // λ descends => nnz non-decreasing (up to small solver noise)
+        let nnz: Vec<usize> = path.points.iter().map(|p| p.nnz).collect();
+        assert!(nnz.last().unwrap() >= nnz.first().unwrap(), "{nnz:?}");
+        // quality sane
+        let best = path.points.iter().map(|p| p.auprc).fold(0.0, f64::max);
+        assert!(best > 0.3, "best auprc = {best}");
+        assert!(path.total_iterations >= 6);
+        let frontier = path.frontier();
+        assert!(!frontier.is_empty());
+        let ys: Vec<f64> = frontier.iter().map(|p| p.1).collect();
+        assert!(ys.windows(2).all(|w| w[1] >= w[0]));
+    }
+}

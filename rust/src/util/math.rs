@@ -1,0 +1,151 @@
+//! Numerically careful scalar/vector math shared by the solver, engines and
+//! baselines. Mirrors the formulas in `python/compile/kernels/ref.py` so the
+//! native engine and the XLA engine agree bit-for-tolerance.
+
+/// Guard used when dividing by w = p(1-p) on saturated examples.
+pub const W_EPS: f64 = 1e-10;
+
+/// sigmoid(x) without overflow on either tail.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 + exp(x)) without overflow.
+#[inline]
+pub fn log1pexp(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Soft-thresholding operator T(x, a) = sign(x) max(|x| - a, 0)  (eq. (6)).
+#[inline]
+pub fn soft_threshold(x: f64, a: f64) -> f64 {
+    if x > a {
+        x - a
+    } else if x < -a {
+        x + a
+    } else {
+        0.0
+    }
+}
+
+/// Per-example logistic loss log(1 + exp(-y m)).
+#[inline]
+pub fn logistic_loss(y: f64, margin: f64) -> f64 {
+    log1pexp(-y * margin)
+}
+
+/// Masked logistic loss sum over example margins.
+pub fn logloss_sum(margins: &[f32], y: &[f32]) -> f64 {
+    margins
+        .iter()
+        .zip(y)
+        .map(|(&m, &yy)| logistic_loss(yy as f64, m as f64))
+        .sum()
+}
+
+/// L1 norm of a sparse-ish dense vector.
+pub fn l1_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64).abs()).sum()
+}
+
+/// Number of non-zeros (exact zero; the solver produces exact zeros via
+/// soft-thresholding, so no epsilon is needed).
+pub fn nnz(v: &[f32]) -> usize {
+    v.iter().filter(|&&x| x != 0.0).count()
+}
+
+/// dot in f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// GLMNET working stats for one example (paper eq. (4)):
+/// returns (w, z) given margin m and label y.
+#[inline]
+pub fn working_stats(y: f64, margin: f64) -> (f64, f64) {
+    let p = sigmoid(margin);
+    let w = p * (1.0 - p);
+    let z = ((y + 1.0) / 2.0 - p) / w.max(W_EPS);
+    (w, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_tails_and_center() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(40.0) > 1.0 - 1e-12);
+        assert!(sigmoid(-40.0) < 1e-12);
+        assert!(sigmoid(800.0).is_finite());
+        assert!(sigmoid(-800.0).is_finite());
+    }
+
+    #[test]
+    fn log1pexp_matches_naive_in_safe_range() {
+        for &x in &[-30.0, -1.0, 0.0, 1.0, 30.0] {
+            let naive = (1.0f64 + f64::exp(x)).ln();
+            assert!((log1pexp(x) - naive).abs() < 1e-9, "x = {x}");
+        }
+        assert!((log1pexp(1000.0) - 1000.0).abs() < 1e-9);
+        assert!(log1pexp(-1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn working_stats_at_zero_margin() {
+        let (w, z) = working_stats(1.0, 0.0);
+        assert!((w - 0.25).abs() < 1e-12);
+        assert!((z - 2.0).abs() < 1e-12);
+        let (w, z) = working_stats(-1.0, 0.0);
+        assert!((w - 0.25).abs() < 1e-12);
+        assert!((z + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn working_stats_saturated_is_finite() {
+        let (w, z) = working_stats(1.0, 100.0);
+        assert!(w >= 0.0 && w.is_finite());
+        assert!(z.is_finite());
+    }
+
+    #[test]
+    fn vector_helpers() {
+        let a = [1.0f32, 2.0, -3.0];
+        let b = [4.0f32, -5.0, 6.0];
+        assert!((dot(&a, &b) + 24.0).abs() < 1e-9);
+        assert!((l1_norm(&a) - 6.0).abs() < 1e-9);
+        assert_eq!(nnz(&[0.0, 1.0, 0.0, -2.0]), 2);
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+}

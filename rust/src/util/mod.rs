@@ -1,0 +1,48 @@
+//! Substrate utilities built from scratch (the vendored dependency set has
+//! no `rand`, `serde`, `serde_json` or `criterion`): a counter-based PRNG,
+//! numerically careful math helpers, a JSON parser for the artifact
+//! manifest, and lightweight timers.
+
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod timer;
+
+/// Round `n` up to the next multiple of `k` (tile padding).
+pub fn round_up(n: usize, k: usize) -> usize {
+    debug_assert!(k > 0);
+    n.div_ceil(k) * k
+}
+
+/// Smallest element of `candidates` that is `>= n`; falls back to the
+/// largest candidate when none fits (caller then tiles the data).
+pub fn pick_padded(n: usize, candidates: &[usize]) -> usize {
+    let mut best: Option<usize> = None;
+    for &c in candidates {
+        if c >= n && best.is_none_or(|b| c < b) {
+            best = Some(c);
+        }
+    }
+    best.unwrap_or_else(|| candidates.iter().copied().max().unwrap_or(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(1, 64), 64);
+        assert_eq!(round_up(64, 64), 64);
+        assert_eq!(round_up(65, 64), 128);
+    }
+
+    #[test]
+    fn pick_padded_prefers_smallest_fit() {
+        let c = [1024, 4096, 16384];
+        assert_eq!(pick_padded(10, &c), 1024);
+        assert_eq!(pick_padded(1024, &c), 1024);
+        assert_eq!(pick_padded(1025, &c), 4096);
+        assert_eq!(pick_padded(100_000, &c), 16384); // caller must tile
+    }
+}

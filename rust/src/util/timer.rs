@@ -1,0 +1,104 @@
+//! Lightweight wall-clock timers and a per-phase accumulator used for the
+//! Table-3 timing breakdown (total time, time per iteration, % line search).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One-shot stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named phase durations (thread-compatible; the solver owns one
+/// per fit and merges worker-side phases after joins).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Fraction of total time spent in `phase` (0 when nothing recorded).
+    pub fn fraction(&self, phase: &str) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.get(phase).as_secs_f64() / total
+        }
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            self.add(k, *v);
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.totals.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_and_merge() {
+        let mut t = PhaseTimer::new();
+        t.add("sweep", Duration::from_millis(30));
+        t.add("sweep", Duration::from_millis(20));
+        t.add("line_search", Duration::from_millis(50));
+        assert_eq!(t.get("sweep"), Duration::from_millis(50));
+        assert!((t.fraction("line_search") - 0.5).abs() < 1e-9);
+
+        let mut u = PhaseTimer::new();
+        u.add("sweep", Duration::from_millis(10));
+        t.merge(&u);
+        assert_eq!(t.get("sweep"), Duration::from_millis(60));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimer::new();
+        let x = t.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        assert!(t.get("work") > Duration::ZERO);
+    }
+}

@@ -1,0 +1,39 @@
+//! From-scratch mini property-testing harness (no `proptest` in the
+//! vendored set): deterministic case generation from a seeded RNG, failure
+//! reporting with the seed that reproduces it.
+
+use dglmnet::util::rng::Xoshiro256;
+
+/// Run `check(rng, case_index)` for `cases` generated cases; panic with the
+/// reproducing seed on the first failure (check panics or returns Err).
+pub fn prop_check(name: &str, cases: usize, check: impl Fn(&mut Xoshiro256, usize)) {
+    for case in 0..cases {
+        let seed = 0xD1CE_0000u64 + case as u64;
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random sparse problem drawn from the generators, small enough for
+/// hundreds of property cases.
+pub fn random_small_dataset(rng: &mut Xoshiro256) -> dglmnet::data::Dataset {
+    use dglmnet::data::synth;
+    let n = 50 + rng.below(150);
+    let kind = rng.below(3);
+    let seed = rng.next_u64();
+    match kind {
+        0 => synth::epsilon_like(n, 8 + rng.below(24), seed),
+        1 => synth::webspam_like(n, 100 + rng.below(400), 5 + rng.below(10), seed),
+        _ => synth::dna_like(n, 16 + rng.below(48), 3 + rng.below(6), seed),
+    }
+}

@@ -1,0 +1,133 @@
+//! Edge cases and failure injection: degenerate datasets, bad
+//! configurations, missing artifacts, and boundary shapes — the paths a
+//! production deployment hits first.
+
+mod common;
+
+use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::dataset::Dataset;
+use dglmnet::data::sparse::CsrMatrix;
+use dglmnet::data::synth;
+use dglmnet::metrics;
+use dglmnet::solver::{lambda_max, DGlmnetSolver};
+
+fn native(m: usize, lam: f64) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lam)
+        .max_iter(20)
+        .build()
+}
+
+#[test]
+fn all_positive_labels_converges_without_blowup() {
+    // Degenerate class balance: loss is minimized by margins -> +inf, but
+    // L1 keeps beta bounded and the solver must terminate finitely.
+    let mut x = CsrMatrix::new(4);
+    let mut y = Vec::new();
+    for i in 0..50 {
+        x.push_row(&[(0, 1.0), (1 + (i % 3) as u32, 0.5)]);
+        y.push(1.0);
+    }
+    let ds = Dataset::new("allpos", x, y);
+    let mut s = DGlmnetSolver::from_dataset(&ds, &native(2, 0.5)).unwrap();
+    let fit = s.fit(None).unwrap();
+    assert!(fit.objective.is_finite());
+    assert!(fit.model.to_dense().iter().all(|b| b.is_finite()));
+}
+
+#[test]
+fn single_example_dataset() {
+    let mut x = CsrMatrix::new(2);
+    x.push_row(&[(0, 1.0), (1, -1.0)]);
+    let ds = Dataset::new("one", x, vec![1.0]);
+    let mut s = DGlmnetSolver::from_dataset(&ds, &native(2, 0.01)).unwrap();
+    let fit = s.fit(None).unwrap();
+    assert!(fit.objective.is_finite());
+}
+
+#[test]
+fn feature_never_observed_stays_zero() {
+    // column 3 is all-zero: its coefficient must remain exactly 0
+    let mut x = CsrMatrix::new(5);
+    let mut y = Vec::new();
+    for i in 0..80 {
+        x.push_row(&[(0, 1.0), (1, (i % 5) as f32), (4, 1.0)]);
+        y.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+    }
+    let ds = Dataset::new("hole", x, y);
+    let mut s = DGlmnetSolver::from_dataset(&ds, &native(2, 0.1)).unwrap();
+    let fit = s.fit(None).unwrap();
+    let dense = fit.model.to_dense();
+    assert_eq!(dense[2], 0.0);
+    assert_eq!(dense[3], 0.0);
+}
+
+#[test]
+fn missing_artifacts_xla_errors_and_auto_falls_back() {
+    // one test (not two) because it mutates process-wide env state
+    std::env::set_var("DGLMNET_ARTIFACTS", "/nonexistent/definitely/missing");
+
+    // explicit XLA: clean, actionable error
+    let ds = synth::dna_like(100, 20, 4, 61);
+    let mut cfg = native(2, 0.1);
+    cfg.engine = EngineKind::Xla;
+    let e = DGlmnetSolver::from_dataset(&ds, &cfg)
+        .err()
+        .expect("must fail without artifacts");
+    assert!(e.to_string().contains("make artifacts"), "{e}");
+
+    // Auto: silently falls back to the native engine
+    let ds2 = synth::dna_like(120, 20, 4, 62);
+    let mut cfg2 = native(2, 0.1);
+    cfg2.engine = EngineKind::Auto;
+    let mut s = DGlmnetSolver::from_dataset(&ds2, &cfg2)
+        .expect("Auto must fall back to the native engine");
+    assert!(s.fit(None).unwrap().objective.is_finite());
+
+    std::env::remove_var("DGLMNET_ARTIFACTS");
+}
+
+#[test]
+fn zero_lambda_is_plain_logistic_regression() {
+    // λ = 0: no shrinkage — the model should fit the planted signal well
+    // and produce a dense-ish beta.
+    let ds = synth::epsilon_like(1_000, 16, 63);
+    let mut s = DGlmnetSolver::from_dataset(&ds, &native(2, 0.0)).unwrap();
+    let fit = s.fit(None).unwrap();
+    let margins = fit.model.predict_margins(&ds.x);
+    assert!(metrics::roc_auc(&margins, &ds.y) > 0.85);
+}
+
+#[test]
+fn warmstart_across_solvers_via_set_beta() {
+    let ds = synth::dna_like(400, 30, 5, 64);
+    let lam = lambda_max(&ds) / 8.0;
+    let mut a = DGlmnetSolver::from_dataset(&ds, &native(2, lam)).unwrap();
+    let fit_a = a.fit(None).unwrap();
+    // a fresh solver warmstarted at the solution must converge immediately
+    let mut b = DGlmnetSolver::from_dataset(&ds, &native(3, lam)).unwrap();
+    b.set_beta(&fit_a.model.to_dense());
+    let fit_b = b.fit_lambda(lam).unwrap();
+    assert!(fit_b.iterations <= 3, "warmstarted iters = {}", fit_b.iterations);
+    assert!((fit_b.objective - fit_a.objective).abs() / fit_a.objective < 1e-3);
+}
+
+#[test]
+fn margins_state_consistent_after_fit() {
+    // solver invariant: margins == X·beta after every fit
+    let ds = synth::webspam_like(300, 500, 12, 65);
+    let lam = lambda_max(&ds) / 16.0;
+    let mut s = DGlmnetSolver::from_dataset(&ds, &native(4, lam)).unwrap();
+    s.fit(None).unwrap();
+    let want = ds.x.margins(&s.beta);
+    for i in (0..300).step_by(17) {
+        assert!(
+            (s.margins[i] - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+            "margins[{i}] drifted: {} vs {}",
+            s.margins[i],
+            want[i]
+        );
+    }
+}

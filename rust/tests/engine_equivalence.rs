@@ -1,0 +1,121 @@
+//! XLA (AOT Pallas via PJRT) vs native (sparse rust) engine equivalence at
+//! the *full fit* level — the strongest cross-stack correctness signal: any
+//! divergence in kernel math, padding, tiling or residual threading shows
+//! up as a different optimization trajectory.
+//!
+//! These tests are skipped (with a message) when artifacts are missing.
+
+mod common;
+
+use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::synth;
+use dglmnet::solver::{lambda_max, DGlmnetSolver};
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn cfg(engine: EngineKind, m: usize, lam: f64) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(engine)
+        .lambda(lam)
+        .max_iter(25)
+        .build()
+}
+
+#[test]
+fn full_fit_equivalence_dna_like() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let ds = synth::dna_like(700, 100, 8, 201);
+    let lam = lambda_max(&ds) / 16.0;
+    let mut nx = DGlmnetSolver::from_dataset(&ds, &cfg(EngineKind::Native, 4, lam)).unwrap();
+    let mut xx = DGlmnetSolver::from_dataset(&ds, &cfg(EngineKind::Xla, 4, lam)).unwrap();
+    let fn_ = nx.fit(None).unwrap();
+    let fx = xx.fit(None).unwrap();
+    assert!(
+        (fn_.objective - fx.objective).abs() / fn_.objective < 1e-3,
+        "objective: native {} vs xla {}",
+        fn_.objective,
+        fx.objective
+    );
+    // support sets should agree (small f32-vs-f64 noise near the threshold
+    // may flip a borderline coordinate, hence the tolerance)
+    let sn: std::collections::HashSet<u32> =
+        fn_.model.entries.iter().map(|e| e.0).collect();
+    let sx: std::collections::HashSet<u32> = fx.model.entries.iter().map(|e| e.0).collect();
+    let sym_diff = sn.symmetric_difference(&sx).count();
+    assert!(
+        sym_diff <= 1 + sn.len() / 10,
+        "support differs too much: {sym_diff} of {}",
+        sn.len()
+    );
+}
+
+#[test]
+fn full_fit_equivalence_dense_epsilon_like() {
+    if !artifacts_present() {
+        return;
+    }
+    let ds = synth::epsilon_like(900, 96, 202);
+    let lam = lambda_max(&ds) / 32.0;
+    let mut nx = DGlmnetSolver::from_dataset(&ds, &cfg(EngineKind::Native, 2, lam)).unwrap();
+    let mut xx = DGlmnetSolver::from_dataset(&ds, &cfg(EngineKind::Xla, 2, lam)).unwrap();
+    let fn_ = nx.fit(None).unwrap();
+    let fx = xx.fit(None).unwrap();
+    assert!(
+        (fn_.objective - fx.objective).abs() / fn_.objective < 1e-3,
+        "native {} vs xla {}",
+        fn_.objective,
+        fx.objective
+    );
+}
+
+#[test]
+fn xla_engine_handles_n_between_tile_sizes() {
+    if !artifacts_present() {
+        return;
+    }
+    // n = 1500 -> pads to 4096 (not 1024): exercises the pick_n path
+    let ds = synth::dna_like(1_500, 70, 6, 203);
+    let lam = lambda_max(&ds) / 8.0;
+    let mut xx = DGlmnetSolver::from_dataset(&ds, &cfg(EngineKind::Xla, 2, lam)).unwrap();
+    let fx = xx.fit(None).unwrap();
+    let mut nx = DGlmnetSolver::from_dataset(&ds, &cfg(EngineKind::Native, 2, lam)).unwrap();
+    let fn_ = nx.fit(None).unwrap();
+    assert!((fn_.objective - fx.objective).abs() / fn_.objective < 1e-3);
+}
+
+#[test]
+fn xla_beta_trajectory_matches_native_first_iteration() {
+    if !artifacts_present() {
+        return;
+    }
+    // Single iteration, single machine: Δβ must match to f32 tolerance.
+    let ds = synth::dna_like(400, 64, 6, 204);
+    let lam = lambda_max(&ds) / 8.0;
+    let mk = |engine| {
+        let c = TrainConfig::builder()
+            .machines(1)
+            .engine(engine)
+            .lambda(lam)
+            .max_iter(1)
+            .build();
+        let mut s = DGlmnetSolver::from_dataset(&ds, &c).unwrap();
+        s.fit(None).unwrap();
+        s.beta.clone()
+    };
+    let bn = mk(EngineKind::Native);
+    let bx = mk(EngineKind::Xla);
+    for j in 0..64 {
+        assert!(
+            (bn[j] - bx[j]).abs() < 5e-3 * (1.0 + bn[j].abs()),
+            "beta[{j}]: native {} vs xla {}",
+            bn[j],
+            bx[j]
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! Integration tests: full training runs across modules (data → partition →
+//! pool → solver → metrics), convergence against an independent reference
+//! optimizer, warmstart paths, and the sparsity precautions end to end.
+
+mod common;
+
+use dglmnet::config::{EngineKind, PathConfig, TrainConfig};
+use dglmnet::data::synth;
+use dglmnet::metrics;
+use dglmnet::solver::{lambda_max, DGlmnetSolver, RegPath};
+
+fn cfg(m: usize, lam: f64) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lam)
+        .max_iter(80)
+        .tol(1e-7)
+        .build()
+}
+
+/// Reference: plain (sub)gradient descent with many iterations — slow but
+/// an entirely independent optimizer for the same objective.
+fn reference_objective(ds: &dglmnet::data::Dataset, lam: f64) -> f64 {
+    let n = ds.n_examples();
+    let p = ds.n_features();
+    let mut beta = vec![0f64; p];
+    let mut lr = 0.5 / n as f64;
+    let mut best = f64::INFINITY;
+    let mut margins = vec![0f64; n];
+    for _it in 0..4000 {
+        // gradient of the smooth part
+        let mut grad = vec![0f64; p];
+        for i in 0..n {
+            let (cols, vals) = ds.x.row(i);
+            let m: f64 = cols
+                .iter()
+                .zip(vals)
+                .map(|(&c, &v)| beta[c as usize] * v as f64)
+                .sum();
+            margins[i] = m;
+            let g = dglmnet::util::math::sigmoid(m) - (ds.y[i] as f64 + 1.0) / 2.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                grad[c as usize] += g * v as f64;
+            }
+        }
+        // proximal step (ISTA)
+        for j in 0..p {
+            beta[j] =
+                dglmnet::util::math::soft_threshold(beta[j] - lr * grad[j], lr * lam);
+        }
+        let f: f64 = margins
+            .iter()
+            .zip(&ds.y)
+            .map(|(&m, &y)| dglmnet::util::math::log1pexp(-(y as f64) * m))
+            .sum::<f64>()
+            + lam * beta.iter().map(|b| b.abs()).sum::<f64>();
+        if f < best {
+            best = f;
+        } else {
+            lr *= 0.7; // crude backtracking
+            if lr < 1e-12 {
+                break;
+            }
+        }
+    }
+    best
+}
+
+#[test]
+fn converges_to_ista_reference_objective() {
+    let ds = synth::dna_like(500, 30, 5, 101);
+    let lam = lambda_max(&ds) / 8.0;
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg(3, lam)).unwrap();
+    let fit = solver.fit(None).unwrap();
+    let reference = reference_objective(&ds, lam);
+    // d-GLMNET (Newton-style) should reach at least the ISTA objective
+    assert!(
+        fit.objective <= reference * 1.01 + 1e-6,
+        "d-GLMNET {} vs ISTA {}",
+        fit.objective,
+        reference
+    );
+}
+
+#[test]
+fn quality_improves_along_path_then_saturates() {
+    let split = synth::epsilon_like(3_000, 64, 102).split(0.8, 5);
+    let path_cfg = PathConfig { steps: 8, ..Default::default() };
+    let path = RegPath::run(&split.train, &split.test, &cfg(4, 1.0), &path_cfg).unwrap();
+    let aucs: Vec<f64> = path.points.iter().map(|p| p.auc).collect();
+    let best = aucs.iter().copied().fold(0.0, f64::max);
+    assert!(best > 0.8, "best AUC along the path = {best}");
+    // the head of the path (huge λ) must be worse than the best
+    assert!(aucs[0] <= best);
+}
+
+#[test]
+fn fitted_model_beats_random_and_majority() {
+    let split = synth::webspam_like(2_000, 3_000, 30, 103).split(0.75, 9);
+    let lam = lambda_max(&split.train) / 128.0;
+    let mut solver = DGlmnetSolver::from_dataset(&split.train, &cfg(4, lam)).unwrap();
+    let fit = solver.fit(None).unwrap();
+    let margins = fit.model.predict_margins(&split.test.x);
+    let auprc = metrics::auprc(&margins, &split.test.y);
+    let prevalence =
+        split.test.y.iter().filter(|&&y| y > 0.0).count() as f64 / split.test.y.len() as f64;
+    assert!(
+        auprc > prevalence + 0.1,
+        "auprc {auprc} vs prevalence {prevalence}"
+    );
+    assert!(metrics::accuracy(&margins, &split.test.y) > prevalence.max(1.0 - prevalence));
+}
+
+#[test]
+fn solver_is_deterministic() {
+    let ds = synth::dna_like(400, 32, 5, 104);
+    let lam = lambda_max(&ds) / 16.0;
+    let run = || {
+        let mut s = DGlmnetSolver::from_dataset(&ds, &cfg(4, lam)).unwrap();
+        let fit = s.fit(None).unwrap();
+        (fit.objective, fit.nnz(), fit.iterations, fit.model.entries.clone())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+    assert!((a.0 - b.0).abs() < 1e-10);
+    assert_eq!(a.3, b.3);
+}
+
+#[test]
+fn external_shuffle_pipeline_matches_in_memory() {
+    use dglmnet::cluster::partition::{FeaturePartition, PartitionStrategy};
+    use dglmnet::data::shuffle::shuffle_to_feature_shards;
+
+    let ds = synth::webspam_like(300, 600, 15, 105);
+    let lam = lambda_max(&ds) / 8.0;
+    let c = cfg(3, lam);
+    let part =
+        FeaturePartition::build(PartitionStrategy::RoundRobin, ds.n_features(), 3, None);
+    let dir = std::env::temp_dir().join(format!("dglmnet_it_shuffle_{}", std::process::id()));
+    let (shards, _) = shuffle_to_feature_shards(&ds.x, &part, &dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut s1 = DGlmnetSolver::from_shards(&ds, &c, part, shards).unwrap();
+    let f1 = s1.fit(None).unwrap();
+    let mut s2 = DGlmnetSolver::from_dataset(&ds, &c).unwrap();
+    let f2 = s2.fit(None).unwrap();
+    assert_eq!(f1.nnz(), f2.nnz());
+    assert!((f1.objective - f2.objective).abs() < 1e-9);
+}
+
+#[test]
+fn sparsity_precaution_zeroes_survive_convergence() {
+    // Fit at a λ strong enough that many coordinates sit at exactly 0;
+    // the α = 1 retry at convergence must not resurrect them.
+    let ds = synth::webspam_like(800, 1_500, 20, 106);
+    let lam = lambda_max(&ds) / 4.0;
+    let mut s = DGlmnetSolver::from_dataset(&ds, &cfg(4, lam)).unwrap();
+    let fit = s.fit(None).unwrap();
+    assert!(fit.converged);
+    assert!(
+        fit.nnz() < ds.n_features() / 4,
+        "expected strong sparsity, got {}/{}",
+        fit.nnz(),
+        ds.n_features()
+    );
+}
+
+#[test]
+fn machines_exceeding_features_is_an_error() {
+    let ds = synth::dna_like(100, 3, 2, 107);
+    let c = cfg(8, 0.1);
+    assert!(DGlmnetSolver::from_dataset(&ds, &c).is_err());
+}

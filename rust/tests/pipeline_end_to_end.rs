@@ -1,0 +1,103 @@
+//! End-to-end pipeline test mirroring the paper's full workflow on a small
+//! problem: generate → write libsvm → read back → by-feature transform
+//! (Table 1 format round-trip) → external shuffle → regularization path on
+//! the simulated cluster → baseline comparison → frontier check. This is
+//! the CI-sized version of `examples/online_vs_batch.rs`.
+
+mod common;
+
+use dglmnet::baselines::grid::{grid_frontier, online_grid_search};
+use dglmnet::config::{EngineKind, PathConfig, TrainConfig};
+use dglmnet::data::{libsvm, synth};
+use dglmnet::solver::{lambda_max, RegPath};
+
+#[test]
+fn paper_workflow_small() {
+    // 1. generate + persist + reload (ingest path)
+    let ds = synth::dna_like(2_500, 80, 8, 301);
+    let dir = std::env::temp_dir().join(format!("dglmnet_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let svm_path = dir.join("train.svm");
+    libsvm::write_libsvm(&ds, std::fs::File::create(&svm_path).unwrap()).unwrap();
+    let reloaded = libsvm::read_libsvm_file(&svm_path).unwrap();
+    assert_eq!(reloaded.n_examples(), ds.n_examples());
+    assert_eq!(reloaded.x.nnz(), ds.x.nnz());
+
+    // 2. Table-1 by-feature round trip
+    let csc = reloaded.x.to_csc();
+    let bf_path = dir.join("train.byfeature");
+    libsvm::write_by_feature(&csc, std::fs::File::create(&bf_path).unwrap()).unwrap();
+    let csc2 = libsvm::read_by_feature(
+        std::fs::File::open(&bf_path).unwrap(),
+        reloaded.n_examples(),
+    )
+    .unwrap();
+    assert_eq!(csc.indptr, csc2.indptr);
+    assert_eq!(csc.values, csc2.values);
+
+    // 3. split + path on the simulated cluster
+    let split = reloaded.split(0.8, 301);
+    let cfg = TrainConfig::builder()
+        .machines(4)
+        .engine(EngineKind::Native)
+        .max_iter(30)
+        .build();
+    let path_cfg = PathConfig { steps: 7, ..Default::default() };
+    let path = RegPath::run(&split.train, &split.test, &cfg, &path_cfg).unwrap();
+    assert_eq!(path.points.len(), 7);
+    let best_dg = path.points.iter().map(|p| p.auprc).fold(0.0, f64::max);
+
+    // 4. online baseline on the same split
+    let lam_max = lambda_max(&split.train);
+    let lambdas: Vec<f64> = (1..=6).map(|i| lam_max * 0.5f64.powi(i)).collect();
+    let grid = online_grid_search(
+        &split.train,
+        &split.test,
+        4,
+        &[0.1, 0.3],
+        &[0.5, 0.9],
+        &lambdas,
+        4,
+        302,
+    );
+    let best_vw = grid.iter().map(|g| g.auprc).fold(0.0, f64::max);
+
+    // 5. the paper's qualitative claim on this workload: the batch path's
+    //    best quality is at least competitive with the online baseline
+    assert!(
+        best_dg >= best_vw - 0.02,
+        "d-GLMNET best {best_dg} vs baseline best {best_vw}"
+    );
+    // and its frontier is non-trivial
+    assert!(!path.frontier().is_empty());
+    assert!(!grid_frontier(&grid).is_empty());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn communication_volume_matches_o_n_plus_p_log_m() {
+    // Alg 4: per iteration the allreduce moves Θ(n + p) per tree edge.
+    let ds = synth::webspam_like(1_000, 2_000, 20, 303);
+    let lam = lambda_max(&ds) / 8.0;
+    let bytes_per_iter = |m: usize| {
+        let cfg = TrainConfig::builder()
+            .machines(m)
+            .engine(EngineKind::Native)
+            .lambda(lam)
+            .max_iter(5)
+            .build();
+        let mut s = dglmnet::solver::DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let fit = s.fit(None).unwrap();
+        fit.comm_bytes as f64 / fit.iterations as f64
+    };
+    let b2 = bytes_per_iter(2);
+    let b8 = bytes_per_iter(8);
+    // tree: 2 machines -> 1 reduce edge + 1 broadcast round;
+    // 8 machines -> 7 reduce edges + 3 broadcast rounds: ratio = 10/2 = 5
+    let ratio = b8 / b2;
+    assert!(
+        (3.0..7.0).contains(&ratio),
+        "bytes/iter ratio M=8 vs M=2 = {ratio} (b2 = {b2}, b8 = {b8})"
+    );
+}

@@ -1,0 +1,192 @@
+//! Property-based tests over the coordinator's core invariants (DESIGN.md
+//! §7): partition disjoint-cover, allreduce ≡ serial sum, soft-threshold
+//! algebra, sparse-matrix transposition, objective monotonicity of the
+//! solver, and the Armijo postcondition of the line search.
+
+mod common;
+
+use common::{prop_check, random_small_dataset};
+use dglmnet::cluster::allreduce::TreeAllReduce;
+use dglmnet::cluster::network::{NetworkLedger, NetworkModel};
+use dglmnet::cluster::partition::{FeaturePartition, PartitionStrategy};
+use dglmnet::config::{EngineKind, LineSearchConfig, TrainConfig};
+use dglmnet::solver::line_search::line_search;
+use dglmnet::solver::DGlmnetSolver;
+use dglmnet::util::math::{soft_threshold, working_stats};
+
+#[test]
+fn prop_partition_is_disjoint_cover() {
+    prop_check("partition-disjoint-cover", 200, |rng, _| {
+        let p = 1 + rng.below(500);
+        let m = 1 + rng.below(16);
+        let strat = match rng.below(3) {
+            0 => PartitionStrategy::RoundRobin,
+            1 => PartitionStrategy::Contiguous,
+            _ => PartitionStrategy::NnzBalanced,
+        };
+        let counts: Vec<usize> = (0..p).map(|_| rng.below(100)).collect();
+        let part = FeaturePartition::build(strat, p, m, Some(&counts));
+        let mut seen = vec![false; p];
+        for k in 0..m {
+            for f in part.features_of(k) {
+                assert!(!seen[f as usize], "feature {f} doubly assigned");
+                seen[f as usize] = true;
+                assert_eq!(part.machine_of(f as usize), k);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    });
+}
+
+#[test]
+fn prop_allreduce_equals_serial_sum() {
+    prop_check("allreduce-serial-sum", 100, |rng, _| {
+        let m = 1 + rng.below(12);
+        let len = 1 + rng.below(2_000);
+        let contribs: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..len).map(|_| (rng.normal() * 3.0) as f32).collect())
+            .collect();
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let ledger = NetworkLedger::new();
+        let (got, _) = ar.sum(&contribs, &ledger);
+        for i in 0..len {
+            let want: f64 = contribs.iter().map(|c| c[i] as f64).sum();
+            assert!(
+                (got[i] as f64 - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "i = {i}: {} vs {want}",
+                got[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_soft_threshold_algebra() {
+    prop_check("soft-threshold", 500, |rng, _| {
+        let x = rng.normal() * 10.0;
+        let a = rng.uniform() * 5.0;
+        let t = soft_threshold(x, a);
+        // shrinks toward zero by at most a
+        assert!(t.abs() <= x.abs());
+        assert!((x - t).abs() <= a + 1e-12);
+        // sign preservation or exact zero
+        assert!(t == 0.0 || t.signum() == x.signum());
+        // zero iff |x| <= a
+        assert_eq!(t == 0.0, x.abs() <= a);
+    });
+}
+
+#[test]
+fn prop_csr_csc_transpose_roundtrip() {
+    prop_check("csr-csc-roundtrip", 60, |rng, _| {
+        let ds = random_small_dataset(rng);
+        let csc = ds.x.to_csc();
+        let back = csc.to_csr();
+        assert_eq!(back.indptr, ds.x.indptr);
+        assert_eq!(back.indices, ds.x.indices);
+        assert_eq!(back.values, ds.x.values);
+        assert_eq!(csc.nnz(), ds.x.nnz());
+    });
+}
+
+#[test]
+fn prop_working_stats_bounds() {
+    prop_check("working-stats-bounds", 500, |rng, _| {
+        let m = rng.normal() * 20.0;
+        let y = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        let (w, z) = working_stats(y, m);
+        assert!((0.0..=0.25 + 1e-12).contains(&w), "w = {w}");
+        assert!(z.is_finite());
+        // z has the sign pushing the margin toward the label when wrong
+        if y > 0.0 && m < 0.0 {
+            assert!(z > 0.0);
+        }
+        if y < 0.0 && m > 0.0 {
+            assert!(z < 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_solver_objective_never_increases() {
+    prop_check("solver-monotone", 12, |rng, case| {
+        let ds = random_small_dataset(rng);
+        let m = 1 + rng.below(4);
+        if ds.n_features() < m {
+            return;
+        }
+        let lam_max = dglmnet::solver::lambda_max(&ds);
+        let lam = lam_max * 0.5f64.powi(1 + rng.below(8) as i32);
+        let cfg = TrainConfig::builder()
+            .machines(m)
+            .engine(EngineKind::Native)
+            .lambda(lam.max(1e-3))
+            .max_iter(15)
+            .build();
+        let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let fit = solver.fit(None).unwrap();
+        let objs: Vec<f64> = fit.trace.iter().map(|r| r.objective).collect();
+        for w in objs.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-9) + 1e-9,
+                "case {case}: objective increased: {objs:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_line_search_armijo_postcondition() {
+    prop_check("armijo-postcondition", 200, |rng, _| {
+        // random smooth convex 1-D restriction: f(a) = q(a - opt)^2 + c
+        let opt = rng.uniform() * 1.5;
+        let q = 0.5 + rng.uniform() * 4.0;
+        let c = rng.uniform() * 10.0;
+        let f = move |a: f64| q * (a - opt).powi(2) + c;
+        let mut losses = |alphas: &[f64]| -> dglmnet::Result<Vec<f64>> {
+            Ok(alphas.iter().map(|&a| f(a)).collect())
+        };
+        let f0 = f(0.0);
+        let grad_dot = -2.0 * q * opt; // f'(0)
+        if grad_dot >= 0.0 {
+            return; // not a descent direction; solver never calls it then
+        }
+        let mut cfg = LineSearchConfig::default();
+        cfg.sufficient_decrease = f64::INFINITY; // force the search
+        let out = line_search(&mut losses, &|_| 0.0, f0, grad_dot, 0.0, &cfg).unwrap();
+        assert!(out.alpha > 0.0 && out.alpha <= 1.0);
+        assert!(
+            f(out.alpha) <= f0 + out.alpha * cfg.sigma * grad_dot + 1e-9,
+            "alpha = {}, f = {}, bound = {}",
+            out.alpha,
+            f(out.alpha),
+            f0 + out.alpha * cfg.sigma * grad_dot
+        );
+    });
+}
+
+#[test]
+fn prop_model_sparsity_exact_zeros() {
+    prop_check("model-exact-zeros", 20, |rng, _| {
+        let ds = random_small_dataset(rng);
+        let lam_max = dglmnet::solver::lambda_max(&ds);
+        let cfg = TrainConfig::builder()
+            .machines(2)
+            .engine(EngineKind::Native)
+            .lambda((lam_max / 4.0).max(1e-3))
+            .max_iter(10)
+            .build();
+        if ds.n_features() < 2 {
+            return;
+        }
+        let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let fit = solver.fit(None).unwrap();
+        // nnz counts exact zeros — soft-thresholding must produce true 0s,
+        // and the model round-trips them
+        let dense = fit.model.to_dense();
+        assert_eq!(
+            dense.iter().filter(|&&x| x != 0.0).count(),
+            fit.model.nnz()
+        );
+    });
+}
