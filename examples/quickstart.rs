@@ -25,10 +25,12 @@ fn main() -> dglmnet::Result<()> {
 
     // 2. Configure the simulated cluster. The XLA engine runs the AOT
     //    Pallas cd_block_sweep through PJRT inside every worker thread.
-    let engine = if std::path::Path::new("artifacts/manifest.json").exists() {
+    let engine = if cfg!(feature = "xla")
+        && std::path::Path::new("artifacts/manifest.json").exists()
+    {
         EngineKind::Xla
     } else {
-        eprintln!("artifacts missing -> native engine (run `make artifacts`)");
+        eprintln!("xla feature/artifacts missing -> native engine (run `make artifacts`)");
         EngineKind::Native
     };
     let lam = lambda_max(&split.train) / 64.0;

@@ -1,28 +1,55 @@
 //! P1 — hot-path micro benchmarks: one worker sweep (XLA vs native), leader
-//! stats, batched line-search evaluation, and the simulated tree AllReduce.
-//! These are the pieces the §Perf iteration log in EXPERIMENTS.md tracks.
+//! stats, batched line-search evaluation, the simulated tree AllReduce
+//! (dense vs sparse wire format), and a solver-level sparse-vs-dense
+//! communication comparison. Emits `BENCH_iteration.json` so the perf
+//! trajectory across PRs starts from a machine-readable baseline.
 //!
 //! Run: `cargo bench --bench bench_iteration`
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use dglmnet::bench_harness::{bench, section};
-use dglmnet::cluster::allreduce::TreeAllReduce;
+use dglmnet::bench_harness::{bench, section, BenchStats};
+use dglmnet::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
 use dglmnet::cluster::network::{NetworkLedger, NetworkModel};
 use dglmnet::cluster::partition::{FeaturePartition, PartitionStrategy};
 use dglmnet::config::{EngineKind, TrainConfig};
 use dglmnet::data::shuffle::shard_in_memory;
+use dglmnet::data::sparse::SparseVec;
 use dglmnet::data::synth;
-use dglmnet::engine::{NativeEngine, SubproblemEngine, XlaEngine};
+use dglmnet::engine::{NativeEngine, SubproblemEngine, SweepResult};
+#[cfg(feature = "xla")]
+use dglmnet::engine::XlaEngine;
 use dglmnet::solver::leader::LeaderCompute;
 use dglmnet::solver::quadratic::stats_native;
+use dglmnet::solver::{lambda_max, DGlmnetSolver};
+use dglmnet::util::json::Json;
+
+fn json_stats(s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("median_secs".to_string(), Json::Num(s.median));
+    m.insert("mean_secs".to_string(), Json::Num(s.mean));
+    m.insert("min_secs".to_string(), Json::Num(s.min));
+    m.insert("max_secs".to_string(), Json::Num(s.max));
+    m.insert("samples".to_string(), Json::Num(s.samples.len() as f64));
+    Json::Obj(m)
+}
 
 fn main() {
     let artifacts = std::path::Path::new("artifacts");
-    let have_artifacts = artifacts.join("manifest.json").exists();
+    let have_artifacts =
+        cfg!(feature = "xla") && artifacts.join("manifest.json").exists();
     if !have_artifacts {
-        eprintln!("WARNING: artifacts missing; XLA benches skipped (run `make artifacts`)");
+        eprintln!(
+            "WARNING: xla feature/artifacts missing; XLA benches skipped \
+             (build with --features xla and run `make artifacts`)"
+        );
     }
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    let record = |name: &str, s: &BenchStats| {
+        println!("{}", s.row());
+        (name.to_string(), json_stats(s))
+    };
 
     // A webspam-like worker shard: 1000 local features over 3000 examples.
     let ds = synth::webspam_like(3_000, 4_000, 40, 7);
@@ -36,27 +63,34 @@ fn main() {
     section("worker sweep (one machine, 1000 features, n = 3000)");
     {
         let mut ne = NativeEngine::new(shard.clone(), n);
-        let s = bench("native sparse sweep", 2, 10, || {
-            let _ = ne.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+        let mut out = SweepResult::default();
+        let s = bench("native sparse sweep (reused buffers)", 2, 10, || {
+            ne.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("native_sweep_sparse_shard", &s);
+        report.insert(k, v);
     }
+    #[cfg(feature = "xla")]
     if have_artifacts {
         let mut naive = XlaEngine::with_kernel(shard.clone(), n, 64, artifacts, true).unwrap();
+        let mut out = SweepResult::default();
         let s = bench("xla naive sweep (b=64, per-column)", 2, 10, || {
-            let _ = naive.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+            naive.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("xla_sweep_naive_b64", &s);
+        report.insert(k, v);
         let mut xe = XlaEngine::new(shard.clone(), n, 64, artifacts).unwrap();
         let s = bench("xla cov sweep (b=64, optimized)", 2, 10, || {
-            let _ = xe.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+            xe.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("xla_sweep_cov_b64", &s);
+        report.insert(k, v);
         let mut xe128 = XlaEngine::new(shard.clone(), n, 128, artifacts).unwrap();
         let s = bench("xla cov sweep (b=128, optimized)", 2, 10, || {
-            let _ = xe128.sweep(&w, &z, &beta, 0.5, 1e-6).unwrap();
+            xe128.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("xla_sweep_cov_b128", &s);
+        report.insert(k, v);
     }
 
     section("worker sweep on a DENSE shard (epsilon-like, 128 features, n = 3000)");
@@ -68,16 +102,20 @@ fn main() {
         let (dw, dz, _) = stats_native(&dmargins, &dense.y);
         let dbeta = vec![0f32; 128];
         let mut ne = NativeEngine::new(dshard.clone(), 3_000);
+        let mut out = SweepResult::default();
         let s = bench("native sparse sweep (dense data)", 2, 10, || {
-            let _ = ne.sweep(&dw, &dz, &dbeta, 0.5, 1e-6).unwrap();
+            ne.sweep(&dw, &dz, &dbeta, 0.5, 1e-6, &mut out).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("native_sweep_dense_shard", &s);
+        report.insert(k, v);
+        #[cfg(feature = "xla")]
         if have_artifacts {
             let mut xe = XlaEngine::new(dshard.clone(), 3_000, 64, artifacts).unwrap();
             let s = bench("xla cov sweep (dense data)", 2, 10, || {
-                let _ = xe.sweep(&dw, &dz, &dbeta, 0.5, 1e-6).unwrap();
+                xe.sweep(&dw, &dz, &dbeta, 0.5, 1e-6, &mut out).unwrap();
             });
-            println!("{}", s.row());
+            let (k, v) = record("xla_sweep_dense_shard", &s);
+            report.insert(k, v);
         }
     }
 
@@ -88,15 +126,18 @@ fn main() {
         let s = bench("native stats", 3, 20, || {
             let _ = leader.stats(&margins).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("leader_stats_native", &s);
+        report.insert(k, v);
     }
+    #[cfg(feature = "xla")]
     if have_artifacts {
         let cfg = TrainConfig::builder().engine(EngineKind::Xla).build();
         let mut leader = LeaderCompute::new(&cfg, &ds.y, artifacts).unwrap();
         let s = bench("xla stats kernel", 3, 20, || {
             let _ = leader.stats(&margins).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("leader_stats_xla", &s);
+        report.insert(k, v);
     }
 
     section("line-search grid evaluation (16 alphas, n = 3000)");
@@ -108,42 +149,143 @@ fn main() {
         let s = bench("native 16-alpha grid", 3, 20, || {
             let _ = leader.line_losses(&margins, &dm, &alphas).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("line_search_grid_native", &s);
+        report.insert(k, v);
+        #[cfg(feature = "xla")]
         if have_artifacts {
             let cfg = TrainConfig::builder().engine(EngineKind::Xla).build();
             let mut leader = LeaderCompute::new(&cfg, &ds.y, artifacts).unwrap();
             let s = bench("xla 16-alpha grid kernel", 3, 20, || {
                 let _ = leader.line_losses(&margins, &dm, &alphas).unwrap();
             });
-            println!("{}", s.row());
+            let (k, v) = record("line_search_grid_xla", &s);
+            report.insert(k, v);
         }
     }
 
-    section("tree allreduce (n = 100k floats)");
+    section("tree allreduce, dense wire (n = 100k floats)");
     for m in [4usize, 16] {
         let contribs: Vec<Vec<f32>> = (0..m).map(|k| vec![k as f32; 100_000]).collect();
         let ar = TreeAllReduce::new(NetworkModel::gigabit());
         let ledger = NetworkLedger::new();
-        let s = bench(&format!("allreduce M = {m}"), 2, 10, || {
+        let s = bench(&format!("dense allreduce M = {m}"), 2, 10, || {
             let _ = ar.sum(&contribs, &ledger);
         });
-        println!("{}", s.row());
+        let (k, v) = record(&format!("allreduce_dense_m{m}"), &s);
+        report.insert(k, v);
     }
 
-    section("full iteration via pool (M = 4, native)");
+    section("tree allreduce, sparse wire (dim = 100k, ~200 nnz/machine)");
+    for m in [4usize, 16] {
+        let contribs: Vec<SparseVec> = (0..m)
+            .map(|k| {
+                let mut v = SparseVec::new(100_000);
+                // disjoint-ish strided supports, ~200 entries each
+                for t in 0..200u32 {
+                    v.push(t * 500 + k as u32, (k + 1) as f32);
+                }
+                v
+            })
+            .collect();
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let ledger = NetworkLedger::new();
+        let mut scratch = AllReduceScratch::default();
+        let mut out = SparseVec::new(0);
+        let s = bench(&format!("sparse allreduce M = {m}"), 2, 10, || {
+            let _ =
+                ar.sum_sparse_into(contribs.iter(), 100_000, &ledger, &mut scratch, &mut out);
+        });
+        let (k, v) = record(&format!("allreduce_sparse_m{m}"), &s);
+        report.insert(k, v);
+    }
+
+    section("full iteration via pool (M = 4, native, reused buffers)");
     {
         let cfg = TrainConfig::builder()
             .machines(4)
             .engine(EngineKind::Native)
             .build();
         let shards = shard_in_memory(&ds.x, &part);
-        let pool =
+        let mut pool =
             dglmnet::solver::pool::WorkerPool::spawn(&cfg, shards, n, "artifacts".into()).unwrap();
         let (wa, za) = (Arc::new(w.clone()), Arc::new(z.clone()));
         let beta_full = vec![0f32; 4_000];
+        let mut results = Vec::new();
         let s = bench("pool.sweep_all (4 workers)", 2, 10, || {
-            let _ = pool.sweep_all(&wa, &za, &beta_full, 0.5, 1e-6).unwrap();
+            pool.sweep_all(&wa, &za, &beta_full, 0.5, 1e-6, &mut results).unwrap();
         });
-        println!("{}", s.row());
+        let (k, v) = record("pool_sweep_all_m4", &s);
+        report.insert(k, v);
+    }
+
+    // ---- solver-level sparse vs dense allreduce (the Table-3 claim) -----
+    section("per-fit comm: sparse vs dense allreduce (webspam-like, M = 8)");
+    {
+        // p >> n and a high λ: the regime where update sparsity pays
+        let ds = synth::webspam_like(1_000, 20_000, 12, 11);
+        let lam = lambda_max(&ds) / 4.0;
+        let mk = |dense: bool| {
+            TrainConfig::builder()
+                .machines(8)
+                .engine(EngineKind::Native)
+                .lambda(lam)
+                .max_iter(25)
+                .dense_allreduce(dense)
+                .build()
+        };
+        let mut s_sparse = DGlmnetSolver::from_dataset(&ds, &mk(false)).unwrap();
+        let t0 = std::time::Instant::now();
+        let fit_sparse = s_sparse.fit(None).unwrap();
+        let sparse_wall = t0.elapsed().as_secs_f64();
+        let mut s_dense = DGlmnetSolver::from_dataset(&ds, &mk(true)).unwrap();
+        let t1 = std::time::Instant::now();
+        let fit_dense = s_dense.fit(None).unwrap();
+        let dense_wall = t1.elapsed().as_secs_f64();
+        let reduction = fit_dense.comm_bytes as f64 / fit_sparse.comm_bytes.max(1) as f64;
+        println!(
+            "sparse: {} bytes, {:.4}s sim-comm, obj {:.6} ({} iters, {:.3}s wall)",
+            fit_sparse.comm_bytes,
+            fit_sparse.sim_comm_secs,
+            fit_sparse.objective,
+            fit_sparse.iterations,
+            sparse_wall
+        );
+        println!(
+            "dense : {} bytes, {:.4}s sim-comm, obj {:.6} ({} iters, {:.3}s wall)",
+            fit_dense.comm_bytes,
+            fit_dense.sim_comm_secs,
+            fit_dense.objective,
+            fit_dense.iterations,
+            dense_wall
+        );
+        println!("comm reduction: {reduction:.1}x");
+        let mut m = BTreeMap::new();
+        m.insert("sparse_comm_bytes".into(), Json::Num(fit_sparse.comm_bytes as f64));
+        m.insert("dense_comm_bytes".into(), Json::Num(fit_dense.comm_bytes as f64));
+        m.insert("comm_reduction_x".into(), Json::Num(reduction));
+        m.insert("sparse_objective".into(), Json::Num(fit_sparse.objective));
+        m.insert("dense_objective".into(), Json::Num(fit_dense.objective));
+        m.insert("sparse_sim_comm_secs".into(), Json::Num(fit_sparse.sim_comm_secs));
+        m.insert("dense_sim_comm_secs".into(), Json::Num(fit_dense.sim_comm_secs));
+        m.insert(
+            "sparse_wall_secs_per_iter".into(),
+            Json::Num(sparse_wall / fit_sparse.iterations.max(1) as f64),
+        );
+        m.insert(
+            "dense_wall_secs_per_iter".into(),
+            Json::Num(dense_wall / fit_dense.iterations.max(1) as f64),
+        );
+        report.insert("fit_sparse_vs_dense_comm".into(), Json::Obj(m));
+    }
+
+    // ---- emit the machine-readable baseline -----------------------------
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("bench_iteration".into()));
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("results".to_string(), Json::Obj(report));
+    let path = "BENCH_iteration.json";
+    match std::fs::write(path, format!("{}\n", Json::Obj(top))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }

@@ -2,6 +2,12 @@
 //! Gigabit Ethernet; we model each transfer as `latency + bytes/bandwidth`
 //! and keep a ledger so benchmarks can report simulated network time and
 //! total volume next to wall-clock compute time.
+//!
+//! Callers charge the ledger with the *actual payload* of each message —
+//! for the sparsity-aware AllReduce that is `nnz · 8` bytes per sparse
+//! [`crate::data::sparse::SparseVec`] edge (see `cluster::allreduce` for
+//! the wire format), not the dense `dim · 4`, so `comm_bytes` and
+//! simulated seconds reward sparse updates the way a real cluster would.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -84,6 +84,10 @@ pub struct TrainConfig {
     pub naive_sweep: bool,
     pub partition: PartitionStrategy,
     pub network: NetworkModel,
+    /// Force the dense AllReduce wire format (the pre-sparsity baseline;
+    /// benchmarks and the sparse-vs-dense regression tests use this —
+    /// production leaves it off and lets the density threshold decide).
+    pub dense_allreduce: bool,
     pub line_search: LineSearchConfig,
     /// Tolerated relative objective increase when retrying alpha = 1 at
     /// convergence (the second sparsity precaution of §2).
@@ -104,6 +108,7 @@ impl Default for TrainConfig {
             naive_sweep: false,
             partition: PartitionStrategy::RoundRobin,
             network: NetworkModel::gigabit(),
+            dense_allreduce: false,
             line_search: LineSearchConfig::default(),
             alpha_one_slack: 1e-4,
             verbose: false,
@@ -185,6 +190,9 @@ impl TrainConfig {
         if let Some(v) = num("cluster", "latency_us") {
             cfg.network.latency_sec = v * 1e-6;
         }
+        if let Some(v) = doc.get("cluster", "dense_allreduce").and_then(|v| v.as_bool()) {
+            cfg.dense_allreduce = v;
+        }
         if let Some(v) = num("line_search", "backtrack") {
             cfg.line_search.backtrack = v;
         }
@@ -244,6 +252,10 @@ impl TrainConfigBuilder {
     }
     pub fn network(mut self, v: NetworkModel) -> Self {
         self.0.network = v;
+        self
+    }
+    pub fn dense_allreduce(mut self, v: bool) -> Self {
+        self.0.dense_allreduce = v;
         self
     }
     pub fn line_search(mut self, v: LineSearchConfig) -> Self {

@@ -11,4 +11,4 @@ pub mod sparse;
 pub mod synth;
 
 pub use dataset::{Dataset, SplitDataset};
-pub use sparse::{CscMatrix, CsrMatrix, Triplet};
+pub use sparse::{CscMatrix, CsrMatrix, SparseVec, Triplet};

@@ -1,9 +1,150 @@
-//! Compressed sparse matrices. CSR is the by-example layout (one row per
-//! training example — what online learners and the libsvm format use); CSC
-//! is the by-feature layout d-GLMNET workers need (paper §3, Table 1:
-//! `feature_id (example_id, value) ...`).
+//! Compressed sparse matrices and vectors. CSR is the by-example layout
+//! (one row per training example — what online learners and the libsvm
+//! format use); CSC is the by-feature layout d-GLMNET workers need (paper
+//! §3, Table 1: `feature_id (example_id, value) ...`). [`SparseVec`] is the
+//! sorted index/value message type the sparsity-aware AllReduce ships
+//! between simulated machines.
 
 use crate::error::{DlrError, Result};
+
+/// Simulated wire cost of one sparse entry: a `u32` index + `f32` value.
+pub const SPARSE_ENTRY_BYTES: u64 = 8;
+
+/// A sparse vector message: parallel `(index, value)` arrays with indices
+/// sorted ascending and unique. This is the unit of Δβ / Δmargin traffic in
+/// the sparsity-aware AllReduce — its simulated wire size is
+/// `nnz · (4 + 4)` bytes (index + value), vs `dim · 4` for a dense `f32`
+/// vector.
+///
+/// Buffers are designed for reuse: [`SparseVec::clear`] keeps capacity, so
+/// a vector that round-trips through the worker pool allocates only until
+/// its high-water mark.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVec {
+    /// Logical length of the vector (indices are `< dim`).
+    pub dim: usize,
+    /// Sorted ascending, unique.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Empty vector of logical length `dim`.
+    pub fn new(dim: usize) -> Self {
+        Self { dim, indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Gather the non-zeros of a dense slice.
+    pub fn from_dense(dense: &[f32]) -> Self {
+        let mut v = Self::new(dense.len());
+        for (i, &x) in dense.iter().enumerate() {
+            if x != 0.0 {
+                v.indices.push(i as u32);
+                v.values.push(x);
+            }
+        }
+        v
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// nnz / dim (0 for a zero-dimensional vector).
+    pub fn density(&self) -> f64 {
+        if self.dim == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.dim as f64
+        }
+    }
+
+    /// Simulated wire size of this message: `nnz · (4 + 4)` bytes.
+    pub fn wire_bytes(&self) -> u64 {
+        self.nnz() as u64 * SPARSE_ENTRY_BYTES
+    }
+
+    /// Reset to the empty vector of length `dim`, keeping capacity.
+    pub fn clear(&mut self, dim: usize) {
+        self.dim = dim;
+        self.indices.clear();
+        self.values.clear();
+    }
+
+    /// Append an entry. Indices must arrive in strictly ascending order
+    /// (checked in debug builds). A producer that cannot guarantee order
+    /// should write the public `indices`/`values` fields directly and call
+    /// [`SparseVec::ensure_sorted`] afterwards (see `engine::streaming`).
+    pub fn push(&mut self, index: u32, value: f32) {
+        debug_assert!(
+            self.indices.last().is_none_or(|&last| last < index),
+            "SparseVec indices must be pushed in ascending order"
+        );
+        debug_assert!((index as usize) < self.dim, "index {index} >= dim {}", self.dim);
+        self.indices.push(index);
+        self.values.push(value);
+    }
+
+    /// Restore the sorted-unique invariant after a batch of raw pushes:
+    /// sort by index if any entries are out of order (O(nnz) check, sort
+    /// only when needed) and merge duplicate indices by summing their
+    /// values — a producer that touches a coordinate twice (e.g. a
+    /// by-feature file listing a feature twice) contributes the sum of its
+    /// partial updates.
+    pub fn ensure_sorted(&mut self) {
+        if self.indices.windows(2).all(|w| w[0] < w[1]) {
+            return;
+        }
+        let mut order: Vec<usize> = (0..self.indices.len()).collect();
+        order.sort_unstable_by_key(|&k| self.indices[k]);
+        let mut indices: Vec<u32> = Vec::with_capacity(order.len());
+        let mut values: Vec<f32> = Vec::with_capacity(order.len());
+        for &k in &order {
+            if indices.last() == Some(&self.indices[k]) {
+                *values.last_mut().unwrap() += self.values[k];
+            } else {
+                indices.push(self.indices[k]);
+                values.push(self.values[k]);
+            }
+        }
+        self.indices = indices;
+        self.values = values;
+    }
+
+    /// `(index, value)` iterator.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.indices.iter().copied().zip(self.values.iter().copied())
+    }
+
+    /// Add `scale ·` this vector into a dense buffer (`out.len() == dim`).
+    pub fn add_scaled_into(&self, out: &mut [f32], scale: f32) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (i, v) in self.iter() {
+            out[i as usize] += scale * v;
+        }
+    }
+
+    /// Overwrite the touched coordinates of a dense buffer with this
+    /// vector's values (untouched coordinates are left as-is — callers zero
+    /// the buffer first when they need an exact densification).
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (i, v) in self.iter() {
+            out[i as usize] = v;
+        }
+    }
+
+    /// Densify into a fresh `Vec` (tests and one-shot callers).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim];
+        self.scatter_into(&mut out);
+        out
+    }
+}
 
 /// A single (row, col, value) entry, the interchange unit of the shuffle.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -327,6 +468,64 @@ mod tests {
         assert_eq!(tile[2 * 4 + 1], 5.0); // (row 2, col 2)
         assert_eq!(tile[3 * 4 + 0], 0.0); // padded row
         assert_eq!(tile.iter().filter(|&&x| x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn sparse_vec_round_trips_dense() {
+        let dense = [0f32, 1.5, 0.0, -2.0, 0.0];
+        let sv = SparseVec::from_dense(&dense);
+        assert_eq!(sv.dim, 5);
+        assert_eq!(sv.nnz(), 2);
+        assert_eq!(sv.indices, vec![1, 3]);
+        assert_eq!(sv.to_dense(), dense.to_vec());
+        assert_eq!(sv.wire_bytes(), 16);
+        assert!((sv.density() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_vec_clear_keeps_capacity() {
+        let mut sv = SparseVec::from_dense(&[1.0, 2.0, 3.0]);
+        let cap = sv.indices.capacity();
+        sv.clear(7);
+        assert_eq!(sv.dim, 7);
+        assert_eq!(sv.nnz(), 0);
+        assert!(sv.indices.capacity() >= cap);
+        sv.push(2, 4.0);
+        sv.push(6, -1.0);
+        assert_eq!(sv.to_dense(), vec![0.0, 0.0, 4.0, 0.0, 0.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn sparse_vec_ensure_sorted_orders_entries() {
+        let mut sv = SparseVec::new(10);
+        // bypass push's ordering contract to simulate an unordered producer
+        sv.indices.extend_from_slice(&[7, 2, 5]);
+        sv.values.extend_from_slice(&[70.0, 20.0, 50.0]);
+        sv.ensure_sorted();
+        assert_eq!(sv.indices, vec![2, 5, 7]);
+        assert_eq!(sv.values, vec![20.0, 50.0, 70.0]);
+        // already-sorted input is a no-op
+        sv.ensure_sorted();
+        assert_eq!(sv.indices, vec![2, 5, 7]);
+    }
+
+    #[test]
+    fn sparse_vec_ensure_sorted_merges_duplicates() {
+        let mut sv = SparseVec::new(10);
+        // a producer that touched coordinate 4 twice (partial updates sum)
+        sv.indices.extend_from_slice(&[4, 1, 4]);
+        sv.values.extend_from_slice(&[1.5, 9.0, 2.5]);
+        sv.ensure_sorted();
+        assert_eq!(sv.indices, vec![1, 4]);
+        assert_eq!(sv.values, vec![9.0, 4.0]);
+    }
+
+    #[test]
+    fn sparse_vec_add_scaled() {
+        let sv = SparseVec::from_dense(&[0.0, 2.0, 0.0, -1.0]);
+        let mut out = vec![1f32; 4];
+        sv.add_scaled_into(&mut out, 0.5);
+        assert_eq!(out, vec![1.0, 2.0, 1.0, 0.5]);
     }
 
     #[test]

@@ -1,35 +1,50 @@
 //! Subproblem engines: the per-machine solve of paper eq. (9) / Alg 2.
 //!
-//! * [`XlaEngine`] — the production hot path: the worker's feature shard is
-//!   densified once into (N, B) tiles and every sweep executes the AOT
-//!   Pallas `cd_block_sweep` through PJRT.
+//! * [`XlaEngine`] (feature `xla`) — the AOT-Pallas hot path: the worker's
+//!   feature shard is densified once into (N, B) tiles and every sweep
+//!   executes the AOT `cd_block_sweep` through PJRT.
 //! * [`NativeEngine`] — the paper's original sparse CPU formulation in pure
-//!   rust; used for shards too large/sparse for dense tiles and as the
-//!   cross-check oracle for the XLA path.
+//!   rust; the default engine and the cross-check oracle for the XLA path.
+//! * [`StreamingEngine`] — the paper's O(n + p)-RAM disk-streaming mode.
 //!
-//! Both consume the same inputs and must produce the same update (tested in
-//! `rust/tests/engine_equivalence.rs`).
+//! All engines consume the same inputs and must produce the same update
+//! (tested in `rust/tests/engine_equivalence.rs`).
+//!
+//! ## Zero-allocation sweep contract
+//!
+//! [`SubproblemEngine::sweep`] writes into a caller-owned [`SweepResult`]
+//! whose [`SparseVec`] buffers are reused across iterations (the worker pool
+//! round-trips them through its channels), so the steady-state hot path
+//! performs no per-iteration heap allocation. Results are *sparse*: only the
+//! coordinates the sweep actually moved are materialized, which is what the
+//! sparsity-aware AllReduce ships over the simulated network.
 
 pub mod native;
 pub mod streaming;
+#[cfg(feature = "xla")]
 pub mod xla_engine;
 
 pub use native::NativeEngine;
 pub use streaming::StreamingEngine;
+#[cfg(feature = "xla")]
 pub use xla_engine::XlaEngine;
 
 use crate::config::{EngineKind, TrainConfig};
 use crate::data::shuffle::FeatureShard;
+use crate::data::sparse::SparseVec;
 use crate::error::Result;
 
 /// Result of one machine-local subproblem solve (one cyclic CD sweep).
-#[derive(Debug, Clone)]
+/// Owned by the caller and reused across sweeps — engines `clear` and refill
+/// the sparse buffers rather than allocating.
+#[derive(Debug, Clone, Default)]
 pub struct SweepResult {
-    /// Update for the shard's features, in shard-local column order.
-    pub delta_local: Vec<f32>,
-    /// Per-example margin delta contributed by this shard:
-    /// dmargins[i] = Δβ^m · x_i, length n (unpadded).
-    pub dmargins: Vec<f32>,
+    /// Sparse update for the shard's features, in shard-local column order
+    /// (`dim` = the shard's local feature count).
+    pub delta_local: SparseVec,
+    /// Sparse per-example margin delta contributed by this shard:
+    /// `dmargins[i] = Δβ^m · x_i` for the touched examples (`dim` = n).
+    pub dmargins: SparseVec,
     /// Wall-clock seconds of the local solve (for Table 3 / speedup).
     pub compute_secs: f64,
 }
@@ -40,7 +55,7 @@ pub struct SweepResult {
 pub trait SubproblemEngine {
     /// One cyclic coordinate-descent sweep over the shard, given the shared
     /// working weights `w` and responses `z` (length n) and the *current
-    /// shard-local* coefficients `beta_local`.
+    /// shard-local* coefficients `beta_local`. Fills `out` in place.
     fn sweep(
         &mut self,
         w: &[f32],
@@ -48,18 +63,36 @@ pub trait SubproblemEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
-    ) -> Result<SweepResult>;
+        out: &mut SweepResult,
+    ) -> Result<()>;
+
+    /// Allocating convenience wrapper (tests, one-shot callers).
+    fn sweep_alloc(
+        &mut self,
+        w: &[f32],
+        z: &[f32],
+        beta_local: &[f32],
+        lam: f32,
+        nu: f32,
+    ) -> Result<SweepResult> {
+        let mut out = SweepResult::default();
+        self.sweep(w, z, beta_local, lam, nu, &mut out)?;
+        Ok(out)
+    }
 
     fn name(&self) -> &'static str;
 }
 
 /// Per-worker dense-tile memory budget for the Auto engine (bytes).
+#[cfg(feature = "xla")]
 const AUTO_DENSE_BYTES_BUDGET: usize = 256 << 20;
 /// Minimum shard density for Auto to pick the dense-tile path: below this
 /// the O(n_pad·p) dense sweep wastes too much work vs the O(nnz) sparse one.
+#[cfg(feature = "xla")]
 const AUTO_MIN_DENSITY: f64 = 0.02;
 
 /// Resolve [`EngineKind::Auto`] for a concrete shard.
+#[cfg(feature = "xla")]
 pub fn resolve_engine(
     cfg: &TrainConfig,
     shard: &FeatureShard,
@@ -87,6 +120,20 @@ pub fn resolve_engine(
     }
 }
 
+/// Without the `xla` feature, Auto always resolves to the native engine.
+#[cfg(not(feature = "xla"))]
+pub fn resolve_engine(
+    cfg: &TrainConfig,
+    _shard: &FeatureShard,
+    _n: usize,
+    _artifacts_dir: &std::path::Path,
+) -> EngineKind {
+    match cfg.engine {
+        EngineKind::Auto => EngineKind::Native,
+        k => k,
+    }
+}
+
 /// Build an engine for `shard` inside the current thread.
 pub fn build_engine(
     cfg: &TrainConfig,
@@ -96,6 +143,7 @@ pub fn build_engine(
 ) -> Result<Box<dyn SubproblemEngine>> {
     match resolve_engine(cfg, &shard, n, artifacts_dir) {
         EngineKind::Native => Ok(Box::new(NativeEngine::new(shard, n))),
+        #[cfg(feature = "xla")]
         _ => Ok(Box::new(XlaEngine::with_kernel(
             shard,
             n,
@@ -103,5 +151,11 @@ pub fn build_engine(
             artifacts_dir,
             cfg.naive_sweep,
         )?)),
+        #[cfg(not(feature = "xla"))]
+        _ => Err(crate::error::DlrError::Artifact(
+            "XLA engine requested but this build has no `xla` feature \
+             (rebuild with --features xla and run `make artifacts`)"
+                .into(),
+        )),
     }
 }

@@ -1,7 +1,8 @@
 //! Pure-rust sparse subproblem engine — the paper's original by-feature CPU
 //! formulation (§3): stream the shard's columns, apply the closed-form
 //! coordinate update (6), maintain the working residual incrementally.
-//! O(nnz) per sweep, exactly as the paper reports.
+//! O(nnz) per sweep, exactly as the paper reports; results are emitted as
+//! sparse vectors into caller-owned buffers (no per-sweep allocation).
 
 use std::time::Instant;
 
@@ -37,7 +38,8 @@ impl SubproblemEngine for NativeEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
-    ) -> Result<SweepResult> {
+        out: &mut SweepResult,
+    ) -> Result<()> {
         let t0 = Instant::now();
         let n = self.n;
         debug_assert_eq!(w.len(), n);
@@ -50,14 +52,14 @@ impl SubproblemEngine for NativeEngine {
             self.r[i] = z[i] as f64;
         }
         let (lam, nu) = (lam as f64, nu as f64);
-        let mut delta = vec![0f32; p_local];
+        out.delta_local.clear(p_local);
 
         for j in 0..p_local {
             let (rows, vals) = self.shard.csc.col(j);
             if rows.is_empty() {
                 continue;
             }
-            // A = Σ w x² + ν ;  c = Σ w r x + u (A - ν) + β_j A
+            // A = Σ w x² + ν ;  c = Σ w r x + β_j A
             let mut a = nu;
             let mut wrx = 0f64;
             for (&i, &v) in rows.iter().zip(vals) {
@@ -66,22 +68,30 @@ impl SubproblemEngine for NativeEngine {
                 a += wi * x * x;
                 wrx += wi * self.r[i as usize] * x;
             }
-            let u = delta[j] as f64; // always 0 on the first (only) cycle
             let bj = beta_local[j] as f64;
-            let c = wrx + u * (a - nu) + bj * a;
+            let c = wrx + bj * a;
             let s = soft_threshold(c, lam) / a;
-            let step = s - bj - u;
+            let step = s - bj;
             if step != 0.0 {
-                delta[j] = (s - bj) as f32;
+                out.delta_local.push(j as u32, step as f32);
                 for (&i, &v) in rows.iter().zip(vals) {
                     self.r[i as usize] -= step * v as f64;
                 }
             }
         }
 
-        // Δβ^m · x_i = z_i - r_i
-        let dmargins: Vec<f32> = (0..n).map(|i| (z[i] as f64 - self.r[i]) as f32).collect();
-        Ok(SweepResult { delta_local: delta, dmargins, compute_secs: t0.elapsed().as_secs_f64() })
+        // Δβ^m · x_i = z_i - r_i, non-zero only for examples the sweep
+        // touched (r is modified only through coordinate updates, so an
+        // untouched residual still bit-equals z_i).
+        out.dmargins.clear(n);
+        for i in 0..n {
+            let zi = z[i] as f64;
+            if self.r[i] != zi {
+                out.dmargins.push(i as u32, (zi - self.r[i]) as f32);
+            }
+        }
+        out.compute_secs = t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -120,13 +130,11 @@ mod tests {
         let margins = vec![0f32; ds.n_examples()];
         let (w, z) = stats_of(&ds, &margins);
         let beta = vec![0f32; 30];
-        let res = eng.sweep(&w, &z, &beta, 0.0, 1e-6).unwrap();
+        let res = eng.sweep_alloc(&w, &z, &beta, 0.0, 1e-6).unwrap();
         // apply full step, loss must drop
-        let new_margins: Vec<f32> = margins
-            .iter()
-            .zip(&res.dmargins)
-            .map(|(&m, &d)| m + d)
-            .collect();
+        let dm = res.dmargins.to_dense();
+        let new_margins: Vec<f32> =
+            margins.iter().zip(&dm).map(|(&m, &d)| m + d).collect();
         let before = crate::util::math::logloss_sum(&margins, &ds.y);
         let after = crate::util::math::logloss_sum(&new_margins, &ds.y);
         assert!(after < before, "{after} !< {before}");
@@ -138,9 +146,11 @@ mod tests {
         let mut eng = NativeEngine::new(one_shard(&ds), ds.n_examples());
         let margins = vec![0f32; ds.n_examples()];
         let (w, z) = stats_of(&ds, &margins);
-        let res = eng.sweep(&w, &z, &vec![0f32; 20], 1e9, 1e-6).unwrap();
-        assert!(res.delta_local.iter().all(|&d| d == 0.0));
-        assert!(res.dmargins.iter().all(|&d| d == 0.0));
+        let res = eng.sweep_alloc(&w, &z, &vec![0f32; 20], 1e9, 1e-6).unwrap();
+        assert!(res.delta_local.is_empty());
+        assert!(res.dmargins.is_empty());
+        assert_eq!(res.delta_local.dim, 20);
+        assert_eq!(res.dmargins.dim, 200);
     }
 
     #[test]
@@ -151,26 +161,47 @@ mod tests {
         let mut eng = NativeEngine::new(shard, ds.n_examples());
         let margins = vec![0.1f32; ds.n_examples()];
         let (w, z) = stats_of(&ds, &margins);
-        let res = eng.sweep(&w, &z, &vec![0f32; 600], 0.5, 1e-6).unwrap();
+        let res = eng.sweep_alloc(&w, &z, &vec![0f32; 600], 0.5, 1e-6).unwrap();
         // recompute Δβ·x_i from scratch and compare
+        let delta = res.delta_local.to_dense();
         let mut want = vec![0f64; ds.n_examples()];
         for j in 0..600 {
             let (rows, vals) = csc.col(j);
-            let d = res.delta_local[j] as f64;
+            let d = delta[j] as f64;
             if d != 0.0 {
                 for (&i, &v) in rows.iter().zip(vals) {
                     want[i as usize] += d * v as f64;
                 }
             }
         }
+        let dm = res.dmargins.to_dense();
         for i in 0..ds.n_examples() {
             assert!(
-                (res.dmargins[i] as f64 - want[i]).abs() < 1e-4,
+                (dm[i] as f64 - want[i]).abs() < 1e-4,
                 "i={i}: {} vs {}",
-                res.dmargins[i],
+                dm[i],
                 want[i]
             );
         }
+    }
+
+    #[test]
+    fn sweep_reuses_buffers_without_reallocating() {
+        // the zero-allocation contract: a second sweep through the same
+        // SweepResult must not grow the sparse buffers' capacity
+        let ds = synth::webspam_like(200, 500, 10, 9);
+        let mut eng = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let margins = vec![0f32; ds.n_examples()];
+        let (w, z) = stats_of(&ds, &margins);
+        let beta = vec![0f32; 500];
+        let mut out = SweepResult::default();
+        eng.sweep(&w, &z, &beta, 0.3, 1e-6, &mut out).unwrap();
+        let first = out.delta_local.clone();
+        let (cap_d, cap_m) = (out.delta_local.indices.capacity(), out.dmargins.indices.capacity());
+        eng.sweep(&w, &z, &beta, 0.3, 1e-6, &mut out).unwrap();
+        assert_eq!(out.delta_local, first, "sweeps must be deterministic");
+        assert_eq!(out.delta_local.indices.capacity(), cap_d);
+        assert_eq!(out.dmargins.indices.capacity(), cap_m);
     }
 
     #[test]
@@ -184,7 +215,8 @@ mod tests {
         beta[0] = 5.0;
         let margins = ds.x.margins(&beta);
         let (w, z) = stats_of(&ds, &margins);
-        let res = eng.sweep(&w, &z, &beta, 1.0, 1e-6).unwrap();
-        assert!(res.delta_local[0] < 0.0, "delta0 = {}", res.delta_local[0]);
+        let res = eng.sweep_alloc(&w, &z, &beta, 1.0, 1e-6).unwrap();
+        let delta = res.delta_local.to_dense();
+        assert!(delta[0] < 0.0, "delta0 = {}", delta[0]);
     }
 }

@@ -90,7 +90,8 @@ impl SubproblemEngine for StreamingEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
-    ) -> Result<SweepResult> {
+        out: &mut SweepResult,
+    ) -> Result<()> {
         let t0 = Instant::now();
         let n = self.n;
         debug_assert_eq!(beta_local.len(), self.p_local);
@@ -98,7 +99,7 @@ impl SubproblemEngine for StreamingEngine {
             self.r[i] = z[i] as f64;
         }
         let (lam, nu) = (lam as f64, nu as f64);
-        let mut delta = vec![0f32; self.p_local];
+        out.delta_local.clear(self.p_local);
 
         let mut file = BufReader::new(std::fs::File::open(&self.path)?);
         file.seek(SeekFrom::Start(0))?;
@@ -133,14 +134,25 @@ impl SubproblemEngine for StreamingEngine {
             let s = soft_threshold(c, lam) / a;
             let step = s - bj;
             if step != 0.0 {
-                delta[j] = step as f32;
+                // file order is by feature id, but tolerate unordered files:
+                // entries are re-sorted below if needed
+                out.delta_local.indices.push(j as u32);
+                out.delta_local.values.push(step as f32);
                 for &(i, v) in &self.postings {
                     self.r[i as usize] -= step * v as f64;
                 }
             }
         }
-        let dmargins: Vec<f32> = (0..n).map(|i| (z[i] as f64 - self.r[i]) as f32).collect();
-        Ok(SweepResult { delta_local: delta, dmargins, compute_secs: t0.elapsed().as_secs_f64() })
+        out.delta_local.ensure_sorted();
+        out.dmargins.clear(n);
+        for i in 0..n {
+            let zi = z[i] as f64;
+            if self.r[i] != zi {
+                out.dmargins.push(i as u32, (zi - self.r[i]) as f32);
+            }
+        }
+        out.compute_secs = t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -180,16 +192,15 @@ mod tests {
             })
             .unzip();
         let beta = vec![0f32; 800];
-        let rs = se.sweep(&w, &z, &beta, 0.3, 1e-6).unwrap();
-        let rn = ne.sweep(&w, &z, &beta, 0.3, 1e-6).unwrap();
+        let rs = se.sweep_alloc(&w, &z, &beta, 0.3, 1e-6).unwrap();
+        let rn = ne.sweep_alloc(&w, &z, &beta, 0.3, 1e-6).unwrap();
+        let (ds_s, ds_n) = (rs.delta_local.to_dense(), rn.delta_local.to_dense());
         for j in 0..800 {
-            assert!(
-                (rs.delta_local[j] - rn.delta_local[j]).abs() < 1e-4,
-                "delta[{j}]"
-            );
+            assert!((ds_s[j] - ds_n[j]).abs() < 1e-4, "delta[{j}]");
         }
+        let (dm_s, dm_n) = (rs.dmargins.to_dense(), rn.dmargins.to_dense());
         for i in 0..n {
-            assert!((rs.dmargins[i] - rn.dmargins[i]).abs() < 1e-4, "dm[{i}]");
+            assert!((dm_s[i] - dm_n[i]).abs() < 1e-4, "dm[{i}]");
         }
         std::fs::remove_file(&path).ok();
     }
@@ -209,8 +220,8 @@ mod tests {
                 (w as f32, z as f32)
             })
             .unzip();
-        let a = se.sweep(&w, &z, &vec![0f32; 40], 0.1, 1e-6).unwrap();
-        let b = se.sweep(&w, &z, &vec![0f32; 40], 0.1, 1e-6).unwrap();
+        let a = se.sweep_alloc(&w, &z, &vec![0f32; 40], 0.1, 1e-6).unwrap();
+        let b = se.sweep_alloc(&w, &z, &vec![0f32; 40], 0.1, 1e-6).unwrap();
         assert_eq!(a.delta_local, b.delta_local); // stateless across sweeps
         std::fs::remove_file(&path).ok();
     }

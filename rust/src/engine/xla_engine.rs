@@ -115,7 +115,8 @@ impl SubproblemEngine for XlaEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
-    ) -> Result<SweepResult> {
+        out: &mut SweepResult,
+    ) -> Result<()> {
         let t0 = Instant::now();
         let n = self.n;
         debug_assert_eq!(w.len(), n);
@@ -127,7 +128,7 @@ impl SubproblemEngine for XlaEngine {
         let lam_lit = lit_vec(&[lam]);
         let nu_lit = lit_vec(&[nu]);
 
-        let mut delta = vec![0f32; beta_local.len()];
+        out.delta_local.clear(beta_local.len());
         let mut r_lit = lit_vec(&self.r_pad);
         for tile in &self.tiles {
             let beta_b = pad_to(&beta_local[tile.start..tile.start + tile.width], self.b);
@@ -145,11 +146,23 @@ impl SubproblemEngine for XlaEngine {
                 .next()
                 .ok_or_else(|| DlrError::Xla("cd_sweep returned 1 output".into()))?;
             let d_vec = d_out.to_vec::<f32>()?;
-            delta[tile.start..tile.start + tile.width].copy_from_slice(&d_vec[..tile.width]);
+            // tiles are visited in ascending column order, so pushes stay
+            // sorted; only materialize the coordinates the kernel moved
+            for (local_j, &d) in d_vec[..tile.width].iter().enumerate() {
+                if d != 0.0 {
+                    out.delta_local.push((tile.start + local_j) as u32, d);
+                }
+            }
         }
         let r_final = r_lit.to_vec::<f32>()?;
-        let dmargins: Vec<f32> = (0..n).map(|i| z[i] - r_final[i]).collect();
-        Ok(SweepResult { delta_local: delta, dmargins, compute_secs: t0.elapsed().as_secs_f64() })
+        out.dmargins.clear(n);
+        for (i, (&zi, &ri)) in z.iter().zip(&r_final[..n]).enumerate() {
+            if zi != ri {
+                out.dmargins.push(i as u32, zi - ri);
+            }
+        }
+        out.compute_secs = t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -197,19 +210,21 @@ mod tests {
 
         let mut xe = XlaEngine::new(shard.clone(), n, 64, &dir).unwrap();
         let mut ne = NativeEngine::new(shard, n);
-        let rx = xe.sweep(&w, &z, &beta, lam, nu).unwrap();
-        let rn = ne.sweep(&w, &z, &beta, lam, nu).unwrap();
+        let rx = xe.sweep_alloc(&w, &z, &beta, lam, nu).unwrap();
+        let rn = ne.sweep_alloc(&w, &z, &beta, lam, nu).unwrap();
 
-        assert_eq!(rx.delta_local.len(), rn.delta_local.len());
-        for (j, (a, b)) in rx.delta_local.iter().zip(&rn.delta_local).enumerate() {
+        let (dx, dn) = (rx.delta_local.to_dense(), rn.delta_local.to_dense());
+        assert_eq!(dx.len(), dn.len());
+        for (j, (a, b)) in dx.iter().zip(&dn).enumerate() {
             assert!(
                 (a - b).abs() < 5e-3 * (1.0 + b.abs()),
                 "delta[{j}]: xla {a} vs native {b}"
             );
         }
+        let (mx, mn) = (rx.dmargins.to_dense(), rn.dmargins.to_dense());
         for i in (0..n).step_by(37) {
             assert!(
-                (rx.dmargins[i] - rn.dmargins[i]).abs() < 5e-3 * (1.0 + rn.dmargins[i].abs()),
+                (mx[i] - mn[i]).abs() < 5e-3 * (1.0 + mn[i].abs()),
                 "dmargins[{i}]"
             );
         }
@@ -235,10 +250,11 @@ mod tests {
                 (w as f32, z as f32)
             })
             .unzip();
-        let rx = xe.sweep(&w, &z, &vec![0f32; 150], 0.3, 1e-6).unwrap();
+        let rx = xe.sweep_alloc(&w, &z, &vec![0f32; 150], 0.3, 1e-6).unwrap();
         let mut ne = NativeEngine::new(shard, n);
-        let rn = ne.sweep(&w, &z, &vec![0f32; 150], 0.3, 1e-6).unwrap();
-        for (j, (a, b)) in rx.delta_local.iter().zip(&rn.delta_local).enumerate() {
+        let rn = ne.sweep_alloc(&w, &z, &vec![0f32; 150], 0.3, 1e-6).unwrap();
+        let (dx, dn) = (rx.delta_local.to_dense(), rn.delta_local.to_dense());
+        for (j, (a, b)) in dx.iter().zip(&dn).enumerate() {
             assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "delta[{j}]: {a} vs {b}");
         }
     }

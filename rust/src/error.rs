@@ -1,35 +1,54 @@
-//! Crate-wide error type.
+//! Crate-wide error type. Hand-rolled `Display`/`Error` impls — the default
+//! build is dependency-free (no `thiserror` in the vendored set).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every layer of the coordinator.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum DlrError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla/pjrt error: {0}")]
+    Io(std::io::Error),
     Xla(String),
-
-    #[error("parse error at {context}: {message}")]
     Parse { context: String, message: String },
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("solver error: {0}")]
     Solver(String),
-
-    #[error("cli error: {0}")]
     Cli(String),
 }
 
+impl fmt::Display for DlrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DlrError::Io(e) => write!(f, "io error: {e}"),
+            DlrError::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            DlrError::Parse { context, message } => {
+                write!(f, "parse error at {context}: {message}")
+            }
+            DlrError::Config(m) => write!(f, "config error: {m}"),
+            DlrError::Data(m) => write!(f, "data error: {m}"),
+            DlrError::Artifact(m) => write!(f, "artifact error: {m}"),
+            DlrError::Solver(m) => write!(f, "solver error: {m}"),
+            DlrError::Cli(m) => write!(f, "cli error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DlrError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DlrError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DlrError {
+    fn from(e: std::io::Error) -> Self {
+        DlrError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for DlrError {
     fn from(e: xla::Error) -> Self {
         DlrError::Xla(e.to_string())
@@ -44,3 +63,23 @@ impl DlrError {
 }
 
 pub type Result<T> = std::result::Result<T, DlrError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_layer_prefix() {
+        assert!(DlrError::Config("bad".into()).to_string().contains("config error"));
+        assert!(DlrError::parse("spill", "short line")
+            .to_string()
+            .contains("parse error at spill"));
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: DlrError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("io error"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

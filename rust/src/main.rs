@@ -40,7 +40,7 @@ fn app() -> App {
                 .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
                 .opt("lambda", "L1 strength", Some("1.0"))
                 .opt("machines", "simulated machines M", Some("4"))
-                .opt("engine", "xla | native", Some("xla"))
+                .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("max-iter", "iteration cap", Some("100"))
                 .opt("tol", "relative-decrease tolerance", Some("1e-5"))
                 .opt("seed", "rng seed", Some("1"))
@@ -56,7 +56,7 @@ fn app() -> App {
                 .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
                 .opt("steps", "lambda halvings", Some("20"))
                 .opt("machines", "simulated machines M", Some("4"))
-                .opt("engine", "xla | native", Some("xla"))
+                .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("max-iter", "per-lambda iteration cap", Some("50"))
                 .opt("tol", "relative-decrease tolerance", Some("1e-5"))
                 .opt("seed", "rng seed", Some("1"))

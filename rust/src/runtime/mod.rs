@@ -13,19 +13,24 @@
 
 pub mod artifacts;
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 
 pub use artifacts::{default_artifacts_dir, Manifest, UnitMeta};
 
+#[cfg(feature = "xla")]
 use crate::error::{DlrError, Result};
 
 /// A per-thread PJRT context: client + compiled-executable cache.
+/// Only available with the `xla` feature (vendored PJRT bindings).
+#[cfg(feature = "xla")]
 pub struct XlaContext {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl XlaContext {
     /// Build a CPU PJRT client and attach the manifest at `dir`.
     pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
@@ -88,11 +93,13 @@ impl XlaContext {
 }
 
 /// f32 vector literal.
+#[cfg(feature = "xla")]
 pub fn lit_vec(data: &[f32]) -> xla::Literal {
     xla::Literal::vec1(data)
 }
 
 /// Row-major (rows × cols) f32 matrix literal.
+#[cfg(feature = "xla")]
 pub fn lit_mat(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
     debug_assert_eq!(data.len(), rows * cols);
     xla::Literal::vec1(data)
@@ -108,7 +115,7 @@ pub fn pad_to(src: &[f32], n_pad: usize) -> Vec<f32> {
     out
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
 

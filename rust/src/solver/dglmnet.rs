@@ -12,23 +12,30 @@
 //!
 //! Convergence carries the paper's two sparsity precautions: the line
 //! search's full-step shortcut, and the final α = 1 retry before stopping.
+//!
+//! Step 3 is sparsity-aware end to end: workers hand back sparse Δβ / Δm
+//! contributions, the tree AllReduce merges them (charging the ledger for
+//! the actual sparse payload — see `cluster::allreduce`), and every buffer
+//! involved lives in a per-solver [`FitScratch`] that is reused across
+//! iterations, so the steady-state hot path performs no heap allocation.
 
 use std::sync::Arc;
 
-use crate::cluster::allreduce::TreeAllReduce;
+use crate::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
 use crate::cluster::network::NetworkLedger;
 use crate::cluster::partition::FeaturePartition;
 use crate::config::TrainConfig;
 use crate::data::dataset::Dataset;
 use crate::data::shuffle::{shard_in_memory, FeatureShard};
-use crate::data::sparse::CsrMatrix;
+use crate::data::sparse::{CsrMatrix, SparseVec};
+use crate::engine::SweepResult;
 use crate::error::{DlrError, Result};
 use crate::runtime::default_artifacts_dir;
 use crate::solver::leader::LeaderCompute;
 use crate::solver::line_search::{line_search, LineSearchOutcome};
 use crate::solver::model::SparseModel;
 use crate::solver::pool::WorkerPool;
-use crate::solver::quadratic::{grad_dot_delta, l1_at_alpha, support_union};
+use crate::solver::quadratic::{grad_dot_delta, l1_at_alpha, support_union_into};
 use crate::util::math::l1_norm;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
@@ -44,6 +51,8 @@ pub struct IterationRecord {
     pub max_worker_secs: f64,
     /// simulated AllReduce seconds (network model).
     pub sim_comm_secs: f64,
+    /// bytes this iteration's AllReduces moved (per-iteration delta, *not*
+    /// cumulative since fit start).
     pub comm_bytes: u64,
     pub wall_secs: f64,
 }
@@ -71,6 +80,27 @@ impl FitResult {
     }
 }
 
+/// Reusable per-solver buffers for the iteration hot path. Everything here
+/// is cleared-and-refilled each iteration; capacities persist, so after the
+/// first iteration the loop allocates nothing.
+#[derive(Debug, Default)]
+struct FitScratch {
+    /// per-machine sweep outputs (sparse buffers round-trip via the pool)
+    results: Vec<SweepResult>,
+    /// per-machine Δβ contributions remapped to global feature ids
+    db_contribs: Vec<SparseVec>,
+    /// tree-allreduce intermediate state
+    ar: AllReduceScratch,
+    /// merged sparse Δβ / Δm
+    delta_sp: SparseVec,
+    dmargins_sp: SparseVec,
+    /// dense views for the line search / apply step
+    delta: Vec<f32>,
+    dmargins: Vec<f32>,
+    /// support union of β and Δβ
+    support: Vec<u32>,
+}
+
 /// The distributed solver: owns the simulated cluster and the warmstart
 /// state (β, margins) across `fit_lambda` calls — exactly what Alg 5 needs.
 pub struct DGlmnetSolver {
@@ -84,6 +114,7 @@ pub struct DGlmnetSolver {
     leader: LeaderCompute,
     allreduce: TreeAllReduce,
     ledger: NetworkLedger,
+    scratch: FitScratch,
     /// Current coefficients (warmstart state).
     pub beta: Vec<f32>,
     /// Current margins βᵀx_i, kept consistent with `beta`.
@@ -142,6 +173,12 @@ impl DGlmnetSolver {
         }
         let pool = WorkerPool::spawn(cfg, shards, n, artifacts.clone())?;
         let leader = LeaderCompute::new(cfg, &ds.y, &artifacts)?;
+        let allreduce = if cfg.dense_allreduce {
+            // threshold 0 forces the dense wire format (ablation baseline)
+            TreeAllReduce::with_density_threshold(cfg.network, 0.0)
+        } else {
+            TreeAllReduce::new(cfg.network)
+        };
         Ok(Self {
             cfg: cfg.clone(),
             n,
@@ -151,8 +188,9 @@ impl DGlmnetSolver {
             partition,
             pool,
             leader,
-            allreduce: TreeAllReduce::new(cfg.network),
+            allreduce,
             ledger: NetworkLedger::new(),
+            scratch: FitScratch::default(),
             beta: vec![0f32; p],
             margins: vec![0f32; n],
         })
@@ -219,6 +257,7 @@ impl DGlmnetSolver {
 
         for iter in 1..=self.cfg.max_iter {
             let iter_sw = Stopwatch::start();
+            let iter_start_bytes = self.ledger.total_bytes();
 
             // ---- step 1: leader stats (w, z, loss) ----------------------
             let (w, z, loss) = timers.time("stats", || self.leader.stats(&self.margins))?;
@@ -229,32 +268,64 @@ impl DGlmnetSolver {
             let z = Arc::new(z);
 
             // ---- step 2: parallel sweeps --------------------------------
-            let results = timers.time("sweep", || {
-                self.pool.sweep_all(&w, &z, &self.beta, lam_f, nu_f)
+            timers.time("sweep", || {
+                self.pool
+                    .sweep_all(&w, &z, &self.beta, lam_f, nu_f, &mut self.scratch.results)
             })?;
-            let max_worker = results
+            let max_worker = self
+                .scratch
+                .results
                 .iter()
                 .map(|r| r.compute_secs)
                 .fold(0f64, f64::max);
             sim_compute += max_worker;
 
-            // ---- step 3: AllReduce Δm and Δβ ----------------------------
-            let (dmargins, delta, comm_secs) = timers.time("allreduce", || {
-                let dm_contribs: Vec<Vec<f32>> =
-                    results.iter().map(|r| r.dmargins.clone()).collect();
-                let (dmargins, o1) = self.allreduce.sum(&dm_contribs, &self.ledger);
-                let db_contribs: Vec<Vec<f32>> = results
-                    .iter()
-                    .enumerate()
-                    .map(|(k, r)| self.pool.scatter_delta(k, &r.delta_local, self.p))
-                    .collect();
-                let (delta, o2) = self.allreduce.sum(&db_contribs, &self.ledger);
-                (dmargins, delta, o1.simulated_secs + o2.simulated_secs)
+            // ---- step 3: AllReduce Δm and Δβ (sparse wire format) -------
+            let comm_secs = timers.time("allreduce", || {
+                let o1 = self.allreduce.sum_sparse_into(
+                    self.scratch.results.iter().map(|r| &r.dmargins),
+                    self.n,
+                    &self.ledger,
+                    &mut self.scratch.ar,
+                    &mut self.scratch.dmargins_sp,
+                );
+                // remap shard-local Δβ to global ids — O(nnz) per machine
+                self.scratch
+                    .db_contribs
+                    .resize_with(self.scratch.results.len(), SparseVec::default);
+                for (k, r) in self.scratch.results.iter().enumerate() {
+                    self.pool.delta_to_global(
+                        k,
+                        &r.delta_local,
+                        self.p,
+                        &mut self.scratch.db_contribs[k],
+                    );
+                }
+                let o2 = self.allreduce.sum_sparse_into(
+                    self.scratch.db_contribs.iter(),
+                    self.p,
+                    &self.ledger,
+                    &mut self.scratch.ar,
+                    &mut self.scratch.delta_sp,
+                );
+                o1.simulated_secs + o2.simulated_secs
             });
             sim_comm += comm_secs;
+            let iter_comm_bytes = self.ledger.total_bytes() - iter_start_bytes;
 
-            let delta_norm = l1_norm(&delta);
-            let support = support_union(&self.beta, &delta);
+            // densify the merged updates into the reusable line-search views
+            self.scratch.dmargins.resize(self.n, 0.0);
+            self.scratch.dmargins.fill(0.0);
+            self.scratch.dmargins_sp.scatter_into(&mut self.scratch.dmargins);
+            self.scratch.delta.resize(self.p, 0.0);
+            self.scratch.delta.fill(0.0);
+            self.scratch.delta_sp.scatter_into(&mut self.scratch.delta);
+            let delta = &self.scratch.delta;
+            let dmargins = &self.scratch.dmargins;
+
+            let delta_norm = l1_norm(delta);
+            support_union_into(&self.beta, delta, &mut self.scratch.support);
+            let support = &self.scratch.support;
 
             // Degenerate update (λ ≥ λ_max with zero warmstart): stop now.
             if delta_norm == 0.0 {
@@ -265,7 +336,7 @@ impl DGlmnetSolver {
                     fast_path: true,
                     max_worker_secs: max_worker,
                     sim_comm_secs: comm_secs,
-                    comm_bytes: self.ledger.total_bytes() - ledger_start_bytes,
+                    comm_bytes: iter_comm_bytes,
                     wall_secs: iter_sw.elapsed_secs(),
                 });
                 converged = true;
@@ -274,29 +345,22 @@ impl DGlmnetSolver {
             }
 
             // ---- step 4: line search ------------------------------------
-            let grad_dot = grad_dot_delta(&self.margins, &dmargins, &self.y);
+            let grad_dot = grad_dot_delta(&self.margins, dmargins, &self.y);
             let beta_ref = &self.beta;
-            let delta_ref = &delta;
-            let support_ref = &support;
-            let l1_at = move |a: f64| l1_at_alpha(beta_ref, delta_ref, support_ref, a, lambda);
+            let l1_at = move |a: f64| l1_at_alpha(beta_ref, delta, support, a, lambda);
             let leader = &mut self.leader;
             let margins_ref = &self.margins;
-            let dmargins_ref = &dmargins;
             let mut losses =
-                |alphas: &[f64]| leader.line_losses(margins_ref, dmargins_ref, alphas);
+                |alphas: &[f64]| leader.line_losses(margins_ref, dmargins, alphas);
             let LineSearchOutcome { alpha, f_new, fast_path, .. } = timers
                 .time("line_search", || {
                     line_search(&mut losses, &l1_at, f0, grad_dot, 0.0, &self.cfg.line_search)
                 })?;
 
-            // ---- step 5: apply ------------------------------------------
+            // ---- step 5: apply (sparse: only the touched coordinates) ---
             let af = alpha as f32;
-            for &j in &support {
-                self.beta[j as usize] += af * delta[j as usize];
-            }
-            for i in 0..self.n {
-                self.margins[i] += af * dmargins[i];
-            }
+            self.scratch.delta_sp.add_scaled_into(&mut self.beta, af);
+            self.scratch.dmargins_sp.add_scaled_into(&mut self.margins, af);
 
             trace.push(IterationRecord {
                 iter,
@@ -305,7 +369,7 @@ impl DGlmnetSolver {
                 fast_path,
                 max_worker_secs: max_worker,
                 sim_comm_secs: comm_secs,
-                comm_bytes: self.ledger.total_bytes() - ledger_start_bytes,
+                comm_bytes: iter_comm_bytes,
                 wall_secs: iter_sw.elapsed_secs(),
             });
 
@@ -323,19 +387,21 @@ impl DGlmnetSolver {
                     // would α = 1 not increase the objective too much?
                     let loss_full = self.leader.line_losses(
                         &self.margins,
-                        &dmargins,
+                        &self.scratch.dmargins,
                         &[1.0 - alpha],
                     )?[0];
                     let f_full = loss_full
-                        + l1_at_alpha(&self.beta, &delta, &support, 1.0 - alpha, lambda);
+                        + l1_at_alpha(
+                            &self.beta,
+                            &self.scratch.delta,
+                            &self.scratch.support,
+                            1.0 - alpha,
+                            lambda,
+                        );
                     if f_full <= f_new + self.cfg.alpha_one_slack * f_new.abs().max(1.0) {
                         let rem = (1.0 - alpha) as f32;
-                        for &j in &support {
-                            self.beta[j as usize] += rem * delta[j as usize];
-                        }
-                        for i in 0..self.n {
-                            self.margins[i] += rem * dmargins[i];
-                        }
+                        self.scratch.delta_sp.add_scaled_into(&mut self.beta, rem);
+                        self.scratch.dmargins_sp.add_scaled_into(&mut self.margins, rem);
                         f_prev = Some(f_full);
                     }
                 }
@@ -454,5 +520,43 @@ mod tests {
         assert!(fit.comm_bytes > 0);
         assert!(fit.sim_comm_secs > 0.0);
         assert!(fit.sim_compute_secs > 0.0);
+    }
+
+    #[test]
+    fn iteration_comm_bytes_are_per_iteration_deltas() {
+        // the trace records each iteration's own traffic; the per-fit total
+        // is their sum (regression test for the cumulative-bytes bug)
+        let ds = synth::dna_like(400, 40, 5, 37);
+        let mut s = DGlmnetSolver::from_dataset(&ds, &native_cfg(4, 0.5)).unwrap();
+        let fit = s.fit(None).unwrap();
+        assert!(fit.iterations >= 2, "need a multi-iteration fit");
+        let sum: u64 = fit.trace.iter().map(|r| r.comm_bytes).sum();
+        assert_eq!(sum, fit.comm_bytes);
+        // every iteration with a non-zero update moves some bytes, and no
+        // single iteration carries the whole fit's traffic
+        assert!(fit.trace[0].comm_bytes > 0);
+        assert!(fit.trace[0].comm_bytes < fit.comm_bytes);
+    }
+
+    #[test]
+    fn sparse_and_dense_allreduce_reach_identical_objectives() {
+        // the sparse wire format changes accounting, never math: merges run
+        // in the same deterministic tree order as the dense path
+        let ds = synth::webspam_like(500, 2_000, 10, 38);
+        let lam = crate::solver::regpath::lambda_max(&ds) / 4.0;
+        let mut sparse = DGlmnetSolver::from_dataset(&ds, &native_cfg(4, lam)).unwrap();
+        let mut dense_cfg = native_cfg(4, lam);
+        dense_cfg.dense_allreduce = true;
+        let mut dense = DGlmnetSolver::from_dataset(&ds, &dense_cfg).unwrap();
+        let fs = sparse.fit(None).unwrap();
+        let fd = dense.fit(None).unwrap();
+        assert_eq!(fs.iterations, fd.iterations);
+        assert!(
+            (fs.objective - fd.objective).abs() <= 1e-9 * fd.objective.abs().max(1.0),
+            "sparse {} vs dense {}",
+            fs.objective,
+            fd.objective
+        );
+        assert!(fs.comm_bytes <= fd.comm_bytes, "sparse must never cost more");
     }
 }

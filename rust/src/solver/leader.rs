@@ -1,10 +1,12 @@
 //! Leader-side compute: working statistics (paper eq. (4)) and the O(n)
 //! loss part of the line search (Alg 3). Runs the AOT `stats` /
-//! `line_search` kernels through PJRT, or the native fallback — selected by
-//! the solver's engine kind so the whole hot path stays on one stack.
+//! `line_search` kernels through PJRT (with the `xla` feature), or the
+//! native fallback — selected by the solver's engine kind so the whole hot
+//! path stays on one stack.
 
 use crate::config::{EngineKind, TrainConfig};
 use crate::error::Result;
+#[cfg(feature = "xla")]
 use crate::runtime::{lit_vec, XlaContext};
 use crate::solver::quadratic::stats_native;
 use crate::util::math::log1pexp;
@@ -14,6 +16,7 @@ pub enum LeaderCompute {
     Native {
         y: Vec<f32>,
     },
+    #[cfg(feature = "xla")]
     Xla {
         ctx: XlaContext,
         stats_unit: String,
@@ -34,12 +37,14 @@ pub enum LeaderCompute {
 impl LeaderCompute {
     pub fn new(cfg: &TrainConfig, y: &[f32], artifacts_dir: &std::path::Path) -> Result<Self> {
         // Auto: the leader kernels are plain O(n) elementwise work — use XLA
-        // whenever artifacts exist and n fits a compiled tile.
+        // whenever the feature is compiled in, artifacts exist, and n fits a
+        // compiled tile.
         let kind = match cfg.engine {
             EngineKind::Auto => {
-                let ok = crate::runtime::Manifest::load(artifacts_dir)
-                    .and_then(|m| m.pick_n(y.len()))
-                    .is_ok();
+                let ok = cfg!(feature = "xla")
+                    && crate::runtime::Manifest::load(artifacts_dir)
+                        .and_then(|m| m.pick_n(y.len()))
+                        .is_ok();
                 if ok {
                     EngineKind::Xla
                 } else {
@@ -51,6 +56,13 @@ impl LeaderCompute {
         match kind {
             EngineKind::Auto => unreachable!(),
             EngineKind::Native => Ok(LeaderCompute::Native { y: y.to_vec() }),
+            #[cfg(not(feature = "xla"))]
+            EngineKind::Xla => Err(crate::error::DlrError::Artifact(
+                "XLA leader requested but this build has no `xla` feature \
+                 (rebuild with --features xla and run `make artifacts`)"
+                    .into(),
+            )),
+            #[cfg(feature = "xla")]
             EngineKind::Xla => {
                 let mut ctx = XlaContext::new(artifacts_dir)?;
                 let n = y.len();
@@ -99,6 +111,7 @@ impl LeaderCompute {
     pub fn stats(&mut self, margins: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f64)> {
         match self {
             LeaderCompute::Native { y } => Ok(stats_native(margins, y)),
+            #[cfg(feature = "xla")]
             LeaderCompute::Xla { ctx, stats_unit, n, buf_a, y_lit, mask_lit, .. } => {
                 buf_a[..*n].copy_from_slice(margins);
                 let m_lit = lit_vec(buf_a);
@@ -136,6 +149,7 @@ impl LeaderCompute {
                         .sum()
                 })
                 .collect()),
+            #[cfg(feature = "xla")]
             LeaderCompute::Xla {
                 ctx, ls_unit, n, k, buf_a, buf_b, y_lit, mask_lit, ..
             } => {
@@ -162,12 +176,13 @@ impl LeaderCompute {
     pub fn engine_name(&self) -> &'static str {
         match self {
             LeaderCompute::Native { .. } => "native",
+            #[cfg(feature = "xla")]
             LeaderCompute::Xla { .. } => "xla",
         }
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
     use crate::config::TrainConfig;

@@ -4,6 +4,11 @@
 //! like the paper's one-process-per-machine deployment. The leader talks to
 //! workers over channels; all Δ-state flows back through the (simulated)
 //! AllReduce in the driver.
+//!
+//! The hot path is allocation-free at steady state: the shard-local β
+//! gather buffers and the sparse [`SweepResult`] output buffers round-trip
+//! through the request/reply channels, so every iteration reuses the same
+//! heap blocks instead of allocating `O(M·(n + p))` per sweep.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -11,6 +16,7 @@ use std::thread::JoinHandle;
 
 use crate::config::TrainConfig;
 use crate::data::shuffle::FeatureShard;
+use crate::data::sparse::SparseVec;
 use crate::engine::{build_engine, SweepResult};
 use crate::error::{DlrError, Result};
 
@@ -18,7 +24,10 @@ enum Request {
     Sweep {
         w: Arc<Vec<f32>>,
         z: Arc<Vec<f32>>,
+        /// reusable shard-local β gather (round-trips back in the reply)
         beta_local: Vec<f32>,
+        /// reusable sparse output buffers (round-trip back in the reply)
+        out: SweepResult,
         lam: f32,
         nu: f32,
     },
@@ -27,6 +36,8 @@ enum Request {
 
 struct Reply {
     machine: usize,
+    /// the gather buffer, returned for reuse
+    beta_local: Vec<f32>,
     result: Result<SweepResult>,
 }
 
@@ -38,6 +49,8 @@ pub struct WorkerPool {
     /// Global feature ids per machine (ascending within a machine).
     pub global_cols: Vec<Vec<u32>>,
     pub engine_names: Vec<String>,
+    /// Reusable per-machine β gather buffers.
+    beta_bufs: Vec<Vec<f32>>,
 }
 
 impl WorkerPool {
@@ -79,9 +92,11 @@ impl WorkerPool {
                 };
                 while let Ok(req) = rx.recv() {
                     match req {
-                        Request::Sweep { w, z, beta_local, lam, nu } => {
-                            let result = engine.sweep(&w, &z, &beta_local, lam, nu);
-                            if reply_tx.send(Reply { machine, result }).is_err() {
+                        Request::Sweep { w, z, beta_local, mut out, lam, nu } => {
+                            let result = engine
+                                .sweep(&w, &z, &beta_local, lam, nu, &mut out)
+                                .map(|()| out);
+                            if reply_tx.send(Reply { machine, beta_local, result }).is_err() {
                                 return; // leader gone
                             }
                         }
@@ -99,7 +114,14 @@ impl WorkerPool {
                 .map_err(|_| DlrError::Solver("worker died during startup".into()))?;
             engine_names[machine] = res?;
         }
-        Ok(Self { txs, rx: reply_rx, handles, global_cols, engine_names })
+        Ok(Self {
+            txs,
+            rx: reply_rx,
+            handles,
+            global_cols,
+            engine_names,
+            beta_bufs: vec![Vec::new(); m],
+        })
     }
 
     pub fn machines(&self) -> usize {
@@ -108,49 +130,70 @@ impl WorkerPool {
 
     /// One parallel sweep across all machines (Alg 4 steps 1–2). `beta` is
     /// the global coefficient vector; each worker receives its shard-local
-    /// gather. Returns results indexed by machine.
+    /// gather. Results land in `out`, indexed by machine; the caller owns
+    /// (and should reuse) `out` — its sparse buffers round-trip through the
+    /// workers, so steady-state sweeps don't allocate.
     pub fn sweep_all(
-        &self,
+        &mut self,
         w: &Arc<Vec<f32>>,
         z: &Arc<Vec<f32>>,
         beta: &[f32],
         lam: f32,
         nu: f32,
-    ) -> Result<Vec<SweepResult>> {
+        out: &mut Vec<SweepResult>,
+    ) -> Result<()> {
         let m = self.machines();
+        out.resize_with(m, SweepResult::default);
         for (k, tx) in self.txs.iter().enumerate() {
-            let beta_local: Vec<f32> = self.global_cols[k]
-                .iter()
-                .map(|&g| beta[g as usize])
-                .collect();
+            let mut beta_local = std::mem::take(&mut self.beta_bufs[k]);
+            beta_local.clear();
+            beta_local.extend(self.global_cols[k].iter().map(|&g| beta[g as usize]));
             tx.send(Request::Sweep {
                 w: Arc::clone(w),
                 z: Arc::clone(z),
                 beta_local,
+                out: std::mem::take(&mut out[k]),
                 lam,
                 nu,
             })
             .map_err(|_| DlrError::Solver(format!("worker {k} hung up")))?;
         }
-        let mut out: Vec<Option<SweepResult>> = (0..m).map(|_| None).collect();
+        let mut first_err = None;
         for _ in 0..m {
             let reply = self
                 .rx
                 .recv()
                 .map_err(|_| DlrError::Solver("all workers hung up".into()))?;
-            out[reply.machine] = Some(reply.result?);
+            self.beta_bufs[reply.machine] = reply.beta_local;
+            match reply.result {
+                Ok(res) => out[reply.machine] = res,
+                Err(e) => first_err = Some(first_err.unwrap_or(e)),
+            }
         }
-        Ok(out.into_iter().map(Option::unwrap).collect())
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
     }
 
-    /// Scatter shard-local deltas into a dense global vector per machine
-    /// (the allreduce contribution of Alg 4 step 3/4).
-    pub fn scatter_delta(&self, machine: usize, delta_local: &[f32], p: usize) -> Vec<f32> {
-        let mut out = vec![0f32; p];
-        for (&g, &d) in self.global_cols[machine].iter().zip(delta_local) {
-            out[g as usize] = d;
+    /// Remap a shard-local sparse Δβ to global feature ids (the allreduce
+    /// contribution of Alg 4 step 3/4) — O(nnz), replacing the old
+    /// `scatter_delta`'s O(p) densification. `out` is reused by the caller.
+    pub fn delta_to_global(
+        &self,
+        machine: usize,
+        delta_local: &SparseVec,
+        p: usize,
+        out: &mut SparseVec,
+    ) {
+        out.clear(p);
+        let cols = &self.global_cols[machine];
+        debug_assert_eq!(delta_local.dim, cols.len());
+        for (local, v) in delta_local.iter() {
+            // global ids ascend with local ids inside a machine, so pushes
+            // stay sorted
+            out.push(cols[local as usize], v);
         }
-        out
     }
 }
 
@@ -184,7 +227,7 @@ mod tests {
             .build();
         let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 40, 3, None);
         let shards = shard_in_memory(&ds.x, &part);
-        let pool = WorkerPool::spawn(&cfg, shards, n, "artifacts".into()).unwrap();
+        let mut pool = WorkerPool::spawn(&cfg, shards, n, "artifacts".into()).unwrap();
         assert_eq!(pool.machines(), 3);
         assert_eq!(pool.engine_names, vec!["native"; 3]);
 
@@ -192,22 +235,22 @@ mod tests {
         let (w, z, _) = stats_native(&margins, &ds.y);
         let (w, z) = (Arc::new(w), Arc::new(z));
         let beta = vec![0f32; 40];
-        let results = pool.sweep_all(&w, &z, &beta, 0.2, 1e-6).unwrap();
+        let mut results = Vec::new();
+        pool.sweep_all(&w, &z, &beta, 0.2, 1e-6, &mut results).unwrap();
         assert_eq!(results.len(), 3);
         // sum of dmargins across machines must equal the full delta margin
         let mut dm_sum = vec![0f64; n];
         for r in &results {
-            for (i, &d) in r.dmargins.iter().enumerate() {
-                dm_sum[i] += d as f64;
+            for (i, d) in r.dmargins.iter() {
+                dm_sum[i as usize] += d as f64;
             }
         }
-        // scatter deltas and recompute margins delta from scratch
+        // remap deltas to global ids and recompute margins delta from scratch
         let mut delta = vec![0f32; 40];
+        let mut global = SparseVec::new(0);
         for (k, r) in results.iter().enumerate() {
-            let dg = pool.scatter_delta(k, &r.delta_local, 40);
-            for j in 0..40 {
-                delta[j] += dg[j];
-            }
+            pool.delta_to_global(k, &r.delta_local, 40, &mut global);
+            global.add_scaled_into(&mut delta, 1.0);
         }
         let want = ds.x.margins(&delta);
         for i in 0..n {
@@ -216,21 +259,35 @@ mod tests {
     }
 
     #[test]
-    fn pool_survives_multiple_rounds() {
+    fn pool_survives_multiple_rounds_reusing_buffers() {
         let ds = synth::dna_like(100, 20, 4, 22);
         let cfg = TrainConfig::builder()
             .machines(2)
             .engine(EngineKind::Native)
             .build();
         let part = FeaturePartition::build(PartitionStrategy::Contiguous, 20, 2, None);
-        let pool = WorkerPool::spawn(&cfg, shard_in_memory(&ds.x, &part), 100, "artifacts".into())
-            .unwrap();
+        let mut pool =
+            WorkerPool::spawn(&cfg, shard_in_memory(&ds.x, &part), 100, "artifacts".into())
+                .unwrap();
         let margins = vec![0f32; 100];
         let (w, z, _) = stats_native(&margins, &ds.y);
         let (w, z) = (Arc::new(w), Arc::new(z));
+        let beta = vec![0f32; 20];
+        let mut results = Vec::new();
+        let mut first: Option<Vec<SweepResult>> = None;
         for _ in 0..5 {
-            let r = pool.sweep_all(&w, &z, &vec![0f32; 20], 0.1, 1e-6).unwrap();
-            assert_eq!(r.len(), 2);
+            pool.sweep_all(&w, &z, &beta, 0.1, 1e-6, &mut results).unwrap();
+            assert_eq!(results.len(), 2);
+            match &first {
+                None => first = Some(results.clone()),
+                Some(f) => {
+                    // same inputs through recycled buffers => same outputs
+                    for (a, b) in f.iter().zip(&results) {
+                        assert_eq!(a.delta_local, b.delta_local);
+                        assert_eq!(a.dmargins, b.dmargins);
+                    }
+                }
+            }
         }
     }
 }

@@ -39,10 +39,20 @@ pub fn grad_dot_delta(margins: &[f32], dmargins: &[f32], y: &[f32]) -> f64 {
 /// Support-union of β and Δβ (global feature ids) — the only coordinates the
 /// line search's L1 term needs (O(nnz(β) + nnz(Δβ)) per evaluation).
 pub fn support_union(beta: &[f32], delta: &[f32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    support_union_into(beta, delta, &mut out);
+    out
+}
+
+/// [`support_union`] into a caller-reused buffer (the solver's per-iteration
+/// hot path keeps one across iterations to avoid reallocating).
+pub fn support_union_into(beta: &[f32], delta: &[f32], out: &mut Vec<u32>) {
     debug_assert_eq!(beta.len(), delta.len());
-    (0..beta.len() as u32)
-        .filter(|&j| beta[j as usize] != 0.0 || delta[j as usize] != 0.0)
-        .collect()
+    out.clear();
+    out.extend(
+        (0..beta.len() as u32)
+            .filter(|&j| beta[j as usize] != 0.0 || delta[j as usize] != 0.0),
+    );
 }
 
 /// λ‖β + αΔβ‖₁ evaluated over the support union.

@@ -12,7 +12,8 @@ use dglmnet::data::synth;
 use dglmnet::solver::{lambda_max, DGlmnetSolver};
 
 fn artifacts_present() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    // the XLA engine needs both the compiled feature and the AOT artifacts
+    cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists()
 }
 
 fn cfg(engine: EngineKind, m: usize, lam: f64) -> TrainConfig {
