@@ -7,6 +7,11 @@
 //! tree AllReduce → leader line search → metrics.
 //!
 //! Run: `cargo run --release --example online_vs_batch`
+//!
+//! Both legs run on the unified `Estimator` API: the d-GLMNET path goes
+//! through the estimator-generic `RegPath` runner, and each grid combo is a
+//! `DistributedOnlineEstimator` scored per pass by a `FitObserver` — the
+//! head-to-head comparison has no solver-specific code paths.
 
 use dglmnet::baselines::grid::{grid_frontier, online_grid_search};
 use dglmnet::config::{EngineKind, PathConfig, TrainConfig};

@@ -1,63 +1,108 @@
-//! Quickstart: generate a small dataset, train d-GLMNET at one λ on a
-//! 4-machine simulated cluster (XLA engine — the AOT Pallas hot path),
-//! evaluate on held-out data.
+//! Quickstart for the unified training API: fit d-GLMNET through the
+//! `Estimator` trait with a live observer, then re-run the same fit through
+//! the stepwise `FitDriver` — checkpointing mid-flight and resuming from
+//! the saved file — and verify both paths land on the same objective.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first; falls back to the native engine if
-//! artifacts are missing.)
+//! (uses the native engine unless `--features xla` + `make artifacts`).
 
-use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::config::TrainConfig;
 use dglmnet::data::synth;
 use dglmnet::metrics;
-use dglmnet::solver::{lambda_max, DGlmnetSolver};
+use dglmnet::solver::{
+    lambda_max, Checkpoint, DGlmnetSolver, Estimator, FitControl, FitObserver, FitStep,
+    StepOutcome,
+};
+
+/// A custom observer: print a progress line every iteration, stop early if
+/// the objective stalls hard (the trait-object API the regpath/grid/bench
+/// layers use for every solver).
+struct Progress {
+    last: Option<f64>,
+}
+
+impl FitObserver for Progress {
+    fn on_iteration(&mut self, step: &FitStep<'_>) -> FitControl {
+        let r = step.record;
+        println!(
+            "  iter {:>3}  f = {:>10.4}  alpha = {:.3}  comm = {} B",
+            r.iter, r.objective, r.alpha, r.comm_bytes
+        );
+        let stalled = self
+            .last
+            .is_some_and(|prev| (prev - r.objective).abs() < 1e-12 * prev.abs());
+        self.last = Some(r.objective);
+        if stalled {
+            FitControl::Stop
+        } else {
+            FitControl::Continue
+        }
+    }
+}
 
 fn main() -> dglmnet::Result<()> {
     // 1. A dna-like synthetic problem: 6k examples, 200 features, short rows.
     let ds = synth::dna_like(6_000, 200, 10, 42);
     let split = ds.split(0.8, 42);
+    let lam = lambda_max(&split.train) / 64.0;
     println!(
-        "dataset: {} train / {} test examples, {} features, {} nnz",
+        "dataset: {} train / {} test examples, {} features; lambda = {lam:.4}",
         split.train.n_examples(),
         split.test.n_examples(),
-        split.train.n_features(),
-        split.train.x.nnz()
+        split.train.n_features()
     );
 
-    // 2. Configure the simulated cluster. The XLA engine runs the AOT
-    //    Pallas cd_block_sweep through PJRT inside every worker thread.
-    let engine = if cfg!(feature = "xla")
-        && std::path::Path::new("artifacts/manifest.json").exists()
-    {
-        EngineKind::Xla
-    } else {
-        eprintln!("xla feature/artifacts missing -> native engine (run `make artifacts`)");
-        EngineKind::Native
-    };
-    let lam = lambda_max(&split.train) / 64.0;
-    let cfg = TrainConfig::builder()
-        .machines(4)
-        .engine(engine)
-        .lambda(lam)
-        .max_iter(50)
-        .verbose(true)
-        .build();
-
-    // 3. Fit.
+    // 2. One-shot fit through the Estimator trait (works identically for
+    //    the shotgun / truncated-gradient / distributed-online baselines).
+    let cfg = TrainConfig::builder().machines(4).lambda(lam).max_iter(50).build();
     let mut solver = DGlmnetSolver::from_dataset(&split.train, &cfg)?;
-    let fit = solver.fit(None)?;
+    println!("\n[1/2] Estimator::fit with a custom observer:");
+    let fit = Estimator::fit(&mut solver, &split.train, &mut Progress { last: None })?;
 
-    // 4. Evaluate.
     let margins = fit.model.predict_margins(&split.test.x);
-    println!("\n--- results @ lambda = {lam:.4} ---");
+    println!("\n--- results ({}) ---", solver.name());
     println!("iterations     : {} (converged = {})", fit.iterations, fit.converged);
     println!("objective      : {:.4}", fit.objective);
     println!("nnz(beta)      : {}", fit.nnz());
     println!("test AUPRC     : {:.4}", metrics::auprc(&margins, &split.test.y));
     println!("test ROC-AUC   : {:.4}", metrics::roc_auc(&margins, &split.test.y));
-    println!("test accuracy  : {:.4}", metrics::accuracy(&margins, &split.test.y));
     println!(
-        "simulated comm : {:.4}s over {} bytes ({} machines, tree allreduce)",
+        "simulated comm : {:.4}s over {} bytes ({} machines, sparse tree allreduce)",
         fit.sim_comm_secs, fit.comm_bytes, cfg.machines
     );
+
+    // 3. The same fit, stepwise: the caller owns the loop, checkpoints at
+    //    iteration 5, then resumes from the file in a fresh solver — the
+    //    resumed run reproduces the uninterrupted objective exactly.
+    println!("\n[2/2] stepwise FitDriver with checkpoint/resume:");
+    let ckpt_path = std::env::temp_dir().join("dglmnet_quickstart.ckpt.json");
+    let mut first = DGlmnetSolver::from_dataset(&split.train, &cfg)?;
+    let mut driver = first.driver(lam);
+    loop {
+        match driver.step()? {
+            StepOutcome::Progress(rec) if rec.iter == 5 => {
+                driver.checkpoint().save(&ckpt_path)?;
+                println!("  checkpoint written at iteration 5 -> {}", ckpt_path.display());
+                break; // simulate the process dying here
+            }
+            StepOutcome::Progress(_) => {}
+            StepOutcome::Finished { .. } => break,
+        }
+    }
+
+    // "fresh process": a brand-new solver, state restored from the file
+    let ck = Checkpoint::load(&ckpt_path)?;
+    let mut resumed = DGlmnetSolver::from_dataset(&split.train, &cfg)?;
+    let fit2 = resumed.driver_from_checkpoint(&ck)?.run(&mut dglmnet::solver::NoopObserver)?;
+    println!(
+        "  resumed at iter {} -> finished at iter {} with f = {:.6}",
+        ck.iter, fit2.iterations, fit2.objective
+    );
+    println!(
+        "  one-shot f = {:.6}  |Δ| = {:.2e}",
+        fit.objective,
+        (fit.objective - fit2.objective).abs()
+    );
+    std::fs::remove_file(&ckpt_path).ok();
     Ok(())
 }

@@ -4,10 +4,10 @@
 //!
 //! Run: `cargo run --release --example regpath_sweep`
 
-use dglmnet::config::{EngineKind, PathConfig, TrainConfig};
+use dglmnet::config::{EngineKind, TrainConfig};
 use dglmnet::data::synth;
 use dglmnet::report::{ascii_scatter, write_series_csv, Series};
-use dglmnet::solver::RegPath;
+use dglmnet::solver::{lambda_max, DGlmnetSolver, RegPath};
 
 fn main() -> dglmnet::Result<()> {
     let ds = synth::webspam_like(3_000, 8_000, 40, 7);
@@ -24,9 +24,14 @@ fn main() -> dglmnet::Result<()> {
         .engine(engine)
         .max_iter(40)
         .build();
-    let path_cfg = PathConfig { steps: 12, ..Default::default() };
 
-    let path = RegPath::run(&split.train, &split.test, &cfg, &path_cfg)?;
+    // the estimator-generic path runner: build the λ ladder explicitly and
+    // hand the solver over as `&mut dyn Estimator` — swap in a baseline
+    // estimator and this sweep runs the identical protocol
+    let lam_max = lambda_max(&split.train);
+    let lambdas: Vec<f64> = (1..=12).map(|i| lam_max * 0.5f64.powi(i)).collect();
+    let mut solver = DGlmnetSolver::from_dataset(&split.train, &cfg)?;
+    let path = RegPath::run_estimator(&mut solver, &split.train, &split.test, &lambdas)?;
 
     println!("\nlambda      nnz     AUPRC    AUC      iters  wall(s)");
     for p in &path.points {

@@ -6,7 +6,7 @@
 
 use dglmnet::config::{EngineKind, TrainConfig};
 use dglmnet::data::synth;
-use dglmnet::solver::{lambda_max, DGlmnetSolver};
+use dglmnet::solver::{lambda_max, DGlmnetSolver, Estimator, NoopObserver};
 
 fn main() -> dglmnet::Result<()> {
     let ds = synth::webspam_like(4_000, 4_000, 30, 99);
@@ -28,7 +28,9 @@ fn main() -> dglmnet::Result<()> {
             .max_iter(60)
             .build();
         let mut solver = DGlmnetSolver::from_dataset(&split.train, &cfg)?;
-        let fit = solver.fit(None)?;
+        // the uniform Estimator interface — swap in any baseline estimator
+        // here and the ablation loop is unchanged
+        let fit = Estimator::fit(&mut solver, &split.train, &mut NoopObserver)?;
         println!(
             "{:<5} {:<6} {:<12.4}  {:<6} {:<15.4} {:<12.6} {}",
             m,

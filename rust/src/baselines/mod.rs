@@ -10,11 +10,19 @@
 //!   2011), used by the A1 ablation to demonstrate the update-conflict
 //!   problem that motivates d-GLMNET's line-search design.
 
+//! Every baseline also implements the crate-wide
+//! [`Estimator`](crate::solver::Estimator) trait
+//! ([`ShotgunEstimator`], [`TruncatedGradientEstimator`],
+//! [`DistributedOnlineEstimator`]), so the regularization path, the grid,
+//! the bench harness and the CLI can run them head-to-head against
+//! d-GLMNET through `&mut dyn Estimator`.
+
 pub mod distributed_online;
 pub mod grid;
 pub mod shotgun;
 pub mod truncated_gradient;
 
-pub use distributed_online::DistributedOnlineLearner;
-pub use grid::{online_grid_search, GridPoint};
-pub use truncated_gradient::TruncatedGradientLearner;
+pub use distributed_online::{DistributedOnlineEstimator, DistributedOnlineLearner};
+pub use grid::{fit_scored, online_grid_search, GridPoint, PassEval};
+pub use shotgun::ShotgunEstimator;
+pub use truncated_gradient::{TruncatedGradientEstimator, TruncatedGradientLearner};

@@ -4,12 +4,23 @@
 //! parallel **from the same β** (no line search, no conflict resolution).
 //! With correlated features, large P causes update conflicts and can
 //! diverge — the exact phenomenon (§1) that motivates d-GLMNET's combine-
-//! then-line-search design. Used by ablation A1.
+//! then-line-search design. Used by ablation A1, and exposed as a
+//! head-to-head competitor through [`ShotgunEstimator`] (which, being the
+//! one stochastic [`Estimator`] in the crate, also demonstrates the RNG
+//! half of the [`Checkpoint`] contract: its checkpoints carry the
+//! xoshiro256++ state, so a resumed run draws the same coordinate sequence
+//! the uninterrupted run would have).
 
 use crate::data::dataset::Dataset;
 use crate::data::sparse::CscMatrix;
+use crate::error::{DlrError, Result};
+use crate::solver::dglmnet::{FitResult, IterationRecord};
+use crate::solver::driver::Checkpoint;
+use crate::solver::estimator::{Estimator, FitControl, FitObserver, FitStep};
+use crate::solver::model::SparseModel;
 use crate::util::math::{soft_threshold, working_stats};
 use crate::util::rng::Xoshiro256;
+use crate::util::timer::{PhaseTimer, Stopwatch};
 
 /// Outcome of a shotgun run.
 #[derive(Debug, Clone)]
@@ -17,6 +28,61 @@ pub struct ShotgunResult {
     pub beta: Vec<f32>,
     pub objective_trace: Vec<f64>,
     pub diverged: bool,
+}
+
+/// Full objective f(β) = L(margins) + λ‖β‖₁ at the current state.
+fn shotgun_objective(margins: &[f32], y: &[f32], beta: &[f32], lambda: f64) -> f64 {
+    crate::util::math::logloss_sum(margins, y) + lambda * crate::util::math::l1_norm(beta)
+}
+
+/// One shotgun round: draw `par` coordinates, compute their Newton updates
+/// from the *shared* β, apply them all simultaneously (the conflicting
+/// part). Returns the objective after the round.
+fn shotgun_round(
+    ds: &Dataset,
+    csc: &CscMatrix,
+    lambda: f64,
+    par: usize,
+    rng: &mut Xoshiro256,
+    beta: &mut [f32],
+    margins: &mut [f32],
+) -> f64 {
+    let p = beta.len();
+    // P coordinates drawn without replacement, updated from the SAME β
+    let coords = rng.sample_indices(p, par.min(p));
+    // second-order info at the shared point
+    let (w, z): (Vec<f64>, Vec<f64>) = margins
+        .iter()
+        .zip(&ds.y)
+        .map(|(&m, &y)| working_stats(y as f64, m as f64))
+        .unzip();
+    let mut updates = Vec::with_capacity(coords.len());
+    for &j in &coords {
+        let (rows, vals) = csc.col(j);
+        let mut a = 1e-6;
+        let mut c = 0f64;
+        for (&i, &v) in rows.iter().zip(vals) {
+            let i = i as usize;
+            let x = v as f64;
+            a += w[i] * x * x;
+            // residual at the shared β: r_i = z_i (delta = 0 locally)
+            c += w[i] * z[i] * x;
+        }
+        c += beta[j] as f64 * a;
+        let s = soft_threshold(c, lambda) / a;
+        updates.push((j, (s - beta[j] as f64) as f32));
+    }
+    // apply all updates simultaneously (the conflicting part)
+    for &(j, d) in &updates {
+        if d != 0.0 {
+            beta[j] += d;
+            let (rows, vals) = csc.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                margins[i as usize] += d * v;
+            }
+        }
+    }
+    shotgun_objective(margins, &ds.y, beta, lambda)
 }
 
 /// Run shotgun with parallelism `par` for `rounds` rounds.
@@ -34,50 +100,12 @@ pub fn shotgun(
     let mut margins = vec![0f32; n];
     let mut rng = Xoshiro256::new(seed);
     let mut trace = Vec::with_capacity(rounds);
-    let f_at = |margins: &[f32], beta: &[f32]| {
-        crate::util::math::logloss_sum(margins, &ds.y)
-            + lambda * crate::util::math::l1_norm(beta)
-    };
-    let f0 = f_at(&margins, &beta);
+    let f0 = shotgun_objective(&margins, &ds.y, &beta, lambda);
     trace.push(f0);
     let mut diverged = false;
 
     for _round in 0..rounds {
-        // P coordinates drawn without replacement, updated from the SAME β
-        let coords = rng.sample_indices(p, par.min(p));
-        // second-order info at the shared point
-        let (w, z): (Vec<f64>, Vec<f64>) = margins
-            .iter()
-            .zip(&ds.y)
-            .map(|(&m, &y)| working_stats(y as f64, m as f64))
-            .unzip();
-        let mut updates = Vec::with_capacity(coords.len());
-        for &j in &coords {
-            let (rows, vals) = csc.col(j);
-            let mut a = 1e-6;
-            let mut c = 0f64;
-            for (&i, &v) in rows.iter().zip(vals) {
-                let i = i as usize;
-                let x = v as f64;
-                a += w[i] * x * x;
-                // residual at the shared β: r_i = z_i (delta = 0 locally)
-                c += w[i] * z[i] * x;
-            }
-            c += beta[j] as f64 * a;
-            let s = soft_threshold(c, lambda) / a;
-            updates.push((j, (s - beta[j] as f64) as f32));
-        }
-        // apply all updates simultaneously (the conflicting part)
-        for &(j, d) in &updates {
-            if d != 0.0 {
-                beta[j] += d;
-                let (rows, vals) = csc.col(j);
-                for (&i, &v) in rows.iter().zip(vals) {
-                    margins[i as usize] += d * v;
-                }
-            }
-        }
-        let f = f_at(&margins, &beta);
+        let f = shotgun_round(ds, csc, lambda, par, &mut rng, &mut beta, &mut margins);
         trace.push(f);
         if !f.is_finite() || f > 10.0 * f0 {
             diverged = true;
@@ -85,6 +113,201 @@ pub fn shotgun(
         }
     }
     ShotgunResult { beta, objective_trace: trace, diverged }
+}
+
+/// [`Estimator`] adapter for shotgun: one fit = up to `rounds` rounds from
+/// the current state (warmstart; [`Estimator::reset`] re-seeds the RNG and
+/// zeroes β), one observer callback per round. Warmstarted fits must pass
+/// the same dataset the current state was trained on — the same contract as
+/// `DGlmnetSolver`'s trait fit; call `reset` before switching datasets.
+/// Divergence (non-finite objective, or growth past 10× the fit's starting
+/// objective — the same guard as [`shotgun`]) ends the fit with
+/// `converged = false`.
+///
+/// [`ShotgunEstimator::checkpoint`] / [`ShotgunEstimator::resume`]
+/// round-trip (β, margins, round counter, RNG state) through the same
+/// [`Checkpoint`] JSON the d-GLMNET driver uses — resuming reproduces the
+/// uninterrupted coordinate sequence exactly.
+pub struct ShotgunEstimator {
+    pub lambda: f64,
+    pub parallelism: usize,
+    /// Rounds per `fit` call.
+    pub rounds: usize,
+    pub seed: u64,
+    beta: Vec<f32>,
+    margins: Vec<f32>,
+    rng: Xoshiro256,
+    completed_rounds: usize,
+    last_objective: Option<f64>,
+    /// Cached by-feature transpose of the fitted dataset (rebuilt after
+    /// `reset` or when the dataset's nnz changes, shared across the
+    /// warmstarted fits of a λ ladder). Warmstarted `fit` calls must reuse
+    /// the dataset the state was trained on — see [`Estimator::fit`] docs.
+    csc: Option<CscMatrix>,
+    csc_nnz: usize,
+}
+
+impl ShotgunEstimator {
+    pub fn new(lambda: f64, parallelism: usize, rounds: usize, seed: u64) -> Self {
+        Self {
+            lambda,
+            parallelism,
+            rounds,
+            seed,
+            beta: Vec::new(),
+            margins: Vec::new(),
+            rng: Xoshiro256::new(seed),
+            completed_rounds: 0,
+            last_objective: None,
+            csc: None,
+            csc_nnz: 0,
+        }
+    }
+
+    /// Resumable state after the last completed round (RNG included).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            lambda: self.lambda,
+            n: self.margins.len(),
+            p: self.beta.len(),
+            iter: self.completed_rounds,
+            f_prev: self.last_objective,
+            sim_compute_secs: 0.0,
+            sim_comm_secs: 0.0,
+            comm_bytes: 0,
+            wall_secs: 0.0,
+            beta: self.beta.clone(),
+            margins: self.margins.clone(),
+            rng: Some(self.rng.state()),
+        }
+    }
+
+    /// Restore a [`ShotgunEstimator::checkpoint`]: β, margins and the RNG
+    /// stream continue bit-exactly where the checkpoint left off.
+    pub fn resume(&mut self, ck: &Checkpoint) -> Result<()> {
+        let state = ck.rng.ok_or_else(|| {
+            DlrError::Solver("checkpoint carries no RNG state (not a shotgun checkpoint?)".into())
+        })?;
+        self.lambda = ck.lambda;
+        self.beta = ck.beta.clone();
+        self.margins = ck.margins.clone();
+        self.rng = Xoshiro256::from_state(state);
+        self.completed_rounds = ck.iter;
+        self.last_objective = ck.f_prev;
+        self.csc = None; // the next fit re-derives it from its dataset
+        Ok(())
+    }
+}
+
+impl Estimator for ShotgunEstimator {
+    fn name(&self) -> &'static str {
+        "shotgun"
+    }
+
+    fn fit(&mut self, ds: &Dataset, observer: &mut dyn FitObserver) -> Result<FitResult> {
+        let (n, p) = (ds.n_examples(), ds.n_features());
+        if self.beta.len() != p || self.margins.len() != n {
+            if !self.beta.is_empty() || !self.margins.is_empty() {
+                return Err(DlrError::Solver(format!(
+                    "dataset shape ({n} x {p}) does not match shotgun state ({} x {})",
+                    self.margins.len(),
+                    self.beta.len()
+                )));
+            }
+            self.beta = vec![0f32; p];
+            self.margins = vec![0f32; n];
+        }
+        if self.csc.is_none() || self.csc_nnz != ds.x.nnz() {
+            self.csc = Some(ds.x.to_csc());
+            self.csc_nnz = ds.x.nnz();
+        }
+        let csc = self.csc.take().expect("csc cached above");
+        let lambda = self.lambda;
+        // divergence reference (same guard as `shotgun()`): the objective at
+        // this fit's starting state
+        let f0 = shotgun_objective(&self.margins, &ds.y, &self.beta, lambda);
+        let mut trace: Vec<IterationRecord> = Vec::new();
+        let mut stopped = false;
+        let mut diverged = false;
+        for k in 1..=self.rounds {
+            let sw = Stopwatch::start();
+            let f = shotgun_round(
+                ds,
+                &csc,
+                lambda,
+                self.parallelism,
+                &mut self.rng,
+                &mut self.beta,
+                &mut self.margins,
+            );
+            self.completed_rounds += 1;
+            self.last_objective = Some(f);
+            let wall = sw.elapsed_secs();
+            let record = IterationRecord {
+                iter: self.completed_rounds,
+                objective: f,
+                alpha: 1.0,
+                fast_path: false,
+                max_worker_secs: wall,
+                sim_comm_secs: 0.0,
+                comm_bytes: 0,
+                wall_secs: wall,
+            };
+            trace.push(record.clone());
+            if !f.is_finite() || f > 10.0 * f0 {
+                diverged = true;
+            }
+            // every round is reported, the diverged/final round included;
+            // a Stop on the final scheduled round changes nothing (the fit
+            // completed its budget — matching the FitDriver contract)
+            let beta_ref = &self.beta;
+            let model_fn = move || SparseModel::from_dense(beta_ref, lambda);
+            let control = observer.on_iteration(&FitStep::new(&record, &model_fn));
+            if diverged {
+                break;
+            }
+            if control == FitControl::Stop {
+                if k < self.rounds {
+                    stopped = true;
+                }
+                break;
+            }
+        }
+        self.csc = Some(csc);
+        Ok(FitResult {
+            lambda,
+            objective: self.last_objective.unwrap_or(f64::INFINITY),
+            iterations: trace.len(),
+            converged: !stopped && !diverged && !trace.is_empty(),
+            model: SparseModel::from_dense(&self.beta, lambda),
+            sim_compute_secs: trace.iter().map(|r| r.max_worker_secs).sum(),
+            sim_comm_secs: 0.0,
+            comm_bytes: 0,
+            trace,
+            timers: PhaseTimer::new(),
+        })
+    }
+
+    fn model(&self) -> SparseModel {
+        SparseModel::from_dense(&self.beta, self.lambda)
+    }
+
+    fn reset(&mut self) {
+        self.beta.clear();
+        self.margins.clear();
+        self.rng = Xoshiro256::new(self.seed);
+        self.completed_rounds = 0;
+        self.last_objective = None;
+        self.csc = None;
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn set_lambda(&mut self, lambda: f64) {
+        self.lambda = lambda;
+    }
 }
 
 #[cfg(test)]
@@ -131,5 +354,45 @@ mod tests {
             "serial {s_last} vs wild {w_last} (diverged = {})",
             wild.diverged
         );
+    }
+
+    #[test]
+    fn estimator_matches_raw_shotgun() {
+        // the trait path draws the same coordinate stream as shotgun()
+        let ds = synth::dna_like(300, 24, 4, 83);
+        let csc = ds.x.to_csc();
+        let raw = shotgun(&ds, &csc, 0.3, 4, 30, 5);
+        let mut est = ShotgunEstimator::new(0.3, 4, 30, 5);
+        let fit = est
+            .fit(&ds, &mut crate::solver::estimator::NoopObserver)
+            .unwrap();
+        assert_eq!(fit.iterations, 30);
+        assert_eq!(raw.beta, est.model().to_dense());
+        assert_eq!(
+            raw.objective_trace.last().unwrap().to_bits(),
+            fit.objective.to_bits()
+        );
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_the_rng_stream() {
+        // 4 + 6 rounds through a checkpoint == 10 uninterrupted rounds
+        let ds = synth::dna_like(250, 20, 4, 84);
+        let mut whole = ShotgunEstimator::new(0.2, 3, 10, 11);
+        let fit_whole = whole
+            .fit(&ds, &mut crate::solver::estimator::NoopObserver)
+            .unwrap();
+        let mut head = ShotgunEstimator::new(0.2, 3, 4, 11);
+        head.fit(&ds, &mut crate::solver::estimator::NoopObserver).unwrap();
+        let ck = head.checkpoint();
+        // fresh estimator, as a fresh process would build it
+        let mut tail = ShotgunEstimator::new(0.2, 3, 6, 11);
+        tail.resume(&ck).unwrap();
+        let fit_tail = tail
+            .fit(&ds, &mut crate::solver::estimator::NoopObserver)
+            .unwrap();
+        assert_eq!(whole.model().to_dense(), tail.model().to_dense());
+        assert_eq!(fit_whole.objective.to_bits(), fit_tail.objective.to_bits());
+        assert_eq!(fit_tail.trace.last().unwrap().iter, 10);
     }
 }

@@ -1,7 +1,14 @@
 //! Micro/meso benchmark harness (no `criterion` in the vendored set):
-//! warmup + timed samples, robust stats, and aligned reporting.
+//! warmup + timed samples, robust stats, aligned reporting, and the
+//! estimator-generic [`bench_fit`] that times any solver end-to-end
+//! through `&mut dyn Estimator`.
 
 use std::time::Instant;
+
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::solver::dglmnet::FitResult;
+use crate::solver::estimator::{fit_cold, Estimator, NoopObserver};
 
 /// Summary statistics over the timed samples (seconds).
 #[derive(Debug, Clone)]
@@ -79,6 +86,31 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
     BenchStats::from_samples(name.to_string(), times)
 }
 
+/// Time cold fits of any [`Estimator`] on `ds`: `warmup` unmeasured +
+/// `samples` measured reset-and-fit runs, identical protocol for every
+/// solver (no solver-specific branches). Returns the last fit's result
+/// alongside the timing stats.
+pub fn bench_fit(
+    name: &str,
+    est: &mut dyn Estimator,
+    ds: &Dataset,
+    warmup: usize,
+    samples: usize,
+) -> Result<(FitResult, BenchStats)> {
+    for _ in 0..warmup {
+        fit_cold(est, ds, &mut NoopObserver)?;
+    }
+    let mut times = Vec::with_capacity(samples.max(1));
+    let mut last = None;
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        last = Some(fit_cold(est, ds, &mut NoopObserver)?);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let fit = last.expect("at least one sample runs");
+    Ok((fit, BenchStats::from_samples(name.to_string(), times)))
+}
+
 /// Measure a one-shot closure (end-to-end runs too slow to repeat).
 pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchStats) {
     let t0 = Instant::now();
@@ -126,5 +158,17 @@ mod tests {
         let (v, s) = bench_once("x", || 41 + 1);
         assert_eq!(v, 42);
         assert_eq!(s.samples.len(), 1);
+    }
+
+    #[test]
+    fn bench_fit_times_any_estimator() {
+        use crate::baselines::shotgun::ShotgunEstimator;
+        use crate::data::synth;
+        let ds = synth::dna_like(150, 15, 3, 91);
+        let mut est = ShotgunEstimator::new(0.5, 1, 5, 1);
+        let (fit, stats) = bench_fit("shotgun", &mut est, &ds, 1, 2).unwrap();
+        assert_eq!(fit.iterations, 5);
+        assert_eq!(stats.samples.len(), 2);
+        assert!(fit.objective.is_finite());
     }
 }

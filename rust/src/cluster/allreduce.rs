@@ -99,27 +99,57 @@ impl TreeAllReduce {
     /// charging the ledger as a binary-tree reduce + broadcast. Pairwise
     /// reduction order is fixed (machine 2k + 2k+1), making the float sum
     /// deterministic. Compatibility wrapper over the scratch-based path —
-    /// hot loops should hold an [`AllReduceScratch`] and call
-    /// [`TreeAllReduce::sum_sparse_into`] instead.
+    /// per-pass loops should hold an [`AllReduceScratch`] and call
+    /// [`TreeAllReduce::sum_dense_into`] (or, for sparse payloads,
+    /// [`TreeAllReduce::sum_sparse_into`]) instead.
     pub fn sum(
         &self,
         contributions: &[Vec<f32>],
         ledger: &NetworkLedger,
     ) -> (Vec<f32>, AllReduceOutcome) {
-        assert!(!contributions.is_empty());
-        let len = contributions[0].len();
-        for c in contributions {
-            assert_eq!(c.len(), len, "ragged allreduce contribution");
-        }
-        // dense wrapper always uses the dense wire format (threshold 0)
-        let dense_self = Self::with_density_threshold(self.model, 0.0);
-        let sparse: Vec<SparseVec> =
-            contributions.iter().map(|c| SparseVec::from_dense(c)).collect();
         let mut scratch = AllReduceScratch::default();
-        let mut out = SparseVec::new(len);
-        let outcome =
-            dense_self.sum_sparse_into(sparse.iter(), len, ledger, &mut scratch, &mut out);
-        (out.to_dense(), outcome)
+        let mut out = Vec::new();
+        let outcome = self.sum_dense_into(contributions, ledger, &mut scratch, &mut out);
+        (out, outcome)
+    }
+
+    /// Dense-wire AllReduce into a caller-reused output buffer, with all
+    /// intermediate state in `scratch` — the allocation-free call path for
+    /// callers whose contributions are already dense (the online baseline's
+    /// once-per-pass weight averaging). No sparse conversion anywhere:
+    /// contributions load straight into the f64 tree accumulators. Charges
+    /// `dim · 4` bytes per edge, identical (bytes, rounds, and bit-exact
+    /// sums) to the classic dense path [`TreeAllReduce::sum`] wraps.
+    pub fn sum_dense_into(
+        &self,
+        contributions: &[Vec<f32>],
+        ledger: &NetworkLedger,
+        scratch: &mut AllReduceScratch,
+        out: &mut Vec<f32>,
+    ) -> AllReduceOutcome {
+        assert!(!contributions.is_empty(), "allreduce needs at least one contribution");
+        let m = contributions.len();
+        let dim = contributions[0].len();
+        for c in contributions {
+            assert_eq!(c.len(), dim, "ragged allreduce contribution");
+        }
+        out.clear();
+        if m == 1 {
+            // single machine: free reduction, straight copy (f32 exact)
+            out.extend_from_slice(&contributions[0]);
+            return AllReduceOutcome::free();
+        }
+        if scratch.dense.len() < m {
+            scratch.dense.resize_with(m, Vec::new);
+        }
+        for (k, c) in contributions.iter().enumerate() {
+            let d = &mut scratch.dense[k];
+            d.clear();
+            d.extend(c.iter().map(|&v| v as f64));
+        }
+        let (root, outcome) = self.dense_tree(m, dim, ledger, scratch);
+        out.extend(scratch.dense[root].iter().map(|&v| v as f32));
+        outcome
     }
 
     /// Sum sparse `contributions` (each of logical length `dim`) into
@@ -273,6 +303,26 @@ impl TreeAllReduce {
         scratch: &mut AllReduceScratch,
         out: &mut SparseVec,
     ) -> AllReduceOutcome {
+        let (root, outcome) = self.dense_tree(m, dim, ledger, scratch);
+        out.clear(dim);
+        for (i, &v) in scratch.dense[root].iter().enumerate() {
+            if v != 0.0 {
+                out.push(i as u32, v as f32);
+            }
+        }
+        outcome
+    }
+
+    /// The shared dense tree walk over `scratch.dense[0..m]`: reduce up,
+    /// broadcast down, charging `dim · 4` bytes per edge. Leaves the merged
+    /// f64 sums in `scratch.dense[root]` and returns the root index.
+    fn dense_tree(
+        &self,
+        m: usize,
+        dim: usize,
+        ledger: &NetworkLedger,
+        scratch: &mut AllReduceScratch,
+    ) -> (usize, AllReduceOutcome) {
         let vec_bytes = (dim * std::mem::size_of::<f32>()) as u64;
         scratch.active.clear();
         scratch.active.extend(0..m);
@@ -313,13 +363,7 @@ impl TreeAllReduce {
         }
 
         let root = scratch.active[0];
-        out.clear(dim);
-        for (i, &v) in scratch.dense[root].iter().enumerate() {
-            if v != 0.0 {
-                out.push(i as u32, v as f32);
-            }
-        }
-        AllReduceOutcome { rounds, bytes_moved: bytes, simulated_secs: secs_total }
+        (root, AllReduceOutcome { rounds, bytes_moved: bytes, simulated_secs: secs_total })
     }
 }
 
@@ -423,6 +467,33 @@ mod tests {
         // log2(16)/log2(4) = 2: simulated time should grow ~2x, not 4x
         assert!(t16 / t4 < 2.6, "t4={t4} t16={t16}");
         assert!(t16 > t4);
+    }
+
+    #[test]
+    fn dense_scratch_path_matches_sum_wrapper() {
+        // the baselines' allocation-free call path: identical sums, bytes
+        // and rounds to the compat wrapper, stable across scratch reuse
+        let contribs: Vec<Vec<f32>> = (0..5)
+            .map(|k| (0..40).map(|i| ((k * 40 + i) as f32).cos()).collect())
+            .collect();
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let (want, o_want) = ar.sum(&contribs, &NetworkLedger::new());
+        let mut scratch = AllReduceScratch::default();
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            let ledger = NetworkLedger::new();
+            let o = ar.sum_dense_into(&contribs, &ledger, &mut scratch, &mut out);
+            assert_eq!(out, want);
+            assert_eq!(o.bytes_moved, o_want.bytes_moved);
+            assert_eq!(o.rounds, o_want.rounds);
+            assert_eq!(ledger.total_bytes(), o.bytes_moved);
+        }
+        // single machine stays a free reduction
+        let one = vec![vec![1.5f32, -2.0]];
+        let o = ar.sum_dense_into(&one, &NetworkLedger::new(), &mut scratch, &mut out);
+        assert_eq!(out, vec![1.5, -2.0]);
+        assert_eq!(o.rounds, 0);
+        assert_eq!(o.bytes_moved, 0);
     }
 
     #[test]

@@ -65,6 +65,32 @@ impl Default for LineSearchConfig {
     }
 }
 
+/// Hard resource budgets for one fit, enforced *between* iterations by the
+/// stepwise `FitDriver` (a budget never interrupts a running iteration).
+/// `None` means unlimited. Hitting any budget ends the fit with
+/// `converged = false` and the matching `StopReason`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FitBudget {
+    /// Wall-clock cap in seconds (includes resumed-over time).
+    pub wall_secs: Option<f64>,
+    /// Simulated-network byte cap (includes resumed-over traffic).
+    pub comm_bytes: Option<u64>,
+    /// Total-iteration cap across checkpoint/resume boundaries. Unlike
+    /// `max_iter` (which forces the α = 1 convergence retry at the cap),
+    /// this simply stops.
+    pub iterations: Option<usize>,
+}
+
+impl FitBudget {
+    pub fn unlimited() -> Self {
+        Self::default()
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        *self == Self::default()
+    }
+}
+
 /// Solver configuration (Algorithms 1–4).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -92,6 +118,8 @@ pub struct TrainConfig {
     /// Tolerated relative objective increase when retrying alpha = 1 at
     /// convergence (the second sparsity precaution of §2).
     pub alpha_one_slack: f64,
+    /// Wall-clock / comm-bytes / iteration caps (default: unlimited).
+    pub budget: FitBudget,
     pub verbose: bool,
 }
 
@@ -111,6 +139,7 @@ impl Default for TrainConfig {
             dense_allreduce: false,
             line_search: LineSearchConfig::default(),
             alpha_one_slack: 1e-4,
+            budget: FitBudget::default(),
             verbose: false,
         }
     }
@@ -144,6 +173,11 @@ impl TrainConfig {
         }
         if self.block == 0 || self.block % 8 != 0 {
             return Err(DlrError::Config("block must be a positive multiple of 8".into()));
+        }
+        if let Some(w) = self.budget.wall_secs {
+            if w.is_nan() || w < 0.0 {
+                return Err(DlrError::Config("budget.wall_secs must be >= 0".into()));
+            }
         }
         Ok(())
     }
@@ -205,6 +239,21 @@ impl TrainConfig {
         if let Some(v) = doc.get("line_search", "skip_alpha_init").and_then(|v| v.as_bool()) {
             cfg.line_search.skip_alpha_init = v;
         }
+        if let Some(v) = num("budget", "wall_secs") {
+            cfg.budget.wall_secs = Some(v);
+        }
+        if let Some(v) = num("budget", "comm_bytes") {
+            if v < 0.0 {
+                return Err(DlrError::Config("budget.comm_bytes must be >= 0".into()));
+            }
+            cfg.budget.comm_bytes = Some(v as u64);
+        }
+        if let Some(v) = num("budget", "iterations") {
+            if v < 0.0 {
+                return Err(DlrError::Config("budget.iterations must be >= 0".into()));
+            }
+            cfg.budget.iterations = Some(v as usize);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -260,6 +309,10 @@ impl TrainConfigBuilder {
     }
     pub fn line_search(mut self, v: LineSearchConfig) -> Self {
         self.0.line_search = v;
+        self
+    }
+    pub fn budget(mut self, v: FitBudget) -> Self {
+        self.0.budget = v;
         self
     }
     pub fn verbose(mut self, v: bool) -> Self {
@@ -376,5 +429,26 @@ skip_alpha_init = true
     fn from_toml_rejects_unknown_engine() {
         let doc = toml::parse("[solver]\nengine = \"gpu\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn budget_defaults_unlimited_and_loads_from_toml() {
+        assert!(TrainConfig::default().budget.is_unlimited());
+        let doc = toml::parse(
+            "[budget]\nwall_secs = 1.5\ncomm_bytes = 1000000\niterations = 25\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.budget.wall_secs, Some(1.5));
+        assert_eq!(c.budget.comm_bytes, Some(1_000_000));
+        assert_eq!(c.budget.iterations, Some(25));
+        let mut bad = TrainConfig::default();
+        bad.budget.wall_secs = Some(-1.0);
+        assert!(bad.validate().is_err());
+        // negative TOML budgets must error, not saturate to 0
+        let neg = toml::parse("[budget]\ncomm_bytes = -1\n").unwrap();
+        assert!(TrainConfig::from_toml(&neg).is_err());
+        let neg = toml::parse("[budget]\niterations = -3\n").unwrap();
+        assert!(TrainConfig::from_toml(&neg).is_err());
     }
 }

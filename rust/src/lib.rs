@@ -24,18 +24,56 @@
 //! same math (the paper's original CPU formulation) and doubles as a
 //! cross-check oracle.
 //!
-//! ## Quickstart
+//! ## Quickstart — the `Estimator` API
+//!
+//! Every solver (d-GLMNET and the three §4.3 baselines) trains through one
+//! interface: [`solver::Estimator`]. Observers stream per-iteration
+//! progress and can stop the fit early:
 //!
 //! ```no_run
-//! use dglmnet::data::synth;
 //! use dglmnet::config::TrainConfig;
-//! use dglmnet::solver::DGlmnetSolver;
+//! use dglmnet::data::synth;
+//! use dglmnet::solver::{DGlmnetSolver, Estimator, RecordingObserver};
 //!
 //! let ds = synth::epsilon_like(2_000, 200, 7).split(0.8, 7);
 //! let cfg = TrainConfig::builder().machines(4).lambda(2.0).build();
 //! let mut solver = DGlmnetSolver::from_dataset(&ds.train, &cfg).unwrap();
-//! let fit = solver.fit(None).unwrap();
-//! println!("nnz = {}, f = {}", fit.nnz(), fit.objective);
+//! let mut obs = RecordingObserver::default();
+//! let fit = Estimator::fit(&mut solver, &ds.train, &mut obs).unwrap();
+//! println!("nnz = {}, f = {} ({} iterations observed)",
+//!          fit.nnz(), fit.objective, obs.records.len());
+//! ```
+//!
+//! ## Stepwise control — `FitDriver`
+//!
+//! When you need to own the loop (checkpointing, budgets, live dashboards),
+//! drive iterations yourself; stepping to convergence is bit-identical to
+//! the one-shot fit:
+//!
+//! ```no_run
+//! use dglmnet::config::TrainConfig;
+//! use dglmnet::data::synth;
+//! use dglmnet::solver::{DGlmnetSolver, StepOutcome};
+//!
+//! let ds = synth::dna_like(2_000, 200, 10, 7);
+//! let cfg = TrainConfig::builder().machines(4).build();
+//! let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+//! let mut driver = solver.driver(0.5);
+//! loop {
+//!     match driver.step().unwrap() {
+//!         StepOutcome::Progress(rec) => {
+//!             if rec.iter % 10 == 0 {
+//!                 driver.checkpoint().save("fit.ckpt.json").unwrap();
+//!             }
+//!         }
+//!         StepOutcome::Finished { .. } => break,
+//!     }
+//! }
+//! let fit = driver.finish();
+//! // later, even in a fresh process:
+//! //   let ck = dglmnet::solver::Checkpoint::load("fit.ckpt.json")?;
+//! //   let mut driver = solver.driver_from_checkpoint(&ck)?;
+//! println!("converged = {} at f = {}", fit.converged, fit.objective);
 //! ```
 
 pub mod baselines;

@@ -6,13 +6,19 @@
 use std::process::ExitCode;
 
 use dglmnet::baselines::grid::online_grid_search;
+use dglmnet::baselines::{
+    DistributedOnlineEstimator, ShotgunEstimator, TruncatedGradientEstimator,
+};
 use dglmnet::cli::{App, CommandSpec, ParsedArgs};
 use dglmnet::config::{EngineKind, PathConfig, TrainConfig};
 use dglmnet::data::{dataset::Dataset, libsvm, synth};
 use dglmnet::error::{DlrError, Result};
 use dglmnet::metrics;
 use dglmnet::report::Table;
-use dglmnet::solver::{DGlmnetSolver, RegPath, SparseModel};
+use dglmnet::solver::{
+    fit_cold, Checkpoint, DGlmnetSolver, Estimator, FitResult, NoopObserver, RegPath,
+    SparseModel, StepOutcome,
+};
 
 fn app() -> App {
     App::new("dglmnet", "distributed coordinate descent for L1-regularized logistic regression (Trofimov & Genkin, 2014)")
@@ -38,11 +44,23 @@ fn app() -> App {
                 .opt("examples", "synthetic examples", Some("10000"))
                 .opt("features", "synthetic features", Some("400"))
                 .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
-                .opt("lambda", "L1 strength", Some("1.0"))
+                .opt("solver", "dglmnet | shotgun | truncgrad | online", Some("dglmnet"))
+                .opt("lambda", "L1 strength (objective scale)", Some("1.0"))
                 .opt("machines", "simulated machines M", Some("4"))
                 .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("max-iter", "iteration cap", Some("100"))
                 .opt("tol", "relative-decrease tolerance", Some("1e-5"))
+                .opt("passes", "online/truncgrad passes", Some("10"))
+                .opt("rounds", "shotgun rounds", Some("200"))
+                .opt("parallelism", "shotgun parallel updates P", Some("8"))
+                .opt("learning-rate", "online/truncgrad learning rate", Some("0.3"))
+                .opt("decay", "online/truncgrad per-pass decay", Some("0.7"))
+                .opt("max-secs", "wall-clock budget (dglmnet)", None)
+                .opt("max-comm-bytes", "simulated comm budget (dglmnet)", None)
+                .opt("budget-iters", "hard iteration budget (dglmnet)", None)
+                .opt("checkpoint-out", "save a resumable checkpoint here (dglmnet)", None)
+                .opt("checkpoint-every", "checkpoint every k iterations", Some("10"))
+                .opt("resume", "resume a dglmnet fit from this checkpoint", None)
                 .opt("seed", "rng seed", Some("1"))
                 .opt("model-out", "save fitted model here", None)
                 .flag("verbose", "per-iteration log"),
@@ -119,6 +137,15 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     if let Some(t) = args.get_f64("tol")? {
         cfg.tol = t;
     }
+    if let Some(w) = args.get_f64("max-secs")? {
+        cfg.budget.wall_secs = Some(w);
+    }
+    if let Some(b) = args.get_u64("max-comm-bytes")? {
+        cfg.budget.comm_bytes = Some(b);
+    }
+    if let Some(i) = args.get_usize("budget-iters")? {
+        cfg.budget.iterations = Some(i);
+    }
     cfg.verbose = args.get_flag("verbose");
     cfg.validate()?;
     Ok(cfg)
@@ -172,28 +199,109 @@ fn cmd_transform(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &ParsedArgs) -> Result<()> {
-    let ds = load_or_generate(args)?;
-    let cfg = train_config(args)?;
-    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
-    let mut solver = DGlmnetSolver::from_dataset(&split.train, &cfg)?;
-    let fit = solver.fit(None)?;
-    let margins = fit.model.predict_margins(&split.test.x);
+fn print_fit(name: &str, lambda: f64, fit: &FitResult, test: &Dataset) {
+    let margins = fit.model.predict_margins(&test.x);
     let mut t = Table::new(
-        format!("fit @ lambda = {:.5}", cfg.lambda),
-        &["iters", "converged", "objective", "nnz", "test AUPRC", "test AUC", "sim comm (s)", "bytes"],
+        format!("{name} fit @ lambda = {lambda:.5}"),
+        &["solver", "iters", "converged", "objective", "nnz", "test AUPRC", "test AUC", "sim comm (s)", "bytes"],
     );
     t.add_row(vec![
+        name.to_string(),
         fit.iterations.to_string(),
         fit.converged.to_string(),
         format!("{:.5}", fit.objective),
         fit.nnz().to_string(),
-        format!("{:.4}", metrics::auprc(&margins, &split.test.y)),
-        format!("{:.4}", metrics::roc_auc(&margins, &split.test.y)),
+        format!("{:.4}", metrics::auprc(&margins, &test.y)),
+        format!("{:.4}", metrics::roc_auc(&margins, &test.y)),
         format!("{:.4}", fit.sim_comm_secs),
         fit.comm_bytes.to_string(),
     ]);
     t.print();
+}
+
+/// The d-GLMNET train path drives the stepwise `FitDriver` directly — this
+/// is the checkpoint/resume/budget workflow the new API exists for.
+fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
+    let cfg = train_config(args)?;
+    let mut solver = DGlmnetSolver::from_dataset(train, &cfg)?;
+    let lambda = cfg.lambda;
+    let mut driver = match args.get_str("resume") {
+        Some(path) => {
+            let ck = Checkpoint::load(path)?;
+            println!("resuming from {path} (iteration {})", ck.iter);
+            solver.driver_from_checkpoint(&ck)?
+        }
+        None => solver.driver(lambda),
+    };
+    let ckpt_out = args.get_str("checkpoint-out");
+    let every = args.get_usize("checkpoint-every")?.unwrap_or(10).max(1);
+    loop {
+        match driver.step()? {
+            StepOutcome::Progress(rec) => {
+                if let Some(path) = ckpt_out {
+                    if rec.iter % every == 0 {
+                        driver.checkpoint().save(path)?;
+                    }
+                }
+            }
+            StepOutcome::Finished { reason, .. } => {
+                if let Some(path) = ckpt_out {
+                    driver.checkpoint().save(path)?;
+                    println!("checkpoint written to {path} ({reason:?})");
+                }
+                break;
+            }
+        }
+    }
+    Ok(driver.finish())
+}
+
+fn train_baseline(kind: &str, args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
+    let lambda = args.get_f64("lambda")?.unwrap_or(1.0);
+    let seed = args.get_u64("seed")?.unwrap_or(1);
+    let passes = args.get_usize("passes")?.unwrap_or(10);
+    let lr = args.get_f64("learning-rate")?.unwrap_or(0.3);
+    let decay = args.get_f64("decay")?.unwrap_or(0.7);
+    let machines = args.get_usize("machines")?.unwrap_or(4);
+    let parallelism = args.get_usize("parallelism")?.unwrap_or(8);
+    let rounds = args.get_usize("rounds")?.unwrap_or(200);
+    // the dglmnet path validates through TrainConfig; validate the baseline
+    // knobs here so bad flags fail as config errors, not panics
+    if lambda < 0.0 {
+        return Err(DlrError::Cli("--lambda must be >= 0".into()));
+    }
+    if machines == 0 || passes == 0 || parallelism == 0 || rounds == 0 {
+        return Err(DlrError::Cli(
+            "--machines, --passes, --parallelism and --rounds must be >= 1".into(),
+        ));
+    }
+    if lr <= 0.0 || decay <= 0.0 || decay > 1.0 {
+        return Err(DlrError::Cli(
+            "--learning-rate must be > 0 and --decay in (0, 1]".into(),
+        ));
+    }
+    let mut est: Box<dyn Estimator> = match kind {
+        "shotgun" => Box::new(ShotgunEstimator::new(lambda, parallelism, rounds, seed)),
+        "truncgrad" => {
+            Box::new(TruncatedGradientEstimator::new(lr, decay, lambda, passes, seed))
+        }
+        "online" => Box::new(DistributedOnlineEstimator::new(
+            machines, lr, decay, lambda, passes, seed,
+        )),
+        other => return Err(DlrError::Cli(format!("unknown solver '{other}'"))),
+    };
+    fit_cold(est.as_mut(), train, &mut NoopObserver)
+}
+
+fn cmd_train(args: &ParsedArgs) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
+    let kind = args.get_str("solver").unwrap_or("dglmnet").to_string();
+    let fit = match kind.as_str() {
+        "dglmnet" => train_dglmnet(args, &split.train)?,
+        other => train_baseline(other, args, &split.train)?,
+    };
+    print_fit(&kind, fit.lambda, &fit, &split.test);
     if let Some(path) = args.get_str("model-out") {
         fit.model.save(path)?;
         println!("model saved to {path}");

@@ -1,4 +1,4 @@
-//! The d-GLMNET driver — paper Algorithm 1 (overall procedure) fused with
+//! The d-GLMNET solver — paper Algorithm 1 (overall procedure) fused with
 //! Algorithm 4 (the distributed implementation):
 //!
 //! ```text
@@ -10,14 +10,23 @@
 //!   5. β += αΔβ ; margins += αΔm
 //! ```
 //!
+//! The iteration body itself lives in [`FitDriver::step`] — this type owns
+//! the simulated cluster, the warmstart state (β, margins), and the
+//! reusable `FitScratch` buffers, and exposes three ways to train:
+//!
+//! * [`DGlmnetSolver::driver`] — the stepwise API: callers own the loop
+//!   (observers, checkpoint/resume, budgets).
+//! * [`Estimator::fit`] — the uniform trait interface shared with the
+//!   baselines (one fit at `cfg.lambda` from the current state).
+//! * [`DGlmnetSolver::fit`] / [`DGlmnetSolver::fit_lambda`] — the original
+//!   one-shot entry points, kept as thin wrappers over the driver.
+//!
 //! Convergence carries the paper's two sparsity precautions: the line
 //! search's full-step shortcut, and the final α = 1 retry before stopping.
-//!
-//! Step 3 is sparsity-aware end to end: workers hand back sparse Δβ / Δm
-//! contributions, the tree AllReduce merges them (charging the ledger for
-//! the actual sparse payload — see `cluster::allreduce`), and every buffer
-//! involved lives in a per-solver [`FitScratch`] that is reused across
-//! iterations, so the steady-state hot path performs no heap allocation.
+//! Step 3 is sparsity-aware end to end (see `cluster::allreduce`), and
+//! every per-iteration buffer — including the leader's w/z working vectors
+//! — lives in `FitScratch`, so the steady-state hot path performs no heap
+//! allocation.
 
 use std::sync::Arc;
 
@@ -31,15 +40,15 @@ use crate::data::sparse::{CsrMatrix, SparseVec};
 use crate::engine::SweepResult;
 use crate::error::{DlrError, Result};
 use crate::runtime::default_artifacts_dir;
+use crate::solver::driver::{Checkpoint, FitDriver};
+use crate::solver::estimator::{Estimator, FitObserver, NoopObserver};
 use crate::solver::leader::LeaderCompute;
-use crate::solver::line_search::{line_search, LineSearchOutcome};
 use crate::solver::model::SparseModel;
 use crate::solver::pool::WorkerPool;
-use crate::solver::quadratic::{grad_dot_delta, l1_at_alpha, support_union_into};
-use crate::util::math::l1_norm;
-use crate::util::timer::{PhaseTimer, Stopwatch};
+use crate::util::timer::PhaseTimer;
 
-/// Per-iteration record (feeds Table 3 and the ablation benches).
+/// Per-iteration record (feeds Table 3, the ablation benches, and every
+/// [`FitObserver`] callback).
 #[derive(Debug, Clone)]
 pub struct IterationRecord {
     pub iter: usize,
@@ -57,7 +66,7 @@ pub struct IterationRecord {
     pub wall_secs: f64,
 }
 
-/// Result of one `fit_lambda` call.
+/// Result of one fit (any [`Estimator`], not just d-GLMNET).
 #[derive(Debug)]
 pub struct FitResult {
     pub lambda: f64,
@@ -84,37 +93,42 @@ impl FitResult {
 /// is cleared-and-refilled each iteration; capacities persist, so after the
 /// first iteration the loop allocates nothing.
 #[derive(Debug, Default)]
-struct FitScratch {
+pub(crate) struct FitScratch {
+    /// leader working statistics (Arc so the pool can share them with the
+    /// worker threads; `Arc::make_mut` reclaims the buffer once the workers
+    /// have dropped their clones, so steady state stops allocating)
+    pub(crate) w: Arc<Vec<f32>>,
+    pub(crate) z: Arc<Vec<f32>>,
     /// per-machine sweep outputs (sparse buffers round-trip via the pool)
-    results: Vec<SweepResult>,
+    pub(crate) results: Vec<SweepResult>,
     /// per-machine Δβ contributions remapped to global feature ids
-    db_contribs: Vec<SparseVec>,
+    pub(crate) db_contribs: Vec<SparseVec>,
     /// tree-allreduce intermediate state
-    ar: AllReduceScratch,
+    pub(crate) ar: AllReduceScratch,
     /// merged sparse Δβ / Δm
-    delta_sp: SparseVec,
-    dmargins_sp: SparseVec,
+    pub(crate) delta_sp: SparseVec,
+    pub(crate) dmargins_sp: SparseVec,
     /// dense views for the line search / apply step
-    delta: Vec<f32>,
-    dmargins: Vec<f32>,
+    pub(crate) delta: Vec<f32>,
+    pub(crate) dmargins: Vec<f32>,
     /// support union of β and Δβ
-    support: Vec<u32>,
+    pub(crate) support: Vec<u32>,
 }
 
 /// The distributed solver: owns the simulated cluster and the warmstart
 /// state (β, margins) across `fit_lambda` calls — exactly what Alg 5 needs.
 pub struct DGlmnetSolver {
     pub cfg: TrainConfig,
-    n: usize,
-    p: usize,
-    y: Vec<f32>,
-    x: CsrMatrix,
-    partition: FeaturePartition,
-    pool: WorkerPool,
-    leader: LeaderCompute,
-    allreduce: TreeAllReduce,
-    ledger: NetworkLedger,
-    scratch: FitScratch,
+    pub(crate) n: usize,
+    pub(crate) p: usize,
+    pub(crate) y: Vec<f32>,
+    pub(crate) x: CsrMatrix,
+    pub(crate) partition: FeaturePartition,
+    pub(crate) pool: WorkerPool,
+    pub(crate) leader: LeaderCompute,
+    pub(crate) allreduce: TreeAllReduce,
+    pub(crate) ledger: NetworkLedger,
+    pub(crate) scratch: FitScratch,
     /// Current coefficients (warmstart state).
     pub beta: Vec<f32>,
     /// Current margins βᵀx_i, kept consistent with `beta`.
@@ -235,7 +249,24 @@ impl DGlmnetSolver {
         self.margins = self.x.margins(beta);
     }
 
-    /// Fit at `cfg.lambda` from the given (or current) warmstart.
+    /// Start a stepwise fit at `lambda` from the current (β, margins) —
+    /// the caller owns the loop; see [`FitDriver`].
+    pub fn driver(&mut self, lambda: f64) -> FitDriver<'_> {
+        FitDriver::new(self, lambda)
+    }
+
+    /// Resume a stepwise fit from a [`Checkpoint`] (possibly captured in a
+    /// different process): installs (β, margins) bit-for-bit and continues
+    /// the iteration count and cost ledger where the checkpoint left off.
+    pub fn driver_from_checkpoint(&mut self, ck: &Checkpoint) -> Result<FitDriver<'_>> {
+        FitDriver::from_checkpoint(self, ck)
+    }
+
+    #[doc = "One-shot fit at `cfg.lambda` from the given (or current) \
+             warmstart. Compatibility wrapper over the stepwise API — new \
+             code should use [`DGlmnetSolver::driver`] (stepwise control, \
+             checkpoints) or [`Estimator::fit`] (uniform interface with \
+             observers)."]
     pub fn fit(&mut self, warm: Option<&[f32]>) -> Result<FitResult> {
         if let Some(w) = warm {
             self.set_beta(w);
@@ -243,186 +274,52 @@ impl DGlmnetSolver {
         self.fit_lambda(self.cfg.lambda)
     }
 
-    /// One full Algorithm-1 run at `lambda`, warmstarting from the current
-    /// (β, margins). Leaves the solver state at the fitted optimum.
+    #[doc = "One full Algorithm-1 run at `lambda`, warmstarting from the \
+             current (β, margins); leaves the solver state at the fitted \
+             optimum. Compatibility wrapper that drives \
+             [`DGlmnetSolver::driver`] to convergence — bit-identical to \
+             stepping the [`FitDriver`] manually."]
     pub fn fit_lambda(&mut self, lambda: f64) -> Result<FitResult> {
-        let mut timers = PhaseTimer::new();
-        let mut trace: Vec<IterationRecord> = Vec::new();
-        let ledger_start_bytes = self.ledger.total_bytes();
-        let mut sim_compute = 0f64;
-        let mut sim_comm = 0f64;
-        let (lam_f, nu_f) = (lambda as f32, self.cfg.nu as f32);
-        let mut converged = false;
-        let mut f_prev: Option<f64> = None;
+        self.driver(lambda).run(&mut NoopObserver)
+    }
+}
 
-        for iter in 1..=self.cfg.max_iter {
-            let iter_sw = Stopwatch::start();
-            let iter_start_bytes = self.ledger.total_bytes();
+impl Estimator for DGlmnetSolver {
+    fn name(&self) -> &'static str {
+        "d-glmnet"
+    }
 
-            // ---- step 1: leader stats (w, z, loss) ----------------------
-            let (w, z, loss) = timers.time("stats", || self.leader.stats(&self.margins))?;
-            let f0 = loss + lambda * l1_norm(&self.beta);
-            let f_start = *f_prev.get_or_insert(f0);
-            debug_assert!((f_start - f0).abs() <= 1e-6 * f0.abs().max(1.0) || iter > 1);
-            let w = Arc::new(w);
-            let z = Arc::new(z);
-
-            // ---- step 2: parallel sweeps --------------------------------
-            timers.time("sweep", || {
-                self.pool
-                    .sweep_all(&w, &z, &self.beta, lam_f, nu_f, &mut self.scratch.results)
-            })?;
-            let max_worker = self
-                .scratch
-                .results
-                .iter()
-                .map(|r| r.compute_secs)
-                .fold(0f64, f64::max);
-            sim_compute += max_worker;
-
-            // ---- step 3: AllReduce Δm and Δβ (sparse wire format) -------
-            let comm_secs = timers.time("allreduce", || {
-                let o1 = self.allreduce.sum_sparse_into(
-                    self.scratch.results.iter().map(|r| &r.dmargins),
-                    self.n,
-                    &self.ledger,
-                    &mut self.scratch.ar,
-                    &mut self.scratch.dmargins_sp,
-                );
-                // remap shard-local Δβ to global ids — O(nnz) per machine
-                self.scratch
-                    .db_contribs
-                    .resize_with(self.scratch.results.len(), SparseVec::default);
-                for (k, r) in self.scratch.results.iter().enumerate() {
-                    self.pool.delta_to_global(
-                        k,
-                        &r.delta_local,
-                        self.p,
-                        &mut self.scratch.db_contribs[k],
-                    );
-                }
-                let o2 = self.allreduce.sum_sparse_into(
-                    self.scratch.db_contribs.iter(),
-                    self.p,
-                    &self.ledger,
-                    &mut self.scratch.ar,
-                    &mut self.scratch.delta_sp,
-                );
-                o1.simulated_secs + o2.simulated_secs
-            });
-            sim_comm += comm_secs;
-            let iter_comm_bytes = self.ledger.total_bytes() - iter_start_bytes;
-
-            // densify the merged updates into the reusable line-search views
-            self.scratch.dmargins.resize(self.n, 0.0);
-            self.scratch.dmargins.fill(0.0);
-            self.scratch.dmargins_sp.scatter_into(&mut self.scratch.dmargins);
-            self.scratch.delta.resize(self.p, 0.0);
-            self.scratch.delta.fill(0.0);
-            self.scratch.delta_sp.scatter_into(&mut self.scratch.delta);
-            let delta = &self.scratch.delta;
-            let dmargins = &self.scratch.dmargins;
-
-            let delta_norm = l1_norm(delta);
-            support_union_into(&self.beta, delta, &mut self.scratch.support);
-            let support = &self.scratch.support;
-
-            // Degenerate update (λ ≥ λ_max with zero warmstart): stop now.
-            if delta_norm == 0.0 {
-                trace.push(IterationRecord {
-                    iter,
-                    objective: f0,
-                    alpha: 1.0,
-                    fast_path: true,
-                    max_worker_secs: max_worker,
-                    sim_comm_secs: comm_secs,
-                    comm_bytes: iter_comm_bytes,
-                    wall_secs: iter_sw.elapsed_secs(),
-                });
-                converged = true;
-                f_prev = Some(f0);
-                break;
-            }
-
-            // ---- step 4: line search ------------------------------------
-            let grad_dot = grad_dot_delta(&self.margins, dmargins, &self.y);
-            let beta_ref = &self.beta;
-            let l1_at = move |a: f64| l1_at_alpha(beta_ref, delta, support, a, lambda);
-            let leader = &mut self.leader;
-            let margins_ref = &self.margins;
-            let mut losses =
-                |alphas: &[f64]| leader.line_losses(margins_ref, dmargins, alphas);
-            let LineSearchOutcome { alpha, f_new, fast_path, .. } = timers
-                .time("line_search", || {
-                    line_search(&mut losses, &l1_at, f0, grad_dot, 0.0, &self.cfg.line_search)
-                })?;
-
-            // ---- step 5: apply (sparse: only the touched coordinates) ---
-            let af = alpha as f32;
-            self.scratch.delta_sp.add_scaled_into(&mut self.beta, af);
-            self.scratch.dmargins_sp.add_scaled_into(&mut self.margins, af);
-
-            trace.push(IterationRecord {
-                iter,
-                objective: f_new,
-                alpha,
-                fast_path,
-                max_worker_secs: max_worker,
-                sim_comm_secs: comm_secs,
-                comm_bytes: iter_comm_bytes,
-                wall_secs: iter_sw.elapsed_secs(),
-            });
-
-            // ---- convergence with the α = 1 sparsity retry ---------------
-            let rel_dec = (f0 - f_new) / f0.abs().max(1.0);
-            if self.cfg.verbose {
-                eprintln!(
-                    "[dglmnet] λ={lambda:.5} iter={iter} f={f_new:.6} α={alpha:.4} rel_dec={rel_dec:.2e} nnz={}",
-                    crate::util::math::nnz(&self.beta)
-                );
-            }
-            f_prev = Some(f_new);
-            if rel_dec < self.cfg.tol || iter == self.cfg.max_iter {
-                if alpha < 1.0 {
-                    // would α = 1 not increase the objective too much?
-                    let loss_full = self.leader.line_losses(
-                        &self.margins,
-                        &self.scratch.dmargins,
-                        &[1.0 - alpha],
-                    )?[0];
-                    let f_full = loss_full
-                        + l1_at_alpha(
-                            &self.beta,
-                            &self.scratch.delta,
-                            &self.scratch.support,
-                            1.0 - alpha,
-                            lambda,
-                        );
-                    if f_full <= f_new + self.cfg.alpha_one_slack * f_new.abs().max(1.0) {
-                        let rem = (1.0 - alpha) as f32;
-                        self.scratch.delta_sp.add_scaled_into(&mut self.beta, rem);
-                        self.scratch.dmargins_sp.add_scaled_into(&mut self.margins, rem);
-                        f_prev = Some(f_full);
-                    }
-                }
-                converged = rel_dec < self.cfg.tol;
-                break;
-            }
+    /// Fit at `cfg.lambda` from the current state (warmstart — call
+    /// [`Estimator::reset`] first for a cold fit). `ds` must be the dataset
+    /// the simulated cluster was built on; the solver keeps its shards.
+    fn fit(&mut self, ds: &Dataset, observer: &mut dyn FitObserver) -> Result<FitResult> {
+        if ds.n_examples() != self.n || ds.n_features() != self.p {
+            return Err(DlrError::Solver(format!(
+                "dataset shape ({} x {}) does not match the sharded cluster ({} x {})",
+                ds.n_examples(),
+                ds.n_features(),
+                self.n,
+                self.p
+            )));
         }
+        let lambda = self.cfg.lambda;
+        self.driver(lambda).run(observer)
+    }
 
-        let objective = f_prev.unwrap_or(f64::INFINITY);
-        Ok(FitResult {
-            lambda,
-            objective,
-            iterations: trace.len(),
-            converged,
-            model: SparseModel::from_dense(&self.beta, lambda),
-            trace,
-            timers,
-            sim_compute_secs: sim_compute,
-            sim_comm_secs: sim_comm,
-            comm_bytes: self.ledger.total_bytes() - ledger_start_bytes,
-        })
+    fn model(&self) -> SparseModel {
+        SparseModel::from_dense(&self.beta, self.cfg.lambda)
+    }
+
+    fn reset(&mut self) {
+        DGlmnetSolver::reset(self);
+    }
+
+    fn lambda(&self) -> f64 {
+        self.cfg.lambda
+    }
+
+    fn set_lambda(&mut self, lambda: f64) {
+        self.cfg.lambda = lambda;
     }
 }
 
@@ -558,5 +455,18 @@ mod tests {
             fd.objective
         );
         assert!(fs.comm_bytes <= fd.comm_bytes, "sparse must never cost more");
+    }
+
+    #[test]
+    fn estimator_trait_fit_matches_inherent_fit() {
+        let ds = synth::dna_like(400, 40, 5, 39);
+        let mut a = DGlmnetSolver::from_dataset(&ds, &native_cfg(4, 0.5)).unwrap();
+        let mut b = DGlmnetSolver::from_dataset(&ds, &native_cfg(4, 0.5)).unwrap();
+        let fa = a.fit(None).unwrap();
+        let fb =
+            Estimator::fit(&mut b, &ds, &mut crate::solver::estimator::NoopObserver).unwrap();
+        assert_eq!(fa.objective.to_bits(), fb.objective.to_bits());
+        assert_eq!(fa.iterations, fb.iterations);
+        assert_eq!(a.beta, b.beta);
     }
 }

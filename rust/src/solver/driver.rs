@@ -1,0 +1,727 @@
+//! Stepwise fit driver: one d-GLMNET iteration per [`FitDriver::step`] call,
+//! so callers own the training loop. `DGlmnetSolver::fit_lambda` is a thin
+//! wrapper over this driver — driving `step()` to convergence is
+//! *bit-identical* (objective, β, comm-bytes ledger) to the one-shot path,
+//! which the `tests/estimator_api.rs` equivalence tests pin down.
+//!
+//! What stepwise control buys:
+//!
+//! * **Observers** — [`FitDriver::run`] reports every iteration through a
+//!   [`FitObserver`], which can stop the fit early.
+//! * **Checkpoint / resume** — [`FitDriver::checkpoint`] captures (β,
+//!   margins, iteration counter, accumulated cost) as a [`Checkpoint`];
+//!   `DGlmnetSolver::driver_from_checkpoint` restores it in a fresh process
+//!   and the resumed fit reproduces the uninterrupted trajectory exactly
+//!   (margins are restored bit-for-bit, never recomputed from β).
+//! * **Budgets** — wall-clock / comm-bytes / iteration caps from
+//!   [`TrainConfig::budget`](crate::config::TrainConfig) are enforced
+//!   between iterations.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{DlrError, Result};
+use crate::solver::dglmnet::{DGlmnetSolver, FitResult, IterationRecord};
+use crate::solver::estimator::{FitControl, FitObserver, FitStep};
+use crate::solver::line_search::{line_search, LineSearchOutcome};
+use crate::solver::model::SparseModel;
+use crate::solver::quadratic::{grad_dot_delta, l1_at_alpha, support_union_into};
+use crate::util::json::{self, Json};
+use crate::util::math::l1_norm;
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+/// Why a fit stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Relative objective decrease fell below `cfg.tol`.
+    Converged,
+    /// `cfg.max_iter` reached without convergence.
+    MaxIter,
+    /// An observer (or an explicit [`FitDriver::stop`]) ended the fit.
+    Observer,
+    /// `cfg.budget.iterations` exhausted.
+    IterationBudget,
+    /// `cfg.budget.comm_bytes` exhausted.
+    CommBudget,
+    /// `cfg.budget.wall_secs` exhausted.
+    WallClockBudget,
+}
+
+/// Result of one [`FitDriver::step`] call.
+#[derive(Debug, Clone)]
+pub enum StepOutcome {
+    /// One full iteration ran; the fit has not finished.
+    Progress(IterationRecord),
+    /// The fit is over. `record` is the final iteration's record, or `None`
+    /// when the fit ended between iterations (budget hit, or `step` called
+    /// on an already-finished driver).
+    Finished { record: Option<IterationRecord>, reason: StopReason },
+}
+
+/// Stepwise driver over one `fit_lambda` run. Create with
+/// [`DGlmnetSolver::driver`] (fresh) or
+/// [`DGlmnetSolver::driver_from_checkpoint`] (resume), call [`step`]
+/// until it reports [`StepOutcome::Finished`], then [`finish`] for the
+/// [`FitResult`] — or let [`run`] do the loop with an observer.
+///
+/// [`step`]: FitDriver::step
+/// [`finish`]: FitDriver::finish
+/// [`run`]: FitDriver::run
+pub struct FitDriver<'a> {
+    solver: &'a mut DGlmnetSolver,
+    lambda: f64,
+    /// 1-based index of the iteration the next `step` call will run.
+    next_iter: usize,
+    f_prev: Option<f64>,
+    finished: bool,
+    stop_reason: Option<StopReason>,
+    converged: bool,
+    trace: Vec<IterationRecord>,
+    timers: PhaseTimer,
+    sim_compute: f64,
+    sim_comm: f64,
+    ledger_start_bytes: u64,
+    /// Accumulators carried over a checkpoint/resume boundary.
+    carried_iters: usize,
+    carried_comm_bytes: u64,
+    carried_wall_secs: f64,
+    wall: Stopwatch,
+}
+
+impl<'a> FitDriver<'a> {
+    pub fn new(solver: &'a mut DGlmnetSolver, lambda: f64) -> Self {
+        let ledger_start_bytes = solver.ledger.total_bytes();
+        Self {
+            solver,
+            lambda,
+            next_iter: 1,
+            f_prev: None,
+            finished: false,
+            stop_reason: None,
+            converged: false,
+            trace: Vec::new(),
+            timers: PhaseTimer::new(),
+            sim_compute: 0.0,
+            sim_comm: 0.0,
+            ledger_start_bytes,
+            carried_iters: 0,
+            carried_comm_bytes: 0,
+            carried_wall_secs: 0.0,
+            wall: Stopwatch::start(),
+        }
+    }
+
+    /// Resume from a checkpoint: installs (β, margins) bit-for-bit and
+    /// carries the iteration counter and cost accumulators forward.
+    pub fn from_checkpoint(solver: &'a mut DGlmnetSolver, ck: &Checkpoint) -> Result<Self> {
+        if ck.p != solver.n_features() || ck.n != solver.n_examples() {
+            return Err(DlrError::Solver(format!(
+                "checkpoint shape (n = {}, p = {}) does not match solver (n = {}, p = {})",
+                ck.n,
+                ck.p,
+                solver.n_examples(),
+                solver.n_features()
+            )));
+        }
+        solver.beta.copy_from_slice(&ck.beta);
+        solver.margins.copy_from_slice(&ck.margins);
+        let mut d = Self::new(solver, ck.lambda);
+        d.next_iter = ck.iter + 1;
+        d.f_prev = ck.f_prev;
+        d.sim_compute = ck.sim_compute_secs;
+        d.sim_comm = ck.sim_comm_secs;
+        d.carried_iters = ck.iter;
+        d.carried_comm_bytes = ck.comm_bytes;
+        d.carried_wall_secs = ck.wall_secs;
+        Ok(d)
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Iterations completed so far (including any resumed-over iterations).
+    pub fn iterations(&self) -> usize {
+        self.next_iter - 1
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// Objective after the last completed iteration (None before the first).
+    pub fn objective(&self) -> Option<f64> {
+        self.f_prev
+    }
+
+    /// Records of the iterations run by *this* driver (post-resume only).
+    pub fn trace(&self) -> &[IterationRecord] {
+        &self.trace
+    }
+
+    /// Total bytes this fit has moved, including resumed-over traffic.
+    pub fn comm_bytes_so_far(&self) -> u64 {
+        self.carried_comm_bytes
+            + (self.solver.ledger.total_bytes() - self.ledger_start_bytes)
+    }
+
+    /// Wall-clock seconds this fit has run, including resumed-over time.
+    pub fn wall_secs_so_far(&self) -> f64 {
+        self.carried_wall_secs + self.wall.elapsed_secs()
+    }
+
+    /// End the fit now (the loop owner's analog of an observer `Stop`).
+    pub fn stop(&mut self) {
+        if !self.finished {
+            self.finished = true;
+            self.stop_reason = Some(StopReason::Observer);
+        }
+    }
+
+    /// Capture the resumable state after the last completed iteration.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            lambda: self.lambda,
+            n: self.solver.n_examples(),
+            p: self.solver.n_features(),
+            iter: self.iterations(),
+            f_prev: self.f_prev,
+            sim_compute_secs: self.sim_compute,
+            sim_comm_secs: self.sim_comm,
+            comm_bytes: self.comm_bytes_so_far(),
+            wall_secs: self.wall_secs_so_far(),
+            beta: self.solver.beta.clone(),
+            margins: self.solver.margins.clone(),
+            rng: None,
+        }
+    }
+
+    fn budget_exceeded(&self) -> Option<StopReason> {
+        let budget = &self.solver.cfg.budget;
+        if let Some(cap) = budget.iterations {
+            if self.iterations() >= cap {
+                return Some(StopReason::IterationBudget);
+            }
+        }
+        if let Some(cap) = budget.comm_bytes {
+            if self.comm_bytes_so_far() >= cap {
+                return Some(StopReason::CommBudget);
+            }
+        }
+        if let Some(cap) = budget.wall_secs {
+            if self.wall_secs_so_far() >= cap {
+                return Some(StopReason::WallClockBudget);
+            }
+        }
+        None
+    }
+
+    /// Run one leader-stats → sweep → AllReduce → line-search iteration
+    /// (paper Algorithm 1 body). The update is applied before this returns,
+    /// so `checkpoint()` right after captures it.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.finished {
+            return Ok(StepOutcome::Finished {
+                record: None,
+                reason: self.stop_reason.unwrap_or(StopReason::Converged),
+            });
+        }
+        if let Some(reason) = self.budget_exceeded() {
+            self.finished = true;
+            self.stop_reason = Some(reason);
+            return Ok(StepOutcome::Finished { record: None, reason });
+        }
+        // max_iter = 0, or a checkpoint already at/past the cap: nothing to run
+        if self.next_iter > self.solver.cfg.max_iter {
+            self.finished = true;
+            self.stop_reason = Some(StopReason::MaxIter);
+            return Ok(StepOutcome::Finished { record: None, reason: StopReason::MaxIter });
+        }
+
+        let lambda = self.lambda;
+        let iter = self.next_iter;
+        let timers = &mut self.timers;
+        let DGlmnetSolver {
+            cfg, n, p, y, pool, leader, allreduce, ledger, scratch, beta, margins, ..
+        } = &mut *self.solver;
+        let (n, p) = (*n, *p);
+        let (lam_f, nu_f) = (lambda as f32, cfg.nu as f32);
+        let iter_sw = Stopwatch::start();
+        let iter_start_bytes = ledger.total_bytes();
+
+        // ---- step 1: leader stats (w, z, loss) into scratch buffers -----
+        let loss = timers.time("stats", || {
+            let w = Arc::make_mut(&mut scratch.w);
+            let z = Arc::make_mut(&mut scratch.z);
+            leader.stats_into(margins, w, z)
+        })?;
+        let f0 = loss + lambda * l1_norm(beta);
+        let f_start = *self.f_prev.get_or_insert(f0);
+        debug_assert!((f_start - f0).abs() <= 1e-6 * f0.abs().max(1.0) || iter > 1);
+        let w = Arc::clone(&scratch.w);
+        let z = Arc::clone(&scratch.z);
+
+        // ---- step 2: parallel sweeps ------------------------------------
+        timers.time("sweep", || {
+            pool.sweep_all(&w, &z, beta, lam_f, nu_f, &mut scratch.results)
+        })?;
+        let max_worker = scratch
+            .results
+            .iter()
+            .map(|r| r.compute_secs)
+            .fold(0f64, f64::max);
+        self.sim_compute += max_worker;
+
+        // ---- step 3: AllReduce Δm and Δβ (sparse wire format) -----------
+        let comm_secs = timers.time("allreduce", || {
+            let o1 = allreduce.sum_sparse_into(
+                scratch.results.iter().map(|r| &r.dmargins),
+                n,
+                ledger,
+                &mut scratch.ar,
+                &mut scratch.dmargins_sp,
+            );
+            // remap shard-local Δβ to global feature ids — O(nnz) per machine
+            scratch
+                .db_contribs
+                .resize_with(scratch.results.len(), Default::default);
+            for (k, r) in scratch.results.iter().enumerate() {
+                pool.delta_to_global(k, &r.delta_local, p, &mut scratch.db_contribs[k]);
+            }
+            let o2 = allreduce.sum_sparse_into(
+                scratch.db_contribs.iter(),
+                p,
+                ledger,
+                &mut scratch.ar,
+                &mut scratch.delta_sp,
+            );
+            o1.simulated_secs + o2.simulated_secs
+        });
+        self.sim_comm += comm_secs;
+        let iter_comm_bytes = ledger.total_bytes() - iter_start_bytes;
+
+        // densify the merged updates into the reusable line-search views
+        scratch.dmargins.resize(n, 0.0);
+        scratch.dmargins.fill(0.0);
+        scratch.dmargins_sp.scatter_into(&mut scratch.dmargins);
+        scratch.delta.resize(p, 0.0);
+        scratch.delta.fill(0.0);
+        scratch.delta_sp.scatter_into(&mut scratch.delta);
+
+        let delta_norm = l1_norm(&scratch.delta);
+        support_union_into(beta, &scratch.delta, &mut scratch.support);
+
+        // Degenerate update (λ ≥ λ_max with zero warmstart): stop now.
+        if delta_norm == 0.0 {
+            let record = IterationRecord {
+                iter,
+                objective: f0,
+                alpha: 1.0,
+                fast_path: true,
+                max_worker_secs: max_worker,
+                sim_comm_secs: comm_secs,
+                comm_bytes: iter_comm_bytes,
+                wall_secs: iter_sw.elapsed_secs(),
+            };
+            self.trace.push(record.clone());
+            self.f_prev = Some(f0);
+            self.next_iter = iter + 1;
+            self.converged = true;
+            self.finished = true;
+            self.stop_reason = Some(StopReason::Converged);
+            return Ok(StepOutcome::Finished {
+                record: Some(record),
+                reason: StopReason::Converged,
+            });
+        }
+
+        // ---- step 4: line search ----------------------------------------
+        let grad_dot = grad_dot_delta(margins, &scratch.dmargins, y);
+        let beta_ref: &[f32] = beta;
+        let delta_ref: &[f32] = &scratch.delta;
+        let dmargins_ref: &[f32] = &scratch.dmargins;
+        let support_ref: &[u32] = &scratch.support;
+        let l1_at =
+            move |a: f64| l1_at_alpha(beta_ref, delta_ref, support_ref, a, lambda);
+        let margins_ref: &[f32] = margins;
+        let mut losses =
+            |alphas: &[f64]| leader.line_losses(margins_ref, dmargins_ref, alphas);
+        let LineSearchOutcome { alpha, f_new, fast_path, .. } = timers
+            .time("line_search", || {
+                line_search(&mut losses, &l1_at, f0, grad_dot, 0.0, &cfg.line_search)
+            })?;
+
+        // ---- step 5: apply (sparse: only the touched coordinates) -------
+        let af = alpha as f32;
+        scratch.delta_sp.add_scaled_into(beta, af);
+        scratch.dmargins_sp.add_scaled_into(margins, af);
+
+        let record = IterationRecord {
+            iter,
+            objective: f_new,
+            alpha,
+            fast_path,
+            max_worker_secs: max_worker,
+            sim_comm_secs: comm_secs,
+            comm_bytes: iter_comm_bytes,
+            wall_secs: iter_sw.elapsed_secs(),
+        };
+        self.trace.push(record.clone());
+
+        // ---- convergence with the α = 1 sparsity retry -------------------
+        let rel_dec = (f0 - f_new) / f0.abs().max(1.0);
+        if cfg.verbose {
+            eprintln!(
+                "[dglmnet] λ={lambda:.5} iter={iter} f={f_new:.6} α={alpha:.4} rel_dec={rel_dec:.2e} nnz={}",
+                crate::util::math::nnz(beta)
+            );
+        }
+        self.f_prev = Some(f_new);
+        self.next_iter = iter + 1;
+        if rel_dec < cfg.tol || iter >= cfg.max_iter {
+            if alpha < 1.0 {
+                // would α = 1 not increase the objective too much?
+                let loss_full =
+                    leader.line_losses(margins, &scratch.dmargins, &[1.0 - alpha])?[0];
+                let f_full = loss_full
+                    + l1_at_alpha(
+                        beta,
+                        &scratch.delta,
+                        &scratch.support,
+                        1.0 - alpha,
+                        lambda,
+                    );
+                if f_full <= f_new + cfg.alpha_one_slack * f_new.abs().max(1.0) {
+                    let rem = (1.0 - alpha) as f32;
+                    scratch.delta_sp.add_scaled_into(beta, rem);
+                    scratch.dmargins_sp.add_scaled_into(margins, rem);
+                    self.f_prev = Some(f_full);
+                }
+            }
+            self.converged = rel_dec < cfg.tol;
+            self.finished = true;
+            let reason = if self.converged {
+                StopReason::Converged
+            } else {
+                StopReason::MaxIter
+            };
+            self.stop_reason = Some(reason);
+            return Ok(StepOutcome::Finished { record: Some(record), reason });
+        }
+        Ok(StepOutcome::Progress(record))
+    }
+
+    /// Drive `step()` to the end, reporting every iteration to `observer`
+    /// (the final iteration's control value is ignored — see the
+    /// [`estimator`](crate::solver::estimator) module docs).
+    pub fn run(mut self, observer: &mut dyn FitObserver) -> Result<FitResult> {
+        loop {
+            match self.step()? {
+                StepOutcome::Progress(record) => {
+                    let stop = {
+                        let lambda = self.lambda;
+                        let beta = &self.solver.beta;
+                        let model_fn = move || SparseModel::from_dense(beta, lambda);
+                        let view = FitStep::new(&record, &model_fn);
+                        observer.on_iteration(&view) == FitControl::Stop
+                    };
+                    if stop {
+                        self.stop();
+                        break;
+                    }
+                }
+                StepOutcome::Finished { record, .. } => {
+                    if let Some(record) = record {
+                        let lambda = self.lambda;
+                        let beta = &self.solver.beta;
+                        let model_fn = move || SparseModel::from_dense(beta, lambda);
+                        let view = FitStep::new(&record, &model_fn);
+                        let _ = observer.on_iteration(&view);
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(self.finish())
+    }
+
+    /// Consume the driver and assemble the [`FitResult`]. `iterations` and
+    /// `comm_bytes` include resumed-over work; `trace` holds only the
+    /// iterations this driver ran.
+    pub fn finish(self) -> FitResult {
+        FitResult {
+            lambda: self.lambda,
+            objective: self.f_prev.unwrap_or(f64::INFINITY),
+            iterations: self.carried_iters + self.trace.len(),
+            converged: self.converged,
+            model: SparseModel::from_dense(&self.solver.beta, self.lambda),
+            trace: self.trace,
+            timers: self.timers,
+            sim_compute_secs: self.sim_compute,
+            sim_comm_secs: self.sim_comm,
+            comm_bytes: self.carried_comm_bytes
+                + (self.solver.ledger.total_bytes() - self.ledger_start_bytes),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint
+// ---------------------------------------------------------------------------
+
+/// Resumable fit state, persisted as `runtime::artifacts`-style JSON.
+///
+/// β and margins are stored as f32 **bit patterns** (exact by construction
+/// — margins are incremental sums and must never be recomputed from β), the
+/// RNG state as hex u64 words; everything else round-trips through the
+/// crate's shortest-representation JSON numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub lambda: f64,
+    pub n: usize,
+    pub p: usize,
+    /// Completed iterations at capture time.
+    pub iter: usize,
+    /// Objective after the last completed iteration.
+    pub f_prev: Option<f64>,
+    pub sim_compute_secs: f64,
+    pub sim_comm_secs: f64,
+    pub comm_bytes: u64,
+    pub wall_secs: f64,
+    pub beta: Vec<f32>,
+    pub margins: Vec<f32>,
+    /// xoshiro256++ state for stochastic estimators (None for d-GLMNET,
+    /// whose iteration is deterministic).
+    pub rng: Option<[u64; 4]>,
+}
+
+const CHECKPOINT_KIND: &str = "fit-checkpoint";
+
+fn f32_bits_json(values: &[f32]) -> Json {
+    Json::Arr(values.iter().map(|&v| Json::Num(v.to_bits() as f64)).collect())
+}
+
+fn f32_bits_from_json(doc: &Json, key: &str) -> Result<Vec<f32>> {
+    doc.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| DlrError::parse("checkpoint", format!("missing '{key}'")))?
+        .iter()
+        .map(|v| {
+            // reject corrupt entries instead of letting `as u32` saturate:
+            // a bit pattern is a whole number in [0, 2³²)
+            let x = v
+                .as_f64()
+                .filter(|x| x.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(x))
+                .ok_or_else(|| {
+                    DlrError::parse("checkpoint", format!("bad bit pattern in '{key}'"))
+                })?;
+            Ok(f32::from_bits(x as u32))
+        })
+        .collect()
+}
+
+fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn u64_from_hex(v: &Json) -> Result<u64> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| DlrError::parse("checkpoint", "expected hex string"))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| DlrError::parse("checkpoint", format!("bad hex word '{s}'")))
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("version".into(), Json::Num(1.0));
+        m.insert("kind".into(), Json::Str(CHECKPOINT_KIND.into()));
+        m.insert("lambda".into(), Json::Num(self.lambda));
+        // f64 bit pattern alongside the readable value: bit-exact resume
+        // must not depend on decimal round-tripping
+        m.insert("lambda_bits".into(), u64_hex(self.lambda.to_bits()));
+        m.insert("n".into(), Json::Num(self.n as f64));
+        m.insert("p".into(), Json::Num(self.p as f64));
+        m.insert("iter".into(), Json::Num(self.iter as f64));
+        m.insert(
+            "f_prev_bits".into(),
+            match self.f_prev {
+                Some(f) => u64_hex(f.to_bits()),
+                None => Json::Null,
+            },
+        );
+        if let Some(f) = self.f_prev {
+            m.insert("objective".into(), Json::Num(f));
+        }
+        m.insert("sim_compute_secs".into(), Json::Num(self.sim_compute_secs));
+        m.insert("sim_comm_secs".into(), Json::Num(self.sim_comm_secs));
+        m.insert("comm_bytes".into(), Json::Num(self.comm_bytes as f64));
+        m.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        m.insert("beta_bits".into(), f32_bits_json(&self.beta));
+        m.insert("margins_bits".into(), f32_bits_json(&self.margins));
+        m.insert(
+            "rng".into(),
+            match self.rng {
+                Some(state) => Json::Arr(state.iter().map(|&w| u64_hex(w)).collect()),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            return Err(DlrError::parse(
+                "checkpoint",
+                format!("unsupported version {version}"),
+            ));
+        }
+        if doc.get("kind").and_then(Json::as_str) != Some(CHECKPOINT_KIND) {
+            return Err(DlrError::parse("checkpoint", "not a fit-checkpoint file"));
+        }
+        let num = |key: &str| -> Result<f64> {
+            doc.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| DlrError::parse("checkpoint", format!("missing '{key}'")))
+        };
+        let lambda = match doc.get("lambda_bits") {
+            Some(bits) => f64::from_bits(u64_from_hex(bits)?),
+            None => num("lambda")?,
+        };
+        let f_prev = match doc.get("f_prev_bits") {
+            Some(Json::Null) | None => None,
+            Some(bits) => Some(f64::from_bits(u64_from_hex(bits)?)),
+        };
+        let rng = match doc.get("rng") {
+            Some(Json::Arr(words)) if words.len() == 4 => {
+                let mut state = [0u64; 4];
+                for (slot, w) in state.iter_mut().zip(words) {
+                    *slot = u64_from_hex(w)?;
+                }
+                Some(state)
+            }
+            _ => None,
+        };
+        let ck = Self {
+            lambda,
+            n: num("n")? as usize,
+            p: num("p")? as usize,
+            iter: num("iter")? as usize,
+            f_prev,
+            sim_compute_secs: num("sim_compute_secs")?,
+            sim_comm_secs: num("sim_comm_secs")?,
+            comm_bytes: num("comm_bytes")? as u64,
+            wall_secs: num("wall_secs")?,
+            beta: f32_bits_from_json(doc, "beta_bits")?,
+            margins: f32_bits_from_json(doc, "margins_bits")?,
+            rng,
+        };
+        if ck.beta.len() != ck.p || ck.margins.len() != ck.n {
+            return Err(DlrError::parse(
+                "checkpoint",
+                "beta/margins length does not match recorded shape",
+            ));
+        }
+        Ok(ck)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_checkpoint() -> Checkpoint {
+        Checkpoint {
+            lambda: 0.1 + 0.2, // deliberately non-representable decimal
+            n: 3,
+            p: 2,
+            iter: 7,
+            f_prev: Some(123.456789012345678),
+            sim_compute_secs: 0.25,
+            sim_comm_secs: 1e-9,
+            comm_bytes: 123_456_789,
+            wall_secs: 42.0,
+            beta: vec![0.1f32, -2.5e-8],
+            margins: vec![1.5f32, -0.0, 3.25e10],
+            rng: Some([1, u64::MAX, 0xDEAD_BEEF, 1 << 63]),
+        }
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrip_is_bit_exact() {
+        let ck = toy_checkpoint();
+        let back = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(ck.lambda.to_bits(), back.lambda.to_bits());
+        assert_eq!(ck.f_prev.unwrap().to_bits(), back.f_prev.unwrap().to_bits());
+        for (a, b) in ck.beta.iter().zip(&back.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ck.margins.iter().zip(&back.margins) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ck.rng, back.rng);
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip() {
+        let ck = toy_checkpoint();
+        let path = std::env::temp_dir()
+            .join(format!("dglmnet_ckpt_{}.json", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn checkpoint_rejects_corrupt_bit_patterns() {
+        // out-of-range or fractional bit entries must fail, not saturate
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert(
+                "beta_bits".into(),
+                Json::Arr(vec![Json::Num(5e9), Json::Num(0.0)]),
+            );
+        }
+        assert!(Checkpoint::from_json(&doc).is_err());
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert(
+                "margins_bits".into(),
+                Json::Arr(vec![Json::Num(123.7), Json::Num(0.0), Json::Num(0.0)]),
+            );
+        }
+        assert!(Checkpoint::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_kind_and_version() {
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("kind".into(), Json::Str("something-else".into()));
+        }
+        assert!(Checkpoint::from_json(&doc).is_err());
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("version".into(), Json::Num(9.0));
+        }
+        assert!(Checkpoint::from_json(&doc).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! The unified training abstraction: every solver in the crate — d-GLMNET
+//! and all three §4.3 baselines — implements [`Estimator`], and every fit
+//! streams per-iteration progress through a [`FitObserver`].
+//!
+//! This is the layer that lets the regularization path, the baseline grid,
+//! the bench harness and the CLI treat solvers interchangeably (`&mut dyn
+//! Estimator`), with no solver-specific branches: a workload written once
+//! against this trait (early stopping, live metrics, checkpointing drivers,
+//! head-to-head tournaments) works for every current and future algorithm.
+//!
+//! ## Contract
+//!
+//! * [`Estimator::fit`] trains **from the estimator's current state** — a
+//!   second `fit` call warmstarts (that is what Algorithm 5's λ ladder
+//!   needs). Call [`Estimator::reset`] first for a cold start.
+//! * The observer's [`FitObserver::on_iteration`] runs once per iteration
+//!   (d-GLMNET iteration, online pass, or shotgun round) *after* the
+//!   iteration's update has been applied. Returning [`FitControl::Stop`]
+//!   ends the fit early with `converged = false`; the already-recorded
+//!   iterations are kept in the returned [`FitResult`] trace. The final
+//!   (converged) iteration is also reported, but its control value is
+//!   ignored — the fit is already over.
+//! * [`FitStep::model`] materializes the coefficients *at that iteration*
+//!   lazily, so observers that only read [`IterationRecord`]s cost nothing
+//!   extra on the hot path.
+
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::solver::dglmnet::{FitResult, IterationRecord};
+use crate::solver::model::SparseModel;
+
+/// What the observer wants the fit to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitControl {
+    Continue,
+    /// End the fit after this iteration (`converged = false` in the result).
+    Stop,
+}
+
+/// One observed iteration: the record plus lazy access to the model as of
+/// this iteration (materialized only when asked for).
+pub struct FitStep<'a> {
+    pub record: &'a IterationRecord,
+    model_fn: &'a dyn Fn() -> SparseModel,
+}
+
+impl<'a> FitStep<'a> {
+    pub fn new(record: &'a IterationRecord, model_fn: &'a dyn Fn() -> SparseModel) -> Self {
+        Self { record, model_fn }
+    }
+
+    /// The coefficients after this iteration's update (O(p) to build).
+    pub fn model(&self) -> SparseModel {
+        (self.model_fn)()
+    }
+}
+
+/// Per-iteration callback driving early stopping and live metrics.
+pub trait FitObserver {
+    fn on_iteration(&mut self, _step: &FitStep<'_>) -> FitControl {
+        FitControl::Continue
+    }
+}
+
+/// Observer that does nothing (the default for one-shot fits).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl FitObserver for NoopObserver {}
+
+/// Observer that keeps a copy of every iteration record.
+#[derive(Debug, Default)]
+pub struct RecordingObserver {
+    pub records: Vec<IterationRecord>,
+}
+
+impl FitObserver for RecordingObserver {
+    fn on_iteration(&mut self, step: &FitStep<'_>) -> FitControl {
+        self.records.push(step.record.clone());
+        FitControl::Continue
+    }
+}
+
+/// Observer that stops the fit once the relative objective decrease stays
+/// below `min_rel_decrease` for `patience` consecutive iterations.
+#[derive(Debug)]
+pub struct EarlyStopObserver {
+    pub min_rel_decrease: f64,
+    pub patience: usize,
+    last_objective: Option<f64>,
+    stalled: usize,
+}
+
+impl EarlyStopObserver {
+    pub fn new(min_rel_decrease: f64, patience: usize) -> Self {
+        Self { min_rel_decrease, patience, last_objective: None, stalled: 0 }
+    }
+}
+
+impl FitObserver for EarlyStopObserver {
+    fn on_iteration(&mut self, step: &FitStep<'_>) -> FitControl {
+        let f = step.record.objective;
+        let stalled_now = match self.last_objective {
+            Some(prev) => (prev - f) / prev.abs().max(1.0) < self.min_rel_decrease,
+            None => false,
+        };
+        self.stalled = if stalled_now { self.stalled + 1 } else { 0 };
+        self.last_objective = Some(f);
+        if self.stalled >= self.patience.max(1) {
+            FitControl::Stop
+        } else {
+            FitControl::Continue
+        }
+    }
+}
+
+/// A solver for the L1-regularized logistic regression objective
+/// f(β) = L(β) + λ‖β‖₁, trainable through one uniform interface.
+pub trait Estimator {
+    /// Short stable identifier ("d-glmnet", "shotgun", ...).
+    fn name(&self) -> &'static str;
+
+    /// Train on `ds` from the current state (warmstart); see the module
+    /// docs for the observer contract. Call [`Estimator::reset`] first for
+    /// a cold fit.
+    fn fit(&mut self, ds: &Dataset, observer: &mut dyn FitObserver) -> Result<FitResult>;
+
+    /// The current coefficients as a sparse model (empty before any fit).
+    fn model(&self) -> SparseModel;
+
+    /// Reset the internal state to a cold start (β = 0, fresh RNG).
+    fn reset(&mut self);
+
+    /// The L1 strength (objective scale) the next `fit` will use.
+    /// Estimators with per-example regularization (the online baselines)
+    /// convert internally using the dataset size at fit time.
+    fn lambda(&self) -> f64;
+
+    fn set_lambda(&mut self, lambda: f64);
+}
+
+/// Reset-then-fit convenience: the cold-start fit every benchmark and grid
+/// evaluation wants.
+pub fn fit_cold(
+    est: &mut dyn Estimator,
+    ds: &Dataset,
+    observer: &mut dyn FitObserver,
+) -> Result<FitResult> {
+    est.reset();
+    est.fit(ds, observer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(iter: usize, objective: f64) -> IterationRecord {
+        IterationRecord {
+            iter,
+            objective,
+            alpha: 1.0,
+            fast_path: false,
+            max_worker_secs: 0.0,
+            sim_comm_secs: 0.0,
+            comm_bytes: 0,
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn early_stop_waits_for_patience() {
+        let mut obs = EarlyStopObserver::new(1e-3, 2);
+        let model = || SparseModel::from_dense(&[], 0.0);
+        let objectives = [100.0, 90.0, 89.999, 89.998, 89.997];
+        let mut controls = Vec::new();
+        for (i, &f) in objectives.iter().enumerate() {
+            let rec = record(i + 1, f);
+            controls.push(obs.on_iteration(&FitStep::new(&rec, &model)));
+        }
+        // iterations 3 and 4 stall; patience 2 trips on the 4th record
+        assert_eq!(controls[1], FitControl::Continue);
+        assert_eq!(controls[2], FitControl::Continue);
+        assert_eq!(controls[3], FitControl::Stop);
+    }
+
+    #[test]
+    fn recording_observer_keeps_every_record() {
+        let mut obs = RecordingObserver::default();
+        let model = || SparseModel::from_dense(&[1.0, 0.0], 0.5);
+        for i in 1..=3 {
+            let rec = record(i, 10.0 / i as f64);
+            assert_eq!(obs.on_iteration(&FitStep::new(&rec, &model)), FitControl::Continue);
+        }
+        assert_eq!(obs.records.len(), 3);
+        assert_eq!(obs.records[2].iter, 3);
+        // lazy model materialization works through the step view
+        let rec = record(4, 1.0);
+        let step = FitStep::new(&rec, &model);
+        assert_eq!(step.model().nnz(), 1);
+    }
+}

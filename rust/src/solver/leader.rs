@@ -8,7 +8,6 @@ use crate::config::{EngineKind, TrainConfig};
 use crate::error::Result;
 #[cfg(feature = "xla")]
 use crate::runtime::{lit_vec, XlaContext};
-use crate::solver::quadratic::stats_native;
 use crate::util::math::log1pexp;
 
 /// Leader compute context.
@@ -107,22 +106,44 @@ impl LeaderCompute {
         }
     }
 
-    /// (w, z, loss_sum) at the current margins.
+    /// (w, z, loss_sum) at the current margins. Compatibility wrapper over
+    /// [`LeaderCompute::stats_into`] — hot loops should hold reusable w/z
+    /// buffers (the solver keeps them in its `FitScratch`) and call that
+    /// instead.
     pub fn stats(&mut self, margins: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f64)> {
+        let mut w = Vec::new();
+        let mut z = Vec::new();
+        let loss = self.stats_into(margins, &mut w, &mut z)?;
+        Ok((w, z, loss))
+    }
+
+    /// (w, z) into caller-reused buffers (cleared and refilled; capacities
+    /// persist so steady-state calls allocate nothing); returns the loss
+    /// sum. Bit-identical to [`LeaderCompute::stats`].
+    pub fn stats_into(
+        &mut self,
+        margins: &[f32],
+        w: &mut Vec<f32>,
+        z: &mut Vec<f32>,
+    ) -> Result<f64> {
         match self {
-            LeaderCompute::Native { y } => Ok(stats_native(margins, y)),
+            LeaderCompute::Native { y } => {
+                Ok(crate::solver::quadratic::stats_native_into(margins, y, w, z))
+            }
             #[cfg(feature = "xla")]
             LeaderCompute::Xla { ctx, stats_unit, n, buf_a, y_lit, mask_lit, .. } => {
                 buf_a[..*n].copy_from_slice(margins);
                 let m_lit = lit_vec(buf_a);
                 let out = ctx.run_f32(stats_unit, &[&m_lit, y_lit, mask_lit])?;
                 let mut it = out.into_iter();
-                let mut w = it.next().unwrap();
-                let mut z = it.next().unwrap();
+                let w_out = it.next().unwrap();
+                let z_out = it.next().unwrap();
                 let loss = it.next().unwrap()[0] as f64;
-                w.truncate(*n);
-                z.truncate(*n);
-                Ok((w, z, loss))
+                w.clear();
+                z.clear();
+                w.extend_from_slice(&w_out[..*n]);
+                z.extend_from_slice(&z_out[..*n]);
+                Ok(loss)
             }
         }
     }

@@ -1,8 +1,49 @@
-//! The d-GLMNET coordinator (paper Algorithms 1–5): leader/worker iteration
-//! driver, line search, convergence with sparsity precautions, and the
-//! regularization-path runner.
+//! The d-GLMNET coordinator (paper Algorithms 1–5) and the crate's unified
+//! training interface: leader/worker iteration driver, line search,
+//! convergence with sparsity precautions, the regularization-path runner —
+//! and the [`Estimator`] / [`FitDriver`] API everything else plugs into.
+//!
+//! ## The training API, in three layers
+//!
+//! 1. **[`Estimator`]** — the uniform interface: `fit(&Dataset, observer)`,
+//!    `model()`, `name()`, `reset()`, `lambda()`/`set_lambda()`.
+//!    Implemented by [`DGlmnetSolver`] and all three baselines
+//!    (`baselines::{ShotgunEstimator, TruncatedGradientEstimator,
+//!    DistributedOnlineEstimator}`), so the regularization path
+//!    ([`RegPath::run_estimator`]), the §4.3 grid (`baselines::grid`), the
+//!    bench harness and the CLI drive every solver through `&mut dyn
+//!    Estimator` with no solver-specific branches.
+//! 2. **[`FitObserver`]** — the per-iteration callback. The contract: it
+//!    fires once per iteration (d-GLMNET iteration / online pass / shotgun
+//!    round) *after* the update is applied, receives a [`FitStep`] (the
+//!    [`IterationRecord`] plus lazy model access), and may return
+//!    `FitControl::Stop` to end the fit early with `converged = false`.
+//!    The final iteration is also reported; its control value is ignored.
+//! 3. **[`FitDriver`]** — stepwise control for d-GLMNET: one
+//!    leader-stats → sweep → AllReduce → line-search iteration per
+//!    [`FitDriver::step`] call, so callers own the loop. Driving `step()`
+//!    to convergence is bit-identical (objective, β, comm-bytes ledger) to
+//!    the one-shot `fit()` path — `fit_lambda` *is* this driver run with a
+//!    no-op observer.
+//!
+//! ## Checkpoint / resume contract
+//!
+//! [`FitDriver::checkpoint`] captures a [`Checkpoint`] after any completed
+//! iteration: λ, the iteration counter, the last objective, the cost
+//! accumulators (sim compute/comm seconds, comm bytes, wall seconds), and
+//! **β and margins as f32 bit patterns** — margins are incremental sums and
+//! are restored verbatim, never recomputed from β. Stochastic estimators
+//! (shotgun) additionally persist their xoshiro256++ state. Checkpoints
+//! round-trip through `runtime::artifacts`-style JSON
+//! ([`Checkpoint::save`]/[`Checkpoint::load`]), and resuming in a fresh
+//! process (`DGlmnetSolver::driver_from_checkpoint` on a solver built from
+//! the same dataset and config) reproduces the uninterrupted run's final
+//! objective exactly. Budgets ([`crate::config::FitBudget`]) are enforced
+//! between iterations and span resume boundaries.
 
 pub mod dglmnet;
+pub mod driver;
+pub mod estimator;
 pub mod leader;
 pub mod line_search;
 pub mod model;
@@ -12,5 +53,10 @@ pub mod regpath;
 pub mod screening;
 
 pub use dglmnet::{DGlmnetSolver, FitResult, IterationRecord};
+pub use driver::{Checkpoint, FitDriver, StepOutcome, StopReason};
+pub use estimator::{
+    fit_cold, EarlyStopObserver, Estimator, FitControl, FitObserver, FitStep, NoopObserver,
+    RecordingObserver,
+};
 pub use model::SparseModel;
 pub use regpath::{lambda_max, PathPoint, RegPath};

@@ -6,9 +6,27 @@ use crate::util::math::{l1_norm, log1pexp, sigmoid, working_stats};
 /// Native (w, z, loss) computation — the leader fallback when not using the
 /// AOT stats kernel; also the reference the XLA path is tested against.
 pub fn stats_native(margins: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, f64) {
+    let mut w = Vec::new();
+    let mut z = Vec::new();
+    let loss = stats_native_into(margins, y, &mut w, &mut z);
+    (w, z, loss)
+}
+
+/// [`stats_native`] into caller-reused buffers (cleared and refilled;
+/// capacities persist) — the per-iteration hot path holds these in its
+/// scratch so steady-state stats computations allocate nothing. Returns the
+/// loss sum.
+pub fn stats_native_into(
+    margins: &[f32],
+    y: &[f32],
+    w: &mut Vec<f32>,
+    z: &mut Vec<f32>,
+) -> f64 {
     debug_assert_eq!(margins.len(), y.len());
-    let mut w = Vec::with_capacity(margins.len());
-    let mut z = Vec::with_capacity(margins.len());
+    w.clear();
+    z.clear();
+    w.reserve(margins.len());
+    z.reserve(margins.len());
     let mut loss = 0f64;
     for (&m, &yy) in margins.iter().zip(y) {
         let (wi, zi) = working_stats(yy as f64, m as f64);
@@ -16,7 +34,7 @@ pub fn stats_native(margins: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, f64) {
         z.push(zi as f32);
         loss += log1pexp(-(yy as f64) * m as f64);
     }
-    (w, z, loss)
+    loss
 }
 
 /// Full objective f(β) = L(margins) + λ‖β‖₁  (paper eq. (2)).

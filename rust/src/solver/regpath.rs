@@ -8,6 +8,7 @@ use crate::data::dataset::Dataset;
 use crate::error::Result;
 use crate::metrics;
 use crate::solver::dglmnet::DGlmnetSolver;
+use crate::solver::estimator::{Estimator, NoopObserver};
 use crate::solver::model::SparseModel;
 use crate::util::timer::Stopwatch;
 
@@ -69,10 +70,11 @@ impl RegPath {
     }
 
     /// Same, reusing an existing solver (keeps the worker pool warm across
-    /// experiment sweeps).
+    /// experiment sweeps). Builds the λ_max·2⁻ⁱ ladder, then hands off to
+    /// the estimator-generic [`RegPath::run_estimator`].
     pub fn run_with_solver(
         solver: &mut DGlmnetSolver,
-        _train: &Dataset,
+        train: &Dataset,
         test: &Dataset,
         cfg: &TrainConfig,
         path_cfg: &PathConfig,
@@ -83,8 +85,22 @@ impl RegPath {
         lambdas.extend(path_cfg.extra_lambdas.iter().copied());
         lambdas.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
 
-        solver.reset();
         solver.cfg.max_iter = path_cfg.max_iter_per_lambda.min(cfg.max_iter.max(1));
+        Self::run_estimator(solver, train, test, &lambdas)
+    }
+
+    /// The generic path runner: cold-start the estimator, then fit every λ
+    /// in the given (descending) ladder with warmstarts, scoring each
+    /// fitted model on `test`. Works for **any** [`Estimator`] — d-GLMNET
+    /// and the baselines run the identical protocol, no solver-specific
+    /// branches.
+    pub fn run_estimator(
+        est: &mut dyn Estimator,
+        train: &Dataset,
+        test: &Dataset,
+        lambdas: &[f64],
+    ) -> Result<RegPath> {
+        est.reset();
 
         let mut points = Vec::with_capacity(lambdas.len());
         let mut total_iters = 0usize;
@@ -94,9 +110,10 @@ impl RegPath {
         let mut ls_secs = 0f64;
         let mut all_secs = 0f64;
 
-        for &lam in &lambdas {
+        for &lam in lambdas {
             let sw = Stopwatch::start();
-            let fit = solver.fit_lambda(lam)?;
+            est.set_lambda(lam);
+            let fit = est.fit(train, &mut NoopObserver)?;
             let wall = sw.elapsed_secs();
             let margins = fit.model.predict_margins(&test.x);
             let auprc = metrics::auprc(&margins, &test.y);
@@ -191,6 +208,24 @@ mod tests {
         let ds = synth::webspam_like(200, 800, 12, 42);
         let s = DGlmnetSolver::from_dataset(&ds, &cfg(2)).unwrap();
         assert!((lambda_max(&ds) - s.lambda_max_internal()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generic_path_runs_a_baseline_estimator() {
+        // the same ladder protocol, driven through `&mut dyn Estimator`
+        // with no solver-specific branches
+        use crate::baselines::truncated_gradient::TruncatedGradientEstimator;
+        let split = synth::dna_like(500, 30, 5, 44).split(0.8, 2);
+        let lam_max = lambda_max(&split.train);
+        let lambdas: Vec<f64> = (1..=4).map(|i| lam_max * 0.5f64.powi(i)).collect();
+        let mut est = TruncatedGradientEstimator::new(0.2, 0.7, 1.0, 3, 5);
+        let path =
+            RegPath::run_estimator(&mut est, &split.train, &split.test, &lambdas).unwrap();
+        assert_eq!(path.points.len(), 4);
+        assert!(path.points.iter().all(|p| p.objective.is_finite()));
+        assert!(path.points.iter().all(|p| (0.0..=1.0).contains(&p.auprc)));
+        // λ descends through the trait: the last fit used the smallest λ
+        assert!((est.lambda() - lambdas[3]).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Acceptance tests for the unified Estimator / FitDriver API:
+//!
+//! * stepwise-vs-monolithic equivalence — driving `FitDriver::step()` to
+//!   convergence is bit-identical (objective, β, per-iteration and total
+//!   comm-bytes ledger) to the one-shot `fit()` path, on both a sparse
+//!   (dna-like) and a dense (epsilon-like) problem;
+//! * checkpoint/resume round-trip — a checkpoint saved at iteration k and
+//!   resumed in a fresh solver (as a fresh process would) reproduces the
+//!   uninterrupted final objective exactly;
+//! * all four solvers behind `&mut dyn Estimator`;
+//! * observer early-stop and `TrainConfig::budget` caps.
+
+use dglmnet::config::{EngineKind, FitBudget, TrainConfig};
+use dglmnet::data::dataset::Dataset;
+use dglmnet::data::synth;
+use dglmnet::solver::{
+    fit_cold, lambda_max, Checkpoint, DGlmnetSolver, Estimator, FitControl, FitObserver,
+    FitStep, NoopObserver, RecordingObserver, StepOutcome, StopReason,
+};
+
+fn native_cfg(m: usize, lambda: f64) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(40)
+        .build()
+}
+
+fn assert_stepwise_equals_monolithic(ds: &Dataset, cfg: &TrainConfig, lambda: f64) {
+    let mut mono = DGlmnetSolver::from_dataset(ds, cfg).unwrap();
+    let fit_mono = mono.fit_lambda(lambda).unwrap();
+
+    let mut stepped = DGlmnetSolver::from_dataset(ds, cfg).unwrap();
+    let mut driver = stepped.driver(lambda);
+    let mut steps = 0usize;
+    loop {
+        match driver.step().unwrap() {
+            StepOutcome::Progress(_) => steps += 1,
+            StepOutcome::Finished { record, reason } => {
+                if record.is_some() {
+                    steps += 1;
+                }
+                assert_ne!(reason, StopReason::Observer);
+                break;
+            }
+        }
+    }
+    let fit_step = driver.finish();
+
+    assert_eq!(fit_mono.iterations, fit_step.iterations);
+    assert_eq!(steps, fit_step.iterations);
+    assert_eq!(fit_mono.converged, fit_step.converged);
+    assert_eq!(
+        fit_mono.objective.to_bits(),
+        fit_step.objective.to_bits(),
+        "objective must be bit-identical: {} vs {}",
+        fit_mono.objective,
+        fit_step.objective
+    );
+    assert_eq!(fit_mono.comm_bytes, fit_step.comm_bytes, "comm ledger must match");
+    assert_eq!(fit_mono.trace.len(), fit_step.trace.len());
+    for (a, b) in fit_mono.trace.iter().zip(&fit_step.trace) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.comm_bytes, b.comm_bytes, "iter {}", a.iter);
+        assert_eq!(a.fast_path, b.fast_path, "iter {}", a.iter);
+    }
+    assert_eq!(mono.beta.len(), stepped.beta.len());
+    for (j, (a, b)) in mono.beta.iter().zip(&stepped.beta).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{j}]");
+    }
+}
+
+#[test]
+fn stepwise_equals_monolithic_on_dna_like() {
+    let ds = synth::dna_like(600, 50, 5, 101);
+    let lam = lambda_max(&ds) / 8.0;
+    assert_stepwise_equals_monolithic(&ds, &native_cfg(4, lam), lam);
+}
+
+#[test]
+fn stepwise_equals_monolithic_on_epsilon_like() {
+    let ds = synth::epsilon_like(500, 32, 102);
+    let lam = lambda_max(&ds) / 16.0;
+    assert_stepwise_equals_monolithic(&ds, &native_cfg(3, lam), lam);
+}
+
+#[test]
+fn checkpoint_resume_reproduces_uninterrupted_objective_exactly() {
+    let ds = synth::dna_like(500, 40, 5, 103);
+    let lam = lambda_max(&ds) / 64.0; // small λ => plenty of iterations
+    let cfg = native_cfg(4, lam);
+
+    let mut whole = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let fit_whole = whole.fit_lambda(lam).unwrap();
+    assert!(fit_whole.iterations > 3, "need a fit long enough to interrupt");
+
+    // run 3 iterations, checkpoint, and abandon the driver (simulated crash)
+    let mut partial = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let ck = {
+        let mut driver = partial.driver(lam);
+        for _ in 0..3 {
+            match driver.step().unwrap() {
+                StepOutcome::Progress(_) => {}
+                StepOutcome::Finished { .. } => panic!("finished before the checkpoint"),
+            }
+        }
+        driver.checkpoint()
+    };
+    assert_eq!(ck.iter, 3);
+
+    // round-trip through disk, then resume in a fresh solver ("fresh
+    // process": nothing shared with `partial` but the dataset + config)
+    let path = std::env::temp_dir().join(format!("dglmnet_resume_{}.json", std::process::id()));
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck, loaded);
+
+    let mut fresh = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let fit_resumed = fresh
+        .driver_from_checkpoint(&loaded)
+        .unwrap()
+        .run(&mut NoopObserver)
+        .unwrap();
+
+    assert_eq!(
+        fit_whole.objective.to_bits(),
+        fit_resumed.objective.to_bits(),
+        "resumed objective must be exact: {} vs {}",
+        fit_whole.objective,
+        fit_resumed.objective
+    );
+    assert_eq!(fit_whole.iterations, fit_resumed.iterations);
+    assert_eq!(fit_whole.converged, fit_resumed.converged);
+    assert_eq!(fit_whole.comm_bytes, fit_resumed.comm_bytes);
+    for (j, (a, b)) in whole.beta.iter().zip(&fresh.beta).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{j}]");
+    }
+}
+
+#[test]
+fn checkpoint_rejects_mismatched_solver() {
+    let ds = synth::dna_like(200, 20, 4, 104);
+    let cfg = native_cfg(2, 0.5);
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let ck = solver.driver(0.5).checkpoint();
+    let other = synth::dna_like(150, 30, 4, 105);
+    let mut wrong = DGlmnetSolver::from_dataset(&other, &native_cfg(2, 0.5)).unwrap();
+    assert!(wrong.driver_from_checkpoint(&ck).is_err());
+}
+
+#[test]
+fn all_four_solvers_fit_through_dyn_estimator() {
+    use dglmnet::baselines::{
+        DistributedOnlineEstimator, ShotgunEstimator, TruncatedGradientEstimator,
+    };
+    let ds = synth::dna_like(400, 30, 5, 106);
+    let lam = lambda_max(&ds) / 8.0;
+    let mut dg = DGlmnetSolver::from_dataset(&ds, &native_cfg(2, lam)).unwrap();
+    let mut sg = ShotgunEstimator::new(lam, 4, 30, 7);
+    let mut tg = TruncatedGradientEstimator::new(0.3, 0.8, lam, 4, 7);
+    let mut ol = DistributedOnlineEstimator::new(2, 0.3, 0.8, lam, 4, 7);
+    let ests: Vec<&mut dyn Estimator> = vec![&mut dg, &mut sg, &mut tg, &mut ol];
+
+    let mut names = Vec::new();
+    for est in ests {
+        let name = est.name();
+        let fit = fit_cold(est, &ds, &mut NoopObserver)
+            .unwrap_or_else(|e| panic!("{name} failed: {e}"));
+        assert!(fit.objective.is_finite(), "{name}");
+        assert!(fit.iterations > 0, "{name}");
+        assert_eq!(fit.nnz(), est.model().nnz(), "{name}");
+        assert_eq!(fit.lambda, est.lambda(), "{name}");
+        names.push(name);
+    }
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), 4, "estimator names must be distinct: {names:?}");
+}
+
+struct StopAfter(usize);
+
+impl FitObserver for StopAfter {
+    fn on_iteration(&mut self, step: &FitStep<'_>) -> FitControl {
+        if step.record.iter >= self.0 {
+            FitControl::Stop
+        } else {
+            FitControl::Continue
+        }
+    }
+}
+
+#[test]
+fn observer_early_stop_ends_the_fit() {
+    let ds = synth::dna_like(500, 40, 5, 107);
+    let lam = lambda_max(&ds) / 64.0;
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &native_cfg(4, lam)).unwrap();
+    let fit = Estimator::fit(&mut solver, &ds, &mut StopAfter(3)).unwrap();
+    assert_eq!(fit.iterations, 3);
+    assert!(!fit.converged);
+    // the model reflects the 3 applied updates
+    assert_eq!(fit.nnz(), Estimator::model(&solver).nnz());
+}
+
+#[test]
+fn recording_observer_sees_the_whole_trace() {
+    let ds = synth::dna_like(300, 25, 4, 108);
+    let lam = lambda_max(&ds) / 8.0;
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &native_cfg(2, lam)).unwrap();
+    let mut obs = RecordingObserver::default();
+    let fit = Estimator::fit(&mut solver, &ds, &mut obs).unwrap();
+    assert_eq!(obs.records.len(), fit.trace.len());
+    for (a, b) in obs.records.iter().zip(&fit.trace) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+}
+
+#[test]
+fn iteration_budget_stops_between_iterations() {
+    let ds = synth::dna_like(500, 40, 5, 109);
+    let lam = lambda_max(&ds) / 64.0;
+    let mut cfg = native_cfg(4, lam);
+    cfg.budget = FitBudget { iterations: Some(2), ..FitBudget::default() };
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let mut driver = solver.driver(lam);
+    assert!(matches!(driver.step().unwrap(), StepOutcome::Progress(_)));
+    assert!(matches!(driver.step().unwrap(), StepOutcome::Progress(_)));
+    match driver.step().unwrap() {
+        StepOutcome::Finished { record, reason } => {
+            assert!(record.is_none());
+            assert_eq!(reason, StopReason::IterationBudget);
+        }
+        other => panic!("expected budget stop, got {other:?}"),
+    }
+    let fit = driver.finish();
+    assert_eq!(fit.iterations, 2);
+    assert!(!fit.converged);
+}
+
+#[test]
+fn comm_budget_stops_after_first_traffic() {
+    let ds = synth::dna_like(500, 40, 5, 110);
+    let lam = lambda_max(&ds) / 64.0;
+    let mut cfg = native_cfg(4, lam);
+    cfg.budget.comm_bytes = Some(1); // any traffic at all exhausts it
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let fit = solver.fit_lambda(lam).unwrap();
+    assert_eq!(fit.iterations, 1);
+    assert!(!fit.converged);
+    assert!(fit.comm_bytes >= 1);
+}
+
+#[test]
+fn budget_spans_resume_boundaries() {
+    // 5-iteration budget, interrupted at 2: the resumed driver may only run
+    // 3 more
+    let ds = synth::dna_like(500, 40, 5, 111);
+    let lam = lambda_max(&ds) / 64.0;
+    let mut cfg = native_cfg(4, lam);
+    cfg.budget.iterations = Some(5);
+    let mut a = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let ck = {
+        let mut driver = a.driver(lam);
+        for _ in 0..2 {
+            assert!(matches!(driver.step().unwrap(), StepOutcome::Progress(_)));
+        }
+        driver.checkpoint()
+    };
+    let mut b = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let fit = b
+        .driver_from_checkpoint(&ck)
+        .unwrap()
+        .run(&mut NoopObserver)
+        .unwrap();
+    assert_eq!(fit.iterations, 5); // 2 carried + 3 fresh
+    assert!(!fit.converged);
+    assert_eq!(fit.trace.len(), 3);
+}

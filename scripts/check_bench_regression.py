@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_iteration.json against the committed baseline.
+
+Usage: check_bench_regression.py FRESH BASELINE
+
+Fails (exit 1) when:
+  * any timing entry's median regresses by more than MAX_TIME_REGRESSION
+    (15%) relative to the baseline, or
+  * any comm-bytes counter grows at all (the sparse wire format must never
+    get chattier).
+
+Bootstrap mode: when BASELINE does not exist yet, prints instructions and
+exits 0 — commit the fresh file as the baseline to arm the gate.
+"""
+
+import json
+import sys
+
+MAX_TIME_REGRESSION = 0.15
+# timings below this are noise-dominated on shared CI runners
+MIN_COMPARABLE_SECS = 50e-6
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)["results"]
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    fresh_path, baseline_path = sys.argv[1], sys.argv[2]
+    fresh = load(fresh_path)
+    try:
+        baseline = load(baseline_path)
+    except FileNotFoundError:
+        print(f"no committed baseline at {baseline_path} — bootstrap mode.")
+        print(f"to arm the regression gate:  cp {fresh_path} {baseline_path}  and commit it.")
+        return 0
+
+    failures = []
+    compared = 0
+    for name, base in sorted(baseline.items()):
+        cur = fresh.get(name)
+        if cur is None:
+            print(f"  [gone]   {name} (baseline entry missing from fresh run)")
+            continue
+        if isinstance(base, dict) and "median_secs" in base:
+            b, c = base["median_secs"], cur["median_secs"]
+            compared += 1
+            if b >= MIN_COMPARABLE_SECS and c > b * (1 + MAX_TIME_REGRESSION):
+                failures.append(f"{name}: median {c:.6g}s vs baseline {b:.6g}s "
+                                f"(+{(c / b - 1) * 100:.1f}% > {MAX_TIME_REGRESSION * 100:.0f}%)")
+            else:
+                print(f"  [ok]     {name}: {c:.6g}s vs {b:.6g}s")
+        elif isinstance(base, dict):
+            # nested counters (e.g. fit_sparse_vs_dense_comm): any *comm_bytes
+            # growth fails
+            for key, bval in sorted(base.items()):
+                if not key.endswith("comm_bytes"):
+                    continue
+                cval = cur.get(key)
+                if cval is None:
+                    continue
+                compared += 1
+                if cval > bval:
+                    failures.append(f"{name}.{key}: {cval:.0f} bytes vs baseline "
+                                    f"{bval:.0f} (comm traffic must not grow)")
+                else:
+                    print(f"  [ok]     {name}.{key}: {cval:.0f} <= {bval:.0f} bytes")
+
+    print(f"\ncompared {compared} entries against {baseline_path}")
+    if failures:
+        print(f"\n{len(failures)} regression(s):")
+        for f in failures:
+            print(f"  FAIL  {f}")
+        return 1
+    print("no regressions.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
