@@ -13,7 +13,7 @@ use dglmnet::bench_harness::{bench, section, BenchStats};
 use dglmnet::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
 use dglmnet::cluster::network::{NetworkLedger, NetworkModel};
 use dglmnet::cluster::partition::{FeaturePartition, PartitionStrategy};
-use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
 use dglmnet::data::shuffle::shard_in_memory;
 use dglmnet::data::sparse::SparseVec;
 use dglmnet::data::synth;
@@ -276,6 +276,64 @@ fn main() {
             Json::Num(dense_wall / fit_dense.iterations.max(1) as f64),
         );
         report.insert("fit_sparse_vs_dense_comm".into(), Json::Obj(m));
+    }
+
+    // ---- per-strategy comm: reduce-Δm vs allgather-Δβ vs the cost model -
+    section("per-fit comm: exchange strategies (webspam-like, M = 8)");
+    {
+        let ds = synth::webspam_like(1_000, 20_000, 12, 11);
+        let lam = lambda_max(&ds) / 4.0;
+        let mk = |exchange: ExchangeStrategy| {
+            TrainConfig::builder()
+                .machines(8)
+                .engine(EngineKind::Native)
+                .lambda(lam)
+                .max_iter(25)
+                .exchange(exchange)
+                .build()
+        };
+        let run = |cfg: &TrainConfig| {
+            let mut s = DGlmnetSolver::from_dataset(&ds, cfg).unwrap();
+            s.fit(None).unwrap()
+        };
+        let fit_reduce = run(&mk(ExchangeStrategy::ReduceDm));
+        let fit_gather = run(&mk(ExchangeStrategy::AllGatherBeta));
+        let fit_auto = run(&mk(ExchangeStrategy::Auto));
+        // the strategy the cost model picked (majority across iterations) —
+        // check_bench_regression.py gates comm growth on this one
+        let gather_iters = fit_auto
+            .trace
+            .iter()
+            .filter(|r| r.exchange == Some(ExchangeStrategy::AllGatherBeta))
+            .count();
+        let chosen = if 2 * gather_iters >= fit_auto.trace.len() {
+            "allgather_beta"
+        } else {
+            "reduce_dm"
+        };
+        println!(
+            "reduce-Δm   : {} bytes, obj {:.6} ({} iters)",
+            fit_reduce.comm_bytes, fit_reduce.objective, fit_reduce.iterations
+        );
+        println!(
+            "allgather-Δβ: {} bytes, obj {:.6} ({} iters)",
+            fit_gather.comm_bytes, fit_gather.objective, fit_gather.iterations
+        );
+        println!(
+            "auto        : {} bytes, obj {:.6} ({} iters, picked {chosen})",
+            fit_auto.comm_bytes, fit_auto.objective, fit_auto.iterations
+        );
+        let mut m = BTreeMap::new();
+        m.insert("reduce_dm_comm_bytes".into(), Json::Num(fit_reduce.comm_bytes as f64));
+        m.insert(
+            "allgather_beta_comm_bytes".into(),
+            Json::Num(fit_gather.comm_bytes as f64),
+        );
+        m.insert("auto_comm_bytes".into(), Json::Num(fit_auto.comm_bytes as f64));
+        m.insert("chosen_strategy".into(), Json::Str(chosen.into()));
+        m.insert("auto_objective".into(), Json::Num(fit_auto.objective));
+        m.insert("reduce_dm_objective".into(), Json::Num(fit_reduce.objective));
+        report.insert("fit_exchange_strategies".into(), Json::Obj(m));
     }
 
     // ---- emit the machine-readable baseline -----------------------------

@@ -226,6 +226,7 @@ impl Estimator for DistributedOnlineEstimator {
                 max_worker_secs: snap.wall_secs,
                 sim_comm_secs: snap.sim_comm_secs,
                 comm_bytes: snap.comm_bytes,
+                exchange: None,
                 wall_secs: snap.wall_secs,
             };
             trace.push(record.clone());

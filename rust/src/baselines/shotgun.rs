@@ -251,6 +251,7 @@ impl Estimator for ShotgunEstimator {
                 max_worker_secs: wall,
                 sim_comm_secs: 0.0,
                 comm_bytes: 0,
+                exchange: None,
                 wall_secs: wall,
             };
             trace.push(record.clone());

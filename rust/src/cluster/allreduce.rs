@@ -1,48 +1,45 @@
-//! Tree AllReduce (Alg 4 step 3). The paper uses Vowpal Wabbit's
+//! Tree AllReduce (Alg 4 step 3) — the shared tree engine behind the
+//! `cluster::comm` collectives. The paper uses Vowpal Wabbit's
 //! MPI_AllReduce-style tree: reduce up a binary tree, broadcast down —
-//! `2·ceil(log2 M)` rounds, each moving the full vector, which is where the
-//! `O((n + p) ln M)` communication bound comes from.
+//! `2·ceil(log2 M)` rounds, which is where the `O((n + p) ln M)`
+//! communication bound comes from.
 //!
 //! We compute the sum exactly (deterministic pairwise order, so repeated
-//! runs bit-match) and charge the simulated network per message: every
-//! pair message in the reduce phase, and one message per concurrent
-//! broadcast round (the broadcast fan-out is modeled by its critical path,
-//! so its *byte* count is per-round, not per-edge — a per-node view of the
-//! paper's `O((n + p) ln M)` bound; inherited from the original dense
-//! model and pinned by the byte-accounting tests below).
+//! runs bit-match) and charge the simulated network per message:
 //!
-//! ## Sparse wire format
+//! * **Reduce phase** — every pair message carries the child's payload,
+//!   encoded with the cheapest codec the [`CodecPolicy`] allows for the
+//!   message class (see [`crate::cluster::codec`] — per-message byte-cost
+//!   selection replaced the old 0.25 combined-density threshold).
+//! * **Broadcast phase** — the merged vector retraces the tree with **one
+//!   message per edge** (`M - 1` edges total), levels concurrent for the
+//!   time model. (The seed charged one message per concurrent round, which
+//!   undercounted fan-out bytes ~4× at M = 16; the byte-pinning tests here
+//!   and in `tests/sparse_allreduce.rs` pin the per-edge accounting.)
 //!
-//! The paper's bound assumes dense vectors, but d-GLMNET's own sparsity
-//! precautions (§2) mean Δβ — and at high λ even ΔβᵀX — carry only a
-//! handful of non-zeros per iteration. [`TreeAllReduce::sum_sparse_into`]
-//! therefore ships [`SparseVec`] messages: each edge moves
-//! `nnz · (4 + 4)` bytes (a `u32` index plus an `f32` value per entry,
-//! [`SPARSE_ENTRY_BYTES`]), and tree nodes combine children with a sorted
-//! sparse-sparse merge in `f64`, in the same deterministic pairwise order
-//! as the dense path — so sparse and dense reductions produce *identical*
-//! sums.
+//! Tree-node merges are handed to the
+//! [`TaskExecutor`](crate::cluster::comm::TaskExecutor) in the call's
+//! [`CommCtx`] — the solver passes its `WorkerPool`, so merge work runs on
+//! worker threads, never the leader. Merges are sorted sparse-sparse
+//! `f64` unions in a fixed pairwise order (machine 2k with 2k+1), so the
+//! result is bit-identical for every executor and every codec choice
+//! except the opt-in lossy f16 codec, which quantizes a message's values
+//! exactly as the wire would.
 //!
-//! ## Dense fallback
-//!
-//! Sparse entries cost 8 bytes against 4 for a dense slot, so once the
-//! combined contribution density crosses
-//! [`TreeAllReduce::DENSE_FALLBACK_DENSITY`] (total nnz across machines
-//! relative to `dim`; well under the 0.5 break-even so no message is ever
-//! charged more than its dense equivalent) the reduction densifies and
-//! charges `dim · 4` bytes per edge, exactly like the classic dense path.
-//! A threshold of `0.0` (see [`TreeAllReduce::with_density_threshold`])
-//! forces the dense path — the ablation baseline benchmarks use this.
-//!
-//! All intermediate state lives in a caller-owned [`AllReduceScratch`], so
-//! steady-state reductions are allocation-free.
+//! All intermediate state lives in a caller-owned [`AllReduceScratch`];
+//! buffer capacities persist across calls.
 
+use std::sync::mpsc;
+
+use crate::cluster::codec::{quantize_f16_f64, CodecPolicy, MessageClass, WireCodec};
+use crate::cluster::comm::{CommCtx, Job, SerialExecutor};
 use crate::cluster::network::{NetworkLedger, NetworkModel};
-use crate::data::sparse::{SparseVec, SPARSE_ENTRY_BYTES};
+use crate::data::sparse::SparseVec;
 
 /// The result of one allreduce: tree shape plus simulated cost.
 #[derive(Debug, Clone)]
 pub struct AllReduceOutcome {
+    /// Reduce-phase rounds (`ceil(log2 M)`; the broadcast mirrors them).
     pub rounds: usize,
     pub bytes_moved: u64,
     pub simulated_secs: f64,
@@ -54,54 +51,45 @@ impl AllReduceOutcome {
     }
 }
 
-/// Reusable buffers for [`TreeAllReduce::sum_sparse_into`]: per-node sparse
-/// accumulators (`f64` for associativity-stable sums; sparse mode only), a
-/// merge double-buffer, dense-fallback accumulators (dense mode only), and
-/// the active-node lists. Capacities persist across calls, so
-/// per-iteration reductions stop allocating once the high-water mark is
-/// reached.
+/// Reusable buffers for the tree engine: per-node sparse accumulators
+/// (`f64` for associativity-stable sums), a pool of spare merge buffers
+/// that round-trip through the executor, dense accumulators (for the
+/// dense-contribution API the baselines use), and the active-node lists.
+/// Capacities persist across calls, so per-iteration exchanges stop
+/// allocating large buffers once the high-water mark is reached.
 #[derive(Debug, Default)]
 pub struct AllReduceScratch {
     acc_idx: Vec<Vec<u32>>,
     acc_val: Vec<Vec<f64>>,
-    tmp_idx: Vec<u32>,
-    tmp_val: Vec<f64>,
+    spare_idx: Vec<Vec<u32>>,
+    spare_val: Vec<Vec<f64>>,
     dense: Vec<Vec<f64>>,
     active: Vec<usize>,
     next_active: Vec<usize>,
+    pairs_per_round: Vec<usize>,
 }
 
-/// Tree AllReduce over M in-process per-machine buffers.
+/// Tree AllReduce over M in-process per-machine buffers. The sparse entry
+/// point is [`Collective::exchange`](crate::cluster::comm::Collective);
+/// [`TreeAllReduce::sum`] / [`TreeAllReduce::sum_dense_into`] serve callers
+/// whose contributions are dense vectors (the online baseline's weight
+/// averaging), and [`TreeAllReduce::sum_sparse_into`] is the serial-executor
+/// compatibility wrapper over the sparse engine.
 #[derive(Debug)]
 pub struct TreeAllReduce {
     pub model: NetworkModel,
-    /// Combined-density threshold above which [`sum_sparse_into`]
-    /// (see [`TreeAllReduce::sum_sparse_into`]) falls back to the dense
-    /// wire format. `<= 0.0` forces dense.
-    pub dense_fallback_density: f64,
 }
 
 impl TreeAllReduce {
-    /// Default switch-to-dense threshold: total contribution nnz / dim.
-    pub const DENSE_FALLBACK_DENSITY: f64 = 0.25;
-
     pub fn new(model: NetworkModel) -> Self {
-        Self { model, dense_fallback_density: Self::DENSE_FALLBACK_DENSITY }
-    }
-
-    /// Override the dense-fallback threshold (`0.0` = always dense — the
-    /// ablation baseline; `f64::INFINITY` = never fall back).
-    pub fn with_density_threshold(model: NetworkModel, threshold: f64) -> Self {
-        Self { model, dense_fallback_density: threshold }
+        Self { model }
     }
 
     /// Sum `contributions` (all same length) into one dense vector,
-    /// charging the ledger as a binary-tree reduce + broadcast. Pairwise
-    /// reduction order is fixed (machine 2k + 2k+1), making the float sum
-    /// deterministic. Compatibility wrapper over the scratch-based path —
-    /// per-pass loops should hold an [`AllReduceScratch`] and call
-    /// [`TreeAllReduce::sum_dense_into`] (or, for sparse payloads,
-    /// [`TreeAllReduce::sum_sparse_into`]) instead.
+    /// charging the ledger as a binary-tree reduce + per-edge broadcast.
+    /// Pairwise reduction order is fixed (machine 2k + 2k+1), making the
+    /// float sum deterministic. Compatibility wrapper over the
+    /// scratch-based [`TreeAllReduce::sum_dense_into`].
     pub fn sum(
         &self,
         contributions: &[Vec<f32>],
@@ -116,10 +104,10 @@ impl TreeAllReduce {
     /// Dense-wire AllReduce into a caller-reused output buffer, with all
     /// intermediate state in `scratch` — the allocation-free call path for
     /// callers whose contributions are already dense (the online baseline's
-    /// once-per-pass weight averaging). No sparse conversion anywhere:
-    /// contributions load straight into the f64 tree accumulators. Charges
-    /// `dim · 4` bytes per edge, identical (bytes, rounds, and bit-exact
-    /// sums) to the classic dense path [`TreeAllReduce::sum`] wraps.
+    /// once-per-pass weight averaging). Contributions load straight into
+    /// the f64 tree accumulators and merges run inline (one dense add per
+    /// pass is not worth a worker round-trip). Charges `dim · 4` bytes per
+    /// edge, reduce and broadcast alike.
     pub fn sum_dense_into(
         &self,
         contributions: &[Vec<f32>],
@@ -153,10 +141,11 @@ impl TreeAllReduce {
     }
 
     /// Sum sparse `contributions` (each of logical length `dim`) into
-    /// `out`, charging the ledger for the actual payload of every edge:
-    /// `nnz · 8` bytes per sparse message, or `dim · 4` after the dense
-    /// fallback kicks in. The merged result is written into `out` (sorted,
-    /// unique indices); `scratch` carries all intermediate state.
+    /// `out`, charging the ledger for the actual payload of every edge
+    /// under the lossless codecs. Serial-executor compatibility wrapper
+    /// over the `cluster::comm` engine — the solver hot path goes through
+    /// [`Collective::exchange`](crate::cluster::comm::Collective) with its
+    /// worker-pool executor instead.
     pub fn sum_sparse_into<'a>(
         &self,
         contributions: impl ExactSizeIterator<Item = &'a SparseVec> + Clone,
@@ -165,157 +154,21 @@ impl TreeAllReduce {
         scratch: &mut AllReduceScratch,
         out: &mut SparseVec,
     ) -> AllReduceOutcome {
-        let m = contributions.len();
-        assert!(m > 0, "allreduce needs at least one contribution");
-
-        // ---- cheap first pass: validate dims, pick the wire format ----
-        let mut total_nnz = 0usize;
-        for c in contributions.clone() {
-            assert_eq!(c.dim, dim, "ragged allreduce contribution");
-            total_nnz += c.nnz();
-        }
-
-        if m == 1 {
-            // single machine: free reduction, straight copy (f32 exact)
-            let c = contributions.clone().next().unwrap();
-            out.clear(dim);
-            out.indices.extend_from_slice(&c.indices);
-            out.values.extend_from_slice(&c.values);
-            return AllReduceOutcome::free();
-        }
-
-        let dense_mode = self.dense_fallback_density <= 0.0
-            || total_nnz as f64 > self.dense_fallback_density * dim as f64;
-        if dense_mode {
-            // densify straight from the contributions — no sparse staging
-            // copy on the (common at low λ) dense-fallback path
-            if scratch.dense.len() < m {
-                scratch.dense.resize_with(m, Vec::new);
-            }
-            for (k, c) in contributions.enumerate() {
-                let d = &mut scratch.dense[k];
-                d.clear();
-                d.resize(dim, 0.0);
-                for (i, v) in c.iter() {
-                    d[i as usize] = v as f64;
-                }
-            }
-            self.reduce_dense(m, dim, ledger, scratch, out)
-        } else {
-            // load the sorted f64 accumulators for the sparse merges
-            if scratch.acc_idx.len() < m {
-                scratch.acc_idx.resize_with(m, Vec::new);
-                scratch.acc_val.resize_with(m, Vec::new);
-            }
-            for (k, c) in contributions.enumerate() {
-                let idx = &mut scratch.acc_idx[k];
-                let val = &mut scratch.acc_val[k];
-                idx.clear();
-                val.clear();
-                idx.extend_from_slice(&c.indices);
-                val.extend(c.values.iter().map(|&v| v as f64));
-            }
-            self.reduce_sparse(m, dim, ledger, scratch, out)
-        }
-    }
-
-    /// Sparse tree reduce: sorted merges, `nnz · 8`-byte edges.
-    ///
-    /// NOTE: the pairing/round/broadcast walk must stay in lockstep with
-    /// [`TreeAllReduce::reduce_dense`] — the sparse-vs-dense equivalence
-    /// guarantees (identical sums, identical trajectories) depend on both
-    /// summing in exactly the same pairwise order. The equivalence tests
-    /// in `tests/sparse_allreduce.rs` pin this down.
-    fn reduce_sparse(
-        &self,
-        m: usize,
-        dim: usize,
-        ledger: &NetworkLedger,
-        scratch: &mut AllReduceScratch,
-        out: &mut SparseVec,
-    ) -> AllReduceOutcome {
-        scratch.active.clear();
-        scratch.active.extend(0..m);
-        let mut rounds = 0usize;
-        let mut bytes = 0u64;
-        let mut secs_total = 0f64;
-
-        // ---- reduce up the tree ----
-        while scratch.active.len() > 1 {
-            rounds += 1;
-            // all pair-messages in a round are concurrent: charge the max,
-            // not the sum, for time; bytes are summed.
-            let mut round_secs = 0f64;
-            scratch.next_active.clear();
-            let pairs = scratch.active.len() / 2;
-            for t in 0..pairs {
-                let a = scratch.active[2 * t];
-                let b = scratch.active[2 * t + 1];
-                let msg_bytes = scratch.acc_idx[b].len() as u64 * SPARSE_ENTRY_BYTES;
-                let t_secs = ledger.record(&self.model, msg_bytes);
-                bytes += msg_bytes;
-                round_secs = round_secs.max(t_secs);
-                merge_sorted_into(
-                    &scratch.acc_idx[a],
-                    &scratch.acc_val[a],
-                    &scratch.acc_idx[b],
-                    &scratch.acc_val[b],
-                    &mut scratch.tmp_idx,
-                    &mut scratch.tmp_val,
-                );
-                std::mem::swap(&mut scratch.acc_idx[a], &mut scratch.tmp_idx);
-                std::mem::swap(&mut scratch.acc_val[a], &mut scratch.tmp_val);
-                scratch.next_active.push(a);
-            }
-            if scratch.active.len() % 2 == 1 {
-                scratch.next_active.push(*scratch.active.last().unwrap());
-            }
-            std::mem::swap(&mut scratch.active, &mut scratch.next_active);
-            secs_total += round_secs;
-        }
-
-        // ---- broadcast down: same tree depth, same concurrency ----
-        let root = scratch.active[0];
-        let root_bytes = scratch.acc_idx[root].len() as u64 * SPARSE_ENTRY_BYTES;
-        let depth = (m as f64).log2().ceil() as usize;
-        for _ in 0..depth {
-            let t = ledger.record(&self.model, root_bytes);
-            bytes += root_bytes;
-            secs_total += t;
-        }
-
-        out.clear(dim);
-        for (i, &v) in scratch.acc_idx[root].iter().zip(&scratch.acc_val[root]) {
-            out.push(*i, v as f32);
-        }
-        AllReduceOutcome { rounds, bytes_moved: bytes, simulated_secs: secs_total }
-    }
-
-    /// Dense tree reduce over the fallback accumulators: `dim · 4`-byte
-    /// edges, identical charging (and identical f64 sums) to the classic
-    /// dense AllReduce. Keep the tree walk in lockstep with
-    /// [`TreeAllReduce::reduce_sparse`] (see the note there).
-    fn reduce_dense(
-        &self,
-        m: usize,
-        dim: usize,
-        ledger: &NetworkLedger,
-        scratch: &mut AllReduceScratch,
-        out: &mut SparseVec,
-    ) -> AllReduceOutcome {
-        let (root, outcome) = self.dense_tree(m, dim, ledger, scratch);
-        out.clear(dim);
-        for (i, &v) in scratch.dense[root].iter().enumerate() {
-            if v != 0.0 {
-                out.push(i as u32, v as f32);
-            }
-        }
-        outcome
+        let refs: Vec<&SparseVec> = contributions.collect();
+        let ctx = CommCtx {
+            ledger,
+            policy: CodecPolicy::lossless(),
+            class: MessageClass::Margins,
+            exec: &SerialExecutor,
+            charge: true,
+        };
+        run_sparse_exchange(&self.model, refs.len(), &|k| refs[k], dim, &ctx, scratch, out)
     }
 
     /// The shared dense tree walk over `scratch.dense[0..m]`: reduce up,
-    /// broadcast down, charging `dim · 4` bytes per edge. Leaves the merged
-    /// f64 sums in `scratch.dense[root]` and returns the root index.
+    /// broadcast down (per edge), charging `dim · 4` bytes per message.
+    /// Leaves the merged f64 sums in `scratch.dense[root]` and returns the
+    /// root index.
     fn dense_tree(
         &self,
         m: usize,
@@ -326,6 +179,7 @@ impl TreeAllReduce {
         let vec_bytes = (dim * std::mem::size_of::<f32>()) as u64;
         scratch.active.clear();
         scratch.active.extend(0..m);
+        scratch.pairs_per_round.clear();
         let mut rounds = 0usize;
         let mut bytes = 0u64;
         let mut secs_total = 0f64;
@@ -335,6 +189,7 @@ impl TreeAllReduce {
             let mut round_secs = 0f64;
             scratch.next_active.clear();
             let pairs = scratch.active.len() / 2;
+            scratch.pairs_per_round.push(pairs);
             for t in 0..pairs {
                 let a = scratch.active[2 * t];
                 let b = scratch.active[2 * t + 1];
@@ -355,16 +210,184 @@ impl TreeAllReduce {
             secs_total += round_secs;
         }
 
-        let depth = (m as f64).log2().ceil() as usize;
-        for _ in 0..depth {
-            let t = ledger.record(&self.model, vec_bytes);
-            bytes += vec_bytes;
-            secs_total += t;
+        // broadcast: the merged vector retraces the tree, one message per
+        // edge (m - 1 total), levels concurrent for the time model
+        for &pairs in scratch.pairs_per_round.iter().rev() {
+            let mut round_secs = 0f64;
+            for _ in 0..pairs {
+                let t = ledger.record(&self.model, vec_bytes);
+                bytes += vec_bytes;
+                round_secs = round_secs.max(t);
+            }
+            secs_total += round_secs;
         }
 
         let root = scratch.active[0];
         (root, AllReduceOutcome { rounds, bytes_moved: bytes, simulated_secs: secs_total })
     }
+}
+
+/// What one off-thread merge sends back: the merged node (installed at
+/// `slot`) plus the four input buffers, recycled into the spare pool.
+struct MergeDone {
+    slot: usize,
+    idx: Vec<u32>,
+    val: Vec<f64>,
+    spare_a: (Vec<u32>, Vec<f64>),
+    spare_b: (Vec<u32>, Vec<f64>),
+}
+
+/// The sparse exchange engine shared by every `cluster::comm` collective:
+/// validate + load the f64 accumulators, then run the charged tree walk.
+/// `m == 1` is a free reduction (straight copy, f32 exact).
+pub(crate) fn run_sparse_exchange<'a>(
+    model: &NetworkModel,
+    m: usize,
+    contrib: &dyn Fn(usize) -> &'a SparseVec,
+    dim: usize,
+    ctx: &CommCtx<'_>,
+    scratch: &mut AllReduceScratch,
+    out: &mut SparseVec,
+) -> AllReduceOutcome {
+    assert!(m > 0, "allreduce needs at least one contribution");
+    for k in 0..m {
+        assert_eq!(contrib(k).dim, dim, "ragged allreduce contribution");
+    }
+    if m == 1 {
+        let c = contrib(0);
+        out.clear(dim);
+        out.indices.extend_from_slice(&c.indices);
+        out.values.extend_from_slice(&c.values);
+        return AllReduceOutcome::free();
+    }
+    if scratch.acc_idx.len() < m {
+        scratch.acc_idx.resize_with(m, Vec::new);
+        scratch.acc_val.resize_with(m, Vec::new);
+    }
+    for k in 0..m {
+        // slots emptied by a previous walk's `take` are refilled from the
+        // spare pool, so steady-state exchanges reuse the same heap blocks
+        if scratch.acc_idx[k].capacity() == 0 {
+            if let Some(s) = scratch.spare_idx.pop() {
+                scratch.acc_idx[k] = s;
+            }
+            if let Some(s) = scratch.spare_val.pop() {
+                scratch.acc_val[k] = s;
+            }
+        }
+        let c = contrib(k);
+        let idx = &mut scratch.acc_idx[k];
+        let val = &mut scratch.acc_val[k];
+        idx.clear();
+        val.clear();
+        idx.extend_from_slice(&c.indices);
+        val.extend(c.values.iter().map(|&v| v as f64));
+    }
+    sparse_tree_exchange(model, m, dim, ctx, scratch, out)
+}
+
+/// The charged sparse tree walk: reduce up (merges on the executor, one
+/// codec-picked message per pair), broadcast the merged root down per
+/// edge. With `ctx.charge = false` the same merges run with zero wire cost
+/// (the allgather-Δβ strategy's leader-local Δm recomputation).
+fn sparse_tree_exchange(
+    model: &NetworkModel,
+    m: usize,
+    dim: usize,
+    ctx: &CommCtx<'_>,
+    scratch: &mut AllReduceScratch,
+    out: &mut SparseVec,
+) -> AllReduceOutcome {
+    scratch.active.clear();
+    scratch.active.extend(0..m);
+    scratch.pairs_per_round.clear();
+    let mut rounds = 0usize;
+    let mut bytes = 0u64;
+    let mut secs_total = 0f64;
+    let (done_tx, done_rx) = mpsc::channel::<MergeDone>();
+
+    while scratch.active.len() > 1 {
+        rounds += 1;
+        // all pair-messages in a round are concurrent: charge the max, not
+        // the sum, for time; bytes are summed
+        let mut round_secs = 0f64;
+        scratch.next_active.clear();
+        let pairs = scratch.active.len() / 2;
+        scratch.pairs_per_round.push(pairs);
+        let mut jobs: Vec<Job> = Vec::with_capacity(pairs);
+        for t in 0..pairs {
+            let a = scratch.active[2 * t];
+            let b = scratch.active[2 * t + 1];
+            if ctx.charge {
+                let (codec, cost) = ctx.policy.pick(&scratch.acc_idx[b], dim, ctx.class);
+                let t_secs = ctx.ledger.record(model, cost);
+                bytes += cost;
+                round_secs = round_secs.max(t_secs);
+                if codec == WireCodec::DeltaVarintF16 {
+                    quantize_f16_f64(&mut scratch.acc_val[b]);
+                }
+            }
+            let a_idx = std::mem::take(&mut scratch.acc_idx[a]);
+            let a_val = std::mem::take(&mut scratch.acc_val[a]);
+            let b_idx = std::mem::take(&mut scratch.acc_idx[b]);
+            let b_val = std::mem::take(&mut scratch.acc_val[b]);
+            let mut o_idx = scratch.spare_idx.pop().unwrap_or_default();
+            let mut o_val = scratch.spare_val.pop().unwrap_or_default();
+            let tx = done_tx.clone();
+            jobs.push(Box::new(move || {
+                merge_sorted_into(&a_idx, &a_val, &b_idx, &b_val, &mut o_idx, &mut o_val);
+                let _ = tx.send(MergeDone {
+                    slot: a,
+                    idx: o_idx,
+                    val: o_val,
+                    spare_a: (a_idx, a_val),
+                    spare_b: (b_idx, b_val),
+                });
+            }));
+            scratch.next_active.push(a);
+        }
+        if scratch.active.len() % 2 == 1 {
+            scratch.next_active.push(*scratch.active.last().unwrap());
+        }
+        ctx.exec.run_all(jobs);
+        for _ in 0..pairs {
+            let d = done_rx.recv().expect("tree-merge worker dropped its result");
+            scratch.acc_idx[d.slot] = d.idx;
+            scratch.acc_val[d.slot] = d.val;
+            let (si, sv) = d.spare_a;
+            scratch.spare_idx.push(si);
+            scratch.spare_val.push(sv);
+            let (si, sv) = d.spare_b;
+            scratch.spare_idx.push(si);
+            scratch.spare_val.push(sv);
+        }
+        std::mem::swap(&mut scratch.active, &mut scratch.next_active);
+        secs_total += round_secs;
+    }
+
+    // broadcast: one message per edge, the merged root's payload each time
+    let root = scratch.active[0];
+    if ctx.charge {
+        let (codec, cost) = ctx.policy.pick(&scratch.acc_idx[root], dim, ctx.class);
+        if codec == WireCodec::DeltaVarintF16 {
+            quantize_f16_f64(&mut scratch.acc_val[root]);
+        }
+        for &pairs in scratch.pairs_per_round.iter().rev() {
+            let mut round_secs = 0f64;
+            for _ in 0..pairs {
+                let t = ctx.ledger.record(model, cost);
+                bytes += cost;
+                round_secs = round_secs.max(t);
+            }
+            secs_total += round_secs;
+        }
+    }
+
+    out.clear(dim);
+    for (i, &v) in scratch.acc_idx[root].iter().zip(&scratch.acc_val[root]) {
+        out.push(*i, v as f32);
+    }
+    AllReduceOutcome { rounds, bytes_moved: bytes, simulated_secs: secs_total }
 }
 
 /// Two-pointer merge of two sorted sparse accumulators into `(oi, ov)`;
@@ -411,6 +434,8 @@ fn merge_sorted_into(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::comm::{Collective, TaskExecutor};
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn sum_serial(contribs: &[Vec<f32>]) -> Vec<f64> {
         let mut acc = vec![0f64; contribs[0].len()];
@@ -438,6 +463,9 @@ mod tests {
             if m > 1 {
                 assert_eq!(outcome.rounds, (m as f64).log2().ceil() as usize);
                 assert!(outcome.bytes_moved > 0);
+                // per-edge accounting: reduce + broadcast each move one
+                // dim·4 message per edge, (m - 1) edges per phase
+                assert_eq!(outcome.bytes_moved, 2 * (m as u64 - 1) * 50 * 4);
             }
         }
     }
@@ -531,7 +559,8 @@ mod tests {
     #[test]
     fn sparse_wire_charges_payload_not_dim() {
         // two contributions with 2 nnz each over a huge dim: the reduce edge
-        // carries 2 entries (16 bytes) and each broadcast edge the merged 4
+        // carries 2 entries (16 bytes) and the one broadcast edge the
+        // merged 4 (32 bytes)
         let a = {
             let mut v = SparseVec::new(1_000_000);
             v.push(10, 1.0);
@@ -550,16 +579,18 @@ mod tests {
         let mut out = SparseVec::new(0);
         let o =
             ar.sum_sparse_into([&a, &b].into_iter(), 1_000_000, &ledger, &mut scratch, &mut out);
-        // reduce: b's 2 entries = 16 bytes; broadcast: 1 round × 4 entries = 32
         assert_eq!(o.bytes_moved, 16 + 32);
         assert_eq!(out.nnz(), 4);
         assert_eq!(ledger.total_bytes(), o.bytes_moved);
     }
 
     #[test]
-    fn dense_fallback_above_density_threshold() {
+    fn per_message_cost_model_picks_cheapest_wire() {
+        // 30-nnz reduce message over dim = 100: sparse (240) beats dense
+        // (400); the merged 60-nnz broadcast payload flips to dense (400 <
+        // 480). The old whole-tree 0.25 density fallback would have charged
+        // 800 — the per-message model charges 640.
         let dim = 100usize;
-        // combined density 0.6 > 0.25 threshold -> dense wire format
         let a = sparse_of(&(0..dim).map(|i| if i < 30 { 1.0 } else { 0.0 }).collect::<Vec<_>>());
         let b = sparse_of(&(0..dim).map(|i| if i >= 70 { 2.0 } else { 0.0 }).collect::<Vec<_>>());
         let ar = TreeAllReduce::new(NetworkModel::gigabit());
@@ -567,9 +598,30 @@ mod tests {
         let mut scratch = AllReduceScratch::default();
         let mut out = SparseVec::new(0);
         let o = ar.sum_sparse_into([&a, &b].into_iter(), dim, &ledger, &mut scratch, &mut out);
-        // dense edges: (1 reduce + 1 broadcast) × dim × 4 bytes
-        assert_eq!(o.bytes_moved, 2 * dim as u64 * 4);
+        assert_eq!(o.bytes_moved, 240 + 400);
         assert_eq!(out.nnz(), 60);
+    }
+
+    #[test]
+    fn broadcast_charges_per_edge_not_per_round() {
+        // M = 4, one distinct entry per machine: reduce edges move 8, 8 and
+        // 16 bytes; the 4-entry root then crosses all M - 1 = 3 broadcast
+        // edges (the seed's per-round model would have charged only 2)
+        let contribs: Vec<SparseVec> = (0..4)
+            .map(|k| {
+                let mut v = SparseVec::new(1_000);
+                v.push(k as u32, (k + 1) as f32);
+                v
+            })
+            .collect();
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let ledger = NetworkLedger::new();
+        let mut scratch = AllReduceScratch::default();
+        let mut out = SparseVec::new(0);
+        let o = ar.sum_sparse_into(contribs.iter(), 1_000, &ledger, &mut scratch, &mut out);
+        assert_eq!(o.rounds, 2);
+        assert_eq!(o.bytes_moved, 8 + 8 + 16 + 3 * 32);
+        assert_eq!(out.nnz(), 4);
     }
 
     #[test]
@@ -589,8 +641,6 @@ mod tests {
     fn scratch_reuse_is_stable_across_calls() {
         // same reduction twice through one scratch must give identical
         // results and identical ledger charges (buffers fully reset)
-        // ~11 nnz per contribution over dim 400: total density ~0.14 stays
-        // under the 0.25 fallback, so this runs the sparse merge path
         let dense: Vec<Vec<f32>> = (0..5)
             .map(|k| {
                 (0..400).map(|i| if (i + k) % 37 == 0 { (k + i) as f32 } else { 0.0 }).collect()
@@ -612,5 +662,84 @@ mod tests {
         for i in 0..400 {
             assert!((got[i] as f64 - want[i]).abs() < 1e-5, "i = {i}");
         }
+    }
+
+    /// Counts jobs and runs them inline — proves the merges go through the
+    /// executor (one job per tree edge) without changing the result.
+    struct CountingExec(AtomicUsize);
+
+    impl TaskExecutor for CountingExec {
+        fn run_all(&self, jobs: Vec<Job>) {
+            self.0.fetch_add(jobs.len(), Ordering::Relaxed);
+            for job in jobs {
+                job();
+            }
+        }
+    }
+
+    #[test]
+    fn every_tree_merge_runs_through_the_executor() {
+        for m in [2usize, 5, 8] {
+            let dense: Vec<Vec<f32>> = (0..m)
+                .map(|k| {
+                    (0..200)
+                        .map(|i| if (i + 3 * k) % 11 == 0 { (i + k) as f32 } else { 0.0 })
+                        .collect()
+                })
+                .collect();
+            let sparse: Vec<SparseVec> = dense.iter().map(|d| sparse_of(d)).collect();
+            let refs: Vec<&SparseVec> = sparse.iter().collect();
+            let ar = TreeAllReduce::new(NetworkModel::gigabit());
+
+            let serial_ledger = NetworkLedger::new();
+            let mut scratch = AllReduceScratch::default();
+            let mut want = SparseVec::new(0);
+            ar.sum_sparse_into(sparse.iter(), 200, &serial_ledger, &mut scratch, &mut want);
+
+            let counting = CountingExec(AtomicUsize::new(0));
+            let ledger = NetworkLedger::new();
+            let ctx = CommCtx {
+                ledger: &ledger,
+                policy: CodecPolicy::lossless(),
+                class: MessageClass::Margins,
+                exec: &counting,
+                charge: true,
+            };
+            let mut out = SparseVec::new(0);
+            let o = ar.exchange(m, &|k| refs[k], 200, &ctx, &mut scratch, &mut out);
+            assert_eq!(counting.0.load(Ordering::Relaxed), m - 1, "one merge per edge");
+            assert_eq!(out, want, "executor must not change the math");
+            assert_eq!(o.bytes_moved, serial_ledger.total_bytes());
+        }
+    }
+
+    #[test]
+    fn uncharged_exchange_moves_no_bytes_but_merges_identically() {
+        // charge = false models the allgather-Δβ strategy's leader-local
+        // Δm recomputation: same deterministic merge, zero wire traffic
+        let dense: Vec<Vec<f32>> = (0..4)
+            .map(|k| (0..60).map(|i| if (i + k) % 7 == 0 { i as f32 + 0.5 } else { 0.0 }).collect())
+            .collect();
+        let sparse: Vec<SparseVec> = dense.iter().map(|d| sparse_of(d)).collect();
+        let refs: Vec<&SparseVec> = sparse.iter().collect();
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let mut scratch = AllReduceScratch::default();
+        let mut want = SparseVec::new(0);
+        ar.sum_sparse_into(sparse.iter(), 60, &NetworkLedger::new(), &mut scratch, &mut want);
+
+        let ledger = NetworkLedger::new();
+        let ctx = CommCtx {
+            ledger: &ledger,
+            policy: CodecPolicy::lossless(),
+            class: MessageClass::Margins,
+            exec: &SerialExecutor,
+            charge: false,
+        };
+        let mut out = SparseVec::new(0);
+        let o = ar.exchange(4, &|k| refs[k], 60, &ctx, &mut scratch, &mut out);
+        assert_eq!(out, want);
+        assert_eq!(o.bytes_moved, 0);
+        assert_eq!(ledger.total_bytes(), 0);
+        assert_eq!(o.simulated_secs, 0.0);
     }
 }

@@ -1,0 +1,463 @@
+//! Wire codecs for the simulated cluster: how one sparse message is laid
+//! out on the wire, what it costs in bytes, and (for the lossy codec) what
+//! it does to the values. Every edge of every collective picks its codec
+//! per message through [`CodecPolicy::pick`] — a byte-cost model that
+//! replaces the old single hard-coded 0.25 density threshold.
+//!
+//! Three codecs:
+//!
+//! * [`WireCodec::DenseF32`] — the classic dense vector: `dim · 4` bytes,
+//!   position is implicit. Cheapest once a message is denser than 50%.
+//! * [`WireCodec::SparseU32F32`] — the PR-1 sparse format: `nnz · (4 + 4)`
+//!   bytes (`u32` index + `f32` value per entry).
+//! * [`WireCodec::DeltaVarintF16`] — delta-encoded indices as LEB128
+//!   varints (sorted-unique indices make the gaps small, so most gaps fit
+//!   one byte) plus IEEE 754 half-precision values: typically `nnz · 3`
+//!   bytes, a further ~2.6× under the sparse format. **Lossy** in the
+//!   values (relative error ≤ 2⁻¹¹ in the f16 normal range), so it is
+//!   off by default and only eligible where the policy explicitly allows
+//!   it for the message's [`MessageClass`] — never for β-carrying
+//!   messages unless `f16_beta` is set.
+//!
+//! The cost functions ([`WireCodec::encoded_bytes`]) are exact: they equal
+//! `encode(msg).len()` byte for byte (pinned by `tests/wire_codec.rs`), so
+//! the ledger charges precisely what a real serializer would move. The hot
+//! path charges costs without materializing buffers; `encode`/`decode`
+//! exist for tests and for real exporters.
+
+use crate::data::sparse::{SparseVec, SPARSE_ENTRY_BYTES};
+use crate::error::{DlrError, Result};
+
+// ---------------------------------------------------------------------------
+// f16 conversion (no `half` crate in the vendored set)
+// ---------------------------------------------------------------------------
+
+/// Convert an `f32` to IEEE 754 binary16 bits, rounding to nearest-even.
+/// Overflow goes to ±inf, underflow to (sub)normals then ±0.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // inf stays inf; NaN keeps a quiet payload bit
+        return if abs > 0x7F80_0000 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let exp = (abs >> 23) as i32 - 127 + 15;
+    let mant = abs & 0x007F_FFFF;
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // too small for a subnormal: rounds to zero
+        }
+        // subnormal: shift the (implicit-1) mantissa into place
+        let m = mant | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half & 1) == 1) {
+            half + 1
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    let half = ((exp as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1FFF;
+    // a mantissa carry overflows into the exponent field, which is exactly
+    // the right rounding behavior (up to and including carry into inf)
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half + 1
+    } else {
+        half
+    };
+    sign | rounded as u16
+}
+
+/// Convert IEEE 754 binary16 bits back to an `f32` (exact — every f16 value
+/// is representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    } else if mant == 0 {
+        sign // ±0
+    } else {
+        // subnormal: normalize (value = mant · 2^-24)
+        let p = 31 - mant.leading_zeros(); // MSB position, 0..=9
+        let exp32 = p + 103; // (p - 24) + 127
+        let mant32 = (mant << (23 - p)) & 0x007F_FFFF;
+        sign | (exp32 << 23) | mant32
+    };
+    f32::from_bits(bits)
+}
+
+/// Round a value through the f16 wire (what the lossy codec does to every
+/// payload value).
+pub fn f16_round_trip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Quantize a slice of f64 tree accumulators through the f16 wire, in
+/// place — applied to a message's payload when the cost model picks
+/// [`WireCodec::DeltaVarintF16`] for its edge.
+pub fn quantize_f16_f64(vals: &mut [f64]) {
+    for v in vals.iter_mut() {
+        *v = f16_round_trip(*v as f32) as f64;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LEB128 varints
+// ---------------------------------------------------------------------------
+
+/// Encoded length of one LEB128 varint.
+pub fn varint_len(mut v: u32) -> u64 {
+    let mut n = 1u64;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u32) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    let mut v = 0u32;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes
+            .get(*pos)
+            .ok_or_else(|| DlrError::parse("wire", "truncated varint"))?;
+        *pos += 1;
+        let chunk = (b & 0x7F) as u32;
+        // a 5th byte may only carry the top 4 bits of a u32; anything more
+        // (or a 6th byte) is an overflow, not silent truncation
+        if shift >= 32 || (shift == 28 && chunk > 0x0F) {
+            return Err(DlrError::parse("wire", "varint overflows u32"));
+        }
+        v |= chunk << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost functions (exact — equal to encode().len())
+// ---------------------------------------------------------------------------
+
+/// Dense `f32` wire size: `dim · 4` bytes.
+pub fn dense_wire_bytes(dim: usize) -> u64 {
+    dim as u64 * 4
+}
+
+/// Sparse `u32 + f32` wire size: `nnz · 8` bytes.
+pub fn sparse_wire_bytes(nnz: usize) -> u64 {
+    nnz as u64 * SPARSE_ENTRY_BYTES
+}
+
+/// Delta-varint + f16 wire size for a sorted-unique index list:
+/// `Σ varint_len(gap) + 2 · nnz` bytes.
+pub fn delta_varint_f16_wire_bytes(indices: &[u32]) -> u64 {
+    let mut bytes = 0u64;
+    let mut prev = 0u32;
+    for &i in indices {
+        bytes += varint_len(i - prev) + 2;
+        prev = i;
+    }
+    bytes
+}
+
+// ---------------------------------------------------------------------------
+// Codecs
+// ---------------------------------------------------------------------------
+
+/// One wire layout for a sparse message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCodec {
+    /// Positional `f32` values, `dim · 4` bytes.
+    DenseF32,
+    /// `(u32 index, f32 value)` entries, `nnz · 8` bytes.
+    SparseU32F32,
+    /// LEB128 index gaps + f16 values — lossy, opt-in per message class.
+    DeltaVarintF16,
+}
+
+impl WireCodec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireCodec::DenseF32 => "dense-f32",
+            WireCodec::SparseU32F32 => "sparse-u32f32",
+            WireCodec::DeltaVarintF16 => "delta-varint-f16",
+        }
+    }
+
+    /// Does decode(encode(msg)) reproduce the values bit for bit?
+    pub fn is_lossless(&self) -> bool {
+        !matches!(self, WireCodec::DeltaVarintF16)
+    }
+
+    /// Exact wire size of `msg` under this codec — byte-for-byte equal to
+    /// `self.encode(msg).len()` (the ledger charges this without
+    /// materializing the buffer).
+    pub fn encoded_bytes(&self, msg: &SparseVec) -> u64 {
+        match self {
+            WireCodec::DenseF32 => dense_wire_bytes(msg.dim),
+            WireCodec::SparseU32F32 => sparse_wire_bytes(msg.nnz()),
+            WireCodec::DeltaVarintF16 => delta_varint_f16_wire_bytes(&msg.indices),
+        }
+    }
+
+    /// Serialize `msg`. Explicit zero entries survive the sparse codecs but
+    /// are (by construction) dropped by a dense round-trip.
+    pub fn encode(&self, msg: &SparseVec) -> Vec<u8> {
+        match self {
+            WireCodec::DenseF32 => {
+                let mut out = vec![0u8; msg.dim * 4];
+                for (i, v) in msg.iter() {
+                    let at = i as usize * 4;
+                    out[at..at + 4].copy_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            WireCodec::SparseU32F32 => {
+                let mut out = Vec::with_capacity(msg.nnz() * 8);
+                for (i, v) in msg.iter() {
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            WireCodec::DeltaVarintF16 => {
+                let mut out = Vec::with_capacity(msg.nnz() * 3);
+                let mut prev = 0u32;
+                for (i, v) in msg.iter() {
+                    write_varint(&mut out, i - prev);
+                    out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                    prev = i;
+                }
+                out
+            }
+        }
+    }
+
+    /// Deserialize a codec-produced buffer back into a message of logical
+    /// length `dim`.
+    pub fn decode(&self, bytes: &[u8], dim: usize) -> Result<SparseVec> {
+        let mut out = SparseVec::new(dim);
+        match self {
+            WireCodec::DenseF32 => {
+                if bytes.len() != dim * 4 {
+                    return Err(DlrError::parse(
+                        "wire",
+                        format!("dense payload is {} bytes, want {}", bytes.len(), dim * 4),
+                    ));
+                }
+                for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                    let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                    if v != 0.0 {
+                        out.push(i as u32, v);
+                    }
+                }
+            }
+            WireCodec::SparseU32F32 => {
+                if bytes.len() % 8 != 0 {
+                    return Err(DlrError::parse("wire", "sparse payload not a multiple of 8"));
+                }
+                for chunk in bytes.chunks_exact(8) {
+                    let i = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                    let v = f32::from_le_bytes([chunk[4], chunk[5], chunk[6], chunk[7]]);
+                    if i as usize >= dim {
+                        return Err(DlrError::parse("wire", format!("index {i} >= dim {dim}")));
+                    }
+                    // uphold the sorted-unique invariant instead of handing
+                    // a malformed payload to SparseVec::push
+                    if out.indices.last().is_some_and(|&last| last >= i) {
+                        return Err(DlrError::parse("wire", "indices not strictly ascending"));
+                    }
+                    out.push(i, v);
+                }
+            }
+            WireCodec::DeltaVarintF16 => {
+                let mut pos = 0usize;
+                let mut acc = 0u32;
+                let mut first = true;
+                while pos < bytes.len() {
+                    let gap = read_varint(bytes, &mut pos)?;
+                    if pos + 2 > bytes.len() {
+                        return Err(DlrError::parse("wire", "truncated f16 value"));
+                    }
+                    let h = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]);
+                    pos += 2;
+                    // a zero gap is only legal for the very first entry
+                    // (absolute index 0); afterwards it would duplicate one
+                    if !first && gap == 0 {
+                        return Err(DlrError::parse("wire", "zero index gap"));
+                    }
+                    acc = acc
+                        .checked_add(gap)
+                        .ok_or_else(|| DlrError::parse("wire", "index overflows u32"))?;
+                    if acc as usize >= dim {
+                        return Err(DlrError::parse("wire", format!("index {acc} >= dim {dim}")));
+                    }
+                    out.push(acc, f16_bits_to_f32(h));
+                    first = false;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy: which codecs a message may use
+// ---------------------------------------------------------------------------
+
+/// What a message carries — the lossy codec is gated per class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MessageClass {
+    /// Example-space Δmargins (Δβᵀx per machine).
+    Margins,
+    /// Feature-space Δβ — β-carrying, f16-ineligible unless explicitly
+    /// enabled (quantizing the model update itself is rarely worth it).
+    Beta,
+}
+
+/// Which codecs the cost model may choose from, per message class.
+/// Defaults are fully lossless; `force_dense` reproduces the pre-sparsity
+/// dense baseline (the `dense_allreduce` ablation).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CodecPolicy {
+    /// Charge every message at the dense `dim · 4` rate (ablation baseline).
+    pub force_dense: bool,
+    /// Allow [`WireCodec::DeltaVarintF16`] for [`MessageClass::Margins`].
+    pub f16_margins: bool,
+    /// Allow [`WireCodec::DeltaVarintF16`] for [`MessageClass::Beta`].
+    pub f16_beta: bool,
+}
+
+impl CodecPolicy {
+    /// Lossless codecs only (the default production policy).
+    pub fn lossless() -> Self {
+        Self::default()
+    }
+
+    pub fn allows_f16(&self, class: MessageClass) -> bool {
+        match class {
+            MessageClass::Margins => self.f16_margins,
+            MessageClass::Beta => self.f16_beta,
+        }
+    }
+
+    /// Pick the cheapest eligible codec for one message (sorted-unique
+    /// `indices` over logical length `dim`) and return it with its exact
+    /// byte cost. Ties prefer the sparse format; the result never costs
+    /// more than the dense equivalent unless `force_dense` is set (where
+    /// it *is* the dense equivalent).
+    pub fn pick(&self, indices: &[u32], dim: usize, class: MessageClass) -> (WireCodec, u64) {
+        let dense = dense_wire_bytes(dim);
+        if self.force_dense {
+            return (WireCodec::DenseF32, dense);
+        }
+        let sparse = sparse_wire_bytes(indices.len());
+        let (mut best, mut cost) = if dense < sparse {
+            (WireCodec::DenseF32, dense)
+        } else {
+            (WireCodec::SparseU32F32, sparse)
+        };
+        if self.allows_f16(class) {
+            let delta = delta_varint_f16_wire_bytes(indices);
+            if delta < cost {
+                best = WireCodec::DeltaVarintF16;
+                cost = delta;
+            }
+        }
+        (best, cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_specials_round_trip() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0] {
+            assert_eq!(f16_round_trip(x), x, "{x} must be exactly representable");
+        }
+        assert_eq!(f16_round_trip(f32::INFINITY), f32::INFINITY);
+        assert_eq!(f16_round_trip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // overflow clamps to inf, tiny values flush toward zero
+        assert_eq!(f16_round_trip(1e6), f32::INFINITY);
+        assert_eq!(f16_round_trip(1e-10), 0.0);
+        assert!(f16_round_trip(f32::NAN).is_nan());
+        // signed zero is preserved
+        assert_eq!(f16_round_trip(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_relative_error_is_bounded_in_normal_range() {
+        for k in 0..2000 {
+            let x = (0.001 + k as f32 * 0.517) * if k % 2 == 0 { 1.0 } else { -1.0 };
+            let back = f16_round_trip(x);
+            let rel = ((back - x) / x).abs();
+            assert!(rel <= 1.0 / 1024.0, "x = {x}: back = {back}, rel = {rel}");
+        }
+    }
+
+    #[test]
+    fn varint_lengths_match_written_bytes() {
+        for v in [0u32, 1, 127, 128, 16_383, 16_384, 1 << 21, u32::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            assert_eq!(buf.len() as u64, varint_len(v), "v = {v}");
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn pick_prefers_cheapest_and_never_beats_dense_cap() {
+        let dim = 100usize;
+        let sparse_msg = SparseVec::from_dense(
+            &(0..dim).map(|i| if i % 10 == 0 { 1.0 } else { 0.0 }).collect::<Vec<f32>>(),
+        );
+        let dense_msg = SparseVec::from_dense(&vec![1.0f32; dim]);
+        let policy = CodecPolicy::lossless();
+        let (c, cost) = policy.pick(&sparse_msg.indices, dim, MessageClass::Margins);
+        assert_eq!(c, WireCodec::SparseU32F32);
+        assert_eq!(cost, 80);
+        let (c, cost) = policy.pick(&dense_msg.indices, dim, MessageClass::Margins);
+        assert_eq!(c, WireCodec::DenseF32);
+        assert_eq!(cost, 400);
+        // f16 only when the class allows it
+        let lossy = CodecPolicy { f16_margins: true, ..CodecPolicy::default() };
+        let (c, cost) = lossy.pick(&sparse_msg.indices, dim, MessageClass::Margins);
+        assert_eq!(c, WireCodec::DeltaVarintF16);
+        assert!(cost < 80);
+        let (c, _) = lossy.pick(&sparse_msg.indices, dim, MessageClass::Beta);
+        assert_eq!(c, WireCodec::SparseU32F32, "beta messages stay lossless");
+        // force_dense charges the dense rate regardless
+        let forced = CodecPolicy { force_dense: true, ..CodecPolicy::default() };
+        assert_eq!(
+            forced.pick(&sparse_msg.indices, dim, MessageClass::Margins),
+            (WireCodec::DenseF32, 400)
+        );
+    }
+}

@@ -1,0 +1,253 @@
+//! The pluggable communication subsystem every Δ-exchange routes through:
+//! a [`Collective`] trait over the simulated network (implemented by the
+//! tree [`TreeAllReduce`] and the new [`AllGather`]), a [`TaskExecutor`]
+//! abstraction that lets tree-node merges run off the calling thread (the
+//! solver plugs its `WorkerPool` in, so the leader thread never performs
+//! merge work), and the byte-cost estimator the `FitDriver` uses to choose
+//! between the reduce-Δm and allgather-Δβ exchange strategies.
+//!
+//! Wire formats and per-message codec selection live in
+//! [`crate::cluster::codec`]; the shared tree engine (deterministic
+//! pairwise merge order, per-edge charging) lives in
+//! [`crate::cluster::allreduce`].
+
+use crate::cluster::allreduce::{run_sparse_exchange, AllReduceOutcome, AllReduceScratch};
+use crate::cluster::codec::{dense_wire_bytes, sparse_wire_bytes, CodecPolicy, MessageClass};
+use crate::cluster::network::{NetworkLedger, NetworkModel};
+use crate::cluster::TreeAllReduce;
+use crate::data::sparse::SparseVec;
+
+/// One unit of off-thread work (a tree-node merge).
+pub type Job = Box<dyn FnOnce() + Send>;
+
+/// Runs a batch of independent jobs to completion. `run_all` must not
+/// return until every job has executed — the collectives rely on it as a
+/// per-round barrier.
+pub trait TaskExecutor {
+    fn run_all(&self, jobs: Vec<Job>);
+}
+
+/// Executes jobs inline on the calling thread (tests, compat wrappers, and
+/// callers without a worker pool).
+#[derive(Debug, Default)]
+pub struct SerialExecutor;
+
+impl TaskExecutor for SerialExecutor {
+    fn run_all(&self, jobs: Vec<Job>) {
+        for job in jobs {
+            job();
+        }
+    }
+}
+
+/// Shared context for one collective call: where to charge bytes, which
+/// codecs the policy allows for this message class, who runs the merges,
+/// and whether the wire is charged at all (`charge = false` models a
+/// leader-local recomputation — same deterministic merge, zero bytes).
+pub struct CommCtx<'a> {
+    pub ledger: &'a NetworkLedger,
+    pub policy: CodecPolicy,
+    pub class: MessageClass,
+    pub exec: &'a dyn TaskExecutor,
+    pub charge: bool,
+}
+
+/// A collective over M per-machine sparse contributions: every machine
+/// (and the leader) ends with the merged vector in `out`. Overlapping
+/// indices sum in `f64`, in a fixed pairwise tree order, so any two
+/// collectives (and any executor) produce bit-identical results.
+pub trait Collective {
+    fn exchange<'a>(
+        &self,
+        m: usize,
+        contrib: &dyn Fn(usize) -> &'a SparseVec,
+        dim: usize,
+        ctx: &CommCtx<'_>,
+        scratch: &mut AllReduceScratch,
+        out: &mut SparseVec,
+    ) -> AllReduceOutcome;
+
+    fn name(&self) -> &'static str;
+}
+
+impl Collective for TreeAllReduce {
+    fn exchange<'a>(
+        &self,
+        m: usize,
+        contrib: &dyn Fn(usize) -> &'a SparseVec,
+        dim: usize,
+        ctx: &CommCtx<'_>,
+        scratch: &mut AllReduceScratch,
+        out: &mut SparseVec,
+    ) -> AllReduceOutcome {
+        run_sparse_exchange(&self.model, m, contrib, dim, ctx, scratch, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "tree-allreduce"
+    }
+}
+
+/// AllGather over the simulated network: gather the M contributions up the
+/// binary tree, broadcast the union back down — after which every machine
+/// holds the full merged vector. The intended payload is the machines'
+/// *disjoint* Δβ shards (a feature partition never overlaps), where gather
+/// is pure concatenation; overlapping indices, if any, sum exactly like
+/// the reduce, so the result — and the per-edge charge — is bit-identical
+/// to [`TreeAllReduce::exchange`](Collective::exchange) (pinned by
+/// `allgather_matches_allreduce_bitwise`). The distinct type exists for
+/// the semantic contract (every machine ends holding the full vector,
+/// which is what lets the Δm reduce be skipped entirely) and as the
+/// extension point for true ring/recursive-doubling allgathers.
+#[derive(Debug)]
+pub struct AllGather {
+    pub model: NetworkModel,
+}
+
+impl AllGather {
+    pub fn new(model: NetworkModel) -> Self {
+        Self { model }
+    }
+}
+
+impl Collective for AllGather {
+    fn exchange<'a>(
+        &self,
+        m: usize,
+        contrib: &dyn Fn(usize) -> &'a SparseVec,
+        dim: usize,
+        ctx: &CommCtx<'_>,
+        scratch: &mut AllReduceScratch,
+        out: &mut SparseVec,
+    ) -> AllReduceOutcome {
+        run_sparse_exchange(&self.model, m, contrib, dim, ctx, scratch, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "allgather"
+    }
+}
+
+/// Estimate the total bytes a tree exchange of contributions with the
+/// given per-machine `nnzs` (over logical length `dim`) would charge, using
+/// the lossless codecs' cost model (`min(nnz · 8, dim · 4)` per message).
+/// Merged-node sizes are upper-bounded by `nnz_a + nnz_b` (overlap is
+/// unknown before merging), so this over-estimates overlapping payloads —
+/// a conservative, deterministic input to the strategy choice. `nnzs` is a
+/// caller-reused scratch buffer and is clobbered by the dry tree walk.
+pub fn estimate_tree_bytes(nnzs: &mut Vec<usize>, dim: usize) -> u64 {
+    let m = nnzs.len();
+    if m <= 1 {
+        return 0;
+    }
+    let mut bytes = 0u64;
+    let mut len = m;
+    while len > 1 {
+        let pairs = len / 2;
+        let mut w = 0usize;
+        for t in 0..pairs {
+            let a = nnzs[2 * t];
+            let b = nnzs[2 * t + 1];
+            bytes += sparse_wire_bytes(b).min(dense_wire_bytes(dim));
+            nnzs[w] = (a + b).min(dim);
+            w += 1;
+        }
+        if len % 2 == 1 {
+            nnzs[w] = nnzs[len - 1];
+            w += 1;
+        }
+        len = w;
+    }
+    // broadcast: the merged root retraces the tree, one message per edge
+    let root = sparse_wire_bytes(nnzs[0]).min(dense_wire_bytes(dim));
+    bytes + (m as u64 - 1) * root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_matches_actual_bytes_on_disjoint_contributions() {
+        // disjoint supports: the nnz upper bound is exact, so the estimate
+        // must equal what the charged exchange actually moves
+        let dim = 10_000usize;
+        let m = 4usize;
+        let contribs: Vec<SparseVec> = (0..m)
+            .map(|k| {
+                let mut v = SparseVec::new(dim);
+                for t in 0..50u32 {
+                    v.push(t * 80 + k as u32, (k + 1) as f32);
+                }
+                v
+            })
+            .collect();
+        let mut nnzs: Vec<usize> = contribs.iter().map(|c| c.nnz()).collect();
+        let est = estimate_tree_bytes(&mut nnzs, dim);
+
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let ledger = NetworkLedger::new();
+        let mut scratch = AllReduceScratch::default();
+        let mut out = SparseVec::new(0);
+        let refs: Vec<&SparseVec> = contribs.iter().collect();
+        let ctx = CommCtx {
+            ledger: &ledger,
+            policy: CodecPolicy::lossless(),
+            class: MessageClass::Beta,
+            exec: &SerialExecutor,
+            charge: true,
+        };
+        let o = ar.exchange(m, &|k| refs[k], dim, &ctx, &mut scratch, &mut out);
+        assert_eq!(est, o.bytes_moved);
+        assert_eq!(out.nnz(), 200);
+    }
+
+    #[test]
+    fn estimate_is_zero_for_single_machine_and_scales_with_payload() {
+        assert_eq!(estimate_tree_bytes(&mut vec![100], 1000), 0);
+        let small = estimate_tree_bytes(&mut vec![10, 10, 10, 10], 100_000);
+        let large = estimate_tree_bytes(&mut vec![1000, 1000, 1000, 1000], 100_000);
+        assert!(large > small);
+        // payload denser than 50%: dense cost caps every message
+        let capped = estimate_tree_bytes(&mut vec![90, 90], 100);
+        assert_eq!(capped, 400 + 400); // one reduce edge + one broadcast edge
+    }
+
+    #[test]
+    fn allgather_matches_allreduce_bitwise() {
+        let dim = 500usize;
+        let contribs: Vec<SparseVec> = (0..5)
+            .map(|k| {
+                SparseVec::from_dense(
+                    &(0..dim)
+                        .map(|i| if (i + k) % 17 == 0 { (i + k) as f32 * 0.25 } else { 0.0 })
+                        .collect::<Vec<f32>>(),
+                )
+            })
+            .collect();
+        let refs: Vec<&SparseVec> = contribs.iter().collect();
+        let model = NetworkModel::gigabit();
+        let run = |coll: &dyn Collective| {
+            let ledger = NetworkLedger::new();
+            let mut scratch = AllReduceScratch::default();
+            let mut out = SparseVec::new(0);
+            let ctx = CommCtx {
+                ledger: &ledger,
+                policy: CodecPolicy::lossless(),
+                class: MessageClass::Margins,
+                exec: &SerialExecutor,
+                charge: true,
+            };
+            let o = coll.exchange(refs.len(), &|k| refs[k], dim, &ctx, &mut scratch, &mut out);
+            (out, o.bytes_moved)
+        };
+        let ar = TreeAllReduce::new(model);
+        let ag = AllGather::new(model);
+        let (a, a_bytes) = run(&ar);
+        let (b, b_bytes) = run(&ag);
+        assert_eq!(a, b, "same tree, same merges, same result");
+        assert_eq!(a_bytes, b_bytes);
+        assert_eq!(ar.name(), "tree-allreduce");
+        assert_eq!(ag.name(), "allgather");
+    }
+}

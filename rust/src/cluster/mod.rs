@@ -1,6 +1,22 @@
 //! Simulated cluster substrate: feature partitioners, a byte-accounted
-//! network model (Gigabit-Ethernet-like, the paper's testbed), and the tree
-//! AllReduce of Alg 4 step 3 whose simulated cost is `O((n+p)·ln M)`.
+//! network model (Gigabit-Ethernet-like, the paper's testbed), and the
+//! pluggable communication subsystem every Δ-exchange routes through.
+//!
+//! The comm stack has three layers:
+//!
+//! * [`codec`] — wire formats. Three codecs (dense `f32`, sparse
+//!   `u32 + f32`, delta-varint index + `f16` value) selected **per
+//!   message** by a byte-cost model ([`codec::CodecPolicy::pick`]); the
+//!   lossy f16 codec is opt-in per message class and never touches
+//!   β-carrying messages by default.
+//! * [`comm`] — the [`comm::Collective`] trait over the simulated network
+//!   ([`TreeAllReduce`] and [`comm::AllGather`]), the [`comm::TaskExecutor`]
+//!   that moves tree-node merges off the leader thread (the solver plugs
+//!   its `WorkerPool` in), and the byte estimator behind the automatic
+//!   reduce-Δm vs allgather-Δβ strategy choice.
+//! * [`allreduce`] — the shared binary-tree engine: deterministic pairwise
+//!   `f64` merges, per-message codec charging on reduce edges, per-edge
+//!   broadcast accounting (`M - 1` messages, levels concurrent in time).
 //!
 //! The algorithmic content of d-GLMNET is unchanged by running workers as
 //! in-process threads; the network model exists so the communication-cost
@@ -8,9 +24,13 @@
 //! than asserted.
 
 pub mod allreduce;
+pub mod codec;
+pub mod comm;
 pub mod network;
 pub mod partition;
 
 pub use allreduce::TreeAllReduce;
-pub use network::{NetworkModel, NetworkLedger};
+pub use codec::{CodecPolicy, MessageClass, WireCodec};
+pub use comm::{AllGather, Collective, SerialExecutor, TaskExecutor};
+pub use network::{NetworkLedger, NetworkModel};
 pub use partition::{FeaturePartition, PartitionStrategy};

@@ -4,10 +4,11 @@
 //! total volume next to wall-clock compute time.
 //!
 //! Callers charge the ledger with the *actual payload* of each message —
-//! for the sparsity-aware AllReduce that is `nnz · 8` bytes per sparse
-//! [`crate::data::sparse::SparseVec`] edge (see `cluster::allreduce` for
-//! the wire format), not the dense `dim · 4`, so `comm_bytes` and
-//! simulated seconds reward sparse updates the way a real cluster would.
+//! the exact encoded size under the wire codec the byte-cost model picked
+//! for that edge (see `cluster::codec`), not a nominal dense `dim · 4` —
+//! so `comm_bytes` and simulated seconds reward sparse and compressed
+//! updates the way a real cluster would. Broadcast fan-out is charged per
+//! edge (`M - 1` messages), with levels concurrent in the time model.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -34,6 +34,38 @@ impl EngineKind {
     }
 }
 
+/// How Δ-state crosses the simulated wire each iteration (Alg 4 step 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeStrategy {
+    /// Per-iteration byte-cost model: allgather-Δβ when shipping the Δβ
+    /// shards is estimated cheaper than reducing the example-space Δm.
+    Auto,
+    /// Classic d-GLMNET: tree-AllReduce both Δm (dim n) and Δβ (dim p).
+    ReduceDm,
+    /// AllGather the machines' sparse Δβ shards and recompute Δm from the
+    /// locally-owned feature shards — kills the `O(n)` wire term.
+    AllGatherBeta,
+}
+
+impl ExchangeStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(Self::Auto),
+            "reduce" | "reduce-dm" => Some(Self::ReduceDm),
+            "allgather" | "allgather-beta" => Some(Self::AllGatherBeta),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::ReduceDm => "reduce-dm",
+            Self::AllGatherBeta => "allgather-beta",
+        }
+    }
+}
+
 /// Line-search constants of Alg 3. Paper: b = 0.5, sigma = 0.01, gamma = 0.
 #[derive(Debug, Clone, Copy)]
 pub struct LineSearchConfig {
@@ -110,10 +142,22 @@ pub struct TrainConfig {
     pub naive_sweep: bool,
     pub partition: PartitionStrategy,
     pub network: NetworkModel,
-    /// Force the dense AllReduce wire format (the pre-sparsity baseline;
-    /// benchmarks and the sparse-vs-dense regression tests use this —
-    /// production leaves it off and lets the density threshold decide).
+    /// Force the dense AllReduce wire format *and* the reduce-Δm exchange
+    /// (the pre-sparsity baseline; benchmarks and the sparse-vs-dense
+    /// regression tests use this — production leaves it off and lets the
+    /// per-message byte-cost model decide).
     pub dense_allreduce: bool,
+    /// Which Δ-exchange the solver runs each iteration (default: the
+    /// byte-cost model picks per iteration). `dense_allreduce` overrides
+    /// this to [`ExchangeStrategy::ReduceDm`].
+    pub exchange: ExchangeStrategy,
+    /// Allow the lossy delta-varint + f16 wire codec for Δ-margin
+    /// messages (reduce-Δm strategy only; changes trajectories within a
+    /// small tolerance — see `tests/wire_codec.rs`). Off by default.
+    pub wire_f16_margins: bool,
+    /// Allow the lossy f16 codec for β-carrying (Δβ) messages. Off by
+    /// default and discouraged: it quantizes the model update itself.
+    pub wire_f16_beta: bool,
     pub line_search: LineSearchConfig,
     /// Tolerated relative objective increase when retrying alpha = 1 at
     /// convergence (the second sparsity precaution of §2).
@@ -137,6 +181,9 @@ impl Default for TrainConfig {
             partition: PartitionStrategy::RoundRobin,
             network: NetworkModel::gigabit(),
             dense_allreduce: false,
+            exchange: ExchangeStrategy::Auto,
+            wire_f16_margins: false,
+            wire_f16_beta: false,
             line_search: LineSearchConfig::default(),
             alpha_one_slack: 1e-4,
             budget: FitBudget::default(),
@@ -173,6 +220,22 @@ impl TrainConfig {
         }
         if self.block == 0 || self.block % 8 != 0 {
             return Err(DlrError::Config("block must be a positive multiple of 8".into()));
+        }
+        if self.dense_allreduce && self.exchange == ExchangeStrategy::AllGatherBeta {
+            return Err(DlrError::Config(
+                "dense_allreduce forces the reduce-dm exchange; \
+                 do not combine it with exchange = allgather-beta"
+                    .into(),
+            ));
+        }
+        if self.wire_f16_beta && self.exchange == ExchangeStrategy::AllGatherBeta {
+            return Err(DlrError::Config(
+                "wire_f16_beta cannot be combined with exchange = allgather-beta: \
+                 the allgather path recombines Δm from the workers' exact Δβᵀx \
+                 products, which a cluster applying f16-quantized Δβ could not \
+                 reproduce (use reduce-dm, where the drift is physical)"
+                    .into(),
+            ));
         }
         if let Some(w) = self.budget.wall_secs {
             if w.is_nan() || w < 0.0 {
@@ -226,6 +289,16 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("cluster", "dense_allreduce").and_then(|v| v.as_bool()) {
             cfg.dense_allreduce = v;
+        }
+        if let Some(s) = doc.get("cluster", "exchange").and_then(|v| v.as_str()) {
+            cfg.exchange = ExchangeStrategy::parse(s)
+                .ok_or_else(|| DlrError::Config(format!("unknown exchange strategy '{s}'")))?;
+        }
+        if let Some(v) = doc.get("cluster", "wire_f16_margins").and_then(|v| v.as_bool()) {
+            cfg.wire_f16_margins = v;
+        }
+        if let Some(v) = doc.get("cluster", "wire_f16_beta").and_then(|v| v.as_bool()) {
+            cfg.wire_f16_beta = v;
         }
         if let Some(v) = num("line_search", "backtrack") {
             cfg.line_search.backtrack = v;
@@ -305,6 +378,18 @@ impl TrainConfigBuilder {
     }
     pub fn dense_allreduce(mut self, v: bool) -> Self {
         self.0.dense_allreduce = v;
+        self
+    }
+    pub fn exchange(mut self, v: ExchangeStrategy) -> Self {
+        self.0.exchange = v;
+        self
+    }
+    pub fn wire_f16_margins(mut self, v: bool) -> Self {
+        self.0.wire_f16_margins = v;
+        self
+    }
+    pub fn wire_f16_beta(mut self, v: bool) -> Self {
+        self.0.wire_f16_beta = v;
         self
     }
     pub fn line_search(mut self, v: LineSearchConfig) -> Self {
@@ -429,6 +514,42 @@ skip_alpha_init = true
     fn from_toml_rejects_unknown_engine() {
         let doc = toml::parse("[solver]\nengine = \"gpu\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn exchange_and_wire_knobs_load_from_toml() {
+        let c = TrainConfig::default();
+        assert_eq!(c.exchange, ExchangeStrategy::Auto);
+        assert!(!c.wire_f16_margins && !c.wire_f16_beta);
+        let doc = toml::parse(
+            "[cluster]\nexchange = \"allgather-beta\"\nwire_f16_margins = true\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.exchange, ExchangeStrategy::AllGatherBeta);
+        assert!(c.wire_f16_margins);
+        assert!(!c.wire_f16_beta);
+        // short aliases parse too
+        assert_eq!(ExchangeStrategy::parse("reduce"), Some(ExchangeStrategy::ReduceDm));
+        assert_eq!(ExchangeStrategy::parse("allgather"), Some(ExchangeStrategy::AllGatherBeta));
+        assert_eq!(ExchangeStrategy::parse("bogus"), None);
+        // unknown strategy errors
+        let doc = toml::parse("[cluster]\nexchange = \"ring\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        // dense_allreduce + allgather-beta is contradictory
+        let mut c = TrainConfig::default();
+        c.dense_allreduce = true;
+        c.exchange = ExchangeStrategy::AllGatherBeta;
+        assert!(c.validate().is_err());
+        // so is a quantized Δβ wire + the exact local Δm recombination
+        let mut c = TrainConfig::default();
+        c.wire_f16_beta = true;
+        c.exchange = ExchangeStrategy::AllGatherBeta;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.wire_f16_beta = true;
+        c.exchange = ExchangeStrategy::ReduceDm;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

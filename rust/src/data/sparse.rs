@@ -7,14 +7,16 @@
 
 use crate::error::{DlrError, Result};
 
-/// Simulated wire cost of one sparse entry: a `u32` index + `f32` value.
+/// Wire cost of one entry under the sparse `u32 + f32` codec (see
+/// `cluster::codec` for the full codec set and the per-message cost model).
 pub const SPARSE_ENTRY_BYTES: u64 = 8;
 
 /// A sparse vector message: parallel `(index, value)` arrays with indices
-/// sorted ascending and unique. This is the unit of Δβ / Δmargin traffic in
-/// the sparsity-aware AllReduce — its simulated wire size is
-/// `nnz · (4 + 4)` bytes (index + value), vs `dim · 4` for a dense `f32`
-/// vector.
+/// sorted ascending and unique. This is the unit of Δβ / Δmargin traffic
+/// in the `cluster::comm` collectives; what it costs on the wire depends
+/// on the codec the byte-cost model picks per message (`cluster::codec`) —
+/// [`SparseVec::wire_bytes`] is its size under the classic sparse
+/// `u32 + f32` format.
 ///
 /// Buffers are designed for reuse: [`SparseVec::clear`] keeps capacity, so
 /// a vector that round-trips through the worker pool allocates only until

@@ -16,8 +16,9 @@
 //! whose [`SparseVec`] buffers are reused across iterations (the worker pool
 //! round-trips them through its channels), so the steady-state hot path
 //! performs no per-iteration heap allocation. Results are *sparse*: only the
-//! coordinates the sweep actually moved are materialized, which is what the
-//! sparsity-aware AllReduce ships over the simulated network.
+//! coordinates the sweep actually moved are materialized — exactly what the
+//! `cluster::comm` collectives ship (or, for `dmargins` under the
+//! allgather-Δβ strategy, recombine locally without touching the wire).
 
 pub mod native;
 pub mod streaming;

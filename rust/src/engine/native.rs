@@ -1,8 +1,14 @@
 //! Pure-rust sparse subproblem engine — the paper's original by-feature CPU
 //! formulation (§3): stream the shard's columns, apply the closed-form
-//! coordinate update (6), maintain the working residual incrementally.
-//! O(nnz) per sweep, exactly as the paper reports; results are emitted as
-//! sparse vectors into caller-owned buffers (no per-sweep allocation).
+//! coordinate update (6), maintain the working Δmargin incrementally.
+//! O(nnz + touched) per sweep; results are emitted as sparse vectors into
+//! caller-owned buffers (no per-sweep allocation).
+//!
+//! The working residual is *derived*, not stored: `r_i = z_i - Δm_i`, with
+//! `Δm` a per-example accumulator that is all-zero at sweep start. Resetting
+//! it costs O(touched examples from the previous sweep) — not the seed's
+//! O(n) re-read of `z` into a residual buffer — so an all-zero update
+//! (λ ≥ λ_max regimes, converged shards) never pays an O(n) scan.
 
 use std::time::Instant;
 
@@ -15,14 +21,19 @@ use crate::util::math::soft_threshold;
 pub struct NativeEngine {
     shard: FeatureShard,
     n: usize,
-    /// Working residual r = z - Δβ·x, f64 for accumulation stability.
-    r: Vec<f64>,
+    /// Accumulated Δβ·x per example within the current sweep (f64 for
+    /// accumulation stability); zero outside `touched`.
+    dm: Vec<f64>,
+    /// Examples the current sweep has moved (unsorted until emission).
+    touched: Vec<u32>,
+    /// Membership flags for `touched` (O(1) dedup; reset via the list).
+    in_touched: Vec<bool>,
 }
 
 impl NativeEngine {
     pub fn new(shard: FeatureShard, n: usize) -> Self {
         assert_eq!(shard.csc.n_rows, n);
-        Self { shard, n, r: vec![0f64; n] }
+        Self { shard, n, dm: vec![0f64; n], touched: Vec::new(), in_touched: vec![false; n] }
     }
 
     pub fn shard(&self) -> &FeatureShard {
@@ -47,10 +58,13 @@ impl SubproblemEngine for NativeEngine {
         let p_local = self.shard.csc.n_cols;
         debug_assert_eq!(beta_local.len(), p_local);
 
-        // r starts at z (delta = 0 at iteration start)
-        for i in 0..n {
-            self.r[i] = z[i] as f64;
+        // incremental reset: only the entries the previous sweep moved
+        for &i in &self.touched {
+            self.dm[i as usize] = 0.0;
+            self.in_touched[i as usize] = false;
         }
+        self.touched.clear();
+
         let (lam, nu) = (lam as f64, nu as f64);
         out.delta_local.clear(p_local);
 
@@ -59,14 +73,15 @@ impl SubproblemEngine for NativeEngine {
             if rows.is_empty() {
                 continue;
             }
-            // A = Σ w x² + ν ;  c = Σ w r x + β_j A
+            // A = Σ w x² + ν ;  c = Σ w r x + β_j A, with r_i = z_i - Δm_i
             let mut a = nu;
             let mut wrx = 0f64;
             for (&i, &v) in rows.iter().zip(vals) {
-                let wi = w[i as usize] as f64;
+                let ii = i as usize;
+                let wi = w[ii] as f64;
                 let x = v as f64;
                 a += wi * x * x;
-                wrx += wi * self.r[i as usize] * x;
+                wrx += wi * (z[ii] as f64 - self.dm[ii]) * x;
             }
             let bj = beta_local[j] as f64;
             let c = wrx + bj * a;
@@ -75,19 +90,24 @@ impl SubproblemEngine for NativeEngine {
             if step != 0.0 {
                 out.delta_local.push(j as u32, step as f32);
                 for (&i, &v) in rows.iter().zip(vals) {
-                    self.r[i as usize] -= step * v as f64;
+                    let ii = i as usize;
+                    self.dm[ii] += step * v as f64;
+                    if !self.in_touched[ii] {
+                        self.in_touched[ii] = true;
+                        self.touched.push(i);
+                    }
                 }
             }
         }
 
-        // Δβ^m · x_i = z_i - r_i, non-zero only for examples the sweep
-        // touched (r is modified only through coordinate updates, so an
-        // untouched residual still bit-equals z_i).
+        // Δβ^m · x_i = Δm_i, non-zero only for touched examples — emission
+        // costs O(touched log touched), not O(n)
+        self.touched.sort_unstable();
         out.dmargins.clear(n);
-        for i in 0..n {
-            let zi = z[i] as f64;
-            if self.r[i] != zi {
-                out.dmargins.push(i as u32, (zi - self.r[i]) as f32);
+        for &i in &self.touched {
+            let v = self.dm[i as usize];
+            if v != 0.0 {
+                out.dmargins.push(i, v as f32);
             }
         }
         out.compute_secs = t0.elapsed().as_secs_f64();
@@ -202,6 +222,38 @@ mod tests {
         assert_eq!(out.delta_local, first, "sweeps must be deterministic");
         assert_eq!(out.delta_local.indices.capacity(), cap_d);
         assert_eq!(out.dmargins.indices.capacity(), cap_m);
+    }
+
+    #[test]
+    fn incremental_reset_matches_a_fresh_engine_across_sweeps() {
+        // the Δm accumulator must be indistinguishable from a fresh engine
+        // even when w/z change between sweeps (the stale-state hazard the
+        // incremental reset must not introduce)
+        let ds = synth::webspam_like(250, 300, 8, 5);
+        let mut persistent = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let beta = vec![0f32; 300];
+
+        // sweep 1 at zero margins
+        let margins0 = vec![0f32; ds.n_examples()];
+        let (w0, z0) = stats_of(&ds, &margins0);
+        let first = persistent.sweep_alloc(&w0, &z0, &beta, 0.4, 1e-6).unwrap();
+        assert!(!first.dmargins.is_empty(), "need a non-trivial first sweep");
+
+        // sweep 2 at shifted margins: persistent engine vs fresh engine
+        let margins1: Vec<f32> = first.dmargins.to_dense().iter().map(|d| 0.5 * d).collect();
+        let (w1, z1) = stats_of(&ds, &margins1);
+        let warm = persistent.sweep_alloc(&w1, &z1, &beta, 0.4, 1e-6).unwrap();
+        let mut fresh = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let cold = fresh.sweep_alloc(&w1, &z1, &beta, 0.4, 1e-6).unwrap();
+        assert_eq!(warm.delta_local, cold.delta_local);
+        assert_eq!(warm.dmargins, cold.dmargins);
+
+        // an all-zero update (huge λ) leaves no stale touched state behind
+        let none = persistent.sweep_alloc(&w1, &z1, &beta, 1e9, 1e-6).unwrap();
+        assert!(none.delta_local.is_empty() && none.dmargins.is_empty());
+        let again = persistent.sweep_alloc(&w1, &z1, &beta, 0.4, 1e-6).unwrap();
+        assert_eq!(again.delta_local, cold.delta_local);
+        assert_eq!(again.dmargins, cold.dmargins);
     }
 
     #[test]

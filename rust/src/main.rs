@@ -10,7 +10,7 @@ use dglmnet::baselines::{
     DistributedOnlineEstimator, ShotgunEstimator, TruncatedGradientEstimator,
 };
 use dglmnet::cli::{App, CommandSpec, ParsedArgs};
-use dglmnet::config::{EngineKind, PathConfig, TrainConfig};
+use dglmnet::config::{EngineKind, ExchangeStrategy, PathConfig, TrainConfig};
 use dglmnet::data::{dataset::Dataset, libsvm, synth};
 use dglmnet::error::{DlrError, Result};
 use dglmnet::metrics;
@@ -50,6 +50,8 @@ fn app() -> App {
                 .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("max-iter", "iteration cap", Some("100"))
                 .opt("tol", "relative-decrease tolerance", Some("1e-5"))
+                .opt("exchange", "auto | reduce-dm | allgather-beta", Some("auto"))
+                .flag("wire-f16", "allow the lossy f16 wire codec for Δ-margin messages")
                 .opt("passes", "online/truncgrad passes", Some("10"))
                 .opt("rounds", "shotgun rounds", Some("200"))
                 .opt("parallelism", "shotgun parallel updates P", Some("8"))
@@ -136,6 +138,13 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     }
     if let Some(t) = args.get_f64("tol")? {
         cfg.tol = t;
+    }
+    if let Some(s) = args.get_str("exchange") {
+        cfg.exchange = ExchangeStrategy::parse(s)
+            .ok_or_else(|| DlrError::Cli(format!("unknown exchange strategy '{s}'")))?;
+    }
+    if args.get_flag("wire-f16") {
+        cfg.wire_f16_margins = true;
     }
     if let Some(w) = args.get_f64("max-secs")? {
         cfg.budget.wall_secs = Some(w);

@@ -23,17 +23,22 @@
 //!
 //! Convergence carries the paper's two sparsity precautions: the line
 //! search's full-step shortcut, and the final α = 1 retry before stopping.
-//! Step 3 is sparsity-aware end to end (see `cluster::allreduce`), and
-//! every per-iteration buffer — including the leader's w/z working vectors
-//! — lives in `FitScratch`, so the steady-state hot path performs no heap
-//! allocation.
+//! Step 3 routes through the pluggable `cluster::comm` subsystem: wire
+//! codecs picked per message by byte cost, the per-iteration reduce-Δm vs
+//! allgather-Δβ strategy choice, and tree-node merges running inside the
+//! `WorkerPool` (never on the leader thread). Every large per-iteration
+//! buffer — including the leader's w/z working vectors — lives in
+//! `FitScratch`, so the steady-state hot path allocates only the O(M)
+//! bookkeeping of the comm layer.
 
 use std::sync::Arc;
 
 use crate::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
+use crate::cluster::codec::CodecPolicy;
+use crate::cluster::comm::AllGather;
 use crate::cluster::network::NetworkLedger;
 use crate::cluster::partition::FeaturePartition;
-use crate::config::TrainConfig;
+use crate::config::{ExchangeStrategy, TrainConfig};
 use crate::data::dataset::Dataset;
 use crate::data::shuffle::{shard_in_memory, FeatureShard};
 use crate::data::sparse::{CsrMatrix, SparseVec};
@@ -60,9 +65,13 @@ pub struct IterationRecord {
     pub max_worker_secs: f64,
     /// simulated AllReduce seconds (network model).
     pub sim_comm_secs: f64,
-    /// bytes this iteration's AllReduces moved (per-iteration delta, *not*
+    /// bytes this iteration's Δ-exchange moved (per-iteration delta, *not*
     /// cumulative since fit start).
     pub comm_bytes: u64,
+    /// Which Δ-exchange strategy this iteration ran (`None` for estimators
+    /// without a distributed Δ-exchange — the §4.3 baselines). Never
+    /// [`ExchangeStrategy::Auto`]: the cost model's choice is recorded.
+    pub exchange: Option<ExchangeStrategy>,
     pub wall_secs: f64,
 }
 
@@ -91,7 +100,10 @@ impl FitResult {
 
 /// Reusable per-solver buffers for the iteration hot path. Everything here
 /// is cleared-and-refilled each iteration; capacities persist, so after the
-/// first iteration the loop allocates nothing.
+/// first iteration the loop's O(n + p) buffers allocate nothing — the only
+/// steady-state allocations left are the comm layer's O(M) bookkeeping
+/// (boxed merge jobs, their ack channel, and the contribution ref lists),
+/// the price of running tree merges on the worker pool.
 #[derive(Debug, Default)]
 pub(crate) struct FitScratch {
     /// leader working statistics (Arc so the pool can share them with the
@@ -105,6 +117,8 @@ pub(crate) struct FitScratch {
     pub(crate) db_contribs: Vec<SparseVec>,
     /// tree-allreduce intermediate state
     pub(crate) ar: AllReduceScratch,
+    /// per-machine nnz counts for the exchange-strategy cost estimate
+    pub(crate) est_nnz: Vec<usize>,
     /// merged sparse Δβ / Δm
     pub(crate) delta_sp: SparseVec,
     pub(crate) dmargins_sp: SparseVec,
@@ -127,6 +141,8 @@ pub struct DGlmnetSolver {
     pub(crate) pool: WorkerPool,
     pub(crate) leader: LeaderCompute,
     pub(crate) allreduce: TreeAllReduce,
+    pub(crate) allgather: AllGather,
+    pub(crate) policy: CodecPolicy,
     pub(crate) ledger: NetworkLedger,
     pub(crate) scratch: FitScratch,
     /// Current coefficients (warmstart state).
@@ -187,11 +203,12 @@ impl DGlmnetSolver {
         }
         let pool = WorkerPool::spawn(cfg, shards, n, artifacts.clone())?;
         let leader = LeaderCompute::new(cfg, &ds.y, &artifacts)?;
-        let allreduce = if cfg.dense_allreduce {
-            // threshold 0 forces the dense wire format (ablation baseline)
-            TreeAllReduce::with_density_threshold(cfg.network, 0.0)
-        } else {
-            TreeAllReduce::new(cfg.network)
+        // dense_allreduce reproduces the pre-sparsity baseline: dense
+        // charging on every edge, classic reduce-Δm exchange
+        let policy = CodecPolicy {
+            force_dense: cfg.dense_allreduce,
+            f16_margins: cfg.wire_f16_margins,
+            f16_beta: cfg.wire_f16_beta,
         };
         Ok(Self {
             cfg: cfg.clone(),
@@ -202,12 +219,20 @@ impl DGlmnetSolver {
             partition,
             pool,
             leader,
-            allreduce,
+            allreduce: TreeAllReduce::new(cfg.network),
+            allgather: AllGather::new(cfg.network),
+            policy,
             ledger: NetworkLedger::new(),
             scratch: FitScratch::default(),
             beta: vec![0f32; p],
             margins: vec![0f32; n],
         })
+    }
+
+    /// Tree-merge jobs the `WorkerPool` has executed for the comm layer —
+    /// the leader-offload regression tests assert this grows during fits.
+    pub fn merge_tasks_executed(&self) -> u64 {
+        self.pool.tasks_executed()
     }
 
     pub fn n_examples(&self) -> usize {
@@ -455,6 +480,40 @@ mod tests {
             fd.objective
         );
         assert!(fs.comm_bytes <= fd.comm_bytes, "sparse must never cost more");
+    }
+
+    #[test]
+    fn forced_exchange_strategies_match_bitwise() {
+        // allgather-Δβ merges Δm leader-side in the same pairwise tree
+        // order as the charged reduce: the trajectory must be bit-identical
+        // and the wire strictly cheaper (Δm never shipped)
+        let ds = synth::dna_like(500, 60, 6, 41);
+        let lam = crate::solver::regpath::lambda_max(&ds) / 8.0;
+        let mk = |e: ExchangeStrategy| {
+            TrainConfig::builder()
+                .machines(4)
+                .engine(EngineKind::Native)
+                .lambda(lam)
+                .max_iter(30)
+                .exchange(e)
+                .build()
+        };
+        let mut red = DGlmnetSolver::from_dataset(&ds, &mk(ExchangeStrategy::ReduceDm)).unwrap();
+        let mut gat =
+            DGlmnetSolver::from_dataset(&ds, &mk(ExchangeStrategy::AllGatherBeta)).unwrap();
+        let fr = red.fit(None).unwrap();
+        let fg = gat.fit(None).unwrap();
+        assert_eq!(fr.iterations, fg.iterations);
+        for (a, b) in fr.trace.iter().zip(&fg.trace) {
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "iter {}", a.iter);
+            assert_eq!(a.exchange, Some(ExchangeStrategy::ReduceDm));
+            assert_eq!(b.exchange, Some(ExchangeStrategy::AllGatherBeta));
+        }
+        assert_eq!(red.beta, gat.beta);
+        assert!(fg.comm_bytes < fr.comm_bytes, "allgather must skip the Δm wire");
+        // the merges themselves ran inside the worker pool on both paths
+        assert!(red.merge_tasks_executed() > 0);
+        assert!(gat.merge_tasks_executed() > 0);
     }
 
     #[test]

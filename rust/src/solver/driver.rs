@@ -20,6 +20,10 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::cluster::codec::MessageClass;
+use crate::cluster::comm::{self, Collective, CommCtx, TaskExecutor};
+use crate::config::ExchangeStrategy;
+use crate::data::sparse::SparseVec;
 use crate::error::{DlrError, Result};
 use crate::solver::dglmnet::{DGlmnetSolver, FitResult, IterationRecord};
 use crate::solver::estimator::{FitControl, FitObserver, FitStep};
@@ -220,9 +224,13 @@ impl<'a> FitDriver<'a> {
         None
     }
 
-    /// Run one leader-stats → sweep → AllReduce → line-search iteration
-    /// (paper Algorithm 1 body). The update is applied before this returns,
-    /// so `checkpoint()` right after captures it.
+    /// Run one leader-stats → sweep → Δ-exchange → line-search iteration
+    /// (paper Algorithm 1 body). The Δ-exchange routes through
+    /// `cluster::comm`: the byte-cost model picks reduce-Δm or
+    /// allgather-Δβ per iteration (unless the config forces one), codecs
+    /// are chosen per message, and tree merges run on the worker pool. The
+    /// update is applied before this returns, so `checkpoint()` right
+    /// after captures it.
     pub fn step(&mut self) -> Result<StepOutcome> {
         if self.finished {
             return Ok(StepOutcome::Finished {
@@ -246,9 +254,25 @@ impl<'a> FitDriver<'a> {
         let iter = self.next_iter;
         let timers = &mut self.timers;
         let DGlmnetSolver {
-            cfg, n, p, y, pool, leader, allreduce, ledger, scratch, beta, margins, ..
+            cfg,
+            n,
+            p,
+            y,
+            pool,
+            leader,
+            allreduce,
+            allgather,
+            policy,
+            ledger,
+            scratch,
+            beta,
+            margins,
+            ..
         } = &mut *self.solver;
         let (n, p) = (*n, *p);
+        let policy = *policy;
+        // the ledger is only ever charged through &self (atomics)
+        let ledger: &crate::cluster::network::NetworkLedger = ledger;
         let (lam_f, nu_f) = (lambda as f32, cfg.nu as f32);
         let iter_sw = Stopwatch::start();
         let iter_start_bytes = ledger.total_bytes();
@@ -276,30 +300,127 @@ impl<'a> FitDriver<'a> {
             .fold(0f64, f64::max);
         self.sim_compute += max_worker;
 
-        // ---- step 3: AllReduce Δm and Δβ (sparse wire format) -----------
-        let comm_secs = timers.time("allreduce", || {
-            let o1 = allreduce.sum_sparse_into(
-                scratch.results.iter().map(|r| &r.dmargins),
-                n,
-                ledger,
-                &mut scratch.ar,
-                &mut scratch.dmargins_sp,
-            );
-            // remap shard-local Δβ to global feature ids — O(nnz) per machine
+        // ---- step 3: exchange Δβ and Δm (cluster::comm) -----------------
+        // remap shard-local Δβ to global feature ids — O(nnz) per machine;
+        // both strategies ship Δβ (timed under "allreduce": it's comm-path
+        // staging work)
+        timers.time("allreduce", || {
             scratch
                 .db_contribs
                 .resize_with(scratch.results.len(), Default::default);
             for (k, r) in scratch.results.iter().enumerate() {
                 pool.delta_to_global(k, &r.delta_local, p, &mut scratch.db_contribs[k]);
             }
-            let o2 = allreduce.sum_sparse_into(
-                scratch.db_contribs.iter(),
-                p,
-                ledger,
-                &mut scratch.ar,
-                &mut scratch.delta_sp,
-            );
-            o1.simulated_secs + o2.simulated_secs
+        });
+        // strategy choice: allgather-Δβ when shipping the Δβ shards is
+        // estimated cheaper than reducing the example-space Δm (ROADMAP's
+        // "kill the O(n) wire term"). Deliberately NOT "whenever Δm is
+        // non-empty": the simulation charges the allgather path's local Δm
+        // recombination zero bytes, which a real cluster cannot match, so
+        // the Δβ-vs-Δm comparison keeps reduce-Δm in the regime where Δm
+        // is the cheaper payload anyway. Forced strategies and the dense
+        // ablation bypass the estimate.
+        let strategy = if cfg.dense_allreduce || cfg.wire_f16_beta {
+            // wire_f16_beta implies reduce-Δm: the allgather path's exact
+            // leader-side Δm recombination is incompatible with a
+            // quantized Δβ wire (validate() rejects forcing both)
+            ExchangeStrategy::ReduceDm
+        } else {
+            match cfg.exchange {
+                ExchangeStrategy::Auto => {
+                    scratch.est_nnz.clear();
+                    scratch.est_nnz.extend(scratch.results.iter().map(|r| r.dmargins.nnz()));
+                    let dm_cost = comm::estimate_tree_bytes(&mut scratch.est_nnz, n);
+                    scratch.est_nnz.clear();
+                    scratch.est_nnz.extend(scratch.db_contribs.iter().map(|c| c.nnz()));
+                    let db_cost = comm::estimate_tree_bytes(&mut scratch.est_nnz, p);
+                    if db_cost < dm_cost {
+                        ExchangeStrategy::AllGatherBeta
+                    } else {
+                        ExchangeStrategy::ReduceDm
+                    }
+                }
+                s => s,
+            }
+        };
+        let machines = pool.machines();
+        let exec: &dyn TaskExecutor = &*pool;
+        let comm_secs = timers.time("allreduce", || {
+            let dm_refs: Vec<&SparseVec> =
+                scratch.results.iter().map(|r| &r.dmargins).collect();
+            let db_refs: Vec<&SparseVec> = scratch.db_contribs.iter().collect();
+            match strategy {
+                ExchangeStrategy::AllGatherBeta => {
+                    let ctx_beta = CommCtx {
+                        ledger,
+                        policy,
+                        class: MessageClass::Beta,
+                        exec,
+                        charge: true,
+                    };
+                    let o_beta = allgather.exchange(
+                        machines,
+                        &|k| db_refs[k],
+                        p,
+                        &ctx_beta,
+                        &mut scratch.ar,
+                        &mut scratch.delta_sp,
+                    );
+                    // Δm never crosses the wire: every worker already owns
+                    // its shard's Δβᵀx product, and the leader combines them
+                    // in the same pairwise tree order as the charged reduce
+                    // — bit-identical sums, zero bytes
+                    let ctx_dm = CommCtx {
+                        ledger,
+                        policy,
+                        class: MessageClass::Margins,
+                        exec,
+                        charge: false,
+                    };
+                    allreduce.exchange(
+                        machines,
+                        &|k| dm_refs[k],
+                        n,
+                        &ctx_dm,
+                        &mut scratch.ar,
+                        &mut scratch.dmargins_sp,
+                    );
+                    o_beta.simulated_secs
+                }
+                _ => {
+                    let ctx_dm = CommCtx {
+                        ledger,
+                        policy,
+                        class: MessageClass::Margins,
+                        exec,
+                        charge: true,
+                    };
+                    let o1 = allreduce.exchange(
+                        machines,
+                        &|k| dm_refs[k],
+                        n,
+                        &ctx_dm,
+                        &mut scratch.ar,
+                        &mut scratch.dmargins_sp,
+                    );
+                    let ctx_beta = CommCtx {
+                        ledger,
+                        policy,
+                        class: MessageClass::Beta,
+                        exec,
+                        charge: true,
+                    };
+                    let o2 = allreduce.exchange(
+                        machines,
+                        &|k| db_refs[k],
+                        p,
+                        &ctx_beta,
+                        &mut scratch.ar,
+                        &mut scratch.delta_sp,
+                    );
+                    o1.simulated_secs + o2.simulated_secs
+                }
+            }
         });
         self.sim_comm += comm_secs;
         let iter_comm_bytes = ledger.total_bytes() - iter_start_bytes;
@@ -325,6 +446,7 @@ impl<'a> FitDriver<'a> {
                 max_worker_secs: max_worker,
                 sim_comm_secs: comm_secs,
                 comm_bytes: iter_comm_bytes,
+                exchange: Some(strategy),
                 wall_secs: iter_sw.elapsed_secs(),
             };
             self.trace.push(record.clone());
@@ -368,6 +490,7 @@ impl<'a> FitDriver<'a> {
             max_worker_secs: max_worker,
             sim_comm_secs: comm_secs,
             comm_bytes: iter_comm_bytes,
+            exchange: Some(strategy),
             wall_secs: iter_sw.elapsed_secs(),
         };
         self.trace.push(record.clone());

@@ -163,6 +163,7 @@ mod tests {
             max_worker_secs: 0.0,
             sim_comm_secs: 0.0,
             comm_bytes: 0,
+            exchange: None,
             wall_secs: 0.0,
         }
     }

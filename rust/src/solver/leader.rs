@@ -3,6 +3,12 @@
 //! `line_search` kernels through PJRT (with the `xla` feature), or the
 //! native fallback — selected by the solver's engine kind so the whole hot
 //! path stays on one stack.
+//!
+//! The leader does *not* perform comm-layer merge work: under the
+//! allgather-Δβ exchange it consumes a Δm that was recombined from the
+//! workers' shard-local products by `WorkerPool` merge tasks (see
+//! `cluster::comm`), and under reduce-Δm the tree merges likewise run on
+//! the worker threads.
 
 use crate::config::{EngineKind, TrainConfig};
 use crate::error::Result;

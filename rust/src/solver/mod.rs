@@ -20,8 +20,11 @@
 //!    `FitControl::Stop` to end the fit early with `converged = false`.
 //!    The final iteration is also reported; its control value is ignored.
 //! 3. **[`FitDriver`]** — stepwise control for d-GLMNET: one
-//!    leader-stats → sweep → AllReduce → line-search iteration per
-//!    [`FitDriver::step`] call, so callers own the loop. Driving `step()`
+//!    leader-stats → sweep → Δ-exchange → line-search iteration per
+//!    [`FitDriver::step`] call (the Δ-exchange routes through
+//!    `cluster::comm` — per-message wire codecs, the automatic reduce-Δm
+//!    vs allgather-Δβ strategy pick, worker-pool merges), so callers own
+//!    the loop. Driving `step()`
 //!    to convergence is bit-identical (objective, β, comm-bytes ledger) to
 //!    the one-shot `fit()` path — `fit_lambda` *is* this driver run with a
 //!    no-op observer.

@@ -9,11 +9,19 @@
 //! gather buffers and the sparse [`SweepResult`] output buffers round-trip
 //! through the request/reply channels, so every iteration reuses the same
 //! heap blocks instead of allocating `O(M·(n + p))` per sweep.
+//!
+//! The pool doubles as the cluster's [`TaskExecutor`]: the `cluster::comm`
+//! collectives submit their tree-node merge jobs here, so AllReduce merge
+//! work runs on worker threads — the leader thread only stages payloads
+//! and charges the ledger ([`WorkerPool::tasks_executed`] counts the jobs,
+//! which the regression tests use to prove the off-thread contract).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::cluster::comm::{Job, TaskExecutor};
 use crate::config::TrainConfig;
 use crate::data::shuffle::FeatureShard;
 use crate::data::sparse::SparseVec;
@@ -31,6 +39,9 @@ enum Request {
         lam: f32,
         nu: f32,
     },
+    /// One [`TaskExecutor`] job (a tree-node merge); acknowledged on the
+    /// task channel when done.
+    Task(Job),
     Shutdown,
 }
 
@@ -51,6 +62,10 @@ pub struct WorkerPool {
     pub engine_names: Vec<String>,
     /// Reusable per-machine β gather buffers.
     beta_bufs: Vec<Vec<f32>>,
+    /// Completion acknowledgements for [`TaskExecutor`] jobs.
+    task_done_rx: mpsc::Receiver<()>,
+    /// Jobs the workers have executed (observable leader-offload proof).
+    tasks_done: Arc<AtomicU64>,
 }
 
 impl WorkerPool {
@@ -66,6 +81,8 @@ impl WorkerPool {
         let m = shards.len();
         let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
         let (ready_tx, ready_rx) = mpsc::channel::<(usize, Result<String>)>();
+        let (task_done_tx, task_done_rx) = mpsc::channel::<()>();
+        let tasks_done = Arc::new(AtomicU64::new(0));
         let mut txs = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
         let mut global_cols = Vec::with_capacity(m);
@@ -77,6 +94,8 @@ impl WorkerPool {
             txs.push(tx);
             let reply_tx = reply_tx.clone();
             let ready_tx = ready_tx.clone();
+            let task_done_tx = task_done_tx.clone();
+            let tasks_done = Arc::clone(&tasks_done);
             let cfg = cfg.clone();
             let dir = artifacts_dir.clone();
             handles.push(std::thread::spawn(move || {
@@ -100,12 +119,20 @@ impl WorkerPool {
                                 return; // leader gone
                             }
                         }
+                        Request::Task(job) => {
+                            job();
+                            tasks_done.fetch_add(1, Ordering::Relaxed);
+                            if task_done_tx.send(()).is_err() {
+                                return; // leader gone
+                            }
+                        }
                         Request::Shutdown => return,
                     }
                 }
             }));
         }
         drop(ready_tx);
+        drop(task_done_tx);
 
         let mut engine_names = vec![String::new(); m];
         for _ in 0..m {
@@ -121,11 +148,19 @@ impl WorkerPool {
             global_cols,
             engine_names,
             beta_bufs: vec![Vec::new(); m],
+            task_done_rx,
+            tasks_done,
         })
     }
 
     pub fn machines(&self) -> usize {
         self.txs.len()
+    }
+
+    /// Total [`TaskExecutor`] jobs the workers have executed — the
+    /// leader-offload regression tests assert this grows during fits.
+    pub fn tasks_executed(&self) -> u64 {
+        self.tasks_done.load(Ordering::Relaxed)
     }
 
     /// One parallel sweep across all machines (Alg 4 steps 1–2). `beta` is
@@ -197,6 +232,28 @@ impl WorkerPool {
     }
 }
 
+impl TaskExecutor for WorkerPool {
+    /// Distribute the jobs round-robin over the worker threads and block
+    /// until every one has been acknowledged. A worker that died during
+    /// startup gets its share run inline rather than losing the merge.
+    fn run_all(&self, jobs: Vec<Job>) {
+        let m = self.txs.len();
+        let mut pending = 0usize;
+        for (j, job) in jobs.into_iter().enumerate() {
+            match self.txs[j % m].send(Request::Task(job)) {
+                Ok(()) => pending += 1,
+                Err(mpsc::SendError(Request::Task(job))) => job(),
+                Err(_) => unreachable!("send error returns the request we sent"),
+            }
+        }
+        for _ in 0..pending {
+            self.task_done_rx
+                .recv()
+                .expect("worker pool dropped a task acknowledgement");
+        }
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         for tx in &self.txs {
@@ -256,6 +313,39 @@ mod tests {
         for i in 0..n {
             assert!((dm_sum[i] - want[i] as f64).abs() < 1e-3, "i = {i}");
         }
+    }
+
+    #[test]
+    fn tasks_run_on_worker_threads_not_the_caller() {
+        // the leader-offload contract behind the comm subsystem: every job
+        // submitted through the TaskExecutor runs on a worker thread
+        let ds = synth::dna_like(60, 10, 3, 23);
+        let cfg = TrainConfig::builder()
+            .machines(2)
+            .engine(EngineKind::Native)
+            .build();
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 10, 2, None);
+        let pool =
+            WorkerPool::spawn(&cfg, shard_in_memory(&ds.x, &part), 60, "artifacts".into())
+                .unwrap();
+        let caller = std::thread::current().id();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let jobs: Vec<crate::cluster::comm::Job> = (0..6)
+            .map(|_| {
+                let tx = tx.clone();
+                Box::new(move || {
+                    let _ = tx.send(std::thread::current().id());
+                }) as crate::cluster::comm::Job
+            })
+            .collect();
+        pool.run_all(jobs);
+        drop(tx);
+        let ids: Vec<_> = rx.iter().collect();
+        assert_eq!(ids.len(), 6, "run_all must wait for every job");
+        for id in ids {
+            assert_ne!(id, caller, "merge work must not run on the calling thread");
+        }
+        assert_eq!(pool.tasks_executed(), 6);
     }
 
     #[test]

@@ -1,15 +1,17 @@
-//! Sparse-AllReduce correctness and communication regression tests:
-//! the sparse wire format must change *accounting only* — identical sums
-//! to the dense path on any mix of ragged/empty contributions — and must
-//! actually cut `comm_bytes` on the paper's sparse regime (webspam-like,
-//! p >> n, high λ) while reaching the same objective.
+//! Comm-subsystem correctness and communication regression tests: the wire
+//! codecs and exchange strategies must change *accounting only* —
+//! identical sums to the dense path on any mix of ragged/empty
+//! contributions, bit-identical objective trajectories across lossless
+//! strategies — and must actually cut `comm_bytes` on the paper's sparse
+//! regime (webspam-like, p >> n, high λ), with the tree-merge work running
+//! inside the `WorkerPool` rather than on the leader thread.
 
 mod common;
 
 use common::prop_check;
 use dglmnet::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
 use dglmnet::cluster::network::{NetworkLedger, NetworkModel};
-use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
 use dglmnet::data::sparse::SparseVec;
 use dglmnet::data::synth;
 use dglmnet::solver::{lambda_max, DGlmnetSolver};
@@ -156,8 +158,8 @@ fn trace_comm_bytes_stay_below_dense_equivalent() {
     let total: u64 = fit.trace.iter().map(|r| r.comm_bytes).sum();
     assert_eq!(total, fit.comm_bytes, "trace must hold per-iteration deltas");
     // dense equivalent per iteration: 2 allreduces moving (n + p) floats
-    // over (M-1) reduce + ceil(log2 M) broadcast edges
-    let edges = (4 - 1) + 2; // M = 4
+    // over (M-1) reduce + (M-1) per-edge broadcast messages
+    let edges = 2 * (4 - 1); // M = 4
     let dense_per_iter = (edges * (600 + 8_000) * 4) as u64;
     for r in &fit.trace {
         assert!(
@@ -167,4 +169,62 @@ fn trace_comm_bytes_stay_below_dense_equivalent() {
             r.comm_bytes
         );
     }
+}
+
+/// The PR-3 acceptance criteria in one place: on a webspam-like problem at
+/// λ_max/4 with M = 8, the cost-model-selected strategy must cut total
+/// `comm_bytes` ≥ 2× versus the sparse reduce-Δm path, with a bit-identical
+/// objective trajectory (lossless codecs), and the tree-merge work must
+/// run inside the `WorkerPool` — never on the leader thread.
+#[test]
+fn auto_exchange_halves_comm_with_bit_identical_trajectory() {
+    let ds = synth::webspam_like(800, 16_000, 10, 426);
+    let lam = lambda_max(&ds) / 4.0;
+    let mk = |exchange: ExchangeStrategy| {
+        TrainConfig::builder()
+            .machines(8)
+            .engine(EngineKind::Native)
+            .lambda(lam)
+            .max_iter(25)
+            .exchange(exchange)
+            .build()
+    };
+
+    let mut auto = DGlmnetSolver::from_dataset(&ds, &mk(ExchangeStrategy::Auto)).unwrap();
+    let fit_auto = auto.fit(None).unwrap();
+    let mut reduce = DGlmnetSolver::from_dataset(&ds, &mk(ExchangeStrategy::ReduceDm)).unwrap();
+    let fit_reduce = reduce.fit(None).unwrap();
+
+    // ≥ 2× cheaper than the current sparse-with-dense-fallback path
+    assert!(fit_auto.comm_bytes > 0);
+    assert!(
+        fit_auto.comm_bytes * 2 <= fit_reduce.comm_bytes,
+        "auto {} bytes vs reduce-Δm {} bytes: expected ≥ 2× reduction",
+        fit_auto.comm_bytes,
+        fit_reduce.comm_bytes
+    );
+
+    // lossless codecs: bit-identical trajectory, iteration for iteration
+    assert_eq!(fit_auto.iterations, fit_reduce.iterations);
+    for (a, b) in fit_auto.trace.iter().zip(&fit_reduce.trace) {
+        assert_eq!(
+            a.objective.to_bits(),
+            b.objective.to_bits(),
+            "iter {}: trajectories diverged",
+            a.iter
+        );
+    }
+    assert_eq!(auto.beta, reduce.beta);
+
+    // the cost model must actually have chosen allgather-Δβ here (Δm is
+    // the dominant payload at λ_max/4), and the merges ran on workers
+    assert!(
+        fit_auto
+            .trace
+            .iter()
+            .any(|r| r.exchange == Some(ExchangeStrategy::AllGatherBeta)),
+        "cost model never picked allgather-Δβ on the webspam regime"
+    );
+    assert!(auto.merge_tasks_executed() > 0, "no merge ran inside the worker pool");
+    assert!(reduce.merge_tasks_executed() > 0);
 }

@@ -1,0 +1,214 @@
+//! Wire-codec property tests: lossless codecs round-trip bit-exactly, the
+//! f16 codec's error is bounded, charged bytes equal encoded length for
+//! every codec, and the allgather-Δβ exchange reproduces the reduce-Δm
+//! objective trajectory exactly on dna-like and webspam-like problems.
+
+mod common;
+
+use common::prop_check;
+use dglmnet::cluster::codec::{
+    f16_round_trip, CodecPolicy, MessageClass, WireCodec,
+};
+use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
+use dglmnet::data::sparse::SparseVec;
+use dglmnet::data::synth;
+use dglmnet::solver::{lambda_max, DGlmnetSolver};
+use dglmnet::util::rng::Xoshiro256;
+
+/// Random sparse message with nonzero values in the f16 normal range
+/// (magnitudes 0.5..64 — away from subnormals and overflow so the lossy
+/// round-trip bound is the generic 2^-11 relative one).
+fn random_message(rng: &mut Xoshiro256) -> SparseVec {
+    let dim = 1 + rng.below(900);
+    let density = match rng.below(3) {
+        0 => 0.02,
+        1 => 0.3,
+        _ => 0.8,
+    };
+    let mut v = SparseVec::new(dim);
+    for i in 0..dim {
+        if rng.uniform() < density {
+            let mag = rng.uniform_in(0.5, 64.0) as f32;
+            let val = if rng.bernoulli(0.5) { mag } else { -mag };
+            v.push(i as u32, val);
+        }
+    }
+    v
+}
+
+#[test]
+fn prop_lossless_codecs_round_trip_bit_exact() {
+    prop_check("lossless-codec-roundtrip", 200, |rng, _| {
+        let msg = random_message(rng);
+        for codec in [WireCodec::DenseF32, WireCodec::SparseU32F32] {
+            assert!(codec.is_lossless());
+            let bytes = codec.encode(&msg);
+            let back = codec.decode(&bytes, msg.dim).unwrap();
+            assert_eq!(back.dim, msg.dim, "{}", codec.name());
+            assert_eq!(back.indices, msg.indices, "{}", codec.name());
+            for (a, b) in msg.values.iter().zip(&back.values) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", codec.name());
+            }
+        }
+        // delta-varint round-trips the *indices* bit-exactly too
+        let bytes = WireCodec::DeltaVarintF16.encode(&msg);
+        let back = WireCodec::DeltaVarintF16.decode(&bytes, msg.dim).unwrap();
+        assert_eq!(back.indices, msg.indices);
+    });
+}
+
+#[test]
+fn prop_charged_bytes_match_encoded_length_for_every_codec() {
+    prop_check("codec-cost-exact", 200, |rng, _| {
+        let msg = random_message(rng);
+        for codec in
+            [WireCodec::DenseF32, WireCodec::SparseU32F32, WireCodec::DeltaVarintF16]
+        {
+            let encoded = codec.encode(&msg);
+            assert_eq!(
+                codec.encoded_bytes(&msg),
+                encoded.len() as u64,
+                "{}: cost model must equal the real encoded length",
+                codec.name()
+            );
+        }
+        // and the policy's pick never exceeds the dense equivalent
+        for class in [MessageClass::Margins, MessageClass::Beta] {
+            for policy in [
+                CodecPolicy::lossless(),
+                CodecPolicy { f16_margins: true, f16_beta: true, ..CodecPolicy::default() },
+            ] {
+                let (_, cost) = policy.pick(&msg.indices, msg.dim, class);
+                assert!(cost <= msg.dim as u64 * 4);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_f16_codec_error_is_bounded() {
+    prop_check("f16-codec-error-bound", 200, |rng, _| {
+        let msg = random_message(rng);
+        let bytes = WireCodec::DeltaVarintF16.encode(&msg);
+        let back = WireCodec::DeltaVarintF16.decode(&bytes, msg.dim).unwrap();
+        assert_eq!(back.nnz(), msg.nnz());
+        for ((_, want), (_, got)) in msg.iter().zip(back.iter()) {
+            let rel = ((got - want) / want).abs();
+            assert!(rel <= 1.0 / 1024.0, "want {want}, got {got}, rel {rel}");
+            // the decoded value is exactly the f16 quantization
+            assert_eq!(got.to_bits(), f16_round_trip(want).to_bits());
+        }
+    });
+}
+
+#[test]
+fn truncated_payloads_error_instead_of_panicking() {
+    let msg = SparseVec::from_dense(&[0.0, 1.5, 0.0, -2.0]);
+    for codec in [WireCodec::DenseF32, WireCodec::SparseU32F32, WireCodec::DeltaVarintF16] {
+        let mut bytes = codec.encode(&msg);
+        bytes.pop();
+        assert!(codec.decode(&bytes, msg.dim).is_err(), "{}", codec.name());
+    }
+    // out-of-range indices are rejected
+    let bytes = WireCodec::SparseU32F32.encode(&msg);
+    assert!(WireCodec::SparseU32F32.decode(&bytes, 2).is_err());
+
+    // non-ascending sparse payloads are rejected, not silently accepted
+    let mut unsorted = Vec::new();
+    for (i, v) in [(5u32, 1.0f32), (3, 2.0)] {
+        unsorted.extend_from_slice(&i.to_le_bytes());
+        unsorted.extend_from_slice(&v.to_le_bytes());
+    }
+    assert!(WireCodec::SparseU32F32.decode(&unsorted, 10).is_err());
+
+    // a zero gap after the first delta entry would duplicate an index
+    let dup = [0x01, 0x00, 0x3C, 0x00, 0x00, 0x3C]; // idx 1, then gap 0
+    assert!(WireCodec::DeltaVarintF16.decode(&dup, 10).is_err());
+
+    // an over-wide varint (5th byte carrying > 4 payload bits) errors
+    // instead of silently truncating the index
+    let wide = [0x81, 0x80, 0x80, 0x80, 0x7F, 0x00, 0x3C];
+    assert!(WireCodec::DeltaVarintF16.decode(&wide, 10).is_err());
+}
+
+/// The allgather-Δβ strategy satellite: identical trajectories to
+/// reduce-Δm on both the dna-like (n >> p) and webspam-like (p >> n)
+/// shapes, while never costing more on the wire.
+#[test]
+fn allgather_beta_reproduces_reduce_dm_trajectory() {
+    let problems = [
+        ("dna-like", synth::dna_like(900, 80, 6, 640)),
+        ("webspam-like", synth::webspam_like(400, 6_000, 10, 641)),
+    ];
+    for (name, ds) in problems {
+        let lam = lambda_max(&ds) / 4.0;
+        let mk = |exchange: ExchangeStrategy| {
+            TrainConfig::builder()
+                .machines(6)
+                .engine(EngineKind::Native)
+                .lambda(lam)
+                .max_iter(20)
+                .exchange(exchange)
+                .build()
+        };
+        let mut red = DGlmnetSolver::from_dataset(&ds, &mk(ExchangeStrategy::ReduceDm)).unwrap();
+        let mut gat =
+            DGlmnetSolver::from_dataset(&ds, &mk(ExchangeStrategy::AllGatherBeta)).unwrap();
+        let fr = red.fit(None).unwrap();
+        let fg = gat.fit(None).unwrap();
+        assert_eq!(fr.iterations, fg.iterations, "{name}");
+        for (a, b) in fr.trace.iter().zip(&fg.trace) {
+            assert_eq!(
+                a.objective.to_bits(),
+                b.objective.to_bits(),
+                "{name} iter {}",
+                a.iter
+            );
+        }
+        assert_eq!(red.beta, gat.beta, "{name}");
+        assert!(
+            fg.comm_bytes <= fr.comm_bytes,
+            "{name}: allgather-Δβ must never cost more ({} vs {})",
+            fg.comm_bytes,
+            fr.comm_bytes
+        );
+    }
+}
+
+/// Opting into the lossy f16 codec for Δ-margin messages (reduce-Δm
+/// strategy, where Δm actually crosses the wire) must cut bytes and stay
+/// within a small objective tolerance of the lossless path.
+#[test]
+fn f16_margins_cut_bytes_within_objective_tolerance() {
+    let ds = synth::webspam_like(600, 8_000, 10, 642);
+    let lam = lambda_max(&ds) / 4.0;
+    let mk = |f16: bool| {
+        TrainConfig::builder()
+            .machines(8)
+            .engine(EngineKind::Native)
+            .lambda(lam)
+            .max_iter(25)
+            .exchange(ExchangeStrategy::ReduceDm)
+            .wire_f16_margins(f16)
+            .build()
+    };
+    let mut lossless = DGlmnetSolver::from_dataset(&ds, &mk(false)).unwrap();
+    let f_lossless = lossless.fit(None).unwrap();
+    let mut lossy = DGlmnetSolver::from_dataset(&ds, &mk(true)).unwrap();
+    let f_lossy = lossy.fit(None).unwrap();
+
+    assert!(
+        f_lossy.comm_bytes < f_lossless.comm_bytes,
+        "f16 wire must be cheaper: {} vs {}",
+        f_lossy.comm_bytes,
+        f_lossless.comm_bytes
+    );
+    let rel = (f_lossy.objective - f_lossless.objective).abs()
+        / f_lossless.objective.abs().max(1.0);
+    assert!(
+        rel <= 2e-2,
+        "f16 objective drifted too far: {} vs {} (rel {rel:.2e})",
+        f_lossy.objective,
+        f_lossless.objective
+    );
+}

@@ -7,7 +7,10 @@ Fails (exit 1) when:
   * any timing entry's median regresses by more than MAX_TIME_REGRESSION
     (15%) relative to the baseline, or
   * any comm-bytes counter grows at all (the sparse wire format must never
-    get chattier).
+    get chattier). For entries that record a `chosen_strategy` (the
+    per-exchange-strategy section), only the strategy the cost model
+    actually picked — plus the `auto_` path itself — is gated; the
+    non-chosen strategy's bytes are informational.
 
 Bootstrap mode: when BASELINE does not exist yet, prints instructions and
 exits 0 — commit the fresh file as the baseline to arm the gate.
@@ -56,12 +59,20 @@ def main():
                 print(f"  [ok]     {name}: {c:.6g}s vs {b:.6g}s")
         elif isinstance(base, dict):
             # nested counters (e.g. fit_sparse_vs_dense_comm): any *comm_bytes
-            # growth fails
+            # growth fails. Strategy entries gate only the cost-model pick.
+            chosen = cur.get("chosen_strategy")
+            gated = None
+            if chosen is not None:
+                gated = {f"{chosen}_comm_bytes", "auto_comm_bytes"}
             for key, bval in sorted(base.items()):
                 if not key.endswith("comm_bytes"):
                     continue
                 cval = cur.get(key)
                 if cval is None:
+                    continue
+                if gated is not None and key not in gated:
+                    print(f"  [info]   {name}.{key}: {cval:.0f} bytes "
+                          f"(not the chosen strategy, ungated)")
                     continue
                 compared += 1
                 if cval > bval:
