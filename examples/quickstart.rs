@@ -81,7 +81,7 @@ fn main() -> dglmnet::Result<()> {
     loop {
         match driver.step()? {
             StepOutcome::Progress(rec) if rec.iter == 5 => {
-                driver.checkpoint().save(&ckpt_path)?;
+                driver.checkpoint()?.save(&ckpt_path)?;
                 println!("  checkpoint written at iteration 5 -> {}", ckpt_path.display());
                 break; // simulate the process dying here
             }

@@ -1,0 +1,118 @@
+//! A genuinely multi-process d-GLMNET fit over the socket transport.
+//!
+//! The leader process binds an ephemeral TCP port and re-executes *itself*
+//! twice with `worker <machine> <addr>` arguments — two real OS processes,
+//! each rebuilding its feature shard deterministically from the same
+//! synthetic dataset, connecting back, and serving the node protocol. The
+//! leader then runs the identical fit with in-process worker threads and
+//! verifies the two trajectories are bit-identical (objective, β, and the
+//! comm-bytes ledger) — the property the CI socket job gates on.
+//!
+//! Run: `cargo run --release --example socket_cluster`
+//!
+//! Production deployments use the `dglmnet worker` CLI subcommand instead
+//! of the self-exec trick; the protocol and the bytes on the wire are the
+//! same.
+
+use std::net::TcpListener;
+use std::process::{Child, Command};
+use std::time::Duration;
+
+use dglmnet::cluster::transport::SocketTransport;
+use dglmnet::cluster::WorkerNode;
+use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::dataset::Dataset;
+use dglmnet::data::synth;
+use dglmnet::solver::{lambda_max, DGlmnetSolver};
+
+const MACHINES: usize = 2;
+
+fn dataset() -> Dataset {
+    // webspam-like (p >> n): the regime where the allgather-Δβ gather wins
+    synth::webspam_like(600, 4_000, 10, 99)
+}
+
+fn config(lambda: f64) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(MACHINES)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(10)
+        .build()
+}
+
+fn worker_main(machine: usize, addr: &str) -> Result<(), Box<dyn std::error::Error>> {
+    let ds = dataset();
+    let lam = lambda_max(&ds) / 4.0;
+    let cfg = config(lam);
+    let shard = DGlmnetSolver::shard_for(&ds, &cfg, machine);
+    let mut node = WorkerNode::from_shard(
+        &cfg,
+        shard,
+        std::sync::Arc::new(ds.y.clone()),
+        ds.n_features(),
+        std::path::Path::new("artifacts"),
+    )?;
+    println!(
+        "[worker {machine}] pid {}: shard ready, joining {addr}",
+        std::process::id()
+    );
+    let mut transport = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
+    node.serve(&mut transport)?;
+    println!("[worker {machine}] pid {}: shutdown", std::process::id());
+    Ok(())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() == 4 && args[1] == "worker" {
+        return worker_main(args[2].parse()?, &args[3]);
+    }
+
+    let ds = dataset();
+    let lam = lambda_max(&ds) / 4.0;
+    let cfg = config(lam);
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    println!(
+        "[leader] pid {}: listening on {addr}, spawning {MACHINES} worker processes",
+        std::process::id()
+    );
+    let exe = std::env::current_exe()?;
+    let children: Vec<Child> = (0..MACHINES)
+        .map(|k| Command::new(&exe).arg("worker").arg(k.to_string()).arg(&addr).spawn())
+        .collect::<std::io::Result<_>>()?;
+
+    let mut socket_solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener)?;
+    let fit_socket = socket_solver.fit_lambda(lam)?;
+    let beta_socket = socket_solver.beta.clone();
+    drop(socket_solver); // sends Shutdown; the worker processes exit
+    for mut child in children {
+        let status = child.wait()?;
+        if !status.success() {
+            return Err(format!("a worker process exited with {status}").into());
+        }
+    }
+
+    let mut local_solver = DGlmnetSolver::from_dataset(&ds, &cfg)?;
+    let fit_local = local_solver.fit_lambda(lam)?;
+
+    println!(
+        "[leader] socket    : f = {:.6} ({} iters, {} comm bytes)",
+        fit_socket.objective, fit_socket.iterations, fit_socket.comm_bytes
+    );
+    println!(
+        "[leader] in-process: f = {:.6} ({} iters, {} comm bytes)",
+        fit_local.objective, fit_local.iterations, fit_local.comm_bytes
+    );
+    let bit_identical = fit_socket.objective.to_bits() == fit_local.objective.to_bits()
+        && beta_socket == local_solver.beta
+        && fit_socket.comm_bytes == fit_local.comm_bytes;
+    println!("[leader] bit-identical across transports: {bit_identical}");
+    println!("objective_bits={:016x}", fit_socket.objective.to_bits());
+    if !bit_identical {
+        return Err("socket and in-process runs diverged".into());
+    }
+    Ok(())
+}

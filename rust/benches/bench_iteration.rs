@@ -7,7 +7,6 @@
 //! Run: `cargo bench --bench bench_iteration`
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
 use dglmnet::bench_harness::{bench, section, BenchStats};
 use dglmnet::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
@@ -199,20 +198,24 @@ fn main() {
         report.insert(k, v);
     }
 
-    section("full iteration via pool (M = 4, native, reused buffers)");
+    section("full iteration via pool (M = 4, native, protocol sweep)");
     {
         let cfg = TrainConfig::builder()
             .machines(4)
             .engine(EngineKind::Native)
             .build();
         let shards = shard_in_memory(&ds.x, &part);
-        let mut pool =
-            dglmnet::solver::pool::WorkerPool::spawn(&cfg, shards, n, "artifacts".into()).unwrap();
-        let (wa, za) = (Arc::new(w.clone()), Arc::new(z.clone()));
-        let beta_full = vec![0f32; 4_000];
+        let mut pool = dglmnet::solver::pool::WorkerPool::spawn(
+            &cfg,
+            shards,
+            &ds.y,
+            4_000,
+            "artifacts".into(),
+        )
+        .unwrap();
         let mut results = Vec::new();
-        let s = bench("pool.sweep_all (4 workers)", 2, 10, || {
-            pool.sweep_all(&wa, &za, &beta_full, 0.5, 1e-6, &mut results).unwrap();
+        let s = bench("pool.sweep_all (4 workers, worker-held state)", 2, 10, || {
+            pool.sweep_all(0.5, 1e-6, &mut results).unwrap();
         });
         let (k, v) = record("pool_sweep_all_m4", &s);
         report.insert(k, v);
@@ -334,6 +337,62 @@ fn main() {
         m.insert("auto_objective".into(), Json::Num(fit_auto.objective));
         m.insert("reduce_dm_objective".into(), Json::Num(fit_reduce.objective));
         report.insert("fit_exchange_strategies".into(), Json::Obj(m));
+    }
+
+    // ---- per-transport comm: the same fit in-process vs over sockets ----
+    section("per-transport comm: in-process vs socket (webspam-like, M = 4)");
+    {
+        let ds = synth::webspam_like(800, 8_000, 12, 13);
+        let lam = lambda_max(&ds) / 4.0;
+        let cfg = TrainConfig::builder()
+            .machines(4)
+            .engine(EngineKind::Native)
+            .lambda(lam)
+            .max_iter(15)
+            .build();
+        let t0 = std::time::Instant::now();
+        let mut local = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let fit_local = local.fit(None).unwrap();
+        let local_wall = t0.elapsed().as_secs_f64();
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let workers = dglmnet::solver::pool::spawn_local_socket_workers(&cfg, &ds, addr);
+        let t1 = std::time::Instant::now();
+        let mut remote = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+        let fit_remote = remote.fit(None).unwrap();
+        let remote_wall = t1.elapsed().as_secs_f64();
+        drop(remote);
+        for h in workers {
+            h.join().expect("worker thread panicked").unwrap();
+        }
+
+        println!(
+            "in-process: {} bytes, obj {:.6} ({} iters, {:.3}s wall)",
+            fit_local.comm_bytes, fit_local.objective, fit_local.iterations, local_wall
+        );
+        println!(
+            "socket    : {} bytes, obj {:.6} ({} iters, {:.3}s wall)",
+            fit_remote.comm_bytes, fit_remote.objective, fit_remote.iterations, remote_wall
+        );
+        assert_eq!(
+            fit_local.objective.to_bits(),
+            fit_remote.objective.to_bits(),
+            "transports must not change the trajectory"
+        );
+        let mut m = BTreeMap::new();
+        m.insert("in_process_comm_bytes".into(), Json::Num(fit_local.comm_bytes as f64));
+        m.insert("socket_comm_bytes".into(), Json::Num(fit_remote.comm_bytes as f64));
+        m.insert(
+            "in_process_wall_secs_per_iter".into(),
+            Json::Num(local_wall / fit_local.iterations.max(1) as f64),
+        );
+        m.insert(
+            "socket_wall_secs_per_iter".into(),
+            Json::Num(remote_wall / fit_remote.iterations.max(1) as f64),
+        );
+        m.insert("objective".into(), Json::Num(fit_local.objective));
+        report.insert("fit_transport_comparison".into(), Json::Obj(m));
     }
 
     // ---- emit the machine-readable baseline -----------------------------

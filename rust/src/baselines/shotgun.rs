@@ -179,6 +179,10 @@ impl ShotgunEstimator {
             beta: self.beta.clone(),
             margins: self.margins.clone(),
             rng: Some(self.rng.state()),
+            // no distributed cluster: no worker-held shards, no comm
+            // estimator state
+            shards: Vec::new(),
+            est_shrink: None,
         }
     }
 

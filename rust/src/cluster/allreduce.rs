@@ -161,6 +161,7 @@ impl TreeAllReduce {
             class: MessageClass::Margins,
             exec: &SerialExecutor,
             charge: true,
+            broadcast: true,
         };
         run_sparse_exchange(&self.model, refs.len(), &|k| refs[k], dim, &ctx, scratch, out)
     }
@@ -365,21 +366,28 @@ fn sparse_tree_exchange(
         secs_total += round_secs;
     }
 
-    // broadcast: one message per edge, the merged root's payload each time
+    // broadcast: one message per edge, the merged root's payload each time.
+    // With `ctx.broadcast = false` the exchange is a *gather*: the leader
+    // keeps the merged root and no retrace happens (worker-held β shards
+    // apply their own Δβ locally, so nothing travels back down) — but the
+    // root codec pick still runs, because a lossy root codec quantizes the
+    // values the leader will apply and ship onward.
     let root = scratch.active[0];
     if ctx.charge {
         let (codec, cost) = ctx.policy.pick(&scratch.acc_idx[root], dim, ctx.class);
         if codec == WireCodec::DeltaVarintF16 {
             quantize_f16_f64(&mut scratch.acc_val[root]);
         }
-        for &pairs in scratch.pairs_per_round.iter().rev() {
-            let mut round_secs = 0f64;
-            for _ in 0..pairs {
-                let t = ctx.ledger.record(model, cost);
-                bytes += cost;
-                round_secs = round_secs.max(t);
+        if ctx.broadcast {
+            for &pairs in scratch.pairs_per_round.iter().rev() {
+                let mut round_secs = 0f64;
+                for _ in 0..pairs {
+                    let t = ctx.ledger.record(model, cost);
+                    bytes += cost;
+                    round_secs = round_secs.max(t);
+                }
+                secs_total += round_secs;
             }
-            secs_total += round_secs;
         }
     }
 
@@ -704,6 +712,7 @@ mod tests {
                 class: MessageClass::Margins,
                 exec: &counting,
                 charge: true,
+                broadcast: true,
             };
             let mut out = SparseVec::new(0);
             let o = ar.exchange(m, &|k| refs[k], 200, &ctx, &mut scratch, &mut out);
@@ -734,6 +743,7 @@ mod tests {
             class: MessageClass::Margins,
             exec: &SerialExecutor,
             charge: false,
+            broadcast: false,
         };
         let mut out = SparseVec::new(0);
         let o = ar.exchange(4, &|k| refs[k], 60, &ctx, &mut scratch, &mut out);
@@ -741,5 +751,47 @@ mod tests {
         assert_eq!(o.bytes_moved, 0);
         assert_eq!(ledger.total_bytes(), 0);
         assert_eq!(o.simulated_secs, 0.0);
+    }
+
+    #[test]
+    fn gather_charges_reduce_edges_only() {
+        // the accounting change behind worker-held β shards (PR 4): with
+        // `broadcast = false` the exchange is a gather-to-leader — same
+        // deterministic merge, but the (M - 1) · root broadcast retrace of
+        // the PR-3 model is gone. Disjoint 2-nnz contributions from M = 4
+        // machines: reduce edges move 16 + 16 + 32 bytes; the full
+        // allreduce added 3 broadcast edges of the 8-entry root (64 bytes
+        // each).
+        let contribs: Vec<SparseVec> = (0..4)
+            .map(|k| {
+                let mut v = SparseVec::new(100_000);
+                v.push(10 * k as u32, 1.0);
+                v.push(10 * k as u32 + 5, 2.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&SparseVec> = contribs.iter().collect();
+        let ar = TreeAllReduce::new(NetworkModel::gigabit());
+        let run = |broadcast: bool| {
+            let ledger = NetworkLedger::new();
+            let mut scratch = AllReduceScratch::default();
+            let mut out = SparseVec::new(0);
+            let ctx = CommCtx {
+                ledger: &ledger,
+                policy: CodecPolicy::lossless(),
+                class: MessageClass::Beta,
+                exec: &SerialExecutor,
+                charge: true,
+                broadcast,
+            };
+            let o = ar.exchange(4, &|k| refs[k], 100_000, &ctx, &mut scratch, &mut out);
+            (out, o.bytes_moved, o.simulated_secs)
+        };
+        let (full_out, full_bytes, full_secs) = run(true);
+        let (gather_out, gather_bytes, gather_secs) = run(false);
+        assert_eq!(full_out, gather_out, "gather must not change the merge");
+        assert_eq!(gather_bytes, 16 + 16 + 32);
+        assert_eq!(full_bytes, gather_bytes + 3 * 64);
+        assert!(gather_secs < full_secs);
     }
 }

@@ -42,14 +42,20 @@ impl TaskExecutor for SerialExecutor {
 
 /// Shared context for one collective call: where to charge bytes, which
 /// codecs the policy allows for this message class, who runs the merges,
-/// and whether the wire is charged at all (`charge = false` models a
-/// leader-local recomputation — same deterministic merge, zero bytes).
+/// whether the wire is charged at all (`charge = false` models a
+/// leader-local recomputation — same deterministic merge, zero bytes), and
+/// whether the merged root is broadcast back down the tree
+/// (`broadcast = false` models a *gather*: the leader needs the merged
+/// vector, the workers do not — the Δβ flow under worker-held β shards,
+/// where each node applies `α·Δβ_local` from its own state and the
+/// merged-root retrace of the PR-3 accounting no longer exists).
 pub struct CommCtx<'a> {
     pub ledger: &'a NetworkLedger,
     pub policy: CodecPolicy,
     pub class: MessageClass,
     pub exec: &'a dyn TaskExecutor,
     pub charge: bool,
+    pub broadcast: bool,
 }
 
 /// A collective over M per-machine sparse contributions: every machine
@@ -128,14 +134,23 @@ impl Collective for AllGather {
     }
 }
 
-/// Estimate the total bytes a tree exchange of contributions with the
-/// given per-machine `nnzs` (over logical length `dim`) would charge, using
-/// the lossless codecs' cost model (`min(nnz · 8, dim · 4)` per message).
-/// Merged-node sizes are upper-bounded by `nnz_a + nnz_b` (overlap is
-/// unknown before merging), so this over-estimates overlapping payloads —
-/// a conservative, deterministic input to the strategy choice. `nnzs` is a
-/// caller-reused scratch buffer and is clobbered by the dry tree walk.
-pub fn estimate_tree_bytes(nnzs: &mut Vec<usize>, dim: usize) -> u64 {
+/// Per-message cost under the lossless codecs, optionally admitting the
+/// delta-varint + f16 codec's *typical* `nnz · 3` size when the policy
+/// allows it for the message class (the exact size needs the indices,
+/// which a dry estimate does not have).
+fn message_cost(nnz: usize, dim: usize, allow_f16: bool) -> u64 {
+    let mut cost = sparse_wire_bytes(nnz).min(dense_wire_bytes(dim));
+    if allow_f16 {
+        cost = cost.min(nnz as u64 * 3);
+    }
+    cost
+}
+
+/// The dry tree walk shared by [`estimate_tree_bytes`] and
+/// [`TreeByteEstimator`]: merged-node sizes are upper-bounded by
+/// `nnz_a + nnz_b` (overlap is unknown before merging). `nnzs` is a
+/// caller-reused scratch buffer and is clobbered by the walk.
+fn tree_walk_bytes(nnzs: &mut [usize], dim: usize, broadcast: bool, allow_f16: bool) -> u64 {
     let m = nnzs.len();
     if m <= 1 {
         return 0;
@@ -148,7 +163,7 @@ pub fn estimate_tree_bytes(nnzs: &mut Vec<usize>, dim: usize) -> u64 {
         for t in 0..pairs {
             let a = nnzs[2 * t];
             let b = nnzs[2 * t + 1];
-            bytes += sparse_wire_bytes(b).min(dense_wire_bytes(dim));
+            bytes += message_cost(b, dim, allow_f16);
             nnzs[w] = (a + b).min(dim);
             w += 1;
         }
@@ -158,9 +173,100 @@ pub fn estimate_tree_bytes(nnzs: &mut Vec<usize>, dim: usize) -> u64 {
         }
         len = w;
     }
-    // broadcast: the merged root retraces the tree, one message per edge
-    let root = sparse_wire_bytes(nnzs[0]).min(dense_wire_bytes(dim));
-    bytes + (m as u64 - 1) * root
+    if broadcast {
+        // the merged root retraces the tree, one message per edge
+        bytes += (m as u64 - 1) * message_cost(nnzs[0], dim, allow_f16);
+    }
+    bytes
+}
+
+/// Estimate the total bytes a full tree exchange (reduce + per-edge
+/// broadcast) of contributions with the given per-machine `nnzs` (over
+/// logical length `dim`) would charge, using the lossless codecs' cost
+/// model (`min(nnz · 8, dim · 4)` per message). A conservative,
+/// deterministic upper bound — see [`TreeByteEstimator`] for the
+/// EWMA-sharpened variant the solver's strategy pick uses. `nnzs` is a
+/// caller-reused scratch buffer and is clobbered by the dry tree walk.
+pub fn estimate_tree_bytes(nnzs: &mut Vec<usize>, dim: usize) -> u64 {
+    tree_walk_bytes(nnzs, dim, true, false)
+}
+
+/// One dry-walk prediction: the raw upper bound and the EWMA-sharpened
+/// estimate actually compared by the strategy pick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ByteEstimate {
+    /// The `nnz_a + nnz_b` upper-bound walk (what [`TreeByteEstimator::observe`]
+    /// normalizes observations against).
+    pub upper: u64,
+    /// `upper` scaled by the EWMA of observed/upper ratios.
+    pub predicted: u64,
+}
+
+/// EWMA smoothing for observed/upper byte ratios (≈ the last ~8
+/// observations dominate).
+const BYTE_EWMA_ALPHA: f64 = 0.25;
+/// Shrink-factor clamp: guards against degenerate observations (an all-zero
+/// iteration, a pathological f16 approximation) poisoning the estimator.
+const SHRINK_MIN: f64 = 0.05;
+const SHRINK_MAX: f64 = 1.5;
+
+/// The sharpened tree-byte estimator behind the automatic reduce-Δm vs
+/// allgather-Δβ pick. The raw `nnz_a + nnz_b` walk ignores support overlap
+/// between machines (heavy for example-space Δm payloads) and the
+/// delta-varint codec, which made the auto pick miss near the crossover
+/// (ROADMAP open item). This estimator
+///
+/// * models the *charged* flow shape: a full reduce + broadcast for Δm,
+///   a gather-only reduce for Δβ under worker-held shards
+///   (`include_broadcast = false` drops the `(M-1) · root` term),
+/// * admits the delta-varint codec's typical `nnz · 3` message size when
+///   the policy allows f16 for the class, and
+/// * keeps an EWMA of observed/upper-bound byte ratios from the exchanges
+///   that actually ran, multiplying future upper bounds by it.
+///
+/// The state is two f64s, deterministic given the trajectory, and is
+/// checkpointed (`Checkpoint::est_shrink`) so a resumed fit reproduces the
+/// uninterrupted run's strategy picks — and therefore its `comm_bytes`
+/// ledger — bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct TreeByteEstimator {
+    include_broadcast: bool,
+    shrink: f64,
+}
+
+impl TreeByteEstimator {
+    pub fn new(include_broadcast: bool) -> Self {
+        Self { include_broadcast, shrink: 1.0 }
+    }
+
+    /// Current EWMA shrink factor (1.0 until the first observation).
+    pub fn shrink(&self) -> f64 {
+        self.shrink
+    }
+
+    /// Restore a checkpointed shrink factor.
+    pub fn set_shrink(&mut self, shrink: f64) {
+        self.shrink = shrink.clamp(SHRINK_MIN, SHRINK_MAX);
+    }
+
+    /// Dry-walk prediction for per-machine `nnzs` over logical length
+    /// `dim`. `allow_f16` admits the lossy codec's typical size (pass the
+    /// policy's eligibility for the message class). `nnzs` is clobbered.
+    pub fn estimate(&self, nnzs: &mut [usize], dim: usize, allow_f16: bool) -> ByteEstimate {
+        let upper = tree_walk_bytes(nnzs, dim, self.include_broadcast, allow_f16);
+        let predicted = ((upper as f64) * self.shrink).round() as u64;
+        ByteEstimate { upper, predicted }
+    }
+
+    /// Feed back what an exchange actually charged against the upper bound
+    /// its estimate reported.
+    pub fn observe(&mut self, upper: u64, actual: u64) {
+        if upper == 0 {
+            return;
+        }
+        let ratio = (actual as f64 / upper as f64).clamp(SHRINK_MIN, SHRINK_MAX);
+        self.shrink = BYTE_EWMA_ALPHA * ratio + (1.0 - BYTE_EWMA_ALPHA) * self.shrink;
+    }
 }
 
 #[cfg(test)]
@@ -196,10 +302,67 @@ mod tests {
             class: MessageClass::Beta,
             exec: &SerialExecutor,
             charge: true,
+            broadcast: true,
         };
         let o = ar.exchange(m, &|k| refs[k], dim, &ctx, &mut scratch, &mut out);
         assert_eq!(est, o.bytes_moved);
         assert_eq!(out.nnz(), 200);
+    }
+
+    #[test]
+    fn gather_only_walk_drops_exactly_the_broadcast_term() {
+        // disjoint 50-nnz contributions from 4 machines: reduce edges move
+        // 50 + 50 + 100 entries, the root (200) would retrace 3 edges
+        let mut nnzs = vec![50usize, 50, 50, 50];
+        let full = estimate_tree_bytes(&mut nnzs.clone(), 100_000);
+        let gather = TreeByteEstimator::new(false)
+            .estimate(&mut nnzs, 100_000, false)
+            .upper;
+        assert_eq!(full, gather + 3 * sparse_wire_bytes(200));
+        assert_eq!(gather, sparse_wire_bytes(50 + 50 + 100));
+    }
+
+    #[test]
+    fn estimator_ewma_tracks_observed_overlap() {
+        let mut est = TreeByteEstimator::new(true);
+        assert_eq!(est.shrink(), 1.0);
+        let mut nnzs = vec![100usize; 4];
+        let e = est.estimate(&mut nnzs, 1_000_000, false);
+        assert_eq!(e.upper, e.predicted, "no observations yet");
+        // heavy overlap: the exchange kept moving half the upper bound
+        for _ in 0..32 {
+            est.observe(e.upper, e.upper / 2);
+        }
+        assert!(
+            (est.shrink() - 0.5).abs() < 0.02,
+            "EWMA should converge toward the observed ratio, got {}",
+            est.shrink()
+        );
+        let mut nnzs = vec![100usize; 4];
+        let sharpened = est.estimate(&mut nnzs, 1_000_000, false);
+        assert_eq!(sharpened.upper, e.upper, "upper bound is observation-free");
+        assert!(sharpened.predicted < e.predicted);
+        // zero-byte observations are ignored; ratios are clamped
+        est.observe(0, 123);
+        est.set_shrink(99.0);
+        assert!(est.shrink() <= 1.5);
+        est.set_shrink(1e-9);
+        assert!(est.shrink() >= 0.05);
+    }
+
+    #[test]
+    fn f16_eligibility_caps_the_message_cost_model() {
+        // 100-nnz message over a large dim: sparse = 800, f16 typical = 300
+        let mut nnzs = vec![100usize, 100];
+        let lossless = TreeByteEstimator::new(false)
+            .estimate(&mut nnzs, 1_000_000, false)
+            .upper;
+        let mut nnzs = vec![100usize, 100];
+        let lossy = TreeByteEstimator::new(false)
+            .estimate(&mut nnzs, 1_000_000, true)
+            .upper;
+        assert_eq!(lossless, 800);
+        assert_eq!(lossy, 300);
     }
 
     #[test]
@@ -237,6 +400,7 @@ mod tests {
                 class: MessageClass::Margins,
                 exec: &SerialExecutor,
                 charge: true,
+                broadcast: true,
             };
             let o = coll.exchange(refs.len(), &|k| refs[k], dim, &ctx, &mut scratch, &mut out);
             (out, o.bytes_moved)

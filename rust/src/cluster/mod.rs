@@ -1,36 +1,75 @@
-//! Simulated cluster substrate: feature partitioners, a byte-accounted
-//! network model (Gigabit-Ethernet-like, the paper's testbed), and the
-//! pluggable communication subsystem every Δ-exchange routes through.
+//! Cluster substrate: feature partitioners, a byte-accounted network model
+//! (Gigabit-Ethernet-like, the paper's testbed), and the node protocol
+//! every leader ↔ worker interaction routes through.
 //!
-//! The comm stack has three layers:
+//! The stack has four layers, bottom up:
 //!
-//! * [`codec`] — wire formats. Three codecs (dense `f32`, sparse
+//! * [`codec`] — **wire formats.** Three codecs (dense `f32`, sparse
 //!   `u32 + f32`, delta-varint index + `f16` value) selected **per
 //!   message** by a byte-cost model ([`codec::CodecPolicy::pick`]); the
 //!   lossy f16 codec is opt-in per message class and never touches
 //!   β-carrying messages by default.
-//! * [`comm`] — the [`comm::Collective`] trait over the simulated network
-//!   ([`TreeAllReduce`] and [`comm::AllGather`]), the [`comm::TaskExecutor`]
-//!   that moves tree-node merges off the leader thread (the solver plugs
-//!   its `WorkerPool` in), and the byte estimator behind the automatic
-//!   reduce-Δm vs allgather-Δβ strategy choice.
-//! * [`allreduce`] — the shared binary-tree engine: deterministic pairwise
-//!   `f64` merges, per-message codec charging on reduce edges, per-edge
-//!   broadcast accounting (`M - 1` messages, levels concurrent in time).
+//! * [`transport`] + [`protocol`] — **how messages travel.** The
+//!   [`transport::Transport`] trait is an ordered, reliable
+//!   [`protocol::NodeMessage`] stream with two implementations: in-process
+//!   channels (worker threads, no serialization, owned buffers transfer)
+//!   and a real multi-process TCP byte stream whose frames encode sparse
+//!   payloads with the layer-1 codecs — so the bytes a socket writes for a
+//!   Δ-payload are exactly the bytes the ledger's cost functions charge.
+//!   Peer death and malformed frames surface as clean errors, never hangs.
+//! * [`comm`] + [`allreduce`] — **collectives.** The [`comm::Collective`]
+//!   trait over the simulated network ([`TreeAllReduce`], [`comm::AllGather`])
+//!   shares one deterministic pairwise-f64 tree engine: per-message codec
+//!   charging on reduce edges, per-edge broadcast accounting (`M - 1`
+//!   messages, levels concurrent in time), and a gather mode
+//!   (`CommCtx::broadcast = false`) that drops the broadcast term for
+//!   flows the nodes no longer consume. Tree-node merges run on a
+//!   [`comm::TaskExecutor`] (the solver plugs its `WorkerPool` in), and
+//!   [`comm::TreeByteEstimator`] — an EWMA-sharpened dry-walk cost model —
+//!   drives the automatic reduce-Δm vs allgather-Δβ strategy pick.
+//! * [`node`] — **stateful endpoints.** A [`node::WorkerNode`] owns its
+//!   feature shard, its engine, **its β shard, and its margins copy**: a
+//!   `Sweep` request carries only `(λ, ν)` (the node derives `(w, z)` from
+//!   its own margins), and an `Apply` carries only `(α, Δm)` — the node
+//!   applies `α·Δβ_local` from its own sweep output, so no per-sweep
+//!   `beta_local` gather or merged-Δβ broadcast exists anywhere in the
+//!   system. Leader-held and worker-held state stay bit-identical (the
+//!   checkpoint pull verifies it).
 //!
-//! The algorithmic content of d-GLMNET is unchanged by running workers as
-//! in-process threads; the network model exists so the communication-cost
-//! claims of §3 are *measured* (bytes, rounds, simulated seconds) rather
-//! than asserted.
+//! **Accounting contract.** The `comm_bytes` ledger charges the collective
+//! Δ-exchanges per tree edge — reduce messages always; broadcast retraces
+//! only for flows a node actually consumes (the merged Δm under reduce-Δm).
+//! Handshake, sweep-request, apply and state-sync frames are not charged:
+//! they are O(1)-per-iteration control traffic or model the shared-state
+//! bookkeeping the paper's cost analysis excludes, and the allgather-Δβ
+//! strategy's leader-side Δm recombination remains an uncharged local
+//! computation exactly as in PR 3. Under the default lossless policy,
+//! what *is* charged agrees byte-for-byte with what a
+//! [`transport::SocketTransport`] would serialize for the same payload,
+//! because both call the same codec cost functions (the opt-in lossy
+//! `wire_f16_*` knobs charge the f16 cost while the frames stay
+//! losslessly encoded — see [`protocol`]).
+//!
+//! The algorithmic content of d-GLMNET is independent of where the workers
+//! run; the network model exists so the communication-cost claims of §3
+//! are *measured* (bytes, rounds, simulated seconds) rather than asserted.
 
 pub mod allreduce;
 pub mod codec;
 pub mod comm;
 pub mod network;
+pub mod node;
 pub mod partition;
+pub mod protocol;
+pub mod transport;
 
 pub use allreduce::TreeAllReduce;
 pub use codec::{CodecPolicy, MessageClass, WireCodec};
-pub use comm::{AllGather, Collective, SerialExecutor, TaskExecutor};
+pub use comm::{
+    AllGather, ByteEstimate, Collective, SerialExecutor, TaskExecutor, TreeByteEstimator,
+};
 pub use network::{NetworkLedger, NetworkModel};
+pub use node::WorkerNode;
 pub use partition::{FeaturePartition, PartitionStrategy};
+pub use protocol::NodeMessage;
+pub use transport::{SocketTransport, Transport};

@@ -1,0 +1,382 @@
+//! Stateful worker endpoint of the node protocol. A [`WorkerNode`] owns
+//! everything one machine of the paper's cluster owns:
+//!
+//! * its feature shard and subproblem engine,
+//! * **its β shard** — updated locally with `α·Δβ_local` on every
+//!   [`NodeMessage::Apply`], so no `beta_local` gather ever travels,
+//! * **its margins copy** — updated with `α·Δm` from the same `Apply`,
+//!   from which it derives the working statistics `(w, z)` locally each
+//!   sweep (paper Alg 4: every machine computes the stats from its own
+//!   margin vector).
+//!
+//! The node is transport-agnostic: [`WorkerNode::handle`] maps one request
+//! to at most one reply, and [`WorkerNode::serve`] runs the
+//! request/reply loop over any [`Transport`] — the in-process `WorkerPool`
+//! drives `handle` directly from its worker threads, the `dglmnet worker`
+//! CLI subcommand runs `serve` over a [`SocketTransport`] in a separate
+//! process.
+//!
+//! **Bit-exactness contract.** The leader applies the merged update as
+//! `β[j] += α·Δβ[j]` / `margins[i] += α·Δm[i]` in f32. The node applies
+//! the identical operations to its shard: the feature partition is
+//! disjoint, so the merged Δβ restricted to this node's columns is
+//! bit-equal to the node's own sweep output (an f32 survives the f64 tree
+//! accumulator round trip exactly), and the merged Δm arrives verbatim in
+//! the `Apply`. Leader-held and worker-held state therefore stay
+//! bit-identical, which the checkpoint pull verifies with a full β compare
+//! and a margins checksum.
+//!
+//! [`SocketTransport`]: crate::cluster::transport::SocketTransport
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::protocol::{crc_f32, crc_u32, NodeMessage};
+use crate::cluster::transport::Transport;
+use crate::config::TrainConfig;
+use crate::data::shuffle::FeatureShard;
+use crate::data::sparse::SparseVec;
+use crate::engine::{build_engine, SubproblemEngine};
+use crate::error::{DlrError, Result};
+use crate::solver::quadratic::stats_native_into;
+
+/// One worker machine as a protocol endpoint.
+pub struct WorkerNode {
+    machine: usize,
+    n: usize,
+    p: usize,
+    global_cols: Vec<u32>,
+    engine: Box<dyn SubproblemEngine>,
+    /// Shared labels (read-only): one allocation for the whole in-process
+    /// pool, an owned copy per remote worker process.
+    y: Arc<Vec<f32>>,
+    /// Worker-held β shard (shard-local column order).
+    beta_local: Vec<f32>,
+    /// Worker-held margins copy, kept bit-identical to the leader's.
+    margins: Vec<f32>,
+    /// Δβ of the most recent sweep — what an `Apply` without an explicit
+    /// merged Δβ scales into `beta_local`.
+    last_delta: SparseVec,
+    /// Working-statistics scratch (cleared and refilled each sweep).
+    w: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl WorkerNode {
+    /// Build the node for one shard: the engine is constructed in the
+    /// calling thread (PJRT clients are thread-bound), state starts at
+    /// β = 0 / margins = 0 — the same cold state the leader starts from.
+    pub fn from_shard(
+        cfg: &TrainConfig,
+        shard: FeatureShard,
+        y: Arc<Vec<f32>>,
+        p: usize,
+        artifacts_dir: &std::path::Path,
+    ) -> Result<Self> {
+        let n = y.len();
+        let machine = shard.machine;
+        let global_cols = shard.global_cols.clone();
+        let local_p = global_cols.len();
+        let engine = build_engine(cfg, shard, n, artifacts_dir)?;
+        Ok(Self {
+            machine,
+            n,
+            p,
+            global_cols,
+            engine,
+            y,
+            beta_local: vec![0f32; local_p],
+            margins: vec![0f32; n],
+            last_delta: SparseVec::new(local_p),
+            w: Vec::new(),
+            z: Vec::new(),
+        })
+    }
+
+    pub fn machine(&self) -> usize {
+        self.machine
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// The handshake announcement the leader validates on accept.
+    pub fn join_message(&self) -> NodeMessage {
+        NodeMessage::Join {
+            machine: self.machine as u32,
+            n: self.n as u32,
+            p: self.p as u32,
+            local_features: self.global_cols.len() as u32,
+            cols_checksum: crc_u32(&self.global_cols),
+            engine: self.engine.name().to_string(),
+        }
+    }
+
+    /// Process one request; `Ok(None)` means shutdown (the serve loop
+    /// exits cleanly).
+    pub fn handle(&mut self, msg: NodeMessage) -> Result<Option<NodeMessage>> {
+        match msg {
+            NodeMessage::Sweep { lam, nu, mut recycle } => {
+                // stats from the worker-held margins — no leader broadcast
+                let t0 = Instant::now();
+                stats_native_into(&self.margins, &self.y, &mut self.w, &mut self.z);
+                let stats_secs = t0.elapsed().as_secs_f64();
+                self.engine
+                    .sweep(&self.w, &self.z, &self.beta_local, lam, nu, &mut recycle)?;
+                recycle.compute_secs += stats_secs;
+                // remember Δβ_local for the upcoming Apply
+                self.last_delta.clear(recycle.delta_local.dim);
+                self.last_delta
+                    .indices
+                    .extend_from_slice(&recycle.delta_local.indices);
+                self.last_delta
+                    .values
+                    .extend_from_slice(&recycle.delta_local.values);
+                Ok(Some(NodeMessage::Swept { result: recycle }))
+            }
+            NodeMessage::Apply { alpha, dmargins, delta } => {
+                if dmargins.dim != self.n {
+                    return Err(DlrError::Solver(format!(
+                        "apply carries Δm of dim {} but n = {}",
+                        dmargins.dim, self.n
+                    )));
+                }
+                match delta {
+                    // lossless wire: this node's own Δβ is bit-equal to the
+                    // merged Δβ on its (disjoint) coordinates
+                    None => {
+                        for (j, v) in self.last_delta.iter() {
+                            self.beta_local[j as usize] += alpha * v;
+                        }
+                    }
+                    // lossy β wire (`wire_f16_beta`): apply exactly the
+                    // merged (quantized) global Δβ the leader applied,
+                    // restricted to this node's columns (two-pointer walk
+                    // over the sorted global ids)
+                    Some(delta) => {
+                        let mut l = 0usize;
+                        for (g, v) in delta.iter() {
+                            while l < self.global_cols.len() && self.global_cols[l] < g {
+                                l += 1;
+                            }
+                            if l < self.global_cols.len() && self.global_cols[l] == g {
+                                self.beta_local[l] += alpha * v;
+                                l += 1;
+                            }
+                        }
+                    }
+                }
+                dmargins.add_scaled_into(&mut self.margins, alpha);
+                Ok(Some(NodeMessage::Ack))
+            }
+            NodeMessage::SetState { beta_local, margins } => {
+                if beta_local.len() != self.beta_local.len() || margins.len() != self.n {
+                    return Err(DlrError::Solver(format!(
+                        "set-state shapes ({}, {}) do not match the shard ({}, {})",
+                        beta_local.len(),
+                        margins.len(),
+                        self.beta_local.len(),
+                        self.n
+                    )));
+                }
+                self.beta_local.copy_from_slice(&beta_local);
+                self.margins.copy_from_slice(&margins);
+                self.last_delta.clear(self.beta_local.len());
+                Ok(Some(NodeMessage::Ack))
+            }
+            NodeMessage::GetState => Ok(Some(NodeMessage::State {
+                beta_local: self.beta_local.clone(),
+                margins_crc: crc_f32(&self.margins),
+            })),
+            NodeMessage::Shutdown => Ok(None),
+            other => Err(DlrError::Solver(format!(
+                "worker {} received unexpected {}",
+                self.machine,
+                other.name()
+            ))),
+        }
+    }
+
+    /// Run the node over a transport: announce, await admission, then
+    /// request/reply until `Shutdown` (or a transport/engine failure,
+    /// which is reported to the leader as an `Abort` before returning).
+    pub fn serve(&mut self, transport: &mut dyn Transport) -> Result<()> {
+        transport.send(self.join_message())?;
+        match transport.recv()? {
+            NodeMessage::Welcome => {}
+            NodeMessage::Abort { message } => {
+                return Err(DlrError::Solver(format!(
+                    "leader rejected worker {}: {message}",
+                    self.machine
+                )))
+            }
+            other => {
+                return Err(DlrError::Solver(format!(
+                    "expected welcome, got {}",
+                    other.name()
+                )))
+            }
+        }
+        loop {
+            let msg = transport.recv()?;
+            match self.handle(msg) {
+                Ok(Some(reply)) => transport.send(reply)?,
+                Ok(None) => return Ok(()),
+                Err(e) => {
+                    let _ = transport.send(NodeMessage::Abort { message: e.to_string() });
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::cluster::partition::{FeaturePartition, PartitionStrategy};
+    use crate::config::EngineKind;
+    use crate::data::shuffle::shard_in_memory;
+    use crate::data::synth;
+
+    fn node_for(machine: usize, m: usize) -> (WorkerNode, crate::data::Dataset) {
+        let ds = synth::dna_like(120, 24, 4, 51);
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 24, m, None);
+        let shard = shard_in_memory(&ds.x, &part).remove(machine);
+        let cfg = TrainConfig::builder().machines(m).engine(EngineKind::Native).build();
+        let node =
+            WorkerNode::from_shard(&cfg, shard, Arc::new(ds.y.clone()), 24, "artifacts".as_ref())
+                .unwrap();
+        (node, ds)
+    }
+
+    #[test]
+    fn sweep_apply_keeps_shard_state_consistent() {
+        let (mut node, _ds) = node_for(0, 2);
+        let reply = node
+            .handle(NodeMessage::Sweep { lam: 0.05, nu: 1e-6, recycle: Default::default() })
+            .unwrap()
+            .unwrap();
+        let result = match reply {
+            NodeMessage::Swept { result } => result,
+            other => panic!("expected swept, got {}", other.name()),
+        };
+        assert!(!result.delta_local.is_empty(), "λ small enough to move");
+        // apply the node's own Δ at α = 0.5 (merged == own for one machine
+        // coordinates)
+        let dm = Arc::new(result.dmargins.clone());
+        let ack = node
+            .handle(NodeMessage::Apply { alpha: 0.5, dmargins: Arc::clone(&dm), delta: None })
+            .unwrap()
+            .unwrap();
+        assert_eq!(ack.name(), "ack");
+        // the shard state moved exactly α·Δ
+        let state = node.handle(NodeMessage::GetState).unwrap().unwrap();
+        match state {
+            NodeMessage::State { beta_local, margins_crc } => {
+                let mut want = vec![0f32; beta_local.len()];
+                result.delta_local.add_scaled_into(&mut want, 0.5);
+                for (a, b) in beta_local.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                let mut margins = vec![0f32; 120];
+                dm.add_scaled_into(&mut margins, 0.5);
+                assert_eq!(margins_crc, crc_f32(&margins));
+            }
+            other => panic!("expected state, got {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn explicit_merged_delta_applies_only_owned_columns() {
+        let (mut node, _ds) = node_for(1, 3); // owns global cols 1, 4, 7, ...
+        // run one sweep so last_delta is non-empty — the explicit path must
+        // ignore it and use the provided merged Δβ instead
+        node.handle(NodeMessage::Sweep { lam: 0.5, nu: 1e-6, recycle: Default::default() })
+            .unwrap();
+        let mut merged = SparseVec::new(24);
+        merged.push(0, 10.0); // not owned
+        merged.push(1, 2.0); // owned (local 0)
+        merged.push(7, -4.0); // owned (local 2)
+        merged.push(9, 5.0); // not owned
+        let before = match node.handle(NodeMessage::GetState).unwrap().unwrap() {
+            NodeMessage::State { beta_local, .. } => beta_local,
+            _ => unreachable!(),
+        };
+        node.handle(NodeMessage::Apply {
+            alpha: 0.5,
+            dmargins: Arc::new(SparseVec::new(120)),
+            delta: Some(Arc::new(merged)),
+        })
+        .unwrap();
+        let after = match node.handle(NodeMessage::GetState).unwrap().unwrap() {
+            NodeMessage::State { beta_local, .. } => beta_local,
+            _ => unreachable!(),
+        };
+        assert_eq!(after[0], before[0] + 1.0, "global col 1 is local 0");
+        assert_eq!(after[2], before[2] - 2.0, "global col 7 is local 2");
+        for l in [1usize, 3, 4, 5, 6, 7] {
+            if l < after.len() && l != 0 && l != 2 {
+                assert_eq!(after[l].to_bits(), before[l].to_bits(), "local {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn set_state_validates_shapes_and_resets_last_delta() {
+        let (mut node, _ds) = node_for(0, 2);
+        let local_p = node.beta_local.len();
+        // wrong shapes error
+        assert!(node
+            .handle(NodeMessage::SetState {
+                beta_local: vec![0.0; local_p + 1],
+                margins: Arc::new(vec![0.0; 120]),
+            })
+            .is_err());
+        // correct shapes install bit-for-bit
+        let beta: Vec<f32> = (0..local_p).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let margins: Vec<f32> = (0..120).map(|i| (i as f32).sin()).collect();
+        node.handle(NodeMessage::SetState {
+            beta_local: beta.clone(),
+            margins: Arc::new(margins.clone()),
+        })
+        .unwrap();
+        match node.handle(NodeMessage::GetState).unwrap().unwrap() {
+            NodeMessage::State { beta_local, margins_crc } => {
+                for (a, b) in beta_local.iter().zip(&beta) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(margins_crc, crc_f32(&margins));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn unexpected_messages_error() {
+        let (mut node, _ds) = node_for(0, 2);
+        assert!(node.handle(NodeMessage::Welcome).is_err());
+        assert!(node.handle(NodeMessage::Ack).is_err());
+        assert!(matches!(node.handle(NodeMessage::Shutdown), Ok(None)));
+    }
+
+    #[test]
+    fn join_message_carries_shard_identity() {
+        let (node, _ds) = node_for(1, 2);
+        match node.join_message() {
+            NodeMessage::Join { machine, n, p, local_features, cols_checksum, engine } => {
+                assert_eq!(machine, 1);
+                assert_eq!(n, 120);
+                assert_eq!(p, 24);
+                assert_eq!(local_features, 12);
+                let cols: Vec<u32> = (0..24u32).filter(|c| c % 2 == 1).collect();
+                assert_eq!(cols_checksum, crc_u32(&cols));
+                assert_eq!(engine, "native");
+            }
+            other => panic!("expected join, got {}", other.name()),
+        }
+    }
+}

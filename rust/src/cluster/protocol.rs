@@ -1,0 +1,562 @@
+//! The serializable leader ↔ worker message protocol. Every interaction
+//! with a cluster node — handshake, sweep requests, update application,
+//! state push/pull, shutdown — is one [`NodeMessage`], so the same
+//! `FitDriver` send/recv phases run unchanged over in-process channels and
+//! over a real multi-process byte stream (see [`crate::cluster::transport`]).
+//!
+//! Sparse payloads are framed with the PR-3 wire codecs
+//! ([`crate::cluster::codec`]): each message embeds the codec tag the
+//! lossless byte-cost model picked, so under the default (lossless)
+//! policy the bytes a [`SocketTransport`] actually writes for a Δ-payload
+//! equal the codec cost functions the simulated `comm_bytes` ledger
+//! charges per tree edge — the wire and the ledger agree byte-for-byte on
+//! payload encoding. (The ledger models *tree-edge* traffic of the
+//! collectives; transport-level control frames and the leader-star
+//! topology of a small deployment are deliberately not charged — see the
+//! accounting contract in [`crate::cluster`]. With the opt-in lossy
+//! `wire_f16_*` knobs the ledger charges the delta-varint f16 cost while
+//! these frames stay losslessly encoded — the values are already
+//! quantized inside the collective, so trajectories are unaffected and
+//! the socket frames are an upper bound on the charged bytes.)
+//!
+//! [`SocketTransport`]: crate::cluster::transport::SocketTransport
+//!
+//! Malformed and truncated frames error exactly like the codec truncation
+//! tests: every decode returns a `parse` error, never a panic and never a
+//! silently-wrong value.
+
+use std::sync::Arc;
+
+use crate::cluster::codec::{CodecPolicy, MessageClass, WireCodec};
+use crate::data::sparse::SparseVec;
+use crate::engine::SweepResult;
+use crate::error::{DlrError, Result};
+
+/// Upper bound on one frame body — a guard against garbage length prefixes
+/// from a rogue or corrupted peer, not a protocol limit.
+pub const MAX_FRAME_BODY: usize = 1 << 30;
+
+const TAG_JOIN: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_SWEEP: u8 = 3;
+const TAG_SWEPT: u8 = 4;
+const TAG_APPLY: u8 = 5;
+const TAG_SET_STATE: u8 = 6;
+const TAG_GET_STATE: u8 = 7;
+const TAG_STATE: u8 = 8;
+const TAG_ACK: u8 = 9;
+const TAG_ABORT: u8 = 10;
+const TAG_SHUTDOWN: u8 = 11;
+
+/// One protocol message between the leader and a worker node.
+///
+/// Workers are *stateful* endpoints (see [`crate::cluster::node`]): they
+/// hold their own β shard and margins, so a [`NodeMessage::Sweep`] carries
+/// only the scalars of the subproblem and a [`NodeMessage::Apply`] carries
+/// only the step size plus the merged Δmargins — the per-sweep
+/// `beta_local` / `(w, z)` broadcasts of the pre-protocol `WorkerPool` are
+/// gone entirely.
+#[derive(Debug)]
+pub enum NodeMessage {
+    /// worker → leader: handshake. The leader validates the shard identity
+    /// (machine index, dataset shape, owned-column checksum) before
+    /// admitting the node.
+    Join {
+        machine: u32,
+        n: u32,
+        p: u32,
+        local_features: u32,
+        cols_checksum: u64,
+        engine: String,
+    },
+    /// leader → worker: handshake accepted.
+    Welcome,
+    /// leader → worker: run one CD sweep over the worker-held shard state.
+    /// `recycle` is an owned-buffer recycling slot for the in-process
+    /// transport (the previous iteration's [`SweepResult`] buffers round
+    /// trip so steady-state sweeps allocate nothing); it is *not* encoded
+    /// on the wire — a socket worker fills a fresh default.
+    Sweep { lam: f32, nu: f32, recycle: SweepResult },
+    /// worker → leader: the sweep's sparse Δβ (shard-local ids) and Δm.
+    Swept { result: SweepResult },
+    /// leader → worker: line search picked `alpha`; apply `α·Δβ_local` to
+    /// the worker-held β shard and `α·Δm` (the merged, post-codec
+    /// Δmargins) to the worker-held margins. `delta` carries the merged
+    /// global Δβ only when a lossy β wire is active (`wire_f16_beta`), so
+    /// workers apply exactly what the leader applied; on the default
+    /// lossless wire each worker's own Δβ already equals the merged values
+    /// on its coordinates (disjoint feature partition) and nothing
+    /// β-shaped needs to travel.
+    Apply {
+        alpha: f32,
+        dmargins: Arc<SparseVec>,
+        delta: Option<Arc<SparseVec>>,
+    },
+    /// leader → worker: install warmstart / resume state bit-for-bit.
+    SetState {
+        beta_local: Vec<f32>,
+        margins: Arc<Vec<f32>>,
+    },
+    /// leader → worker: report the worker-held shard state (checkpointing).
+    GetState,
+    /// worker → leader: the shard state. Margins travel as a checksum — the
+    /// leader only needs to *verify* sync, β travels in full for the
+    /// checkpoint.
+    State { beta_local: Vec<f32>, margins_crc: u64 },
+    /// worker → leader: acknowledgement of an `Apply` / `SetState`.
+    Ack,
+    /// either direction: the peer failed; the message is the error.
+    Abort { message: String },
+    /// leader → worker: clean shutdown, the serve loop exits.
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// Checksums (FNV-1a — cheap, deterministic, dependency-free)
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over the f32 bit patterns — the margins-sync check of
+/// [`NodeMessage::State`].
+pub fn crc_f32(values: &[f32]) -> u64 {
+    values.iter().fold(FNV_OFFSET, |h, v| fnv1a(h, &v.to_bits().to_le_bytes()))
+}
+
+/// FNV-1a over u32 little-endian bytes — the owned-column identity check of
+/// [`NodeMessage::Join`].
+pub fn crc_u32(values: &[u32]) -> u64 {
+    values.iter().fold(FNV_OFFSET, |h, v| fnv1a(h, &v.to_le_bytes()))
+}
+
+// ---------------------------------------------------------------------------
+// Primitive (en/de)coders
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8]> {
+    let end = pos
+        .checked_add(len)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| DlrError::parse("wire", "truncated frame"))?;
+    let s = &bytes[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+fn get_u8(bytes: &[u8], pos: &mut usize) -> Result<u8> {
+    Ok(take(bytes, pos, 1)?[0])
+}
+
+fn get_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    let s = take(bytes, pos, 4)?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+fn get_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let s = take(bytes, pos, 8)?;
+    Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+}
+
+fn get_f32(bytes: &[u8], pos: &mut usize) -> Result<f32> {
+    Ok(f32::from_bits(get_u32(bytes, pos)?))
+}
+
+fn get_f64(bytes: &[u8], pos: &mut usize) -> Result<f64> {
+    Ok(f64::from_bits(get_u64(bytes, pos)?))
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_u32(bytes, pos)? as usize;
+    let s = take(bytes, pos, len)?;
+    String::from_utf8(s.to_vec()).map_err(|_| DlrError::parse("wire", "non-utf8 string"))
+}
+
+fn put_f32_vec(out: &mut Vec<u8>, values: &[f32]) {
+    put_u32(out, values.len() as u32);
+    for &v in values {
+        put_f32(out, v);
+    }
+}
+
+fn get_f32_vec(bytes: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
+    let len = get_u32(bytes, pos)? as usize;
+    let s = take(bytes, pos, len * 4)?;
+    Ok(s.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Encode one sparse payload with the cheapest lossless codec the PR-3
+/// cost model picks for it: `[u32 dim][u8 codec][u32 len][codec bytes]`.
+/// The payload bytes written equal the codec's exact cost function.
+fn put_sparse(out: &mut Vec<u8>, v: &SparseVec, class: MessageClass) {
+    let (codec, _) = CodecPolicy::lossless().pick(&v.indices, v.dim, class);
+    let payload = codec.encode(v);
+    put_u32(out, v.dim as u32);
+    out.push(codec_tag(codec));
+    put_u32(out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+}
+
+fn codec_tag(codec: WireCodec) -> u8 {
+    match codec {
+        WireCodec::DenseF32 => 0,
+        WireCodec::SparseU32F32 => 1,
+        WireCodec::DeltaVarintF16 => 2,
+    }
+}
+
+fn codec_from_tag(tag: u8) -> Result<WireCodec> {
+    match tag {
+        0 => Ok(WireCodec::DenseF32),
+        1 => Ok(WireCodec::SparseU32F32),
+        2 => Ok(WireCodec::DeltaVarintF16),
+        other => Err(DlrError::parse("wire", format!("unknown codec tag {other}"))),
+    }
+}
+
+fn get_sparse(bytes: &[u8], pos: &mut usize) -> Result<SparseVec> {
+    let dim = get_u32(bytes, pos)? as usize;
+    let codec = codec_from_tag(get_u8(bytes, pos)?)?;
+    let len = get_u32(bytes, pos)? as usize;
+    let payload = take(bytes, pos, len)?;
+    codec.decode(payload, dim)
+}
+
+// ---------------------------------------------------------------------------
+// Message (en/de)coding
+// ---------------------------------------------------------------------------
+
+impl NodeMessage {
+    /// Short name for logs and errors.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeMessage::Join { .. } => "join",
+            NodeMessage::Welcome => "welcome",
+            NodeMessage::Sweep { .. } => "sweep",
+            NodeMessage::Swept { .. } => "swept",
+            NodeMessage::Apply { .. } => "apply",
+            NodeMessage::SetState { .. } => "set-state",
+            NodeMessage::GetState => "get-state",
+            NodeMessage::State { .. } => "state",
+            NodeMessage::Ack => "ack",
+            NodeMessage::Abort { .. } => "abort",
+            NodeMessage::Shutdown => "shutdown",
+        }
+    }
+
+    /// Serialize into a frame body (`[tag][payload]`, no length prefix —
+    /// the transport frames it).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            NodeMessage::Join { machine, n, p, local_features, cols_checksum, engine } => {
+                out.push(TAG_JOIN);
+                put_u32(&mut out, *machine);
+                put_u32(&mut out, *n);
+                put_u32(&mut out, *p);
+                put_u32(&mut out, *local_features);
+                put_u64(&mut out, *cols_checksum);
+                put_str(&mut out, engine);
+            }
+            NodeMessage::Welcome => out.push(TAG_WELCOME),
+            NodeMessage::Sweep { lam, nu, recycle: _ } => {
+                // `recycle` is a buffer-recycling slot, not wire state
+                out.push(TAG_SWEEP);
+                put_f32(&mut out, *lam);
+                put_f32(&mut out, *nu);
+            }
+            NodeMessage::Swept { result } => {
+                out.push(TAG_SWEPT);
+                put_sparse(&mut out, &result.delta_local, MessageClass::Beta);
+                put_sparse(&mut out, &result.dmargins, MessageClass::Margins);
+                put_f64(&mut out, result.compute_secs);
+            }
+            NodeMessage::Apply { alpha, dmargins, delta } => {
+                out.push(TAG_APPLY);
+                put_f32(&mut out, *alpha);
+                put_sparse(&mut out, dmargins, MessageClass::Margins);
+                match delta {
+                    Some(d) => {
+                        out.push(1);
+                        put_sparse(&mut out, d, MessageClass::Beta);
+                    }
+                    None => out.push(0),
+                }
+            }
+            NodeMessage::SetState { beta_local, margins } => {
+                out.push(TAG_SET_STATE);
+                put_f32_vec(&mut out, beta_local);
+                put_f32_vec(&mut out, margins);
+            }
+            NodeMessage::GetState => out.push(TAG_GET_STATE),
+            NodeMessage::State { beta_local, margins_crc } => {
+                out.push(TAG_STATE);
+                put_f32_vec(&mut out, beta_local);
+                put_u64(&mut out, *margins_crc);
+            }
+            NodeMessage::Ack => out.push(TAG_ACK),
+            NodeMessage::Abort { message } => {
+                out.push(TAG_ABORT);
+                put_str(&mut out, message);
+            }
+            NodeMessage::Shutdown => out.push(TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Deserialize a frame body. Truncated, oversized, or malformed frames
+    /// return a `parse` error (never a panic) — same contract as the codec
+    /// truncation tests.
+    pub fn decode(bytes: &[u8]) -> Result<NodeMessage> {
+        let mut pos = 0usize;
+        let tag = get_u8(bytes, &mut pos)?;
+        let msg = match tag {
+            TAG_JOIN => NodeMessage::Join {
+                machine: get_u32(bytes, &mut pos)?,
+                n: get_u32(bytes, &mut pos)?,
+                p: get_u32(bytes, &mut pos)?,
+                local_features: get_u32(bytes, &mut pos)?,
+                cols_checksum: get_u64(bytes, &mut pos)?,
+                engine: get_str(bytes, &mut pos)?,
+            },
+            TAG_WELCOME => NodeMessage::Welcome,
+            TAG_SWEEP => NodeMessage::Sweep {
+                lam: get_f32(bytes, &mut pos)?,
+                nu: get_f32(bytes, &mut pos)?,
+                recycle: SweepResult::default(),
+            },
+            TAG_SWEPT => {
+                let delta_local = get_sparse(bytes, &mut pos)?;
+                let dmargins = get_sparse(bytes, &mut pos)?;
+                let compute_secs = get_f64(bytes, &mut pos)?;
+                NodeMessage::Swept {
+                    result: SweepResult { delta_local, dmargins, compute_secs },
+                }
+            }
+            TAG_APPLY => {
+                let alpha = get_f32(bytes, &mut pos)?;
+                let dmargins = Arc::new(get_sparse(bytes, &mut pos)?);
+                let delta = match get_u8(bytes, &mut pos)? {
+                    0 => None,
+                    1 => Some(Arc::new(get_sparse(bytes, &mut pos)?)),
+                    other => {
+                        return Err(DlrError::parse(
+                            "wire",
+                            format!("bad option flag {other} in apply"),
+                        ))
+                    }
+                };
+                NodeMessage::Apply { alpha, dmargins, delta }
+            }
+            TAG_SET_STATE => NodeMessage::SetState {
+                beta_local: get_f32_vec(bytes, &mut pos)?,
+                margins: Arc::new(get_f32_vec(bytes, &mut pos)?),
+            },
+            TAG_GET_STATE => NodeMessage::GetState,
+            TAG_STATE => NodeMessage::State {
+                beta_local: get_f32_vec(bytes, &mut pos)?,
+                margins_crc: get_u64(bytes, &mut pos)?,
+            },
+            TAG_ACK => NodeMessage::Ack,
+            TAG_ABORT => NodeMessage::Abort { message: get_str(bytes, &mut pos)? },
+            TAG_SHUTDOWN => NodeMessage::Shutdown,
+            other => {
+                return Err(DlrError::parse("wire", format!("unknown message tag {other}")))
+            }
+        };
+        if pos != bytes.len() {
+            return Err(DlrError::parse(
+                "wire",
+                format!("{} bytes of trailing garbage after {}", bytes.len() - pos, msg.name()),
+            ));
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(dense: &[f32]) -> SparseVec {
+        SparseVec::from_dense(dense)
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        let result = SweepResult {
+            delta_local: sv(&[0.0, 1.5, 0.0, -2.25]),
+            dmargins: sv(&[0.5, 0.0, -1.0]),
+            compute_secs: 0.125,
+        };
+        let msgs = vec![
+            NodeMessage::Join {
+                machine: 3,
+                n: 100,
+                p: 40,
+                local_features: 10,
+                cols_checksum: 0xDEAD_BEEF,
+                engine: "native".into(),
+            },
+            NodeMessage::Welcome,
+            NodeMessage::Sweep { lam: 0.5, nu: 1e-6, recycle: SweepResult::default() },
+            NodeMessage::Swept { result },
+            NodeMessage::Apply {
+                alpha: 0.75,
+                dmargins: Arc::new(sv(&[0.0, 2.0, 0.0])),
+                delta: Some(Arc::new(sv(&[1.0, 0.0, 0.0, -3.5]))),
+            },
+            NodeMessage::Apply {
+                alpha: 1.0,
+                dmargins: Arc::new(sv(&[0.25, 0.0])),
+                delta: None,
+            },
+            NodeMessage::SetState {
+                beta_local: vec![1.0, -2.5e-8, 0.0],
+                margins: Arc::new(vec![0.5, -0.0]),
+            },
+            NodeMessage::GetState,
+            NodeMessage::State { beta_local: vec![3.25, 0.0], margins_crc: 42 },
+            NodeMessage::Ack,
+            NodeMessage::Abort { message: "worker exploded".into() },
+            NodeMessage::Shutdown,
+        ];
+        for msg in msgs {
+            let bytes = msg.encode();
+            let back = NodeMessage::decode(&bytes)
+                .unwrap_or_else(|e| panic!("{} failed to decode: {e}", msg.name()));
+            assert_eq!(msg.name(), back.name());
+            // field-level spot checks for the payload-carrying messages
+            match (&msg, &back) {
+                (
+                    NodeMessage::Swept { result: a },
+                    NodeMessage::Swept { result: b },
+                ) => {
+                    assert_eq!(a.delta_local, b.delta_local);
+                    assert_eq!(a.dmargins, b.dmargins);
+                    assert_eq!(a.compute_secs.to_bits(), b.compute_secs.to_bits());
+                }
+                (
+                    NodeMessage::Apply { alpha: aa, dmargins: am, delta: ad },
+                    NodeMessage::Apply { alpha: ba, dmargins: bm, delta: bd },
+                ) => {
+                    assert_eq!(aa.to_bits(), ba.to_bits());
+                    assert_eq!(**am, **bm);
+                    assert_eq!(ad.as_deref(), bd.as_deref());
+                }
+                (
+                    NodeMessage::SetState { beta_local: ab, margins: am },
+                    NodeMessage::SetState { beta_local: bb, margins: bm },
+                ) => {
+                    for (x, y) in ab.iter().zip(bb) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                    for (x, y) in am.iter().zip(bm.iter()) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (
+                    NodeMessage::State { beta_local: ab, margins_crc: ac },
+                    NodeMessage::State { beta_local: bb, margins_crc: bc },
+                ) => {
+                    assert_eq!(ab.len(), bb.len());
+                    assert_eq!(ac, bc);
+                }
+                (
+                    NodeMessage::Join { cols_checksum: a, engine: ae, .. },
+                    NodeMessage::Join { cols_checksum: b, engine: be, .. },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(ae, be);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_and_malformed_frames_error_cleanly() {
+        let msg = NodeMessage::Swept {
+            result: SweepResult {
+                delta_local: sv(&[0.0, 1.0, 2.0]),
+                dmargins: sv(&[3.0]),
+                compute_secs: 1.0,
+            },
+        };
+        let bytes = msg.encode();
+        // every strict prefix must error, never panic
+        for cut in 0..bytes.len() {
+            assert!(NodeMessage::decode(&bytes[..cut]).is_err(), "prefix {cut}");
+        }
+        // trailing garbage is rejected, not ignored
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(NodeMessage::decode(&padded).is_err());
+        // unknown tags are rejected
+        assert!(NodeMessage::decode(&[99]).is_err());
+        assert!(NodeMessage::decode(&[]).is_err());
+        // a corrupt codec tag inside a sparse payload errors
+        let mut bad = msg.encode();
+        bad[1 + 4] = 7; // dim(u32) then codec tag of delta_local
+        assert!(NodeMessage::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn sparse_payload_bytes_equal_codec_cost() {
+        // the wire/ledger agreement: the payload section of an encoded
+        // sparse message is exactly the codec cost the ledger would charge
+        let msg = sv(&[0.0, 1.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let (codec, cost) =
+            CodecPolicy::lossless().pick(&msg.indices, msg.dim, MessageClass::Margins);
+        let mut out = Vec::new();
+        put_sparse(&mut out, &msg, MessageClass::Margins);
+        // header = dim(4) + codec(1) + len(4)
+        assert_eq!(out.len() as u64, 9 + cost);
+        assert_eq!(codec.encoded_bytes(&msg), cost);
+        let mut pos = 0;
+        let back = get_sparse(&out, &mut pos).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn checksums_are_order_and_value_sensitive() {
+        assert_ne!(crc_f32(&[1.0, 2.0]), crc_f32(&[2.0, 1.0]));
+        assert_ne!(crc_f32(&[1.0]), crc_f32(&[1.0 + 1e-7]));
+        assert_eq!(crc_f32(&[]), crc_f32(&[]));
+        // -0.0 and 0.0 differ in bits, so they differ in crc (bit-exactness)
+        assert_ne!(crc_f32(&[0.0]), crc_f32(&[-0.0]));
+        assert_ne!(crc_u32(&[1, 2, 3]), crc_u32(&[1, 3, 2]));
+    }
+}

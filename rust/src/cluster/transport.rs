@@ -1,0 +1,229 @@
+//! Transport abstraction for the node protocol: the leader drives every
+//! worker through a [`Transport`] — an ordered, reliable, bidirectional
+//! [`NodeMessage`] stream — so the `FitDriver` send/recv phases are
+//! byte-stream-agnostic.
+//!
+//! Two implementations exist:
+//!
+//! * the **in-process channel links** the `WorkerPool` builds around its
+//!   worker threads (private to `solver::pool` — they multiplex a
+//!   [`TaskExecutor`](crate::cluster::comm::TaskExecutor) lane next to the
+//!   protocol lane): `NodeMessage` values move over mpsc channels without
+//!   serialization, so owned buffers transfer and the hot path stays
+//!   allocation-free;
+//! * [`SocketTransport`] (here) — a real multi-process byte stream over
+//!   TCP: length-prefixed frames (`[u32 len][body]`) whose bodies are the
+//!   [`NodeMessage`] codec encoding, so sparse Δ-payloads cross the wire
+//!   in exactly the bytes the `comm_bytes` ledger's cost model charges
+//!   under the default lossless policy.
+//!
+//! Fault model: a peer that disappears (process death, dropped channel,
+//! closed socket) surfaces as a clean [`DlrError`] from `send`/`recv` —
+//! never a hang on a half-written frame, never a panic. Malformed frames
+//! (garbage tags, lying length prefixes, truncated payloads) error through
+//! the protocol decoder like the codec truncation tests.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::cluster::protocol::{NodeMessage, MAX_FRAME_BODY};
+use crate::error::{DlrError, Result};
+
+/// An ordered, reliable, bidirectional message stream to one peer node.
+pub trait Transport: Send {
+    /// Deliver one message. Errors if the peer is gone.
+    fn send(&mut self, msg: NodeMessage) -> Result<()>;
+
+    /// Block for the peer's next message. Errors (promptly, without
+    /// hanging) if the peer is gone or sends a malformed frame.
+    fn recv(&mut self) -> Result<NodeMessage>;
+
+    /// `"in-process"` or `"socket"` — for logs and bench records.
+    fn kind(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// TCP byte stream
+// ---------------------------------------------------------------------------
+
+/// Multi-process transport endpoint: length-prefixed [`NodeMessage`]
+/// frames over a TCP stream (`TCP_NODELAY`, buffered both ways, flushed
+/// per message — the protocol is strictly request/reply).
+pub struct SocketTransport {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl SocketTransport {
+    /// Wrap an accepted / connected stream.
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        Ok(Self { reader, writer })
+    }
+
+    /// Connect to a listening leader.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Connect with retries until `timeout` — workers routinely start
+    /// before the leader finishes binding, so a one-shot connect would make
+    /// every launch script racy.
+    pub fn connect_retry(addr: impl ToSocketAddrs + Clone, timeout: Duration) -> Result<Self> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr.clone()) {
+                Ok(stream) => return Self::from_stream(stream),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(DlrError::Solver(format!(
+                            "could not reach the leader within {:.1}s: {e}",
+                            timeout.as_secs_f64()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, msg: NodeMessage) -> Result<()> {
+        let body = msg.encode();
+        self.writer.write_all(&(body.len() as u32).to_le_bytes())?;
+        self.writer.write_all(&body)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<NodeMessage> {
+        let mut len_buf = [0u8; 4];
+        self.reader.read_exact(&mut len_buf).map_err(hangup)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > MAX_FRAME_BODY {
+            return Err(DlrError::parse(
+                "wire",
+                format!("frame length {len} exceeds the {MAX_FRAME_BODY}-byte cap"),
+            ));
+        }
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).map_err(hangup)?;
+        NodeMessage::decode(&body)
+    }
+
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+}
+
+/// EOF mid-frame means the peer died — report it as such rather than a
+/// bare io error.
+fn hangup(e: std::io::Error) -> DlrError {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        DlrError::Solver("peer node hung up mid-frame".into())
+    } else {
+        DlrError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::sync::Arc;
+
+    use crate::data::sparse::SparseVec;
+
+    #[test]
+    fn socket_round_trips_messages_bit_exactly() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = SocketTransport::from_stream(stream).unwrap();
+            // echo one message back
+            let msg = t.recv().unwrap();
+            t.send(msg).unwrap();
+        });
+        let mut t = SocketTransport::connect(addr).unwrap();
+        assert_eq!(t.kind(), "socket");
+        let dm = SparseVec::from_dense(&[0.0, 1.5, 0.0, -2.5e-8, 0.0]);
+        t.send(NodeMessage::Apply {
+            alpha: 0.625,
+            dmargins: Arc::new(dm.clone()),
+            delta: None,
+        })
+        .unwrap();
+        match t.recv().unwrap() {
+            NodeMessage::Apply { alpha, dmargins, delta } => {
+                assert_eq!(alpha.to_bits(), 0.625f32.to_bits());
+                assert_eq!(*dmargins, dm);
+                assert!(delta.is_none());
+            }
+            other => panic!("unexpected echo {}", other.name()),
+        }
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn socket_peer_death_is_a_clean_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            // accept, then die without a word
+            let (stream, _) = listener.accept().unwrap();
+            drop(stream);
+        });
+        let mut t = SocketTransport::connect(addr).unwrap();
+        peer.join().unwrap();
+        let err = t.recv().unwrap_err();
+        assert!(err.to_string().contains("hung up"), "{err}");
+    }
+
+    #[test]
+    fn socket_rejects_lying_length_prefix_and_garbage() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            // a frame claiming 2 GiB, then a valid-length garbage frame
+            stream.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+            stream.write_all(&3u32.to_le_bytes()).unwrap();
+            stream.write_all(&[77, 1, 2]).unwrap();
+            stream.flush().unwrap();
+        });
+        let mut t = SocketTransport::connect(addr).unwrap();
+        assert!(t.recv().unwrap_err().to_string().contains("cap"));
+        // stream position is corrupt after a rejected frame; a fresh
+        // connection reading the garbage frame errors on the unknown tag
+        peer.join().unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            stream.write_all(&3u32.to_le_bytes()).unwrap();
+            stream.write_all(&[77, 1, 2]).unwrap();
+            stream.flush().unwrap();
+        });
+        let mut t = SocketTransport::connect(addr).unwrap();
+        assert!(t.recv().unwrap_err().to_string().contains("unknown message tag"));
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_times_out_with_context() {
+        // a bound-then-dropped listener leaves the port closed
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let err =
+            SocketTransport::connect_retry(addr, Duration::from_millis(120)).unwrap_err();
+        assert!(err.to_string().contains("could not reach the leader"), "{err}");
+    }
+}

@@ -66,6 +66,37 @@ impl ExchangeStrategy {
     }
 }
 
+/// How the leader drives its worker nodes (the node protocol runs
+/// unchanged over both — trajectories are bit-identical, pinned by
+/// `tests/node_protocol.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Worker threads inside the leader process, protocol messages over
+    /// in-process channels (the default).
+    InProcess,
+    /// Remote worker processes over TCP byte streams: the leader listens
+    /// on [`TrainConfig::listen`] and admits one `dglmnet worker` process
+    /// per partition block.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "in-process" | "inprocess" | "channel" | "threads" => Some(Self::InProcess),
+            "socket" | "tcp" => Some(Self::Socket),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::InProcess => "in-process",
+            Self::Socket => "socket",
+        }
+    }
+}
+
 /// Line-search constants of Alg 3. Paper: b = 0.5, sigma = 0.01, gamma = 0.
 #[derive(Debug, Clone, Copy)]
 pub struct LineSearchConfig {
@@ -158,6 +189,17 @@ pub struct TrainConfig {
     /// Allow the lossy f16 codec for β-carrying (Δβ) messages. Off by
     /// default and discouraged: it quantizes the model update itself.
     pub wire_f16_beta: bool,
+    /// How workers are driven: in-process threads (default) or remote
+    /// `dglmnet worker` processes over TCP (`[cluster] transport`).
+    pub transport: TransportKind,
+    /// Leader bind address for `transport = socket` (`[cluster] listen`).
+    pub listen: String,
+    /// PR-3-compat accounting ablation: charge the broadcast phase of the
+    /// Δβ exchange as if workers still received the merged Δβ. Under
+    /// worker-held β shards that broadcast no longer exists, so the
+    /// default charges the Δβ flow as the gather it is; turning this on
+    /// reproduces the old ledger for regression comparisons.
+    pub charge_beta_broadcast: bool,
     pub line_search: LineSearchConfig,
     /// Tolerated relative objective increase when retrying alpha = 1 at
     /// convergence (the second sparsity precaution of §2).
@@ -184,6 +226,9 @@ impl Default for TrainConfig {
             exchange: ExchangeStrategy::Auto,
             wire_f16_margins: false,
             wire_f16_beta: false,
+            transport: TransportKind::InProcess,
+            listen: "127.0.0.1:4801".into(),
+            charge_beta_broadcast: false,
             line_search: LineSearchConfig::default(),
             alpha_one_slack: 1e-4,
             budget: FitBudget::default(),
@@ -242,6 +287,35 @@ impl TrainConfig {
                 return Err(DlrError::Config("budget.wall_secs must be >= 0".into()));
             }
         }
+        if self.transport == TransportKind::Socket && self.listen.is_empty() {
+            return Err(DlrError::Config(
+                "transport = socket needs a [cluster] listen = \"host:port\" address".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// The satellite bugfix for worker-count validation: reject worker
+    /// counts the feature space cannot cover *before* any partition or
+    /// shard work runs, with an actionable message — the old path
+    /// surfaced as a failure deep inside `partition.rs`/shard
+    /// construction. Called by every `DGlmnetSolver` constructor once the
+    /// dataset shape is known.
+    pub fn validate_machines_for(&self, n_features: usize) -> Result<()> {
+        if self.machines == 0 {
+            return Err(DlrError::Config(
+                "the cluster needs at least one worker ([cluster] workers / --workers >= 1)"
+                    .into(),
+            ));
+        }
+        if self.machines > n_features {
+            return Err(DlrError::Config(format!(
+                "the cluster has {} workers but the dataset has only {} features; every \
+                 worker must own at least one feature block — lower [cluster] workers / \
+                 --workers (or --machines) to at most {}",
+                self.machines, n_features, n_features
+            )));
+        }
         Ok(())
     }
 
@@ -299,6 +373,24 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("cluster", "wire_f16_beta").and_then(|v| v.as_bool()) {
             cfg.wire_f16_beta = v;
+        }
+        if let Some(v) = doc.get("cluster", "workers") {
+            // alias for [solver] machines; reject garbage (negative,
+            // fractional) instead of silently ignoring it
+            cfg.machines = v.as_usize().ok_or_else(|| {
+                DlrError::Config("cluster.workers must be a non-negative integer".into())
+            })?;
+        }
+        if let Some(s) = doc.get("cluster", "transport").and_then(|v| v.as_str()) {
+            cfg.transport = TransportKind::parse(s)
+                .ok_or_else(|| DlrError::Config(format!("unknown transport '{s}'")))?;
+        }
+        if let Some(s) = doc.get("cluster", "listen").and_then(|v| v.as_str()) {
+            cfg.listen = s.to_string();
+        }
+        if let Some(v) = doc.get("cluster", "charge_beta_broadcast").and_then(|v| v.as_bool())
+        {
+            cfg.charge_beta_broadcast = v;
         }
         if let Some(v) = num("line_search", "backtrack") {
             cfg.line_search.backtrack = v;
@@ -390,6 +482,18 @@ impl TrainConfigBuilder {
     }
     pub fn wire_f16_beta(mut self, v: bool) -> Self {
         self.0.wire_f16_beta = v;
+        self
+    }
+    pub fn transport(mut self, v: TransportKind) -> Self {
+        self.0.transport = v;
+        self
+    }
+    pub fn listen(mut self, v: impl Into<String>) -> Self {
+        self.0.listen = v.into();
+        self
+    }
+    pub fn charge_beta_broadcast(mut self, v: bool) -> Self {
+        self.0.charge_beta_broadcast = v;
         self
     }
     pub fn line_search(mut self, v: LineSearchConfig) -> Self {
@@ -550,6 +654,48 @@ skip_alpha_init = true
         c.wire_f16_beta = true;
         c.exchange = ExchangeStrategy::ReduceDm;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn transport_and_workers_load_from_toml() {
+        let c = TrainConfig::default();
+        assert_eq!(c.transport, TransportKind::InProcess);
+        assert!(!c.charge_beta_broadcast);
+        let doc = toml::parse(
+            "[cluster]\ntransport = \"socket\"\nlisten = \"127.0.0.1:9099\"\nworkers = 6\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.transport, TransportKind::Socket);
+        assert_eq!(c.listen, "127.0.0.1:9099");
+        assert_eq!(c.machines, 6);
+        // aliases parse; unknown transports error
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Socket));
+        assert_eq!(TransportKind::parse("threads"), Some(TransportKind::InProcess));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        let doc = toml::parse("[cluster]\ntransport = \"udp\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        // socket transport with an empty listen address is rejected
+        let mut c = TrainConfig::default();
+        c.transport = TransportKind::Socket;
+        c.listen = String::new();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn worker_count_is_validated_against_the_feature_count() {
+        // satellite bugfix: 0 and > feature-block-count worker counts fail
+        // at config load / solver construction with a clear message
+        let doc = toml::parse("[cluster]\nworkers = 0\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = toml::parse("[cluster]\nworkers = -2\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = toml::parse("[cluster]\nworkers = 3\n").unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert!(c.validate_machines_for(3).is_ok());
+        let err = c.validate_machines_for(2).unwrap_err().to_string();
+        assert!(err.contains("3 workers"), "{err}");
+        assert!(err.contains("2 features"), "{err}");
     }
 
     #[test]

@@ -63,7 +63,7 @@
 //!     match driver.step().unwrap() {
 //!         StepOutcome::Progress(rec) => {
 //!             if rec.iter % 10 == 0 {
-//!                 driver.checkpoint().save("fit.ckpt.json").unwrap();
+//!                 driver.checkpoint().unwrap().save("fit.ckpt.json").unwrap();
 //!             }
 //!         }
 //!         StepOutcome::Finished { .. } => break,

@@ -4,13 +4,16 @@
 //! the paper's tables/figures live under `cargo bench`.
 
 use std::process::ExitCode;
+use std::time::Duration;
 
 use dglmnet::baselines::grid::online_grid_search;
 use dglmnet::baselines::{
     DistributedOnlineEstimator, ShotgunEstimator, TruncatedGradientEstimator,
 };
 use dglmnet::cli::{App, CommandSpec, ParsedArgs};
-use dglmnet::config::{EngineKind, ExchangeStrategy, PathConfig, TrainConfig};
+use dglmnet::cluster::transport::SocketTransport;
+use dglmnet::cluster::WorkerNode;
+use dglmnet::config::{EngineKind, ExchangeStrategy, PathConfig, TrainConfig, TransportKind};
 use dglmnet::data::{dataset::Dataset, libsvm, synth};
 use dglmnet::error::{DlrError, Result};
 use dglmnet::metrics;
@@ -51,6 +54,9 @@ fn app() -> App {
                 .opt("max-iter", "iteration cap", Some("100"))
                 .opt("tol", "relative-decrease tolerance", Some("1e-5"))
                 .opt("exchange", "auto | reduce-dm | allgather-beta", Some("auto"))
+                .opt("workers", "alias for --machines (worker node count)", None)
+                .opt("transport", "in-process | socket", Some("in-process"))
+                .opt("listen", "leader bind address for --transport socket", Some("127.0.0.1:4801"))
                 .flag("wire-f16", "allow the lossy f16 wire codec for Δ-margin messages")
                 .opt("passes", "online/truncgrad passes", Some("10"))
                 .opt("rounds", "shotgun rounds", Some("200"))
@@ -81,6 +87,21 @@ fn app() -> App {
                 .opt("tol", "relative-decrease tolerance", Some("1e-5"))
                 .opt("seed", "rng seed", Some("1"))
                 .opt("csv-out", "write (series,nnz,auprc) csv here", None),
+        )
+        .command(
+            CommandSpec::new("worker", "run one remote worker node and serve the leader over TCP")
+                .opt("connect", "leader address (host:port) to join", None)
+                .opt("machine", "this worker's machine index (0-based)", None)
+                .opt("input", "libsvm path — must match the leader's data flags exactly", None)
+                .opt("kind", "synthetic kind when no --input", Some("dna"))
+                .opt("examples", "synthetic examples", Some("10000"))
+                .opt("features", "synthetic features", Some("400"))
+                .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
+                .opt("seed", "rng seed (drives the train/test split too)", Some("1"))
+                .opt("machines", "cluster size M (must match the leader)", Some("4"))
+                .opt("workers", "alias for --machines", None)
+                .opt("engine", "auto | xla | native", Some("auto"))
+                .opt("connect-timeout-secs", "how long to retry reaching the leader", Some("30")),
         )
         .command(
             CommandSpec::new("online", "distributed truncated-gradient baseline (§4.3 grid)")
@@ -128,6 +149,17 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     }
     if let Some(m) = args.get_usize("machines")? {
         cfg.machines = m;
+    }
+    if let Some(w) = args.get_usize("workers")? {
+        // --workers is the protocol-era alias; it wins over --machines
+        cfg.machines = w;
+    }
+    if let Some(s) = args.get_str("transport") {
+        cfg.transport = TransportKind::parse(s)
+            .ok_or_else(|| DlrError::Cli(format!("unknown transport '{s}'")))?;
+    }
+    if let Some(l) = args.get_str("listen") {
+        cfg.listen = l.to_string();
     }
     if let Some(e) = args.get_str("engine") {
         cfg.engine = EngineKind::parse(e)
@@ -232,6 +264,13 @@ fn print_fit(name: &str, lambda: f64, fit: &FitResult, test: &Dataset) {
 /// is the checkpoint/resume/budget workflow the new API exists for.
 fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
     let cfg = train_config(args)?;
+    if cfg.transport == TransportKind::Socket {
+        println!(
+            "listening on {} for {} worker nodes (launch them with \
+             `dglmnet worker --connect {} --machine <k> ...`)",
+            cfg.listen, cfg.machines, cfg.listen
+        );
+    }
     let mut solver = DGlmnetSolver::from_dataset(train, &cfg)?;
     let lambda = cfg.lambda;
     let mut driver = match args.get_str("resume") {
@@ -249,13 +288,13 @@ fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
             StepOutcome::Progress(rec) => {
                 if let Some(path) = ckpt_out {
                     if rec.iter % every == 0 {
-                        driver.checkpoint().save(path)?;
+                        driver.checkpoint()?.save(path)?;
                     }
                 }
             }
             StepOutcome::Finished { reason, .. } => {
                 if let Some(path) = ckpt_out {
-                    driver.checkpoint().save(path)?;
+                    driver.checkpoint()?.save(path)?;
                     println!("checkpoint written to {path} ({reason:?})");
                 }
                 break;
@@ -311,10 +350,56 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
         other => train_baseline(other, args, &split.train)?,
     };
     print_fit(&kind, fit.lambda, &fit, &split.test);
+    // exact bit pattern so cross-transport runs can be diffed to full
+    // precision (the CI socket job compares this line)
+    println!("objective_bits={:016x}", fit.objective.to_bits());
     if let Some(path) = args.get_str("model-out") {
         fit.model.save(path)?;
         println!("model saved to {path}");
     }
+    Ok(())
+}
+
+/// One remote worker node: rebuild the shard the leader's partition assigns
+/// to `--machine` (from data flags identical to the leader's), connect, and
+/// serve the node protocol until the leader shuts the fit down.
+fn cmd_worker(args: &ParsedArgs) -> Result<()> {
+    let connect = args
+        .get_str("connect")
+        .ok_or_else(|| DlrError::Cli("--connect is required".into()))?
+        .to_string();
+    let machine = args
+        .get_usize("machine")?
+        .ok_or_else(|| DlrError::Cli("--machine is required".into()))?;
+    let ds = load_or_generate(args)?;
+    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
+    let train = &split.train;
+    let cfg = train_config(args)?;
+    cfg.validate_machines_for(train.n_features())?;
+    if machine >= cfg.machines {
+        return Err(DlrError::Cli(format!(
+            "--machine {machine} is out of range for a {}-worker cluster",
+            cfg.machines
+        )));
+    }
+    let shard = DGlmnetSolver::shard_for(train, &cfg, machine);
+    let local_features = shard.global_cols.len();
+    let mut node = WorkerNode::from_shard(
+        &cfg,
+        shard,
+        std::sync::Arc::new(train.y.clone()),
+        train.n_features(),
+        &dglmnet::runtime::default_artifacts_dir(),
+    )?;
+    let timeout = args.get_u64("connect-timeout-secs")?.unwrap_or(30);
+    println!(
+        "worker {machine}: {local_features} features, engine {}, joining {connect}",
+        node.engine_name()
+    );
+    let mut transport =
+        SocketTransport::connect_retry(connect.as_str(), Duration::from_secs(timeout))?;
+    node.serve(&mut transport)?;
+    println!("worker {machine}: leader finished, shutting down");
     Ok(())
 }
 
@@ -429,6 +514,7 @@ fn run() -> Result<()> {
         "gen-data" => cmd_gen_data(&parsed),
         "transform" => cmd_transform(&parsed),
         "train" => cmd_train(&parsed),
+        "worker" => cmd_worker(&parsed),
         "path" => cmd_path(&parsed),
         "online" => cmd_online(&parsed),
         "evaluate" => cmd_evaluate(&parsed),

@@ -3,15 +3,18 @@
 //!
 //! ```text
 //! repeat until convergence:
-//!   1. leader: (w, z, loss) from shared margins           [stats kernel]
-//!   2. workers (M threads): one CD sweep over their shard [cd_sweep kernel]
-//!   3. AllReduce Δβ and (Δβᵀx_i)                          [simulated tree]
-//!   4. leader: line search over α                         [line_search kernel]
-//!   5. β += αΔβ ; margins += αΔm
+//!   1. leader: loss from its margins                       [stats kernel]
+//!   2. workers (M nodes): (w, z) from their own margins,
+//!      one CD sweep over their β shard                     [cd_sweep kernel]
+//!   3. gather Δβ, exchange/recombine Δm                    [cluster::comm]
+//!   4. leader: line search over α                          [line_search kernel]
+//!   5. leader and every node: β += αΔβ ; margins += αΔm    [apply phase]
 //! ```
 //!
 //! The iteration body itself lives in [`FitDriver::step`] — this type owns
-//! the simulated cluster, the warmstart state (β, margins), and the
+//! the cluster handle (a [`WorkerPool`] driving worker *nodes* through the
+//! serializable node protocol, in-process or over sockets), the leader's
+//! global warmstart state (β, margins), the EWMA comm estimators, and the
 //! reusable `FitScratch` buffers, and exposes three ways to train:
 //!
 //! * [`DGlmnetSolver::driver`] — the stepwise API: callers own the loop
@@ -21,24 +24,26 @@
 //! * [`DGlmnetSolver::fit`] / [`DGlmnetSolver::fit_lambda`] — the original
 //!   one-shot entry points, kept as thin wrappers over the driver.
 //!
-//! Convergence carries the paper's two sparsity precautions: the line
-//! search's full-step shortcut, and the final α = 1 retry before stopping.
-//! Step 3 routes through the pluggable `cluster::comm` subsystem: wire
-//! codecs picked per message by byte cost, the per-iteration reduce-Δm vs
-//! allgather-Δβ strategy choice, and tree-node merges running inside the
-//! `WorkerPool` (never on the leader thread). Every large per-iteration
-//! buffer — including the leader's w/z working vectors — lives in
-//! `FitScratch`, so the steady-state hot path allocates only the O(M)
-//! bookkeeping of the comm layer.
+//! Workers hold their own β shard and margins (see [`crate::cluster::node`]);
+//! the leader's global copies stay bit-identical to the union of the
+//! worker-held shards. Convergence carries the paper's two sparsity
+//! precautions: the line search's full-step shortcut, and the final α = 1
+//! retry before stopping. Every large per-iteration buffer lives in
+//! `FitScratch` (the leader computes only the O(n) loss now — the w/z
+//! working vectors moved into the nodes), so the steady-state hot path
+//! allocates only the O(M) bookkeeping of the comm layer.
 
+use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
 use crate::cluster::codec::CodecPolicy;
-use crate::cluster::comm::AllGather;
+use crate::cluster::comm::{AllGather, TreeByteEstimator};
 use crate::cluster::network::NetworkLedger;
 use crate::cluster::partition::FeaturePartition;
-use crate::config::{ExchangeStrategy, TrainConfig};
+use crate::cluster::protocol::crc_f32;
+use crate::config::{ExchangeStrategy, TrainConfig, TransportKind};
 use crate::data::dataset::Dataset;
 use crate::data::shuffle::{shard_in_memory, FeatureShard};
 use crate::data::sparse::{CsrMatrix, SparseVec};
@@ -52,6 +57,20 @@ use crate::solver::model::SparseModel;
 use crate::solver::pool::WorkerPool;
 use crate::util::timer::PhaseTimer;
 
+/// How long a socket leader waits for all workers to connect.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// The engine name remote workers must announce when the leader pins a
+/// concrete engine kind (`Auto` resolves per shard on each host, so it
+/// cannot be validated centrally).
+fn pinned_engine(cfg: &TrainConfig) -> Option<&'static str> {
+    match cfg.engine {
+        crate::config::EngineKind::Native => Some("native"),
+        crate::config::EngineKind::Xla => Some("xla"),
+        crate::config::EngineKind::Auto => None,
+    }
+}
+
 /// Per-iteration record (feeds Table 3, the ablation benches, and every
 /// [`FitObserver`] callback).
 #[derive(Debug, Clone)]
@@ -60,8 +79,9 @@ pub struct IterationRecord {
     pub objective: f64,
     pub alpha: f64,
     pub fast_path: bool,
-    /// max over machines of the local sweep time — the simulated parallel
-    /// compute time of this iteration.
+    /// max over machines of the local sweep time (including the node's own
+    /// (w, z) derivation) — the simulated parallel compute time of this
+    /// iteration.
     pub max_worker_secs: f64,
     /// simulated AllReduce seconds (network model).
     pub sim_comm_secs: f64,
@@ -106,12 +126,8 @@ impl FitResult {
 /// the price of running tree merges on the worker pool.
 #[derive(Debug, Default)]
 pub(crate) struct FitScratch {
-    /// leader working statistics (Arc so the pool can share them with the
-    /// worker threads; `Arc::make_mut` reclaims the buffer once the workers
-    /// have dropped their clones, so steady state stops allocating)
-    pub(crate) w: Arc<Vec<f32>>,
-    pub(crate) z: Arc<Vec<f32>>,
-    /// per-machine sweep outputs (sparse buffers round-trip via the pool)
+    /// per-machine sweep outputs (sparse buffers round-trip via the pool's
+    /// `Sweep.recycle` slot)
     pub(crate) results: Vec<SweepResult>,
     /// per-machine Δβ contributions remapped to global feature ids
     pub(crate) db_contribs: Vec<SparseVec>,
@@ -119,9 +135,12 @@ pub(crate) struct FitScratch {
     pub(crate) ar: AllReduceScratch,
     /// per-machine nnz counts for the exchange-strategy cost estimate
     pub(crate) est_nnz: Vec<usize>,
-    /// merged sparse Δβ / Δm
-    pub(crate) delta_sp: SparseVec,
-    pub(crate) dmargins_sp: SparseVec,
+    /// merged sparse Δβ / Δm — `Arc` so the apply phase can hand the same
+    /// buffers to every in-process worker without copying; `Arc::make_mut`
+    /// reclaims them once the workers drop their clones, so steady state
+    /// stops allocating
+    pub(crate) delta_sp: Arc<SparseVec>,
+    pub(crate) dmargins_sp: Arc<SparseVec>,
     /// dense views for the line search / apply step
     pub(crate) delta: Vec<f32>,
     pub(crate) dmargins: Vec<f32>,
@@ -129,8 +148,9 @@ pub(crate) struct FitScratch {
     pub(crate) support: Vec<u32>,
 }
 
-/// The distributed solver: owns the simulated cluster and the warmstart
-/// state (β, margins) across `fit_lambda` calls — exactly what Alg 5 needs.
+/// The distributed solver: owns the cluster handle and the leader-side
+/// warmstart state (β, margins) across `fit_lambda` calls — exactly what
+/// Alg 5 needs.
 pub struct DGlmnetSolver {
     pub cfg: TrainConfig,
     pub(crate) n: usize,
@@ -145,6 +165,15 @@ pub struct DGlmnetSolver {
     pub(crate) policy: CodecPolicy,
     pub(crate) ledger: NetworkLedger,
     pub(crate) scratch: FitScratch,
+    /// EWMA byte estimator for the Δm allreduce (full reduce + broadcast).
+    pub(crate) est_dm: TreeByteEstimator,
+    /// EWMA byte estimator for the Δβ gather (no broadcast — workers hold
+    /// their own shards).
+    pub(crate) est_db: TreeByteEstimator,
+    /// Worker-held state is stale (a reset / warmstart install / legacy
+    /// resume touched the leader copies); the next step or checkpoint
+    /// pushes it before using it.
+    pub(crate) workers_dirty: bool,
     /// Current coefficients (warmstart state).
     pub beta: Vec<f32>,
     /// Current margins βᵀx_i, kept consistent with `beta`.
@@ -152,10 +181,10 @@ pub struct DGlmnetSolver {
 }
 
 impl DGlmnetSolver {
-    /// Build the simulated cluster from a by-example dataset: partition
-    /// features, shard (in memory), spawn one worker thread per machine.
-    pub fn from_dataset(ds: &Dataset, cfg: &TrainConfig) -> Result<Self> {
-        cfg.validate()?;
+    /// The feature partition `cfg` implies for `ds` — deterministic, so a
+    /// remote worker process given the same data and config builds the
+    /// exact shard the leader expects (validated by the join handshake).
+    pub fn partition_for(ds: &Dataset, cfg: &TrainConfig) -> FeaturePartition {
         let csc_counts: Vec<usize> = {
             let mut counts = vec![0usize; ds.n_features()];
             for &c in &ds.x.indices {
@@ -163,23 +192,85 @@ impl DGlmnetSolver {
             }
             counts
         };
-        let partition = FeaturePartition::build(
+        FeaturePartition::build(
             cfg.partition,
             ds.n_features(),
             cfg.machines,
             Some(&csc_counts),
-        );
-        let shards = shard_in_memory(&ds.x, &partition);
-        Self::from_shards(ds, cfg, partition, shards)
+        )
     }
 
-    /// Build from pre-sharded by-feature data (the external-shuffle path).
+    /// The shard [`DGlmnetSolver::partition_for`] assigns to `machine` —
+    /// the single construction path every remote worker uses (the
+    /// `dglmnet worker` CLI, the socket examples and tests), column-exact
+    /// with what `shard_in_memory` builds for the in-process pool.
+    pub fn shard_for(ds: &Dataset, cfg: &TrainConfig, machine: usize) -> FeatureShard {
+        let partition = Self::partition_for(ds, cfg);
+        let global_cols = partition.features_of(machine);
+        let cols_usize: Vec<usize> = global_cols.iter().map(|&c| c as usize).collect();
+        FeatureShard { machine, global_cols, csc: ds.x.to_csc().select_cols(&cols_usize) }
+    }
+
+    /// Build the cluster from a by-example dataset. With the default
+    /// `[cluster] transport = in-process` this partitions features, shards
+    /// in memory, and spawns one worker thread per machine; with
+    /// `transport = socket` it listens on `cfg.listen` and admits one
+    /// remote `dglmnet worker` process per partition block.
+    pub fn from_dataset(ds: &Dataset, cfg: &TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        cfg.validate_machines_for(ds.n_features())?;
+        match cfg.transport {
+            TransportKind::InProcess => {
+                let partition = Self::partition_for(ds, cfg);
+                let shards = shard_in_memory(&ds.x, &partition);
+                Self::from_shards(ds, cfg, partition, shards)
+            }
+            TransportKind::Socket => {
+                let partition = Self::partition_for(ds, cfg);
+                let pool = WorkerPool::listen_and_accept(
+                    &partition,
+                    ds.n_examples(),
+                    pinned_engine(cfg),
+                    cfg.listen.as_str(),
+                    ACCEPT_TIMEOUT,
+                )?;
+                Self::assemble(ds, cfg, partition, pool)
+            }
+        }
+    }
+
+    /// Socket-transport constructor over an already-bound listener: bind
+    /// port 0, hand the concrete address to the workers, then accept —
+    /// what the transport-equivalence tests and the multi-process example
+    /// use.
+    pub fn from_dataset_socket(
+        ds: &Dataset,
+        cfg: &TrainConfig,
+        listener: TcpListener,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        cfg.validate_machines_for(ds.n_features())?;
+        let partition = Self::partition_for(ds, cfg);
+        let pool = WorkerPool::accept(
+            &partition,
+            ds.n_examples(),
+            pinned_engine(cfg),
+            listener,
+            ACCEPT_TIMEOUT,
+        )?;
+        Self::assemble(ds, cfg, partition, pool)
+    }
+
+    /// Build from pre-sharded by-feature data (the external-shuffle path);
+    /// always in-process — remote workers load their own shards.
     pub fn from_shards(
         ds: &Dataset,
         cfg: &TrainConfig,
         partition: FeaturePartition,
         shards: Vec<FeatureShard>,
     ) -> Result<Self> {
+        cfg.validate()?;
+        cfg.validate_machines_for(ds.n_features())?;
         if shards.len() != cfg.machines {
             return Err(DlrError::Solver(format!(
                 "{} shards but {} machines",
@@ -187,21 +278,34 @@ impl DGlmnetSolver {
                 cfg.machines
             )));
         }
-        let artifacts = default_artifacts_dir();
-        let n = ds.n_examples();
-        let p = ds.n_features();
-        // Drop empty shards from the pool but keep machine indexing intact
-        // by giving them a single empty column slot is messy; instead we
-        // require every machine to own >= 1 feature.
+        // Every machine must own >= 1 feature (validate_machines_for
+        // guarantees it for the built-in partitioners; external shards are
+        // re-checked here).
         for s in &shards {
             if s.global_cols.is_empty() {
                 return Err(DlrError::Solver(format!(
-                    "machine {} owns no features (p = {p} < machines = {}?)",
-                    s.machine, cfg.machines
+                    "machine {} owns no features (p = {} < machines = {}?)",
+                    s.machine,
+                    ds.n_features(),
+                    cfg.machines
                 )));
             }
         }
-        let pool = WorkerPool::spawn(cfg, shards, n, artifacts.clone())?;
+        let artifacts = default_artifacts_dir();
+        let pool =
+            WorkerPool::spawn(cfg, shards, &ds.y, ds.n_features(), artifacts)?;
+        Self::assemble(ds, cfg, partition, pool)
+    }
+
+    fn assemble(
+        ds: &Dataset,
+        cfg: &TrainConfig,
+        partition: FeaturePartition,
+        pool: WorkerPool,
+    ) -> Result<Self> {
+        let artifacts = default_artifacts_dir();
+        let n = ds.n_examples();
+        let p = ds.n_features();
         let leader = LeaderCompute::new(cfg, &ds.y, &artifacts)?;
         // dense_allreduce reproduces the pre-sparsity baseline: dense
         // charging on every edge, classic reduce-Δm exchange
@@ -224,15 +328,30 @@ impl DGlmnetSolver {
             policy,
             ledger: NetworkLedger::new(),
             scratch: FitScratch::default(),
+            est_dm: TreeByteEstimator::new(true),
+            est_db: TreeByteEstimator::new(cfg.charge_beta_broadcast),
+            workers_dirty: false,
             beta: vec![0f32; p],
             margins: vec![0f32; n],
         })
     }
 
     /// Tree-merge jobs the `WorkerPool` has executed for the comm layer —
-    /// the leader-offload regression tests assert this grows during fits.
+    /// the leader-offload regression tests assert this grows during
+    /// in-process fits (a socket pool has no local worker threads).
     pub fn merge_tasks_executed(&self) -> u64 {
         self.pool.tasks_executed()
+    }
+
+    /// `"in-process"` or `"socket"`.
+    pub fn transport_kind(&self) -> &'static str {
+        self.pool.transport_kind()
+    }
+
+    /// Current `(Δm, Δβ)` EWMA shrink factors of the comm byte estimator
+    /// (1.0 until the auto strategy pick has observed an exchange).
+    pub fn comm_estimator_shrink(&self) -> (f64, f64) {
+        (self.est_dm.shrink(), self.est_db.shrink())
     }
 
     pub fn n_examples(&self) -> usize {
@@ -261,17 +380,62 @@ impl DGlmnetSolver {
         grad.iter().map(|g| g.abs() / 2.0).fold(0.0, f64::max)
     }
 
-    /// Reset warmstart state to β = 0.
+    /// Reset warmstart state to β = 0. The worker-held shards are synced
+    /// lazily before the next sweep or checkpoint.
     pub fn reset(&mut self) {
         self.beta.fill(0.0);
         self.margins.fill(0.0);
+        self.workers_dirty = true;
     }
 
-    /// Install a warmstart β (margins are rebuilt).
+    /// Install a warmstart β (margins are rebuilt; worker-held shards are
+    /// synced lazily before the next sweep or checkpoint).
     pub fn set_beta(&mut self, beta: &[f32]) {
         assert_eq!(beta.len(), self.p);
         self.beta.copy_from_slice(beta);
         self.margins = self.x.margins(beta);
+        self.workers_dirty = true;
+    }
+
+    /// Push (β, margins) to every worker node if the leader copies moved
+    /// outside the protocol (reset / warmstart install / legacy resume).
+    pub(crate) fn ensure_workers_synced(&mut self) -> Result<()> {
+        if self.workers_dirty {
+            self.pool.sync_full_state(&self.beta, &self.margins)?;
+            self.workers_dirty = false;
+        }
+        Ok(())
+    }
+
+    /// Pull every node's shard state and verify it is bit-identical to the
+    /// leader's global (β, margins) — the checkpoint capture path. A
+    /// divergence is a hard error: checkpointing corrupt state silently
+    /// would poison every resume after it.
+    pub(crate) fn pull_verified_shards(&mut self) -> Result<Vec<Vec<f32>>> {
+        let states = self.pool.pull_states()?;
+        let margins_crc = crc_f32(&self.margins);
+        for (k, (beta_local, crc)) in states.iter().enumerate() {
+            if *crc != margins_crc {
+                return Err(DlrError::Solver(format!(
+                    "worker {k} margins diverged from the leader (checksum mismatch)"
+                )));
+            }
+            if beta_local.len() != self.pool.global_cols[k].len() {
+                return Err(DlrError::Solver(format!(
+                    "worker {k} reported {} coefficients but owns {} features",
+                    beta_local.len(),
+                    self.pool.global_cols[k].len()
+                )));
+            }
+            for (l, &g) in self.pool.global_cols[k].iter().enumerate() {
+                if beta_local[l].to_bits() != self.beta[g as usize].to_bits() {
+                    return Err(DlrError::Solver(format!(
+                        "worker {k} β shard diverged from the leader at feature {g}"
+                    )));
+                }
+            }
+        }
+        Ok(states.into_iter().map(|(beta_local, _)| beta_local).collect())
     }
 
     /// Start a stepwise fit at `lambda` from the current (β, margins) —
@@ -281,8 +445,10 @@ impl DGlmnetSolver {
     }
 
     /// Resume a stepwise fit from a [`Checkpoint`] (possibly captured in a
-    /// different process): installs (β, margins) bit-for-bit and continues
-    /// the iteration count and cost ledger where the checkpoint left off.
+    /// different process): installs (β, margins) bit-for-bit on the leader
+    /// and every worker node, restores the comm estimator state, and
+    /// continues the iteration count and cost ledger where the checkpoint
+    /// left off.
     pub fn driver_from_checkpoint(&mut self, ck: &Checkpoint) -> Result<FitDriver<'_>> {
         FitDriver::from_checkpoint(self, ck)
     }
@@ -316,7 +482,7 @@ impl Estimator for DGlmnetSolver {
 
     /// Fit at `cfg.lambda` from the current state (warmstart — call
     /// [`Estimator::reset`] first for a cold fit). `ds` must be the dataset
-    /// the simulated cluster was built on; the solver keeps its shards.
+    /// the cluster was built on; the workers keep their shards.
     fn fit(&mut self, ds: &Dataset, observer: &mut dyn FitObserver) -> Result<FitResult> {
         if ds.n_examples() != self.n || ds.n_features() != self.p {
             return Err(DlrError::Solver(format!(
@@ -486,7 +652,8 @@ mod tests {
     fn forced_exchange_strategies_match_bitwise() {
         // allgather-Δβ merges Δm leader-side in the same pairwise tree
         // order as the charged reduce: the trajectory must be bit-identical
-        // and the wire strictly cheaper (Δm never shipped)
+        // and the wire strictly cheaper (Δm never shipped; Δβ is a gather
+        // either way)
         let ds = synth::dna_like(500, 60, 6, 41);
         let lam = crate::solver::regpath::lambda_max(&ds) / 8.0;
         let mk = |e: ExchangeStrategy| {
@@ -527,5 +694,32 @@ mod tests {
         assert_eq!(fa.objective.to_bits(), fb.objective.to_bits());
         assert_eq!(fa.iterations, fb.iterations);
         assert_eq!(a.beta, b.beta);
+    }
+
+    #[test]
+    fn too_many_workers_fail_at_construction_with_a_clear_error() {
+        // satellite bugfix: workers > feature blocks must error up front
+        // with actionable wording, not panic deep in partition/shard code
+        let ds = synth::dna_like(100, 8, 3, 42);
+        let err = DGlmnetSolver::from_dataset(&ds, &native_cfg(9, 0.5)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("9 workers"), "{msg}");
+        assert!(msg.contains("8 features"), "{msg}");
+    }
+
+    #[test]
+    fn auto_fit_evolves_the_comm_estimator() {
+        // Δm contributions overlap across machines, so the observed bytes
+        // run below the nnz_a + nnz_b upper bound and the EWMA learns it
+        let ds = synth::dna_like(400, 40, 5, 43);
+        let mut s = DGlmnetSolver::from_dataset(&ds, &native_cfg(4, 0.2)).unwrap();
+        assert_eq!(s.comm_estimator_shrink(), (1.0, 1.0));
+        let fit = s.fit(None).unwrap();
+        assert!(fit.iterations >= 2);
+        let (dm, db) = s.comm_estimator_shrink();
+        assert!((0.05..=1.5).contains(&dm), "dm shrink {dm}");
+        assert!((0.05..=1.5).contains(&db), "db shrink {db}");
+        // at least one side must have been observed away from the prior
+        assert!(dm < 1.0 || db <= 1.0);
     }
 }

@@ -4,15 +4,36 @@
 //! *bit-identical* (objective, β, comm-bytes ledger) to the one-shot path,
 //! which the `tests/estimator_api.rs` equivalence tests pin down.
 //!
+//! Since the node-protocol redesign, `step()` is a sequence of send/recv
+//! phases over the workers' [`Transport`](crate::cluster::transport::Transport)
+//! links (the same code path for in-process threads and remote socket
+//! processes):
+//!
+//! 1. **leader stats** — loss at the current margins (local compute);
+//! 2. **sweep phase** — send `Sweep { λ, ν }` to every node, collect the
+//!    sparse `Swept` replies (workers derive `(w, z)` from their own
+//!    margins; no `beta_local` or `(w, z)` ever travels);
+//! 3. **Δ-exchange** — the `cluster::comm` collectives: the EWMA byte-cost
+//!    model picks reduce-Δm or allgather-Δβ per iteration, codecs are
+//!    chosen per message, merges run on the worker pool, and the Δβ flow
+//!    is charged as a *gather* (workers hold their β shards, so the PR-3
+//!    merged-Δβ broadcast no longer exists);
+//! 4. **line search** — leader-local over the merged Δm;
+//! 5. **apply phase** — the leader applies `α·Δ` to its global state and
+//!    sends `Apply { α, Δm }`; every node applies the bit-identical update
+//!    to its shard.
+//!
 //! What stepwise control buys:
 //!
 //! * **Observers** — [`FitDriver::run`] reports every iteration through a
 //!   [`FitObserver`], which can stop the fit early.
 //! * **Checkpoint / resume** — [`FitDriver::checkpoint`] captures (β,
-//!   margins, iteration counter, accumulated cost) as a [`Checkpoint`];
+//!   margins, iteration counter, accumulated cost, the worker-held shard
+//!   states, and the comm estimator state) as a [`Checkpoint`];
 //!   `DGlmnetSolver::driver_from_checkpoint` restores it in a fresh process
-//!   and the resumed fit reproduces the uninterrupted trajectory exactly
-//!   (margins are restored bit-for-bit, never recomputed from β).
+//!   and the resumed fit reproduces the uninterrupted trajectory exactly —
+//!   including the `comm_bytes` ledger (margins are restored bit-for-bit,
+//!   never recomputed from β).
 //! * **Budgets** — wall-clock / comm-bytes / iteration caps from
 //!   [`TrainConfig::budget`](crate::config::TrainConfig) are enforced
 //!   between iterations.
@@ -21,7 +42,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::cluster::codec::MessageClass;
-use crate::cluster::comm::{self, Collective, CommCtx, TaskExecutor};
+use crate::cluster::comm::{Collective, CommCtx, TaskExecutor};
 use crate::config::ExchangeStrategy;
 use crate::data::sparse::SparseVec;
 use crate::error::{DlrError, Result};
@@ -115,8 +136,11 @@ impl<'a> FitDriver<'a> {
         }
     }
 
-    /// Resume from a checkpoint: installs (β, margins) bit-for-bit and
-    /// carries the iteration counter and cost accumulators forward.
+    /// Resume from a checkpoint: installs (β, margins) bit-for-bit — on
+    /// the leader *and* on every worker node (verbatim shard states when
+    /// the checkpoint carries them, a re-gather otherwise) — restores the
+    /// comm estimator state, and carries the iteration counter and cost
+    /// accumulators forward.
     pub fn from_checkpoint(solver: &'a mut DGlmnetSolver, ck: &Checkpoint) -> Result<Self> {
         if ck.p != solver.n_features() || ck.n != solver.n_examples() {
             return Err(DlrError::Solver(format!(
@@ -129,6 +153,50 @@ impl<'a> FitDriver<'a> {
         }
         solver.beta.copy_from_slice(&ck.beta);
         solver.margins.copy_from_slice(&ck.margins);
+        if ck.shards.is_empty() {
+            // legacy checkpoint without shard states: re-gather from β
+            solver.workers_dirty = true;
+        } else {
+            // the shard states were verified against β at capture time
+            // *under the capturing partition* — re-verify under THIS
+            // solver's partition before installing, or a resume with a
+            // different [solver] partition / machine count would silently
+            // land shard values on the wrong columns
+            if ck.shards.len() != solver.pool.global_cols.len() {
+                return Err(DlrError::Solver(format!(
+                    "checkpoint has {} worker shards but this cluster has {} — was the \
+                     checkpoint taken with a different machine count?",
+                    ck.shards.len(),
+                    solver.pool.global_cols.len()
+                )));
+            }
+            for (k, shard) in ck.shards.iter().enumerate() {
+                let cols = &solver.pool.global_cols[k];
+                let consistent = shard.len() == cols.len()
+                    && cols.iter().enumerate().all(|(l, &g)| {
+                        shard[l].to_bits() == ck.beta[g as usize].to_bits()
+                    });
+                if !consistent {
+                    return Err(DlrError::Solver(format!(
+                        "checkpoint shard state {k} does not match its β under this \
+                         cluster's partition — was the checkpoint taken with a \
+                         different [solver] partition?"
+                    )));
+                }
+            }
+            solver.pool.push_shard_states(&ck.shards, &ck.margins)?;
+            solver.workers_dirty = false;
+        }
+        match ck.est_shrink {
+            Some((dm, db)) => {
+                solver.est_dm.set_shrink(dm);
+                solver.est_db.set_shrink(db);
+            }
+            None => {
+                solver.est_dm.set_shrink(1.0);
+                solver.est_db.set_shrink(1.0);
+            }
+        }
         let mut d = Self::new(solver, ck.lambda);
         d.next_iter = ck.iter + 1;
         d.f_prev = ck.f_prev;
@@ -187,8 +255,15 @@ impl<'a> FitDriver<'a> {
     }
 
     /// Capture the resumable state after the last completed iteration.
-    pub fn checkpoint(&self) -> Checkpoint {
-        Checkpoint {
+    ///
+    /// This is a protocol round-trip: the worker-held shard states are
+    /// pulled (`GetState`) and cross-checked against the leader's global
+    /// (β, margins) — a bit-level divergence is a hard error, not a silent
+    /// checkpoint of corrupt state.
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
+        self.solver.ensure_workers_synced()?;
+        let shards = self.solver.pull_verified_shards()?;
+        Ok(Checkpoint {
             lambda: self.lambda,
             n: self.solver.n_examples(),
             p: self.solver.n_features(),
@@ -201,7 +276,9 @@ impl<'a> FitDriver<'a> {
             beta: self.solver.beta.clone(),
             margins: self.solver.margins.clone(),
             rng: None,
-        }
+            shards,
+            est_shrink: Some((self.solver.est_dm.shrink(), self.solver.est_db.shrink())),
+        })
     }
 
     fn budget_exceeded(&self) -> Option<StopReason> {
@@ -224,13 +301,15 @@ impl<'a> FitDriver<'a> {
         None
     }
 
-    /// Run one leader-stats → sweep → Δ-exchange → line-search iteration
-    /// (paper Algorithm 1 body). The Δ-exchange routes through
-    /// `cluster::comm`: the byte-cost model picks reduce-Δm or
-    /// allgather-Δβ per iteration (unless the config forces one), codecs
-    /// are chosen per message, and tree merges run on the worker pool. The
-    /// update is applied before this returns, so `checkpoint()` right
-    /// after captures it.
+    /// Run one leader-stats → sweep → Δ-exchange → line-search → apply
+    /// iteration (paper Algorithm 1 body) as send/recv phases over the
+    /// worker transports. The Δ-exchange routes through `cluster::comm`:
+    /// the EWMA byte-cost model picks reduce-Δm or allgather-Δβ per
+    /// iteration (unless the config forces one), codecs are chosen per
+    /// message, tree merges run on the worker pool, and the Δβ flow is a
+    /// charged *gather* — workers hold their own β shards, so no merged-Δβ
+    /// broadcast exists. The update is applied (leader and workers) before
+    /// this returns, so `checkpoint()` right after captures it.
     pub fn step(&mut self) -> Result<StepOutcome> {
         if self.finished {
             return Ok(StepOutcome::Finished {
@@ -249,6 +328,9 @@ impl<'a> FitDriver<'a> {
             self.stop_reason = Some(StopReason::MaxIter);
             return Ok(StepOutcome::Finished { record: None, reason: StopReason::MaxIter });
         }
+        // a reset / warmstart install / legacy resume marked the worker
+        // state stale: push (β, margins) before the first sweep reads it
+        self.solver.ensure_workers_synced()?;
 
         let lambda = self.lambda;
         let iter = self.next_iter;
@@ -265,6 +347,8 @@ impl<'a> FitDriver<'a> {
             policy,
             ledger,
             scratch,
+            est_dm,
+            est_db,
             beta,
             margins,
             ..
@@ -277,22 +361,18 @@ impl<'a> FitDriver<'a> {
         let iter_sw = Stopwatch::start();
         let iter_start_bytes = ledger.total_bytes();
 
-        // ---- step 1: leader stats (w, z, loss) into scratch buffers -----
-        let loss = timers.time("stats", || {
-            let w = Arc::make_mut(&mut scratch.w);
-            let z = Arc::make_mut(&mut scratch.z);
-            leader.stats_into(margins, w, z)
-        })?;
+        // ---- phase 1: leader stats (loss at the current margins) --------
+        // loss only: the (w, z) working vectors are derived worker-side
+        // from each node's own margins, so the leader no longer fills them
+        let loss = timers.time("stats", || leader.loss(margins))?;
         let f0 = loss + lambda * l1_norm(beta);
         let f_start = *self.f_prev.get_or_insert(f0);
         debug_assert!((f_start - f0).abs() <= 1e-6 * f0.abs().max(1.0) || iter > 1);
-        let w = Arc::clone(&scratch.w);
-        let z = Arc::clone(&scratch.z);
 
-        // ---- step 2: parallel sweeps ------------------------------------
-        timers.time("sweep", || {
-            pool.sweep_all(&w, &z, beta, lam_f, nu_f, &mut scratch.results)
-        })?;
+        // ---- phase 2: sweep send/recv over the node protocol ------------
+        // workers derive (w, z) from their own margins and sweep their own
+        // β shard — the request carries only (λ, ν)
+        timers.time("sweep", || pool.sweep_all(lam_f, nu_f, &mut scratch.results))?;
         let max_worker = scratch
             .results
             .iter()
@@ -300,10 +380,10 @@ impl<'a> FitDriver<'a> {
             .fold(0f64, f64::max);
         self.sim_compute += max_worker;
 
-        // ---- step 3: exchange Δβ and Δm (cluster::comm) -----------------
+        // ---- phase 3: exchange Δβ and Δm (cluster::comm) ----------------
         // remap shard-local Δβ to global feature ids — O(nnz) per machine;
-        // both strategies ship Δβ (timed under "allreduce": it's comm-path
-        // staging work)
+        // both strategies gather Δβ (timed under "allreduce": it's
+        // comm-path staging work)
         timers.time("allreduce", || {
             scratch
                 .db_contribs
@@ -312,14 +392,19 @@ impl<'a> FitDriver<'a> {
                 pool.delta_to_global(k, &r.delta_local, p, &mut scratch.db_contribs[k]);
             }
         });
-        // strategy choice: allgather-Δβ when shipping the Δβ shards is
+        // strategy choice: allgather-Δβ when gathering the Δβ shards is
         // estimated cheaper than reducing the example-space Δm (ROADMAP's
         // "kill the O(n) wire term"). Deliberately NOT "whenever Δm is
         // non-empty": the simulation charges the allgather path's local Δm
         // recombination zero bytes, which a real cluster cannot match, so
         // the Δβ-vs-Δm comparison keeps reduce-Δm in the regime where Δm
-        // is the cheaper payload anyway. Forced strategies and the dense
-        // ablation bypass the estimate.
+        // is the cheaper payload anyway. Both sides go through the
+        // EWMA-sharpened `TreeByteEstimator` (observed overlap + codec
+        // effects), with the Δβ side modeled as the gather it now is.
+        // Forced strategies and the dense ablation bypass the estimate.
+        let mut auto_pick = false;
+        let mut dm_upper = 0u64;
+        let mut db_upper = 0u64;
         let strategy = if cfg.dense_allreduce || cfg.wire_f16_beta {
             // wire_f16_beta implies reduce-Δm: the allgather path's exact
             // leader-side Δm recombination is incompatible with a
@@ -328,13 +413,16 @@ impl<'a> FitDriver<'a> {
         } else {
             match cfg.exchange {
                 ExchangeStrategy::Auto => {
+                    auto_pick = true;
                     scratch.est_nnz.clear();
                     scratch.est_nnz.extend(scratch.results.iter().map(|r| r.dmargins.nnz()));
-                    let dm_cost = comm::estimate_tree_bytes(&mut scratch.est_nnz, n);
+                    let dm_est = est_dm.estimate(&mut scratch.est_nnz, n, policy.f16_margins);
                     scratch.est_nnz.clear();
                     scratch.est_nnz.extend(scratch.db_contribs.iter().map(|c| c.nnz()));
-                    let db_cost = comm::estimate_tree_bytes(&mut scratch.est_nnz, p);
-                    if db_cost < dm_cost {
+                    let db_est = est_db.estimate(&mut scratch.est_nnz, p, policy.f16_beta);
+                    dm_upper = dm_est.upper;
+                    db_upper = db_est.upper;
+                    if db_est.predicted < dm_est.predicted {
                         ExchangeStrategy::AllGatherBeta
                     } else {
                         ExchangeStrategy::ReduceDm
@@ -345,7 +433,11 @@ impl<'a> FitDriver<'a> {
         };
         let machines = pool.machines();
         let exec: &dyn TaskExecutor = &*pool;
-        let comm_secs = timers.time("allreduce", || {
+        // the Δβ broadcast no longer exists (workers apply α·Δβ_local from
+        // their own state); `charge_beta_broadcast` is the PR-3-compat
+        // accounting ablation that pretends it still does
+        let beta_bcast = cfg.charge_beta_broadcast;
+        let (comm_secs, dm_actual, db_actual) = timers.time("allreduce", || {
             let dm_refs: Vec<&SparseVec> =
                 scratch.results.iter().map(|r| &r.dmargins).collect();
             let db_refs: Vec<&SparseVec> = scratch.db_contribs.iter().collect();
@@ -357,6 +449,7 @@ impl<'a> FitDriver<'a> {
                         class: MessageClass::Beta,
                         exec,
                         charge: true,
+                        broadcast: beta_bcast,
                     };
                     let o_beta = allgather.exchange(
                         machines,
@@ -364,7 +457,7 @@ impl<'a> FitDriver<'a> {
                         p,
                         &ctx_beta,
                         &mut scratch.ar,
-                        &mut scratch.delta_sp,
+                        Arc::make_mut(&mut scratch.delta_sp),
                     );
                     // Δm never crosses the wire: every worker already owns
                     // its shard's Δβᵀx product, and the leader combines them
@@ -376,6 +469,7 @@ impl<'a> FitDriver<'a> {
                         class: MessageClass::Margins,
                         exec,
                         charge: false,
+                        broadcast: false,
                     };
                     allreduce.exchange(
                         machines,
@@ -383,9 +477,9 @@ impl<'a> FitDriver<'a> {
                         n,
                         &ctx_dm,
                         &mut scratch.ar,
-                        &mut scratch.dmargins_sp,
+                        Arc::make_mut(&mut scratch.dmargins_sp),
                     );
-                    o_beta.simulated_secs
+                    (o_beta.simulated_secs, None, o_beta.bytes_moved)
                 }
                 _ => {
                     let ctx_dm = CommCtx {
@@ -394,6 +488,7 @@ impl<'a> FitDriver<'a> {
                         class: MessageClass::Margins,
                         exec,
                         charge: true,
+                        broadcast: true,
                     };
                     let o1 = allreduce.exchange(
                         machines,
@@ -401,7 +496,7 @@ impl<'a> FitDriver<'a> {
                         n,
                         &ctx_dm,
                         &mut scratch.ar,
-                        &mut scratch.dmargins_sp,
+                        Arc::make_mut(&mut scratch.dmargins_sp),
                     );
                     let ctx_beta = CommCtx {
                         ledger,
@@ -409,6 +504,7 @@ impl<'a> FitDriver<'a> {
                         class: MessageClass::Beta,
                         exec,
                         charge: true,
+                        broadcast: beta_bcast,
                     };
                     let o2 = allreduce.exchange(
                         machines,
@@ -416,13 +512,25 @@ impl<'a> FitDriver<'a> {
                         p,
                         &ctx_beta,
                         &mut scratch.ar,
-                        &mut scratch.delta_sp,
+                        Arc::make_mut(&mut scratch.delta_sp),
                     );
-                    o1.simulated_secs + o2.simulated_secs
+                    (
+                        o1.simulated_secs + o2.simulated_secs,
+                        Some(o1.bytes_moved),
+                        o2.bytes_moved,
+                    )
                 }
             }
         });
         self.sim_comm += comm_secs;
+        if auto_pick {
+            // sharpen the estimators with what the charged exchanges
+            // actually moved (deterministic, checkpointed state)
+            est_db.observe(db_upper, db_actual);
+            if let Some(actual) = dm_actual {
+                est_dm.observe(dm_upper, actual);
+            }
+        }
         let iter_comm_bytes = ledger.total_bytes() - iter_start_bytes;
 
         // densify the merged updates into the reusable line-search views
@@ -461,7 +569,7 @@ impl<'a> FitDriver<'a> {
             });
         }
 
-        // ---- step 4: line search ----------------------------------------
+        // ---- phase 4: line search ---------------------------------------
         let grad_dot = grad_dot_delta(margins, &scratch.dmargins, y);
         let beta_ref: &[f32] = beta;
         let delta_ref: &[f32] = &scratch.delta;
@@ -477,10 +585,16 @@ impl<'a> FitDriver<'a> {
                 line_search(&mut losses, &l1_at, f0, grad_dot, 0.0, &cfg.line_search)
             })?;
 
-        // ---- step 5: apply (sparse: only the touched coordinates) -------
+        // ---- phase 5: apply (leader + every worker node) ----------------
+        // sparse on the leader: only the touched coordinates; mirrored on
+        // the workers through the protocol — each node applies α·Δβ_local
+        // from its own sweep output (bit-equal to the merged Δβ on its
+        // disjoint coordinates) and the same merged α·Δm
         let af = alpha as f32;
         scratch.delta_sp.add_scaled_into(beta, af);
         scratch.dmargins_sp.add_scaled_into(margins, af);
+        let delta_wire = if policy.f16_beta { Some(&scratch.delta_sp) } else { None };
+        timers.time("apply", || pool.apply_all(af, &scratch.dmargins_sp, delta_wire))?;
 
         let record = IterationRecord {
             iter,
@@ -522,6 +636,9 @@ impl<'a> FitDriver<'a> {
                     let rem = (1.0 - alpha) as f32;
                     scratch.delta_sp.add_scaled_into(beta, rem);
                     scratch.dmargins_sp.add_scaled_into(margins, rem);
+                    let delta_wire =
+                        if policy.f16_beta { Some(&scratch.delta_sp) } else { None };
+                    pool.apply_all(rem, &scratch.dmargins_sp, delta_wire)?;
                     self.f_prev = Some(f_full);
                 }
             }
@@ -601,7 +718,13 @@ impl<'a> FitDriver<'a> {
 /// β and margins are stored as f32 **bit patterns** (exact by construction
 /// — margins are incremental sums and must never be recomputed from β), the
 /// RNG state as hex u64 words; everything else round-trips through the
-/// crate's shortest-representation JSON numbers.
+/// crate's shortest-representation JSON numbers. Under the node protocol
+/// the checkpoint additionally captures the **worker-held shard states**
+/// (pulled over the protocol and verified against the leader's β at save
+/// time) and the **comm estimator state** (two EWMA shrink factors as f64
+/// bit patterns), so a resumed fit reproduces the uninterrupted run's
+/// exchange-strategy picks — and therefore its `comm_bytes` ledger —
+/// exactly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub lambda: f64,
@@ -620,6 +743,11 @@ pub struct Checkpoint {
     /// xoshiro256++ state for stochastic estimators (None for d-GLMNET,
     /// whose iteration is deterministic).
     pub rng: Option<[u64; 4]>,
+    /// Worker-held β shard per machine (empty for baselines and legacy
+    /// checkpoints — resume then re-gathers from `beta`).
+    pub shards: Vec<Vec<f32>>,
+    /// `(Δm, Δβ)` EWMA shrink factors of the comm byte estimator.
+    pub est_shrink: Option<(f64, f64)>,
 }
 
 const CHECKPOINT_KIND: &str = "fit-checkpoint";
@@ -628,10 +756,9 @@ fn f32_bits_json(values: &[f32]) -> Json {
     Json::Arr(values.iter().map(|&v| Json::Num(v.to_bits() as f64)).collect())
 }
 
-fn f32_bits_from_json(doc: &Json, key: &str) -> Result<Vec<f32>> {
-    doc.get(key)
-        .and_then(Json::as_arr)
-        .ok_or_else(|| DlrError::parse("checkpoint", format!("missing '{key}'")))?
+fn f32_bits_from_value(doc: &Json, key: &str) -> Result<Vec<f32>> {
+    doc.as_arr()
+        .ok_or_else(|| DlrError::parse("checkpoint", format!("'{key}' is not an array")))?
         .iter()
         .map(|v| {
             // reject corrupt entries instead of letting `as u32` saturate:
@@ -645,6 +772,13 @@ fn f32_bits_from_json(doc: &Json, key: &str) -> Result<Vec<f32>> {
             Ok(f32::from_bits(x as u32))
         })
         .collect()
+}
+
+fn f32_bits_from_json(doc: &Json, key: &str) -> Result<Vec<f32>> {
+    let arr = doc
+        .get(key)
+        .ok_or_else(|| DlrError::parse("checkpoint", format!("missing '{key}'")))?;
+    f32_bits_from_value(arr, key)
 }
 
 fn u64_hex(v: u64) -> Json {
@@ -694,6 +828,19 @@ impl Checkpoint {
                 None => Json::Null,
             },
         );
+        m.insert(
+            "shards_bits".into(),
+            Json::Arr(self.shards.iter().map(|s| f32_bits_json(s)).collect()),
+        );
+        m.insert(
+            "est_shrink".into(),
+            match self.est_shrink {
+                Some((dm, db)) => {
+                    Json::Arr(vec![u64_hex(dm.to_bits()), u64_hex(db.to_bits())])
+                }
+                None => Json::Null,
+            },
+        );
         Json::Obj(m)
     }
 
@@ -731,6 +878,22 @@ impl Checkpoint {
             }
             _ => None,
         };
+        // optional in legacy checkpoints: resume then re-gathers the shard
+        // states from β and starts the estimator fresh
+        let shards = match doc.get("shards_bits") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|item| f32_bits_from_value(item, "shards_bits"))
+                .collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        let est_shrink = match doc.get("est_shrink") {
+            Some(Json::Arr(words)) if words.len() == 2 => Some((
+                f64::from_bits(u64_from_hex(&words[0])?),
+                f64::from_bits(u64_from_hex(&words[1])?),
+            )),
+            _ => None,
+        };
         let ck = Self {
             lambda,
             n: num("n")? as usize,
@@ -744,11 +907,21 @@ impl Checkpoint {
             beta: f32_bits_from_json(doc, "beta_bits")?,
             margins: f32_bits_from_json(doc, "margins_bits")?,
             rng,
+            shards,
+            est_shrink,
         };
         if ck.beta.len() != ck.p || ck.margins.len() != ck.n {
             return Err(DlrError::parse(
                 "checkpoint",
                 "beta/margins length does not match recorded shape",
+            ));
+        }
+        if ck.shards.iter().map(Vec::len).sum::<usize>() != 0
+            && ck.shards.iter().map(Vec::len).sum::<usize>() != ck.p
+        {
+            return Err(DlrError::parse(
+                "checkpoint",
+                "shard states do not cover the feature space",
             ));
         }
         Ok(ck)
@@ -783,6 +956,8 @@ mod tests {
             beta: vec![0.1f32, -2.5e-8],
             margins: vec![1.5f32, -0.0, 3.25e10],
             rng: Some([1, u64::MAX, 0xDEAD_BEEF, 1 << 63]),
+            shards: vec![vec![0.1f32], vec![-2.5e-8f32]],
+            est_shrink: Some((0.3333333333333333, 1.0)),
         }
     }
 
@@ -799,6 +974,15 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         assert_eq!(ck.rng, back.rng);
+        for (a, b) in ck.shards.iter().zip(&back.shards) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        let (adm, adb) = ck.est_shrink.unwrap();
+        let (bdm, bdb) = back.est_shrink.unwrap();
+        assert_eq!(adm.to_bits(), bdm.to_bits());
+        assert_eq!(adb.to_bits(), bdb.to_bits());
         assert_eq!(ck, back);
     }
 
@@ -811,6 +995,19 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn legacy_checkpoint_without_shards_still_loads() {
+        // PR-2-era files have no shards_bits / est_shrink keys
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("shards_bits");
+            m.remove("est_shrink");
+        }
+        let ck = Checkpoint::from_json(&doc).unwrap();
+        assert!(ck.shards.is_empty());
+        assert!(ck.est_shrink.is_none());
     }
 
     #[test]
@@ -829,6 +1026,15 @@ mod tests {
             m.insert(
                 "margins_bits".into(),
                 Json::Arr(vec![Json::Num(123.7), Json::Num(0.0), Json::Num(0.0)]),
+            );
+        }
+        assert!(Checkpoint::from_json(&doc).is_err());
+        // shard states that don't cover the feature space are rejected
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert(
+                "shards_bits".into(),
+                Json::Arr(vec![Json::Arr(vec![Json::Num(0.0)])]),
             );
         }
         assert!(Checkpoint::from_json(&doc).is_err());

@@ -112,10 +112,30 @@ impl LeaderCompute {
         }
     }
 
+    /// Loss sum at the current margins — the only leader-side statistic
+    /// the protocol-era iteration needs (the worker nodes derive their own
+    /// `(w, z)` from their margins copies). Bit-identical to the loss
+    /// accumulation of [`LeaderCompute::stats_into`] (same element order,
+    /// same f64 ops).
+    pub fn loss(&mut self, margins: &[f32]) -> Result<f64> {
+        match self {
+            LeaderCompute::Native { y } => Ok(margins
+                .iter()
+                .zip(y.iter())
+                .map(|(&m, &yy)| log1pexp(-(yy as f64) * m as f64))
+                .sum()),
+            #[cfg(feature = "xla")]
+            LeaderCompute::Xla { .. } => {
+                // the stats kernel returns the loss alongside (w, z)
+                let (mut w, mut z) = (Vec::new(), Vec::new());
+                self.stats_into(margins, &mut w, &mut z)
+            }
+        }
+    }
+
     /// (w, z, loss_sum) at the current margins. Compatibility wrapper over
     /// [`LeaderCompute::stats_into`] — hot loops should hold reusable w/z
-    /// buffers (the solver keeps them in its `FitScratch`) and call that
-    /// instead.
+    /// buffers and call that instead.
     pub fn stats(&mut self, margins: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f64)> {
         let mut w = Vec::new();
         let mut z = Vec::new();

@@ -20,11 +20,14 @@
 //!    `FitControl::Stop` to end the fit early with `converged = false`.
 //!    The final iteration is also reported; its control value is ignored.
 //! 3. **[`FitDriver`]** — stepwise control for d-GLMNET: one
-//!    leader-stats → sweep → Δ-exchange → line-search iteration per
-//!    [`FitDriver::step`] call (the Δ-exchange routes through
-//!    `cluster::comm` — per-message wire codecs, the automatic reduce-Δm
-//!    vs allgather-Δβ strategy pick, worker-pool merges), so callers own
-//!    the loop. Driving `step()`
+//!    leader-stats → sweep → Δ-exchange → line-search → apply iteration
+//!    per [`FitDriver::step`] call, executed as send/recv phases of the
+//!    node protocol over each worker's `Transport` (in-process threads or
+//!    remote socket processes — same code path, bit-identical
+//!    trajectories). Workers hold their own β shard and margins; the
+//!    Δ-exchange routes through `cluster::comm` (per-message wire codecs,
+//!    the EWMA-sharpened reduce-Δm vs allgather-Δβ strategy pick,
+//!    worker-pool merges, gather-only Δβ accounting). Driving `step()`
 //!    to convergence is bit-identical (objective, β, comm-bytes ledger) to
 //!    the one-shot `fit()` path — `fit_lambda` *is* this driver run with a
 //!    no-op observer.
@@ -33,15 +36,19 @@
 //!
 //! [`FitDriver::checkpoint`] captures a [`Checkpoint`] after any completed
 //! iteration: λ, the iteration counter, the last objective, the cost
-//! accumulators (sim compute/comm seconds, comm bytes, wall seconds), and
+//! accumulators (sim compute/comm seconds, comm bytes, wall seconds),
 //! **β and margins as f32 bit patterns** — margins are incremental sums and
-//! are restored verbatim, never recomputed from β. Stochastic estimators
-//! (shotgun) additionally persist their xoshiro256++ state. Checkpoints
-//! round-trip through `runtime::artifacts`-style JSON
+//! are restored verbatim, never recomputed from β — plus the
+//! **worker-held β shard states** (pulled over the node protocol and
+//! verified bit-level against the leader at save time) and the comm
+//! estimator's EWMA state. Stochastic estimators (shotgun) additionally
+//! persist their xoshiro256++ state. Checkpoints round-trip through
+//! `runtime::artifacts`-style JSON
 //! ([`Checkpoint::save`]/[`Checkpoint::load`]), and resuming in a fresh
 //! process (`DGlmnetSolver::driver_from_checkpoint` on a solver built from
-//! the same dataset and config) reproduces the uninterrupted run's final
-//! objective exactly. Budgets ([`crate::config::FitBudget`]) are enforced
+//! the same dataset and config — in-process or socket transport alike)
+//! reproduces the uninterrupted run's final objective *and* `comm_bytes`
+//! ledger exactly. Budgets ([`crate::config::FitBudget`]) are enforced
 //! between iterations and span resume boundaries.
 
 pub mod dglmnet;

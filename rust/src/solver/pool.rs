@@ -1,160 +1,377 @@
-//! Long-lived worker threads, one per simulated machine (paper Alg 4 "do in
-//! parallel over M machines"). Each worker owns its feature shard and its
-//! engine — for the XLA engine that includes a private PJRT client, exactly
-//! like the paper's one-process-per-machine deployment. The leader talks to
-//! workers over channels; all Δ-state flows back through the (simulated)
-//! AllReduce in the driver.
+//! The leader's handle to its M worker nodes — every interaction goes
+//! through the serializable node protocol
+//! ([`NodeMessage`](crate::cluster::protocol::NodeMessage)) over a
+//! [`Transport`] per worker, so the same driver runs against in-process
+//! worker threads and against remote worker processes:
 //!
-//! The hot path is allocation-free at steady state: the shard-local β
-//! gather buffers and the sparse [`SweepResult`] output buffers round-trip
-//! through the request/reply channels, so every iteration reuses the same
-//! heap blocks instead of allocating `O(M·(n + p))` per sweep.
+//! * [`WorkerPool::spawn`] — one thread per shard (paper Alg 4 "do in
+//!   parallel over M machines"), each building its engine inside its own
+//!   thread (PJRT clients are thread-bound) and wrapping a
+//!   [`WorkerNode`]; messages move over in-process channels without
+//!   serialization, so the [`SweepResult`] buffers round-trip through the
+//!   `Sweep.recycle` slot and steady-state iterations allocate nothing.
+//! * [`WorkerPool::listen_and_accept`] — remote workers (launched with the
+//!   `dglmnet worker` CLI subcommand) connect over TCP; the handshake
+//!   validates each node's shard identity (machine index, dataset shape,
+//!   owned-column checksum) before admission.
 //!
-//! The pool doubles as the cluster's [`TaskExecutor`]: the `cluster::comm`
-//! collectives submit their tree-node merge jobs here, so AllReduce merge
-//! work runs on worker threads — the leader thread only stages payloads
-//! and charges the ledger ([`WorkerPool::tasks_executed`] counts the jobs,
-//! which the regression tests use to prove the off-thread contract).
+//! Workers hold their own β shard and margins (see
+//! [`crate::cluster::node`]): a sweep request carries only `(λ, ν)` and an
+//! apply carries only `(α, Δm)` — no `beta_local` gather, no `(w, z)`
+//! broadcast. The leader's global (β, margins) stay bit-identical to the
+//! union of the worker-held shards; [`WorkerPool::pull_states`] and
+//! [`WorkerPool::sync_full_state`] cross-check and restore that invariant
+//! at checkpoint/resume boundaries.
+//!
+//! The in-process pool doubles as the cluster's [`TaskExecutor`]: the
+//! `cluster::comm` collectives submit their tree-node merge jobs here, so
+//! AllReduce merge work runs on worker threads — the leader thread only
+//! stages payloads and charges the ledger ([`WorkerPool::tasks_executed`]
+//! counts the jobs, which the regression tests use to prove the off-thread
+//! contract). A socket pool has no local worker threads, so merge jobs run
+//! inline on the leader.
 
+use std::net::{TcpListener, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::cluster::comm::{Job, TaskExecutor};
+use crate::cluster::node::WorkerNode;
+use crate::cluster::partition::FeaturePartition;
+use crate::cluster::protocol::{crc_u32, NodeMessage};
+use crate::cluster::transport::{SocketTransport, Transport};
 use crate::config::TrainConfig;
-use crate::data::shuffle::FeatureShard;
+use crate::data::dataset::Dataset;
+use crate::data::shuffle::{shard_in_memory, FeatureShard};
 use crate::data::sparse::SparseVec;
-use crate::engine::{build_engine, SweepResult};
+use crate::engine::SweepResult;
 use crate::error::{DlrError, Result};
 
-enum Request {
-    Sweep {
-        w: Arc<Vec<f32>>,
-        z: Arc<Vec<f32>>,
-        /// reusable shard-local β gather (round-trips back in the reply)
-        beta_local: Vec<f32>,
-        /// reusable sparse output buffers (round-trip back in the reply)
-        out: SweepResult,
-        lam: f32,
-        nu: f32,
-    },
-    /// One [`TaskExecutor`] job (a tree-node merge); acknowledged on the
-    /// task channel when done.
+/// What travels to an in-process worker thread: a protocol message, or one
+/// [`TaskExecutor`] job (a tree-node merge) — the latter never exists on a
+/// real wire, it is the thread pool piggybacking on the worker threads.
+enum ThreadMsg {
+    Proto(NodeMessage),
     Task(Job),
-    Shutdown,
 }
 
-struct Reply {
-    machine: usize,
-    /// the gather buffer, returned for reuse
-    beta_local: Vec<f32>,
-    result: Result<SweepResult>,
+/// Leader-side endpoint of one in-process worker: protocol messages are
+/// wrapped in [`ThreadMsg`] on the way down, replies come back plain.
+struct LeaderLink {
+    tx: mpsc::Sender<ThreadMsg>,
+    rx: mpsc::Receiver<NodeMessage>,
 }
 
-/// Handle to the M worker threads.
+impl Transport for LeaderLink {
+    fn send(&mut self, msg: NodeMessage) -> Result<()> {
+        self.tx
+            .send(ThreadMsg::Proto(msg))
+            .map_err(|_| DlrError::Solver("worker thread hung up".into()))
+    }
+
+    fn recv(&mut self) -> Result<NodeMessage> {
+        self.rx
+            .recv()
+            .map_err(|_| DlrError::Solver("worker thread hung up".into()))
+    }
+
+    fn kind(&self) -> &'static str {
+        "in-process"
+    }
+}
+
+fn worker_err(k: usize, e: DlrError) -> DlrError {
+    DlrError::Solver(format!("worker {k}: {e}"))
+}
+
+/// Handle to the M worker nodes.
 pub struct WorkerPool {
-    txs: Vec<mpsc::Sender<Request>>,
-    rx: mpsc::Receiver<Reply>,
-    handles: Vec<JoinHandle<()>>,
+    links: Vec<Box<dyn Transport>>,
     /// Global feature ids per machine (ascending within a machine).
     pub global_cols: Vec<Vec<u32>>,
     pub engine_names: Vec<String>,
-    /// Reusable per-machine β gather buffers.
-    beta_bufs: Vec<Vec<f32>>,
+    /// Example count — the expected `dim` of every Δm payload.
+    n: usize,
+    transport: &'static str,
+    handles: Vec<JoinHandle<()>>,
+    /// Task-lane senders into the in-process worker threads (empty for a
+    /// socket pool — merges then run inline on the leader).
+    task_txs: Vec<mpsc::Sender<ThreadMsg>>,
     /// Completion acknowledgements for [`TaskExecutor`] jobs.
-    task_done_rx: mpsc::Receiver<()>,
+    task_done_rx: Option<mpsc::Receiver<()>>,
     /// Jobs the workers have executed (observable leader-offload proof).
     tasks_done: Arc<AtomicU64>,
 }
 
 impl WorkerPool {
-    /// Spawn one worker per shard; every worker builds its engine inside its
-    /// own thread (PJRT clients are thread-bound). Fails fast if any engine
-    /// fails to build.
+    /// Spawn one in-process worker per shard. Every worker builds its
+    /// engine inside its own thread and announces itself with the protocol
+    /// handshake; fails fast if any engine fails to build.
     pub fn spawn(
         cfg: &TrainConfig,
         shards: Vec<FeatureShard>,
-        n: usize,
+        y: &[f32],
+        p: usize,
         artifacts_dir: std::path::PathBuf,
     ) -> Result<Self> {
         let m = shards.len();
-        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
-        let (ready_tx, ready_rx) = mpsc::channel::<(usize, Result<String>)>();
+        let n = y.len();
+        // one shared copy of the labels for the whole pool (read-only)
+        let y = Arc::new(y.to_vec());
         let (task_done_tx, task_done_rx) = mpsc::channel::<()>();
         let tasks_done = Arc::new(AtomicU64::new(0));
-        let mut txs = Vec::with_capacity(m);
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(m);
+        let mut task_txs = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
         let mut global_cols = Vec::with_capacity(m);
 
         for shard in shards {
-            let machine = shard.machine;
             global_cols.push(shard.global_cols.clone());
-            let (tx, rx) = mpsc::channel::<Request>();
-            txs.push(tx);
-            let reply_tx = reply_tx.clone();
-            let ready_tx = ready_tx.clone();
+            let (tx, rx) = mpsc::channel::<ThreadMsg>();
+            let (reply_tx, reply_rx) = mpsc::channel::<NodeMessage>();
+            task_txs.push(tx.clone());
+            links.push(Box::new(LeaderLink { tx, rx: reply_rx }));
             let task_done_tx = task_done_tx.clone();
             let tasks_done = Arc::clone(&tasks_done);
             let cfg = cfg.clone();
+            let y = Arc::clone(&y);
             let dir = artifacts_dir.clone();
             handles.push(std::thread::spawn(move || {
-                let mut engine = match build_engine(&cfg, shard, n, &dir) {
-                    Ok(e) => {
-                        let _ = ready_tx.send((machine, Ok(e.name().to_string())));
-                        e
-                    }
+                let mut node = match WorkerNode::from_shard(&cfg, shard, y, p, &dir) {
+                    Ok(node) => node,
                     Err(e) => {
-                        let _ = ready_tx.send((machine, Err(e)));
+                        let _ = reply_tx.send(NodeMessage::Abort { message: e.to_string() });
                         return;
                     }
                 };
+                if reply_tx.send(node.join_message()).is_err() {
+                    return;
+                }
                 while let Ok(req) = rx.recv() {
                     match req {
-                        Request::Sweep { w, z, beta_local, mut out, lam, nu } => {
-                            let result = engine
-                                .sweep(&w, &z, &beta_local, lam, nu, &mut out)
-                                .map(|()| out);
-                            if reply_tx.send(Reply { machine, beta_local, result }).is_err() {
-                                return; // leader gone
-                            }
-                        }
-                        Request::Task(job) => {
+                        ThreadMsg::Task(job) => {
                             job();
                             tasks_done.fetch_add(1, Ordering::Relaxed);
                             if task_done_tx.send(()).is_err() {
                                 return; // leader gone
                             }
                         }
-                        Request::Shutdown => return,
+                        // the admission reply of the handshake — the
+                        // in-process join can only succeed
+                        ThreadMsg::Proto(NodeMessage::Welcome) => {}
+                        ThreadMsg::Proto(msg) => match node.handle(msg) {
+                            Ok(Some(reply)) => {
+                                if reply_tx.send(reply).is_err() {
+                                    return; // leader gone
+                                }
+                            }
+                            Ok(None) => return, // clean shutdown
+                            Err(e) => {
+                                let _ = reply_tx
+                                    .send(NodeMessage::Abort { message: e.to_string() });
+                                return;
+                            }
+                        },
                     }
                 }
             }));
         }
-        drop(ready_tx);
         drop(task_done_tx);
 
-        let mut engine_names = vec![String::new(); m];
-        for _ in 0..m {
-            let (machine, res) = ready_rx
-                .recv()
-                .map_err(|_| DlrError::Solver("worker died during startup".into()))?;
-            engine_names[machine] = res?;
-        }
-        Ok(Self {
-            txs,
-            rx: reply_rx,
+        let mut pool = Self {
+            links,
+            global_cols,
+            engine_names: vec![String::new(); m],
+            n,
+            transport: "in-process",
             handles,
+            task_txs,
+            task_done_rx: Some(task_done_rx),
+            tasks_done,
+        };
+        for k in 0..m {
+            let expected = &pool.global_cols[k];
+            let (jn, jp, features, checksum) =
+                (n as u32, p as u32, expected.len() as u32, crc_u32(expected));
+            let engine = handshake(pool.links[k].as_mut(), k, jn, jp, features, checksum)?;
+            pool.engine_names[k] = engine;
+        }
+        Ok(pool)
+    }
+
+    /// Bind `addr` and admit one remote worker per partition block — the
+    /// multi-process counterpart of [`WorkerPool::spawn`]. Workers are
+    /// launched separately (`dglmnet worker --connect <addr> --machine k`)
+    /// and may connect in any order; each is validated against the
+    /// partition (and, when the leader pins a concrete engine,
+    /// `expected_engine`) before admission. Stray peers — port scanners,
+    /// health probes, silent or garbage-sending connections, duplicate
+    /// joins from a retry race — are rejected and the leader keeps
+    /// waiting; a *valid worker* announcing a mismatched shard or a
+    /// startup failure is a hard error. Gives up after `timeout`.
+    pub fn listen_and_accept(
+        partition: &FeaturePartition,
+        n: usize,
+        expected_engine: Option<&str>,
+        addr: impl ToSocketAddrs,
+        timeout: Duration,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Self::accept(partition, n, expected_engine, listener, timeout)
+    }
+
+    /// Admit one remote worker per partition block on an already-bound
+    /// listener (lets callers bind port 0 and hand the concrete address to
+    /// the workers first).
+    pub fn accept(
+        partition: &FeaturePartition,
+        n: usize,
+        expected_engine: Option<&str>,
+        listener: TcpListener,
+        timeout: Duration,
+    ) -> Result<Self> {
+        let m = partition.machines();
+        let p = partition.n_features();
+        let global_cols: Vec<Vec<u32>> = (0..m).map(|k| partition.features_of(k)).collect();
+        let mut links: Vec<Option<Box<dyn Transport>>> = (0..m).map(|_| None).collect();
+        let mut engine_names = vec![String::new(); m];
+        listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + timeout;
+        let mut admitted = 0usize;
+        while admitted < m {
+            let stream = match listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(DlrError::Solver(format!(
+                            "only {admitted} of {m} workers connected within {:.0}s",
+                            timeout.as_secs_f64()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            stream.set_nonblocking(false)?;
+            // a peer that connects but never announces itself must not
+            // wedge admission past the deadline: bound the handshake read
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(100));
+            stream.set_read_timeout(Some(remaining))?;
+            let raw = stream.try_clone()?;
+            let mut link: Box<dyn Transport> = Box::new(SocketTransport::from_stream(stream)?);
+            // stray peers (scanners, probes, garbage, handshake races) are
+            // rejected without killing the accept loop — the deadline
+            // still bounds the total wait
+            let first = match link.recv() {
+                Ok(msg) => msg,
+                Err(e) => {
+                    eprintln!("[accept] rejected a peer that sent no valid join: {e}");
+                    continue;
+                }
+            };
+            match first {
+                NodeMessage::Join {
+                    machine,
+                    n: jn,
+                    p: jp,
+                    local_features,
+                    cols_checksum,
+                    engine,
+                } => {
+                    let k = machine as usize;
+                    if k >= m {
+                        let msg = format!("machine {k} out of range (M = {m})");
+                        eprintln!("[accept] rejected a peer: {msg}");
+                        let _ = link.send(NodeMessage::Abort { message: msg });
+                        continue;
+                    }
+                    if links[k].is_some() {
+                        // a worker whose connect_retry raced can open two
+                        // connections; keep the admitted one
+                        let msg = format!("machine {k} already connected");
+                        eprintln!("[accept] rejected a duplicate join: {msg}");
+                        let _ = link.send(NodeMessage::Abort { message: msg });
+                        continue;
+                    }
+                    // a *matching-machine* worker with the wrong shard or
+                    // engine is a real misconfiguration: fail loudly
+                    // instead of waiting out the deadline
+                    let expected = &global_cols[k];
+                    if jn as usize != n
+                        || jp as usize != p
+                        || local_features as usize != expected.len()
+                        || cols_checksum != crc_u32(expected)
+                    {
+                        let msg = format!(
+                            "worker {k} announced shard (n = {jn}, p = {jp}, features = \
+                             {local_features}) but the leader expects (n = {n}, p = {p}, \
+                             features = {}) — are the worker's data/partition flags \
+                             identical to the leader's?",
+                            expected.len()
+                        );
+                        let _ = link.send(NodeMessage::Abort { message: msg.clone() });
+                        return Err(DlrError::Solver(msg));
+                    }
+                    if let Some(want) = expected_engine {
+                        if engine != want {
+                            let msg = format!(
+                                "worker {k} runs the '{engine}' engine but the leader \
+                                 pins '{want}' — mixed engines would break the \
+                                 bit-identical trajectory contract"
+                            );
+                            let _ = link.send(NodeMessage::Abort { message: msg.clone() });
+                            return Err(DlrError::Solver(msg));
+                        }
+                    }
+                    link.send(NodeMessage::Welcome).map_err(|e| worker_err(k, e))?;
+                    // admitted: lift the handshake deadline for fit traffic
+                    raw.set_read_timeout(None)?;
+                    engine_names[k] = engine;
+                    links[k] = Some(link);
+                    admitted += 1;
+                }
+                NodeMessage::Abort { message } => {
+                    // an announced worker failure (e.g. its engine failed
+                    // to build): surface it instead of timing out
+                    return Err(DlrError::Solver(format!("a worker failed to start: {message}")))
+                }
+                other => {
+                    eprintln!(
+                        "[accept] rejected a peer that sent {} instead of join",
+                        other.name()
+                    );
+                    continue;
+                }
+            }
+        }
+        let links: Vec<Box<dyn Transport>> =
+            links.into_iter().map(|l| l.expect("all machines admitted")).collect();
+        Ok(Self {
+            links,
             global_cols,
             engine_names,
-            beta_bufs: vec![Vec::new(); m],
-            task_done_rx,
-            tasks_done,
+            n,
+            transport: "socket",
+            handles: Vec::new(),
+            task_txs: Vec::new(),
+            task_done_rx: None,
+            tasks_done: Arc::new(AtomicU64::new(0)),
         })
     }
 
     pub fn machines(&self) -> usize {
-        self.txs.len()
+        self.links.len()
+    }
+
+    /// `"in-process"` or `"socket"`.
+    pub fn transport_kind(&self) -> &'static str {
+        self.transport
     }
 
     /// Total [`TaskExecutor`] jobs the workers have executed — the
@@ -163,57 +380,169 @@ impl WorkerPool {
         self.tasks_done.load(Ordering::Relaxed)
     }
 
-    /// One parallel sweep across all machines (Alg 4 steps 1–2). `beta` is
-    /// the global coefficient vector; each worker receives its shard-local
-    /// gather. Results land in `out`, indexed by machine; the caller owns
-    /// (and should reuse) `out` — its sparse buffers round-trip through the
-    /// workers, so steady-state sweeps don't allocate.
-    pub fn sweep_all(
-        &mut self,
-        w: &Arc<Vec<f32>>,
-        z: &Arc<Vec<f32>>,
-        beta: &[f32],
-        lam: f32,
-        nu: f32,
-        out: &mut Vec<SweepResult>,
-    ) -> Result<()> {
+    /// One parallel sweep across all machines (Alg 4 steps 1–2): a send
+    /// phase (`Sweep { λ, ν }` to every node — the workers derive their
+    /// own `(w, z)` from their margins) followed by a recv phase. Results
+    /// land in `out`, indexed by machine; the caller owns (and should
+    /// reuse) `out` — its sparse buffers round-trip through the in-process
+    /// workers via the `recycle` slot, so steady-state sweeps don't
+    /// allocate.
+    pub fn sweep_all(&mut self, lam: f32, nu: f32, out: &mut Vec<SweepResult>) -> Result<()> {
         let m = self.machines();
         out.resize_with(m, SweepResult::default);
-        for (k, tx) in self.txs.iter().enumerate() {
-            let mut beta_local = std::mem::take(&mut self.beta_bufs[k]);
-            beta_local.clear();
-            beta_local.extend(self.global_cols[k].iter().map(|&g| beta[g as usize]));
-            tx.send(Request::Sweep {
-                w: Arc::clone(w),
-                z: Arc::clone(z),
-                beta_local,
-                out: std::mem::take(&mut out[k]),
-                lam,
-                nu,
-            })
-            .map_err(|_| DlrError::Solver(format!("worker {k} hung up")))?;
+        for (k, link) in self.links.iter_mut().enumerate() {
+            link.send(NodeMessage::Sweep { lam, nu, recycle: std::mem::take(&mut out[k]) })
+                .map_err(|e| worker_err(k, e))?;
         }
-        let mut first_err = None;
-        for _ in 0..m {
-            let reply = self
-                .rx
-                .recv()
-                .map_err(|_| DlrError::Solver("all workers hung up".into()))?;
-            self.beta_bufs[reply.machine] = reply.beta_local;
-            match reply.result {
-                Ok(res) => out[reply.machine] = res,
-                Err(e) => first_err = Some(first_err.unwrap_or(e)),
+        for (k, link) in self.links.iter_mut().enumerate() {
+            match link.recv().map_err(|e| worker_err(k, e))? {
+                NodeMessage::Swept { result } => {
+                    // a rogue or version-skewed peer must error cleanly,
+                    // never flow malformed dims into the merge (the codec
+                    // only guarantees indices < the frame's own dim)
+                    if result.delta_local.dim != self.global_cols[k].len()
+                        || result.dmargins.dim != self.n
+                    {
+                        return Err(DlrError::Solver(format!(
+                            "worker {k} returned a sweep of shape (Δβ dim {}, Δm dim {}) \
+                             but owns {} features over {} examples",
+                            result.delta_local.dim,
+                            result.dmargins.dim,
+                            self.global_cols[k].len(),
+                            self.n
+                        )));
+                    }
+                    out[k] = result
+                }
+                NodeMessage::Abort { message } => {
+                    return Err(DlrError::Solver(format!("worker {k} failed mid-sweep: {message}")))
+                }
+                other => {
+                    return Err(DlrError::Solver(format!(
+                        "worker {k}: expected swept, got {}",
+                        other.name()
+                    )))
+                }
             }
         }
-        match first_err {
-            None => Ok(()),
-            Some(e) => Err(e),
-        }
+        Ok(())
     }
 
-    /// Remap a shard-local sparse Δβ to global feature ids (the allreduce
-    /// contribution of Alg 4 step 3/4) — O(nnz), replacing the old
-    /// `scatter_delta`'s O(p) densification. `out` is reused by the caller.
+    /// The apply phase (Alg 4 step 5): every node applies `α·Δβ_local` to
+    /// its own β shard and `α·Δm` to its margins. `delta` (the merged
+    /// global Δβ) travels only when a lossy β wire is active — see
+    /// [`NodeMessage::Apply`].
+    pub fn apply_all(
+        &mut self,
+        alpha: f32,
+        dmargins: &Arc<SparseVec>,
+        delta: Option<&Arc<SparseVec>>,
+    ) -> Result<()> {
+        for (k, link) in self.links.iter_mut().enumerate() {
+            link.send(NodeMessage::Apply {
+                alpha,
+                dmargins: Arc::clone(dmargins),
+                delta: delta.cloned(),
+            })
+            .map_err(|e| worker_err(k, e))?;
+        }
+        self.expect_acks("apply")
+    }
+
+    /// Push the full (β, margins) state: each node receives its shard's
+    /// slice of `beta` and the complete margins, bit-for-bit (warmstart
+    /// installs, resets, legacy-checkpoint resumes).
+    pub fn sync_full_state(&mut self, beta: &[f32], margins: &[f32]) -> Result<()> {
+        let margins = Arc::new(margins.to_vec());
+        for k in 0..self.links.len() {
+            let beta_local: Vec<f32> =
+                self.global_cols[k].iter().map(|&g| beta[g as usize]).collect();
+            self.links[k]
+                .send(NodeMessage::SetState { beta_local, margins: Arc::clone(&margins) })
+                .map_err(|e| worker_err(k, e))?;
+        }
+        self.expect_acks("set-state")
+    }
+
+    /// Push checkpointed per-machine shard states verbatim (the resume
+    /// path that restores exactly what [`WorkerPool::pull_states`]
+    /// captured).
+    pub fn push_shard_states(&mut self, shards: &[Vec<f32>], margins: &[f32]) -> Result<()> {
+        if shards.len() != self.links.len() {
+            return Err(DlrError::Solver(format!(
+                "checkpoint has {} shard states but the cluster has {} workers",
+                shards.len(),
+                self.links.len()
+            )));
+        }
+        let margins = Arc::new(margins.to_vec());
+        for (k, shard) in shards.iter().enumerate() {
+            if shard.len() != self.global_cols[k].len() {
+                return Err(DlrError::Solver(format!(
+                    "shard state {k} has {} coefficients but machine {k} owns {} features",
+                    shard.len(),
+                    self.global_cols[k].len()
+                )));
+            }
+            self.links[k]
+                .send(NodeMessage::SetState {
+                    beta_local: shard.clone(),
+                    margins: Arc::clone(&margins),
+                })
+                .map_err(|e| worker_err(k, e))?;
+        }
+        self.expect_acks("set-state")
+    }
+
+    /// Pull every node's shard state: its β shard in full plus a checksum
+    /// of its margins (checkpoint capture + sync verification).
+    pub fn pull_states(&mut self) -> Result<Vec<(Vec<f32>, u64)>> {
+        for (k, link) in self.links.iter_mut().enumerate() {
+            link.send(NodeMessage::GetState).map_err(|e| worker_err(k, e))?;
+        }
+        let mut states = Vec::with_capacity(self.links.len());
+        for (k, link) in self.links.iter_mut().enumerate() {
+            match link.recv().map_err(|e| worker_err(k, e))? {
+                NodeMessage::State { beta_local, margins_crc } => {
+                    states.push((beta_local, margins_crc))
+                }
+                NodeMessage::Abort { message } => {
+                    return Err(DlrError::Solver(format!("worker {k} failed: {message}")))
+                }
+                other => {
+                    return Err(DlrError::Solver(format!(
+                        "worker {k}: expected state, got {}",
+                        other.name()
+                    )))
+                }
+            }
+        }
+        Ok(states)
+    }
+
+    fn expect_acks(&mut self, what: &str) -> Result<()> {
+        for (k, link) in self.links.iter_mut().enumerate() {
+            match link.recv().map_err(|e| worker_err(k, e))? {
+                NodeMessage::Ack => {}
+                NodeMessage::Abort { message } => {
+                    return Err(DlrError::Solver(format!(
+                        "worker {k} failed during {what}: {message}"
+                    )))
+                }
+                other => {
+                    return Err(DlrError::Solver(format!(
+                        "worker {k}: expected ack for {what}, got {}",
+                        other.name()
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Remap a shard-local sparse Δβ to global feature ids (the gather
+    /// contribution of Alg 4 step 3/4) — O(nnz). `out` is reused by the
+    /// caller.
     pub fn delta_to_global(
         &self,
         machine: usize,
@@ -232,32 +561,90 @@ impl WorkerPool {
     }
 }
 
+/// Validate one node's `Join` announcement and admit it. Shared by the
+/// in-process spawn; the socket accept inlines the same checks because it
+/// must first learn *which* machine connected.
+fn handshake(
+    link: &mut dyn Transport,
+    machine: usize,
+    n: u32,
+    p: u32,
+    local_features: u32,
+    cols_checksum: u64,
+) -> Result<String> {
+    match link.recv().map_err(|e| worker_err(machine, e))? {
+        NodeMessage::Join {
+            machine: jm,
+            n: jn,
+            p: jp,
+            local_features: jf,
+            cols_checksum: jc,
+            engine,
+        } => {
+            let ok = jm as usize == machine
+                && jn == n
+                && jp == p
+                && jf == local_features
+                && jc == cols_checksum;
+            if !ok {
+                let msg = format!(
+                    "worker {jm} announced shard (n = {jn}, p = {jp}, features = {jf}) \
+                     but the leader expects machine {machine} with (n = {n}, p = {p}, \
+                     features = {local_features}) — are the worker's data/partition \
+                     flags identical to the leader's?"
+                );
+                let _ = link.send(NodeMessage::Abort { message: msg.clone() });
+                return Err(DlrError::Solver(msg));
+            }
+            link.send(NodeMessage::Welcome)
+                .map_err(|e| worker_err(machine, e))?;
+            Ok(engine)
+        }
+        NodeMessage::Abort { message } => Err(DlrError::Solver(format!(
+            "worker {machine} failed to start: {message}"
+        ))),
+        other => Err(DlrError::Solver(format!(
+            "worker {machine}: expected join, got {}",
+            other.name()
+        ))),
+    }
+}
+
 impl TaskExecutor for WorkerPool {
-    /// Distribute the jobs round-robin over the worker threads and block
-    /// until every one has been acknowledged. A worker that died during
-    /// startup gets its share run inline rather than losing the merge.
+    /// Distribute the jobs round-robin over the in-process worker threads
+    /// and block until every one has been acknowledged. A worker that died
+    /// gets its share run inline rather than losing the merge; a socket
+    /// pool (no local threads) runs everything inline.
     fn run_all(&self, jobs: Vec<Job>) {
-        let m = self.txs.len();
+        if self.task_txs.is_empty() {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let m = self.task_txs.len();
         let mut pending = 0usize;
         for (j, job) in jobs.into_iter().enumerate() {
-            match self.txs[j % m].send(Request::Task(job)) {
+            match self.task_txs[j % m].send(ThreadMsg::Task(job)) {
                 Ok(()) => pending += 1,
-                Err(mpsc::SendError(Request::Task(job))) => job(),
-                Err(_) => unreachable!("send error returns the request we sent"),
+                Err(mpsc::SendError(ThreadMsg::Task(job))) => job(),
+                Err(_) => unreachable!("send error returns the message we sent"),
             }
         }
+        let done = self
+            .task_done_rx
+            .as_ref()
+            .expect("in-process pool keeps its task-ack channel");
         for _ in 0..pending {
-            self.task_done_rx
-                .recv()
-                .expect("worker pool dropped a task acknowledgement");
+            done.recv().expect("worker pool dropped a task acknowledgement");
         }
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        for tx in &self.txs {
-            let _ = tx.send(Request::Shutdown);
+        for link in &mut self.links {
+            let _ = link.send(NodeMessage::Shutdown);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -265,37 +652,63 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Launch one socket worker *thread* per partition block of `ds`, each
+/// serving a [`WorkerNode`] over a real TCP connection to `addr` — the
+/// single-binary harness the transport equivalence tests, benches, and
+/// examples use. Real deployments run `dglmnet worker` processes instead;
+/// the bytes on the wire are identical.
+pub fn spawn_local_socket_workers(
+    cfg: &TrainConfig,
+    ds: &Dataset,
+    addr: std::net::SocketAddr,
+) -> Vec<JoinHandle<Result<()>>> {
+    let partition = crate::solver::dglmnet::DGlmnetSolver::partition_for(ds, cfg);
+    let shards = shard_in_memory(&ds.x, &partition);
+    let p = ds.n_features();
+    let y = Arc::new(ds.y.clone());
+    shards
+        .into_iter()
+        .map(|shard| {
+            let cfg = cfg.clone();
+            let y = Arc::clone(&y);
+            std::thread::spawn(move || {
+                let artifacts = crate::runtime::default_artifacts_dir();
+                let mut node = WorkerNode::from_shard(&cfg, shard, y, p, &artifacts)?;
+                let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
+                node.serve(&mut t)
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::partition::{FeaturePartition, PartitionStrategy};
     use crate::config::{EngineKind, TrainConfig};
-    use crate::data::shuffle::shard_in_memory;
     use crate::data::synth;
-    use crate::solver::quadratic::stats_native;
 
     #[test]
     fn pool_sweeps_match_single_engine() {
         let ds = synth::dna_like(300, 40, 5, 21);
-        let n = ds.n_examples();
         let cfg = TrainConfig::builder()
             .machines(3)
             .engine(EngineKind::Native)
             .build();
         let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 40, 3, None);
         let shards = shard_in_memory(&ds.x, &part);
-        let mut pool = WorkerPool::spawn(&cfg, shards, n, "artifacts".into()).unwrap();
+        let mut pool =
+            WorkerPool::spawn(&cfg, shards, &ds.y, 40, "artifacts".into()).unwrap();
         assert_eq!(pool.machines(), 3);
         assert_eq!(pool.engine_names, vec!["native"; 3]);
+        assert_eq!(pool.transport_kind(), "in-process");
 
-        let margins = vec![0f32; n];
-        let (w, z, _) = stats_native(&margins, &ds.y);
-        let (w, z) = (Arc::new(w), Arc::new(z));
-        let beta = vec![0f32; 40];
+        // cold state: workers derive (w, z) from their own zero margins
         let mut results = Vec::new();
-        pool.sweep_all(&w, &z, &beta, 0.2, 1e-6, &mut results).unwrap();
+        pool.sweep_all(0.2, 1e-6, &mut results).unwrap();
         assert_eq!(results.len(), 3);
         // sum of dmargins across machines must equal the full delta margin
+        let n = ds.n_examples();
         let mut dm_sum = vec![0f64; n];
         for r in &results {
             for (i, d) in r.dmargins.iter() {
@@ -325,9 +738,14 @@ mod tests {
             .engine(EngineKind::Native)
             .build();
         let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 10, 2, None);
-        let pool =
-            WorkerPool::spawn(&cfg, shard_in_memory(&ds.x, &part), 60, "artifacts".into())
-                .unwrap();
+        let pool = WorkerPool::spawn(
+            &cfg,
+            shard_in_memory(&ds.x, &part),
+            &ds.y,
+            10,
+            "artifacts".into(),
+        )
+        .unwrap();
         let caller = std::thread::current().id();
         let (tx, rx) = std::sync::mpsc::channel();
         let jobs: Vec<crate::cluster::comm::Job> = (0..6)
@@ -356,27 +774,59 @@ mod tests {
             .engine(EngineKind::Native)
             .build();
         let part = FeaturePartition::build(PartitionStrategy::Contiguous, 20, 2, None);
-        let mut pool =
-            WorkerPool::spawn(&cfg, shard_in_memory(&ds.x, &part), 100, "artifacts".into())
-                .unwrap();
-        let margins = vec![0f32; 100];
-        let (w, z, _) = stats_native(&margins, &ds.y);
-        let (w, z) = (Arc::new(w), Arc::new(z));
-        let beta = vec![0f32; 20];
+        let mut pool = WorkerPool::spawn(
+            &cfg,
+            shard_in_memory(&ds.x, &part),
+            &ds.y,
+            20,
+            "artifacts".into(),
+        )
+        .unwrap();
         let mut results = Vec::new();
         let mut first: Option<Vec<SweepResult>> = None;
         for _ in 0..5 {
-            pool.sweep_all(&w, &z, &beta, 0.1, 1e-6, &mut results).unwrap();
+            // no Apply between sweeps: worker state is unchanged, so the
+            // recycled buffers must reproduce identical results
+            pool.sweep_all(0.1, 1e-6, &mut results).unwrap();
             assert_eq!(results.len(), 2);
             match &first {
                 None => first = Some(results.clone()),
                 Some(f) => {
-                    // same inputs through recycled buffers => same outputs
                     for (a, b) in f.iter().zip(&results) {
                         assert_eq!(a.delta_local, b.delta_local);
                         assert_eq!(a.dmargins, b.dmargins);
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn state_round_trip_through_the_protocol() {
+        let ds = synth::dna_like(80, 12, 3, 24);
+        let cfg = TrainConfig::builder()
+            .machines(3)
+            .engine(EngineKind::Native)
+            .build();
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 12, 3, None);
+        let mut pool = WorkerPool::spawn(
+            &cfg,
+            shard_in_memory(&ds.x, &part),
+            &ds.y,
+            12,
+            "artifacts".into(),
+        )
+        .unwrap();
+        let beta: Vec<f32> = (0..12).map(|j| j as f32 * 0.5 - 2.0).collect();
+        let margins: Vec<f32> = (0..80).map(|i| (i as f32).cos()).collect();
+        pool.sync_full_state(&beta, &margins).unwrap();
+        let states = pool.pull_states().unwrap();
+        assert_eq!(states.len(), 3);
+        let crc = crate::cluster::protocol::crc_f32(&margins);
+        for (k, (beta_local, margins_crc)) in states.iter().enumerate() {
+            assert_eq!(*margins_crc, crc, "machine {k}");
+            for (l, &g) in pool.global_cols[k].iter().enumerate() {
+                assert_eq!(beta_local[l].to_bits(), beta[g as usize].to_bits());
             }
         }
     }

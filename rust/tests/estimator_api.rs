@@ -107,7 +107,7 @@ fn checkpoint_resume_reproduces_uninterrupted_objective_exactly() {
                 StepOutcome::Finished { .. } => panic!("finished before the checkpoint"),
             }
         }
-        driver.checkpoint()
+        driver.checkpoint().unwrap()
     };
     assert_eq!(ck.iter, 3);
 
@@ -146,7 +146,7 @@ fn checkpoint_rejects_mismatched_solver() {
     let ds = synth::dna_like(200, 20, 4, 104);
     let cfg = native_cfg(2, 0.5);
     let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
-    let ck = solver.driver(0.5).checkpoint();
+    let ck = solver.driver(0.5).checkpoint().unwrap();
     let other = synth::dna_like(150, 30, 4, 105);
     let mut wrong = DGlmnetSolver::from_dataset(&other, &native_cfg(2, 0.5)).unwrap();
     assert!(wrong.driver_from_checkpoint(&ck).is_err());
@@ -268,7 +268,7 @@ fn budget_spans_resume_boundaries() {
         for _ in 0..2 {
             assert!(matches!(driver.step().unwrap(), StepOutcome::Progress(_)));
         }
-        driver.checkpoint()
+        driver.checkpoint().unwrap()
     };
     let mut b = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
     let fit = b

@@ -1,0 +1,375 @@
+//! Acceptance tests for the transport-agnostic node protocol (PR 4):
+//!
+//! * in-process vs socket transports produce **bit-identical** β
+//!   trajectories (objective, per-iteration records, comm ledger) on
+//!   dna-like and webspam-like shapes;
+//! * under worker-held β shards the merged-Δβ broadcast no longer exists,
+//!   so `comm_bytes` strictly decreases vs the PR-3 accounting (pinned via
+//!   the `charge_beta_broadcast` compat ablation) on webspam-like at
+//!   λ_max/4 with M = 8;
+//! * transport faults surface cleanly: a worker that dies mid-sweep and a
+//!   worker that sends malformed frames both produce a prompt `Err` on the
+//!   leader — no hang, no partial merge applied;
+//! * checkpoints capture the worker-held shard state, and a resume
+//!   mid-path under `transport = socket` reproduces the uninterrupted
+//!   run's objective and comm ledger exactly.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use dglmnet::cluster::protocol::{crc_u32, NodeMessage};
+use dglmnet::cluster::transport::SocketTransport;
+use dglmnet::cluster::WorkerNode;
+use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
+use dglmnet::data::dataset::Dataset;
+use dglmnet::data::synth;
+use dglmnet::solver::pool::spawn_local_socket_workers;
+use dglmnet::solver::{
+    lambda_max, Checkpoint, DGlmnetSolver, FitResult, NoopObserver, StepOutcome,
+};
+
+fn native_cfg(m: usize, lambda: f64, max_iter: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(max_iter)
+        .build()
+}
+
+/// Run one fit over real TCP sockets: bind an ephemeral port, launch one
+/// worker thread per partition block (each serving a `WorkerNode` over its
+/// own connection), fit, and join the workers.
+fn socket_fit(ds: &Dataset, cfg: &TrainConfig, lambda: f64) -> (FitResult, Vec<f32>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers = spawn_local_socket_workers(cfg, ds, addr);
+    let mut solver = DGlmnetSolver::from_dataset_socket(ds, cfg, listener).unwrap();
+    assert_eq!(solver.transport_kind(), "socket");
+    let fit = solver.fit_lambda(lambda).unwrap();
+    let beta = solver.beta.clone();
+    drop(solver); // sends Shutdown to every node
+    for h in workers {
+        h.join().expect("worker thread panicked").unwrap();
+    }
+    (fit, beta)
+}
+
+fn in_process_fit(ds: &Dataset, cfg: &TrainConfig, lambda: f64) -> (FitResult, Vec<f32>) {
+    let mut solver = DGlmnetSolver::from_dataset(ds, cfg).unwrap();
+    assert_eq!(solver.transport_kind(), "in-process");
+    let fit = solver.fit_lambda(lambda).unwrap();
+    let beta = solver.beta.clone();
+    (fit, beta)
+}
+
+/// The headline acceptance pin: the transport must not change a single bit
+/// of the trajectory — objectives, per-iteration records, the comm ledger,
+/// and the final β all match exactly on both dataset shapes.
+#[test]
+fn socket_and_in_process_trajectories_are_bit_identical() {
+    let problems = [
+        ("dna-like", synth::dna_like(600, 50, 5, 701), 8.0),
+        ("webspam-like", synth::webspam_like(400, 6_000, 10, 702), 4.0),
+    ];
+    for (name, ds, div) in problems {
+        let lam = lambda_max(&ds) / div;
+        let cfg = native_cfg(4, lam, 15);
+        let (fit_local, beta_local) = in_process_fit(&ds, &cfg, lam);
+        let (fit_socket, beta_socket) = socket_fit(&ds, &cfg, lam);
+
+        assert_eq!(fit_local.iterations, fit_socket.iterations, "{name}");
+        assert_eq!(
+            fit_local.objective.to_bits(),
+            fit_socket.objective.to_bits(),
+            "{name}: objectives diverged"
+        );
+        assert_eq!(fit_local.comm_bytes, fit_socket.comm_bytes, "{name}: ledger diverged");
+        assert_eq!(fit_local.trace.len(), fit_socket.trace.len(), "{name}");
+        for (a, b) in fit_local.trace.iter().zip(&fit_socket.trace) {
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{name} iter {}", a.iter);
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{name} iter {}", a.iter);
+            assert_eq!(a.comm_bytes, b.comm_bytes, "{name} iter {}", a.iter);
+            assert_eq!(a.exchange, b.exchange, "{name} iter {}", a.iter);
+        }
+        assert_eq!(beta_local.len(), beta_socket.len(), "{name}");
+        for (j, (a, b)) in beta_local.iter().zip(&beta_socket).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name} beta[{j}]");
+        }
+    }
+}
+
+/// PR-4 acceptance: with worker-held β shards the per-sweep merged-Δβ
+/// broadcast is gone, so total `comm_bytes` strictly decreases versus the
+/// PR-3 accounting (reproduced bit-for-bit by the `charge_beta_broadcast`
+/// ablation) — same trajectory, strictly cheaper wire — on the webspam
+/// regime at λ_max/4 with M = 8.
+#[test]
+fn worker_held_shards_strictly_cut_comm_bytes_vs_pr3() {
+    let ds = synth::webspam_like(800, 16_000, 10, 703);
+    let lam = lambda_max(&ds) / 4.0;
+    let cfg_new = native_cfg(8, lam, 25);
+    let mut cfg_pr3 = native_cfg(8, lam, 25);
+    cfg_pr3.charge_beta_broadcast = true;
+
+    let mut new = DGlmnetSolver::from_dataset(&ds, &cfg_new).unwrap();
+    let fit_new = new.fit(None).unwrap();
+    let mut pr3 = DGlmnetSolver::from_dataset(&ds, &cfg_pr3).unwrap();
+    let fit_pr3 = pr3.fit(None).unwrap();
+
+    // accounting changes only: the trajectories are bit-identical
+    assert_eq!(fit_new.iterations, fit_pr3.iterations);
+    for (a, b) in fit_new.trace.iter().zip(&fit_pr3.trace) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "iter {}", a.iter);
+    }
+    assert_eq!(new.beta, pr3.beta);
+
+    // the strict decrease, and a meaningful one (the broadcast retrace was
+    // the majority of every allgather-Δβ exchange's bytes)
+    assert!(fit_new.comm_bytes > 0);
+    assert!(
+        fit_new.comm_bytes < fit_pr3.comm_bytes,
+        "gather-only accounting must strictly cut bytes: {} vs {}",
+        fit_new.comm_bytes,
+        fit_pr3.comm_bytes
+    );
+    assert!(
+        fit_new.comm_bytes * 3 <= fit_pr3.comm_bytes * 2,
+        "expected at least a third of the traffic gone, got {} vs {}",
+        fit_new.comm_bytes,
+        fit_pr3.comm_bytes
+    );
+    // the pin covers the regime it claims: the cost model actually picked
+    // allgather-Δβ here
+    assert!(fit_new
+        .trace
+        .iter()
+        .any(|r| r.exchange == Some(ExchangeStrategy::AllGatherBeta)));
+}
+
+// ---------------------------------------------------------------------------
+// fault handling
+// ---------------------------------------------------------------------------
+
+/// A well-behaved worker thread for one machine; tolerates the leader
+/// erroring out (its serve result is ignored).
+fn good_worker(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    machine: usize,
+    addr: SocketAddr,
+) -> JoinHandle<()> {
+    let shard = DGlmnetSolver::shard_for(ds, cfg, machine);
+    let y = std::sync::Arc::new(ds.y.clone());
+    let p = ds.n_features();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let mut node =
+            WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
+                .unwrap();
+        let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
+        let _ = node.serve(&mut t);
+    })
+}
+
+fn read_frame(stream: &mut TcpStream) -> Vec<u8> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len).unwrap();
+    let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+    stream.read_exact(&mut body).unwrap();
+    body
+}
+
+fn write_frame(stream: &mut TcpStream, body: &[u8]) {
+    stream.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    stream.write_all(body).unwrap();
+    stream.flush().unwrap();
+}
+
+fn join_body(ds: &Dataset, cfg: &TrainConfig, machine: usize) -> Vec<u8> {
+    let partition = DGlmnetSolver::partition_for(ds, cfg);
+    let cols = partition.features_of(machine);
+    NodeMessage::Join {
+        machine: machine as u32,
+        n: ds.n_examples() as u32,
+        p: ds.n_features() as u32,
+        local_features: cols.len() as u32,
+        cols_checksum: crc_u32(&cols),
+        engine: "native".into(),
+    }
+    .encode()
+}
+
+/// A worker process dying mid-sweep must surface as a clean, prompt error
+/// on the leader — no hang, and no partial merge is ever applied (the
+/// iteration errors out before the exchange).
+#[test]
+fn dead_worker_mid_sweep_surfaces_a_clean_error() {
+    let ds = synth::dna_like(200, 20, 4, 704);
+    let cfg = native_cfg(2, 0.2, 10);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let good = good_worker(&ds, &cfg, 0, addr);
+    let join = join_body(&ds, &cfg, 1);
+    let rogue = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, &join);
+        let _welcome = read_frame(&mut s);
+        let _sweep = read_frame(&mut s);
+        // die without replying — mid-sweep from the leader's view
+    });
+
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    let before = solver.beta.clone();
+    let err = solver.fit_lambda(0.2).unwrap_err().to_string();
+    assert!(err.contains("worker 1"), "{err}");
+    assert!(err.contains("hung up"), "{err}");
+    // no partial merge was applied to the leader state
+    assert_eq!(solver.beta, before);
+    drop(solver);
+    rogue.join().unwrap();
+    good.join().unwrap();
+}
+
+/// Malformed frames error through the protocol decoder exactly like the
+/// codec truncation tests — a parse error naming the problem, not a panic
+/// or a silently-wrong merge.
+#[test]
+fn malformed_frames_from_a_worker_error_cleanly() {
+    let ds = synth::dna_like(200, 20, 4, 705);
+    let cfg = native_cfg(2, 0.2, 10);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let good = good_worker(&ds, &cfg, 0, addr);
+    let join = join_body(&ds, &cfg, 1);
+    let rogue = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, &join);
+        let _welcome = read_frame(&mut s);
+        let _sweep = read_frame(&mut s);
+        // reply with a frame whose tag does not exist
+        write_frame(&mut s, &[77, 1, 2]);
+        // hold the socket open until the leader has had its say
+        let _ = read_frame(&mut s);
+    });
+
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    let err = solver.fit_lambda(0.2).unwrap_err().to_string();
+    assert!(err.contains("unknown message tag"), "{err}");
+    drop(solver); // Shutdown frame unblocks the rogue's final read
+    rogue.join().unwrap();
+    good.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint / resume with worker-held state
+// ---------------------------------------------------------------------------
+
+/// The checkpoint captures the worker-held shard states (pulled over the
+/// protocol) and they agree bit-for-bit with the leader's global β.
+#[test]
+fn checkpoint_captures_worker_shard_state() {
+    let ds = synth::dna_like(300, 30, 4, 706);
+    let lam = lambda_max(&ds) / 16.0;
+    let cfg = native_cfg(3, lam, 20);
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let ck = {
+        let mut driver = solver.driver(lam);
+        for _ in 0..2 {
+            assert!(matches!(driver.step().unwrap(), StepOutcome::Progress(_)));
+        }
+        driver.checkpoint().unwrap()
+    };
+    assert_eq!(ck.shards.len(), 3);
+    assert!(ck.est_shrink.is_some());
+    let partition = solver.partition().clone();
+    for (k, shard) in ck.shards.iter().enumerate() {
+        let cols = partition.features_of(k);
+        assert_eq!(shard.len(), cols.len(), "machine {k}");
+        for (l, &g) in cols.iter().enumerate() {
+            assert_eq!(
+                shard[l].to_bits(),
+                ck.beta[g as usize].to_bits(),
+                "machine {k} local {l}"
+            );
+        }
+    }
+}
+
+/// Satellite acceptance: interrupt a socket-transport fit mid-path,
+/// checkpoint (shard states included), resume into a *fresh* socket
+/// cluster, and reproduce the uninterrupted socket run — objective and
+/// comm ledger — exactly.
+#[test]
+fn socket_resume_mid_path_is_bit_exact() {
+    let ds = synth::dna_like(500, 40, 5, 707);
+    let lam = lambda_max(&ds) / 64.0; // plenty of iterations
+    let cfg = native_cfg(3, lam, 40);
+
+    // the uninterrupted reference, over sockets
+    let (fit_whole, beta_whole) = socket_fit(&ds, &cfg, lam);
+    assert!(fit_whole.iterations > 3, "need a fit long enough to interrupt");
+
+    // partial run over sockets: 3 iterations, checkpoint, simulated crash
+    let ck = {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let workers = spawn_local_socket_workers(&cfg, &ds, addr);
+        let mut partial = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+        let ck = {
+            let mut driver = partial.driver(lam);
+            for _ in 0..3 {
+                match driver.step().unwrap() {
+                    StepOutcome::Progress(_) => {}
+                    StepOutcome::Finished { .. } => panic!("finished before the checkpoint"),
+                }
+            }
+            driver.checkpoint().unwrap()
+        };
+        drop(partial);
+        for h in workers {
+            h.join().unwrap().unwrap();
+        }
+        ck
+    };
+    assert_eq!(ck.iter, 3);
+    assert_eq!(ck.shards.len(), 3);
+
+    // round-trip through disk, then resume in a fresh socket cluster
+    let path = std::env::temp_dir()
+        .join(format!("dglmnet_socket_resume_{}.json", std::process::id()));
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck, loaded);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers = spawn_local_socket_workers(&cfg, &ds, addr);
+    let mut fresh = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    let fit_resumed = fresh
+        .driver_from_checkpoint(&loaded)
+        .unwrap()
+        .run(&mut NoopObserver)
+        .unwrap();
+    let beta_resumed = fresh.beta.clone();
+    drop(fresh);
+    for h in workers {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(
+        fit_whole.objective.to_bits(),
+        fit_resumed.objective.to_bits(),
+        "resumed objective must be exact: {} vs {}",
+        fit_whole.objective,
+        fit_resumed.objective
+    );
+    assert_eq!(fit_whole.iterations, fit_resumed.iterations);
+    assert_eq!(fit_whole.comm_bytes, fit_resumed.comm_bytes);
+    for (j, (a, b)) in beta_whole.iter().zip(&beta_resumed).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{j}]");
+    }
+}
