@@ -22,7 +22,7 @@ use dglmnet::solver::{lambda_max, RegPath};
 fn main() -> dglmnet::Result<()> {
     let machines = 4;
     let ds = synth::dna_like(20_000, 400, 12, 2024);
-    let split = ds.split(0.8, 2024);
+    let split = ds.split(0.8, 2024).unwrap();
     let s = split.train.summary();
     println!(
         "dataset {}: n = {} / {} test, p = {}, nnz = {} (avg {:.1}/row)",

@@ -43,7 +43,7 @@ impl FitObserver for Progress {
 fn main() -> dglmnet::Result<()> {
     // 1. A dna-like synthetic problem: 6k examples, 200 features, short rows.
     let ds = synth::dna_like(6_000, 200, 10, 42);
-    let split = ds.split(0.8, 42);
+    let split = ds.split(0.8, 42).unwrap();
     let lam = lambda_max(&split.train) / 64.0;
     println!(
         "dataset: {} train / {} test examples, {} features; lambda = {lam:.4}",

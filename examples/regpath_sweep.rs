@@ -11,7 +11,7 @@ use dglmnet::solver::{lambda_max, DGlmnetSolver, RegPath};
 
 fn main() -> dglmnet::Result<()> {
     let ds = synth::webspam_like(3_000, 8_000, 40, 7);
-    let split = ds.split(0.8, 7);
+    let split = ds.split(0.8, 7).unwrap();
     println!(
         "webspam-like: {} train examples, {} features (sparse, p >> n)",
         split.train.n_examples(),

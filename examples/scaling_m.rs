@@ -10,7 +10,7 @@ use dglmnet::solver::{lambda_max, DGlmnetSolver, Estimator, NoopObserver};
 
 fn main() -> dglmnet::Result<()> {
     let ds = synth::webspam_like(4_000, 4_000, 30, 99);
-    let split = ds.split(0.8, 99);
+    let split = ds.split(0.8, 99).unwrap();
     let lam = lambda_max(&split.train) / 32.0;
     println!(
         "webspam-like n = {}, p = {}, lambda = {:.4}",

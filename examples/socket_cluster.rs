@@ -1,18 +1,31 @@
-//! A genuinely multi-process d-GLMNET fit over the socket transport.
+//! A genuinely multi-process d-GLMNET fit over the socket transport — in
+//! two acts.
 //!
-//! The leader process binds an ephemeral TCP port and re-executes *itself*
-//! twice with `worker <machine> <addr>` arguments — two real OS processes,
-//! each rebuilding its feature shard deterministically from the same
-//! synthetic dataset, connecting back, and serving the node protocol. The
-//! leader then runs the identical fit with in-process worker threads and
-//! verifies the two trajectories are bit-identical (objective, β, and the
-//! comm-bytes ledger) — the property the CI socket job gates on.
+//! **Act 1 (data flags):** the leader process binds an ephemeral TCP port
+//! and re-executes *itself* twice with `worker <machine> <addr>` arguments
+//! — two real OS processes, each rebuilding its feature shard
+//! deterministically from the same synthetic dataset, connecting back, and
+//! serving the node protocol.
+//!
+//! **Act 2 (sharded store):** the leader writes the dataset into an
+//! on-disk [`ShardStore`] (`manifest.json` + one by-feature shard file per
+//! machine + `y.bin`) and re-executes itself with
+//! `worker-store <machine> <addr> <dir>` arguments. Each worker process
+//! now reads **only its own shard file**, and the store-driven leader
+//! (`from_store_socket`) holds nothing but `y`, β and the margins — it
+//! never constructs a matrix of X. This is the paper's "dataset cannot fit
+//! one machine" deployment made physical; the leader prints its peak RSS
+//! so you can see the O(n) footprint.
+//!
+//! Both acts assert bit-identical trajectories (objective, β, and the
+//! comm-bytes ledger) against the in-process run — the property the CI
+//! socket jobs gate on.
 //!
 //! Run: `cargo run --release --example socket_cluster`
 //!
-//! Production deployments use the `dglmnet worker` CLI subcommand instead
-//! of the self-exec trick; the protocol and the bytes on the wire are the
-//! same.
+//! Production deployments use the `dglmnet shard` / `dglmnet worker
+//! --store` CLI subcommands instead of the self-exec trick; the protocol
+//! and the bytes on the wire are the same.
 
 use std::net::TcpListener;
 use std::process::{Child, Command};
@@ -22,6 +35,7 @@ use dglmnet::cluster::transport::SocketTransport;
 use dglmnet::cluster::WorkerNode;
 use dglmnet::config::{EngineKind, TrainConfig};
 use dglmnet::data::dataset::Dataset;
+use dglmnet::data::store::ShardStore;
 use dglmnet::data::synth;
 use dglmnet::solver::{lambda_max, DGlmnetSolver};
 
@@ -63,56 +77,144 @@ fn worker_main(machine: usize, addr: &str) -> Result<(), Box<dyn std::error::Err
     Ok(())
 }
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let args: Vec<String> = std::env::args().collect();
-    if args.len() == 4 && args[1] == "worker" {
-        return worker_main(args[2].parse()?, &args[3]);
-    }
-
-    let ds = dataset();
-    let lam = lambda_max(&ds) / 4.0;
-    let cfg = config(lam);
-
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?.to_string();
+/// Act-2 worker: no dataset regeneration — open the store and read *only*
+/// this machine's shard file.
+fn worker_store_main(
+    machine: usize,
+    addr: &str,
+    dir: &str,
+) -> Result<(), Box<dyn std::error::Error>> {
+    // no dataset regeneration here: λ arrives with every Sweep request, so
+    // the worker's config only pins the engine and machine count
+    let cfg = config(1.0);
+    let store = ShardStore::open(dir)?;
+    let mut node =
+        WorkerNode::from_store(&cfg, &store, machine, std::path::Path::new("artifacts"))?;
     println!(
-        "[leader] pid {}: listening on {addr}, spawning {MACHINES} worker processes",
+        "[store worker {machine}] pid {}: loaded shard_{machine:04}.bfcsc, joining {addr}",
         std::process::id()
     );
-    let exe = std::env::current_exe()?;
-    let children: Vec<Child> = (0..MACHINES)
-        .map(|k| Command::new(&exe).arg("worker").arg(k.to_string()).arg(&addr).spawn())
-        .collect::<std::io::Result<_>>()?;
+    let mut transport = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
+    node.serve(&mut transport)?;
+    println!("[store worker {machine}] pid {}: shutdown", std::process::id());
+    Ok(())
+}
 
-    let mut socket_solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener)?;
-    let fit_socket = socket_solver.fit_lambda(lam)?;
-    let beta_socket = socket_solver.beta.clone();
-    drop(socket_solver); // sends Shutdown; the worker processes exit
+struct RunOutcome {
+    objective_bits: u64,
+    comm_bytes: u64,
+    beta: Vec<f32>,
+}
+
+fn wait_all(children: Vec<Child>) -> Result<(), Box<dyn std::error::Error>> {
     for mut child in children {
         let status = child.wait()?;
         if !status.success() {
             return Err(format!("a worker process exited with {status}").into());
         }
     }
+    Ok(())
+}
 
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() == 4 && args[1] == "worker" {
+        return worker_main(args[2].parse()?, &args[3]);
+    }
+    if args.len() == 5 && args[1] == "worker-store" {
+        return worker_store_main(args[2].parse()?, &args[3], &args[4]);
+    }
+
+    let ds = dataset();
+    let lam = lambda_max(&ds) / 4.0;
+    let cfg = config(lam);
+    let exe = std::env::current_exe()?;
+
+    // ---- act 1: data-flag workers --------------------------------------
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    println!(
+        "[leader] pid {}: listening on {addr}, spawning {MACHINES} worker processes",
+        std::process::id()
+    );
+    let children: Vec<Child> = (0..MACHINES)
+        .map(|k| Command::new(&exe).arg("worker").arg(k.to_string()).arg(&addr).spawn())
+        .collect::<std::io::Result<_>>()?;
+    let mut socket_solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener)?;
+    let fit_socket = socket_solver.fit_lambda(lam)?;
+    let socket = RunOutcome {
+        objective_bits: fit_socket.objective.to_bits(),
+        comm_bytes: fit_socket.comm_bytes,
+        beta: socket_solver.beta.clone(),
+    };
+    drop(socket_solver); // sends Shutdown; the worker processes exit
+    wait_all(children)?;
+
+    // ---- act 2: sharded-store workers, O(n) leader ---------------------
+    let store_dir = std::env::temp_dir()
+        .join(format!("dglmnet_example_store_{}", std::process::id()));
+    let partition = DGlmnetSolver::partition_for(&ds, &cfg);
+    let store = ShardStore::create(&store_dir, &ds, &partition, "round-robin")?;
+    println!(
+        "[leader] store written to {} ({MACHINES} shard files + manifest + y.bin)",
+        store_dir.display()
+    );
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr2 = listener.local_addr()?.to_string();
+    let children: Vec<Child> = (0..MACHINES)
+        .map(|k| {
+            Command::new(&exe)
+                .arg("worker-store")
+                .arg(k.to_string())
+                .arg(&addr2)
+                .arg(store_dir.as_os_str())
+                .spawn()
+        })
+        .collect::<std::io::Result<_>>()?;
+    let mut store_solver = DGlmnetSolver::from_store_socket(&store, &cfg, listener)?;
+    let fit_store = store_solver.fit_lambda(lam)?;
+    let stored = RunOutcome {
+        objective_bits: fit_store.objective.to_bits(),
+        comm_bytes: fit_store.comm_bytes,
+        beta: store_solver.beta.clone(),
+    };
+    drop(store_solver);
+    wait_all(children)?;
+    std::fs::remove_dir_all(&store_dir).ok();
+
+    // ---- reference: in-process -----------------------------------------
     let mut local_solver = DGlmnetSolver::from_dataset(&ds, &cfg)?;
     let fit_local = local_solver.fit_lambda(lam)?;
 
     println!(
-        "[leader] socket    : f = {:.6} ({} iters, {} comm bytes)",
+        "[leader] socket      : f = {:.6} ({} iters, {} comm bytes)",
         fit_socket.objective, fit_socket.iterations, fit_socket.comm_bytes
     );
     println!(
-        "[leader] in-process: f = {:.6} ({} iters, {} comm bytes)",
+        "[leader] store-socket: f = {:.6} ({} iters, {} comm bytes)",
+        fit_store.objective, fit_store.iterations, fit_store.comm_bytes
+    );
+    println!(
+        "[leader] in-process  : f = {:.6} ({} iters, {} comm bytes)",
         fit_local.objective, fit_local.iterations, fit_local.comm_bytes
     );
-    let bit_identical = fit_socket.objective.to_bits() == fit_local.objective.to_bits()
-        && beta_socket == local_solver.beta
-        && fit_socket.comm_bytes == fit_local.comm_bytes;
-    println!("[leader] bit-identical across transports: {bit_identical}");
+    if let Some(rss) = dglmnet::util::peak_rss_bytes() {
+        println!(
+            "[leader] peak RSS {:.1} MiB (store-driven leader holds y + margins, never X)",
+            rss as f64 / (1u64 << 20) as f64
+        );
+    }
+    let local_bits = fit_local.objective.to_bits();
+    let bit_identical = socket.objective_bits == local_bits
+        && stored.objective_bits == local_bits
+        && socket.beta == local_solver.beta
+        && stored.beta == local_solver.beta
+        && socket.comm_bytes == fit_local.comm_bytes
+        && stored.comm_bytes == fit_local.comm_bytes;
+    println!("[leader] bit-identical across all three runs: {bit_identical}");
     println!("objective_bits={:016x}", fit_socket.objective.to_bits());
     if !bit_identical {
-        return Err("socket and in-process runs diverged".into());
+        return Err("socket / store / in-process runs diverged".into());
     }
     Ok(())
 }

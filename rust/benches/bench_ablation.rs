@@ -62,7 +62,7 @@ fn ablation_shotgun() {
 
 fn ablation_blocks() {
     section("A2: block-diagonal Hessian coarseness (iterations vs M)");
-    let split = synth::webspam_like(3_000, 3_000, 30, 32).split(0.8, 32);
+    let split = synth::webspam_like(3_000, 3_000, 30, 32).split(0.8, 32).unwrap();
     let lam = lambda_max(&split.train) / 32.0;
     let mut t = Table::new("", &["M", "iterations", "objective", "nnz"]);
     for m in [1usize, 2, 4, 8, 16] {
@@ -87,7 +87,7 @@ fn ablation_blocks() {
 
 fn ablation_linesearch() {
     section("A3: alpha_init scan (Alg 3 step 2) vs plain Armijo");
-    let split = synth::dna_like(8_000, 300, 10, 33).split(0.8, 33);
+    let split = synth::dna_like(8_000, 300, 10, 33).split(0.8, 33).unwrap();
     let lam = lambda_max(&split.train) / 64.0;
     let mut t = Table::new("", &["variant", "iterations", "objective", "nnz", "wall s"]);
     for (name, skip) in [("alpha_init scan (paper)", false), ("plain Armijo from 1", true)] {
@@ -116,7 +116,7 @@ fn ablation_linesearch() {
 
 fn ablation_comm() {
     section("A4: communication vs the O((n+p)·ln M) model + shuffle share");
-    let split = synth::webspam_like(3_000, 6_000, 40, 34).split(0.8, 34);
+    let split = synth::webspam_like(3_000, 6_000, 40, 34).split(0.8, 34).unwrap();
     let lam = lambda_max(&split.train) / 16.0;
     let mut t = Table::new(
         "",
@@ -163,7 +163,7 @@ fn ablation_comm() {
 
 fn ablation_partition() {
     section("partition strategy on a skewed dataset");
-    let split = synth::webspam_like(2_000, 4_000, 40, 35).split(0.8, 35);
+    let split = synth::webspam_like(2_000, 4_000, 40, 35).split(0.8, 35).unwrap();
     let lam = lambda_max(&split.train) / 16.0;
     let mut t = Table::new("", &["strategy", "iters", "objective", "max/min shard nnz"]);
     for (name, strat) in [

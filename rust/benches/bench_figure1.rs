@@ -33,7 +33,7 @@ fn datasets(fast: bool) -> Vec<FigureSpec> {
         FigureSpec {
             tag: "fig1a",
             paper_dataset: "epsilon (dense)",
-            split: synth::epsilon_like(8_000 / f, 512 / f, 11).split(0.8, 11),
+            split: synth::epsilon_like(8_000 / f, 512 / f, 11).split(0.8, 11).unwrap(),
             machines: 4,
             path_steps: if fast { 6 } else { 14 },
             passes: if fast { 3 } else { 8 },
@@ -41,7 +41,7 @@ fn datasets(fast: bool) -> Vec<FigureSpec> {
         FigureSpec {
             tag: "fig1b",
             paper_dataset: "webspam (sparse, p >> n)",
-            split: synth::webspam_like(4_000 / f, 16_000 / f, 60, 12).split(0.8, 12),
+            split: synth::webspam_like(4_000 / f, 16_000 / f, 60, 12).split(0.8, 12).unwrap(),
             machines: 8,
             path_steps: if fast { 6 } else { 14 },
             passes: if fast { 3 } else { 8 },
@@ -49,7 +49,7 @@ fn datasets(fast: bool) -> Vec<FigureSpec> {
         FigureSpec {
             tag: "fig1c",
             paper_dataset: "dna (n >> p)",
-            split: synth::dna_like(40_000 / f, 400, 12, 13).split(0.8, 13),
+            split: synth::dna_like(40_000 / f, 400, 12, 13).split(0.8, 13).unwrap(),
             machines: 4,
             path_steps: if fast { 6 } else { 14 },
             passes: if fast { 3 } else { 8 },

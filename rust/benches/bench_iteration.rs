@@ -395,6 +395,21 @@ fn main() {
         report.insert("fit_transport_comparison".into(), Json::Obj(m));
     }
 
+    // ---- leader-process peak RSS ----------------------------------------
+    // Self-read from /proc/self/status after all fits above: this process
+    // played the leader for every solver-level section, so growth here is
+    // the leader-memory regression canary the check script gates (the
+    // socket_e2e CI job additionally asserts an *isolated* store-driven
+    // leader process stays below the full-load watermark).
+    section("leader-process peak RSS");
+    {
+        let rss = dglmnet::util::peak_rss_bytes().unwrap_or(0);
+        println!("peak RSS: {:.1} MiB", rss as f64 / (1u64 << 20) as f64);
+        let mut m = BTreeMap::new();
+        m.insert("peak_rss_bytes".into(), Json::Num(rss as f64));
+        report.insert("leader_process".into(), Json::Obj(m));
+    }
+
     // ---- emit the machine-readable baseline -----------------------------
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("bench_iteration".into()));

@@ -20,9 +20,9 @@ fn main() -> dglmnet::Result<()> {
     let engine = EngineKind::Auto; // per-shard XLA/native routing
 
     let specs: Vec<(&str, SplitDataset, usize)> = vec![
-        ("epsilon_like", synth::epsilon_like(8_000 / f, 512 / f, 21).split(0.8, 21), 4),
-        ("webspam_like", synth::webspam_like(4_000 / f, 16_000 / f, 60, 22).split(0.8, 22), 8),
-        ("dna_like", synth::dna_like(40_000 / f, 400, 12, 23).split(0.8, 23), 4),
+        ("epsilon_like", synth::epsilon_like(8_000 / f, 512 / f, 21).split(0.8, 21).unwrap(), 4),
+        ("webspam_like", synth::webspam_like(4_000 / f, 16_000 / f, 60, 22).split(0.8, 22).unwrap(), 8),
+        ("dna_like", synth::dna_like(40_000 / f, 400, 12, 23).split(0.8, 23).unwrap(), 4),
     ];
 
     let mut t2 = Table::new(

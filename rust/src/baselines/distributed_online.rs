@@ -284,7 +284,7 @@ mod tests {
 
     #[test]
     fn averaging_learns_and_improves_over_passes() {
-        let split = synth::epsilon_like(2_000, 40, 61).split(0.8, 2);
+        let split = synth::epsilon_like(2_000, 40, 61).split(0.8, 2).unwrap();
         let d = DistributedOnlineLearner::new(4, 0.3, 0.8, 1e-7, 3);
         let snaps = d.train(&split.train, 4);
         assert_eq!(snaps.len(), 4);

@@ -146,7 +146,7 @@ mod tests {
 
     #[test]
     fn grid_produces_point_per_combo_per_pass() {
-        let split = synth::dna_like(400, 30, 5, 71).split(0.8, 3);
+        let split = synth::dna_like(400, 30, 5, 71).split(0.8, 3).unwrap();
         let pts = online_grid_search(
             &split.train,
             &split.test,
@@ -163,7 +163,7 @@ mod tests {
 
     #[test]
     fn frontier_is_monotone() {
-        let split = synth::dna_like(300, 25, 4, 72).split(0.8, 4);
+        let split = synth::dna_like(300, 25, 4, 72).split(0.8, 4).unwrap();
         let pts = online_grid_search(
             &split.train, &split.test, 2, &[0.2], &[0.7], &[0.5, 8.0], 2, 2,
         );
@@ -176,7 +176,7 @@ mod tests {
     #[test]
     fn fit_scored_works_for_any_estimator() {
         use crate::baselines::shotgun::ShotgunEstimator;
-        let split = synth::dna_like(300, 24, 4, 73).split(0.8, 5);
+        let split = synth::dna_like(300, 24, 4, 73).split(0.8, 5).unwrap();
         let mut est = ShotgunEstimator::new(0.5, 2, 8, 3);
         let (fit, evals) = fit_scored(&mut est, &split.train, &split.test).unwrap();
         assert_eq!(fit.iterations, 8);

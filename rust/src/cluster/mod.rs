@@ -34,14 +34,19 @@
 //!   applies `α·Δβ_local` from its own sweep output, so no per-sweep
 //!   `beta_local` gather or merged-Δβ broadcast exists anywhere in the
 //!   system. Leader-held and worker-held state stay bit-identical (the
-//!   checkpoint pull verifies it).
+//!   checkpoint pull verifies it). Nodes self-load their shards from the
+//!   on-disk store ([`node::WorkerNode::from_store`]) and additionally
+//!   serve the out-of-core leader's one-shot setup reductions: `LambdaMax`
+//!   (per-shard λ_max contribution) and `Margins` (per-shard Σβ_jx_ij for
+//!   warmstart installs).
 //!
 //! **Accounting contract.** The `comm_bytes` ledger charges the collective
 //! Δ-exchanges per tree edge — reduce messages always; broadcast retraces
 //! only for flows a node actually consumes (the merged Δm under reduce-Δm).
-//! Handshake, sweep-request, apply and state-sync frames are not charged:
-//! they are O(1)-per-iteration control traffic or model the shared-state
-//! bookkeeping the paper's cost analysis excludes, and the allgather-Δβ
+//! Handshake, sweep-request, apply, state-sync, and one-shot setup frames
+//! (λ_max / warmstart-margins reductions) are not charged: they are
+//! O(1)-per-iteration (or per-fit) control traffic or model the
+//! shared-state bookkeeping the paper's cost analysis excludes, and the allgather-Δβ
 //! strategy's leader-side Δm recombination remains an uncharged local
 //! computation exactly as in PR 3. Under the default lossless policy,
 //! what *is* charged agrees byte-for-byte with what a

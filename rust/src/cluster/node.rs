@@ -36,6 +36,7 @@ use crate::cluster::transport::Transport;
 use crate::config::TrainConfig;
 use crate::data::shuffle::FeatureShard;
 use crate::data::sparse::SparseVec;
+use crate::data::store::ShardStore;
 use crate::engine::{build_engine, SubproblemEngine};
 use crate::error::{DlrError, Result};
 use crate::solver::quadratic::stats_native_into;
@@ -91,6 +92,23 @@ impl WorkerNode {
             w: Vec::new(),
             z: Vec::new(),
         })
+    }
+
+    /// Self-load this machine's shard (and the labels) from an on-disk
+    /// [`ShardStore`] — the out-of-core construction path: the worker reads
+    /// *only its own* shard file (checksum-verified against the manifest),
+    /// and no shard payload ever travels through the leader. Used by the
+    /// in-process store pool, the `dglmnet worker --store` subcommand, and
+    /// the store-driven socket tests.
+    pub fn from_store(
+        cfg: &TrainConfig,
+        store: &ShardStore,
+        machine: usize,
+        artifacts_dir: &std::path::Path,
+    ) -> Result<Self> {
+        let shard = store.load_shard(machine)?;
+        let y = Arc::new(store.load_y()?);
+        Self::from_shard(cfg, shard, y, store.p(), artifacts_dir)
     }
 
     pub fn machine(&self) -> usize {
@@ -189,6 +207,22 @@ impl WorkerNode {
                 beta_local: self.beta_local.clone(),
                 margins_crc: crc_f32(&self.margins),
             })),
+            NodeMessage::LambdaMax => Ok(Some(NodeMessage::LambdaMaxed {
+                value: self.engine.lambda_max_local(&self.y)?,
+            })),
+            NodeMessage::Margins { beta_local } => {
+                if beta_local.len() != self.beta_local.len() {
+                    return Err(DlrError::Solver(format!(
+                        "margins request carries {} coefficients but this shard owns \
+                         {} features",
+                        beta_local.len(),
+                        self.beta_local.len()
+                    )));
+                }
+                let mut part = SparseVec::new(self.n);
+                self.engine.margins_into(&beta_local, &mut part)?;
+                Ok(Some(NodeMessage::MarginsPart { part }))
+            }
             NodeMessage::Shutdown => Ok(None),
             other => Err(DlrError::Solver(format!(
                 "worker {} received unexpected {}",

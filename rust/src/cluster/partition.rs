@@ -22,6 +22,16 @@ impl PartitionStrategy {
             _ => None,
         }
     }
+
+    /// Canonical spelling (round-trips through [`PartitionStrategy::parse`];
+    /// recorded in shard-store manifests).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::Contiguous => "contiguous",
+            Self::NnzBalanced => "nnz-balanced",
+        }
+    }
 }
 
 /// A concrete disjoint cover of the feature space.
@@ -70,6 +80,42 @@ impl FeaturePartition {
             }
         }
         Self { assignment, machines: m }
+    }
+
+    /// Rebuild a partition from per-machine global-column lists (the shard
+    /// store's on-disk identity). Validates that the lists are a disjoint
+    /// cover of `0..p` — a store whose shards overlap or leave a feature
+    /// unowned is corrupt and must not reach the solver.
+    pub fn from_feature_lists(
+        lists: &[Vec<u32>],
+        p: usize,
+    ) -> crate::error::Result<Self> {
+        use crate::error::DlrError;
+        let mut assignment = vec![u32::MAX; p];
+        for (k, cols) in lists.iter().enumerate() {
+            for &c in cols {
+                let j = c as usize;
+                if j >= p {
+                    return Err(DlrError::Data(format!(
+                        "shard {k} claims feature {j} but p = {p}"
+                    )));
+                }
+                if assignment[j] != u32::MAX {
+                    return Err(DlrError::Data(format!(
+                        "feature {j} is owned by both machine {} and machine {k}",
+                        assignment[j]
+                    )));
+                }
+                assignment[j] = k as u32;
+            }
+        }
+        if let Some(j) = assignment.iter().position(|&a| a == u32::MAX) {
+            return Err(DlrError::Data(format!(
+                "feature {j} is owned by no shard — the store does not cover the \
+                 feature space"
+            )));
+        }
+        Ok(Self { assignment, machines: lists.len() })
     }
 
     pub fn machines(&self) -> usize {
@@ -168,6 +214,20 @@ mod tests {
     fn single_machine_owns_everything() {
         let p = FeaturePartition::build(PartitionStrategy::RoundRobin, 17, 1, None);
         assert_eq!(p.features_of(0).len(), 17);
+    }
+
+    #[test]
+    fn from_feature_lists_round_trips_and_validates() {
+        let built = FeaturePartition::build(PartitionStrategy::RoundRobin, 10, 3, None);
+        let lists: Vec<Vec<u32>> = (0..3).map(|k| built.features_of(k)).collect();
+        let back = FeaturePartition::from_feature_lists(&lists, 10).unwrap();
+        for j in 0..10 {
+            assert_eq!(back.machine_of(j), built.machine_of(j));
+        }
+        // overlap, gap, and out-of-range claims are rejected
+        assert!(FeaturePartition::from_feature_lists(&[vec![0, 1], vec![1]], 2).is_err());
+        assert!(FeaturePartition::from_feature_lists(&[vec![0], vec![2]], 3).is_err());
+        assert!(FeaturePartition::from_feature_lists(&[vec![0], vec![5]], 2).is_err());
     }
 
     #[test]

@@ -47,6 +47,10 @@ const TAG_STATE: u8 = 8;
 const TAG_ACK: u8 = 9;
 const TAG_ABORT: u8 = 10;
 const TAG_SHUTDOWN: u8 = 11;
+const TAG_LAMBDA_MAX: u8 = 12;
+const TAG_LAMBDA_MAXED: u8 = 13;
+const TAG_MARGINS: u8 = 14;
+const TAG_MARGINS_PART: u8 = 15;
 
 /// One protocol message between the leader and a worker node.
 ///
@@ -103,6 +107,21 @@ pub enum NodeMessage {
     /// leader only needs to *verify* sync, β travels in full for the
     /// checkpoint.
     State { beta_local: Vec<f32>, margins_crc: u64 },
+    /// leader → worker: report this shard's λ_max contribution
+    /// `max_j |Σ_i x_ij y_i| / 2` over its own features — part of the
+    /// distributed reduce that lets an out-of-core leader find λ_max
+    /// without ever holding X (each per-feature f64 sum is bit-identical
+    /// to the in-memory scan; the max over disjoint shards is exact).
+    LambdaMax,
+    /// worker → leader: the shard's λ_max contribution.
+    LambdaMaxed { value: f64 },
+    /// leader → worker: compute the shard's margins product
+    /// `Σ_{j ∈ shard} β_j x_ij` for the given shard-local β — the
+    /// distributed warmstart install. Stateless: the node's own (β,
+    /// margins) are untouched (the leader follows up with a `SetState`).
+    Margins { beta_local: Vec<f32> },
+    /// worker → leader: the shard's sparse margins contribution.
+    MarginsPart { part: SparseVec },
     /// worker → leader: acknowledgement of an `Apply` / `SetState`.
     Ack,
     /// either direction: the peer failed; the message is the error.
@@ -270,6 +289,10 @@ impl NodeMessage {
             NodeMessage::SetState { .. } => "set-state",
             NodeMessage::GetState => "get-state",
             NodeMessage::State { .. } => "state",
+            NodeMessage::LambdaMax => "lambda-max",
+            NodeMessage::LambdaMaxed { .. } => "lambda-maxed",
+            NodeMessage::Margins { .. } => "margins",
+            NodeMessage::MarginsPart { .. } => "margins-part",
             NodeMessage::Ack => "ack",
             NodeMessage::Abort { .. } => "abort",
             NodeMessage::Shutdown => "shutdown",
@@ -325,6 +348,19 @@ impl NodeMessage {
                 out.push(TAG_STATE);
                 put_f32_vec(&mut out, beta_local);
                 put_u64(&mut out, *margins_crc);
+            }
+            NodeMessage::LambdaMax => out.push(TAG_LAMBDA_MAX),
+            NodeMessage::LambdaMaxed { value } => {
+                out.push(TAG_LAMBDA_MAXED);
+                put_f64(&mut out, *value);
+            }
+            NodeMessage::Margins { beta_local } => {
+                out.push(TAG_MARGINS);
+                put_f32_vec(&mut out, beta_local);
+            }
+            NodeMessage::MarginsPart { part } => {
+                out.push(TAG_MARGINS_PART);
+                put_sparse(&mut out, part, MessageClass::Margins);
             }
             NodeMessage::Ack => out.push(TAG_ACK),
             NodeMessage::Abort { message } => {
@@ -389,6 +425,14 @@ impl NodeMessage {
                 beta_local: get_f32_vec(bytes, &mut pos)?,
                 margins_crc: get_u64(bytes, &mut pos)?,
             },
+            TAG_LAMBDA_MAX => NodeMessage::LambdaMax,
+            TAG_LAMBDA_MAXED => {
+                NodeMessage::LambdaMaxed { value: get_f64(bytes, &mut pos)? }
+            }
+            TAG_MARGINS => NodeMessage::Margins { beta_local: get_f32_vec(bytes, &mut pos)? },
+            TAG_MARGINS_PART => {
+                NodeMessage::MarginsPart { part: get_sparse(bytes, &mut pos)? }
+            }
             TAG_ACK => NodeMessage::Ack,
             TAG_ABORT => NodeMessage::Abort { message: get_str(bytes, &mut pos)? },
             TAG_SHUTDOWN => NodeMessage::Shutdown,
@@ -449,6 +493,10 @@ mod tests {
             },
             NodeMessage::GetState,
             NodeMessage::State { beta_local: vec![3.25, 0.0], margins_crc: 42 },
+            NodeMessage::LambdaMax,
+            NodeMessage::LambdaMaxed { value: 0.1 + 0.2 },
+            NodeMessage::Margins { beta_local: vec![0.5, -1.25, 0.0] },
+            NodeMessage::MarginsPart { part: sv(&[0.0, 1.0, 0.0, -0.5]) },
             NodeMessage::Ack,
             NodeMessage::Abort { message: "worker exploded".into() },
             NodeMessage::Shutdown,
@@ -501,6 +549,22 @@ mod tests {
                     assert_eq!(a, b);
                     assert_eq!(ae, be);
                 }
+                (
+                    NodeMessage::LambdaMaxed { value: a },
+                    NodeMessage::LambdaMaxed { value: b },
+                ) => assert_eq!(a.to_bits(), b.to_bits()),
+                (
+                    NodeMessage::Margins { beta_local: a },
+                    NodeMessage::Margins { beta_local: b },
+                ) => {
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (
+                    NodeMessage::MarginsPart { part: a },
+                    NodeMessage::MarginsPart { part: b },
+                ) => assert_eq!(a, b),
                 _ => {}
             }
         }

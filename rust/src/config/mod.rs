@@ -189,6 +189,12 @@ pub struct TrainConfig {
     /// Allow the lossy f16 codec for β-carrying (Δβ) messages. Off by
     /// default and discouraged: it quantizes the model update itself.
     pub wire_f16_beta: bool,
+    /// Sharded on-disk store directory (`[data] store` / `--store`): train
+    /// out-of-core — workers self-load their shard files and the leader
+    /// stays O(n + p). `None` trains from an in-memory dataset (which the
+    /// in-process constructors route through a temp store anyway, so the
+    /// two paths are bit-identical).
+    pub store: Option<String>,
     /// How workers are driven: in-process threads (default) or remote
     /// `dglmnet worker` processes over TCP (`[cluster] transport`).
     pub transport: TransportKind,
@@ -226,6 +232,7 @@ impl Default for TrainConfig {
             exchange: ExchangeStrategy::Auto,
             wire_f16_margins: false,
             wire_f16_beta: false,
+            store: None,
             transport: TransportKind::InProcess,
             listen: "127.0.0.1:4801".into(),
             charge_beta_broadcast: false,
@@ -381,6 +388,9 @@ impl TrainConfig {
                 DlrError::Config("cluster.workers must be a non-negative integer".into())
             })?;
         }
+        if let Some(s) = doc.get("data", "store").and_then(|v| v.as_str()) {
+            cfg.store = Some(s.to_string());
+        }
         if let Some(s) = doc.get("cluster", "transport").and_then(|v| v.as_str()) {
             cfg.transport = TransportKind::parse(s)
                 .ok_or_else(|| DlrError::Config(format!("unknown transport '{s}'")))?;
@@ -482,6 +492,10 @@ impl TrainConfigBuilder {
     }
     pub fn wire_f16_beta(mut self, v: bool) -> Self {
         self.0.wire_f16_beta = v;
+        self
+    }
+    pub fn store(mut self, v: impl Into<String>) -> Self {
+        self.0.store = Some(v.into());
         self
     }
     pub fn transport(mut self, v: TransportKind) -> Self {
@@ -654,6 +668,14 @@ skip_alpha_init = true
         c.wire_f16_beta = true;
         c.exchange = ExchangeStrategy::ReduceDm;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn data_store_loads_from_toml() {
+        assert!(TrainConfig::default().store.is_none());
+        let doc = toml::parse("[data]\nstore = \"/var/shards/webspam\"\n").unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.store.as_deref(), Some("/var/shards/webspam"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Labeled dataset container + Table-2-style summaries and splitting.
 
 use crate::data::sparse::CsrMatrix;
+use crate::error::{DlrError, Result};
 use crate::util::rng::Xoshiro256;
 
 /// A labeled classification dataset in by-example (CSR) layout.
@@ -60,14 +61,53 @@ impl Dataset {
     }
 
     /// Deterministic shuffled split: `train_frac` of rows to train.
-    pub fn split(&self, train_frac: f64, seed: u64) -> SplitDataset {
-        assert!((0.0..=1.0).contains(&train_frac));
+    ///
+    /// An out-of-range (or NaN) `train_frac` is a caller error and returns
+    /// an actionable [`DlrError::Config`] instead of panicking. When the
+    /// split is degenerate (all rows to one side), the non-empty side is a
+    /// single clone in the original row order — no shuffle and no
+    /// row-by-row CSR rebuild for either half.
+    pub fn split(&self, train_frac: f64, seed: u64) -> Result<SplitDataset> {
+        if !(0.0..=1.0).contains(&train_frac) {
+            return Err(DlrError::Config(format!(
+                "train_frac must be within [0, 1], got {train_frac} — use 1.0 to \
+                 train on everything (empty test set)"
+            )));
+        }
         let n = self.n_examples();
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let empty = |suffix: &str| {
+            Dataset::new(
+                format!("{}-{suffix}", self.name),
+                CsrMatrix::new(self.n_features()),
+                Vec::new(),
+            )
+        };
+        // degenerate fast paths: one whole-matrix clone, zero rebuilds
+        if n_train >= n {
+            return Ok(SplitDataset {
+                train: Dataset::new(
+                    format!("{}-train", self.name),
+                    self.x.clone(),
+                    self.y.clone(),
+                ),
+                test: empty("test"),
+            });
+        }
+        if n_train == 0 {
+            return Ok(SplitDataset {
+                train: empty("train"),
+                test: Dataset::new(
+                    format!("{}-test", self.name),
+                    self.x.clone(),
+                    self.y.clone(),
+                ),
+            });
+        }
         let mut idx: Vec<usize> = (0..n).collect();
         Xoshiro256::new(seed ^ 0x5EED_5EED).shuffle(&mut idx);
-        let n_train = ((n as f64) * train_frac).round() as usize;
-        let (tr, te) = idx.split_at(n_train.min(n));
-        SplitDataset {
+        let (tr, te) = idx.split_at(n_train);
+        Ok(SplitDataset {
             train: Dataset::new(
                 format!("{}-train", self.name),
                 self.x.select_rows(tr),
@@ -78,7 +118,7 @@ impl Dataset {
                 self.x.select_rows(te),
                 te.iter().map(|&i| self.y[i]).collect(),
             ),
-        }
+        })
     }
 }
 
@@ -110,15 +150,46 @@ mod tests {
     #[test]
     fn split_partitions_rows() {
         let d = toy(100);
-        let sp = d.split(0.8, 1);
+        let sp = d.split(0.8, 1).unwrap();
         assert_eq!(sp.train.n_examples(), 80);
         assert_eq!(sp.test.n_examples(), 20);
         assert_eq!(sp.train.n_features(), 2);
         // determinism
-        let sp2 = d.split(0.8, 1);
+        let sp2 = d.split(0.8, 1).unwrap();
         assert_eq!(sp.train.y, sp2.train.y);
         // different seed -> (almost surely) different assignment
-        let sp3 = d.split(0.8, 2);
+        let sp3 = d.split(0.8, 2).unwrap();
         assert_ne!(sp.train.y, sp3.train.y);
+    }
+
+    #[test]
+    fn degenerate_splits_take_the_clone_fast_path() {
+        let d = toy(10);
+        // everything to train: original row order, empty test with the
+        // feature count preserved
+        let all = d.split(1.0, 3).unwrap();
+        assert_eq!(all.train.y, d.y);
+        assert_eq!(all.train.x.indptr, d.x.indptr);
+        assert_eq!(all.train.x.indices, d.x.indices);
+        assert_eq!(all.test.n_examples(), 0);
+        assert_eq!(all.test.n_features(), 2);
+        // everything to test
+        let none = d.split(0.0, 3).unwrap();
+        assert_eq!(none.test.y, d.y);
+        assert_eq!(none.train.n_examples(), 0);
+        assert_eq!(none.train.n_features(), 2);
+        // a fraction that rounds to n behaves like 1.0
+        let rounded = d.split(0.999, 3).unwrap();
+        assert_eq!(rounded.train.n_examples(), 10);
+        assert_eq!(rounded.test.n_examples(), 0);
+    }
+
+    #[test]
+    fn out_of_range_train_frac_errors_instead_of_panicking() {
+        let d = toy(10);
+        for bad in [-0.1, 1.5, f64::NAN] {
+            let err = d.split(bad, 1).unwrap_err().to_string();
+            assert!(err.contains("train_frac"), "{err}");
+        }
     }
 }

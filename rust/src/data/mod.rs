@@ -1,14 +1,34 @@
-//! Data substrate: sparse matrices (by-example CSR and by-feature CSC —
-//! the paper's §3 storage duality), libsvm and the paper's Table-1
-//! by-feature text formats, synthetic dataset generators with the shape
-//! signatures of the Pascal-challenge datasets, and the external
-//! by-example → by-feature shuffle (the paper's Map/Reduce preprocessing).
+//! Data substrate, layered around the **sharded store**:
+//!
+//! * **In-memory matrices** ([`sparse`]): by-example CSR and by-feature CSC
+//!   — the paper's §3 storage duality — plus the [`SparseVec`] message type
+//!   the comm layer ships between machines.
+//! * **Text formats** ([`libsvm`]): libsvm ingest and the paper's Table-1
+//!   by-feature format.
+//! * **The shard store** ([`store`]): the durable, out-of-core form of the
+//!   by-feature layout. A store directory holds a JSON manifest (n, p,
+//!   partition spec, per-shard nnz + FNV checksums), one binary CSC shard
+//!   file per machine, and the labels in their own small `y.bin`. Workers
+//!   self-load *only their own* shard file; the leader reads the manifest,
+//!   the O(p) shard headers and `y.bin` — no process ever materializes the
+//!   whole design matrix. Stores are written by the `dglmnet shard` CLI
+//!   subcommand, by [`store::ShardStore::create`], or streamed by the
+//!   external shuffle below.
+//! * **The shuffle** ([`shuffle`]): the paper's Map/Reduce preprocessing —
+//!   by-example → by-feature through spill files.
+//!   [`shuffle::shuffle_to_store`] reduces each machine's partition
+//!   straight into its shard file, holding one shard resident at a time.
+//! * **Generators and containers** ([`synth`], [`dataset`]): synthetic
+//!   datasets with the Pascal-challenge shape signatures, and the labeled
+//!   [`Dataset`] with Table-2 summaries and train/test splitting.
 
 pub mod dataset;
 pub mod libsvm;
 pub mod shuffle;
 pub mod sparse;
+pub mod store;
 pub mod synth;
 
 pub use dataset::{Dataset, SplitDataset};
 pub use sparse::{CscMatrix, CsrMatrix, SparseVec, Triplet};
+pub use store::{ShardStore, StoreManifest};

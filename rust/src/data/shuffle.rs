@@ -9,7 +9,9 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 use crate::cluster::partition::FeaturePartition;
+use crate::data::dataset::Dataset;
 use crate::data::sparse::{CscMatrix, CsrMatrix, Triplet};
+use crate::data::store::{self, ShardStore, StoreManifest};
 use crate::error::{DlrError, Result};
 
 /// Statistics of one shuffle run (the paper reports this phase at 1–5% of
@@ -37,11 +39,70 @@ pub fn shuffle_to_feature_shards(
     partition: &FeaturePartition,
     spill_dir: &Path,
 ) -> Result<(Vec<FeatureShard>, ShuffleStats)> {
+    let mut stats = map_phase(x, partition, spill_dir)?;
+
+    // ---- reduce phase: per machine, sort by (feature, example) and build CSC
+    let t1 = std::time::Instant::now();
+    let m = partition.machines();
+    let mut shards = Vec::with_capacity(m);
+    for k in 0..m {
+        shards.push(reduce_spill(x.n_rows, partition, k, spill_dir, &mut stats)?);
+    }
+    stats.reduce_secs = t1.elapsed().as_secs_f64();
+    Ok((shards, stats))
+}
+
+/// External shuffle straight into a [`ShardStore`]: the map phase streams
+/// rows into per-machine spill files, then each reducer builds its CSC
+/// block and writes it directly to its shard file — only **one** shard is
+/// ever resident, so peak memory beyond the streamed input is a single
+/// machine's block. This is the path that makes the paper's "dataset
+/// cannot fit one machine" preprocessing physically true.
+pub fn shuffle_to_store(
+    ds: &Dataset,
+    partition: &FeaturePartition,
+    partition_spec: &str,
+    dir: &Path,
+) -> Result<(ShardStore, ShuffleStats)> {
+    std::fs::create_dir_all(dir)?;
+    let mut stats = map_phase(&ds.x, partition, dir)?;
+
+    let t1 = std::time::Instant::now();
+    let m = partition.machines();
+    let mut shard_metas = Vec::with_capacity(m);
+    for k in 0..m {
+        let shard = reduce_spill(ds.n_examples(), partition, k, dir, &mut stats)?;
+        shard_metas.push(store::write_shard_file(
+            &store::shard_path(dir, k),
+            &shard,
+            ds.n_examples(),
+            ds.n_features(),
+        )?);
+        // `shard` drops here: one resident block at a time
+    }
+    stats.reduce_secs = t1.elapsed().as_secs_f64();
+    let manifest = StoreManifest {
+        name: ds.name.clone(),
+        n: ds.n_examples(),
+        p: ds.n_features(),
+        machines: m,
+        partition: partition_spec.to_string(),
+        shards: shard_metas,
+    };
+    let store = ShardStore::finish_manifest(dir, manifest, &ds.y)?;
+    Ok((store, stats))
+}
+
+/// Map phase: stream rows, emit `(feature, example, value)` triplets into
+/// per-machine spill files under `spill_dir`.
+fn map_phase(
+    x: &CsrMatrix,
+    partition: &FeaturePartition,
+    spill_dir: &Path,
+) -> Result<ShuffleStats> {
     std::fs::create_dir_all(spill_dir)?;
     let m = partition.machines();
     let mut stats = ShuffleStats::default();
-
-    // ---- map phase: stream rows, emit triplets into per-machine spills ----
     let t0 = std::time::Instant::now();
     let mut writers: Vec<BufWriter<std::fs::File>> = (0..m)
         .map(|k| -> Result<_> {
@@ -61,71 +122,75 @@ pub fn shuffle_to_feature_shards(
         w.flush()?;
     }
     stats.map_secs = t0.elapsed().as_secs_f64();
+    Ok(stats)
+}
 
-    // ---- reduce phase: per machine, sort by (feature, example) and build CSC
-    let t1 = std::time::Instant::now();
-    let mut shards = Vec::with_capacity(m);
-    for k in 0..m {
-        let p = spill_path(spill_dir, k);
-        stats.spill_bytes += std::fs::metadata(&p)?.len();
-        let mut triplets: Vec<Triplet> = Vec::new();
-        for line in BufReader::new(std::fs::File::open(&p)?).lines() {
-            let line = line?;
-            let mut it = line.split('\t');
-            let mut next_tok = || -> Result<&str> {
-                it.next().ok_or_else(|| DlrError::parse("spill", "short line"))
-            };
-            let c: u32 = next_tok()?
-                .parse()
-                .map_err(|_| DlrError::parse("spill", "bad col"))?;
-            let r: u32 = next_tok()?
-                .parse()
-                .map_err(|_| DlrError::parse("spill", "bad row"))?;
-            let v: f32 = next_tok()?
-                .parse()
-                .map_err(|_| DlrError::parse("spill", "bad val"))?;
-            triplets.push(Triplet { row: r, col: c, val: v });
-        }
-        std::fs::remove_file(&p)?;
-        // the reduce sort: by feature then example (Table-1 order)
-        triplets.sort_by_key(|t| (t.col, t.row));
-        let global_cols = partition.features_of(k);
-        let mut col_pos = std::collections::HashMap::with_capacity(global_cols.len());
-        for (local, &g) in global_cols.iter().enumerate() {
-            col_pos.insert(g, local);
-        }
-        let mut csc = CscMatrix {
-            n_rows: x.n_rows,
-            n_cols: global_cols.len(),
-            indptr: vec![0; global_cols.len() + 1],
-            indices: Vec::with_capacity(triplets.len()),
-            values: Vec::with_capacity(triplets.len()),
+/// One reducer: read machine `k`'s spill, sort by (feature, example) and
+/// build the machine-local CSC shard. Consumes (deletes) the spill file.
+fn reduce_spill(
+    n_rows: usize,
+    partition: &FeaturePartition,
+    k: usize,
+    spill_dir: &Path,
+    stats: &mut ShuffleStats,
+) -> Result<FeatureShard> {
+    let p = spill_path(spill_dir, k);
+    stats.spill_bytes += std::fs::metadata(&p)?.len();
+    let mut triplets: Vec<Triplet> = Vec::new();
+    for line in BufReader::new(std::fs::File::open(&p)?).lines() {
+        let line = line?;
+        let mut it = line.split('\t');
+        let mut next_tok = || -> Result<&str> {
+            it.next().ok_or_else(|| DlrError::parse("spill", "short line"))
         };
-        // counting pass
-        let mut counts = vec![0usize; global_cols.len()];
-        for t in &triplets {
-            let local = *col_pos.get(&t.col).ok_or_else(|| {
-                DlrError::Data(format!("feature {} not owned by machine {k}", t.col))
-            })?;
-            counts[local] += 1;
-        }
-        for j in 0..global_cols.len() {
-            csc.indptr[j + 1] = csc.indptr[j] + counts[j];
-        }
-        let mut next = csc.indptr.clone();
-        csc.indices.resize(triplets.len(), 0);
-        csc.values.resize(triplets.len(), 0.0);
-        for t in &triplets {
-            let local = col_pos[&t.col];
-            let dst = next[local];
-            csc.indices[dst] = t.row;
-            csc.values[dst] = t.val;
-            next[local] += 1;
-        }
-        shards.push(FeatureShard { machine: k, global_cols, csc });
+        let c: u32 = next_tok()?
+            .parse()
+            .map_err(|_| DlrError::parse("spill", "bad col"))?;
+        let r: u32 = next_tok()?
+            .parse()
+            .map_err(|_| DlrError::parse("spill", "bad row"))?;
+        let v: f32 = next_tok()?
+            .parse()
+            .map_err(|_| DlrError::parse("spill", "bad val"))?;
+        triplets.push(Triplet { row: r, col: c, val: v });
     }
-    stats.reduce_secs = t1.elapsed().as_secs_f64();
-    Ok((shards, stats))
+    std::fs::remove_file(&p)?;
+    // the reduce sort: by feature then example (Table-1 order)
+    triplets.sort_by_key(|t| (t.col, t.row));
+    let global_cols = partition.features_of(k);
+    let mut col_pos = std::collections::HashMap::with_capacity(global_cols.len());
+    for (local, &g) in global_cols.iter().enumerate() {
+        col_pos.insert(g, local);
+    }
+    let mut csc = CscMatrix {
+        n_rows,
+        n_cols: global_cols.len(),
+        indptr: vec![0; global_cols.len() + 1],
+        indices: Vec::with_capacity(triplets.len()),
+        values: Vec::with_capacity(triplets.len()),
+    };
+    // counting pass
+    let mut counts = vec![0usize; global_cols.len()];
+    for t in &triplets {
+        let local = *col_pos.get(&t.col).ok_or_else(|| {
+            DlrError::Data(format!("feature {} not owned by machine {k}", t.col))
+        })?;
+        counts[local] += 1;
+    }
+    for j in 0..global_cols.len() {
+        csc.indptr[j + 1] = csc.indptr[j] + counts[j];
+    }
+    let mut next = csc.indptr.clone();
+    csc.indices.resize(triplets.len(), 0);
+    csc.values.resize(triplets.len(), 0.0);
+    for t in &triplets {
+        let local = col_pos[&t.col];
+        let dst = next[local];
+        csc.indices[dst] = t.row;
+        csc.values[dst] = t.val;
+        next[local] += 1;
+    }
+    Ok(FeatureShard { machine: k, global_cols, csc })
 }
 
 /// Fast in-memory variant (no spill files) — used when the dataset already
@@ -172,6 +237,37 @@ mod tests {
             assert_eq!(a.csc.values, b.csc.values);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shuffle_to_store_matches_in_memory_create() {
+        let ds = synth::webspam_like(80, 240, 10, 7);
+        let part = FeaturePartition::build(
+            PartitionStrategy::RoundRobin,
+            ds.n_features(),
+            3,
+            None,
+        );
+        let base = std::env::temp_dir()
+            .join(format!("dglmnet_shuffle_store_{}", std::process::id()));
+        let (ext, stats) =
+            shuffle_to_store(&ds, &part, "round-robin", &base.join("ext")).unwrap();
+        assert_eq!(stats.triplets, ds.x.nnz());
+        let mem =
+            ShardStore::create(base.join("mem"), &ds, &part, "round-robin").unwrap();
+        // identical manifests (bar nothing: same shards, same checksums)
+        assert_eq!(ext.manifest(), mem.manifest());
+        for k in 0..3 {
+            let a = ext.load_shard(k).unwrap();
+            let b = mem.load_shard(k).unwrap();
+            assert_eq!(a.global_cols, b.global_cols);
+            assert_eq!(a.csc.indptr, b.csc.indptr);
+            assert_eq!(a.csc.indices, b.csc.indices);
+            for (x, y) in a.csc.values.iter().zip(&b.csc.values) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]

@@ -1,0 +1,733 @@
+//! Sharded on-disk feature store — the out-of-core data plane.
+//!
+//! The paper's premise is that the training set "cannot fit the memory of a
+//! single machine": each machine holds only its by-feature block, loaded
+//! locally, and nothing ever ships the design matrix through a coordinator.
+//! A [`ShardStore`] is the durable form of that layout:
+//!
+//! ```text
+//! store/
+//!   manifest.json     n, p, machines, partition spec, per-shard nnz + FNV
+//!                     checksums — everything a leader needs to validate a
+//!                     cluster without touching a single matrix entry
+//!   y.bin             the labels (O(n) — the only example-indexed payload)
+//!   shard_0000.bfcsc  machine 0's by-feature CSC block (global column ids
+//!   shard_0001.bfcsc  + indptr/indices/values), one file per machine
+//!   ...
+//! ```
+//!
+//! Workers open *only their own* shard file
+//! ([`WorkerNode::from_store`](crate::cluster::node::WorkerNode::from_store));
+//! the leader reads the manifest, the shard *headers* (for the O(p) global
+//! column lists) and `y.bin` — it never constructs a `CscMatrix` or
+//! `CsrMatrix` of X. Stores are written by the `dglmnet shard` CLI
+//! subcommand, by [`ShardStore::create`] (in-memory source), or streamed by
+//! [`shuffle_to_store`](crate::data::shuffle::shuffle_to_store) (the
+//! external Map/Reduce shuffle, one resident shard at a time).
+//!
+//! Every shard file carries an FNV-1a checksum in the manifest; loads
+//! verify it, so a truncated or bit-rotted shard errors loudly instead of
+//! silently corrupting a fit.
+
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::cluster::partition::FeaturePartition;
+use crate::cluster::protocol::crc_u32;
+use crate::data::dataset::Dataset;
+use crate::data::shuffle::FeatureShard;
+use crate::data::sparse::CscMatrix;
+use crate::error::{DlrError, Result};
+use crate::util::json::{self, Json};
+
+const MANIFEST_FILE: &str = "manifest.json";
+const Y_FILE: &str = "y.bin";
+const MANIFEST_KIND: &str = "dglmnet-shard-store";
+const MANIFEST_VERSION: usize = 1;
+
+const SHARD_MAGIC: &[u8; 4] = b"DGLS";
+const Y_MAGIC: &[u8; 4] = b"DGLY";
+
+// FNV-1a (same constants as the protocol checksums).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Per-machine shard metadata recorded in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub machine: usize,
+    /// Features this machine owns.
+    pub local_features: usize,
+    pub nnz: usize,
+    /// `crc_u32` of the shard's ascending global column ids — the same
+    /// identity the `Join` handshake announces, so a leader validates
+    /// remote workers against the manifest without loading any shard.
+    pub cols_checksum: u64,
+    /// FNV-1a over the entire shard file (header included).
+    pub payload_checksum: u64,
+}
+
+/// The store manifest: dataset shape, partition spec, shard identities.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreManifest {
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub machines: usize,
+    /// Human-readable partition spec (informational — the binding identity
+    /// is the per-shard column lists in the shard files).
+    pub partition: String,
+    pub shards: Vec<ShardMeta>,
+}
+
+impl StoreManifest {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".into(), Json::Str(MANIFEST_KIND.into()));
+        m.insert("version".into(), Json::Num(MANIFEST_VERSION as f64));
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("n".into(), Json::Num(self.n as f64));
+        m.insert("p".into(), Json::Num(self.p as f64));
+        m.insert("machines".into(), Json::Num(self.machines as f64));
+        m.insert("partition".into(), Json::Str(self.partition.clone()));
+        m.insert(
+            "shards".into(),
+            Json::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        let mut sm = std::collections::BTreeMap::new();
+                        sm.insert("machine".into(), Json::Num(s.machine as f64));
+                        sm.insert(
+                            "local_features".into(),
+                            Json::Num(s.local_features as f64),
+                        );
+                        sm.insert("nnz".into(), Json::Num(s.nnz as f64));
+                        sm.insert(
+                            "cols_checksum".into(),
+                            Json::Str(format!("{:016x}", s.cols_checksum)),
+                        );
+                        sm.insert(
+                            "payload_checksum".into(),
+                            Json::Str(format!("{:016x}", s.payload_checksum)),
+                        );
+                        Json::Obj(sm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        if doc.get("kind").and_then(Json::as_str) != Some(MANIFEST_KIND) {
+            return Err(DlrError::parse("store manifest", "not a shard-store manifest"));
+        }
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != MANIFEST_VERSION {
+            return Err(DlrError::parse(
+                "store manifest",
+                format!("unsupported version {version}"),
+            ));
+        }
+        let num = |key: &str| -> Result<usize> {
+            doc.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                DlrError::parse("store manifest", format!("missing '{key}'"))
+            })
+        };
+        let hex = |v: Option<&Json>, key: &str| -> Result<u64> {
+            let s = v.and_then(Json::as_str).ok_or_else(|| {
+                DlrError::parse("store manifest", format!("missing '{key}'"))
+            })?;
+            u64::from_str_radix(s, 16)
+                .map_err(|_| DlrError::parse("store manifest", format!("bad hex '{key}'")))
+        };
+        let shards = doc
+            .get("shards")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| DlrError::parse("store manifest", "missing 'shards'"))?
+            .iter()
+            .map(|s| -> Result<ShardMeta> {
+                let f = |key: &str| -> Result<usize> {
+                    s.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                        DlrError::parse("store manifest", format!("missing shard '{key}'"))
+                    })
+                };
+                Ok(ShardMeta {
+                    machine: f("machine")?,
+                    local_features: f("local_features")?,
+                    nnz: f("nnz")?,
+                    cols_checksum: hex(s.get("cols_checksum"), "cols_checksum")?,
+                    payload_checksum: hex(s.get("payload_checksum"), "payload_checksum")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let manifest = Self {
+            name: doc
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("store")
+                .to_string(),
+            n: num("n")?,
+            p: num("p")?,
+            machines: num("machines")?,
+            partition: doc
+                .get("partition")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            shards,
+        };
+        if manifest.shards.len() != manifest.machines {
+            return Err(DlrError::parse(
+                "store manifest",
+                format!(
+                    "{} shard entries but machines = {}",
+                    manifest.shards.len(),
+                    manifest.machines
+                ),
+            ));
+        }
+        if manifest.shards.iter().map(|s| s.local_features).sum::<usize>() != manifest.p {
+            return Err(DlrError::parse(
+                "store manifest",
+                "shard column counts do not cover the feature space",
+            ));
+        }
+        Ok(manifest)
+    }
+}
+
+/// Handle to an on-disk shard store. Cheap to clone (directory + manifest);
+/// shard payloads are read on demand, one machine at a time.
+#[derive(Debug, Clone)]
+pub struct ShardStore {
+    dir: PathBuf,
+    manifest: StoreManifest,
+}
+
+impl ShardStore {
+    /// Open an existing store and validate its manifest.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            DlrError::Data(format!(
+                "cannot open shard store at {} ({e}) — create one with `dglmnet shard`",
+                dir.display()
+            ))
+        })?;
+        let manifest = StoreManifest::from_json(&json::parse(&text)?)?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Write a store from an in-memory dataset (the thin adapter the
+    /// in-memory constructors use, and the fast path of `dglmnet shard`).
+    /// Shards are built and written one machine at a time, so the peak
+    /// overhead beyond the input dataset is a single shard.
+    pub fn create(
+        dir: impl AsRef<Path>,
+        ds: &Dataset,
+        partition: &FeaturePartition,
+        partition_spec: &str,
+    ) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let csc = ds.x.to_csc();
+        let n = ds.n_examples();
+        let p = ds.n_features();
+        let mut shards = Vec::with_capacity(partition.machines());
+        for k in 0..partition.machines() {
+            let global_cols = partition.features_of(k);
+            let cols_usize: Vec<usize> =
+                global_cols.iter().map(|&c| c as usize).collect();
+            let shard = FeatureShard {
+                machine: k,
+                global_cols,
+                csc: csc.select_cols(&cols_usize),
+            };
+            shards.push(write_shard_file(&shard_path(&dir, k), &shard, n, p)?);
+        }
+        write_y_file(&dir.join(Y_FILE), &ds.y)?;
+        let manifest = StoreManifest {
+            name: ds.name.clone(),
+            n,
+            p,
+            machines: partition.machines(),
+            partition: partition_spec.to_string(),
+            shards,
+        };
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            format!("{}\n", manifest.to_json()),
+        )?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Finalize a store whose shard files are already on disk (the
+    /// external shuffle writes them one reducer at a time): write `y.bin`
+    /// and the manifest, and return the opened handle.
+    pub fn finish_manifest(
+        dir: impl AsRef<Path>,
+        manifest: StoreManifest,
+        y: &[f32],
+    ) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        if y.len() != manifest.n {
+            return Err(DlrError::Data(format!(
+                "{} labels but the manifest says n = {}",
+                y.len(),
+                manifest.n
+            )));
+        }
+        write_y_file(&dir.join(Y_FILE), y)?;
+        std::fs::write(
+            dir.join(MANIFEST_FILE),
+            format!("{}\n", manifest.to_json()),
+        )?;
+        Ok(Self { dir, manifest })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    pub fn n(&self) -> usize {
+        self.manifest.n
+    }
+
+    pub fn p(&self) -> usize {
+        self.manifest.p
+    }
+
+    pub fn machines(&self) -> usize {
+        self.manifest.machines
+    }
+
+    /// The labels — the only O(n) payload a leader loads.
+    pub fn load_y(&self) -> Result<Vec<f32>> {
+        let y = read_y_file(&self.dir.join(Y_FILE))?;
+        if y.len() != self.manifest.n {
+            return Err(DlrError::Data(format!(
+                "y.bin holds {} labels but the manifest says n = {}",
+                y.len(),
+                self.manifest.n
+            )));
+        }
+        Ok(y)
+    }
+
+    /// Load machine `k`'s full shard (header + CSC payload), verifying the
+    /// manifest checksum — the *worker-side* read.
+    pub fn load_shard(&self, machine: usize) -> Result<FeatureShard> {
+        let meta = self.shard_meta(machine)?;
+        let (shard, payload_checksum) =
+            read_shard_file(&shard_path(&self.dir, machine), machine)?;
+        if payload_checksum != meta.payload_checksum {
+            return Err(DlrError::Data(format!(
+                "shard {machine} payload checksum mismatch (file {payload_checksum:016x}, \
+                 manifest {:016x}) — the store is corrupt or was partially rewritten",
+                meta.payload_checksum
+            )));
+        }
+        if shard.csc.n_rows != self.manifest.n
+            || shard.global_cols.len() != meta.local_features
+            || shard.csc.nnz() != meta.nnz
+            || crc_u32(&shard.global_cols) != meta.cols_checksum
+        {
+            return Err(DlrError::Data(format!(
+                "shard {machine} does not match its manifest entry"
+            )));
+        }
+        Ok(shard)
+    }
+
+    /// Machine `k`'s ascending global column ids, read from the shard file
+    /// *header only* — the leader's O(p)-total view of the partition; the
+    /// O(nnz) CSC payload is never touched.
+    pub fn shard_cols(&self, machine: usize) -> Result<Vec<u32>> {
+        let meta = self.shard_meta(machine)?;
+        let cols = read_shard_cols(&shard_path(&self.dir, machine), machine)?;
+        if cols.len() != meta.local_features || crc_u32(&cols) != meta.cols_checksum {
+            return Err(DlrError::Data(format!(
+                "shard {machine} column header does not match the manifest"
+            )));
+        }
+        Ok(cols)
+    }
+
+    /// Reconstruct the feature partition from the shard headers (O(p)).
+    pub fn partition(&self) -> Result<FeaturePartition> {
+        let lists: Vec<Vec<u32>> = (0..self.machines())
+            .map(|k| self.shard_cols(k))
+            .collect::<Result<_>>()?;
+        FeaturePartition::from_feature_lists(&lists, self.p())
+    }
+
+    fn shard_meta(&self, machine: usize) -> Result<&ShardMeta> {
+        self.manifest
+            .shards
+            .iter()
+            .find(|s| s.machine == machine)
+            .ok_or_else(|| {
+                DlrError::Data(format!(
+                    "machine {machine} is not in this {}-machine store",
+                    self.machines()
+                ))
+            })
+    }
+}
+
+/// Path of machine `k`'s shard file inside `dir`.
+pub fn shard_path(dir: &Path, machine: usize) -> PathBuf {
+    dir.join(format!("shard_{machine:04}.bfcsc"))
+}
+
+// ---------------------------------------------------------------------------
+// Binary shard / label files
+// ---------------------------------------------------------------------------
+
+struct ChecksumWriter<W: Write> {
+    inner: W,
+    hash: u64,
+}
+
+impl<W: Write> ChecksumWriter<W> {
+    fn new(inner: W) -> Self {
+        Self { inner, hash: FNV_OFFSET }
+    }
+}
+
+impl<W: Write> Write for ChecksumWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.hash = fnv1a(self.hash, &buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+fn put_u32s(out: &mut impl Write, values: impl Iterator<Item = u32>) -> Result<()> {
+    for v in values {
+        out.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Write one by-feature shard file; returns its manifest entry.
+pub fn write_shard_file(
+    path: &Path,
+    shard: &FeatureShard,
+    n: usize,
+    p: usize,
+) -> Result<ShardMeta> {
+    let file = BufWriter::new(std::fs::File::create(path)?);
+    let mut w = ChecksumWriter::new(file);
+    // header (checksummed like the payload — corruption anywhere fails)
+    w.write_all(SHARD_MAGIC)?;
+    w.write_all(&1u32.to_le_bytes())?; // version
+    w.write_all(&(shard.machine as u32).to_le_bytes())?;
+    w.write_all(&(n as u32).to_le_bytes())?;
+    w.write_all(&(p as u32).to_le_bytes())?;
+    w.write_all(&(shard.global_cols.len() as u32).to_le_bytes())?;
+    w.write_all(&(shard.csc.nnz() as u64).to_le_bytes())?;
+    put_u32s(&mut w, shard.global_cols.iter().copied())?;
+    // payload: CSC indptr (u64), row indices (u32), values (f32 bits)
+    for &v in &shard.csc.indptr {
+        w.write_all(&(v as u64).to_le_bytes())?;
+    }
+    put_u32s(&mut w, shard.csc.indices.iter().copied())?;
+    put_u32s(&mut w, shard.csc.values.iter().map(|v| v.to_bits()))?;
+    let payload_checksum = w.hash;
+    w.flush()?;
+    Ok(ShardMeta {
+        machine: shard.machine,
+        local_features: shard.global_cols.len(),
+        nnz: shard.csc.nnz(),
+        cols_checksum: crc_u32(&shard.global_cols),
+        payload_checksum,
+    })
+}
+
+struct ShardReader {
+    bytes: Vec<u8>,
+    pos: usize,
+}
+
+impl ShardReader {
+    fn take(&mut self, len: usize) -> Result<&[u8]> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| DlrError::parse("shard file", "truncated"))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn u32_vec(&mut self, len: usize) -> Result<Vec<u32>> {
+        let s = self.take(len.checked_mul(4).ok_or_else(|| {
+            DlrError::parse("shard file", "length overflow")
+        })?)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Decoded shard-file header (everything before the column list).
+struct ShardHeader {
+    n: usize,
+    local_p: usize,
+    nnz: usize,
+}
+
+/// Fixed-size prefix of a shard file: magic(4) + version(4) + machine(4) +
+/// n(4) + p(4) + local_p(4) + nnz(8).
+const SHARD_HEADER_BYTES: usize = 32;
+
+fn parse_shard_header(
+    r: &mut ShardReader,
+    path: &Path,
+    machine: usize,
+) -> Result<ShardHeader> {
+    if r.take(4)? != SHARD_MAGIC {
+        return Err(DlrError::parse("shard file", "bad magic (not a .bfcsc shard)"));
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        return Err(DlrError::parse(
+            "shard file",
+            format!("unsupported version {version}"),
+        ));
+    }
+    let file_machine = r.u32()? as usize;
+    if file_machine != machine {
+        return Err(DlrError::Data(format!(
+            "shard file {} belongs to machine {file_machine}, not {machine}",
+            path.display()
+        )));
+    }
+    let n = r.u32()? as usize;
+    let _p = r.u32()? as usize;
+    let local_p = r.u32()? as usize;
+    let nnz = r.u64()? as usize;
+    Ok(ShardHeader { n, local_p, nnz })
+}
+
+/// Header-only read: the shard's global column ids. This is the leader's
+/// view of a shard, so it must stay O(local_p): only the fixed header and
+/// the column list are read — the O(nnz) CSC payload bytes never enter
+/// this process.
+fn read_shard_cols(path: &Path, machine: usize) -> Result<Vec<u32>> {
+    let mut file = std::fs::File::open(path).map_err(|e| {
+        DlrError::Data(format!("cannot read shard file {} ({e})", path.display()))
+    })?;
+    let file_len = file.metadata()?.len();
+    let mut head = vec![0u8; SHARD_HEADER_BYTES];
+    file.read_exact(&mut head)
+        .map_err(|_| DlrError::parse("shard file", "truncated"))?;
+    let mut r = ShardReader { bytes: head, pos: 0 };
+    let header = parse_shard_header(&mut r, path, machine)?;
+    // a corrupt header must not drive a huge allocation or read: the
+    // column list has to fit inside the file
+    let cols_bytes = header.local_p.checked_mul(4).ok_or_else(|| {
+        DlrError::parse("shard file", "length overflow")
+    })?;
+    if (SHARD_HEADER_BYTES + cols_bytes) as u64 > file_len {
+        return Err(DlrError::parse("shard file", "truncated column header"));
+    }
+    let mut buf = vec![0u8; cols_bytes];
+    file.read_exact(&mut buf)
+        .map_err(|_| DlrError::parse("shard file", "truncated column header"))?;
+    let mut r = ShardReader { bytes: buf, pos: 0 };
+    r.u32_vec(header.local_p)
+}
+
+/// Full read: the shard plus the FNV checksum over the entire file (the
+/// worker-side load — legitimately O(nnz)).
+fn read_shard_file(path: &Path, machine: usize) -> Result<(FeatureShard, u64)> {
+    let bytes = std::fs::read(path).map_err(|e| {
+        DlrError::Data(format!("cannot read shard file {} ({e})", path.display()))
+    })?;
+    let mut r = ShardReader { bytes, pos: 0 };
+    let header = parse_shard_header(&mut r, path, machine)?;
+    let ShardHeader { n, local_p, nnz } = header;
+    let checksum = fnv1a(FNV_OFFSET, &r.bytes);
+    let global_cols = r.u32_vec(local_p)?;
+    let mut indptr = Vec::with_capacity(local_p + 1);
+    for _ in 0..=local_p {
+        indptr.push(r.u64()? as usize);
+    }
+    if indptr.first() != Some(&0) || indptr.last() != Some(&nnz) {
+        return Err(DlrError::parse("shard file", "inconsistent indptr"));
+    }
+    if indptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(DlrError::parse("shard file", "non-monotone indptr"));
+    }
+    let indices = r.u32_vec(nnz)?;
+    if indices.iter().any(|&i| i as usize >= n) {
+        return Err(DlrError::parse("shard file", "row index out of range"));
+    }
+    let values: Vec<f32> = r.u32_vec(nnz)?.into_iter().map(f32::from_bits).collect();
+    if r.pos != r.bytes.len() {
+        return Err(DlrError::parse("shard file", "trailing garbage"));
+    }
+    let csc = CscMatrix { n_rows: n, n_cols: local_p, indptr, indices, values };
+    Ok((FeatureShard { machine, global_cols, csc }, checksum))
+}
+
+fn write_y_file(path: &Path, y: &[f32]) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(Y_MAGIC)?;
+    w.write_all(&(y.len() as u32).to_le_bytes())?;
+    put_u32s(&mut w, y.iter().map(|v| v.to_bits()))?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_y_file(path: &Path) -> Result<Vec<f32>> {
+    let mut file = std::fs::File::open(path)
+        .map_err(|e| DlrError::Data(format!("cannot read {} ({e})", path.display())))?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)?;
+    let mut r = ShardReader { bytes, pos: 0 };
+    if r.take(4)? != Y_MAGIC {
+        return Err(DlrError::parse("y.bin", "bad magic"));
+    }
+    let n = r.u32()? as usize;
+    let y: Vec<f32> = r.u32_vec(n)?.into_iter().map(f32::from_bits).collect();
+    if r.pos != r.bytes.len() {
+        return Err(DlrError::parse("y.bin", "trailing garbage"));
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::PartitionStrategy;
+    use crate::data::shuffle::shard_in_memory;
+    use crate::data::synth;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dglmnet_store_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn create_open_load_round_trips_bit_exactly() {
+        let ds = synth::webspam_like(120, 500, 9, 77);
+        let part =
+            FeaturePartition::build(PartitionStrategy::RoundRobin, 500, 3, None);
+        let dir = tmp("roundtrip");
+        let store = ShardStore::create(&dir, &ds, &part, "round-robin").unwrap();
+        assert_eq!(store.n(), 120);
+        assert_eq!(store.p(), 500);
+        assert_eq!(store.machines(), 3);
+
+        let reopened = ShardStore::open(&dir).unwrap();
+        assert_eq!(reopened.manifest(), store.manifest());
+        let y = reopened.load_y().unwrap();
+        for (a, b) in y.iter().zip(&ds.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mem = shard_in_memory(&ds.x, &part);
+        for k in 0..3 {
+            let loaded = reopened.load_shard(k).unwrap();
+            assert_eq!(loaded.machine, mem[k].machine);
+            assert_eq!(loaded.global_cols, mem[k].global_cols);
+            assert_eq!(loaded.csc.indptr, mem[k].csc.indptr);
+            assert_eq!(loaded.csc.indices, mem[k].csc.indices);
+            for (a, b) in loaded.csc.values.iter().zip(&mem[k].csc.values) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // header-only read agrees with the full read
+            assert_eq!(reopened.shard_cols(k).unwrap(), loaded.global_cols);
+        }
+        // partition reconstruction covers the feature space
+        let rebuilt = reopened.partition().unwrap();
+        for k in 0..3 {
+            assert_eq!(rebuilt.features_of(k), mem[k].global_cols);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_payload_is_rejected() {
+        let ds = synth::dna_like(60, 24, 4, 78);
+        let part = FeaturePartition::build(PartitionStrategy::Contiguous, 24, 2, None);
+        let dir = tmp("corrupt");
+        let store = ShardStore::create(&dir, &ds, &part, "contiguous").unwrap();
+        let path = shard_path(&dir, 1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // flip a value bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.load_shard(1).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // the untouched shard still loads
+        store.load_shard(0).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_shard_file_errors_cleanly() {
+        let ds = synth::dna_like(60, 24, 4, 79);
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 24, 2, None);
+        let dir = tmp("truncated");
+        let store = ShardStore::create(&dir, &ds, &part, "round-robin").unwrap();
+        let path = shard_path(&dir, 0);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load_shard(0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_store_gives_actionable_error() {
+        let err = ShardStore::open(tmp("missing")).unwrap_err().to_string();
+        assert!(err.contains("dglmnet shard"), "{err}");
+    }
+
+    #[test]
+    fn manifest_rejects_incoherent_shapes() {
+        let ds = synth::dna_like(40, 10, 3, 80);
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 10, 2, None);
+        let dir = tmp("badmanifest");
+        let store = ShardStore::create(&dir, &ds, &part, "round-robin").unwrap();
+        let mut doc = store.manifest().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("p".into(), Json::Num(11.0));
+        }
+        assert!(StoreManifest::from_json(&doc).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

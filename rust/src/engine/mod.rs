@@ -67,6 +67,23 @@ pub trait SubproblemEngine {
         out: &mut SweepResult,
     ) -> Result<()>;
 
+    /// Per-shard λ_max contribution: `max_j |Σ_i x_ij y_i| / 2` over the
+    /// shard's local features, with each feature's sum accumulated in f64
+    /// in ascending example order — **bit-identical** per feature to the
+    /// leader-side [`lambda_max`](crate::solver::regpath::lambda_max) scan
+    /// of the full dataset (a CSC column stores exactly the CSR row-order
+    /// contributions of that feature). The leader max-reduces these over
+    /// machines, which is exact: max is order-independent and the feature
+    /// partition is disjoint.
+    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64>;
+
+    /// Sparse shard-local margins product `out_i = Σ_{j ∈ shard} β_j x_ij`
+    /// (f64 accumulation per example, emitted as f32). The distributed
+    /// warmstart install sums these disjoint-feature contributions across
+    /// machines to rebuild the global margins without any process holding
+    /// X. Not a hot path — one call per warmstart install.
+    fn margins_into(&mut self, beta_local: &[f32], out: &mut SparseVec) -> Result<()>;
+
     /// Allocating convenience wrapper (tests, one-shot callers).
     fn sweep_alloc(
         &mut self,

@@ -114,6 +114,46 @@ impl SubproblemEngine for NativeEngine {
         Ok(())
     }
 
+    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64> {
+        debug_assert_eq!(y.len(), self.n);
+        let mut best = 0f64;
+        for j in 0..self.shard.csc.n_cols {
+            let (rows, vals) = self.shard.csc.col(j);
+            let mut g = 0f64;
+            for (&i, &v) in rows.iter().zip(vals) {
+                g += v as f64 * y[i as usize] as f64;
+            }
+            best = best.max(g.abs() / 2.0);
+        }
+        Ok(best)
+    }
+
+    fn margins_into(
+        &mut self,
+        beta_local: &[f32],
+        out: &mut crate::data::sparse::SparseVec,
+    ) -> Result<()> {
+        debug_assert_eq!(beta_local.len(), self.shard.csc.n_cols);
+        let mut acc = vec![0f64; self.n];
+        for (j, &b) in beta_local.iter().enumerate() {
+            let b = b as f64;
+            if b == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.shard.csc.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                acc[i as usize] += b * v as f64;
+            }
+        }
+        out.clear(self.n);
+        for (i, &v) in acc.iter().enumerate() {
+            if v != 0.0 {
+                out.push(i as u32, v as f32);
+            }
+        }
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -254,6 +294,39 @@ mod tests {
         let again = persistent.sweep_alloc(&w1, &z1, &beta, 0.4, 1e-6).unwrap();
         assert_eq!(again.delta_local, cold.delta_local);
         assert_eq!(again.dmargins, cold.dmargins);
+    }
+
+    #[test]
+    fn lambda_max_local_matches_full_scan_on_one_shard() {
+        // a single shard owns every feature, so its local λ_max IS the
+        // dataset's — and must match the leader-side scan bit-for-bit
+        let ds = synth::webspam_like(150, 400, 10, 6);
+        let mut eng = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let got = eng.lambda_max_local(&ds.y).unwrap();
+        let want = crate::solver::regpath::lambda_max(&ds);
+        assert_eq!(want.to_bits(), got.to_bits());
+    }
+
+    #[test]
+    fn margins_into_matches_by_example_spmv() {
+        let ds = synth::dna_like(120, 30, 4, 7);
+        let mut eng = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let beta: Vec<f32> = (0..30)
+            .map(|j| if j % 4 == 0 { (j as f32) * 0.1 - 1.0 } else { 0.0 })
+            .collect();
+        let mut out = crate::data::sparse::SparseVec::new(0);
+        eng.margins_into(&beta, &mut out).unwrap();
+        assert_eq!(out.dim, 120);
+        let got = out.to_dense();
+        let want = ds.x.margins(&beta);
+        for i in 0..120 {
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                "margins[{i}]: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
     }
 
     #[test]

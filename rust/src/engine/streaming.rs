@@ -155,6 +155,72 @@ impl SubproblemEngine for StreamingEngine {
         Ok(())
     }
 
+    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64> {
+        debug_assert_eq!(y.len(), self.n);
+        let mut best = 0f64;
+        let mut file = BufReader::new(std::fs::File::open(&self.path)?);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if file.read_line(&mut line)? == 0 {
+                break;
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let j = self.parse_line(trimmed)?;
+            if j >= self.p_local {
+                return Err(DlrError::Data(format!("feature {j} out of shard range")));
+            }
+            let mut g = 0f64;
+            for &(i, v) in &self.postings {
+                g += v as f64 * y[i as usize] as f64;
+            }
+            best = best.max(g.abs() / 2.0);
+        }
+        Ok(best)
+    }
+
+    fn margins_into(
+        &mut self,
+        beta_local: &[f32],
+        out: &mut crate::data::sparse::SparseVec,
+    ) -> Result<()> {
+        debug_assert_eq!(beta_local.len(), self.p_local);
+        let mut acc = vec![0f64; self.n];
+        let mut file = BufReader::new(std::fs::File::open(&self.path)?);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if file.read_line(&mut line)? == 0 {
+                break;
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let j = self.parse_line(trimmed)?;
+            if j >= self.p_local {
+                return Err(DlrError::Data(format!("feature {j} out of shard range")));
+            }
+            let b = beta_local[j] as f64;
+            if b == 0.0 {
+                continue;
+            }
+            for &(i, v) in &self.postings {
+                acc[i as usize] += b * v as f64;
+            }
+        }
+        out.clear(self.n);
+        for (i, &v) in acc.iter().enumerate() {
+            if v != 0.0 {
+                out.push(i as u32, v as f32);
+            }
+        }
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "streaming"
     }

@@ -165,6 +165,49 @@ impl SubproblemEngine for XlaEngine {
         Ok(())
     }
 
+    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64> {
+        // plain CPU scan of the retained sparse shard: λ_max is a one-shot
+        // setup statistic, not worth a kernel launch, and the f64 column
+        // sums must match the native computation bit-for-bit
+        debug_assert_eq!(y.len(), self.n);
+        let mut best = 0f64;
+        for j in 0..self.shard.csc.n_cols {
+            let (rows, vals) = self.shard.csc.col(j);
+            let mut g = 0f64;
+            for (&i, &v) in rows.iter().zip(vals) {
+                g += v as f64 * y[i as usize] as f64;
+            }
+            best = best.max(g.abs() / 2.0);
+        }
+        Ok(best)
+    }
+
+    fn margins_into(
+        &mut self,
+        beta_local: &[f32],
+        out: &mut crate::data::sparse::SparseVec,
+    ) -> Result<()> {
+        debug_assert_eq!(beta_local.len(), self.shard.csc.n_cols);
+        let mut acc = vec![0f64; self.n];
+        for (j, &b) in beta_local.iter().enumerate() {
+            let b = b as f64;
+            if b == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.shard.csc.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                acc[i as usize] += b * v as f64;
+            }
+        }
+        out.clear(self.n);
+        for (i, &v) in acc.iter().enumerate() {
+            if v != 0.0 {
+                out.push(i as u32, v as f32);
+            }
+        }
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "xla"
     }

@@ -35,7 +35,7 @@
 //! use dglmnet::data::synth;
 //! use dglmnet::solver::{DGlmnetSolver, Estimator, RecordingObserver};
 //!
-//! let ds = synth::epsilon_like(2_000, 200, 7).split(0.8, 7);
+//! let ds = synth::epsilon_like(2_000, 200, 7).split(0.8, 7).unwrap();
 //! let cfg = TrainConfig::builder().machines(4).lambda(2.0).build();
 //! let mut solver = DGlmnetSolver::from_dataset(&ds.train, &cfg).unwrap();
 //! let mut obs = RecordingObserver::default();
@@ -75,6 +75,43 @@
 //! //   let mut driver = solver.driver_from_checkpoint(&ck)?;
 //! println!("converged = {} at f = {}", fit.converged, fit.objective);
 //! ```
+//!
+//! ## Run from a sharded store — the out-of-core data plane
+//!
+//! The paper's premise is a dataset too large for any one machine. The
+//! [`data::store::ShardStore`] makes that physical: `dglmnet shard` (or
+//! [`data::shuffle::shuffle_to_store`], the external Map/Reduce shuffle)
+//! writes one by-feature shard file per machine plus a JSON manifest and a
+//! small `y.bin`. At fit time every worker self-loads **only its own**
+//! shard file — in-process threads and remote `dglmnet worker --store`
+//! processes alike — and the leader holds just `y`, β and the margins:
+//! λ_max is a distributed reduce of per-shard gradients, line search and
+//! loss are O(n) functions of the margins, so **no process ever
+//! materializes the whole design matrix**. Trajectories are bit-identical
+//! to the in-memory path (which is itself a thin adapter that writes a
+//! temp store).
+//!
+//! ```no_run
+//! use dglmnet::config::TrainConfig;
+//! use dglmnet::data::store::ShardStore;
+//! use dglmnet::solver::DGlmnetSolver;
+//!
+//! // preprocessing (once): `dglmnet shard --kind webspam --machines 4 --out store/`
+//! let store = ShardStore::open("store").unwrap();
+//! let cfg = TrainConfig::builder().machines(store.machines()).lambda(0.5).build();
+//! let mut solver = DGlmnetSolver::from_store(&store, &cfg).unwrap();
+//! let fit = solver.fit_lambda(0.5).unwrap();
+//! println!("f = {} with a leader that never held X", fit.objective);
+//! ```
+//!
+//! Over sockets the leader validates every `Join` handshake against the
+//! manifest's shard identities (machine index, dataset shape, owned-column
+//! checksum), so a worker holding a differently-partitioned or
+//! wrong-shaped store is rejected before it can corrupt a fit. Note the
+//! handshake checks *shape* identity, not content: a re-shard that keeps
+//! the same partition but different values is indistinguishable at join
+//! time — deployments must version store directories (each shard file's
+//! payload checksum in the manifest makes two stores easy to diff).
 
 pub mod baselines;
 pub mod bench_harness;

@@ -11,9 +11,12 @@ use dglmnet::baselines::{
     DistributedOnlineEstimator, ShotgunEstimator, TruncatedGradientEstimator,
 };
 use dglmnet::cli::{App, CommandSpec, ParsedArgs};
+use dglmnet::cluster::partition::PartitionStrategy;
 use dglmnet::cluster::transport::SocketTransport;
 use dglmnet::cluster::WorkerNode;
 use dglmnet::config::{EngineKind, ExchangeStrategy, PathConfig, TrainConfig, TransportKind};
+use dglmnet::data::shuffle::shuffle_to_store;
+use dglmnet::data::store::ShardStore;
 use dglmnet::data::{dataset::Dataset, libsvm, synth};
 use dglmnet::error::{DlrError, Result};
 use dglmnet::metrics;
@@ -41,7 +44,23 @@ fn app() -> App {
                 .opt("out", "output by-feature path", Some("data.byfeature")),
         )
         .command(
-            CommandSpec::new("train", "train at one lambda on a libsvm file or synthetic data")
+            CommandSpec::new("shard", "write a sharded on-disk store (per-machine by-feature shard files + manifest) for out-of-core training")
+                .opt("input", "libsvm path (omit to use --kind synthetic data)", None)
+                .opt("kind", "synthetic kind when no --input", Some("dna"))
+                .opt("examples", "synthetic examples", Some("10000"))
+                .opt("features", "synthetic features", Some("400"))
+                .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
+                .opt("seed", "rng seed (drives --train-frac splitting too)", Some("1"))
+                .opt("train-frac", "shard only this train fraction (same split as `train`; 1.0 keeps everything)", Some("1.0"))
+                .opt("machines", "worker shard count M", Some("4"))
+                .opt("workers", "alias for --machines", None)
+                .opt("partition", "round-robin | contiguous | nnz-balanced", Some("round-robin"))
+                .opt("out", "store directory", Some("store"))
+                .flag("in-memory", "build shards from an in-memory CSC instead of the external spill shuffle"),
+        )
+        .command(
+            CommandSpec::new("train", "train at one lambda on a libsvm file, synthetic data, or a sharded store")
+                .opt("store", "sharded store directory (out-of-core: workers self-load shards, leader stays O(n))", None)
                 .opt("input", "libsvm path (omit to use --kind synthetic data)", None)
                 .opt("kind", "synthetic kind when no --input", Some("dna"))
                 .opt("examples", "synthetic examples", Some("10000"))
@@ -92,6 +111,7 @@ fn app() -> App {
             CommandSpec::new("worker", "run one remote worker node and serve the leader over TCP")
                 .opt("connect", "leader address (host:port) to join", None)
                 .opt("machine", "this worker's machine index (0-based)", None)
+                .opt("store", "sharded store directory — load only this machine's shard file", None)
                 .opt("input", "libsvm path — must match the leader's data flags exactly", None)
                 .opt("kind", "synthetic kind when no --input", Some("dna"))
                 .opt("examples", "synthetic examples", Some("10000"))
@@ -153,6 +173,9 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     if let Some(w) = args.get_usize("workers")? {
         // --workers is the protocol-era alias; it wins over --machines
         cfg.machines = w;
+    }
+    if let Some(s) = args.get_str("store") {
+        cfg.store = Some(s.to_string());
     }
     if let Some(s) = args.get_str("transport") {
         cfg.transport = TransportKind::parse(s)
@@ -260,10 +283,7 @@ fn print_fit(name: &str, lambda: f64, fit: &FitResult, test: &Dataset) {
     t.print();
 }
 
-/// The d-GLMNET train path drives the stepwise `FitDriver` directly — this
-/// is the checkpoint/resume/budget workflow the new API exists for.
-fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
-    let cfg = train_config(args)?;
+fn announce_socket(cfg: &TrainConfig) {
     if cfg.transport == TransportKind::Socket {
         println!(
             "listening on {} for {} worker nodes (launch them with \
@@ -271,8 +291,12 @@ fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
             cfg.listen, cfg.machines, cfg.listen
         );
     }
-    let mut solver = DGlmnetSolver::from_dataset(train, &cfg)?;
-    let lambda = cfg.lambda;
+}
+
+/// The d-GLMNET train path drives the stepwise `FitDriver` directly — this
+/// is the checkpoint/resume/budget workflow the stepwise API exists for.
+fn drive_stepwise(args: &ParsedArgs, solver: &mut DGlmnetSolver) -> Result<FitResult> {
+    let lambda = solver.cfg.lambda;
     let mut driver = match args.get_str("resume") {
         Some(path) => {
             let ck = Checkpoint::load(path)?;
@@ -302,6 +326,34 @@ fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
         }
     }
     Ok(driver.finish())
+}
+
+fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
+    let cfg = train_config(args)?;
+    announce_socket(&cfg);
+    let mut solver = DGlmnetSolver::from_dataset(train, &cfg)?;
+    drive_stepwise(args, &mut solver)
+}
+
+/// Out-of-core train path: every worker self-loads its shard file from the
+/// store named by `cfg.store` and the leader touches only the manifest,
+/// the shard headers and `y.bin` — it never constructs a matrix of X.
+fn train_dglmnet_from_store(args: &ParsedArgs) -> Result<FitResult> {
+    let cfg = train_config(args)?;
+    let dir = cfg.store.clone().ok_or_else(|| {
+        DlrError::Cli("the store train path needs --store <dir>".into())
+    })?;
+    let store = ShardStore::open(&dir)?;
+    println!(
+        "store {dir}: {} examples x {} features over {} machines ({} partition)",
+        store.n(),
+        store.p(),
+        store.machines(),
+        store.manifest().partition
+    );
+    announce_socket(&cfg);
+    let mut solver = DGlmnetSolver::from_store(&store, &cfg)?;
+    drive_stepwise(args, &mut solver)
 }
 
 fn train_baseline(kind: &str, args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
@@ -342,17 +394,53 @@ fn train_baseline(kind: &str, args: &ParsedArgs, train: &Dataset) -> Result<FitR
 }
 
 fn cmd_train(args: &ParsedArgs) -> Result<()> {
-    let ds = load_or_generate(args)?;
-    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
     let kind = args.get_str("solver").unwrap_or("dglmnet").to_string();
+    // out-of-core: train straight from a sharded store (no test split —
+    // the store holds exactly the training rows; score separately with
+    // `evaluate`)
+    if args.get_str("store").is_some() {
+        if kind != "dglmnet" {
+            return Err(DlrError::Cli(
+                "--store drives the distributed d-GLMNET solver; the in-memory \
+                 baselines need --input/--kind data"
+                    .into(),
+            ));
+        }
+        let fit = train_dglmnet_from_store(args)?;
+        println!(
+            "store fit @ lambda = {:.5}: f = {:.6}, nnz = {}, {} iters, converged = {}, \
+             {} comm bytes",
+            fit.lambda,
+            fit.objective,
+            fit.nnz(),
+            fit.iterations,
+            fit.converged,
+            fit.comm_bytes
+        );
+        finish_train_output(args, &fit)?;
+        return Ok(());
+    }
+    let ds = load_or_generate(args)?;
+    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1))?;
     let fit = match kind.as_str() {
         "dglmnet" => train_dglmnet(args, &split.train)?,
         other => train_baseline(other, args, &split.train)?,
     };
     print_fit(&kind, fit.lambda, &fit, &split.test);
-    // exact bit pattern so cross-transport runs can be diffed to full
-    // precision (the CI socket job compares this line)
+    finish_train_output(args, &fit)?;
+    Ok(())
+}
+
+/// The machine-readable tail every train run prints: the exact objective
+/// bit pattern (the CI socket job diffs this across transports) and the
+/// leader's peak RSS (the out-of-core job gates this against the full-load
+/// watermark).
+fn finish_train_output(args: &ParsedArgs, fit: &FitResult) -> Result<()> {
     println!("objective_bits={:016x}", fit.objective.to_bits());
+    println!(
+        "leader_peak_rss_bytes={}",
+        dglmnet::util::peak_rss_bytes().unwrap_or(0)
+    );
     if let Some(path) = args.get_str("model-out") {
         fit.model.save(path)?;
         println!("model saved to {path}");
@@ -360,8 +448,74 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
-/// One remote worker node: rebuild the shard the leader's partition assigns
-/// to `--machine` (from data flags identical to the leader's), connect, and
+/// Shard a dataset into an on-disk store: one by-feature shard file per
+/// machine plus the manifest — the preprocessing step of out-of-core
+/// training (`train --store` / `worker --store`).
+fn cmd_shard(args: &ParsedArgs) -> Result<()> {
+    let ds = load_or_generate(args)?;
+    let frac = args.get_f64("train-frac")?.unwrap_or(1.0);
+    if !(0.0..=1.0).contains(&frac) {
+        return Err(DlrError::Cli(format!(
+            "--train-frac must be within [0, 1], got {frac}"
+        )));
+    }
+    let seed = args.get_u64("seed")?.unwrap_or(1);
+    // the SAME deterministic split `train` applies, so a store built with
+    // --train-frac 0.8 holds exactly the rows `dglmnet train` would fit on
+    let ds = if frac < 1.0 { ds.split(frac, seed)?.train } else { ds };
+    let machines = match args.get_usize("workers")? {
+        Some(w) => w,
+        None => args.get_usize("machines")?.unwrap_or(4),
+    };
+    let strategy_name = args.get_str("partition").unwrap_or("round-robin");
+    let strategy = PartitionStrategy::parse(strategy_name)
+        .ok_or_else(|| DlrError::Cli(format!("unknown partition '{strategy_name}'")))?;
+    if machines == 0 {
+        return Err(DlrError::Cli("--machines must be >= 1".into()));
+    }
+    let cfg = TrainConfig::builder().machines(machines).partition(strategy).build();
+    cfg.validate_machines_for(ds.n_features())?;
+    // identical partition to what a leader/worker derives from the same
+    // flags (validated again by the Join handshake at fit time)
+    let partition = DGlmnetSolver::partition_for(&ds, &cfg);
+    let out = args.get_str("out").unwrap_or("store");
+    let store = if args.get_flag("in-memory") {
+        ShardStore::create(out, &ds, &partition, strategy.name())?
+    } else {
+        let (store, stats) = shuffle_to_store(&ds, &partition, strategy.name(), out.as_ref())?;
+        println!(
+            "external shuffle: {} triplets, {} spill bytes, map {:.2}s, reduce {:.2}s",
+            stats.triplets, stats.spill_bytes, stats.map_secs, stats.reduce_secs
+        );
+        store
+    };
+    let mut t = Table::new(
+        format!("sharded store at {out}"),
+        &["machine", "features", "nnz", "cols checksum"],
+    );
+    for s in &store.manifest().shards {
+        t.add_row(vec![
+            s.machine.to_string(),
+            s.local_features.to_string(),
+            s.nnz.to_string(),
+            format!("{:016x}", s.cols_checksum),
+        ]);
+    }
+    t.print();
+    println!(
+        "wrote {out}: {} examples x {} features over {} machines — train with \
+         `dglmnet train --store {out} --workers {}` (workers: `dglmnet worker \
+         --store {out} --machine <k> ...`)",
+        store.n(),
+        store.p(),
+        store.machines(),
+        store.machines()
+    );
+    Ok(())
+}
+
+/// One remote worker node: load its shard from a store (`--store`), or
+/// rebuild it from data flags identical to the leader's; connect, and
 /// serve the node protocol until the leader shuts the fit down.
 fn cmd_worker(args: &ParsedArgs) -> Result<()> {
     let connect = args
@@ -371,29 +525,41 @@ fn cmd_worker(args: &ParsedArgs) -> Result<()> {
     let machine = args
         .get_usize("machine")?
         .ok_or_else(|| DlrError::Cli("--machine is required".into()))?;
-    let ds = load_or_generate(args)?;
-    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
-    let train = &split.train;
     let cfg = train_config(args)?;
-    cfg.validate_machines_for(train.n_features())?;
-    if machine >= cfg.machines {
-        return Err(DlrError::Cli(format!(
-            "--machine {machine} is out of range for a {}-worker cluster",
-            cfg.machines
-        )));
-    }
-    let shard = DGlmnetSolver::shard_for(train, &cfg, machine);
-    let local_features = shard.global_cols.len();
-    let mut node = WorkerNode::from_shard(
-        &cfg,
-        shard,
-        std::sync::Arc::new(train.y.clone()),
-        train.n_features(),
-        &dglmnet::runtime::default_artifacts_dir(),
-    )?;
+    let artifacts = dglmnet::runtime::default_artifacts_dir();
+    let mut node = if let Some(dir) = args.get_str("store") {
+        // out-of-core: read *only this machine's* shard file (+ y.bin)
+        let store = ShardStore::open(dir)?;
+        if machine >= store.machines() {
+            return Err(DlrError::Cli(format!(
+                "--machine {machine} is out of range for the {}-machine store at {dir}",
+                store.machines()
+            )));
+        }
+        WorkerNode::from_store(&cfg, &store, machine, &artifacts)?
+    } else {
+        let ds = load_or_generate(args)?;
+        let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1))?;
+        let train = &split.train;
+        cfg.validate_machines_for(train.n_features())?;
+        if machine >= cfg.machines {
+            return Err(DlrError::Cli(format!(
+                "--machine {machine} is out of range for a {}-worker cluster",
+                cfg.machines
+            )));
+        }
+        let shard = DGlmnetSolver::shard_for(train, &cfg, machine);
+        WorkerNode::from_shard(
+            &cfg,
+            shard,
+            std::sync::Arc::new(train.y.clone()),
+            train.n_features(),
+            &artifacts,
+        )?
+    };
     let timeout = args.get_u64("connect-timeout-secs")?.unwrap_or(30);
     println!(
-        "worker {machine}: {local_features} features, engine {}, joining {connect}",
+        "worker {machine}: engine {}, joining {connect}",
         node.engine_name()
     );
     let mut transport =
@@ -405,7 +571,7 @@ fn cmd_worker(args: &ParsedArgs) -> Result<()> {
 
 fn cmd_path(args: &ParsedArgs) -> Result<()> {
     let ds = load_or_generate(args)?;
-    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1));
+    let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1))?;
     let cfg = train_config(args)?;
     let path_cfg = PathConfig {
         steps: args.get_usize("steps")?.unwrap_or(20),
@@ -455,7 +621,7 @@ fn cmd_online(args: &ParsedArgs) -> Result<()> {
         12,
         args.get_u64("seed")?.unwrap_or(1),
     )?;
-    let split = ds.split(0.8, 1);
+    let split = ds.split(0.8, 1)?;
     let lam_max = dglmnet::solver::lambda_max(&split.train);
     let lambdas: Vec<f64> = (1..=8).map(|i| lam_max * 0.5f64.powi(i)).collect();
     let pts = online_grid_search(
@@ -513,6 +679,7 @@ fn run() -> Result<()> {
         }
         "gen-data" => cmd_gen_data(&parsed),
         "transform" => cmd_transform(&parsed),
+        "shard" => cmd_shard(&parsed),
         "train" => cmd_train(&parsed),
         "worker" => cmd_worker(&parsed),
         "path" => cmd_path(&parsed),

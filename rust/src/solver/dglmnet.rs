@@ -34,6 +34,8 @@
 //! allocates only the O(M) bookkeeping of the comm layer.
 
 use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -45,8 +47,9 @@ use crate::cluster::partition::FeaturePartition;
 use crate::cluster::protocol::crc_f32;
 use crate::config::{ExchangeStrategy, TrainConfig, TransportKind};
 use crate::data::dataset::Dataset;
-use crate::data::shuffle::{shard_in_memory, FeatureShard};
-use crate::data::sparse::{CsrMatrix, SparseVec};
+use crate::data::shuffle::FeatureShard;
+use crate::data::sparse::SparseVec;
+use crate::data::store::ShardStore;
 use crate::engine::SweepResult;
 use crate::error::{DlrError, Result};
 use crate::runtime::default_artifacts_dir;
@@ -59,6 +62,18 @@ use crate::util::timer::PhaseTimer;
 
 /// How long a socket leader waits for all workers to connect.
 const ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Uniquifier for the in-memory adapter's temp stores (several solvers may
+/// coexist in one process — tests, benches, tournaments).
+static TEMP_STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_temp_store_dir() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "dglmnet_tmp_store_{}_{}",
+        std::process::id(),
+        TEMP_STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
 
 /// The engine name remote workers must announce when the leader pins a
 /// concrete engine kind (`Auto` resolves per shard on each host, so it
@@ -156,7 +171,6 @@ pub struct DGlmnetSolver {
     pub(crate) n: usize,
     pub(crate) p: usize,
     pub(crate) y: Vec<f32>,
-    pub(crate) x: CsrMatrix,
     pub(crate) partition: FeaturePartition,
     pub(crate) pool: WorkerPool,
     pub(crate) leader: LeaderCompute,
@@ -174,10 +188,21 @@ pub struct DGlmnetSolver {
     /// resume touched the leader copies); the next step or checkpoint
     /// pushes it before using it.
     pub(crate) workers_dirty: bool,
+    /// Temp store directory backing the in-memory adapter constructors
+    /// (removed on drop). `None` when the caller owns the store.
+    temp_store: Option<PathBuf>,
     /// Current coefficients (warmstart state).
     pub beta: Vec<f32>,
     /// Current margins βᵀx_i, kept consistent with `beta`.
     pub margins: Vec<f32>,
+}
+
+impl Drop for DGlmnetSolver {
+    fn drop(&mut self) {
+        if let Some(dir) = self.temp_store.take() {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
 }
 
 impl DGlmnetSolver {
@@ -211,9 +236,108 @@ impl DGlmnetSolver {
         FeatureShard { machine, global_cols, csc: ds.x.to_csc().select_cols(&cols_usize) }
     }
 
-    /// Build the cluster from a by-example dataset. With the default
-    /// `[cluster] transport = in-process` this partitions features, shards
-    /// in memory, and spawns one worker thread per machine; with
+    /// Build the cluster from an on-disk [`ShardStore`] — the out-of-core
+    /// path: workers self-load their shard files (in-process threads, or
+    /// remote `dglmnet worker --store` processes validated against the
+    /// manifest), and the leader holds only `y`, β and the margins — it
+    /// never constructs a CSR/CSC matrix of X, so its memory is O(n + p)
+    /// regardless of nnz.
+    pub fn from_store(store: &ShardStore, cfg: &TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        Self::validate_store_for(store, cfg)?;
+        let partition = store.partition()?;
+        match cfg.transport {
+            TransportKind::InProcess => {
+                let y = Arc::new(store.load_y()?);
+                let pool = WorkerPool::spawn_from_store(
+                    cfg,
+                    store,
+                    Arc::clone(&y),
+                    default_artifacts_dir(),
+                )?;
+                Self::assemble(y.as_slice(), cfg, partition, pool)
+            }
+            TransportKind::Socket => {
+                let y = store.load_y()?;
+                let pool = WorkerPool::listen_and_accept(
+                    &partition,
+                    store.n(),
+                    pinned_engine(cfg),
+                    cfg.listen.as_str(),
+                    ACCEPT_TIMEOUT,
+                )?;
+                Self::assemble(&y, cfg, partition, pool)
+            }
+        }
+    }
+
+    /// Build the cluster straight from the config's `[data] store` /
+    /// `--store` directory: opens the [`ShardStore`] named by
+    /// [`TrainConfig::store`] and dispatches to
+    /// [`DGlmnetSolver::from_store`] — the entry point for callers that
+    /// route everything through configuration. (The CLI's `train --store`
+    /// path opens the store itself so it can print the manifest summary,
+    /// then calls `from_store` — same sequence.)
+    pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
+        let dir = cfg.store.as_deref().ok_or_else(|| {
+            DlrError::Config(
+                "from_config needs [data] store / --store to name a shard-store \
+                 directory (use from_dataset for in-memory training)"
+                    .into(),
+            )
+        })?;
+        let store = ShardStore::open(dir)?;
+        Self::from_store(&store, cfg)
+    }
+
+    /// Store-driven socket constructor over an already-bound listener:
+    /// bind port 0, hand the concrete address to `dglmnet worker --store`
+    /// processes (or [`spawn_local_socket_workers_from_store`]), then
+    /// accept — the out-of-core acceptance tests use this.
+    ///
+    /// [`spawn_local_socket_workers_from_store`]:
+    /// crate::solver::pool::spawn_local_socket_workers_from_store
+    pub fn from_store_socket(
+        store: &ShardStore,
+        cfg: &TrainConfig,
+        listener: TcpListener,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        Self::validate_store_for(store, cfg)?;
+        let partition = store.partition()?;
+        let y = store.load_y()?;
+        let pool = WorkerPool::accept(
+            &partition,
+            store.n(),
+            pinned_engine(cfg),
+            listener,
+            ACCEPT_TIMEOUT,
+        )?;
+        Self::assemble(&y, cfg, partition, pool)
+    }
+
+    fn validate_store_for(store: &ShardStore, cfg: &TrainConfig) -> Result<()> {
+        cfg.validate_machines_for(store.p())?;
+        if cfg.machines != store.machines() {
+            return Err(DlrError::Config(format!(
+                "the store at {} was sharded for {} machines but the cluster is \
+                 configured for {} — re-shard with `dglmnet shard --machines {}` \
+                 or set [cluster] workers / --workers to {}",
+                store.dir().display(),
+                store.machines(),
+                cfg.machines,
+                cfg.machines,
+                store.machines()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build the cluster from a by-example dataset. This is a thin adapter
+    /// over the store path: with the default `transport = in-process` it
+    /// writes a temp [`ShardStore`] (removed when the solver drops) and the
+    /// workers self-load from it — bit-identical trajectories to the
+    /// store-driven run by construction, pinned in `tests/store.rs`. With
     /// `transport = socket` it listens on `cfg.listen` and admits one
     /// remote `dglmnet worker` process per partition block.
     pub fn from_dataset(ds: &Dataset, cfg: &TrainConfig) -> Result<Self> {
@@ -222,8 +346,19 @@ impl DGlmnetSolver {
         match cfg.transport {
             TransportKind::InProcess => {
                 let partition = Self::partition_for(ds, cfg);
-                let shards = shard_in_memory(&ds.x, &partition);
-                Self::from_shards(ds, cfg, partition, shards)
+                let dir = fresh_temp_store_dir();
+                let built = ShardStore::create(&dir, ds, &partition, cfg.partition.name())
+                    .and_then(|store| Self::from_store(&store, cfg));
+                match built {
+                    Ok(mut solver) => {
+                        solver.temp_store = Some(dir);
+                        Ok(solver)
+                    }
+                    Err(e) => {
+                        let _ = std::fs::remove_dir_all(&dir);
+                        Err(e)
+                    }
+                }
             }
             TransportKind::Socket => {
                 let partition = Self::partition_for(ds, cfg);
@@ -234,7 +369,7 @@ impl DGlmnetSolver {
                     cfg.listen.as_str(),
                     ACCEPT_TIMEOUT,
                 )?;
-                Self::assemble(ds, cfg, partition, pool)
+                Self::assemble(&ds.y, cfg, partition, pool)
             }
         }
     }
@@ -258,11 +393,14 @@ impl DGlmnetSolver {
             listener,
             ACCEPT_TIMEOUT,
         )?;
-        Self::assemble(ds, cfg, partition, pool)
+        Self::assemble(&ds.y, cfg, partition, pool)
     }
 
-    /// Build from pre-sharded by-feature data (the external-shuffle path);
-    /// always in-process — remote workers load their own shards.
+    /// Build from pre-sharded by-feature data already in memory (callers
+    /// that ran [`shuffle_to_feature_shards`] themselves); always
+    /// in-process — remote workers load their own shards.
+    ///
+    /// [`shuffle_to_feature_shards`]: crate::data::shuffle::shuffle_to_feature_shards
     pub fn from_shards(
         ds: &Dataset,
         cfg: &TrainConfig,
@@ -294,19 +432,21 @@ impl DGlmnetSolver {
         let artifacts = default_artifacts_dir();
         let pool =
             WorkerPool::spawn(cfg, shards, &ds.y, ds.n_features(), artifacts)?;
-        Self::assemble(ds, cfg, partition, pool)
+        Self::assemble(&ds.y, cfg, partition, pool)
     }
 
+    /// Final assembly: the leader's state is `y`, β and the margins — the
+    /// O(n + p) footprint. X lives only in the workers (their shards).
     fn assemble(
-        ds: &Dataset,
+        y: &[f32],
         cfg: &TrainConfig,
         partition: FeaturePartition,
         pool: WorkerPool,
     ) -> Result<Self> {
         let artifacts = default_artifacts_dir();
-        let n = ds.n_examples();
-        let p = ds.n_features();
-        let leader = LeaderCompute::new(cfg, &ds.y, &artifacts)?;
+        let n = y.len();
+        let p = partition.n_features();
+        let leader = LeaderCompute::new(cfg, y, &artifacts)?;
         // dense_allreduce reproduces the pre-sparsity baseline: dense
         // charging on every edge, classic reduce-Δm exchange
         let policy = CodecPolicy {
@@ -318,8 +458,7 @@ impl DGlmnetSolver {
             cfg: cfg.clone(),
             n,
             p,
-            y: ds.y.clone(),
-            x: ds.x.clone(),
+            y: y.to_vec(),
             partition,
             pool,
             leader,
@@ -331,6 +470,7 @@ impl DGlmnetSolver {
             est_dm: TreeByteEstimator::new(true),
             est_db: TreeByteEstimator::new(cfg.charge_beta_broadcast),
             workers_dirty: false,
+            temp_store: None,
             beta: vec![0f32; p],
             margins: vec![0f32; n],
         })
@@ -366,18 +506,17 @@ impl DGlmnetSolver {
         &self.partition
     }
 
-    /// λ_max over the training data this solver was built on: at β = 0 the
-    /// per-feature screening value is |Σ_i x_ij y_i| / 2.
-    pub fn lambda_max_internal(&self) -> f64 {
-        let mut grad = vec![0f64; self.p];
-        for i in 0..self.n {
-            let (cols, vals) = self.x.row(i);
-            let y = self.y[i] as f64;
-            for (&c, &v) in cols.iter().zip(vals) {
-                grad[c as usize] += v as f64 * y;
-            }
-        }
-        grad.iter().map(|g| g.abs() / 2.0).fold(0.0, f64::max)
+    /// λ_max over the training data this cluster was built on: at β = 0
+    /// the per-feature screening value is |Σ_i x_ij y_i| / 2. Computed as a
+    /// **distributed max-reduce of per-shard gradients** over the node
+    /// protocol — the leader holds no X, so each worker scans its own
+    /// feature block and reports its local max. Bit-identical to the
+    /// in-memory [`lambda_max`](crate::solver::regpath::lambda_max) scan
+    /// for any machine count and either transport (each per-feature f64
+    /// sum accumulates in the same ascending-example order; max over the
+    /// disjoint partition is exact), pinned in `tests/store.rs`.
+    pub fn lambda_max_distributed(&mut self) -> Result<f64> {
+        self.pool.lambda_max()
     }
 
     /// Reset warmstart state to β = 0. The worker-held shards are synced
@@ -388,13 +527,17 @@ impl DGlmnetSolver {
         self.workers_dirty = true;
     }
 
-    /// Install a warmstart β (margins are rebuilt; worker-held shards are
-    /// synced lazily before the next sweep or checkpoint).
-    pub fn set_beta(&mut self, beta: &[f32]) {
+    /// Install a warmstart β. The margins are rebuilt distributedly: each
+    /// worker computes its shard's Σ_j β_j x_ij product locally and the
+    /// leader sums the disjoint contributions — no process touches the
+    /// whole X. Worker-held shards are then synced lazily before the next
+    /// sweep or checkpoint.
+    pub fn set_beta(&mut self, beta: &[f32]) -> Result<()> {
         assert_eq!(beta.len(), self.p);
         self.beta.copy_from_slice(beta);
-        self.margins = self.x.margins(beta);
+        self.pool.margins_for(beta, &mut self.margins)?;
         self.workers_dirty = true;
+        Ok(())
     }
 
     /// Push (β, margins) to every worker node if the leader copies moved
@@ -460,7 +603,7 @@ impl DGlmnetSolver {
              observers)."]
     pub fn fit(&mut self, warm: Option<&[f32]>) -> Result<FitResult> {
         if let Some(w) = warm {
-            self.set_beta(w);
+            self.set_beta(w)?;
         }
         self.fit_lambda(self.cfg.lambda)
     }

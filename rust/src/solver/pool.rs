@@ -47,8 +47,14 @@ use crate::config::TrainConfig;
 use crate::data::dataset::Dataset;
 use crate::data::shuffle::{shard_in_memory, FeatureShard};
 use crate::data::sparse::SparseVec;
+use crate::data::store::ShardStore;
 use crate::engine::SweepResult;
 use crate::error::{DlrError, Result};
+
+/// A deferred worker-node constructor, run *inside* the worker's own thread
+/// (PJRT clients are thread-bound; store-backed nodes read their own shard
+/// file there, so shard I/O is per-worker and never leader-side).
+type NodeBuilder = Box<dyn FnOnce() -> Result<WorkerNode> + Send + 'static>;
 
 /// What travels to an in-process worker thread: a protocol message, or one
 /// [`TaskExecutor`] job (a tree-node merge) — the latter never exists on a
@@ -117,30 +123,88 @@ impl WorkerPool {
         p: usize,
         artifacts_dir: std::path::PathBuf,
     ) -> Result<Self> {
-        let m = shards.len();
         let n = y.len();
         // one shared copy of the labels for the whole pool (read-only)
         let y = Arc::new(y.to_vec());
+        let global_cols: Vec<Vec<u32>> =
+            shards.iter().map(|s| s.global_cols.clone()).collect();
+        let builders: Vec<NodeBuilder> = shards
+            .into_iter()
+            .map(|shard| {
+                let cfg = cfg.clone();
+                let y = Arc::clone(&y);
+                let dir = artifacts_dir.clone();
+                Box::new(move || WorkerNode::from_shard(&cfg, shard, y, p, &dir))
+                    as NodeBuilder
+            })
+            .collect();
+        Self::spawn_nodes(n, p, global_cols, builders)
+    }
+
+    /// Spawn one in-process worker per machine of an on-disk [`ShardStore`]
+    /// — each worker thread opens and loads **only its own** shard file
+    /// (checksum-verified), so the leader never stages a shard payload.
+    /// `y` is the leader's already-loaded label vector, shared read-only
+    /// with every worker.
+    pub fn spawn_from_store(
+        cfg: &TrainConfig,
+        store: &ShardStore,
+        y: Arc<Vec<f32>>,
+        artifacts_dir: std::path::PathBuf,
+    ) -> Result<Self> {
+        let m = store.machines();
+        let n = store.n();
+        let p = store.p();
+        if y.len() != n {
+            return Err(DlrError::Solver(format!(
+                "{} labels but the store says n = {n}",
+                y.len()
+            )));
+        }
+        // O(p) total: shard headers only, never the CSC payloads
+        let global_cols: Vec<Vec<u32>> =
+            (0..m).map(|k| store.shard_cols(k)).collect::<Result<_>>()?;
+        let builders: Vec<NodeBuilder> = (0..m)
+            .map(|k| {
+                let cfg = cfg.clone();
+                let store = store.clone();
+                let y = Arc::clone(&y);
+                let dir = artifacts_dir.clone();
+                Box::new(move || {
+                    let shard = store.load_shard(k)?;
+                    WorkerNode::from_shard(&cfg, shard, y, p, &dir)
+                }) as NodeBuilder
+            })
+            .collect();
+        Self::spawn_nodes(n, p, global_cols, builders)
+    }
+
+    /// Shared in-process spawn loop: one thread per machine, each building
+    /// its node inside its own thread and serving the protocol over
+    /// channels, plus the task lane for comm-layer merge jobs.
+    fn spawn_nodes(
+        n: usize,
+        p: usize,
+        global_cols: Vec<Vec<u32>>,
+        builders: Vec<NodeBuilder>,
+    ) -> Result<Self> {
+        let m = builders.len();
+        debug_assert_eq!(global_cols.len(), m);
         let (task_done_tx, task_done_rx) = mpsc::channel::<()>();
         let tasks_done = Arc::new(AtomicU64::new(0));
         let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(m);
         let mut task_txs = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
-        let mut global_cols = Vec::with_capacity(m);
 
-        for shard in shards {
-            global_cols.push(shard.global_cols.clone());
+        for build in builders {
             let (tx, rx) = mpsc::channel::<ThreadMsg>();
             let (reply_tx, reply_rx) = mpsc::channel::<NodeMessage>();
             task_txs.push(tx.clone());
             links.push(Box::new(LeaderLink { tx, rx: reply_rx }));
             let task_done_tx = task_done_tx.clone();
             let tasks_done = Arc::clone(&tasks_done);
-            let cfg = cfg.clone();
-            let y = Arc::clone(&y);
-            let dir = artifacts_dir.clone();
             handles.push(std::thread::spawn(move || {
-                let mut node = match WorkerNode::from_shard(&cfg, shard, y, p, &dir) {
+                let mut node = match build() {
                     Ok(node) => node,
                     Err(e) => {
                         let _ = reply_tx.send(NodeMessage::Abort { message: e.to_string() });
@@ -449,6 +513,81 @@ impl WorkerPool {
         self.expect_acks("apply")
     }
 
+    /// Distributed λ_max: every node reports its shard's
+    /// `max_j |Σ_i x_ij y_i| / 2` and the leader max-reduces over
+    /// machines. Exact — each per-feature f64 sum is computed in the same
+    /// ascending-example order as the in-memory scan, the partition is
+    /// disjoint, and max is order-independent — so the result is
+    /// **bit-identical** to [`lambda_max`](crate::solver::regpath::lambda_max)
+    /// on the assembled dataset, for any machine count and either
+    /// transport (pinned in `tests/store.rs`). This is what lets an
+    /// out-of-core leader anchor the regularization path without ever
+    /// holding X.
+    pub fn lambda_max(&mut self) -> Result<f64> {
+        for (k, link) in self.links.iter_mut().enumerate() {
+            link.send(NodeMessage::LambdaMax).map_err(|e| worker_err(k, e))?;
+        }
+        let mut best = 0f64;
+        for (k, link) in self.links.iter_mut().enumerate() {
+            match link.recv().map_err(|e| worker_err(k, e))? {
+                NodeMessage::LambdaMaxed { value } => best = best.max(value),
+                NodeMessage::Abort { message } => {
+                    return Err(DlrError::Solver(format!("worker {k} failed: {message}")))
+                }
+                other => {
+                    return Err(DlrError::Solver(format!(
+                        "worker {k}: expected lambda-maxed, got {}",
+                        other.name()
+                    )))
+                }
+            }
+        }
+        Ok(best)
+    }
+
+    /// Distributed margins rebuild `margins_i = Σ_j β_j x_ij` for a
+    /// warmstart install: each node computes its shard's product from its
+    /// locally-held feature block, and the leader sums the disjoint
+    /// contributions in machine order (f64 accumulation — deterministic
+    /// across transports). `out` is overwritten with the n margins.
+    pub fn margins_for(&mut self, beta: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        for k in 0..self.links.len() {
+            let beta_local: Vec<f32> =
+                self.global_cols[k].iter().map(|&g| beta[g as usize]).collect();
+            self.links[k]
+                .send(NodeMessage::Margins { beta_local })
+                .map_err(|e| worker_err(k, e))?;
+        }
+        let mut acc = vec![0f64; self.n];
+        for (k, link) in self.links.iter_mut().enumerate() {
+            match link.recv().map_err(|e| worker_err(k, e))? {
+                NodeMessage::MarginsPart { part } => {
+                    if part.dim != self.n {
+                        return Err(DlrError::Solver(format!(
+                            "worker {k} returned a margins part of dim {} but n = {}",
+                            part.dim, self.n
+                        )));
+                    }
+                    for (i, v) in part.iter() {
+                        acc[i as usize] += v as f64;
+                    }
+                }
+                NodeMessage::Abort { message } => {
+                    return Err(DlrError::Solver(format!("worker {k} failed: {message}")))
+                }
+                other => {
+                    return Err(DlrError::Solver(format!(
+                        "worker {k}: expected margins-part, got {}",
+                        other.name()
+                    )))
+                }
+            }
+        }
+        out.clear();
+        out.extend(acc.iter().map(|&v| v as f32));
+        Ok(())
+    }
+
     /// Push the full (β, margins) state: each node receives its shard's
     /// slice of `beta` and the complete margins, bit-for-bit (warmstart
     /// installs, resets, legacy-checkpoint resumes).
@@ -681,6 +820,31 @@ pub fn spawn_local_socket_workers(
         .collect()
 }
 
+/// Launch one socket worker *thread* per machine of an on-disk store, each
+/// self-loading its shard file and serving a [`WorkerNode`] over TCP — the
+/// store-driven counterpart of [`spawn_local_socket_workers`], used by the
+/// out-of-core acceptance tests and the socket example. Real deployments
+/// run `dglmnet worker --store <dir> --machine k` processes; the bytes on
+/// the wire are identical.
+pub fn spawn_local_socket_workers_from_store(
+    cfg: &TrainConfig,
+    store: &ShardStore,
+    addr: std::net::SocketAddr,
+) -> Vec<JoinHandle<Result<()>>> {
+    (0..store.machines())
+        .map(|k| {
+            let cfg = cfg.clone();
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let artifacts = crate::runtime::default_artifacts_dir();
+                let mut node = WorkerNode::from_store(&cfg, &store, k, &artifacts)?;
+                let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
+                node.serve(&mut t)
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -798,6 +962,43 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn pool_lambda_max_and_margins_match_leader_side_math() {
+        let ds = synth::dna_like(200, 30, 4, 25);
+        let cfg = TrainConfig::builder()
+            .machines(3)
+            .engine(EngineKind::Native)
+            .build();
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 30, 3, None);
+        let mut pool = WorkerPool::spawn(
+            &cfg,
+            shard_in_memory(&ds.x, &part),
+            &ds.y,
+            30,
+            "artifacts".into(),
+        )
+        .unwrap();
+        // distributed λ_max is bit-identical to the full-dataset scan
+        let lm = pool.lambda_max().unwrap();
+        assert_eq!(lm.to_bits(), crate::solver::regpath::lambda_max(&ds).to_bits());
+        // distributed margins rebuild agrees with the by-example SpMV
+        let beta: Vec<f32> = (0..30)
+            .map(|j| if j % 3 == 0 { 0.1 * (j as f32 + 1.0) } else { 0.0 })
+            .collect();
+        let mut margins = Vec::new();
+        pool.margins_for(&beta, &mut margins).unwrap();
+        let want = ds.x.margins(&beta);
+        assert_eq!(margins.len(), want.len());
+        for i in 0..200 {
+            assert!(
+                (margins[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                "margins[{i}]: {} vs {}",
+                margins[i],
+                want[i]
+            );
         }
     }
 

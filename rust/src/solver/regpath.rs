@@ -79,7 +79,9 @@ impl RegPath {
         cfg: &TrainConfig,
         path_cfg: &PathConfig,
     ) -> Result<RegPath> {
-        let lam_max = lambda_max_from_solver(solver);
+        // distributed reduce over the worker shards — the leader holds no
+        // X (bit-identical to `lambda_max(train)`, pinned in tests/store.rs)
+        let lam_max = solver.lambda_max_distributed()?;
         let mut lambdas: Vec<f64> =
             (1..=path_cfg.steps).map(|i| lam_max * 0.5f64.powi(i as i32)).collect();
         lambdas.extend(path_cfg.extra_lambdas.iter().copied());
@@ -171,12 +173,6 @@ impl RegPath {
     }
 }
 
-/// λ_max computed from the solver's stored dataset (equivalent to
-/// [`lambda_max`]; kept separate so callers without the Dataset can use it).
-fn lambda_max_from_solver(solver: &DGlmnetSolver) -> f64 {
-    solver.lambda_max_internal()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,10 +200,13 @@ mod tests {
     }
 
     #[test]
-    fn lambda_max_matches_solver_internal() {
+    fn lambda_max_matches_distributed_reduce_bitwise() {
         let ds = synth::webspam_like(200, 800, 12, 42);
-        let s = DGlmnetSolver::from_dataset(&ds, &cfg(2)).unwrap();
-        assert!((lambda_max(&ds) - s.lambda_max_internal()).abs() < 1e-9);
+        let mut s = DGlmnetSolver::from_dataset(&ds, &cfg(2)).unwrap();
+        assert_eq!(
+            lambda_max(&ds).to_bits(),
+            s.lambda_max_distributed().unwrap().to_bits()
+        );
     }
 
     #[test]
@@ -215,7 +214,7 @@ mod tests {
         // the same ladder protocol, driven through `&mut dyn Estimator`
         // with no solver-specific branches
         use crate::baselines::truncated_gradient::TruncatedGradientEstimator;
-        let split = synth::dna_like(500, 30, 5, 44).split(0.8, 2);
+        let split = synth::dna_like(500, 30, 5, 44).split(0.8, 2).unwrap();
         let lam_max = lambda_max(&split.train);
         let lambdas: Vec<f64> = (1..=4).map(|i| lam_max * 0.5f64.powi(i)).collect();
         let mut est = TruncatedGradientEstimator::new(0.2, 0.7, 1.0, 3, 5);
@@ -230,7 +229,7 @@ mod tests {
 
     #[test]
     fn short_path_runs_and_nnz_grows() {
-        let split = synth::dna_like(900, 50, 6, 43).split(0.8, 1);
+        let split = synth::dna_like(900, 50, 6, 43).split(0.8, 1).unwrap();
         let path_cfg = PathConfig { steps: 6, extra_lambdas: vec![], max_iter_per_lambda: 25 };
         let path = RegPath::run(&split.train, &split.test, &cfg(3), &path_cfg).unwrap();
         assert_eq!(path.points.len(), 6);

@@ -8,6 +8,23 @@ pub mod math;
 pub mod rng;
 pub mod timer;
 
+/// Peak resident-set size of this process in bytes, self-read from
+/// `/proc/self/status` (`VmHWM`). Returns `None` on platforms without
+/// procfs — callers treat the measurement as best-effort. This is the
+/// number the out-of-core leader gates on: a leader driving a fit from a
+/// sharded store must stay far below the full-dataset watermark
+/// (`scripts/check_bench_regression.py` + the socket_e2e CI job).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 /// Round `n` up to the next multiple of `k` (tile padding).
 pub fn round_up(n: usize, k: usize) -> usize {
     debug_assert!(k > 0);
@@ -35,6 +52,17 @@ mod tests {
         assert_eq!(round_up(1, 64), 64);
         assert_eq!(round_up(64, 64), 64);
         assert_eq!(round_up(65, 64), 128);
+    }
+
+    #[test]
+    fn peak_rss_reads_a_sane_value_on_linux() {
+        if std::path::Path::new("/proc/self/status").exists() {
+            let rss = peak_rss_bytes().expect("procfs present but VmHWM unreadable");
+            // a running test binary occupies at least a few pages and less
+            // than a terabyte
+            assert!(rss > 64 * 1024, "{rss}");
+            assert!(rss < (1u64 << 40), "{rss}");
+        }
     }
 
     #[test]

@@ -108,7 +108,7 @@ fn warmstart_across_solvers_via_set_beta() {
     let fit_a = a.fit(None).unwrap();
     // a fresh solver warmstarted at the solution must converge immediately
     let mut b = DGlmnetSolver::from_dataset(&ds, &native(3, lam)).unwrap();
-    b.set_beta(&fit_a.model.to_dense());
+    b.set_beta(&fit_a.model.to_dense()).unwrap();
     let fit_b = b.fit_lambda(lam).unwrap();
     assert!(fit_b.iterations <= 3, "warmstarted iters = {}", fit_b.iterations);
     assert!((fit_b.objective - fit_a.objective).abs() / fit_a.objective < 1e-3);

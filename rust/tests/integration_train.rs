@@ -85,7 +85,7 @@ fn converges_to_ista_reference_objective() {
 
 #[test]
 fn quality_improves_along_path_then_saturates() {
-    let split = synth::epsilon_like(3_000, 64, 102).split(0.8, 5);
+    let split = synth::epsilon_like(3_000, 64, 102).split(0.8, 5).unwrap();
     let path_cfg = PathConfig { steps: 8, ..Default::default() };
     let path = RegPath::run(&split.train, &split.test, &cfg(4, 1.0), &path_cfg).unwrap();
     let aucs: Vec<f64> = path.points.iter().map(|p| p.auc).collect();
@@ -97,7 +97,7 @@ fn quality_improves_along_path_then_saturates() {
 
 #[test]
 fn fitted_model_beats_random_and_majority() {
-    let split = synth::webspam_like(2_000, 3_000, 30, 103).split(0.75, 9);
+    let split = synth::webspam_like(2_000, 3_000, 30, 103).split(0.75, 9).unwrap();
     let lam = lambda_max(&split.train) / 128.0;
     let mut solver = DGlmnetSolver::from_dataset(&split.train, &cfg(4, lam)).unwrap();
     let fit = solver.fit(None).unwrap();

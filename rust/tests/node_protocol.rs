@@ -24,8 +24,11 @@ use dglmnet::cluster::transport::SocketTransport;
 use dglmnet::cluster::WorkerNode;
 use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
 use dglmnet::data::dataset::Dataset;
+use dglmnet::data::store::ShardStore;
 use dglmnet::data::synth;
-use dglmnet::solver::pool::spawn_local_socket_workers;
+use dglmnet::solver::pool::{
+    spawn_local_socket_workers, spawn_local_socket_workers_from_store,
+};
 use dglmnet::solver::{
     lambda_max, Checkpoint, DGlmnetSolver, FitResult, NoopObserver, StepOutcome,
 };
@@ -98,6 +101,58 @@ fn socket_and_in_process_trajectories_are_bit_identical() {
         for (j, (a, b)) in beta_local.iter().zip(&beta_socket).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "{name} beta[{j}]");
         }
+    }
+}
+
+/// Out-of-core acceptance pin: a socket-transport fit driven **entirely
+/// from a sharded on-disk store** — every worker self-loads only its own
+/// shard file, and the leader (built by `from_store_socket`) never
+/// constructs a CSR/CSC matrix of X — produces a bit-identical objective
+/// trajectory, comm-bytes ledger, and final β to the in-memory in-process
+/// run.
+#[test]
+fn store_driven_socket_fit_is_bit_identical_to_in_memory() {
+    let ds = synth::webspam_like(500, 4_000, 10, 708);
+    let lam = lambda_max(&ds) / 4.0;
+    let cfg = native_cfg(3, lam, 15);
+
+    // in-memory reference (in-process transport)
+    let (fit_mem, beta_mem) = in_process_fit(&ds, &cfg, lam);
+    assert!(fit_mem.iterations >= 2, "need a non-trivial fit");
+
+    // shard to disk, then drive the whole fit from the store over sockets
+    let dir = std::env::temp_dir()
+        .join(format!("dglmnet_store_e2e_{}", std::process::id()));
+    let partition = DGlmnetSolver::partition_for(&ds, &cfg);
+    let store = ShardStore::create(&dir, &ds, &partition, "round-robin").unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers = spawn_local_socket_workers_from_store(&cfg, &store, addr);
+    let mut solver = DGlmnetSolver::from_store_socket(&store, &cfg, listener).unwrap();
+    assert_eq!(solver.transport_kind(), "socket");
+    let fit_store = solver.fit_lambda(lam).unwrap();
+    let beta_store = solver.beta.clone();
+    drop(solver); // sends Shutdown to every node
+    for h in workers {
+        h.join().expect("store worker panicked").unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(fit_mem.iterations, fit_store.iterations);
+    assert_eq!(
+        fit_mem.objective.to_bits(),
+        fit_store.objective.to_bits(),
+        "store-driven objective diverged"
+    );
+    assert_eq!(fit_mem.comm_bytes, fit_store.comm_bytes, "ledger diverged");
+    for (a, b) in fit_mem.trace.iter().zip(&fit_store.trace) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.comm_bytes, b.comm_bytes, "iter {}", a.iter);
+        assert_eq!(a.exchange, b.exchange, "iter {}", a.iter);
+    }
+    for (j, (a, b)) in beta_mem.iter().zip(&beta_store).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{j}]");
     }
 }
 

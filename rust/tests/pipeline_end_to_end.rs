@@ -36,7 +36,7 @@ fn paper_workflow_small() {
     assert_eq!(csc.values, csc2.values);
 
     // 3. split + path on the simulated cluster
-    let split = reloaded.split(0.8, 301);
+    let split = reloaded.split(0.8, 301).unwrap();
     let cfg = TrainConfig::builder()
         .machines(4)
         .engine(EngineKind::Native)

@@ -1,0 +1,184 @@
+//! Acceptance tests for the out-of-core sharded data plane:
+//!
+//! * the distributed per-shard λ_max reduce is **bit-identical** to the
+//!   in-memory computation on dna-like and webspam-like shapes, for
+//!   M ∈ {1, 3, 8}, in-process and over sockets;
+//! * a store-driven in-process cluster reproduces the pure in-memory
+//!   (`from_shards`) trajectory bit-for-bit — loading shards from disk
+//!   changes nothing;
+//! * the distributed warmstart install (`set_beta` without any leader-held
+//!   X) leaves margins consistent with β;
+//! * store/config mismatches fail with actionable errors.
+
+use std::net::TcpListener;
+
+use dglmnet::cluster::partition::FeaturePartition;
+use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::dataset::Dataset;
+use dglmnet::data::shuffle::shard_in_memory;
+use dglmnet::data::store::ShardStore;
+use dglmnet::data::synth;
+use dglmnet::solver::pool::spawn_local_socket_workers_from_store;
+use dglmnet::solver::{lambda_max, DGlmnetSolver};
+
+fn native_cfg(m: usize, lambda: f64, max_iter: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(max_iter)
+        .build()
+}
+
+fn temp_store(ds: &Dataset, cfg: &TrainConfig, tag: &str) -> (std::path::PathBuf, ShardStore) {
+    let dir = std::env::temp_dir()
+        .join(format!("dglmnet_store_test_{}_{tag}", std::process::id()));
+    let partition = DGlmnetSolver::partition_for(ds, cfg);
+    let store = ShardStore::create(&dir, ds, &partition, "round-robin").unwrap();
+    (dir, store)
+}
+
+/// The λ_max parity matrix: distributed per-shard reduce == in-memory
+/// scan, bit for bit, across dataset shapes, machine counts, and both
+/// transports.
+#[test]
+fn distributed_lambda_max_is_bit_identical_across_m_and_transports() {
+    let problems = [
+        ("dna-like", synth::dna_like(400, 48, 5, 901)),
+        ("webspam-like", synth::webspam_like(300, 2_000, 10, 902)),
+    ];
+    for (name, ds) in problems {
+        let want = lambda_max(&ds);
+        assert!(want > 0.0);
+        for m in [1usize, 3, 8] {
+            let cfg = native_cfg(m, 1.0, 5);
+
+            // in-process (which itself runs from a temp store)
+            let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+            let got = solver.lambda_max_distributed().unwrap();
+            assert_eq!(
+                want.to_bits(),
+                got.to_bits(),
+                "{name} M={m} in-process: {want} vs {got}"
+            );
+            drop(solver);
+
+            // socket: workers self-load shard files, leader holds no X
+            let (dir, store) = temp_store(&ds, &cfg, &format!("lmax_{name}_{m}"));
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let workers = spawn_local_socket_workers_from_store(&cfg, &store, addr);
+            let mut solver =
+                DGlmnetSolver::from_store_socket(&store, &cfg, listener).unwrap();
+            let got = solver.lambda_max_distributed().unwrap();
+            assert_eq!(
+                want.to_bits(),
+                got.to_bits(),
+                "{name} M={m} socket: {want} vs {got}"
+            );
+            drop(solver);
+            for h in workers {
+                h.join().expect("worker panicked").unwrap();
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// Loading shards from disk must change nothing: a store-driven in-process
+/// cluster and a pure in-memory `from_shards` cluster produce bit-identical
+/// fits (objective trajectory, ledger, β).
+#[test]
+fn store_cluster_matches_pure_in_memory_cluster_bitwise() {
+    let ds = synth::dna_like(500, 60, 6, 903);
+    let lam = lambda_max(&ds) / 8.0;
+    let cfg = native_cfg(4, lam, 20);
+
+    // pure in-memory reference: shards built in RAM, no store anywhere
+    let partition = DGlmnetSolver::partition_for(&ds, &cfg);
+    let shards = shard_in_memory(&ds.x, &partition);
+    let mut mem =
+        DGlmnetSolver::from_shards(&ds, &cfg, partition, shards).unwrap();
+    let fit_mem = mem.fit(None).unwrap();
+
+    // explicit store cluster
+    let (dir, store) = temp_store(&ds, &cfg, "adapter");
+    let mut st = DGlmnetSolver::from_store(&store, &cfg).unwrap();
+    let fit_store = st.fit(None).unwrap();
+
+    assert_eq!(fit_mem.iterations, fit_store.iterations);
+    assert_eq!(fit_mem.objective.to_bits(), fit_store.objective.to_bits());
+    assert_eq!(fit_mem.comm_bytes, fit_store.comm_bytes);
+    for (a, b) in fit_mem.trace.iter().zip(&fit_store.trace) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.comm_bytes, b.comm_bytes, "iter {}", a.iter);
+    }
+    assert_eq!(mem.beta, st.beta);
+    drop(st);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The distributed warmstart install: set_beta rebuilds margins from the
+/// workers' shards (the leader holds no X) and the next fit behaves like a
+/// converged warmstart.
+#[test]
+fn distributed_set_beta_rebuilds_consistent_margins() {
+    let ds = synth::dna_like(400, 40, 5, 904);
+    let lam = lambda_max(&ds) / 8.0;
+    let cfg = native_cfg(3, lam, 40);
+    let mut a = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let fit_a = a.fit(None).unwrap();
+
+    let mut b = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    b.set_beta(&fit_a.model.to_dense()).unwrap();
+    // margins must agree with the by-example SpMV within f32 accumulation
+    // noise
+    let want = ds.x.margins(&b.beta);
+    for i in (0..400).step_by(23) {
+        assert!(
+            (b.margins[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+            "margins[{i}]: {} vs {}",
+            b.margins[i],
+            want[i]
+        );
+    }
+    let fit_b = b.fit_lambda(lam).unwrap();
+    assert!(fit_b.iterations <= 3, "warmstart took {} iterations", fit_b.iterations);
+    assert!((fit_b.objective - fit_a.objective).abs() / fit_a.objective < 1e-3);
+}
+
+/// Store/config mismatches fail loudly with actionable messages.
+#[test]
+fn store_mismatches_error_actionably() {
+    let ds = synth::dna_like(200, 24, 4, 905);
+    let cfg3 = native_cfg(3, 0.5, 5);
+    let (dir, store) = temp_store(&ds, &cfg3, "mismatch");
+
+    // machine-count mismatch names both counts and the fix
+    let cfg4 = native_cfg(4, 0.5, 5);
+    let err = DGlmnetSolver::from_store(&store, &cfg4).unwrap_err().to_string();
+    assert!(err.contains("3 machines"), "{err}");
+    assert!(err.contains("--workers"), "{err}");
+
+    // a worker asked for a machine the store does not have
+    assert!(store.load_shard(7).is_err());
+
+    // [data] store / --store routing: from_config opens the configured
+    // store; without one it errors actionably
+    let mut cfg_store = native_cfg(3, 0.5, 5);
+    cfg_store.store = Some(dir.to_string_lossy().into_owned());
+    let solver = DGlmnetSolver::from_config(&cfg_store).unwrap();
+    assert_eq!(solver.n_features(), 24);
+    drop(solver);
+    let err = DGlmnetSolver::from_config(&cfg3).unwrap_err().to_string();
+    assert!(err.contains("--store"), "{err}");
+
+    // a store whose shard files disagree with the manifest (simulated by
+    // deleting one) errors at partition reconstruction
+    std::fs::remove_file(dglmnet::data::store::shard_path(&dir, 1)).unwrap();
+    assert!(store.partition().is_err());
+    std::fs::remove_dir_all(&dir).ok();
+
+    // feature lists that do not cover the space are rejected
+    assert!(FeaturePartition::from_feature_lists(&[vec![0, 2]], 3).is_err());
+}

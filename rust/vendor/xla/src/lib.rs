@@ -1,0 +1,174 @@
+//! Compile-only stub of the `xla` PJRT bindings.
+//!
+//! Mirrors the API surface `dglmnet --features xla` consumes —
+//! [`PjRtClient`], [`PjRtLoadedExecutable`], [`HloModuleProto`],
+//! [`XlaComputation`], [`Literal`], [`Error`] — so the gated engine/leader
+//! paths type-check without the real vendored bindings. Host-side
+//! [`Literal`] operations are implemented for real (they are plain
+//! buffers); anything that would need a PJRT runtime returns an
+//! explanatory [`Error`]. The `Auto` engine never selects XLA without
+//! compiled artifacts, so a stub build behaves exactly like a native-only
+//! build at runtime.
+
+use std::fmt;
+
+/// Stub error: carries the entry point that would have needed PJRT.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error(format!(
+            "{what} is unavailable: this build uses the compile-only xla stub \
+             (vendor the real PJRT bindings into rust/vendor/xla and run \
+             `make artifacts` to enable the XLA hot path)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Sized + Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// A host-side tensor of f32 values (the only element type dglmnet uses).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over `data`.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret the buffer under new dimensions (element count must
+    /// match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape a {}-element literal to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Untuple an execution result. Stub literals never originate from an
+    /// execution, so there is nothing meaningful to untuple.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// An HLO module loaded from text interchange.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation handed to [`PjRtClient::compile`].
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client. The stub cannot construct one — which is the contract:
+/// gated paths compile, and anything that would actually run on PJRT fails
+/// with an actionable message at the construction boundary.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_ops_work_host_side() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error_with_guidance() {
+        let e = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(e.contains("stub"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

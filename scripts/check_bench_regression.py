@@ -10,7 +10,9 @@ Fails (exit 1) when:
     get chattier). For entries that record a `chosen_strategy` (the
     per-exchange-strategy section), only the strategy the cost model
     actually picked — plus the `auto_` path itself — is gated; the
-    non-chosen strategy's bytes are informational.
+    non-chosen strategy's bytes are informational, or
+  * any `*peak_rss_bytes` counter grows by more than MAX_RSS_REGRESSION
+    (25%) — the leader-memory canary of the out-of-core data plane.
 
 Bootstrap mode: when BASELINE does not exist yet, prints instructions and
 exits 0 — commit the fresh file as the baseline to arm the gate.
@@ -20,6 +22,9 @@ import json
 import sys
 
 MAX_TIME_REGRESSION = 0.15
+# peak RSS wobbles with allocator behaviour on shared runners; gate growth
+# beyond this factor (a leader re-growing an O(nnz) X copy blows well past it)
+MAX_RSS_REGRESSION = 0.25
 # timings below this are noise-dominated on shared CI runners
 MIN_COMPARABLE_SECS = 50e-6
 
@@ -65,6 +70,20 @@ def main():
             if chosen is not None:
                 gated = {f"{chosen}_comm_bytes", "auto_comm_bytes"}
             for key, bval in sorted(base.items()):
+                if key.endswith("peak_rss_bytes"):
+                    cval = cur.get(key)
+                    if cval is None or bval <= 0:
+                        continue
+                    compared += 1
+                    if cval > bval * (1 + MAX_RSS_REGRESSION):
+                        failures.append(
+                            f"{name}.{key}: {cval:.0f} bytes vs baseline {bval:.0f} "
+                            f"(+{(cval / bval - 1) * 100:.1f}% > "
+                            f"{MAX_RSS_REGRESSION * 100:.0f}% — is the leader "
+                            f"holding X again?)")
+                    else:
+                        print(f"  [ok]     {name}.{key}: {cval:.0f} vs {bval:.0f} bytes")
+                    continue
                 if not key.endswith("comm_bytes"):
                     continue
                 cval = cur.get(key)
