@@ -336,6 +336,12 @@ pub enum MessageClass {
     /// Feature-space Δβ — β-carrying, f16-ineligible unless explicitly
     /// enabled (quantizing the model update itself is rarely worth it).
     Beta,
+    /// Supervision traffic — heartbeats, re-admission handshakes, rollback
+    /// state pushes. Accounted in its own ledger bucket
+    /// ([`crate::cluster::NetworkLedger::recovery_bytes`]) so failure
+    /// recovery never pollutes the `comm_bytes` the paper's cost claims
+    /// are benchmarked on; never f16 (state must move bit-exactly).
+    Recovery,
 }
 
 /// Which codecs the cost model may choose from, per message class.
@@ -361,6 +367,7 @@ impl CodecPolicy {
         match class {
             MessageClass::Margins => self.f16_margins,
             MessageClass::Beta => self.f16_beta,
+            MessageClass::Recovery => false,
         }
     }
 

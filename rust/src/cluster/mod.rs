@@ -16,7 +16,18 @@
 //!   and a real multi-process TCP byte stream whose frames encode sparse
 //!   payloads with the layer-1 codecs — so the bytes a socket writes for a
 //!   Δ-payload are exactly the bytes the ledger's cost functions charge.
-//!   Peer death and malformed frames surface as clean errors, never hangs.
+//!   **Failure model:** peer death, malformed frames, and (under a
+//!   configured `recv_timeout_secs`) wedged peers all surface as clean,
+//!   attributable errors — never hangs. With `supervise = true` the
+//!   leader goes further: it probes every link with `Ping` heartbeats,
+//!   rolls the fit back to the last in-memory recovery checkpoint,
+//!   re-admits a replacement for each dead worker (validated against the
+//!   shard identity it must hold), and resumes — the recovered fit is
+//!   bit-identical to an undisturbed run, with the supervisor's own
+//!   traffic kept in a separate recovery ledger bucket. The
+//!   [`transport::FaultyTransport`] wrapper injects deterministic faults
+//!   ([`transport::Fault`]: drop, delay, truncate, corrupt) on the n-th
+//!   recv for testing every one of those paths.
 //! * [`comm`] + [`allreduce`] — **collectives.** The [`comm::Collective`]
 //!   trait over the simulated network ([`TreeAllReduce`], [`comm::AllGather`])
 //!   shares one deterministic pairwise-f64 tree engine: per-message codec
@@ -77,4 +88,4 @@ pub use network::{NetworkLedger, NetworkModel};
 pub use node::WorkerNode;
 pub use partition::{FeaturePartition, PartitionStrategy};
 pub use protocol::NodeMessage;
-pub use transport::{SocketTransport, Transport};
+pub use transport::{Fault, FaultyTransport, SocketTransport, Transport};

@@ -223,6 +223,8 @@ impl WorkerNode {
                 self.engine.margins_into(&beta_local, &mut part)?;
                 Ok(Some(NodeMessage::MarginsPart { part }))
             }
+            // liveness probe from the supervisor — answer and carry on
+            NodeMessage::Ping => Ok(Some(NodeMessage::Pong)),
             NodeMessage::Shutdown => Ok(None),
             other => Err(DlrError::Solver(format!(
                 "worker {} received unexpected {}",
@@ -258,7 +260,15 @@ impl WorkerNode {
                 Ok(Some(reply)) => transport.send(reply)?,
                 Ok(None) => return Ok(()),
                 Err(e) => {
-                    let _ = transport.send(NodeMessage::Abort { message: e.to_string() });
+                    if let Err(send_err) =
+                        transport.send(NodeMessage::Abort { message: e.to_string() })
+                    {
+                        crate::cluster::protocol::log_lost_abort(
+                            self.machine,
+                            "serve",
+                            &send_err,
+                        );
+                    }
                     return Err(e);
                 }
             }
@@ -395,6 +405,24 @@ mod tests {
         assert!(node.handle(NodeMessage::Welcome).is_err());
         assert!(node.handle(NodeMessage::Ack).is_err());
         assert!(matches!(node.handle(NodeMessage::Shutdown), Ok(None)));
+    }
+
+    #[test]
+    fn ping_answers_pong_without_touching_state() {
+        let (mut node, _ds) = node_for(0, 2);
+        let before = match node.handle(NodeMessage::GetState).unwrap().unwrap() {
+            NodeMessage::State { beta_local, margins_crc } => (beta_local, margins_crc),
+            _ => unreachable!(),
+        };
+        let reply = node.handle(NodeMessage::Ping).unwrap().unwrap();
+        assert_eq!(reply.name(), "pong");
+        match node.handle(NodeMessage::GetState).unwrap().unwrap() {
+            NodeMessage::State { beta_local, margins_crc } => {
+                assert_eq!(beta_local, before.0);
+                assert_eq!(margins_crc, before.1);
+            }
+            _ => unreachable!(),
+        }
     }
 
     #[test]

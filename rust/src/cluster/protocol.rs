@@ -51,6 +51,8 @@ const TAG_LAMBDA_MAX: u8 = 12;
 const TAG_LAMBDA_MAXED: u8 = 13;
 const TAG_MARGINS: u8 = 14;
 const TAG_MARGINS_PART: u8 = 15;
+const TAG_PING: u8 = 16;
+const TAG_PONG: u8 = 17;
 
 /// One protocol message between the leader and a worker node.
 ///
@@ -122,12 +124,37 @@ pub enum NodeMessage {
     Margins { beta_local: Vec<f32> },
     /// worker → leader: the shard's sparse margins contribution.
     MarginsPart { part: SparseVec },
+    /// leader → worker: liveness probe. A healthy node answers
+    /// [`NodeMessage::Pong`] immediately; the supervisor uses the
+    /// ping/pong pair (under a recv deadline) both to detect wedged
+    /// workers and to drain at most one stale reply left on a link by a
+    /// failed phase — the protocol is strictly request/reply, so one
+    /// un-consumed message is the worst case.
+    Ping,
+    /// worker → leader: the heartbeat answer.
+    Pong,
     /// worker → leader: acknowledgement of an `Apply` / `SetState`.
     Ack,
     /// either direction: the peer failed; the message is the error.
     Abort { message: String },
     /// leader → worker: clean shutdown, the serve loop exits.
     Shutdown,
+}
+
+/// An [`NodeMessage::Abort`] is last-words courtesy to a peer that may
+/// already be gone, so its send failing is expected — but it must never be
+/// *silently* swallowed: a peer that misses the abort will sit blocked
+/// until its own read fails. Every abort-send site routes through here so
+/// the loss is logged once, with the machine id and the phase it happened
+/// in.
+pub(crate) fn log_lost_abort(
+    machine: usize,
+    context: &str,
+    err: &dyn std::fmt::Display,
+) {
+    eprintln!(
+        "[cluster] could not deliver abort to worker {machine} during {context}: {err}"
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -293,6 +320,8 @@ impl NodeMessage {
             NodeMessage::LambdaMaxed { .. } => "lambda-maxed",
             NodeMessage::Margins { .. } => "margins",
             NodeMessage::MarginsPart { .. } => "margins-part",
+            NodeMessage::Ping => "ping",
+            NodeMessage::Pong => "pong",
             NodeMessage::Ack => "ack",
             NodeMessage::Abort { .. } => "abort",
             NodeMessage::Shutdown => "shutdown",
@@ -362,6 +391,8 @@ impl NodeMessage {
                 out.push(TAG_MARGINS_PART);
                 put_sparse(&mut out, part, MessageClass::Margins);
             }
+            NodeMessage::Ping => out.push(TAG_PING),
+            NodeMessage::Pong => out.push(TAG_PONG),
             NodeMessage::Ack => out.push(TAG_ACK),
             NodeMessage::Abort { message } => {
                 out.push(TAG_ABORT);
@@ -433,6 +464,8 @@ impl NodeMessage {
             TAG_MARGINS_PART => {
                 NodeMessage::MarginsPart { part: get_sparse(bytes, &mut pos)? }
             }
+            TAG_PING => NodeMessage::Ping,
+            TAG_PONG => NodeMessage::Pong,
             TAG_ACK => NodeMessage::Ack,
             TAG_ABORT => NodeMessage::Abort { message: get_str(bytes, &mut pos)? },
             TAG_SHUTDOWN => NodeMessage::Shutdown,
@@ -497,6 +530,8 @@ mod tests {
             NodeMessage::LambdaMaxed { value: 0.1 + 0.2 },
             NodeMessage::Margins { beta_local: vec![0.5, -1.25, 0.0] },
             NodeMessage::MarginsPart { part: sv(&[0.0, 1.0, 0.0, -0.5]) },
+            NodeMessage::Ping,
+            NodeMessage::Pong,
             NodeMessage::Ack,
             NodeMessage::Abort { message: "worker exploded".into() },
             NodeMessage::Shutdown,

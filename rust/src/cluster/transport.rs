@@ -39,6 +39,19 @@ pub trait Transport: Send {
     /// hanging) if the peer is gone or sends a malformed frame.
     fn recv(&mut self) -> Result<NodeMessage>;
 
+    /// Bound every subsequent [`recv`](Transport::recv): a peer that stays
+    /// silent past the deadline errors with a "timed out" message instead
+    /// of wedging the leader forever. `None` (the default) blocks
+    /// indefinitely. Transports that detect peer death immediately (the
+    /// in-process channel links — a dead worker thread disconnects its
+    /// channel) ignore the call. After a deadline fires mid-frame the
+    /// stream position is unspecified; the only safe continuation is to
+    /// replace or drop the link.
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
+        let _ = deadline;
+        Ok(())
+    }
+
     /// `"in-process"` or `"socket"` — for logs and bench records.
     fn kind(&self) -> &'static str;
 }
@@ -71,24 +84,36 @@ impl SocketTransport {
 
     /// Connect with retries until `timeout` — workers routinely start
     /// before the leader finishes binding, so a one-shot connect would make
-    /// every launch script racy.
+    /// every launch script racy. Retries back off exponentially (10 ms
+    /// doubling to a 640 ms cap, deterministic — no RNG) so a fleet of
+    /// waiting workers doesn't hammer a leader that is seconds away from
+    /// binding.
     pub fn connect_retry(addr: impl ToSocketAddrs + Clone, timeout: Duration) -> Result<Self> {
         let deadline = Instant::now() + timeout;
+        let mut attempts = 0u32;
         loop {
             match TcpStream::connect(addr.clone()) {
                 Ok(stream) => return Self::from_stream(stream),
                 Err(e) => {
+                    attempts += 1;
                     if Instant::now() >= deadline {
                         return Err(DlrError::Solver(format!(
-                            "could not reach the leader within {:.1}s: {e}",
+                            "could not reach the leader within {:.1}s \
+                             (after {attempts} attempts): {e}",
                             timeout.as_secs_f64()
                         )));
                     }
-                    std::thread::sleep(Duration::from_millis(50));
+                    std::thread::sleep(backoff_delay(attempts));
                 }
             }
         }
     }
+}
+
+/// The `connect_retry` backoff schedule: 10 ms after the first failed
+/// attempt, doubling per attempt, capped at 640 ms.
+fn backoff_delay(attempt: u32) -> Duration {
+    Duration::from_millis(10u64 << attempt.saturating_sub(1).min(6))
 }
 
 impl Transport for SocketTransport {
@@ -115,18 +140,102 @@ impl Transport for SocketTransport {
         NodeMessage::decode(&body)
     }
 
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(deadline)?;
+        Ok(())
+    }
+
     fn kind(&self) -> &'static str {
         "socket"
     }
 }
 
-/// EOF mid-frame means the peer died — report it as such rather than a
-/// bare io error.
+/// EOF mid-frame means the peer died; a read timeout means the peer is
+/// wedged past the recv deadline — report both as such rather than a bare
+/// io error.
 fn hangup(e: std::io::Error) -> DlrError {
-    if e.kind() == std::io::ErrorKind::UnexpectedEof {
-        DlrError::Solver("peer node hung up mid-frame".into())
-    } else {
-        DlrError::Io(e)
+    match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => {
+            DlrError::Solver("peer node hung up mid-frame".into())
+        }
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => DlrError::Solver(
+            "peer node timed out (no frame within the recv deadline)".into(),
+        ),
+        _ => DlrError::Io(e),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// What a [`FaultyTransport`] does to its trigger frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail the recv as if the peer died, leaving the real frame unread.
+    Drop,
+    /// Sleep for the given duration, then deliver the frame intact.
+    Delay(Duration),
+    /// Consume the peer's real frame but hand the caller its encoding cut
+    /// one byte short — the shape of a half-delivered frame.
+    Truncate,
+    /// Consume the peer's real frame but hand the caller a garbage frame
+    /// with an unknown tag — the shape of bytes flipped in flight.
+    Corrupt,
+}
+
+/// Fault-injection wrapper for tests and chaos harnesses: passes every
+/// call through to the wrapped transport except the `at`-th recv
+/// (1-based), which it injures with the configured [`Fault`].
+/// `Truncate`/`Corrupt` consume the peer's real reply before substituting
+/// damaged bytes, so the peer itself stays healthy and in protocol — a
+/// corrupted link, not a dead process.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    fault: Fault,
+    at: usize,
+    seen: usize,
+}
+
+impl FaultyTransport {
+    pub fn new(inner: Box<dyn Transport>, fault: Fault, at: usize) -> Self {
+        Self { inner, fault, at, seen: 0 }
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn send(&mut self, msg: NodeMessage) -> Result<()> {
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<NodeMessage> {
+        self.seen += 1;
+        if self.seen != self.at {
+            return self.inner.recv();
+        }
+        match self.fault {
+            Fault::Drop => Err(DlrError::Solver("peer node hung up mid-frame".into())),
+            Fault::Delay(d) => {
+                std::thread::sleep(d);
+                self.inner.recv()
+            }
+            Fault::Truncate => {
+                let body = self.inner.recv()?.encode();
+                NodeMessage::decode(&body[..body.len() - 1])
+            }
+            Fault::Corrupt => {
+                self.inner.recv()?;
+                NodeMessage::decode(&[77, 1, 2])
+            }
+        }
+    }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
+        self.inner.set_recv_deadline(deadline)
+    }
+
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
     }
 }
 
@@ -222,8 +331,66 @@ mod tests {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap()
         };
-        let err =
-            SocketTransport::connect_retry(addr, Duration::from_millis(120)).unwrap_err();
-        assert!(err.to_string().contains("could not reach the leader"), "{err}");
+        let err = SocketTransport::connect_retry(addr, Duration::from_millis(120))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("could not reach the leader"), "{err}");
+        assert!(err.contains("attempts"), "{err}");
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_capped() {
+        let ms: Vec<u64> =
+            (1..=9).map(|a| backoff_delay(a).as_millis() as u64).collect();
+        assert_eq!(ms, vec![10, 20, 40, 80, 160, 320, 640, 640, 640]);
+    }
+
+    #[test]
+    fn recv_deadline_turns_a_wedged_peer_into_a_clean_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+        let peer = std::thread::spawn(move || {
+            // hold the connection open but never write a byte
+            let (stream, _) = listener.accept().unwrap();
+            let _ = done_rx.recv();
+            drop(stream);
+        });
+        let mut t = SocketTransport::connect(addr).unwrap();
+        t.set_recv_deadline(Some(Duration::from_millis(60))).unwrap();
+        let err = t.recv().unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        done_tx.send(()).unwrap();
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn faulty_transport_injures_exactly_the_nth_recv() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = SocketTransport::from_stream(stream).unwrap();
+            for _ in 0..3 {
+                let msg = t.recv().unwrap();
+                t.send(msg).unwrap();
+            }
+        });
+        let inner = Box::new(SocketTransport::connect(addr).unwrap());
+        let mut t = FaultyTransport::new(inner, Fault::Corrupt, 2);
+        for round in 1..=3u32 {
+            t.send(NodeMessage::Ping).unwrap();
+            match t.recv() {
+                Ok(msg) => {
+                    assert_ne!(round, 2, "round 2 must be injured");
+                    assert!(matches!(msg, NodeMessage::Ping));
+                }
+                Err(e) => {
+                    assert_eq!(round, 2, "only round 2 is injured: {e}");
+                    assert!(e.to_string().contains("unknown message tag"), "{e}");
+                }
+            }
+        }
+        peer.join().unwrap();
     }
 }

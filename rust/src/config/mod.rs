@@ -206,6 +206,29 @@ pub struct TrainConfig {
     /// default charges the Δβ flow as the gather it is; turning this on
     /// reproduces the old ledger for regression comparisons.
     pub charge_beta_broadcast: bool,
+    /// Leader-side supervision (`[cluster] supervise` / `--supervise`):
+    /// detect a dead or wedged worker mid-fit, roll back to the last
+    /// recovery checkpoint, re-admit a replacement, and resume — instead
+    /// of the fail-fast default where the first worker fault ends the fit
+    /// with a clean error. Recovery is bit-exact: the completed fit
+    /// reproduces the undisturbed run's β, objective trajectory, and comm
+    /// ledger (supervision traffic is accounted separately).
+    pub supervise: bool,
+    /// Recv deadline for the supervision heartbeat (`Ping`/`Pong`) probe,
+    /// in seconds: a worker that doesn't answer within this is declared
+    /// dead and replaced (`[cluster] heartbeat_timeout_secs`).
+    pub heartbeat_timeout_secs: f64,
+    /// Per-link recv deadline during normal fit phases, in seconds — turns
+    /// a wedged (alive but silent) worker into a prompt "timed out" error
+    /// the supervisor can act on. `0` (the default) blocks indefinitely;
+    /// peer *death* is always detected promptly regardless
+    /// (`[cluster] recv_timeout_secs`).
+    pub recv_timeout_secs: f64,
+    /// Iterations between automatic recovery checkpoints while supervising
+    /// (`[cluster] recovery_checkpoint_every`). Recovery checkpoints are
+    /// leader-local (no worker pull, no wire traffic), so the default of 1
+    /// re-runs at most the failed iteration after a rollback.
+    pub recovery_checkpoint_every: usize,
     pub line_search: LineSearchConfig,
     /// Tolerated relative objective increase when retrying alpha = 1 at
     /// convergence (the second sparsity precaution of §2).
@@ -236,6 +259,10 @@ impl Default for TrainConfig {
             transport: TransportKind::InProcess,
             listen: "127.0.0.1:4801".into(),
             charge_beta_broadcast: false,
+            supervise: false,
+            heartbeat_timeout_secs: 5.0,
+            recv_timeout_secs: 0.0,
+            recovery_checkpoint_every: 1,
             line_search: LineSearchConfig::default(),
             alpha_one_slack: 1e-4,
             budget: FitBudget::default(),
@@ -297,6 +324,21 @@ impl TrainConfig {
         if self.transport == TransportKind::Socket && self.listen.is_empty() {
             return Err(DlrError::Config(
                 "transport = socket needs a [cluster] listen = \"host:port\" address".into(),
+            ));
+        }
+        if !self.heartbeat_timeout_secs.is_finite() || self.heartbeat_timeout_secs <= 0.0 {
+            return Err(DlrError::Config(
+                "heartbeat_timeout_secs must be a positive number of seconds".into(),
+            ));
+        }
+        if !self.recv_timeout_secs.is_finite() || self.recv_timeout_secs < 0.0 {
+            return Err(DlrError::Config(
+                "recv_timeout_secs must be >= 0 (0 disables the recv deadline)".into(),
+            ));
+        }
+        if self.recovery_checkpoint_every == 0 {
+            return Err(DlrError::Config(
+                "recovery_checkpoint_every must be >= 1 iteration".into(),
             ));
         }
         Ok(())
@@ -401,6 +443,22 @@ impl TrainConfig {
         if let Some(v) = doc.get("cluster", "charge_beta_broadcast").and_then(|v| v.as_bool())
         {
             cfg.charge_beta_broadcast = v;
+        }
+        if let Some(v) = doc.get("cluster", "supervise").and_then(|v| v.as_bool()) {
+            cfg.supervise = v;
+        }
+        if let Some(v) = num("cluster", "heartbeat_timeout_secs") {
+            cfg.heartbeat_timeout_secs = v;
+        }
+        if let Some(v) = num("cluster", "recv_timeout_secs") {
+            cfg.recv_timeout_secs = v;
+        }
+        if let Some(v) = doc.get("cluster", "recovery_checkpoint_every") {
+            cfg.recovery_checkpoint_every = v.as_usize().ok_or_else(|| {
+                DlrError::Config(
+                    "cluster.recovery_checkpoint_every must be a positive integer".into(),
+                )
+            })?;
         }
         if let Some(v) = num("line_search", "backtrack") {
             cfg.line_search.backtrack = v;
@@ -508,6 +566,22 @@ impl TrainConfigBuilder {
     }
     pub fn charge_beta_broadcast(mut self, v: bool) -> Self {
         self.0.charge_beta_broadcast = v;
+        self
+    }
+    pub fn supervise(mut self, v: bool) -> Self {
+        self.0.supervise = v;
+        self
+    }
+    pub fn heartbeat_timeout_secs(mut self, v: f64) -> Self {
+        self.0.heartbeat_timeout_secs = v;
+        self
+    }
+    pub fn recv_timeout_secs(mut self, v: f64) -> Self {
+        self.0.recv_timeout_secs = v;
+        self
+    }
+    pub fn recovery_checkpoint_every(mut self, v: usize) -> Self {
+        self.0.recovery_checkpoint_every = v;
         self
     }
     pub fn line_search(mut self, v: LineSearchConfig) -> Self {
@@ -718,6 +792,37 @@ skip_alpha_init = true
         let err = c.validate_machines_for(2).unwrap_err().to_string();
         assert!(err.contains("3 workers"), "{err}");
         assert!(err.contains("2 features"), "{err}");
+    }
+
+    #[test]
+    fn supervision_knobs_load_from_toml_and_are_validated() {
+        // fail-fast is the default: supervision is opt-in
+        let c = TrainConfig::default();
+        assert!(!c.supervise);
+        assert_eq!(c.heartbeat_timeout_secs, 5.0);
+        assert_eq!(c.recv_timeout_secs, 0.0);
+        assert_eq!(c.recovery_checkpoint_every, 1);
+        let doc = toml::parse(
+            "[cluster]\nsupervise = true\nheartbeat_timeout_secs = 2.5\n\
+             recv_timeout_secs = 10.0\nrecovery_checkpoint_every = 4\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert!(c.supervise);
+        assert_eq!(c.heartbeat_timeout_secs, 2.5);
+        assert_eq!(c.recv_timeout_secs, 10.0);
+        assert_eq!(c.recovery_checkpoint_every, 4);
+        // garbage knobs are rejected with clear messages
+        let bad =
+            TrainConfig { heartbeat_timeout_secs: 0.0, ..TrainConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = TrainConfig { recv_timeout_secs: -1.0, ..TrainConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad =
+            TrainConfig { recovery_checkpoint_every: 0, ..TrainConfig::default() };
+        assert!(bad.validate().is_err());
+        let doc = toml::parse("[cluster]\nrecovery_checkpoint_every = -2\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
     }
 
     #[test]

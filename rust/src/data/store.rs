@@ -378,6 +378,108 @@ impl ShardStore {
         FeaturePartition::from_feature_lists(&lists, self.p())
     }
 
+    /// Per-column nnz over the whole feature space, recovered from the
+    /// shard files (indptr diffs mapped through each shard's global column
+    /// ids, one shard resident at a time). These are exactly the counts
+    /// [`DGlmnetSolver::partition_for`] derives from the full dataset, so
+    /// an elastic re-partition at a new machine count rebuilds the same
+    /// [`FeaturePartition`] a fresh shard run over the original data would.
+    ///
+    /// [`DGlmnetSolver::partition_for`]:
+    /// crate::solver::dglmnet::DGlmnetSolver::partition_for
+    pub fn col_nnz(&self) -> Result<Vec<usize>> {
+        let mut counts = vec![0usize; self.p()];
+        for k in 0..self.machines() {
+            let shard = self.load_shard(k)?;
+            for (l, &g) in shard.global_cols.iter().enumerate() {
+                counts[g as usize] = shard.csc.indptr[l + 1] - shard.csc.indptr[l];
+            }
+        }
+        Ok(counts)
+    }
+
+    /// Redistribute this store's column payloads into a new store at `dir`
+    /// sharded by `partition` — the elastic join/leave path (M → M ± 1
+    /// machines between λ steps). Column payloads are copied bit-for-bit
+    /// from the source shards, so the new store is byte-identical to one
+    /// created directly from the original dataset under the same
+    /// partition (pinned in the tests below). Peak memory is one source
+    /// shard plus the destination shard being assembled — resharding
+    /// stays out-of-core like every other store path.
+    pub fn reshard(
+        &self,
+        dir: impl AsRef<Path>,
+        partition: &FeaturePartition,
+        partition_spec: &str,
+    ) -> Result<ShardStore> {
+        if partition.n_features() != self.p() {
+            return Err(DlrError::Data(format!(
+                "cannot reshard: the partition covers {} features but the store holds {}",
+                partition.n_features(),
+                self.p()
+            )));
+        }
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let n = self.n();
+        let p = self.p();
+        let mut shards = Vec::with_capacity(partition.machines());
+        for k in 0..partition.machines() {
+            let global_cols = partition.features_of(k);
+            let slot: std::collections::HashMap<u32, usize> =
+                global_cols.iter().enumerate().map(|(l, &g)| (g, l)).collect();
+            // per-owned-column (indices, values) payloads, filled as the
+            // source shards stream through one at a time
+            let mut cols: Vec<Option<(Vec<u32>, Vec<f32>)>> = vec![None; global_cols.len()];
+            for src in 0..self.machines() {
+                let old = self.load_shard(src)?;
+                for (l, &g) in old.global_cols.iter().enumerate() {
+                    if let Some(&dst) = slot.get(&g) {
+                        let lo = old.csc.indptr[l];
+                        let hi = old.csc.indptr[l + 1];
+                        cols[dst] = Some((
+                            old.csc.indices[lo..hi].to_vec(),
+                            old.csc.values[lo..hi].to_vec(),
+                        ));
+                    }
+                }
+            }
+            let mut indptr = Vec::with_capacity(global_cols.len() + 1);
+            indptr.push(0usize);
+            let mut indices = Vec::new();
+            let mut values = Vec::new();
+            for (l, c) in cols.into_iter().enumerate() {
+                let (idx, val) = c.ok_or_else(|| {
+                    DlrError::Data(format!(
+                        "cannot reshard: feature {} is missing from every source shard",
+                        global_cols[l]
+                    ))
+                })?;
+                indices.extend_from_slice(&idx);
+                values.extend_from_slice(&val);
+                indptr.push(indices.len());
+            }
+            let csc = CscMatrix {
+                n_rows: n,
+                n_cols: global_cols.len(),
+                indptr,
+                indices,
+                values,
+            };
+            let shard = FeatureShard { machine: k, global_cols, csc };
+            shards.push(write_shard_file(&shard_path(&dir, k), &shard, n, p)?);
+        }
+        let manifest = StoreManifest {
+            name: self.manifest.name.clone(),
+            n,
+            p,
+            machines: partition.machines(),
+            partition: partition_spec.to_string(),
+            shards,
+        };
+        Self::finish_manifest(&dir, manifest, &self.load_y()?)
+    }
+
     fn shard_meta(&self, machine: usize) -> Result<&ShardMeta> {
         self.manifest
             .shards
@@ -709,6 +811,46 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(store.load_shard(0).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reshard_matches_a_direct_create_bit_for_bit() {
+        // the elastic M -> M±1 path: a store resharded 3 -> 2 must be
+        // byte-identical to one created directly from the dataset at M=2
+        let ds = synth::webspam_like(100, 300, 8, 81);
+        let p3 = FeaturePartition::build(PartitionStrategy::RoundRobin, 300, 3, None);
+        let dir3 = tmp("reshard_src");
+        let store3 = ShardStore::create(&dir3, &ds, &p3, "round-robin").unwrap();
+
+        // nnz counts recovered from the shards equal the dataset-derived ones
+        let counts = store3.col_nnz().unwrap();
+        let mut direct_counts = vec![0usize; 300];
+        for &c in &ds.x.indices {
+            direct_counts[c as usize] += 1;
+        }
+        assert_eq!(counts, direct_counts);
+
+        let p2 =
+            FeaturePartition::build(PartitionStrategy::RoundRobin, 300, 2, Some(&counts));
+        let dir_re = tmp("reshard_dst");
+        let re = store3.reshard(&dir_re, &p2, "round-robin").unwrap();
+        let dir2 = tmp("reshard_direct");
+        let direct = ShardStore::create(&dir2, &ds, &p2, "round-robin").unwrap();
+        for k in 0..2 {
+            let a = re.load_shard(k).unwrap();
+            let b = direct.load_shard(k).unwrap();
+            assert_eq!(a.global_cols, b.global_cols);
+            assert_eq!(a.csc.indptr, b.csc.indptr);
+            assert_eq!(a.csc.indices, b.csc.indices);
+            for (x, yv) in a.csc.values.iter().zip(&b.csc.values) {
+                assert_eq!(x.to_bits(), yv.to_bits());
+            }
+        }
+        // identical payloads => identical manifest checksums
+        assert_eq!(re.manifest().shards, direct.manifest().shards);
+        for d in [dir3, dir_re, dir2] {
+            std::fs::remove_dir_all(&d).ok();
+        }
     }
 
     #[test]

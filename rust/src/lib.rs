@@ -112,6 +112,37 @@
 //! the same partition but different values is indistinguishable at join
 //! time — deployments must version store directories (each shard file's
 //! payload checksum in the manifest makes two stores easy to diff).
+//!
+//! ## Self-healing clusters — supervision, failover, elasticity
+//!
+//! Long fits on real clusters lose workers. Four `[cluster]` knobs turn
+//! the leader into a supervisor:
+//!
+//! * `supervise` (`--supervise`) — on a failed iteration, probe every
+//!   link with a `Ping` heartbeat, roll back to the last in-memory
+//!   recovery checkpoint, re-admit a replacement for each dead worker
+//!   (socket replacements connect to the *same* listening address and are
+//!   validated against the shard identity they must hold; in-process
+//!   workers respawn from the store), and resume the fit.
+//! * `heartbeat_timeout_secs` — how long a probed worker gets to answer
+//!   the `Ping` before it is declared dead (default 5).
+//! * `recv_timeout_secs` — a per-recv socket deadline so a wedged (alive
+//!   but silent) peer becomes a clean error instead of a hang
+//!   (default 0 = wait forever).
+//! * `recovery_checkpoint_every` — refresh cadence for the in-memory
+//!   recovery checkpoint (default 1 = every iteration).
+//!
+//! The contract is exact: a recovered fit reproduces the undisturbed
+//! run's final β, objective trajectory, and charged comm ledger **bit for
+//! bit** — recovery traffic is metered separately
+//! ([`solver::DGlmnetSolver::recovery_comm_bytes`]) and the failed
+//! iteration's partial charges are rolled back with the state
+//! (`tests/failover.rs` pins all of it, with `cluster::FaultyTransport`
+//! injecting the faults). Between λ steps the cluster is also elastic:
+//! [`solver::DGlmnetSolver::elastic_resize`] re-partitions the `p`
+//! features over `M ± 1` machines by resharding the store in place and
+//! warm-starting from the current β — bit-identical to a fresh fit at the
+//! new machine count warm-started from the same β.
 
 pub mod baselines;
 pub mod bench_harness;

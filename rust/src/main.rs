@@ -76,6 +76,10 @@ fn app() -> App {
                 .opt("workers", "alias for --machines (worker node count)", None)
                 .opt("transport", "in-process | socket", Some("in-process"))
                 .opt("listen", "leader bind address for --transport socket", Some("127.0.0.1:4801"))
+                .flag("supervise", "detect dead workers mid-fit, roll back to the last recovery checkpoint, and re-admit replacements")
+                .opt("heartbeat-timeout-secs", "per-link Ping deadline when probing workers", Some("5"))
+                .opt("recv-timeout-secs", "socket recv deadline in seconds (0 = wait forever)", Some("0"))
+                .opt("recovery-checkpoint-every", "refresh the in-memory recovery checkpoint every k iterations", Some("1"))
                 .flag("wire-f16", "allow the lossy f16 wire codec for Δ-margin messages")
                 .opt("passes", "online/truncgrad passes", Some("10"))
                 .opt("rounds", "shotgun rounds", Some("200"))
@@ -200,6 +204,18 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     }
     if args.get_flag("wire-f16") {
         cfg.wire_f16_margins = true;
+    }
+    if args.get_flag("supervise") {
+        cfg.supervise = true;
+    }
+    if let Some(h) = args.get_f64("heartbeat-timeout-secs")? {
+        cfg.heartbeat_timeout_secs = h;
+    }
+    if let Some(r) = args.get_f64("recv-timeout-secs")? {
+        cfg.recv_timeout_secs = r;
+    }
+    if let Some(k) = args.get_usize("recovery-checkpoint-every")? {
+        cfg.recovery_checkpoint_every = k;
     }
     if let Some(w) = args.get_f64("max-secs")? {
         cfg.budget.wall_secs = Some(w);

@@ -34,7 +34,7 @@
 //! allocates only the O(M) bookkeeping of the comm layer.
 
 use std::net::TcpListener;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -45,6 +45,7 @@ use crate::cluster::comm::{AllGather, TreeByteEstimator};
 use crate::cluster::network::NetworkLedger;
 use crate::cluster::partition::FeaturePartition;
 use crate::cluster::protocol::crc_f32;
+use crate::cluster::transport::Fault;
 use crate::config::{ExchangeStrategy, TrainConfig, TransportKind};
 use crate::data::dataset::Dataset;
 use crate::data::shuffle::FeatureShard;
@@ -62,6 +63,14 @@ use crate::util::timer::PhaseTimer;
 
 /// How long a socket leader waits for all workers to connect.
 const ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long the supervisor waits for a replacement worker to connect.
+const REPLACE_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// `cfg.recv_timeout_secs` as the per-link deadline (0 disables it).
+fn recv_deadline(cfg: &TrainConfig) -> Option<Duration> {
+    (cfg.recv_timeout_secs > 0.0).then(|| Duration::from_secs_f64(cfg.recv_timeout_secs))
+}
 
 /// Uniquifier for the in-memory adapter's temp stores (several solvers may
 /// coexist in one process — tests, benches, tournaments).
@@ -441,8 +450,9 @@ impl DGlmnetSolver {
         y: &[f32],
         cfg: &TrainConfig,
         partition: FeaturePartition,
-        pool: WorkerPool,
+        mut pool: WorkerPool,
     ) -> Result<Self> {
+        pool.set_recv_deadline(recv_deadline(cfg))?;
         let artifacts = default_artifacts_dir();
         let n = y.len();
         let p = partition.n_features();
@@ -492,6 +502,74 @@ impl DGlmnetSolver {
     /// (1.0 until the auto strategy pick has observed an exchange).
     pub fn comm_estimator_shrink(&self) -> (f64, f64) {
         (self.est_dm.shrink(), self.est_db.shrink())
+    }
+
+    /// Probe every worker link and replace the dead ones — the supervisor's
+    /// recovery hook ([`FitDriver::step`] calls this after a failed
+    /// iteration, before rolling back to the recovery checkpoint). Each
+    /// link gets a Ping with a `heartbeat_timeout_secs` deadline; links
+    /// that fail to answer Pong are replaced — in-process workers respawn
+    /// from the shard store, socket workers are re-admitted through the
+    /// original listener and validated against the shard checksums. All
+    /// probe and re-admission traffic lands in the ledger's recovery
+    /// bucket, so the fit's charged comm accounting stays bit-identical to
+    /// an undisturbed run.
+    pub(crate) fn repair_workers(&mut self) -> Result<()> {
+        let timeout = Duration::from_secs_f64(self.cfg.heartbeat_timeout_secs);
+        let dead = self.pool.probe_links(timeout, &self.ledger);
+        for &k in &dead {
+            eprintln!("[supervise] worker {k} is unresponsive; admitting a replacement");
+            self.pool.replace_link(k, REPLACE_TIMEOUT, &self.ledger)?;
+        }
+        self.pool.set_recv_deadline(recv_deadline(&self.cfg))?;
+        // Survivors may hold partially-applied state from the failed
+        // iteration and replacements start cold — the rollback's next step
+        // pushes the full checkpointed (β, margins) to everyone.
+        self.workers_dirty = true;
+        Ok(())
+    }
+
+    /// Bytes the supervisor spent on liveness probes and worker
+    /// re-admission — the ledger's recovery bucket, excluded from the
+    /// fit's charged comm totals (see [`NetworkLedger::record_recovery`]).
+    pub fn recovery_comm_bytes(&self) -> u64 {
+        self.ledger.recovery_bytes()
+    }
+
+    /// Test hook: injure worker `k`'s link so its `at`-th recv misbehaves
+    /// (see [`Fault`]) — the fault-injection harness behind
+    /// `tests/failover.rs` and the chaos CI job.
+    #[doc(hidden)]
+    pub fn wrap_worker_link(&mut self, k: usize, fault: Fault, at: usize) {
+        self.pool.wrap_link(k, fault, at);
+    }
+
+    /// Elastic join/leave between λ steps: re-partition the `p` features
+    /// over `machines` nodes, redistribute the shard payloads from `store`
+    /// into a new store at `dir`, and continue from this solver's current
+    /// β. The resharded column payloads are copied bit-for-bit and the new
+    /// partition is rebuilt from the store's own per-column nnz counts
+    /// (identical to what [`DGlmnetSolver::partition_for`] derives from
+    /// the full dataset), so the continuation is bit-identical to a fresh
+    /// fit at the new machine count warm-started from the same β — pinned
+    /// in `tests/failover.rs`. With `transport = socket` the new cluster
+    /// listens on `cfg.listen` and admits `machines` fresh workers.
+    pub fn elastic_resize(
+        &self,
+        store: &ShardStore,
+        machines: usize,
+        dir: &Path,
+    ) -> Result<DGlmnetSolver> {
+        let mut cfg = self.cfg.clone();
+        cfg.machines = machines;
+        cfg.validate()?;
+        cfg.validate_machines_for(self.p)?;
+        let counts = store.col_nnz()?;
+        let partition = FeaturePartition::build(cfg.partition, self.p, machines, Some(&counts));
+        let resharded = store.reshard(dir, &partition, cfg.partition.name())?;
+        let mut next = Self::from_store(&resharded, &cfg)?;
+        next.set_beta(&self.beta)?;
+        Ok(next)
     }
 
     pub fn n_examples(&self) -> usize {

@@ -111,6 +111,10 @@ pub struct FitDriver<'a> {
     carried_comm_bytes: u64,
     carried_wall_secs: f64,
     wall: Stopwatch,
+    /// Supervisor rollback point (`cfg.supervise`): a leader-only
+    /// checkpoint refreshed every `cfg.recovery_checkpoint_every`
+    /// iterations, restored after a worker failure.
+    recovery: Option<Checkpoint>,
 }
 
 impl<'a> FitDriver<'a> {
@@ -133,6 +137,7 @@ impl<'a> FitDriver<'a> {
             carried_comm_bytes: 0,
             carried_wall_secs: 0.0,
             wall: Stopwatch::start(),
+            recovery: None,
         }
     }
 
@@ -142,6 +147,21 @@ impl<'a> FitDriver<'a> {
     /// comm estimator state, and carries the iteration counter and cost
     /// accumulators forward.
     pub fn from_checkpoint(solver: &'a mut DGlmnetSolver, ck: &Checkpoint) -> Result<Self> {
+        let mut d = Self::new(solver, ck.lambda);
+        d.restore_from(ck)?;
+        Ok(d)
+    }
+
+    /// Install a checkpoint into the live driver: (β, margins) bit-for-bit
+    /// on the leader, shard states on the workers (or a staleness mark
+    /// when the checkpoint carries none — the next step then re-syncs
+    /// every node, which is how a cold replacement worker inherits its
+    /// state), the comm estimator state, and every iteration/cost
+    /// accumulator. Shared by the resume path and the supervisor's
+    /// failure rollback; iterations already in `trace` past the
+    /// checkpoint are discarded so the re-run reproduces them.
+    fn restore_from(&mut self, ck: &Checkpoint) -> Result<()> {
+        let solver = &mut *self.solver;
         if ck.p != solver.n_features() || ck.n != solver.n_examples() {
             return Err(DlrError::Solver(format!(
                 "checkpoint shape (n = {}, p = {}) does not match solver (n = {}, p = {})",
@@ -151,10 +171,17 @@ impl<'a> FitDriver<'a> {
                 solver.n_features()
             )));
         }
+        if ck.lambda.to_bits() != self.lambda.to_bits() {
+            return Err(DlrError::Solver(format!(
+                "checkpoint is for λ = {} but this driver runs λ = {}",
+                ck.lambda, self.lambda
+            )));
+        }
         solver.beta.copy_from_slice(&ck.beta);
         solver.margins.copy_from_slice(&ck.margins);
         if ck.shards.is_empty() {
-            // legacy checkpoint without shard states: re-gather from β
+            // no shard states (legacy file, or a leader-only recovery
+            // checkpoint): mark the workers stale and re-sync from β
             solver.workers_dirty = true;
         } else {
             // the shard states were verified against β at capture time
@@ -197,15 +224,26 @@ impl<'a> FitDriver<'a> {
                 solver.est_db.set_shrink(1.0);
             }
         }
-        let mut d = Self::new(solver, ck.lambda);
-        d.next_iter = ck.iter + 1;
-        d.f_prev = ck.f_prev;
-        d.sim_compute = ck.sim_compute_secs;
-        d.sim_comm = ck.sim_comm_secs;
-        d.carried_iters = ck.iter;
-        d.carried_comm_bytes = ck.comm_bytes;
-        d.carried_wall_secs = ck.wall_secs;
-        Ok(d)
+        // roll the counters back: records past the checkpoint are dropped
+        // (the re-run reproduces them bit-for-bit), resumed-over work stays
+        // in the carried accumulators, and the ledger baseline moves so the
+        // failed attempt's partial traffic is never double-counted
+        self.trace.retain(|r| r.iter <= ck.iter);
+        self.carried_iters = ck.iter - self.trace.len();
+        self.next_iter = ck.iter + 1;
+        self.f_prev = ck.f_prev;
+        self.sim_compute = ck.sim_compute_secs;
+        self.sim_comm = ck.sim_comm_secs;
+        self.carried_comm_bytes = ck.comm_bytes;
+        self.carried_wall_secs = ck.wall_secs;
+        // restart the clock so pre-checkpoint elapsed time isn't counted
+        // twice on an in-fit rollback (ck.wall_secs already carries it)
+        self.wall = Stopwatch::start();
+        self.ledger_start_bytes = self.solver.ledger.total_bytes();
+        self.finished = false;
+        self.stop_reason = None;
+        self.converged = false;
+        Ok(())
     }
 
     pub fn lambda(&self) -> f64 {
@@ -310,7 +348,102 @@ impl<'a> FitDriver<'a> {
     /// charged *gather* — workers hold their own β shards, so no merged-Δβ
     /// broadcast exists. The update is applied (leader and workers) before
     /// this returns, so `checkpoint()` right after captures it.
+    ///
+    /// With `cfg.supervise` on, a worker failure mid-iteration does not
+    /// end the fit: the supervisor probes every link (draining stale
+    /// replies), replaces dead workers (socket re-admission on the
+    /// retained listener, or an in-process respawn from the shard store),
+    /// rolls the fit back to its recovery checkpoint — refreshed
+    /// leader-only every `cfg.recovery_checkpoint_every` iterations — and
+    /// re-runs from there. The recovered trajectory is bit-identical to
+    /// the undisturbed one (β, objective, and the algorithmic comm
+    /// ledger); supervision traffic lands in the ledger's separate
+    /// recovery bucket.
     pub fn step(&mut self) -> Result<StepOutcome> {
+        if !self.solver.cfg.supervise {
+            return self.step_inner();
+        }
+        if !self.finished {
+            let due = match &self.recovery {
+                None => true,
+                Some(ck) => {
+                    self.iterations()
+                        >= ck.iter + self.solver.cfg.recovery_checkpoint_every
+                }
+            };
+            if due {
+                self.recovery = Some(self.recovery_checkpoint());
+            }
+        }
+        // a recovery that itself fails (no replacement worker, a second
+        // failure mid-rollback) retries against a fresh probe; cap the
+        // attempts so a hard-down cluster still surfaces an error
+        const MAX_RECOVERIES: usize = 5;
+        let mut attempt = 0usize;
+        loop {
+            match self.step_inner() {
+                Ok(outcome) => return Ok(outcome),
+                Err(cause) => {
+                    attempt += 1;
+                    if attempt > MAX_RECOVERIES {
+                        return Err(DlrError::Solver(format!(
+                            "fit unrecoverable after {MAX_RECOVERIES} recovery \
+                             attempts; last failure: {cause}"
+                        )));
+                    }
+                    self.recover(&cause)?;
+                }
+            }
+        }
+    }
+
+    /// Detect → replace → roll back: the supervisor's response to a failed
+    /// iteration. Probes every link (which also drains the at-most-one
+    /// stale reply a failed phase leaves behind), re-admits a replacement
+    /// for each dead machine, and restores the recovery checkpoint.
+    fn recover(&mut self, cause: &DlrError) -> Result<()> {
+        let ck = self.recovery.clone().ok_or_else(|| {
+            DlrError::Solver(format!(
+                "worker failure before the first recovery checkpoint: {cause}"
+            ))
+        })?;
+        eprintln!(
+            "[supervise] iteration {} failed ({cause}); rolling back to iteration {}",
+            self.next_iter, ck.iter
+        );
+        self.solver.repair_workers()?;
+        self.restore_from(&ck)
+    }
+
+    /// Leader-only rollback point: like [`FitDriver::checkpoint`] but
+    /// built without any worker round-trip (`shards` stays empty), so the
+    /// supervisor can refresh it every iteration for free. Restoring it
+    /// marks the worker state stale and the next step re-syncs every node
+    /// — including a cold replacement — over the uncharged control path.
+    fn recovery_checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            lambda: self.lambda,
+            n: self.solver.n_examples(),
+            p: self.solver.n_features(),
+            iter: self.iterations(),
+            f_prev: self.f_prev,
+            sim_compute_secs: self.sim_compute,
+            sim_comm_secs: self.sim_comm,
+            comm_bytes: self.comm_bytes_so_far(),
+            wall_secs: self.wall_secs_so_far(),
+            beta: self.solver.beta.clone(),
+            margins: self.solver.margins.clone(),
+            rng: None,
+            shards: Vec::new(),
+            est_shrink: Some((
+                self.solver.est_dm.shrink(),
+                self.solver.est_db.shrink(),
+            )),
+        }
+    }
+
+    /// The unsupervised iteration body — see [`FitDriver::step`].
+    fn step_inner(&mut self) -> Result<StepOutcome> {
         if self.finished {
             return Ok(StepOutcome::Finished {
                 record: None,

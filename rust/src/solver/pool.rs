@@ -39,10 +39,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cluster::comm::{Job, TaskExecutor};
+use crate::cluster::network::NetworkLedger;
 use crate::cluster::node::WorkerNode;
 use crate::cluster::partition::FeaturePartition;
-use crate::cluster::protocol::{crc_u32, NodeMessage};
-use crate::cluster::transport::{SocketTransport, Transport};
+use crate::cluster::protocol::{crc_u32, log_lost_abort, NodeMessage};
+use crate::cluster::transport::{Fault, FaultyTransport, SocketTransport, Transport};
 use crate::config::TrainConfig;
 use crate::data::dataset::Dataset;
 use crate::data::shuffle::{shard_in_memory, FeatureShard};
@@ -55,6 +56,11 @@ use crate::error::{DlrError, Result};
 /// (PJRT clients are thread-bound; store-backed nodes read their own shard
 /// file there, so shard I/O is per-worker and never leader-side).
 type NodeBuilder = Box<dyn FnOnce() -> Result<WorkerNode> + Send + 'static>;
+
+/// Rebuilds the [`NodeBuilder`] for any machine index — what lets a
+/// store-backed pool respawn a dead worker thread mid-fit (the replacement
+/// re-loads the same shard file the original did).
+type NodeRespawner = Box<dyn Fn(usize) -> NodeBuilder>;
 
 /// What travels to an in-process worker thread: a protocol message, or one
 /// [`TaskExecutor`] job (a tree-node merge) — the latter never exists on a
@@ -101,6 +107,9 @@ pub struct WorkerPool {
     pub engine_names: Vec<String>,
     /// Example count — the expected `dim` of every Δm payload.
     n: usize,
+    /// Global feature count — what a replacement worker's `Join` must
+    /// announce.
+    p: usize,
     transport: &'static str,
     handles: Vec<JoinHandle<()>>,
     /// Task-lane senders into the in-process worker threads (empty for a
@@ -108,8 +117,17 @@ pub struct WorkerPool {
     task_txs: Vec<mpsc::Sender<ThreadMsg>>,
     /// Completion acknowledgements for [`TaskExecutor`] jobs.
     task_done_rx: Option<mpsc::Receiver<()>>,
+    /// Retained ack-sender so a respawned worker thread acknowledges
+    /// task-lane jobs on the same channel as its siblings.
+    task_done_tx: Option<mpsc::Sender<()>>,
     /// Jobs the workers have executed (observable leader-offload proof).
     tasks_done: Arc<AtomicU64>,
+    /// Socket pools retain their listener so the supervisor can re-admit a
+    /// replacement worker mid-fit ([`WorkerPool::replace_link`]).
+    listener: Option<TcpListener>,
+    /// Store-backed in-process pools can rebuild machine k's node from its
+    /// shard file; `None` when the shards were consumed at spawn.
+    respawner: Option<NodeRespawner>,
 }
 
 impl WorkerPool {
@@ -176,7 +194,23 @@ impl WorkerPool {
                 }) as NodeBuilder
             })
             .collect();
-        Self::spawn_nodes(n, p, global_cols, builders)
+        let mut pool = Self::spawn_nodes(n, p, global_cols, builders)?;
+        // a store-backed worker can be rebuilt from its shard file at any
+        // time, so this pool supports supervisor respawns
+        let cfg = cfg.clone();
+        let store = store.clone();
+        let dir = artifacts_dir;
+        pool.respawner = Some(Box::new(move |k| {
+            let cfg = cfg.clone();
+            let store = store.clone();
+            let y = Arc::clone(&y);
+            let dir = dir.clone();
+            Box::new(move || {
+                let shard = store.load_shard(k)?;
+                WorkerNode::from_shard(&cfg, shard, y, p, &dir)
+            }) as NodeBuilder
+        }));
+        Ok(pool)
     }
 
     /// Shared in-process spawn loop: one thread per machine, each building
@@ -196,65 +230,35 @@ impl WorkerPool {
         let mut task_txs = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
 
-        for build in builders {
+        for (machine, build) in builders.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<ThreadMsg>();
             let (reply_tx, reply_rx) = mpsc::channel::<NodeMessage>();
             task_txs.push(tx.clone());
             links.push(Box::new(LeaderLink { tx, rx: reply_rx }));
-            let task_done_tx = task_done_tx.clone();
-            let tasks_done = Arc::clone(&tasks_done);
-            handles.push(std::thread::spawn(move || {
-                let mut node = match build() {
-                    Ok(node) => node,
-                    Err(e) => {
-                        let _ = reply_tx.send(NodeMessage::Abort { message: e.to_string() });
-                        return;
-                    }
-                };
-                if reply_tx.send(node.join_message()).is_err() {
-                    return;
-                }
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        ThreadMsg::Task(job) => {
-                            job();
-                            tasks_done.fetch_add(1, Ordering::Relaxed);
-                            if task_done_tx.send(()).is_err() {
-                                return; // leader gone
-                            }
-                        }
-                        // the admission reply of the handshake — the
-                        // in-process join can only succeed
-                        ThreadMsg::Proto(NodeMessage::Welcome) => {}
-                        ThreadMsg::Proto(msg) => match node.handle(msg) {
-                            Ok(Some(reply)) => {
-                                if reply_tx.send(reply).is_err() {
-                                    return; // leader gone
-                                }
-                            }
-                            Ok(None) => return, // clean shutdown
-                            Err(e) => {
-                                let _ = reply_tx
-                                    .send(NodeMessage::Abort { message: e.to_string() });
-                                return;
-                            }
-                        },
-                    }
-                }
-            }));
+            handles.push(spawn_worker_thread(
+                machine,
+                build,
+                rx,
+                reply_tx,
+                task_done_tx.clone(),
+                Arc::clone(&tasks_done),
+            ));
         }
-        drop(task_done_tx);
 
         let mut pool = Self {
             links,
             global_cols,
             engine_names: vec![String::new(); m],
             n,
+            p,
             transport: "in-process",
             handles,
             task_txs,
             task_done_rx: Some(task_done_rx),
+            task_done_tx: Some(task_done_tx),
             tasks_done,
+            listener: None,
+            respawner: None,
         };
         for k in 0..m {
             let expected = &pool.global_cols[k];
@@ -352,7 +356,9 @@ impl WorkerPool {
                     if k >= m {
                         let msg = format!("machine {k} out of range (M = {m})");
                         eprintln!("[accept] rejected a peer: {msg}");
-                        let _ = link.send(NodeMessage::Abort { message: msg });
+                        if let Err(e) = link.send(NodeMessage::Abort { message: msg }) {
+                            log_lost_abort(k, "admission", &e);
+                        }
                         continue;
                     }
                     if links[k].is_some() {
@@ -360,7 +366,9 @@ impl WorkerPool {
                         // connections; keep the admitted one
                         let msg = format!("machine {k} already connected");
                         eprintln!("[accept] rejected a duplicate join: {msg}");
-                        let _ = link.send(NodeMessage::Abort { message: msg });
+                        if let Err(e) = link.send(NodeMessage::Abort { message: msg }) {
+                            log_lost_abort(k, "admission", &e);
+                        }
                         continue;
                     }
                     // a *matching-machine* worker with the wrong shard or
@@ -379,7 +387,10 @@ impl WorkerPool {
                              identical to the leader's?",
                             expected.len()
                         );
-                        let _ = link.send(NodeMessage::Abort { message: msg.clone() });
+                        if let Err(e) = link.send(NodeMessage::Abort { message: msg.clone() })
+                        {
+                            log_lost_abort(k, "admission", &e);
+                        }
                         return Err(DlrError::Solver(msg));
                     }
                     if let Some(want) = expected_engine {
@@ -389,7 +400,11 @@ impl WorkerPool {
                                  pins '{want}' — mixed engines would break the \
                                  bit-identical trajectory contract"
                             );
-                            let _ = link.send(NodeMessage::Abort { message: msg.clone() });
+                            if let Err(e) =
+                                link.send(NodeMessage::Abort { message: msg.clone() })
+                            {
+                                log_lost_abort(k, "admission", &e);
+                            }
                             return Err(DlrError::Solver(msg));
                         }
                     }
@@ -421,11 +436,16 @@ impl WorkerPool {
             global_cols,
             engine_names,
             n,
+            p,
             transport: "socket",
             handles: Vec::new(),
             task_txs: Vec::new(),
             task_done_rx: None,
+            task_done_tx: None,
             tasks_done: Arc::new(AtomicU64::new(0)),
+            // retained: the supervisor re-admits replacement workers here
+            listener: Some(listener),
+            respawner: None,
         })
     }
 
@@ -698,6 +718,330 @@ impl WorkerPool {
             out.push(cols[local as usize], v);
         }
     }
+
+    /// Apply one recv deadline to every link. Sockets turn a wedged (alive
+    /// but silent) peer into a clean "timed out" error the supervisor can
+    /// act on; in-process channels ignore the deadline — a dead worker
+    /// thread already fails `recv` immediately.
+    pub fn set_recv_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
+        for (k, link) in self.links.iter_mut().enumerate() {
+            link.set_recv_deadline(deadline).map_err(|e| worker_err(k, e))?;
+        }
+        Ok(())
+    }
+
+    /// Liveness probe: ping every worker and report the machines that did
+    /// not answer within `timeout`. The protocol is strictly
+    /// request/reply, so at most one stale (un-consumed) reply from the
+    /// failed phase can sit ahead of the pong — the probe drains it, which
+    /// is exactly what a rollback needs: every surviving link is left
+    /// idle. Probe traffic is charged to the ledger's recovery bucket,
+    /// never the algorithmic one.
+    pub fn probe_links(&mut self, timeout: Duration, ledger: &NetworkLedger) -> Vec<usize> {
+        let mut dead = Vec::new();
+        for (k, link) in self.links.iter_mut().enumerate() {
+            let _ = link.set_recv_deadline(Some(timeout));
+            let alive = probe_one(link.as_mut(), ledger);
+            let _ = link.set_recv_deadline(None);
+            if !alive {
+                dead.push(k);
+            }
+        }
+        dead
+    }
+
+    /// Re-admit a replacement for machine `k` after
+    /// [`WorkerPool::probe_links`] declared it dead. A socket pool waits up
+    /// to `window` for a fresh `dglmnet worker` process to connect on the
+    /// retained listener and validates it exactly like the original
+    /// admission (machine index, shard shape, owned-column checksum, and
+    /// the engine the fit started on). A store-backed in-process pool
+    /// respawns the worker thread, which re-loads its shard file. Either
+    /// way the replacement starts cold — the caller restores state (the
+    /// driver's rollback re-syncs every worker from its recovery
+    /// checkpoint).
+    pub fn replace_link(
+        &mut self,
+        k: usize,
+        window: Duration,
+        ledger: &NetworkLedger,
+    ) -> Result<()> {
+        if k >= self.links.len() {
+            return Err(DlrError::Solver(format!(
+                "no machine {k} in a {}-worker pool",
+                self.links.len()
+            )));
+        }
+        if self.transport == "socket" {
+            let listener = self.listener.take().ok_or_else(|| {
+                DlrError::Solver(
+                    "cannot re-admit a replacement: this socket pool did not retain \
+                     its listener"
+                        .into(),
+                )
+            })?;
+            let admitted = self.admit_replacement(&listener, k, window, ledger);
+            self.listener = Some(listener);
+            let (link, engine) = admitted?;
+            self.links[k] = link;
+            self.engine_names[k] = engine;
+            Ok(())
+        } else {
+            self.respawn_in_process(k)
+        }
+    }
+
+    /// The socket re-admission loop: like [`WorkerPool::accept`], but for
+    /// exactly one known machine. Stray peers are rejected and the wait
+    /// continues; a machine-`k` worker announcing the wrong shard or
+    /// engine is a hard, actionable error.
+    fn admit_replacement(
+        &self,
+        listener: &TcpListener,
+        k: usize,
+        window: Duration,
+        ledger: &NetworkLedger,
+    ) -> Result<(Box<dyn Transport>, String)> {
+        let expected = &self.global_cols[k];
+        let (n, p) = (self.n, self.p);
+        let deadline = Instant::now() + window;
+        loop {
+            let stream = match listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(DlrError::Solver(format!(
+                            "no replacement for worker {k} connected within {:.0}s",
+                            window.as_secs_f64()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            stream.set_nonblocking(false)?;
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(100));
+            stream.set_read_timeout(Some(remaining))?;
+            let raw = stream.try_clone()?;
+            let mut link: Box<dyn Transport> =
+                Box::new(SocketTransport::from_stream(stream)?);
+            let first = match link.recv() {
+                Ok(msg) => msg,
+                Err(e) => {
+                    eprintln!("[recover] rejected a peer that sent no valid join: {e}");
+                    continue;
+                }
+            };
+            ledger.record_recovery(first.encode().len() as u64);
+            match first {
+                NodeMessage::Join {
+                    machine,
+                    n: jn,
+                    p: jp,
+                    local_features,
+                    cols_checksum,
+                    engine,
+                } => {
+                    let jm = machine as usize;
+                    if jm != k {
+                        let msg = format!(
+                            "the supervisor is re-admitting machine {k}, not machine {jm}"
+                        );
+                        eprintln!("[recover] rejected a peer: {msg}");
+                        if let Err(e) = link.send(NodeMessage::Abort { message: msg }) {
+                            log_lost_abort(jm, "re-admission", &e);
+                        }
+                        continue;
+                    }
+                    if jn as usize != n
+                        || jp as usize != p
+                        || local_features as usize != expected.len()
+                        || cols_checksum != crc_u32(expected)
+                    {
+                        let msg = format!(
+                            "worker {k} announced shard (n = {jn}, p = {jp}, features = \
+                             {local_features}) but the leader expects (n = {n}, p = {p}, \
+                             features = {}) — are the worker's data/partition flags \
+                             identical to the leader's?",
+                            expected.len()
+                        );
+                        if let Err(e) =
+                            link.send(NodeMessage::Abort { message: msg.clone() })
+                        {
+                            log_lost_abort(k, "re-admission", &e);
+                        }
+                        return Err(DlrError::Solver(msg));
+                    }
+                    let want = &self.engine_names[k];
+                    if !want.is_empty() && engine != *want {
+                        let msg = format!(
+                            "replacement worker {k} runs the '{engine}' engine but the \
+                             fit started on '{want}' — mixed engines would break the \
+                             bit-identical trajectory contract"
+                        );
+                        if let Err(e) =
+                            link.send(NodeMessage::Abort { message: msg.clone() })
+                        {
+                            log_lost_abort(k, "re-admission", &e);
+                        }
+                        return Err(DlrError::Solver(msg));
+                    }
+                    link.send(NodeMessage::Welcome).map_err(|e| worker_err(k, e))?;
+                    ledger.record_recovery(NodeMessage::Welcome.encode().len() as u64);
+                    // admitted: lift the handshake deadline for fit traffic
+                    raw.set_read_timeout(None)?;
+                    return Ok((link, engine));
+                }
+                NodeMessage::Abort { message } => {
+                    return Err(DlrError::Solver(format!(
+                        "the replacement worker failed to start: {message}"
+                    )))
+                }
+                other => {
+                    eprintln!(
+                        "[recover] rejected a peer that sent {} instead of join",
+                        other.name()
+                    );
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// Respawn an in-process worker thread for machine `k` from the
+    /// retained shard-store respawner.
+    fn respawn_in_process(&mut self, k: usize) -> Result<()> {
+        let respawner = self.respawner.as_ref().ok_or_else(|| {
+            DlrError::Solver(format!(
+                "cannot respawn in-process worker {k}: only a store-backed pool \
+                 (spawn_from_store) can re-load a shard after its thread died"
+            ))
+        })?;
+        let build = respawner(k);
+        let task_done_tx = self
+            .task_done_tx
+            .clone()
+            .expect("in-process pool keeps its task-ack sender");
+        let (tx, rx) = mpsc::channel::<ThreadMsg>();
+        let (reply_tx, reply_rx) = mpsc::channel::<NodeMessage>();
+        self.handles.push(spawn_worker_thread(
+            k,
+            build,
+            rx,
+            reply_tx,
+            task_done_tx,
+            Arc::clone(&self.tasks_done),
+        ));
+        let mut link: Box<dyn Transport> =
+            Box::new(LeaderLink { tx: tx.clone(), rx: reply_rx });
+        let expected = &self.global_cols[k];
+        let engine = handshake(
+            link.as_mut(),
+            k,
+            self.n as u32,
+            self.p as u32,
+            expected.len() as u32,
+            crc_u32(expected),
+        )?;
+        self.engine_names[k] = engine;
+        self.links[k] = link;
+        self.task_txs[k] = tx;
+        Ok(())
+    }
+
+    /// Test hook for the fault-injection harness: wrap machine `k`'s live
+    /// link in a [`FaultyTransport`] that injures the `at`-th recv.
+    #[doc(hidden)]
+    pub fn wrap_link(&mut self, k: usize, fault: Fault, at: usize) {
+        let inner = self.links.remove(k);
+        self.links.insert(k, Box::new(FaultyTransport::new(inner, fault, at)));
+    }
+}
+
+/// One ping/pong round on a single link; `false` means the peer is dead
+/// (or wedged past the deadline).
+fn probe_one(link: &mut dyn Transport, ledger: &NetworkLedger) -> bool {
+    ledger.record_recovery(NodeMessage::Ping.encode().len() as u64);
+    if link.send(NodeMessage::Ping).is_err() {
+        return false;
+    }
+    for _ in 0..2 {
+        match link.recv() {
+            Ok(msg) => {
+                ledger.record_recovery(msg.encode().len() as u64);
+                if matches!(msg, NodeMessage::Pong) {
+                    return true;
+                }
+                // anything else is the one stale reply — drain and retry
+            }
+            Err(_) => return false,
+        }
+    }
+    false
+}
+
+/// The in-process worker thread body: build the node, announce it, then
+/// serve protocol messages and task-lane jobs until the leader hangs up.
+/// Shared by the initial spawn and by supervisor respawns
+/// ([`WorkerPool::replace_link`]), so a replacement behaves exactly like
+/// the worker it stands in for.
+fn spawn_worker_thread(
+    machine: usize,
+    build: NodeBuilder,
+    rx: mpsc::Receiver<ThreadMsg>,
+    reply_tx: mpsc::Sender<NodeMessage>,
+    task_done_tx: mpsc::Sender<()>,
+    tasks_done: Arc<AtomicU64>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut node = match build() {
+            Ok(node) => node,
+            Err(e) => {
+                if let Err(lost) =
+                    reply_tx.send(NodeMessage::Abort { message: e.to_string() })
+                {
+                    log_lost_abort(machine, "node construction", &lost);
+                }
+                return;
+            }
+        };
+        if reply_tx.send(node.join_message()).is_err() {
+            return;
+        }
+        while let Ok(req) = rx.recv() {
+            match req {
+                ThreadMsg::Task(job) => {
+                    job();
+                    tasks_done.fetch_add(1, Ordering::Relaxed);
+                    if task_done_tx.send(()).is_err() {
+                        return; // leader gone
+                    }
+                }
+                // the admission reply of the handshake — the
+                // in-process join can only succeed
+                ThreadMsg::Proto(NodeMessage::Welcome) => {}
+                ThreadMsg::Proto(msg) => match node.handle(msg) {
+                    Ok(Some(reply)) => {
+                        if reply_tx.send(reply).is_err() {
+                            return; // leader gone
+                        }
+                    }
+                    Ok(None) => return, // clean shutdown
+                    Err(e) => {
+                        if let Err(lost) =
+                            reply_tx.send(NodeMessage::Abort { message: e.to_string() })
+                        {
+                            log_lost_abort(machine, "request handling", &lost);
+                        }
+                        return;
+                    }
+                },
+            }
+        }
+    })
 }
 
 /// Validate one node's `Join` announcement and admit it. Shared by the
@@ -732,7 +1076,9 @@ fn handshake(
                      features = {local_features}) — are the worker's data/partition \
                      flags identical to the leader's?"
                 );
-                let _ = link.send(NodeMessage::Abort { message: msg.clone() });
+                if let Err(e) = link.send(NodeMessage::Abort { message: msg.clone() }) {
+                    log_lost_abort(machine, "admission", &e);
+                }
                 return Err(DlrError::Solver(msg));
             }
             link.send(NodeMessage::Welcome)
@@ -1000,6 +1346,45 @@ mod tests {
                 want[i]
             );
         }
+    }
+
+    #[test]
+    fn dead_worker_is_probed_out_and_respawned_from_the_store() {
+        let ds = synth::dna_like(90, 18, 3, 26);
+        let cfg =
+            TrainConfig::builder().machines(2).engine(EngineKind::Native).build();
+        let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 18, 2, None);
+        let dir = std::env::temp_dir()
+            .join(format!("dglmnet_pool_respawn_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ShardStore::create(&dir, &ds, &part, "round-robin").unwrap();
+        let y = Arc::new(store.load_y().unwrap());
+        let mut pool =
+            WorkerPool::spawn_from_store(&cfg, &store, y, "artifacts".into()).unwrap();
+        let ledger = NetworkLedger::new();
+        // everyone answers the heartbeat on a healthy pool, and probe
+        // traffic lands only in the recovery bucket
+        assert!(pool.probe_links(Duration::from_secs(2), &ledger).is_empty());
+        assert!(ledger.recovery_bytes() > 0);
+        assert_eq!(ledger.total_bytes(), 0, "probes never touch the algo ledger");
+        // kill worker 1 (its thread exits) and detect it
+        pool.links[1].send(NodeMessage::Shutdown).unwrap();
+        let dead = pool.probe_links(Duration::from_secs(2), &ledger);
+        assert_eq!(dead, vec![1]);
+        // respawn from the store, restore state: the pool works again
+        pool.replace_link(1, Duration::from_secs(2), &ledger).unwrap();
+        let beta: Vec<f32> = (0..18).map(|j| j as f32 * 0.1 - 0.5).collect();
+        let margins: Vec<f32> = (0..90).map(|i| (i as f32 * 0.3).sin()).collect();
+        pool.sync_full_state(&beta, &margins).unwrap();
+        let states = pool.pull_states().unwrap();
+        let crc = crate::cluster::protocol::crc_f32(&margins);
+        for (k, (beta_local, margins_crc)) in states.iter().enumerate() {
+            assert_eq!(*margins_crc, crc, "machine {k}");
+            for (l, &g) in pool.global_cols[k].iter().enumerate() {
+                assert_eq!(beta_local[l].to_bits(), beta[g as usize].to_bits());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Failover and elasticity acceptance tests (PR 6):
+//!
+//! * a wedged (alive but silent) socket worker trips the configured recv
+//!   deadline instead of hanging the fit forever;
+//! * with supervision on, a corrupted link mid-fit (garbage frame) rolls
+//!   back to the recovery checkpoint and finishes with a trajectory
+//!   **bit-identical** to the undisturbed run — final β, per-iteration
+//!   objectives, and the charged comm ledger all match, with the
+//!   supervisor's own traffic accounted in a separate recovery bucket;
+//! * a socket worker that dies mid-fit is probed out, a replacement
+//!   process is re-admitted on the retained listener (validated against
+//!   the shard identity), and the completed fit is again bit-identical;
+//! * a replacement announcing a mismatched shard is rejected with an
+//!   actionable error, never silently admitted;
+//! * elastic join/leave: resharding a store M → M−1 between λ steps and
+//!   continuing from the current β reproduces a fresh fit at the new
+//!   machine count warm-started from the same β, bit for bit.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use dglmnet::cluster::protocol::{crc_u32, NodeMessage};
+use dglmnet::cluster::transport::{Fault, FaultyTransport, SocketTransport};
+use dglmnet::cluster::WorkerNode;
+use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::dataset::Dataset;
+use dglmnet::data::store::ShardStore;
+use dglmnet::data::synth;
+use dglmnet::solver::pool::spawn_local_socket_workers;
+use dglmnet::solver::{lambda_max, DGlmnetSolver, FitResult};
+
+fn native_cfg(m: usize, lambda: f64, max_iter: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(max_iter)
+        .build()
+}
+
+fn supervised_cfg(m: usize, lambda: f64, max_iter: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(max_iter)
+        .supervise(true)
+        .heartbeat_timeout_secs(2.0)
+        .build()
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dglmnet_failover_{}_{name}", std::process::id()))
+}
+
+/// Two completed fits must agree on every bit the recovery contract pins:
+/// iteration count, final objective, the charged comm ledger, every
+/// per-iteration record, and the final β.
+fn assert_bit_identical(a: &FitResult, beta_a: &[f32], b: &FitResult, beta_b: &[f32]) {
+    assert_eq!(a.iterations, b.iterations, "iteration counts diverged");
+    assert_eq!(
+        a.objective.to_bits(),
+        b.objective.to_bits(),
+        "objectives diverged: {} vs {}",
+        a.objective,
+        b.objective
+    );
+    assert_eq!(a.comm_bytes, b.comm_bytes, "charged comm ledger diverged");
+    assert_eq!(a.trace.len(), b.trace.len());
+    for (x, y) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "iter {}", x.iter);
+        assert_eq!(x.alpha.to_bits(), y.alpha.to_bits(), "iter {}", x.iter);
+        assert_eq!(x.comm_bytes, y.comm_bytes, "iter {}", x.iter);
+    }
+    assert_eq!(beta_a.len(), beta_b.len());
+    for (j, (x, y)) in beta_a.iter().zip(beta_b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "beta[{j}]");
+    }
+}
+
+/// Run one fit over real TCP sockets with well-behaved workers — the
+/// undisturbed reference the chaos runs are compared against.
+fn socket_fit(ds: &Dataset, cfg: &TrainConfig, lambda: f64) -> (FitResult, Vec<f32>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers = spawn_local_socket_workers(cfg, ds, addr);
+    let mut solver = DGlmnetSolver::from_dataset_socket(ds, cfg, listener).unwrap();
+    let fit = solver.fit_lambda(lambda).unwrap();
+    let beta = solver.beta.clone();
+    assert_eq!(solver.recovery_comm_bytes(), 0, "undisturbed run must not probe");
+    drop(solver); // sends Shutdown to every node
+    for h in workers {
+        h.join().expect("worker thread panicked").unwrap();
+    }
+    (fit, beta)
+}
+
+/// A well-behaved socket worker thread for one machine; tolerates the
+/// leader erroring out or replacing it (its serve result is ignored).
+fn good_worker(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    machine: usize,
+    addr: SocketAddr,
+) -> JoinHandle<()> {
+    let shard = DGlmnetSolver::shard_for(ds, cfg, machine);
+    let y = std::sync::Arc::new(ds.y.clone());
+    let p = ds.n_features();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let mut node =
+            WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
+                .unwrap();
+        let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
+        let _ = node.serve(&mut t);
+    })
+}
+
+/// A worker whose transport dies on its `dies_at`-th recv — the
+/// worker-side view of `kill -9` mid-fit, injected with the
+/// fault-injection harness.
+fn doomed_worker(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    machine: usize,
+    addr: SocketAddr,
+    dies_at: usize,
+) -> JoinHandle<()> {
+    let shard = DGlmnetSolver::shard_for(ds, cfg, machine);
+    let y = std::sync::Arc::new(ds.y.clone());
+    let p = ds.n_features();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let mut node =
+            WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
+                .unwrap();
+        let socket = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
+        let mut t = FaultyTransport::new(Box::new(socket), Fault::Drop, dies_at);
+        let _ = node.serve(&mut t);
+    })
+}
+
+fn read_frame_opt(stream: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len).ok()?;
+    let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+    stream.read_exact(&mut body).ok()?;
+    Some(body)
+}
+
+fn write_frame(stream: &mut TcpStream, body: &[u8]) {
+    stream.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    stream.write_all(body).unwrap();
+    stream.flush().unwrap();
+}
+
+fn join_body(ds: &Dataset, cfg: &TrainConfig, machine: usize) -> Vec<u8> {
+    let partition = DGlmnetSolver::partition_for(ds, cfg);
+    let cols = partition.features_of(machine);
+    NodeMessage::Join {
+        machine: machine as u32,
+        n: ds.n_examples() as u32,
+        p: ds.n_features() as u32,
+        local_features: cols.len() as u32,
+        cols_checksum: crc_u32(&cols),
+        engine: "native".into(),
+    }
+    .encode()
+}
+
+/// A worker that joins and then goes silent — alive at the TCP level but
+/// never replying — must trip the configured recv deadline as a clean,
+/// prompt, attributable error, not hang the fit forever.
+#[test]
+fn wedged_worker_trips_the_recv_deadline_instead_of_hanging() {
+    let ds = synth::dna_like(200, 20, 4, 801);
+    let cfg = TrainConfig::builder()
+        .machines(2)
+        .engine(EngineKind::Native)
+        .lambda(0.2)
+        .max_iter(10)
+        .recv_timeout_secs(1.0)
+        .build();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let good = good_worker(&ds, &cfg, 0, addr);
+    let join = join_body(&ds, &cfg, 1);
+    let wedged = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, &join);
+        let _welcome = read_frame_opt(&mut s).expect("welcome");
+        let _sweep = read_frame_opt(&mut s).expect("first sweep");
+        // wedge: stay connected, drain frames, never answer
+        while read_frame_opt(&mut s).is_some() {}
+    });
+
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    let err = solver.fit_lambda(0.2).unwrap_err().to_string();
+    assert!(err.contains("worker 1"), "{err}");
+    assert!(err.contains("timed out"), "{err}");
+    drop(solver); // closes the link, unblocking the wedged peer's drain
+    wedged.join().unwrap();
+    good.join().unwrap();
+}
+
+/// Supervised recovery from a corrupted link: the garbage frame fails the
+/// iteration, the supervisor probes every worker (all alive — a damaged
+/// wire, not a dead process), rolls back to the recovery checkpoint, and
+/// the completed fit is bit-identical to the undisturbed run.
+#[test]
+fn supervised_recovery_from_a_corrupted_link_is_bit_identical() {
+    let ds = synth::dna_like(400, 40, 5, 802);
+    let lam = lambda_max(&ds) / 64.0;
+    let cfg = supervised_cfg(3, lam, 40);
+
+    let mut clean = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let fit_clean = clean.fit_lambda(lam).unwrap();
+    assert!(fit_clean.iterations >= 4, "need a fit long enough to disturb");
+    assert_eq!(clean.recovery_comm_bytes(), 0);
+
+    let mut hurt = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    hurt.wrap_worker_link(1, Fault::Corrupt, 7);
+    let fit_hurt = hurt.fit_lambda(lam).unwrap();
+
+    assert!(hurt.recovery_comm_bytes() > 0, "the supervisor must have probed");
+    assert_bit_identical(&fit_clean, &clean.beta, &fit_hurt, &hurt.beta);
+}
+
+/// The tentpole chaos pin: a socket worker dies mid-fit, the supervisor
+/// probes it out, re-admits a replacement process on the retained
+/// listener, rolls back, and the completed fit reproduces the undisturbed
+/// run's final β, objective trajectory, and charged comm ledger exactly.
+#[test]
+fn killed_socket_worker_is_replaced_and_the_fit_stays_bit_identical() {
+    let ds = synth::dna_like(400, 40, 5, 803);
+    let lam = lambda_max(&ds) / 64.0;
+    let cfg = supervised_cfg(2, lam, 40);
+
+    let (fit_ref, beta_ref) = socket_fit(&ds, &cfg, lam);
+    assert!(fit_ref.iterations >= 4, "need a fit long enough to kill");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let good = good_worker(&ds, &cfg, 0, addr);
+    let doomed = doomed_worker(&ds, &cfg, 1, addr, 5);
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    // the stand-in connects only after admission closed, so it waits in
+    // the listener backlog until the supervisor re-admits machine 1
+    let replacement = good_worker(&ds, &cfg, 1, addr);
+
+    let fit_chaos = solver.fit_lambda(lam).unwrap();
+    assert!(
+        solver.recovery_comm_bytes() > 0,
+        "the supervisor must have probed and re-admitted"
+    );
+    let beta_chaos = solver.beta.clone();
+    assert_bit_identical(&fit_ref, &beta_ref, &fit_chaos, &beta_chaos);
+    drop(solver); // sends Shutdown to the survivors
+    doomed.join().unwrap();
+    replacement.join().unwrap();
+    good.join().unwrap();
+}
+
+/// A replacement peer announcing the right machine index but the wrong
+/// shard identity (here: machine 1 of a three-machine layout offered to a
+/// two-machine fit) must be rejected with an actionable error — admitting
+/// it would silently corrupt the fit.
+#[test]
+fn a_replacement_with_a_mismatched_shard_is_rejected() {
+    let ds = synth::dna_like(400, 40, 5, 804);
+    let lam = lambda_max(&ds) / 64.0;
+    let cfg = supervised_cfg(2, lam, 40);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let good = good_worker(&ds, &cfg, 0, addr);
+    let doomed = doomed_worker(&ds, &cfg, 1, addr, 5);
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    let bad_join = join_body(&ds, &native_cfg(3, lam, 40), 1);
+    let rogue = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, &bad_join);
+        // read the Abort (and whatever follows) until the leader hangs up
+        while read_frame_opt(&mut s).is_some() {}
+    });
+
+    let err = solver.fit_lambda(lam).unwrap_err().to_string();
+    assert!(err.contains("announced"), "{err}");
+    assert!(err.contains("expects"), "{err}");
+    drop(solver);
+    rogue.join().unwrap();
+    doomed.join().unwrap();
+    good.join().unwrap();
+}
+
+/// Elastic join/leave between λ steps: reshard the store 3 → 2, continue
+/// from the current β, and the continuation is bit-identical to a fresh
+/// M = 2 fit warm-started from the same β.
+#[test]
+fn elastic_resize_matches_a_fresh_fit_at_the_new_machine_count() {
+    let ds = synth::dna_like(400, 40, 5, 805);
+    let lam = lambda_max(&ds);
+    let (lam1, lam2) = (lam / 8.0, lam / 32.0);
+    let cfg3 = native_cfg(3, lam1, 40);
+
+    let dir3 = tmp_dir("elastic_src");
+    let partition3 = DGlmnetSolver::partition_for(&ds, &cfg3);
+    let store3 = ShardStore::create(&dir3, &ds, &partition3, "round-robin").unwrap();
+    let mut s3 = DGlmnetSolver::from_store(&store3, &cfg3).unwrap();
+    s3.fit_lambda(lam1).unwrap();
+    let warm = s3.beta.clone();
+
+    // one machine leaves: reshard 3 -> 2 and continue at the next λ
+    let dir2 = tmp_dir("elastic_dst");
+    let mut resized = s3.elastic_resize(&store3, 2, &dir2).unwrap();
+    let fit_resized = resized.fit_lambda(lam2).unwrap();
+    assert!(fit_resized.iterations >= 2, "need a non-trivial continuation");
+
+    // the reference: a fresh M = 2 cluster warm-started from the same β
+    let cfg2 = native_cfg(2, lam2, 40);
+    let mut fresh = DGlmnetSolver::from_dataset(&ds, &cfg2).unwrap();
+    fresh.set_beta(&warm).unwrap();
+    let fit_fresh = fresh.fit_lambda(lam2).unwrap();
+
+    assert_bit_identical(&fit_fresh, &fresh.beta, &fit_resized, &resized.beta);
+    for d in [dir3, dir2] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}
