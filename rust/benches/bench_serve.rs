@@ -1,0 +1,274 @@
+//! P7 — serving benchmarks: single-request latency (p50/p99), concurrent
+//! throughput, streamed batch scoring, and hot-swap detection time against
+//! a live `serve` subsystem on a loopback socket. Emits `BENCH_serve.json`
+//! (same shape as `BENCH_iteration.json`); `check_bench_regression.py`
+//! gates the `median_secs`/`p99_secs` entries in CI.
+//!
+//! Run: `cargo bench --bench bench_serve`
+//!
+//! The latency stats here are computed manually (not through
+//! `bench_harness::bench`) because samples are collected across client
+//! threads and we additionally need tail percentiles.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use dglmnet::bench_harness::{fmt_secs, section};
+use dglmnet::config::ServeConfig;
+use dglmnet::serve::Server;
+use dglmnet::solver::SparseModel;
+use dglmnet::util::json::Json;
+
+/// Deterministic sparse model: `nnz` non-zeros strided over `p` features.
+fn make_model(p: usize, nnz: usize, salt: u64) -> SparseModel {
+    let mut beta = vec![0f32; p];
+    let mut state = salt.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    let stride = p / nnz;
+    for k in 0..nnz {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let w = ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5;
+        beta[k * stride] = w;
+    }
+    SparseModel::from_dense(&beta, 0.5).with_meta(100_000, "bench")
+}
+
+/// A deterministic ~`k`-feature example body for `/predict`.
+fn example_body(p: usize, k: usize, seed: usize) -> String {
+    let stride = p / k;
+    let idx: Vec<String> = (0..k).map(|t| (t * stride + seed % stride).to_string()).collect();
+    let vals: Vec<String> =
+        (0..k).map(|t| (if t % 2 == 0 { "1" } else { "2" }).to_string()).collect();
+    format!("{{\"indices\":[{}],\"values\":[{}]}}", idx.join(","), vals.join(","))
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to serve");
+        stream.set_nodelay(true).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> (u16, Vec<u8>) {
+        let req = format!(
+            "POST {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.stream.write_all(req.as_bytes()).unwrap();
+        self.read_response()
+    }
+
+    fn get(&mut self, path: &str) -> (u16, Vec<u8>) {
+        let req = format!("GET {path} HTTP/1.1\r\nHost: bench\r\n\r\n");
+        self.stream.write_all(req.as_bytes()).unwrap();
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> (u16, Vec<u8>) {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line {line:?}"));
+        let mut content_length = 0usize;
+        let mut chunked = false;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).unwrap();
+            let h = h.trim().to_ascii_lowercase();
+            if h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap();
+            }
+            if h.starts_with("transfer-encoding:") && h.contains("chunked") {
+                chunked = true;
+            }
+        }
+        let mut body = Vec::new();
+        if chunked {
+            loop {
+                let mut sz = String::new();
+                self.reader.read_line(&mut sz).unwrap();
+                let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+                let mut buf = vec![0u8; n + 2]; // chunk + trailing CRLF
+                self.reader.read_exact(&mut buf).unwrap();
+                if n == 0 {
+                    break;
+                }
+                body.extend_from_slice(&buf[..n]);
+            }
+        } else {
+            body.resize(content_length, 0);
+            self.reader.read_exact(&mut body).unwrap();
+        }
+        (status, body)
+    }
+}
+
+/// median / p99 / mean / min / max over raw latency samples.
+fn latency_entry(mut samples: Vec<f64>) -> (Json, f64, f64) {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q).round() as usize];
+    let median = pick(0.5);
+    let p99 = pick(0.99);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut m = BTreeMap::new();
+    m.insert("median_secs".to_string(), Json::Num(median));
+    m.insert("p99_secs".to_string(), Json::Num(p99));
+    m.insert("mean_secs".to_string(), Json::Num(mean));
+    m.insert("min_secs".to_string(), Json::Num(samples[0]));
+    m.insert("max_secs".to_string(), Json::Num(samples[samples.len() - 1]));
+    m.insert("samples".to_string(), Json::Num(samples.len() as f64));
+    (Json::Obj(m), median, p99)
+}
+
+fn main() {
+    const P: usize = 200_000;
+    let dir = std::env::temp_dir().join(format!("dglmnet_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = dir.join("model.artifact");
+    make_model(P, 5_000, 1).save(&artifact).unwrap();
+
+    let cfg = ServeConfig {
+        listen: "127.0.0.1:0".into(),
+        threads: 4,
+        max_batch: 1024,
+        watch: true,
+        poll_interval_secs: 0.05,
+    };
+    let handle = Server::start(&artifact, &cfg).expect("start serve");
+    let addr = handle.addr;
+    println!("serving {} (p = {P}) at {addr}", artifact.display());
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    section("single-request latency (keep-alive, ~50-feature examples)");
+    {
+        let mut c = Client::connect(addr);
+        let bodies: Vec<String> = (0..64).map(|i| example_body(P, 50, i)).collect();
+        for b in &bodies {
+            let (status, _) = c.post("/predict", b);
+            assert_eq!(status, 200);
+        }
+        let mut samples = Vec::with_capacity(2_000);
+        for i in 0..2_000 {
+            let b = &bodies[i % bodies.len()];
+            let t0 = Instant::now();
+            let (status, _) = c.post("/predict", b);
+            samples.push(t0.elapsed().as_secs_f64());
+            assert_eq!(status, 200);
+        }
+        let (entry, median, p99) = latency_entry(samples);
+        println!("p50 {}  p99 {}", fmt_secs(median), fmt_secs(p99));
+        report.insert("predict_single_latency".into(), entry);
+    }
+
+    section("concurrent throughput (4 client threads x 500 requests)");
+    {
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr);
+                    let bodies: Vec<String> =
+                        (0..16).map(|i| example_body(P, 50, t * 100 + i)).collect();
+                    let mut samples = Vec::with_capacity(500);
+                    for i in 0..500 {
+                        let b = &bodies[i % bodies.len()];
+                        let s0 = Instant::now();
+                        let (status, _) = c.post("/predict", b);
+                        samples.push(s0.elapsed().as_secs_f64());
+                        assert_eq!(status, 200);
+                    }
+                    samples
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for t in threads {
+            all.extend(t.join().expect("client thread"));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = all.len() as f64 / wall;
+        let (entry, median, p99) = latency_entry(all);
+        println!("throughput {rps:.0} req/s  p50 {}  p99 {}", fmt_secs(median), fmt_secs(p99));
+        report.insert("predict_concurrent_latency".into(), entry);
+        let mut m = BTreeMap::new();
+        m.insert("requests_per_sec".into(), Json::Num(rps));
+        m.insert("wall_secs".into(), Json::Num(wall));
+        report.insert("predict_throughput".into(), Json::Obj(m));
+    }
+
+    section("streamed batch scoring (512 examples per request)");
+    {
+        let examples: Vec<String> = (0..512).map(|i| example_body(P, 50, i)).collect();
+        let body = format!("{{\"examples\":[{}]}}", examples.join(","));
+        let mut c = Client::connect(addr);
+        let (status, bytes) = c.post("/predict_batch", &body);
+        assert_eq!(status, 200);
+        assert_eq!(bytes.iter().filter(|&&b| b == b'\n').count(), 512);
+        let mut samples = Vec::with_capacity(20);
+        for _ in 0..20 {
+            let t0 = Instant::now();
+            let (status, _) = c.post("/predict_batch", &body);
+            // per-example cost is the comparable number across runs
+            samples.push(t0.elapsed().as_secs_f64() / 512.0);
+            assert_eq!(status, 200);
+        }
+        let (entry, median, p99) = latency_entry(samples);
+        println!("per-example p50 {}  p99 {}", fmt_secs(median), fmt_secs(p99));
+        report.insert("predict_batch_per_example".into(), entry);
+    }
+
+    section("hot-swap detection (artifact rewrite -> new version served)");
+    {
+        let mut c = Client::connect(addr);
+        let (_, body) = c.get("/healthz");
+        let before = String::from_utf8(body).unwrap();
+        make_model(P, 5_000, 2).save(&artifact).unwrap();
+        let t0 = Instant::now();
+        let detect_secs = loop {
+            let (_, body) = c.get("/healthz");
+            if String::from_utf8(body).unwrap() != before {
+                break t0.elapsed().as_secs_f64();
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "hot-swap was never detected"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        // informational (poll-cadence noise dominates): no median_secs key,
+        // so the regression gate ignores it
+        println!("detected in {}", fmt_secs(detect_secs));
+        let mut m = BTreeMap::new();
+        m.insert("detect_secs".into(), Json::Num(detect_secs));
+        m.insert("poll_interval_secs".into(), Json::Num(cfg.poll_interval_secs));
+        report.insert("hot_swap_detection".into(), Json::Obj(m));
+    }
+
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("bench_serve".into()));
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("results".to_string(), Json::Obj(report));
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, format!("{}\n", Json::Obj(top))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

@@ -645,6 +645,88 @@ impl Default for OnlineConfig {
     }
 }
 
+/// `dglmnet serve` configuration (`[serve]` TOML section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Bind address (`[serve] listen`). Port 0 picks an ephemeral port
+    /// (the server prints the resolved address on its ready line).
+    pub listen: String,
+    /// Accept/worker threads handling connections (`[serve] threads`).
+    pub threads: usize,
+    /// Per-request example cap for `POST /predict_batch`
+    /// (`[serve] max_batch`); larger batches get 413.
+    pub max_batch: usize,
+    /// Watch the model artifact and hot-swap on change (`[serve] watch`).
+    pub watch: bool,
+    /// Artifact poll cadence for the watcher thread, in seconds
+    /// (`[serve] poll_interval_secs`).
+    pub poll_interval_secs: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:4890".into(),
+            threads: 4,
+            max_batch: 1024,
+            watch: true,
+            poll_interval_secs: 0.5,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            return Err(DlrError::Config(
+                "serve needs a [serve] listen = \"host:port\" address".into(),
+            ));
+        }
+        if self.threads == 0 {
+            return Err(DlrError::Config("serve.threads must be >= 1".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(DlrError::Config("serve.max_batch must be >= 1".into()));
+        }
+        if !self.poll_interval_secs.is_finite() || self.poll_interval_secs <= 0.0 {
+            return Err(DlrError::Config(
+                "serve.poll_interval_secs must be a positive number of seconds".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&toml::parse(&text)?)
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(s) = doc.get("serve", "listen").and_then(|v| v.as_str()) {
+            cfg.listen = s.to_string();
+        }
+        if let Some(v) = doc.get("serve", "threads") {
+            cfg.threads = v.as_usize().ok_or_else(|| {
+                DlrError::Config("serve.threads must be a positive integer".into())
+            })?;
+        }
+        if let Some(v) = doc.get("serve", "max_batch") {
+            cfg.max_batch = v.as_usize().ok_or_else(|| {
+                DlrError::Config("serve.max_batch must be a positive integer".into())
+            })?;
+        }
+        if let Some(v) = doc.get("serve", "watch").and_then(|v| v.as_bool()) {
+            cfg.watch = v;
+        }
+        if let Some(v) = doc.get("serve", "poll_interval_secs").and_then(|v| v.as_f64()) {
+            cfg.poll_interval_secs = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -823,6 +905,38 @@ skip_alpha_init = true
         assert!(bad.validate().is_err());
         let doc = toml::parse("[cluster]\nrecovery_checkpoint_every = -2\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serve_config_loads_from_toml_and_is_validated() {
+        let c = ServeConfig::default();
+        assert_eq!(c.listen, "127.0.0.1:4890");
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.max_batch, 1024);
+        assert!(c.watch);
+        assert_eq!(c.poll_interval_secs, 0.5);
+        let doc = toml::parse(
+            "[serve]\nlisten = \"0.0.0.0:8080\"\nthreads = 8\nmax_batch = 64\n\
+             watch = false\npoll_interval_secs = 0.1\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.listen, "0.0.0.0:8080");
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.max_batch, 64);
+        assert!(!c.watch);
+        assert_eq!(c.poll_interval_secs, 0.1);
+        // garbage knobs are rejected with clear messages
+        let bad = ServeConfig { threads: 0, ..ServeConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { max_batch: 0, ..ServeConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { poll_interval_secs: 0.0, ..ServeConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { listen: String::new(), ..ServeConfig::default() };
+        assert!(bad.validate().is_err());
+        let doc = toml::parse("[serve]\nthreads = -1\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -11,6 +11,28 @@ use crate::error::{DlrError, Result};
 /// `cluster::codec` for the full codec set and the per-message cost model).
 pub const SPARSE_ENTRY_BYTES: u64 = 8;
 
+/// The canonical sparse margin kernel: `Σ_j x_j · β_j` accumulated in f64
+/// over the example's features in **ascending index order**, skipping
+/// zero (and out-of-range) weights. This is the single scoring definition
+/// train and serve share — [`CsrMatrix::margins`], the native engine's
+/// margin rebuild ([`CscMatrix::accumulate_margins_f64`], whose
+/// per-example addition sequence is the same ascending-feature order) and
+/// `serve`/`SparseModel::predict` all reduce to it, so a model scores an
+/// example bit-identically wherever it runs. Indices beyond `beta` score
+/// as zero weight (a served example may mention features the model never
+/// saw).
+pub fn dot_margin(cols: &[u32], vals: &[f32], beta: &[f32]) -> f64 {
+    let mut acc = 0f64;
+    for (&c, &v) in cols.iter().zip(vals) {
+        let b = *beta.get(c as usize).unwrap_or(&0.0) as f64;
+        if b == 0.0 {
+            continue;
+        }
+        acc += v as f64 * b;
+    }
+    acc
+}
+
 /// A sparse vector message: parallel `(index, value)` arrays with indices
 /// sorted ascending and unique. This is the unit of Δβ / Δmargin traffic
 /// in the `cluster::comm` collectives; what it costs on the wire depends
@@ -208,17 +230,15 @@ impl CsrMatrix {
         (0..self.n_rows).map(move |i| self.row(i))
     }
 
-    /// margins[i] = Σ_j x_ij β_j — by-example SpMV.
+    /// margins[i] = Σ_j x_ij β_j — by-example SpMV through the shared
+    /// [`dot_margin`] kernel (bit-identical to the by-feature rebuild in
+    /// [`CscMatrix::accumulate_margins_f64`] when rows are ascending).
     pub fn margins(&self, beta: &[f32]) -> Vec<f32> {
         assert!(beta.len() >= self.n_cols, "beta too short");
         let mut out = vec![0f32; self.n_rows];
         for i in 0..self.n_rows {
             let (cols, vals) = self.row(i);
-            let mut acc = 0f64;
-            for (&c, &v) in cols.iter().zip(vals) {
-                acc += v as f64 * beta[c as usize] as f64;
-            }
-            out[i] = acc as f32;
+            out[i] = dot_margin(cols, vals, beta) as f32;
         }
         out
     }
@@ -303,6 +323,28 @@ impl CsrMatrix {
 impl CscMatrix {
     pub fn nnz(&self) -> usize {
         self.values.len()
+    }
+
+    /// `acc[i] += Σ_j β_j x_ij` — the by-feature half of the canonical
+    /// margin kernel. Columns are walked in ascending order and zero
+    /// weights are skipped, so each example receives the exact addition
+    /// sequence [`dot_margin`] performs row-wise (f64 multiplication is
+    /// commutative): casting `acc[i]` to f32 is bit-identical to
+    /// `dot_margin(row_i, beta) as f32`. The native engine's margin
+    /// rebuild and the serve-side scorer agree through this.
+    pub fn accumulate_margins_f64(&self, beta: &[f32], acc: &mut [f64]) {
+        debug_assert_eq!(beta.len(), self.n_cols);
+        debug_assert_eq!(acc.len(), self.n_rows);
+        for (j, &b) in beta.iter().enumerate() {
+            let b = b as f64;
+            if b == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                acc[i as usize] += b * v as f64;
+            }
+        }
     }
 
     /// (row ids, vals) for feature `j`.
@@ -520,6 +562,53 @@ mod tests {
         sv.ensure_sorted();
         assert_eq!(sv.indices, vec![1, 4]);
         assert_eq!(sv.values, vec![9.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_margin_skips_zero_and_out_of_range_weights() {
+        let cols = [0u32, 2, 4, 9];
+        let vals = [1.0f32, 2.0, 3.0, 4.0];
+        let beta = [2.0f32, 5.0, 0.0, 5.0, -1.0];
+        // col 2 has zero weight, col 9 is beyond beta — both score as 0
+        assert_eq!(dot_margin(&cols, &vals, &beta), 2.0 - 3.0);
+        assert_eq!(dot_margin(&[], &[], &beta), 0.0);
+    }
+
+    #[test]
+    fn margin_kernel_row_and_column_halves_agree_bit_for_bit() {
+        // irrational-ish weights/values so the f64 accumulation order
+        // matters: the by-example kernel and the by-feature rebuild must
+        // still produce the same bits per example
+        let mut x = CsrMatrix::new(0);
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for i in 0..50 {
+            let mut entries = Vec::new();
+            for j in 0..40u32 {
+                if (i + j as usize) % 3 == 0 {
+                    entries.push((j, next()));
+                }
+            }
+            x.push_row(&entries);
+        }
+        let beta: Vec<f32> =
+            (0..40).map(|j| if j % 4 == 0 { 0.0 } else { next() }).collect();
+        let by_row = x.margins(&beta);
+        let csc = x.to_csc();
+        let mut acc = vec![0f64; x.n_rows];
+        csc.accumulate_margins_f64(&beta, &mut acc);
+        for i in 0..x.n_rows {
+            assert_eq!(
+                by_row[i].to_bits(),
+                (acc[i] as f32).to_bits(),
+                "example {i}: {} vs {}",
+                by_row[i],
+                acc[i] as f32
+            );
+        }
     }
 
     #[test]

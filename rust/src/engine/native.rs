@@ -135,16 +135,10 @@ impl SubproblemEngine for NativeEngine {
     ) -> Result<()> {
         debug_assert_eq!(beta_local.len(), self.shard.csc.n_cols);
         let mut acc = vec![0f64; self.n];
-        for (j, &b) in beta_local.iter().enumerate() {
-            let b = b as f64;
-            if b == 0.0 {
-                continue;
-            }
-            let (rows, vals) = self.shard.csc.col(j);
-            for (&i, &v) in rows.iter().zip(vals) {
-                acc[i as usize] += b * v as f64;
-            }
-        }
+        // the shared canonical margin kernel (data::sparse): ascending
+        // feature order, f64 accumulation, zero weights skipped — what
+        // CsrMatrix::margins / SparseModel::predict compute row-wise
+        self.shard.csc.accumulate_margins_f64(beta_local, &mut acc);
         out.clear(self.n);
         for (i, &v) in acc.iter().enumerate() {
             if v != 0.0 {

@@ -143,6 +143,43 @@
 //! features over `M ± 1` machines by resharding the store in place and
 //! warm-starting from the current β — bit-identical to a fresh fit at the
 //! new machine count warm-started from the same β.
+//!
+//! ## Serve a trained model — `dglmnet serve`
+//!
+//! The paper's models exist to answer live traffic; the [`serve`]
+//! subsystem closes the loop. Train and export a checksummed artifact,
+//! serve it over HTTP, and hot-swap it by rewriting the file — no
+//! restart, no dropped requests:
+//!
+//! ```text
+//! # 1. train → artifact (shape, λ, solver and an FNV checksum embedded)
+//! dglmnet train --kind dna --examples 2000 --features 200 --lambda 0.5 \
+//!     --model-out model.artifact
+//!
+//! # 2. serve it (prints "serve_ready addr=... model_version=...")
+//! dglmnet serve --model model.artifact --listen 127.0.0.1:4890
+//!
+//! # 3. score one sparse example
+//! curl -s http://127.0.0.1:4890/predict -d \
+//!     '{"indices":[3,17,42],"values":[1,1,1]}'
+//! #   → {"margin":-0.25,"model_version":"9f…","proba":0.4378…}
+//!
+//! # 4. batches stream back as ndjson, one line per example
+//! curl -s http://127.0.0.1:4890/predict_batch -d \
+//!     '{"examples":[{"indices":[3],"values":[1]},{"indices":[],"values":[]}]}'
+//!
+//! # 5. hot-swap: retrain at a new λ and atomically replace the file;
+//! #    the watcher validates the new artifact and swaps it in — watch
+//! #    model_version change on /healthz while traffic keeps flowing
+//! dglmnet train --kind dna --examples 2000 --features 200 --lambda 0.25 \
+//!     --model-out model.artifact.tmp && mv model.artifact.tmp model.artifact
+//! ```
+//!
+//! Served predictions are **bit-identical** to offline `dglmnet predict`
+//! and to the training cluster's own margins: all three score through the
+//! shared [`data::sparse::dot_margin`] kernel. A corrupt or half-written
+//! artifact never reaches the slot — the loader's checksum rejects it,
+//! a warning is logged, and the old model keeps serving.
 
 pub mod baselines;
 pub mod bench_harness;
@@ -155,6 +192,7 @@ pub mod error;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod util;
 

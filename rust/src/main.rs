@@ -1,8 +1,10 @@
 //! `dglmnet` — the d-GLMNET launcher: dataset generation, the by-feature
 //! transform, single-λ training, the full regularization path, the online
-//! baseline, and quick evaluation. The benchmark harnesses that regenerate
-//! the paper's tables/figures live under `cargo bench`.
+//! baseline, quick evaluation, offline scoring, and the HTTP model server.
+//! The benchmark harnesses that regenerate the paper's tables/figures live
+//! under `cargo bench`.
 
+use std::io::Write;
 use std::process::ExitCode;
 use std::time::Duration;
 
@@ -140,6 +142,22 @@ fn app() -> App {
             CommandSpec::new("evaluate", "score a saved model on a libsvm test set")
                 .opt("model", "model path", None)
                 .opt("input", "libsvm test path", None),
+        )
+        .command(
+            CommandSpec::new("predict", "score a libsvm file offline with a saved model (ndjson; lines are byte-identical to /predict_batch output)")
+                .opt("model", "model artifact path", None)
+                .opt("input", "libsvm input path", None)
+                .opt("out", "write ndjson here instead of stdout", None),
+        )
+        .command(
+            CommandSpec::new("serve", "serve a trained model artifact over HTTP (POST /predict, /predict_batch; hot-swaps when the artifact changes)")
+                .opt("model", "trained model artifact path (watched for hot-swap)", None)
+                .opt("config", "TOML file with a [serve] section", None)
+                .opt("listen", "bind address host:port (port 0 = ephemeral; overrides [serve] listen)", None)
+                .opt("threads", "accept threads (overrides [serve] threads)", None)
+                .opt("max-batch", "max examples per /predict_batch request (overrides [serve] max_batch)", None)
+                .opt("poll-interval-secs", "artifact watch cadence (overrides [serve] poll_interval_secs)", None)
+                .flag("no-watch", "disable the artifact watcher (no hot-swap)"),
         )
 }
 
@@ -354,7 +372,8 @@ fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
 /// Out-of-core train path: every worker self-loads its shard file from the
 /// store named by `cfg.store` and the leader touches only the manifest,
 /// the shard headers and `y.bin` — it never constructs a matrix of X.
-fn train_dglmnet_from_store(args: &ParsedArgs) -> Result<FitResult> {
+/// Returns the fit plus the store's example count (artifact metadata).
+fn train_dglmnet_from_store(args: &ParsedArgs) -> Result<(FitResult, usize)> {
     let cfg = train_config(args)?;
     let dir = cfg.store.clone().ok_or_else(|| {
         DlrError::Cli("the store train path needs --store <dir>".into())
@@ -368,8 +387,9 @@ fn train_dglmnet_from_store(args: &ParsedArgs) -> Result<FitResult> {
         store.manifest().partition
     );
     announce_socket(&cfg);
+    let n = store.n();
     let mut solver = DGlmnetSolver::from_store(&store, &cfg)?;
-    drive_stepwise(args, &mut solver)
+    Ok((drive_stepwise(args, &mut solver)?, n))
 }
 
 fn train_baseline(kind: &str, args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
@@ -422,7 +442,7 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
                     .into(),
             ));
         }
-        let fit = train_dglmnet_from_store(args)?;
+        let (fit, n_examples) = train_dglmnet_from_store(args)?;
         println!(
             "store fit @ lambda = {:.5}: f = {:.6}, nnz = {}, {} iters, converged = {}, \
              {} comm bytes",
@@ -433,7 +453,7 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
             fit.converged,
             fit.comm_bytes
         );
-        finish_train_output(args, &fit)?;
+        finish_train_output(args, &fit, n_examples, &kind)?;
         return Ok(());
     }
     let ds = load_or_generate(args)?;
@@ -443,7 +463,7 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
         other => train_baseline(other, args, &split.train)?,
     };
     print_fit(&kind, fit.lambda, &fit, &split.test);
-    finish_train_output(args, &fit)?;
+    finish_train_output(args, &fit, split.train.n_examples(), &kind)?;
     Ok(())
 }
 
@@ -451,15 +471,23 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
 /// bit pattern (the CI socket job diffs this across transports) and the
 /// leader's peak RSS (the out-of-core job gates this against the full-load
 /// watermark).
-fn finish_train_output(args: &ParsedArgs, fit: &FitResult) -> Result<()> {
+fn finish_train_output(
+    args: &ParsedArgs,
+    fit: &FitResult,
+    n_examples: usize,
+    solver: &str,
+) -> Result<()> {
     println!("objective_bits={:016x}", fit.objective.to_bits());
     println!(
         "leader_peak_rss_bytes={}",
         dglmnet::util::peak_rss_bytes().unwrap_or(0)
     );
     if let Some(path) = args.get_str("model-out") {
-        fit.model.save(path)?;
-        println!("model saved to {path}");
+        // embed the artifact metadata (training-set size, solver) the
+        // serve/predict loaders surface and checksum over
+        let model = fit.model.clone().with_meta(n_examples, solver);
+        model.save(path)?;
+        println!("model saved to {path} (version {:016x})", model.checksum());
     }
     Ok(())
 }
@@ -684,6 +712,80 @@ fn cmd_evaluate(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
+/// Offline scorer: one [`dglmnet::serve::prediction_line`] per input row,
+/// byte-identical to what `/predict_batch` streams for the same examples —
+/// the serve_e2e CI job diffs the two outputs directly.
+fn cmd_predict(args: &ParsedArgs) -> Result<()> {
+    let model = SparseModel::load(
+        args.get_str("model")
+            .ok_or_else(|| DlrError::Cli("--model is required".into()))?,
+    )?;
+    let ds = libsvm::read_libsvm_file(
+        args.get_str("input")
+            .ok_or_else(|| DlrError::Cli("--input is required".into()))?,
+    )?;
+    let margins = model.predict_margins(&ds.x);
+    let mut out: Box<dyn Write> = match args.get_str("out") {
+        Some(p) => Box::new(std::io::BufWriter::new(std::fs::File::create(p)?)),
+        None => Box::new(std::io::BufWriter::new(std::io::stdout())),
+    };
+    for (i, &m) in margins.iter().enumerate() {
+        let proba = dglmnet::util::math::sigmoid(m as f64) as f32;
+        writeln!(out, "{}", dglmnet::serve::prediction_line(i, m, proba))?;
+    }
+    out.flush()?;
+    eprintln!(
+        "scored {} examples (model: p = {}, nnz = {}, lambda = {}, version {:016x})",
+        margins.len(),
+        model.n_features,
+        model.nnz(),
+        model.lambda,
+        model.checksum()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &ParsedArgs) -> Result<()> {
+    let model_path = args
+        .get_str("model")
+        .ok_or_else(|| DlrError::Cli("--model is required".into()))?;
+    let mut cfg = match args.get_str("config") {
+        Some(path) => dglmnet::config::ServeConfig::from_file(path)?,
+        None => dglmnet::config::ServeConfig::default(),
+    };
+    if let Some(l) = args.get_str("listen") {
+        cfg.listen = l.to_string();
+    }
+    if let Some(t) = args.get_usize("threads")? {
+        cfg.threads = t;
+    }
+    if let Some(b) = args.get_usize("max-batch")? {
+        cfg.max_batch = b;
+    }
+    if let Some(p) = args.get_f64("poll-interval-secs")? {
+        cfg.poll_interval_secs = p;
+    }
+    if args.get_flag("no-watch") {
+        cfg.watch = false;
+    }
+    cfg.validate()?;
+    let handle = dglmnet::serve::Server::start(model_path, &cfg)?;
+    let m = handle.slot.get();
+    // the machine-readable ready line clients wait for (stdout is
+    // line-buffered, so this flushes before the blocking wait)
+    println!(
+        "serve_ready addr={} model_version={} p={} nnz={} lambda={} watch={}",
+        handle.addr,
+        m.version,
+        m.model.n_features,
+        m.model.nnz(),
+        m.model.lambda,
+        cfg.watch
+    );
+    handle.wait();
+    Ok(())
+}
+
 fn run() -> Result<()> {
     let app = app();
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -701,6 +803,8 @@ fn run() -> Result<()> {
         "path" => cmd_path(&parsed),
         "online" => cmd_online(&parsed),
         "evaluate" => cmd_evaluate(&parsed),
+        "predict" => cmd_predict(&parsed),
+        "serve" => cmd_serve(&parsed),
         other => Err(DlrError::Cli(format!("unhandled command '{other}'"))),
     }
 }

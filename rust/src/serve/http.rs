@@ -1,0 +1,236 @@
+//! Minimal HTTP/1.1 framing for the scoring server — from scratch on
+//! `std::net`, like every other wire layer in this crate (the vendor set
+//! has no tokio/hyper). Covers exactly what `dglmnet serve` needs:
+//! request-line + header parsing, `Content-Length` bodies with a hard
+//! size cap, `Expect: 100-continue` (curl sends it for bodies > 1 KiB),
+//! keep-alive, fixed-length responses, and chunked streaming responses
+//! for `/predict_batch`.
+
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// One parsed request. Header names are lower-cased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 default is keep-alive unless the client opts out.
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Why a request could not be read; the server maps these to responses.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Connection closed cleanly before a request line: not an error,
+    /// just the end of a keep-alive session.
+    Closed,
+    /// Unparseable framing → 400.
+    Bad(String),
+    /// Declared body exceeds the cap → 413 (read nothing of the body,
+    /// the connection is then closed — its stream is no longer synced).
+    TooLarge { declared: usize, limit: usize },
+    Io(std::io::Error),
+}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> Self {
+        match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => ReadError::Closed,
+            _ => ReadError::Io(e),
+        }
+    }
+}
+
+const MAX_HEADER_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 64;
+
+fn read_crlf_line(reader: &mut BufReader<TcpStream>) -> Result<String, ReadError> {
+    let mut line = Vec::with_capacity(128);
+    loop {
+        let mut byte = [0u8; 1];
+        match reader.read_exact(&mut byte) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof && line.is_empty() => {
+                return Err(ReadError::Closed);
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if byte[0] == b'\n' {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return String::from_utf8(line)
+                .map_err(|_| ReadError::Bad("non-utf8 header line".into()));
+        }
+        line.push(byte[0]);
+        if line.len() > MAX_HEADER_LINE {
+            return Err(ReadError::Bad("header line too long".into()));
+        }
+    }
+}
+
+/// Read one request off a keep-alive connection. `max_body` caps the
+/// accepted `Content-Length`; `100-continue` expectations are answered
+/// before the body is read (otherwise curl stalls for a second — or
+/// forever — waiting for the interim response).
+pub fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> Result<Request, ReadError> {
+    let request_line = read_crlf_line(reader)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| ReadError::Bad("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| ReadError::Bad("request line has no path".into()))?
+        .to_string();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Bad(format!("unsupported protocol '{version}'")));
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_crlf_line(reader) {
+            Ok(l) => l,
+            Err(ReadError::Closed) => {
+                return Err(ReadError::Bad("connection closed mid-headers".into()))
+            }
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| ReadError::Bad(format!("malformed header '{line}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        if headers.len() > MAX_HEADERS {
+            return Err(ReadError::Bad("too many headers".into()));
+        }
+    }
+
+    let req = Request { method, path, headers, body: Vec::new() };
+    let content_length = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| ReadError::Bad(format!("bad content-length '{v}'")))?,
+    };
+    if content_length > max_body {
+        return Err(ReadError::TooLarge { declared: content_length, limit: max_body });
+    }
+    if req
+        .header("expect")
+        .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+    {
+        stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+        stream.flush()?;
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader
+            .read_exact(&mut body)
+            .map_err(|_| ReadError::Bad("connection closed mid-body".into()))?;
+    }
+    Ok(Request { body, ..req })
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a fixed-length JSON response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        status_reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Chunked-transfer response writer for the streamed batch endpoint:
+/// one `write_chunk` per result line, `finish` terminates the stream.
+pub struct ChunkedWriter<'a> {
+    stream: &'a mut TcpStream,
+}
+
+impl<'a> ChunkedWriter<'a> {
+    pub fn start(
+        stream: &'a mut TcpStream,
+        status: u16,
+        content_type: &str,
+        keep_alive: bool,
+        extra_headers: &[(&str, &str)],
+    ) -> std::io::Result<Self> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n",
+            status,
+            status_reason(status),
+            content_type,
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        for (k, v) in extra_headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        Ok(Self { stream })
+    }
+
+    pub fn write_chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.stream, "{:x}\r\n", data.len())?;
+        self.stream.write_all(data)?;
+        self.stream.write_all(b"\r\n")
+    }
+
+    pub fn finish(self) -> std::io::Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()
+    }
+}

@@ -1,0 +1,164 @@
+//! `dglmnet serve` — the model-serving subsystem.
+//!
+//! Turns a trained artifact (`train --model-out`) into an HTTP scoring
+//! service, closing the paper's train→deploy loop: the sparse L1 models
+//! d-GLMNET exists to produce are what answer live traffic.
+//!
+//! # Request lifecycle
+//!
+//! [`server::Server::start`] loads and validates the artifact (rejecting
+//! corrupt or dimension-inconsistent files up front), binds a
+//! `TcpListener`, and spawns `ServeConfig::threads` accept threads. Each
+//! connection is HTTP/1.1 with keep-alive: a thread parses one request
+//! ([`http::read_request`]), dispatches it, writes the response, and
+//! loops until the client closes or shutdown is signalled. Malformed
+//! requests (bad framing, bad JSON, wrong shapes, oversized bodies) get
+//! a 4xx with a JSON error body — never a panic and never a hang.
+//!
+//! Endpoints:
+//! - `POST /predict` — one sparse example `{"indices":[..],"values":[..]}`
+//!   → `{"margin":m,"model_version":v,"proba":p}`.
+//! - `POST /predict_batch` — `{"examples":[{..},..]}` (at most
+//!   `max_batch`, else 413) → a chunked ndjson stream, one
+//!   [`prediction_line`] per example in order.
+//! - `GET /healthz` — model shape + version; `GET /metrics` — counters.
+//!
+//! # Batching
+//!
+//! A batch takes **one** model snapshot ([`server::ModelSlot::get`]) and
+//! scores every example against it, streaming each result line as soon
+//! as it is computed — a hot-swap mid-batch never mixes model versions
+//! within one response. Scoring goes through the shared
+//! [`crate::data::sparse::dot_margin`] kernel, so served predictions are
+//! bit-identical to the training cluster's margins and to offline
+//! `dglmnet predict` output for the same examples.
+//!
+//! # Swap semantics
+//!
+//! The live model is an `Arc<ServedModel>` behind a `RwLock`
+//! ([`server::ModelSlot`]). Request threads clone the `Arc` under a
+//! brief read lock and then score lock-free: in-flight requests finish
+//! on the model they started with, new requests see the new model —
+//! zero downtime, no torn state. A watcher thread ([`swap::spawn_watcher`])
+//! polls the artifact's `(mtime, len)` fingerprint; on change it loads
+//! and fully validates the new file *before* swapping. A corrupt or
+//! half-written artifact is skipped with one logged warning (per
+//! offending fingerprint) and the old model keeps serving until a good
+//! artifact appears.
+
+pub mod http;
+pub mod server;
+pub mod swap;
+
+pub use server::{ModelSlot, ServeStats, Server, ServerHandle};
+
+use std::fmt::Write as _;
+
+use crate::data::sparse::dot_margin;
+use crate::error::Result;
+use crate::solver::model::SparseModel;
+
+/// A validated, score-ready model: the artifact plus its densified β and
+/// version string (the artifact checksum — two models answer identically
+/// iff their versions match).
+#[derive(Debug)]
+pub struct ServedModel {
+    pub model: SparseModel,
+    beta: Vec<f32>,
+    pub version: String,
+}
+
+impl ServedModel {
+    /// Load + validate an artifact (checksum, nnz, dimension checks all
+    /// happen in [`SparseModel::load`]).
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let model = SparseModel::load(path)?;
+        Ok(Self::from_model(model))
+    }
+
+    pub fn from_model(model: SparseModel) -> Self {
+        let beta = model.to_dense();
+        let version = format!("{:016x}", model.checksum());
+        Self { model, beta, version }
+    }
+
+    /// Score one canonical example (ascending feature ids) through the
+    /// shared train/serve margin kernel. Returns `(margin, proba)` with
+    /// exactly the offline `predict` rounding: f64-accumulated dot,
+    /// rounded to f32, sigmoid of that f32 margin.
+    pub fn score(&self, cols: &[u32], vals: &[f32]) -> (f32, f32) {
+        let margin = dot_margin(cols, vals, &self.beta) as f32;
+        let proba = crate::util::math::sigmoid(margin as f64) as f32;
+        (margin, proba)
+    }
+}
+
+/// Sort an example's `(feature, value)` pairs ascending and merge
+/// duplicate features by summing — the canonical form [`ServedModel::score`]
+/// expects (what a `CsrMatrix` row built from sorted libsvm input is).
+pub fn canonicalize(mut pairs: Vec<(u32, f32)>) -> (Vec<u32>, Vec<f32>) {
+    pairs.sort_by_key(|&(j, _)| j);
+    let mut cols = Vec::with_capacity(pairs.len());
+    let mut vals: Vec<f32> = Vec::with_capacity(pairs.len());
+    for (j, v) in pairs {
+        if cols.last() == Some(&j) {
+            *vals.last_mut().unwrap() += v;
+        } else {
+            cols.push(j);
+            vals.push(v);
+        }
+    }
+    (cols, vals)
+}
+
+/// The one ndjson result line both the batch endpoint and offline
+/// `dglmnet predict` emit — shared so e2e can diff the two byte-for-byte.
+/// f32 `Display` prints the shortest round-trip representation, so equal
+/// bits always produce equal text.
+pub fn prediction_line(id: usize, margin: f32, proba: f32) -> String {
+    let mut s = String::with_capacity(48);
+    write!(s, "{{\"id\":{id},\"margin\":{margin},\"proba\":{proba}}}").unwrap();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalize_sorts_and_merges_duplicates() {
+        let (cols, vals) = canonicalize(vec![(3, 1.0), (1, 2.0), (3, 0.5)]);
+        assert_eq!(cols, vec![1, 3]);
+        assert_eq!(vals, vec![2.0, 1.5]);
+        let (cols, vals) = canonicalize(vec![]);
+        assert!(cols.is_empty() && vals.is_empty());
+    }
+
+    #[test]
+    fn score_matches_offline_predict_rounding() {
+        let model = SparseModel::from_dense(&[0.5, 0.0, -1.25], 0.1);
+        let served = ServedModel::from_model(model.clone());
+        let mut x = crate::data::sparse::CsrMatrix::new(3);
+        x.push_row(&[(0, 2.0), (2, 1.0)]);
+        let offline_margin = model.predict_margins(&x)[0];
+        let (m, p) = served.score(&[0, 2], &[2.0, 1.0]);
+        assert_eq!(m.to_bits(), offline_margin.to_bits());
+        assert_eq!(
+            p.to_bits(),
+            (crate::util::math::sigmoid(offline_margin as f64) as f32).to_bits()
+        );
+        // out-of-model features score zero contribution, not a panic
+        let (m, _) = served.score(&[7], &[3.0]);
+        assert_eq!(m, 0.0);
+    }
+
+    #[test]
+    fn prediction_line_is_deterministic_compact_json() {
+        assert_eq!(prediction_line(3, 1.5, 0.25), r#"{"id":3,"margin":1.5,"proba":0.25}"#);
+        assert_eq!(prediction_line(0, -0.0, 0.5), r#"{"id":0,"margin":-0,"proba":0.5}"#);
+        // round-trips through the crate JSON parser
+        let v = crate::util::json::parse(&prediction_line(1, 2.0, 0.875)).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("margin").unwrap().as_f64(), Some(2.0));
+    }
+}

@@ -1,0 +1,450 @@
+//! The scoring server: listener, connection handling, endpoint dispatch,
+//! and the hot-swappable model slot. See the module doc in
+//! [`crate::serve`] for the request lifecycle and swap semantics.
+
+use std::io::BufRead;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::ServeConfig;
+use crate::error::Result;
+use crate::util::json::{self, Json};
+
+use super::http::{self, ChunkedWriter, ReadError, Request};
+use super::{canonicalize, prediction_line, ServedModel};
+
+/// Hard cap on request bodies (batches are capped by `max_batch` anyway;
+/// this bounds what a client can make the server buffer).
+const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// Idle-poll cadence on keep-alive connections: how often a parked
+/// connection checks the shutdown flag.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Once a request has started arriving, how long the server waits for
+/// the rest of it before giving up on the connection.
+const REQUEST_READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The live model: an `Arc` behind a `RwLock`. Readers clone the `Arc`
+/// under a brief read lock and score lock-free; the watcher replaces the
+/// whole `Arc` under the write lock. In-flight requests keep the model
+/// they started with — a swap is atomic, never torn.
+pub struct ModelSlot {
+    inner: RwLock<Arc<ServedModel>>,
+}
+
+impl ModelSlot {
+    pub fn new(model: ServedModel) -> Self {
+        Self { inner: RwLock::new(Arc::new(model)) }
+    }
+
+    pub fn get(&self) -> Arc<ServedModel> {
+        // a poisoned lock only means a panic elsewhere; the stored Arc is
+        // always a fully-constructed model, so serving must not stop
+        self.inner.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    pub fn swap(&self, model: ServedModel) {
+        *self.inner.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(model);
+    }
+}
+
+/// Monotonic serving counters, exposed at `GET /metrics`.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub predictions: AtomicU64,
+    pub swaps: AtomicU64,
+    pub swap_failures: AtomicU64,
+    pub client_errors: AtomicU64,
+    pub server_errors: AtomicU64,
+}
+
+impl ServeStats {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"client_errors\":{},\"predictions\":{},\"requests\":{},\
+             \"server_errors\":{},\"swap_failures\":{},\"swaps\":{}}}",
+            self.client_errors.load(Ordering::Relaxed),
+            self.predictions.load(Ordering::Relaxed),
+            self.requests.load(Ordering::Relaxed),
+            self.server_errors.load(Ordering::Relaxed),
+            self.swap_failures.load(Ordering::Relaxed),
+            self.swaps.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Builder entry point for the serving subsystem.
+pub struct Server;
+
+impl Server {
+    /// Load + validate the artifact, bind, and start serving. Returns
+    /// once the listener is live (the caller prints the ready line).
+    pub fn start(model_path: impl AsRef<Path>, cfg: &ServeConfig) -> Result<ServerHandle> {
+        cfg.validate()?;
+        let model_path: PathBuf = model_path.as_ref().to_path_buf();
+        let model = ServedModel::load(&model_path)?;
+        let listener = TcpListener::bind(&cfg.listen)?;
+        let addr = listener.local_addr()?;
+        let slot = Arc::new(ModelSlot::new(model));
+        let stats = Arc::new(ServeStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let listener = Arc::new(listener);
+        let mut threads = Vec::with_capacity(cfg.threads);
+        for t in 0..cfg.threads {
+            let listener = Arc::clone(&listener);
+            let slot = Arc::clone(&slot);
+            let stats = Arc::clone(&stats);
+            let shutdown = Arc::clone(&shutdown);
+            let max_batch = cfg.max_batch;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-accept-{t}"))
+                    .spawn(move || {
+                        accept_loop(&listener, slot, stats, shutdown, max_batch)
+                    })
+                    .expect("spawn accept thread"),
+            );
+        }
+        let watcher = if cfg.watch {
+            Some(super::swap::spawn_watcher(
+                model_path,
+                Arc::clone(&slot),
+                Arc::clone(&stats),
+                Duration::from_secs_f64(cfg.poll_interval_secs),
+                Arc::clone(&shutdown),
+            ))
+        } else {
+            None
+        };
+        Ok(ServerHandle { addr, slot, stats, shutdown, threads, watcher })
+    }
+}
+
+/// A running server. Dropping the handle does NOT stop it — call
+/// [`ServerHandle::stop`] (or let the process exit).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    pub slot: Arc<ModelSlot>,
+    pub stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    watcher: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown, unblock the accept threads, and join everything.
+    /// Parked keep-alive connections notice within one idle poll.
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for _ in 0..self.threads.len() {
+            // each dial wakes one accept() call; the woken thread sees
+            // the flag and exits without handling the connection
+            let _ = TcpStream::connect(self.addr);
+        }
+        for t in self.threads {
+            let _ = t.join();
+        }
+        if let Some(w) = self.watcher {
+            let _ = w.join();
+        }
+    }
+
+    /// Block until the process is killed (the CLI path).
+    pub fn wait(mut self) {
+        if let Some(w) = self.watcher.take() {
+            let _ = w.join();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    slot: Arc<ModelSlot>,
+    stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+    max_batch: usize,
+) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(s) => s,
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // one detached handler per connection: a parked keep-alive
+        // session must not block this thread from accepting new clients
+        let slot = Arc::clone(&slot);
+        let stats = Arc::clone(&stats);
+        let shutdown = Arc::clone(&shutdown);
+        let _ = std::thread::Builder::new()
+            .name("serve-conn".into())
+            .spawn(move || handle_connection(stream, &slot, &stats, &shutdown, max_batch));
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    slot: &ModelSlot,
+    stats: &ServeStats,
+    shutdown: &AtomicBool,
+    max_batch: usize,
+) {
+    stream.set_nodelay(true).ok();
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = std::io::BufReader::new(reader_stream);
+    loop {
+        // park until the next request's first byte (or shutdown/EOF)
+        if stream.set_read_timeout(Some(IDLE_POLL)).is_err() {
+            return;
+        }
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            match reader.fill_buf() {
+                Ok([]) => return, // clean EOF between requests
+                Ok(_) => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => return,
+            }
+        }
+        // a request is arriving: give it a generous (but finite) deadline
+        if stream.set_read_timeout(Some(REQUEST_READ_TIMEOUT)).is_err() {
+            return;
+        }
+        let req = match http::read_request(&mut reader, &mut stream, MAX_BODY_BYTES) {
+            Ok(req) => req,
+            Err(ReadError::Closed) => return,
+            Err(ReadError::Bad(msg)) => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.client_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_response(&mut stream, 400, &error_body(&msg), false);
+                return; // framing is broken: the stream is not re-syncable
+            }
+            Err(ReadError::TooLarge { declared, limit }) => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.client_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("request body of {declared} bytes exceeds the {limit} byte cap");
+                let _ = http::write_response(&mut stream, 413, &error_body(&msg), false);
+                return; // the unread body would desync the stream
+            }
+            Err(ReadError::Io(_)) => return,
+        };
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        let keep_alive = req.keep_alive();
+        if dispatch(&mut stream, &req, slot, stats, max_batch, keep_alive).is_err() {
+            return; // client went away mid-response
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    // Json::Str handles escaping
+    format!("{{\"error\":{}}}", Json::Str(msg.to_string()))
+}
+
+fn dispatch(
+    stream: &mut TcpStream,
+    req: &Request,
+    slot: &ModelSlot,
+    stats: &ServeStats,
+    max_batch: usize,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let m = slot.get();
+            let body = format!(
+                "{{\"lambda\":{},\"model_version\":\"{}\",\"n\":{},\"nnz\":{},\
+                 \"p\":{},\"solver\":{},\"status\":\"ok\"}}",
+                m.model.lambda,
+                m.version,
+                m.model.n_examples,
+                m.model.nnz(),
+                m.model.n_features,
+                Json::Str(m.model.solver.clone()),
+            );
+            http::write_response(stream, 200, &body, keep_alive)
+        }
+        ("GET", "/metrics") => http::write_response(stream, 200, &stats.to_json(), keep_alive),
+        ("POST", "/predict") => handle_predict(stream, req, slot, stats, keep_alive),
+        ("POST", "/predict_batch") => {
+            handle_predict_batch(stream, req, slot, stats, max_batch, keep_alive)
+        }
+        (_, "/healthz" | "/metrics" | "/predict" | "/predict_batch") => {
+            stats.client_errors.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("method {} not allowed on {}", req.method, req.path);
+            http::write_response(stream, 405, &error_body(&msg), keep_alive)
+        }
+        (_, path) => {
+            stats.client_errors.fetch_add(1, Ordering::Relaxed);
+            let msg = format!(
+                "no such endpoint '{path}' (have /predict, /predict_batch, /healthz, /metrics)"
+            );
+            http::write_response(stream, 404, &error_body(&msg), keep_alive)
+        }
+    }
+}
+
+/// Pull one `{"indices":[..],"values":[..]}` example out of a JSON value
+/// into canonical (sorted, deduplicated) column/value arrays.
+fn parse_example(v: &Json) -> std::result::Result<(Vec<u32>, Vec<f32>), String> {
+    let idx = v
+        .get("indices")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "example needs an 'indices' array".to_string())?;
+    let vals = v
+        .get("values")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "example needs a 'values' array".to_string())?;
+    if idx.len() != vals.len() {
+        return Err(format!(
+            "indices/values length mismatch ({} vs {})",
+            idx.len(),
+            vals.len()
+        ));
+    }
+    let mut pairs = Vec::with_capacity(idx.len());
+    for (i, (ji, vi)) in idx.iter().zip(vals).enumerate() {
+        let j = ji
+            .as_f64()
+            .ok_or_else(|| format!("indices[{i}] is not a number"))?;
+        if j < 0.0 || j.fract() != 0.0 || j > u32::MAX as f64 {
+            return Err(format!("indices[{i}] = {j} is not a valid feature id"));
+        }
+        let v = vi
+            .as_f64()
+            .ok_or_else(|| format!("values[{i}] is not a number"))?;
+        if !v.is_finite() {
+            return Err(format!("values[{i}] is not finite"));
+        }
+        pairs.push((j as u32, v as f32));
+    }
+    Ok(canonicalize(pairs))
+}
+
+fn parse_body(req: &Request) -> std::result::Result<Json, String> {
+    let text = std::str::from_utf8(&req.body).map_err(|_| "body is not utf-8".to_string())?;
+    json::parse(text).map_err(|e| format!("bad JSON: {e}"))
+}
+
+fn handle_predict(
+    stream: &mut TcpStream,
+    req: &Request,
+    slot: &ModelSlot,
+    stats: &ServeStats,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let (cols, vals) = match parse_body(req).and_then(|v| parse_example(&v)) {
+        Ok(x) => x,
+        Err(msg) => {
+            stats.client_errors.fetch_add(1, Ordering::Relaxed);
+            return http::write_response(stream, 400, &error_body(&msg), keep_alive);
+        }
+    };
+    let model = slot.get();
+    let (margin, proba) = model.score(&cols, &vals);
+    stats.predictions.fetch_add(1, Ordering::Relaxed);
+    let body = format!(
+        "{{\"margin\":{margin},\"model_version\":\"{}\",\"proba\":{proba}}}",
+        model.version
+    );
+    http::write_response(stream, 200, &body, keep_alive)
+}
+
+fn handle_predict_batch(
+    stream: &mut TcpStream,
+    req: &Request,
+    slot: &ModelSlot,
+    stats: &ServeStats,
+    max_batch: usize,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let examples = match parse_body(req) {
+        Ok(v) => match v.get("examples").and_then(Json::as_arr) {
+            Some(arr) => {
+                if arr.len() > max_batch {
+                    stats.client_errors.fetch_add(1, Ordering::Relaxed);
+                    let msg = format!(
+                        "batch of {} examples exceeds max_batch = {max_batch}; split the request",
+                        arr.len()
+                    );
+                    return http::write_response(stream, 413, &error_body(&msg), keep_alive);
+                }
+                arr.to_vec()
+            }
+            None => {
+                stats.client_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = "batch request needs an 'examples' array";
+                return http::write_response(stream, 400, &error_body(msg), keep_alive);
+            }
+        },
+        Err(msg) => {
+            stats.client_errors.fetch_add(1, Ordering::Relaxed);
+            return http::write_response(stream, 400, &error_body(&msg), keep_alive);
+        }
+    };
+    // validate everything BEFORE streaming: once the 200 header is out,
+    // the status can no longer change
+    let mut parsed = Vec::with_capacity(examples.len());
+    for (i, ex) in examples.iter().enumerate() {
+        match parse_example(ex) {
+            Ok(x) => parsed.push(x),
+            Err(msg) => {
+                stats.client_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("examples[{i}]: {msg}");
+                return http::write_response(stream, 400, &error_body(&msg), keep_alive);
+            }
+        }
+    }
+    // one snapshot for the whole batch: a mid-batch hot-swap never mixes
+    // model versions within one response
+    let model = slot.get();
+    let mut writer = ChunkedWriter::start(
+        stream,
+        200,
+        "application/x-ndjson",
+        keep_alive,
+        &[("X-Model-Version", model.version.as_str())],
+    )?;
+    let mut line = String::new();
+    for (i, (cols, vals)) in parsed.iter().enumerate() {
+        let (margin, proba) = model.score(cols, vals);
+        line.clear();
+        line.push_str(&prediction_line(i, margin, proba));
+        line.push('\n');
+        writer.write_chunk(line.as_bytes())?;
+    }
+    stats
+        .predictions
+        .fetch_add(parsed.len() as u64, Ordering::Relaxed);
+    writer.finish()
+}

@@ -1,0 +1,87 @@
+//! The artifact watcher: polls the model file's `(mtime, len)`
+//! fingerprint and hot-swaps the [`super::server::ModelSlot`] when a new
+//! *valid* artifact appears. A corrupt or half-written file is rejected
+//! by the loader's checksum/shape validation, logged once (per offending
+//! fingerprint), and the old model keeps serving; the next write changes
+//! the fingerprint and triggers a fresh attempt.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+use super::server::{ModelSlot, ServeStats};
+use super::ServedModel;
+
+type Fingerprint = (SystemTime, u64);
+
+fn fingerprint(path: &Path) -> Option<Fingerprint> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
+/// How often the sleep loop checks the shutdown flag, independent of the
+/// (possibly long) poll interval.
+const SHUTDOWN_TICK: Duration = Duration::from_millis(100);
+
+pub fn spawn_watcher(
+    path: PathBuf,
+    slot: Arc<ModelSlot>,
+    stats: Arc<ServeStats>,
+    poll: Duration,
+    shutdown: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("serve-watch".into())
+        .spawn(move || {
+            // what the watcher last examined (loaded OR rejected); starting
+            // at None costs one redundant load on the first poll but closes
+            // the race where the artifact is replaced between the server's
+            // initial load and this thread starting
+            let mut last_seen: Option<Fingerprint> = None;
+            loop {
+                let mut waited = Duration::ZERO;
+                while waited < poll {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let step = SHUTDOWN_TICK.min(poll - waited);
+                    std::thread::sleep(step);
+                    waited += step;
+                }
+                // a briefly-missing file (mid-replace) is not a change:
+                // keep serving and look again next poll
+                let Some(fp) = fingerprint(&path) else { continue };
+                if Some(fp) == last_seen {
+                    continue;
+                }
+                match ServedModel::load(&path) {
+                    Ok(m) => {
+                        last_seen = Some(fp);
+                        if m.version != slot.get().version {
+                            let version = m.version.clone();
+                            slot.swap(m);
+                            stats.swaps.fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "[serve] hot-swapped model from {} (version {version})",
+                                path.display()
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        // never swap in a bad artifact: warn once for this
+                        // fingerprint and keep answering from the old model
+                        last_seen = Some(fp);
+                        stats.swap_failures.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[serve] warning: rejected new artifact at {} \
+                             (keeping the old model): {e}",
+                            path.display()
+                        );
+                    }
+                }
+            }
+        })
+        .expect("spawn watcher thread")
+}

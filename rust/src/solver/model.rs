@@ -1,10 +1,33 @@
 //! Fitted sparse linear model: prediction, persistence, inspection.
+//!
+//! The on-disk artifact (v2) is the contract between `train`, the offline
+//! `dglmnet predict` scorer, and the `dglmnet serve` hot-swap loop: a
+//! header embedding the model shape (`p`), the training-set size (`n`),
+//! λ, the solver that produced it, the entry count, and an FNV-1a
+//! checksum over the canonical payload bytes (same scheme as
+//! `data/store.rs`), followed by one `feature weight` line per non-zero.
+//! [`SparseModel::load`] verifies all of it — a truncated, bit-flipped or
+//! dimension-inconsistent artifact is rejected with an actionable error
+//! instead of scoring garbage. v1 headers (no metadata, no checksum) are
+//! still accepted for legacy files.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use crate::data::sparse::CsrMatrix;
 use crate::error::{DlrError, Result};
+
+// FNV-1a, the same constants the shard store and wire protocol use.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
 
 /// A sparse coefficient vector β (only non-zeros stored).
 #[derive(Debug, Clone, PartialEq)]
@@ -14,6 +37,10 @@ pub struct SparseModel {
     pub entries: Vec<(u32, f32)>,
     /// λ the model was fitted at (metadata).
     pub lambda: f64,
+    /// Training-set example count (artifact metadata; 0 = unknown/legacy).
+    pub n_examples: usize,
+    /// Solver that produced the fit (artifact metadata; "" = unknown).
+    pub solver: String,
 }
 
 impl SparseModel {
@@ -27,7 +54,21 @@ impl SparseModel {
                 .map(|(j, &b)| (j as u32, b))
                 .collect(),
             lambda,
+            n_examples: 0,
+            solver: String::new(),
         }
+    }
+
+    /// Attach the artifact metadata `train` embeds at `--model-out` time.
+    /// Whitespace in the solver name would corrupt the header token
+    /// stream, so it is replaced with `-`.
+    pub fn with_meta(mut self, n_examples: usize, solver: &str) -> Self {
+        self.n_examples = n_examples;
+        self.solver = solver
+            .chars()
+            .map(|c| if c.is_whitespace() { '-' } else { c })
+            .collect();
+        self
     }
 
     pub fn to_dense(&self) -> Vec<f32> {
@@ -42,7 +83,26 @@ impl SparseModel {
         self.entries.len()
     }
 
-    /// Decision margins βᵀx over a by-example matrix.
+    /// FNV-1a over the canonical payload bytes: `p`, `n`, λ bits, the
+    /// solver name, then every `(feature, weight-bits)` pair in order.
+    /// This is both the artifact integrity check and the serve-side model
+    /// version (two models answer identically iff their checksums match).
+    pub fn checksum(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, &(self.n_features as u64).to_le_bytes());
+        h = fnv1a(h, &(self.n_examples as u64).to_le_bytes());
+        h = fnv1a(h, &self.lambda.to_bits().to_le_bytes());
+        h = fnv1a(h, self.solver.as_bytes());
+        for &(j, w) in &self.entries {
+            h = fnv1a(h, &j.to_le_bytes());
+            h = fnv1a(h, &w.to_bits().to_le_bytes());
+        }
+        h
+    }
+
+    /// Decision margins βᵀx over a by-example matrix, through the shared
+    /// `data::sparse::dot_margin` kernel — bit-identical to the training
+    /// cluster's margin rebuild for the same β.
     pub fn predict_margins(&self, x: &CsrMatrix) -> Vec<f32> {
         let beta = self.to_dense();
         let mut padded = beta;
@@ -60,10 +120,45 @@ impl SparseModel {
             .collect()
     }
 
-    /// Text persistence: header line + `feature weight` lines.
+    /// Structural validation shared by `load` and the serve reloader:
+    /// entries ascending/unique and inside `[0, p)`.
+    fn validate(&self) -> Result<()> {
+        let mut prev: Option<u32> = None;
+        for &(j, _) in &self.entries {
+            if j as usize >= self.n_features {
+                return Err(DlrError::Artifact(format!(
+                    "model entry references feature {j} but the header says p = {}; \
+                     the artifact is dimension-inconsistent (corrupt or mis-assembled) \
+                     — re-export it from a fit",
+                    self.n_features
+                )));
+            }
+            if prev.is_some_and(|p| p >= j) {
+                return Err(DlrError::Artifact(format!(
+                    "model entries are not strictly ascending at feature {j}; \
+                     the artifact is corrupt — re-export it from a fit"
+                )));
+            }
+            prev = Some(j);
+        }
+        Ok(())
+    }
+
+    /// Text persistence (artifact v2): checksummed header + `feature
+    /// weight` lines. Byte-deterministic for a given model, so two fits
+    /// that agree bit-for-bit produce `cmp`-equal artifacts.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "dglmnet-model v1 p={} lambda={}", self.n_features, self.lambda)?;
+        writeln!(
+            f,
+            "dglmnet-model v2 p={} n={} lambda={} solver={} nnz={} checksum={:016x}",
+            self.n_features,
+            self.n_examples,
+            self.lambda,
+            self.solver,
+            self.entries.len(),
+            self.checksum()
+        )?;
         for &(j, w) in &self.entries {
             writeln!(f, "{j} {w}")?;
         }
@@ -77,14 +172,41 @@ impl SparseModel {
         let header = lines
             .next()
             .ok_or_else(|| DlrError::parse("model", "empty file"))??;
+        if !header.starts_with("dglmnet-model ") {
+            return Err(DlrError::Artifact(
+                "not a dglmnet model artifact (missing 'dglmnet-model' header) — \
+                 was the wrong file passed as --model?"
+                    .into(),
+            ));
+        }
         let mut p = None;
         let mut lambda = 0f64;
+        let mut n_examples = 0usize;
+        let mut solver = String::new();
+        let mut nnz: Option<usize> = None;
+        let mut checksum: Option<u64> = None;
         for tok in header.split_whitespace() {
             if let Some(v) = tok.strip_prefix("p=") {
                 p = v.parse::<usize>().ok();
             }
+            if let Some(v) = tok.strip_prefix("n=") {
+                n_examples = v.parse::<usize>().unwrap_or(0);
+            }
             if let Some(v) = tok.strip_prefix("lambda=") {
                 lambda = v.parse::<f64>().unwrap_or(0.0);
+            }
+            if let Some(v) = tok.strip_prefix("solver=") {
+                solver = v.to_string();
+            }
+            if let Some(v) = tok.strip_prefix("nnz=") {
+                nnz = v.parse::<usize>().ok();
+            }
+            if let Some(v) = tok.strip_prefix("checksum=") {
+                checksum = Some(u64::from_str_radix(v, 16).map_err(|_| {
+                    DlrError::Artifact(format!(
+                        "unreadable model checksum '{v}' — the artifact header is corrupt"
+                    ))
+                })?);
             }
         }
         let n_features =
@@ -106,7 +228,29 @@ impl SparseModel {
                     .map_err(|_| DlrError::parse("model", "bad weight"))?,
             ));
         }
-        Ok(Self { n_features, entries, lambda })
+        let model = Self { n_features, entries, lambda, n_examples, solver };
+        if let Some(want) = nnz {
+            if model.entries.len() != want {
+                return Err(DlrError::Artifact(format!(
+                    "model artifact has {} entries but the header promises nnz = {want}; \
+                     the file is truncated or was partially rewritten — retrain or \
+                     re-export it",
+                    model.entries.len()
+                )));
+            }
+        }
+        model.validate()?;
+        if let Some(want) = checksum {
+            let got = model.checksum();
+            if got != want {
+                return Err(DlrError::Artifact(format!(
+                    "model artifact checksum mismatch (header {want:016x}, computed \
+                     {got:016x}); the file is corrupt or was partially rewritten — \
+                     retrain or re-export it"
+                )));
+            }
+        }
+        Ok(model)
     }
 }
 
@@ -135,12 +279,16 @@ mod tests {
     }
 
     #[test]
-    fn save_load_roundtrip() {
-        let m = SparseModel::from_dense(&[0.0, 0.25, -3.5], 0.125);
+    fn save_load_roundtrip_with_metadata() {
+        let m = SparseModel::from_dense(&[0.0, 0.25, -3.5], 0.125)
+            .with_meta(4_000, "dglmnet");
         let path = std::env::temp_dir().join(format!("dglmnet_model_{}.txt", std::process::id()));
         m.save(&path).unwrap();
         let m2 = SparseModel::load(&path).unwrap();
         assert_eq!(m, m2);
+        assert_eq!(m2.n_examples, 4_000);
+        assert_eq!(m2.solver, "dglmnet");
+        assert_eq!(m2.checksum(), m.checksum());
         std::fs::remove_file(&path).ok();
     }
 
@@ -150,5 +298,77 @@ mod tests {
         x.push_row(&[(4, 1.0)]);
         let m = SparseModel::from_dense(&[1.0, 2.0], 0.0);
         assert_eq!(m.predict_margins(&x), vec![0.0]);
+    }
+
+    #[test]
+    fn corrupted_artifacts_are_rejected_with_actionable_errors() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dglmnet_model_corrupt_{}.txt", std::process::id()));
+        let m = SparseModel::from_dense(&[1.0, 0.0, -0.5, 2.25], 0.5)
+            .with_meta(100, "dglmnet");
+        m.save(&path).unwrap();
+
+        // bit-flip a weight: checksum mismatch
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("2.25", "2.26")).unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // drop an entry line: nnz mismatch (truncation)
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.pop();
+        std::fs::write(&path, lines.join("\n")).unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // entry beyond p: dimension mismatch beats garbage scoring
+        let bad = text.replacen("p=4", "p=2", 1);
+        std::fs::write(&path, bad).unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("dimension-inconsistent"), "{err}");
+
+        // not a model at all
+        std::fs::write(&path, "BENCH results\n1 2\n").unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a dglmnet model artifact"), "{err}");
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v1_headers_still_load() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dglmnet_model_v1_{}.txt", std::process::id()));
+        std::fs::write(&path, "dglmnet-model v1 p=3 lambda=0.5\n1 1.5\n2 -2\n").unwrap();
+        let m = SparseModel::load(&path).unwrap();
+        assert_eq!(m.n_features, 3);
+        assert_eq!(m.lambda, 0.5);
+        assert_eq!(m.entries, vec![(1, 1.5), (2, -2.0)]);
+        assert_eq!(m.n_examples, 0);
+        assert!(m.solver.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checksum_tracks_every_metadata_field() {
+        let base = SparseModel::from_dense(&[1.0, -1.0], 0.5).with_meta(10, "dglmnet");
+        let mut other = base.clone();
+        other.lambda = 0.25;
+        assert_ne!(base.checksum(), other.checksum());
+        let mut other = base.clone();
+        other.n_examples = 11;
+        assert_ne!(base.checksum(), other.checksum());
+        let mut other = base.clone();
+        other.solver = "shotgun".into();
+        assert_ne!(base.checksum(), other.checksum());
+        let mut other = base.clone();
+        other.entries[0].1 = 1.0000001;
+        assert_ne!(base.checksum(), other.checksum());
+    }
+
+    #[test]
+    fn with_meta_sanitizes_whitespace_in_solver_names() {
+        let m = SparseModel::from_dense(&[1.0], 0.0).with_meta(1, "my solver");
+        assert_eq!(m.solver, "my-solver");
     }
 }

@@ -1,0 +1,368 @@
+//! Serving-subsystem integration tests: train/serve margin parity
+//! (bit-for-bit), hot-swap atomicity under concurrent traffic, corrupt
+//! artifact rejection, and malformed-request handling (4xx, never a
+//! panic or hang).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dglmnet::config::{EngineKind, ServeConfig, TrainConfig};
+use dglmnet::data::sparse::CsrMatrix;
+use dglmnet::data::synth;
+use dglmnet::serve::{prediction_line, ServedModel, Server, ServerHandle};
+use dglmnet::solver::{lambda_max, DGlmnetSolver, SparseModel};
+use dglmnet::util::json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dglmnet_serve_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn start(artifact: &Path, watch: bool) -> ServerHandle {
+    let cfg = ServeConfig {
+        listen: "127.0.0.1:0".into(),
+        threads: 2,
+        max_batch: 64,
+        watch,
+        poll_interval_secs: 0.05,
+    };
+    Server::start(artifact, &cfg).expect("server starts")
+}
+
+/// Minimal test client: keep-alive POST/GET with a read deadline, so a
+/// hanging server fails the test instead of wedging it.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send_raw(&mut self, raw: &str) {
+        self.stream.write_all(raw.as_bytes()).unwrap();
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> (u16, String) {
+        let req = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.send_raw(&req);
+        self.read_response()
+    }
+
+    fn get(&mut self, path: &str) -> (u16, String) {
+        self.send_raw(&format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"));
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> (u16, String) {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line {line:?}"));
+        let mut content_length = 0usize;
+        let mut chunked = false;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).unwrap();
+            let h = h.trim().to_ascii_lowercase();
+            if h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap();
+            }
+            if h.starts_with("transfer-encoding:") && h.contains("chunked") {
+                chunked = true;
+            }
+        }
+        let mut body = Vec::new();
+        if chunked {
+            loop {
+                let mut sz = String::new();
+                self.reader.read_line(&mut sz).unwrap();
+                let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+                let mut buf = vec![0u8; n + 2];
+                self.reader.read_exact(&mut buf).unwrap();
+                if n == 0 {
+                    break;
+                }
+                body.extend_from_slice(&buf[..n]);
+            }
+        } else {
+            body.resize(content_length, 0);
+            self.reader.read_exact(&mut body).unwrap();
+        }
+        (status, String::from_utf8(body).unwrap())
+    }
+}
+
+/// The satellite pin: `Model::predict` on the training set reproduces the
+/// final fit's freshly-rebuilt margins bit-for-bit. M = 1 so the cluster
+/// rebuild has a single machine-order-free summation per example; the
+/// shared kernel makes the row-wise (serve) and column-wise (train) paths
+/// agree exactly.
+#[test]
+fn predict_reproduces_final_fit_margins_bit_for_bit() {
+    let ds = synth::dna_like(600, 120, 8, 5);
+    let cfg = TrainConfig::builder()
+        .machines(1)
+        .engine(EngineKind::Native)
+        .lambda(lambda_max(&ds) / 8.0)
+        .max_iter(20)
+        .build();
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let fit = solver.fit(None).unwrap();
+    assert!(fit.nnz() > 0, "trivial all-zero fit would make this vacuous");
+    // rebuild the cluster's margins from the final β (a fresh recompute,
+    // not the incrementally-updated fit state)
+    solver.set_beta(&fit.model.to_dense()).unwrap();
+    let served = fit.model.predict_margins(&ds.x);
+    assert_eq!(served.len(), solver.margins.len());
+    for i in 0..served.len() {
+        assert_eq!(
+            served[i].to_bits(),
+            solver.margins[i].to_bits(),
+            "margin {i} differs between train rebuild and model predict"
+        );
+    }
+}
+
+#[test]
+fn serve_scores_match_offline_and_malformed_requests_get_4xx() {
+    let dir = tmp_dir("basic");
+    let artifact = dir.join("model.artifact");
+    let model = SparseModel::from_dense(&[0.5, 0.0, -1.25, 2.0, 0.75], 0.25)
+        .with_meta(10, "dglmnet");
+    model.save(&artifact).unwrap();
+    let handle = start(&artifact, false);
+    let mut c = Client::connect(handle.addr);
+
+    // health reflects the artifact metadata
+    let (status, body) = c.get("/healthz");
+    assert_eq!(status, 200);
+    let h = json::parse(&body).unwrap();
+    assert_eq!(h.get("p").unwrap().as_usize(), Some(5));
+    assert_eq!(h.get("nnz").unwrap().as_usize(), Some(4));
+    assert_eq!(h.get("solver").unwrap().as_str(), Some("dglmnet"));
+    let version = h.get("model_version").unwrap().as_str().unwrap().to_string();
+    assert_eq!(version, format!("{:016x}", model.checksum()));
+
+    // single predict matches ServedModel::score exactly
+    let (status, body) = c.post("/predict", r#"{"indices":[0,2,4],"values":[2,1,1]}"#);
+    assert_eq!(status, 200);
+    // f32 values are serialized with the shortest round-trip repr, so
+    // parse → f32 recovers the exact bits
+    let f32_field = |v: &json::Json, key: &str| -> f32 {
+        v.get(key).unwrap().as_f64().unwrap() as f32
+    };
+    let served = ServedModel::from_model(model.clone());
+    let (margin, proba) = served.score(&[0, 2, 4], &[2.0, 1.0, 1.0]);
+    let v = json::parse(&body).unwrap();
+    assert_eq!(f32_field(&v, "margin").to_bits(), margin.to_bits());
+    assert_eq!(f32_field(&v, "proba").to_bits(), proba.to_bits());
+    assert_eq!(v.get("model_version").unwrap().as_str(), Some(version.as_str()));
+
+    // duplicate + unsorted indices are canonicalized, out-of-range ignored
+    let (status, body2) =
+        c.post("/predict", r#"{"indices":[4,0,0,99],"values":[1,1,1,3]}"#);
+    assert_eq!(status, 200);
+    let (m2, _) = served.score(&[0, 4], &[2.0, 1.0]);
+    let v2 = json::parse(&body2).unwrap();
+    assert_eq!(f32_field(&v2, "margin").to_bits(), m2.to_bits());
+
+    // batch stream: lines byte-identical to the offline prediction_line
+    let (status, body) = c.post(
+        "/predict_batch",
+        r#"{"examples":[{"indices":[0],"values":[1]},{"indices":[],"values":[]},{"indices":[3],"values":[2]}]}"#,
+    );
+    assert_eq!(status, 200);
+    let mut x = CsrMatrix::new(5);
+    x.push_row(&[(0, 1.0)]);
+    x.push_row(&[]);
+    x.push_row(&[(3, 2.0)]);
+    let margins = model.predict_margins(&x);
+    let expected: Vec<String> = margins
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            prediction_line(i, m, dglmnet::util::math::sigmoid(m as f64) as f32)
+        })
+        .collect();
+    let got: Vec<&str> = body.lines().collect();
+    assert_eq!(got, expected.iter().map(String::as_str).collect::<Vec<_>>());
+
+    // malformed requests: 4xx with a JSON error, the connection answers —
+    // never a panic, never a hang (the client read deadline proves it)
+    for (body, want) in [
+        ("this is not json", 400u16),
+        (r#"{"indices":[0],"values":[1,2]}"#, 400),
+        (r#"{"indices":"nope","values":[]}"#, 400),
+        (r#"{"values":[1]}"#, 400),
+        (r#"{"indices":[-1],"values":[1]}"#, 400),
+    ] {
+        let mut c = Client::connect(handle.addr);
+        let (status, err) = c.post("/predict", body);
+        assert_eq!(status, want, "body {body:?}");
+        assert!(json::parse(&err).unwrap().get("error").is_some());
+    }
+    // batch over max_batch → 413
+    let examples: Vec<String> =
+        (0..65).map(|_| r#"{"indices":[0],"values":[1]}"#.to_string()).collect();
+    let (status, _) =
+        c.post("/predict_batch", &format!("{{\"examples\":[{}]}}", examples.join(",")));
+    assert_eq!(status, 413);
+    // unknown path / wrong method
+    let (status, _) = c.get("/nope");
+    assert_eq!(status, 404);
+    let (status, _) = c.get("/predict");
+    assert_eq!(status, 405);
+    // broken framing gets a 400 before the connection closes
+    let mut raw = Client::connect(handle.addr);
+    raw.send_raw("GARBAGE\r\n\r\n");
+    let (status, _) = raw.read_response();
+    assert_eq!(status, 400);
+
+    let (_, metrics) = c.get("/metrics");
+    let m = json::parse(&metrics).unwrap();
+    assert!(m.get("client_errors").unwrap().as_usize().unwrap() >= 7);
+    assert_eq!(m.get("swaps").unwrap().as_usize(), Some(0));
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hot_swap_is_atomic_and_corrupt_artifacts_are_skipped() {
+    let dir = tmp_dir("swap");
+    let artifact = dir.join("model.artifact");
+    let model_a = SparseModel::from_dense(&[1.0, -2.0, 0.5], 0.5).with_meta(10, "a");
+    let model_b = SparseModel::from_dense(&[-0.25, 3.0, 1.5], 0.25).with_meta(10, "b");
+    model_a.save(&artifact).unwrap();
+    let served_a = ServedModel::from_model(model_a.clone());
+    let served_b = ServedModel::from_model(model_b.clone());
+    let (margin_a, _) = served_a.score(&[0, 1], &[1.0, 1.0]);
+    let (margin_b, _) = served_b.score(&[0, 1], &[1.0, 1.0]);
+    assert_ne!(margin_a.to_bits(), margin_b.to_bits());
+
+    let handle = start(&artifact, true);
+    let addr = handle.addr;
+    let stop_flag = Arc::new(AtomicBool::new(false));
+
+    // hammer /predict from two clients while the artifact is rewritten;
+    // every response must be 200 and every margin must be EXACTLY the old
+    // or the new model's answer, consistent with the reported version
+    let version_a = served_a.version.clone();
+    let version_b = served_b.version.clone();
+    let hammers: Vec<_> = (0..2)
+        .map(|_| {
+            let stop = Arc::clone(&stop_flag);
+            let (va, vb) = (version_a.clone(), version_b.clone());
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let mut seen = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let (status, body) =
+                        c.post("/predict", r#"{"indices":[0,1],"values":[1,1]}"#);
+                    assert_eq!(status, 200, "request failed during hot-swap");
+                    let v = json::parse(&body).unwrap();
+                    let margin = v.get("margin").unwrap().as_f64().unwrap() as f32;
+                    let version = v.get("model_version").unwrap().as_str().unwrap();
+                    let expected = if version == va {
+                        margin_a
+                    } else if version == vb {
+                        margin_b
+                    } else {
+                        panic!("unknown model version {version}")
+                    };
+                    assert_eq!(
+                        margin.to_bits(),
+                        expected.to_bits(),
+                        "torn model: margin does not match version {version}"
+                    );
+                    seen += 1;
+                }
+                seen
+            })
+        })
+        .collect();
+
+    let mut health = Client::connect(addr);
+    let wait_version = |health: &mut Client, want: &str| {
+        let t0 = Instant::now();
+        loop {
+            let (_, body) = health.get("/healthz");
+            let v = json::parse(&body).unwrap();
+            if v.get("model_version").unwrap().as_str() == Some(want) {
+                return;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "server never served version {want}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    };
+
+    // a corrupt mid-write artifact must be skipped: old model keeps serving
+    std::fs::write(&artifact, "dglmnet-model v2 p=3 n=10 lambda=0.5 solver=a nnz=3 checksum=0000000000000000\n0 1\n").unwrap();
+    let t0 = Instant::now();
+    while handle.stats.swap_failures.load(Ordering::Relaxed) == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watcher never examined the corrupt artifact"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (_, body) = health.get("/healthz");
+    assert_eq!(
+        json::parse(&body).unwrap().get("model_version").unwrap().as_str(),
+        Some(version_a.as_str()),
+        "corrupt artifact must not replace the served model"
+    );
+
+    // real swaps, several times, while the hammers run
+    for _ in 0..3 {
+        model_b.save(&artifact).unwrap();
+        wait_version(&mut health, &version_b);
+        model_a.save(&artifact).unwrap();
+        wait_version(&mut health, &version_a);
+    }
+
+    stop_flag.store(true, Ordering::Relaxed);
+    let total: usize = hammers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "hammer threads never got a request through");
+    assert!(handle.stats.swaps.load(Ordering::Relaxed) >= 6);
+    assert!(handle.stats.swap_failures.load(Ordering::Relaxed) >= 1);
+    assert_eq!(handle.stats.server_errors.load(Ordering::Relaxed), 0);
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn server_rejects_invalid_artifact_at_startup() {
+    let dir = tmp_dir("badstart");
+    let artifact = dir.join("model.artifact");
+    std::fs::write(&artifact, "not a model\n").unwrap();
+    let cfg = ServeConfig { listen: "127.0.0.1:0".into(), ..ServeConfig::default() };
+    let err = Server::start(&artifact, &cfg).unwrap_err().to_string();
+    assert!(err.contains("not a dglmnet model artifact"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

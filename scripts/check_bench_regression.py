@@ -1,11 +1,14 @@
 #!/usr/bin/env python3
-"""Diff a fresh BENCH_iteration.json against the committed baseline.
+"""Diff a fresh BENCH_*.json against the committed baseline.
 
 Usage: check_bench_regression.py FRESH BASELINE
 
 Fails (exit 1) when:
   * any timing entry's median regresses by more than MAX_TIME_REGRESSION
     (15%) relative to the baseline, or
+  * a timing entry that also records `p99_secs` (the serve latency
+    benches) sees its tail regress by more than MAX_TAIL_REGRESSION
+    (50% — tails are noisier than medians on shared runners), or
   * any comm-bytes counter grows at all (the sparse wire format must never
     get chattier). For entries that record a `chosen_strategy` (the
     per-exchange-strategy section), only the strategy the cost model
@@ -22,6 +25,8 @@ import json
 import sys
 
 MAX_TIME_REGRESSION = 0.15
+# p99 tails wobble far more than medians on shared runners; gate loosely
+MAX_TAIL_REGRESSION = 0.50
 # peak RSS wobbles with allocator behaviour on shared runners; gate growth
 # beyond this factor (a leader re-growing an O(nnz) X copy blows well past it)
 MAX_RSS_REGRESSION = 0.25
@@ -62,6 +67,15 @@ def main():
                                 f"(+{(c / b - 1) * 100:.1f}% > {MAX_TIME_REGRESSION * 100:.0f}%)")
             else:
                 print(f"  [ok]     {name}: {c:.6g}s vs {b:.6g}s")
+            if "p99_secs" in base and "p99_secs" in cur:
+                tb, tc = base["p99_secs"], cur["p99_secs"]
+                compared += 1
+                if tb >= MIN_COMPARABLE_SECS and tc > tb * (1 + MAX_TAIL_REGRESSION):
+                    failures.append(
+                        f"{name}: p99 {tc:.6g}s vs baseline {tb:.6g}s "
+                        f"(+{(tc / tb - 1) * 100:.1f}% > {MAX_TAIL_REGRESSION * 100:.0f}%)")
+                else:
+                    print(f"  [ok]     {name}: p99 {tc:.6g}s vs {tb:.6g}s")
         elif isinstance(base, dict):
             # nested counters (e.g. fit_sparse_vs_dense_comm): any *comm_bytes
             # growth fails. Strategy entries gate only the cost-model pick.

@@ -1,0 +1,250 @@
+#!/usr/bin/env python3
+"""End-to-end exercise of `dglmnet serve` against a freshly trained model.
+
+Drives the full artifact lifecycle with nothing but the Python stdlib:
+
+  1. generate a dna-shaped dataset and train two models (different λ)
+  2. score the dataset offline with `dglmnet predict` (twice — the output
+     must be byte-deterministic) for both models
+  3. start `dglmnet serve` on an ephemeral port and wait for `serve_ready`
+  4. single `/predict` and streamed `/predict_batch` responses must match
+     the offline ndjson *byte for byte* (same shared scoring kernel)
+  5. malformed requests get a 4xx, never a hang
+  6. hot-swap: while 4 client threads hammer `/predict`, atomically replace
+     the artifact; every response must be a 200 whose margin matches the
+     model version it claims to be scored with — no torn reads, no drops
+  7. a corrupt artifact must be skipped (old model keeps serving)
+  8. after swapping back, `/predict_batch` must again bit-match offline
+
+Usage: serve_e2e.py --bin PATH/TO/dglmnet [--workdir DIR]
+"""
+
+import argparse
+import http.client
+import json
+import os
+import re
+import shutil
+import subprocess
+import sys
+import threading
+import time
+
+POLL_SECS = 0.1
+SWAP_TIMEOUT_SECS = 30
+
+
+def sh(args, **kw):
+    print("+", " ".join(str(a) for a in args), flush=True)
+    return subprocess.run([str(a) for a in args], check=True,
+                          capture_output=True, text=True, **kw)
+
+
+def train(bin_path, data, lam, out):
+    r = sh([bin_path, "train", "--input", data, "--kind", "dna",
+            "--machines", "2", "--engine", "native", "--lambda", str(lam),
+            "--max-iter", "30", "--model-out", out])
+    m = re.search(r"model saved to .* \(version ([0-9a-f]{16})\)", r.stdout)
+    assert m, f"train printed no model version:\n{r.stdout}"
+    return m.group(1)
+
+
+def predict_offline(bin_path, model, data, out):
+    r = sh([bin_path, "predict", "--model", model, "--input", data])
+    with open(out, "w") as f:
+        f.write(r.stdout)
+    return r.stdout
+
+
+def libsvm_examples(path, limit):
+    """First `limit` rows as /predict JSON bodies. Index/value tokens are
+    passed through verbatim so the server parses the same decimal text the
+    offline path read — no Python float round-trip in between."""
+    examples = []
+    with open(path) as f:
+        for line in f:
+            toks = line.split()[1:]
+            idx = ",".join(t.split(":")[0] for t in toks)
+            val = ",".join(t.split(":")[1] for t in toks)
+            examples.append('{"indices":[%s],"values":[%s]}' % (idx, val))
+            if len(examples) == limit:
+                break
+    return examples
+
+
+class ServeProc:
+    def __init__(self, bin_path, artifact):
+        self.proc = subprocess.Popen(
+            [bin_path, "serve", "--model", artifact,
+             "--listen", "127.0.0.1:0", "--poll-interval-secs", str(POLL_SECS)],
+            stdout=subprocess.PIPE, text=True)
+        line = self.proc.stdout.readline()
+        m = re.match(r"serve_ready addr=(\S+) model_version=([0-9a-f]{16})", line)
+        assert m, f"no serve_ready line, got: {line!r}"
+        self.addr, self.version = m.group(1), m.group(2)
+        print(f"serve up at {self.addr} (version {self.version})", flush=True)
+
+    def stop(self):
+        self.proc.terminate()
+        self.proc.wait(timeout=10)
+
+
+def request(addr, method, path, body=None):
+    host, port = addr.rsplit(":", 1)
+    conn = http.client.HTTPConnection(host, int(port), timeout=10)
+    try:
+        conn.request(method, path, body=body)
+        resp = conn.getresponse()
+        return resp.status, resp.read(), dict(resp.getheaders())
+    finally:
+        conn.close()
+
+
+def healthz_version(addr):
+    status, body, _ = request(addr, "GET", "/healthz")
+    assert status == 200, f"/healthz -> {status}"
+    return json.loads(body)["model_version"]
+
+
+def wait_for_version(addr, want, why):
+    deadline = time.monotonic() + SWAP_TIMEOUT_SECS
+    while time.monotonic() < deadline:
+        if healthz_version(addr) == want:
+            return
+        time.sleep(POLL_SECS / 2)
+    sys.exit(f"FAIL: server never served version {want} ({why})")
+
+
+def atomic_replace(src, dst):
+    tmp = dst + ".tmp"
+    shutil.copyfile(src, tmp)
+    os.replace(tmp, dst)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bin", required=True)
+    ap.add_argument("--workdir", default="serve_e2e_work")
+    args = ap.parse_args()
+    bin_path = os.path.abspath(args.bin)
+    os.makedirs(args.workdir, exist_ok=True)
+    os.chdir(args.workdir)
+
+    sh([bin_path, "gen-data", "--kind", "dna", "--examples", "2000",
+        "--features", "200", "--nnz-per-row", "8", "--seed", "3",
+        "--out", "data.svm"])
+    version_a = train(bin_path, "data.svm", 0.5, "model_a.artifact")
+    version_b = train(bin_path, "data.svm", 0.25, "model_b.artifact")
+    assert version_a != version_b, "the two λ must give distinct models"
+
+    # offline scoring is byte-deterministic
+    ndjson_a = predict_offline(bin_path, "model_a.artifact", "data.svm", "a.ndjson")
+    ndjson_a2 = predict_offline(bin_path, "model_a.artifact", "data.svm", "a2.ndjson")
+    assert ndjson_a == ndjson_a2, "offline predict is not deterministic"
+    ndjson_b = predict_offline(bin_path, "model_b.artifact", "data.svm", "b.ndjson")
+    lines_a, lines_b = ndjson_a.splitlines(), ndjson_b.splitlines()
+
+    shutil.copyfile("model_a.artifact", "serving.artifact")
+    serve = ServeProc(bin_path, "serving.artifact")
+    addr = serve.addr
+    assert serve.version == version_a, "served version != trained version"
+    ok = True
+    try:
+        # --- single predict bit-matches offline line 0 -------------------
+        examples = libsvm_examples("data.svm", 256)
+        status, body, _ = request(addr, "POST", "/predict", examples[0])
+        assert status == 200, f"/predict -> {status}: {body}"
+        got, want = json.loads(body), json.loads(lines_a[0])
+        assert got["margin"] == want["margin"], (got, want)
+        assert got["proba"] == want["proba"], (got, want)
+        assert got["model_version"] == version_a
+        print("single /predict matches offline predict", flush=True)
+
+        # --- streamed batch is byte-identical to offline ndjson ----------
+        batch = '{"examples":[%s]}' % ",".join(examples)
+        status, body, headers = request(addr, "POST", "/predict_batch", batch)
+        assert status == 200, f"/predict_batch -> {status}"
+        assert headers.get("X-Model-Version") == version_a
+        assert body.decode() == "\n".join(lines_a[:256]) + "\n", \
+            "batch stream differs from offline predict output"
+        print("256-example /predict_batch is byte-identical to offline", flush=True)
+
+        # --- malformed requests: 4xx, never a hang -----------------------
+        for bad, want_status in [("this is not json", 400),
+                                 ('{"indices":[0],"values":[1,2]}', 400),
+                                 ('{"values":[1]}', 400)]:
+            status, body, _ = request(addr, "POST", "/predict", bad)
+            assert status == want_status, f"{bad!r} -> {status}"
+            assert "error" in json.loads(body)
+        status, _, _ = request(addr, "GET", "/nope")
+        assert status == 404
+        print("malformed requests answered with 4xx", flush=True)
+
+        # --- hot-swap under concurrent load ------------------------------
+        margin_a = json.loads(lines_a[0])["margin"]
+        margin_b = json.loads(lines_b[0])["margin"]
+        stop = threading.Event()
+        failures, hits = [], []
+
+        def hammer():
+            count = 0
+            while not stop.is_set():
+                try:
+                    status, body, _ = request(addr, "POST", "/predict", examples[0])
+                    v = json.loads(body)
+                    expected = {version_a: margin_a, version_b: margin_b}.get(
+                        v.get("model_version"))
+                    if status != 200 or v["margin"] != expected:
+                        failures.append((status, body))
+                        return
+                    count += 1
+                except Exception as e:  # noqa: BLE001 - any failure fails the gate
+                    failures.append(("exception", repr(e)))
+                    return
+            hits.append(count)
+
+        threads = [threading.Thread(target=hammer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        atomic_replace("model_b.artifact", "serving.artifact")
+        wait_for_version(addr, version_b, "hot-swap a -> b")
+        time.sleep(0.5)  # keep hammering on the new model for a beat
+        stop.set()
+        for t in threads:
+            t.join()
+        assert not failures, f"requests failed during hot-swap: {failures[:3]}"
+        total = sum(hits)
+        assert total > 0, "hammer threads made no requests"
+        print(f"hot-swap a->b: {total} concurrent requests, 0 failures", flush=True)
+
+        # --- corrupt artifact is skipped; old model keeps serving --------
+        with open("serving.artifact", "w") as f:
+            f.write("dglmnet-model v2 p=200 n=2000 lambda=0.5 solver=x "
+                    "nnz=3 checksum=0000000000000000\n0 1\n")
+        time.sleep(POLL_SECS * 10)
+        assert healthz_version(addr) == version_b, \
+            "corrupt artifact replaced the served model"
+        print("corrupt artifact rejected; old model still serving", flush=True)
+
+        # --- swap back and re-verify the batch path ----------------------
+        atomic_replace("model_a.artifact", "serving.artifact")
+        wait_for_version(addr, version_a, "recovery swap b -> a")
+        status, body, _ = request(addr, "POST", "/predict_batch", batch)
+        assert status == 200
+        assert body.decode() == "\n".join(lines_a[:256]) + "\n"
+        status, body, _ = request(addr, "GET", "/metrics")
+        stats = json.loads(body)
+        assert stats["swaps"] >= 2, stats
+        assert stats["swap_failures"] >= 1, stats
+        assert stats["server_errors"] == 0, stats
+        print(f"serve_e2e OK: {stats}", flush=True)
+    except AssertionError as e:
+        ok = False
+        print(f"FAIL: {e}", file=sys.stderr, flush=True)
+    finally:
+        serve.stop()
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
