@@ -8,17 +8,26 @@
 //! * `comm`       (A4) — measured AllReduce bytes/time vs the O((n+p)·ln M)
 //!                 model, plus the shuffle preprocessing share (§3).
 //! * `partition`  — round-robin vs contiguous vs nnz-balanced shards.
+//! * `kernels`    — naive vs covariance-update vs threaded sweep kernels on
+//!                 one worker shard; emits `BENCH_ablation.json` with
+//!                 per-sweep ns and speedup ratios so the CI regression
+//!                 gate can watch the kernel win across PRs.
 //!
 //! Run: `cargo bench --bench bench_ablation [-- <name>]` (default: all)
 
+use std::collections::BTreeMap;
+
 use dglmnet::baselines::shotgun::shotgun;
-use dglmnet::bench_harness::section;
+use dglmnet::bench_harness::{bench, section};
 use dglmnet::cluster::partition::{FeaturePartition, PartitionStrategy};
 use dglmnet::config::{EngineKind, LineSearchConfig, TrainConfig};
-use dglmnet::data::shuffle::shuffle_to_feature_shards;
+use dglmnet::data::shuffle::{shard_in_memory, shuffle_to_feature_shards};
 use dglmnet::data::synth;
+use dglmnet::engine::{NativeEngine, SubproblemEngine, SweepKernel, SweepResult};
 use dglmnet::report::Table;
+use dglmnet::solver::quadratic::stats_native;
 use dglmnet::solver::{lambda_max, DGlmnetSolver};
+use dglmnet::util::json::Json;
 
 fn ablation_shotgun() {
     section("A1: shotgun update conflicts (correlated features)");
@@ -205,6 +214,66 @@ fn ablation_partition() {
     println!();
 }
 
+fn ablation_kernels() {
+    section("kernels: naive vs covariance-update vs threaded sweep");
+    // one worker shard of the bench_iteration geometry, swept at the λ the
+    // acceptance pin uses: λ_max / 4 on webspam-like data
+    let ds = synth::webspam_like(3_000, 4_000, 40, 7);
+    let n = ds.n_examples();
+    let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 4_000, 4, None);
+    let shard = shard_in_memory(&ds.x, &part).remove(0);
+    let lam = (lambda_max(&ds) / 4.0) as f32;
+    let margins = vec![0f32; n];
+    let (w, z, _) = stats_native(&margins, &ds.y);
+    let beta = vec![0f32; shard.csc.n_cols];
+
+    let kernel = |naive: bool, threads: usize| SweepKernel { naive, threads, ..Default::default() };
+    let variants = [
+        ("naive_t1", "naive, 1 thread", kernel(true, 1)),
+        ("cov_t1", "cov, 1 thread", kernel(false, 1)),
+        ("naive_t4", "naive, 4 threads", kernel(true, 4)),
+        ("cov_t4", "cov, 4 threads", kernel(false, 4)),
+    ];
+    let mut t = Table::new("", &["kernel", "per-sweep ms", "speedup vs naive_t1"]);
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    let mut naive_median = 0f64;
+    for (key, label, kernel) in variants {
+        let mut ne = NativeEngine::with_kernel(shard.clone(), n, kernel);
+        let mut out = SweepResult::default();
+        let s = bench(label, 2, 12, || {
+            ne.sweep(&w, &z, &beta, lam, 1e-6, &mut out).unwrap();
+        });
+        if key == "naive_t1" {
+            naive_median = s.median;
+        }
+        let speedup = naive_median / s.median;
+        t.add_row(vec![
+            label.to_string(),
+            format!("{:.3}", s.median * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        results.insert(format!("{key}_per_sweep_ns"), Json::Num(s.median * 1e9));
+        if key != "naive_t1" {
+            // gated by check_bench_regression.py: a kernel win must not
+            // quietly erode across PRs
+            results.insert(format!("{key}_speedup_x"), Json::Num(speedup));
+        }
+    }
+    t.print();
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("bench_ablation".into()));
+    top.insert("version".to_string(), Json::Num(1.0));
+    let mut sections = BTreeMap::new();
+    sections.insert("kernels".to_string(), Json::Obj(results));
+    top.insert("results".to_string(), Json::Obj(sections));
+    let path = "BENCH_ablation.json";
+    match std::fs::write(path, format!("{}\n", Json::Obj(top))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     // cargo bench (harness = false) passes a `--bench` flag — ignore flags.
     let args: Vec<String> = std::env::args()
@@ -226,5 +295,8 @@ fn main() {
     }
     if want("partition") {
         ablation_partition();
+    }
+    if want("kernels") {
+        ablation_kernels();
     }
 }

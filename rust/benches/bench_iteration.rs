@@ -16,7 +16,7 @@ use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
 use dglmnet::data::shuffle::shard_in_memory;
 use dglmnet::data::sparse::SparseVec;
 use dglmnet::data::synth;
-use dglmnet::engine::{NativeEngine, SubproblemEngine, SweepResult};
+use dglmnet::engine::{NativeEngine, SubproblemEngine, SweepKernel, SweepResult};
 #[cfg(feature = "xla")]
 use dglmnet::engine::XlaEngine;
 use dglmnet::solver::leader::LeaderCompute;
@@ -67,6 +67,33 @@ fn main() {
             ne.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
         });
         let (k, v) = record("native_sweep_sparse_shard", &s);
+        report.insert(k, v);
+    }
+    // the same shard through the other sweep-kernel configurations: the
+    // covariance-update kernel and the threaded deterministic-merge path
+    for (key, label, kernel) in [
+        (
+            "native_sweep_cov_shard",
+            "native cov sweep (Gram-cached)",
+            SweepKernel { naive: false, threads: 1, ..Default::default() },
+        ),
+        (
+            "native_sweep_naive_t4_shard",
+            "native naive sweep (4 threads)",
+            SweepKernel { naive: true, threads: 4, ..Default::default() },
+        ),
+        (
+            "native_sweep_cov_t4_shard",
+            "native cov sweep (4 threads)",
+            SweepKernel { naive: false, threads: 4, ..Default::default() },
+        ),
+    ] {
+        let mut ne = NativeEngine::with_kernel(shard.clone(), n, kernel);
+        let mut out = SweepResult::default();
+        let s = bench(label, 2, 10, || {
+            ne.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
+        });
+        let (k, v) = record(key, &s);
         report.insert(k, v);
     }
     #[cfg(feature = "xla")]

@@ -400,7 +400,10 @@ fn sparse_tree_exchange(
 
 /// Two-pointer merge of two sorted sparse accumulators into `(oi, ov)`;
 /// shared indices sum in `f64` (`a + b`, the same order as the dense path).
-fn merge_sorted_into(
+/// `pub(crate)`: the threaded `NativeEngine` combines its per-thread Δm
+/// accumulators with this exact merge so a T-threaded worker is bit-identical
+/// to T single-threaded machines under the matching sub-partition.
+pub(crate) fn merge_sorted_into(
     ai: &[u32],
     av: &[f64],
     bi: &[u32],

@@ -170,7 +170,16 @@ pub struct TrainConfig {
     pub engine: EngineKind,
     /// Use the naive per-column sweep kernel instead of the optimized
     /// covariance-update kernel (perf ablation; see EXPERIMENTS.md §Perf).
+    /// With the native engine, `naive_sweep = true` + `sweep_threads = 1`
+    /// is the exact-ablation escape hatch: it reproduces the historical
+    /// single-threaded trajectories bit-for-bit.
     pub naive_sweep: bool,
+    /// Threads each worker's CD sweep runs on (`[engine] sweep_threads` /
+    /// `--sweep-threads`). `0` = auto from available parallelism. A
+    /// T-threaded worker partitions its columns into T sub-blocks
+    /// (same strategy as the machine partition) and is bit-identical to
+    /// running those sub-blocks as T separate machines (T a power of two).
+    pub sweep_threads: usize,
     pub partition: PartitionStrategy,
     pub network: NetworkModel,
     /// Force the dense AllReduce wire format *and* the reduce-Δm exchange
@@ -249,6 +258,7 @@ impl Default for TrainConfig {
             block: 64,
             engine: EngineKind::Auto,
             naive_sweep: false,
+            sweep_threads: 1,
             partition: PartitionStrategy::RoundRobin,
             network: NetworkModel::gigabit(),
             dense_allreduce: false,
@@ -368,6 +378,28 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// The sweep-thread analog of [`validate_machines_for`]: an explicit
+    /// `sweep_threads` larger than a worker's column count would leave
+    /// threads with no features to sweep. Called with the smallest shard
+    /// width once the partition is known (`0` = auto always resolves to a
+    /// clamped, valid count).
+    ///
+    /// [`validate_machines_for`]: TrainConfig::validate_machines_for
+    pub fn validate_sweep_threads_for(&self, min_shard_cols: usize) -> Result<()> {
+        if self.sweep_threads > min_shard_cols.max(1) {
+            return Err(DlrError::Config(format!(
+                "[engine] sweep_threads = {} but the narrowest worker shard has only {} \
+                 feature column(s); every sweep thread must own at least one column — \
+                 lower --sweep-threads to at most {} (or use 0 = auto, which clamps \
+                 to the shard width)",
+                self.sweep_threads,
+                min_shard_cols,
+                min_shard_cols.max(1)
+            )));
+        }
+        Ok(())
+    }
+
     /// Load from a TOML file (`[solver]`, `[cluster]`, `[line_search]`).
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
@@ -399,6 +431,16 @@ impl TrainConfig {
         if let Some(s) = doc.get("solver", "engine").and_then(|v| v.as_str()) {
             cfg.engine = EngineKind::parse(s)
                 .ok_or_else(|| DlrError::Config(format!("unknown engine '{s}'")))?;
+        }
+        if let Some(v) = doc.get("engine", "sweep_threads") {
+            cfg.sweep_threads = v.as_usize().ok_or_else(|| {
+                DlrError::Config(
+                    "engine.sweep_threads must be a non-negative integer (0 = auto)".into(),
+                )
+            })?;
+        }
+        if let Some(v) = doc.get("engine", "naive_sweep").and_then(|v| v.as_bool()) {
+            cfg.naive_sweep = v;
         }
         if let Some(s) = doc.get("solver", "partition").and_then(|v| v.as_str()) {
             cfg.partition = PartitionStrategy::parse(s)
@@ -526,6 +568,10 @@ impl TrainConfigBuilder {
     }
     pub fn naive_sweep(mut self, v: bool) -> Self {
         self.0.naive_sweep = v;
+        self
+    }
+    pub fn sweep_threads(mut self, v: usize) -> Self {
+        self.0.sweep_threads = v;
         self
     }
     pub fn partition(mut self, v: PartitionStrategy) -> Self {
@@ -937,6 +983,34 @@ skip_alpha_init = true
         assert!(bad.validate().is_err());
         let doc = toml::parse("[serve]\nthreads = -1\n").unwrap();
         assert!(ServeConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn sweep_kernel_knobs_load_from_toml_and_are_validated() {
+        // defaults: cov kernel (naive_sweep = false), single-threaded sweep
+        let c = TrainConfig::default();
+        assert!(!c.naive_sweep);
+        assert_eq!(c.sweep_threads, 1);
+        let doc = toml::parse("[engine]\nsweep_threads = 4\nnaive_sweep = true\n").unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.sweep_threads, 4);
+        assert!(c.naive_sweep);
+        // 0 = auto is a valid setting
+        let doc = toml::parse("[engine]\nsweep_threads = 0\n").unwrap();
+        assert_eq!(TrainConfig::from_toml(&doc).unwrap().sweep_threads, 0);
+        // garbage thread counts error, not saturate
+        let doc = toml::parse("[engine]\nsweep_threads = -2\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        // explicit thread counts are validated against the narrowest shard
+        let c = TrainConfig::builder().sweep_threads(4).build();
+        assert!(c.validate_sweep_threads_for(4).is_ok());
+        let err = c.validate_sweep_threads_for(3).unwrap_err().to_string();
+        assert!(err.contains("sweep_threads = 4"), "{err}");
+        assert!(err.contains("3 feature column(s)"), "{err}");
+        assert!(err.contains("0 = auto"), "{err}");
+        // auto never fails validation — it clamps at resolution time
+        let c = TrainConfig::builder().sweep_threads(0).build();
+        assert!(c.validate_sweep_threads_for(1).is_ok());
     }
 
     #[test]

@@ -10,6 +10,43 @@
 //! All engines consume the same inputs and must produce the same update
 //! (tested in `rust/tests/engine_equivalence.rs`).
 //!
+//! ## The native sweep-kernel matrix
+//!
+//! [`NativeEngine`] runs one of two kernels, on one or more threads — a
+//! [`SweepKernel`] picked by `[engine] naive_sweep` / `sweep_threads`
+//! (CLI `--naive-sweep` / `--sweep-threads`):
+//!
+//! | kernel              | per-sweep cost          | when it wins            |
+//! |---------------------|-------------------------|-------------------------|
+//! | naive (`--naive-sweep`) | O(nnz) heavy pass   | exact-ablation baseline |
+//! | covariance (default)    | O(nnz) light pass + O(B·act) corrections | warm active set, stable weights |
+//!
+//! The **naive** kernel is the seed's loop kept byte-for-byte: per column one
+//! fused pass computes `Σ w x²` and `Σ w r x` against the residual updated
+//! Gauss-Seidel-style within the sweep. `--naive-sweep --sweep-threads 1`
+//! therefore reproduces historical trajectories bit-for-bit.
+//!
+//! The **covariance** kernel ([`cov`]) restates the same Gauss-Seidel
+//! recurrence through cached Gram columns (`Xᵀdiag(w̄)X` restricted to the
+//! features that actually step): the per-column pass degenerates to a single
+//! multiply-add stream against the sweep-start residual, column denominators
+//! come from a weight-epoch cache, and earlier steps reach later columns via
+//! O(row-nnz) Gram corrections instead of residual re-reads. Weights are
+//! quantized (`w̄`) so the caches are a *pure function of the current sweep
+//! inputs* — a resumed/failed-over engine with cold caches produces
+//! bit-identical results to a warm one. Equivalence to the naive kernel is a
+//! tolerance contract (ported from `python/tests/test_cov_kernel.py`), not a
+//! bitwise one.
+//!
+//! **Threading** (`sweep_threads = T`, 0 = auto): the shard's columns are
+//! sub-partitioned into T blocks (same strategy as the machine partition) and
+//! swept Jacobi-style against the shared sweep-start residual — exactly the
+//! math d-GLMNET already does *across machines* — then the per-thread Δm
+//! accumulators combine through the same deterministic pairwise-f64 merge the
+//! AllReduce tree uses. A T-threaded worker is pinned bit-identical to T
+//! single-threaded machines under the matching sub-partition; per-thread Δm /
+//! touched scratch trades O(T·n) memory for the parallelism.
+//!
 //! ## Zero-allocation sweep contract
 //!
 //! [`SubproblemEngine::sweep`] writes into a caller-owned [`SweepResult`]
@@ -20,6 +57,7 @@
 //! `cluster::comm` collectives ship (or, for `dmargins` under the
 //! allgather-Δβ strategy, recombine locally without touching the wire).
 
+pub mod cov;
 pub mod native;
 pub mod streaming;
 #[cfg(feature = "xla")]
@@ -30,10 +68,67 @@ pub use streaming::StreamingEngine;
 #[cfg(feature = "xla")]
 pub use xla_engine::XlaEngine;
 
+use crate::cluster::partition::PartitionStrategy;
 use crate::config::{EngineKind, TrainConfig};
 use crate::data::shuffle::FeatureShard;
 use crate::data::sparse::SparseVec;
 use crate::error::Result;
+
+/// Which sweep kernel a [`NativeEngine`] runs, and on how many threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepKernel {
+    /// `true` = the seed's exact naive loop (`--naive-sweep`); `false` = the
+    /// covariance-update kernel ([`cov`]).
+    pub naive: bool,
+    /// Sweep threads (≥ 1; `resolve_sweep_threads` has already expanded 0).
+    pub threads: usize,
+    /// Strategy for the intra-worker column sub-partition when `threads > 1`
+    /// — kept equal to the machine partition strategy so a T-threaded worker
+    /// matches T machines.
+    pub partition: PartitionStrategy,
+}
+
+impl Default for SweepKernel {
+    /// The seed's exact behavior: naive kernel, single thread.
+    fn default() -> Self {
+        Self { naive: true, threads: 1, partition: PartitionStrategy::RoundRobin }
+    }
+}
+
+impl SweepKernel {
+    /// The kernel `cfg` asks for, with `sweep_threads = 0` resolved to the
+    /// host's available parallelism.
+    pub fn from_config(cfg: &TrainConfig) -> Self {
+        Self {
+            naive: cfg.naive_sweep,
+            threads: resolve_sweep_threads(cfg.sweep_threads),
+            partition: cfg.partition,
+        }
+    }
+
+    /// Clamp the thread count so every sweep thread owns ≥ 1 column (the
+    /// auto path; explicit over-wide counts are rejected earlier with
+    /// [`TrainConfig::validate_sweep_threads_for`]).
+    pub fn clamped_to(mut self, shard_cols: usize) -> Self {
+        self.threads = self.threads.min(shard_cols.max(1));
+        self
+    }
+
+    /// `"naive"` or `"cov"` — what `dglmnet train` prints next to the
+    /// resolved thread count.
+    pub fn kernel_name(&self) -> &'static str {
+        if self.naive { "naive" } else { "cov" }
+    }
+}
+
+/// Expand `[engine] sweep_threads` (`0` = auto) to a concrete thread count.
+pub fn resolve_sweep_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
 
 /// Result of one machine-local subproblem solve (one cyclic CD sweep).
 /// Owned by the caller and reused across sweeps — engines `clear` and refill
@@ -160,7 +255,11 @@ pub fn build_engine(
     artifacts_dir: &std::path::Path,
 ) -> Result<Box<dyn SubproblemEngine>> {
     match resolve_engine(cfg, &shard, n, artifacts_dir) {
-        EngineKind::Native => Ok(Box::new(NativeEngine::new(shard, n))),
+        EngineKind::Native => {
+            cfg.validate_sweep_threads_for(shard.csc.n_cols)?;
+            let kernel = SweepKernel::from_config(cfg).clamped_to(shard.csc.n_cols);
+            Ok(Box::new(NativeEngine::with_kernel(shard, n, kernel)))
+        }
         #[cfg(feature = "xla")]
         _ => Ok(Box::new(XlaEngine::with_kernel(
             shard,

@@ -2,25 +2,45 @@
 //! formulation (§3): stream the shard's columns, apply the closed-form
 //! coordinate update (6), maintain the working Δmargin incrementally.
 //! O(nnz + touched) per sweep; results are emitted as sparse vectors into
-//! caller-owned buffers (no per-sweep allocation).
+//! caller-owned buffers (no per-sweep allocation on the default path).
 //!
 //! The working residual is *derived*, not stored: `r_i = z_i - Δm_i`, with
 //! `Δm` a per-example accumulator that is all-zero at sweep start. Resetting
 //! it costs O(touched examples from the previous sweep) — not the seed's
 //! O(n) re-read of `z` into a residual buffer — so an all-zero update
 //! (λ ≥ λ_max regimes, converged shards) never pays an O(n) scan.
+//!
+//! ## Kernel matrix
+//!
+//! The engine runs one [`SweepKernel`]: the **naive** column loop below kept
+//! byte-for-byte from the seed (`--naive-sweep`, the exact-ablation
+//! baseline), or the **covariance-update** kernel ([`cov`](crate::engine::cov),
+//! the default). With `sweep_threads = T > 1` the shard's columns are
+//! sub-partitioned into T blocks (same [`FeaturePartition`] machinery and
+//! strategy as the machine partition) and swept Jacobi-style on a scoped
+//! thread pool; per-block Δm accumulators then combine through the same
+//! deterministic pairwise-f64 tree merge
+//! ([`merge_sorted_into`](crate::cluster::allreduce)) the AllReduce uses, so
+//! a T-threaded worker is bit-identical to T single-threaded machines under
+//! the matching sub-partition. `T = 1` bypasses the staging entirely and
+//! writes straight into the caller's buffers — the seed's exact code path.
 
 use std::time::Instant;
 
+use crate::cluster::allreduce::merge_sorted_into;
+use crate::cluster::partition::FeaturePartition;
 use crate::data::shuffle::FeatureShard;
-use crate::engine::{SubproblemEngine, SweepResult};
+use crate::data::sparse::SparseVec;
+use crate::engine::cov::{cov_block_compute, CovBlock, GRAM_CACHE_BUDGET_BYTES};
+use crate::engine::{SubproblemEngine, SweepKernel, SweepResult};
 use crate::error::Result;
-use crate::util::math::soft_threshold;
+use crate::util::math::{gather_dot4, soft_threshold};
 
-/// Sparse coordinate-descent engine over a by-feature (CSC) shard.
-pub struct NativeEngine {
-    shard: FeatureShard,
-    n: usize,
+/// One sweep thread's slice of the shard: its columns plus a private Δm
+/// accumulator (O(n) each — T threads trade O(T·n) memory for parallelism).
+struct BlockState {
+    /// Shard-local column ids this block owns, ascending.
+    cols: Vec<u32>,
     /// Accumulated Δβ·x per example within the current sweep (f64 for
     /// accumulation stability); zero outside `touched`.
     dm: Vec<f64>,
@@ -28,16 +48,181 @@ pub struct NativeEngine {
     touched: Vec<u32>,
     /// Membership flags for `touched` (O(1) dedup; reset via the list).
     in_touched: Vec<bool>,
+    /// Covariance-kernel caches (None under `--naive-sweep`).
+    cov: Option<CovBlock>,
+}
+
+/// Sparse coordinate-descent engine over a by-feature (CSC) shard.
+pub struct NativeEngine {
+    shard: FeatureShard,
+    n: usize,
+    kernel: SweepKernel,
+    blocks: Vec<BlockState>,
+    /// Per-block staged (delta, dmargins) leaf results (T > 1 only).
+    staged: Vec<(SparseVec, SparseVec)>,
+    /// Widened f64 per-block Δm accumulators + merge scratch (T > 1 only).
+    acc_idx: Vec<Vec<u32>>,
+    acc_val: Vec<Vec<f64>>,
+    tmp_idx: Vec<u32>,
+    tmp_val: Vec<f64>,
+    /// k-way delta-merge cursors (T > 1 only).
+    kpos: Vec<usize>,
+    /// Precomputed `w_i · z_i` products shared across blocks (cov kernel).
+    wz: Vec<f64>,
 }
 
 impl NativeEngine {
+    /// The seed's exact engine: naive kernel, single thread.
     pub fn new(shard: FeatureShard, n: usize) -> Self {
+        Self::with_kernel(shard, n, SweepKernel::default())
+    }
+
+    /// Engine with an explicit kernel/thread configuration. Thread count is
+    /// clamped so every block owns ≥ 1 column; the T-block sub-partition
+    /// uses the same strategy (and nnz counts) as the machine partition, so
+    /// at M = 1 the blocks equal the shards of a T-machine run.
+    pub fn with_kernel(shard: FeatureShard, n: usize, kernel: SweepKernel) -> Self {
         assert_eq!(shard.csc.n_rows, n);
-        Self { shard, n, dm: vec![0f64; n], touched: Vec::new(), in_touched: vec![false; n] }
+        let p_local = shard.csc.n_cols;
+        let kernel = kernel.clamped_to(p_local);
+        let t = kernel.threads;
+        let cols_per_block: Vec<Vec<u32>> = if t <= 1 {
+            vec![(0..p_local as u32).collect()]
+        } else {
+            let counts: Vec<usize> = (0..p_local).map(|j| shard.csc.col_nnz(j)).collect();
+            let part = FeaturePartition::build(kernel.partition, p_local, t, Some(&counts));
+            (0..t).map(|b| part.features_of(b)).collect()
+        };
+        let budget = GRAM_CACHE_BUDGET_BYTES / t.max(1);
+        let blocks: Vec<BlockState> = cols_per_block
+            .into_iter()
+            .map(|cols| {
+                let cov = (!kernel.naive).then(|| CovBlock::new(&shard, &cols, budget));
+                BlockState {
+                    cols,
+                    dm: vec![0f64; n],
+                    touched: Vec::new(),
+                    in_touched: vec![false; n],
+                    cov,
+                }
+            })
+            .collect();
+        let staged = if t > 1 {
+            (0..t).map(|_| (SparseVec::new(p_local), SparseVec::new(n))).collect()
+        } else {
+            Vec::new()
+        };
+        Self {
+            shard,
+            n,
+            kernel,
+            blocks,
+            staged,
+            acc_idx: vec![Vec::new(); if t > 1 { t } else { 0 }],
+            acc_val: vec![Vec::new(); if t > 1 { t } else { 0 }],
+            tmp_idx: Vec::new(),
+            tmp_val: Vec::new(),
+            kpos: vec![0; t],
+            wz: Vec::new(),
+        }
     }
 
     pub fn shard(&self) -> &FeatureShard {
         &self.shard
+    }
+
+    /// The kernel this engine resolved to (post-clamp).
+    pub fn kernel(&self) -> SweepKernel {
+        self.kernel
+    }
+}
+
+/// One block's sweep: incremental Δm reset, the column loop (naive or cov),
+/// then the leaf emission — sorted touched examples, f64-exact zeros
+/// skipped, values narrowed to f32. This emission IS what a single-threaded
+/// machine ships into the AllReduce, which is exactly what makes the
+/// threaded merge below reproduce a T-machine run.
+#[allow(clippy::too_many_arguments)]
+fn sweep_block(
+    shard: &FeatureShard,
+    blk: &mut BlockState,
+    w: &[f32],
+    z: &[f32],
+    beta_local: &[f32],
+    lam: f64,
+    nu: f64,
+    wz: &[f64],
+    delta_out: &mut SparseVec,
+    dm_out: &mut SparseVec,
+) {
+    // incremental reset: only the entries the previous sweep moved
+    for &i in &blk.touched {
+        blk.dm[i as usize] = 0.0;
+        blk.in_touched[i as usize] = false;
+    }
+    blk.touched.clear();
+
+    match &mut blk.cov {
+        Some(cov) => {
+            cov.begin_sweep(w);
+            cov_block_compute(
+                shard,
+                &blk.cols,
+                cov,
+                &mut blk.dm,
+                &mut blk.touched,
+                &mut blk.in_touched,
+                wz,
+                beta_local,
+                lam,
+                nu,
+                delta_out,
+            );
+        }
+        None => {
+            for &c in &blk.cols {
+                let j = c as usize;
+                let (rows, vals) = shard.csc.col(j);
+                if rows.is_empty() {
+                    continue;
+                }
+                // A = Σ w x² + ν ;  c = Σ w r x + β_j A, with r_i = z_i - Δm_i
+                let mut a = nu;
+                let mut wrx = 0f64;
+                for (&i, &v) in rows.iter().zip(vals) {
+                    let ii = i as usize;
+                    let wi = w[ii] as f64;
+                    let x = v as f64;
+                    a += wi * x * x;
+                    wrx += wi * (z[ii] as f64 - blk.dm[ii]) * x;
+                }
+                let bj = beta_local[j] as f64;
+                let cnum = wrx + bj * a;
+                let s = soft_threshold(cnum, lam) / a;
+                let step = s - bj;
+                if step != 0.0 {
+                    delta_out.push(c, step as f32);
+                    for (&i, &v) in rows.iter().zip(vals) {
+                        let ii = i as usize;
+                        blk.dm[ii] += step * v as f64;
+                        if !blk.in_touched[ii] {
+                            blk.in_touched[ii] = true;
+                            blk.touched.push(i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Δβ^m · x_i = Δm_i, non-zero only for touched examples — emission
+    // costs O(touched log touched), not O(n)
+    blk.touched.sort_unstable();
+    for &i in &blk.touched {
+        let v = blk.dm[i as usize];
+        if v != 0.0 {
+            dm_out.push(i, v as f32);
+        }
     }
 }
 
@@ -57,58 +242,122 @@ impl SubproblemEngine for NativeEngine {
         debug_assert_eq!(z.len(), n);
         let p_local = self.shard.csc.n_cols;
         debug_assert_eq!(beta_local.len(), p_local);
-
-        // incremental reset: only the entries the previous sweep moved
-        for &i in &self.touched {
-            self.dm[i as usize] = 0.0;
-            self.in_touched[i as usize] = false;
-        }
-        self.touched.clear();
-
         let (lam, nu) = (lam as f64, nu as f64);
         out.delta_local.clear(p_local);
 
-        for j in 0..p_local {
-            let (rows, vals) = self.shard.csc.col(j);
-            if rows.is_empty() {
-                continue;
-            }
-            // A = Σ w x² + ν ;  c = Σ w r x + β_j A, with r_i = z_i - Δm_i
-            let mut a = nu;
-            let mut wrx = 0f64;
-            for (&i, &v) in rows.iter().zip(vals) {
-                let ii = i as usize;
-                let wi = w[ii] as f64;
-                let x = v as f64;
-                a += wi * x * x;
-                wrx += wi * (z[ii] as f64 - self.dm[ii]) * x;
-            }
-            let bj = beta_local[j] as f64;
-            let c = wrx + bj * a;
-            let s = soft_threshold(c, lam) / a;
-            let step = s - bj;
-            if step != 0.0 {
-                out.delta_local.push(j as u32, step as f32);
-                for (&i, &v) in rows.iter().zip(vals) {
-                    let ii = i as usize;
-                    self.dm[ii] += step * v as f64;
-                    if !self.in_touched[ii] {
-                        self.in_touched[ii] = true;
-                        self.touched.push(i);
+        // cov kernel: every block's c0 pass gathers against the same w·z
+        // products a single-machine engine would compute, shared per sweep
+        if !self.kernel.naive {
+            self.wz.clear();
+            self.wz.extend(w.iter().zip(z).map(|(&wi, &zi)| wi as f64 * zi as f64));
+        }
+
+        let t = self.kernel.threads;
+        if t <= 1 {
+            out.dmargins.clear(n);
+            sweep_block(
+                &self.shard,
+                &mut self.blocks[0],
+                w,
+                z,
+                beta_local,
+                lam,
+                nu,
+                &self.wz,
+                &mut out.delta_local,
+                &mut out.dmargins,
+            );
+            out.compute_secs = t0.elapsed().as_secs_f64();
+            return Ok(());
+        }
+
+        // ---- T > 1: Jacobi blocks on scoped threads -------------------
+        {
+            let shard = &self.shard;
+            let wz = &self.wz[..];
+            let mut work: Vec<_> = self.blocks.iter_mut().zip(self.staged.iter_mut()).collect();
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(work.len().saturating_sub(1));
+                // block 0 runs on the calling thread; the rest spawn
+                for (blk, st) in work.drain(1..) {
+                    handles.push(s.spawn(move || {
+                        st.0.clear(p_local);
+                        st.1.clear(n);
+                        sweep_block(
+                            shard, blk, w, z, beta_local, lam, nu, wz, &mut st.0, &mut st.1,
+                        );
+                    }));
+                }
+                let (blk, st) = work.pop().expect("at least one sweep block");
+                st.0.clear(p_local);
+                st.1.clear(n);
+                sweep_block(shard, blk, w, z, beta_local, lam, nu, wz, &mut st.0, &mut st.1);
+                for h in handles {
+                    h.join().expect("sweep thread panicked");
+                }
+            });
+        }
+
+        // Δβ merge: blocks own disjoint column sets, each staged ascending —
+        // a k-way index merge, values untouched (each block computed the
+        // identical f32 step a machine owning those columns would ship)
+        self.kpos.iter_mut().for_each(|p| *p = 0);
+        loop {
+            let mut best: Option<(u32, usize)> = None;
+            for (b, &p) in self.kpos.iter().enumerate() {
+                if let Some(&idx) = self.staged[b].0.indices.get(p) {
+                    if best.is_none_or(|(bi, _)| idx < bi) {
+                        best = Some((idx, b));
                     }
                 }
             }
+            let Some((idx, b)) = best else { break };
+            out.delta_local.push(idx, self.staged[b].0.values[self.kpos[b]]);
+            self.kpos[b] += 1;
         }
 
-        // Δβ^m · x_i = Δm_i, non-zero only for touched examples — emission
-        // costs O(touched log touched), not O(n)
-        self.touched.sort_unstable();
-        out.dmargins.clear(n);
-        for &i in &self.touched {
-            let v = self.dm[i as usize];
-            if v != 0.0 {
-                out.dmargins.push(i, v as f32);
+        // Δm merge: mirror of `sparse_tree_exchange` — widen leaves f32→f64
+        // keeping every entry, pairwise-merge (result in the left slot, odd
+        // leftover carries), then the root emits ALL merged entries as f32,
+        // f64-exact zeros included, exactly as the AllReduce root does.
+        for b in 0..t {
+            self.acc_idx[b].clear();
+            self.acc_val[b].clear();
+            let st = &self.staged[b].1;
+            self.acc_idx[b].extend_from_slice(&st.indices);
+            self.acc_val[b].extend(st.values.iter().map(|&v| v as f64));
+        }
+        let mut active: Vec<usize> = (0..t).collect();
+        while active.len() > 1 {
+            let mut next = Vec::with_capacity(active.len().div_ceil(2));
+            let mut k = 0;
+            while k + 1 < active.len() {
+                let (a, b) = (active[k], active[k + 1]);
+                debug_assert!(a < b);
+                let (left, right) = self.acc_idx.split_at_mut(b);
+                let (lv, rv) = self.acc_val.split_at_mut(b);
+                merge_sorted_into(
+                    &left[a],
+                    &lv[a],
+                    &right[0],
+                    &rv[0],
+                    &mut self.tmp_idx,
+                    &mut self.tmp_val,
+                );
+                std::mem::swap(&mut left[a], &mut self.tmp_idx);
+                std::mem::swap(&mut lv[a], &mut self.tmp_val);
+                next.push(a);
+                k += 2;
             }
+            if k < active.len() {
+                next.push(active[k]);
+            }
+            active = next;
+        }
+        out.dmargins.clear(n);
+        let root = active[0];
+        for (&idx, &v) in self.acc_idx[root].iter().zip(&self.acc_val[root]) {
+            out.dmargins.push(idx, v as f32);
         }
         out.compute_secs = t0.elapsed().as_secs_f64();
         Ok(())
@@ -119,11 +368,7 @@ impl SubproblemEngine for NativeEngine {
         let mut best = 0f64;
         for j in 0..self.shard.csc.n_cols {
             let (rows, vals) = self.shard.csc.col(j);
-            let mut g = 0f64;
-            for (&i, &v) in rows.iter().zip(vals) {
-                g += v as f64 * y[i as usize] as f64;
-            }
-            best = best.max(g.abs() / 2.0);
+            best = best.max(gather_dot4(rows, vals, y).abs() / 2.0);
         }
         Ok(best)
     }
@@ -134,17 +379,45 @@ impl SubproblemEngine for NativeEngine {
         out: &mut crate::data::sparse::SparseVec,
     ) -> Result<()> {
         debug_assert_eq!(beta_local.len(), self.shard.csc.n_cols);
-        let mut acc = vec![0f64; self.n];
-        // the shared canonical margin kernel (data::sparse): ascending
-        // feature order, f64 accumulation, zero weights skipped — what
-        // CsrMatrix::margins / SparseModel::predict compute row-wise
-        self.shard.csc.accumulate_margins_f64(beta_local, &mut acc);
-        out.clear(self.n);
-        for (i, &v) in acc.iter().enumerate() {
-            if v != 0.0 {
-                out.push(i as u32, v as f32);
+        // reuse block 0's Δm scratch instead of a fresh O(n) allocation —
+        // same ascending-feature f64 accumulation as the canonical
+        // CscMatrix::accumulate_margins_f64 kernel, zero-β columns skipped
+        let blk = &mut self.blocks[0];
+        for &i in &blk.touched {
+            blk.dm[i as usize] = 0.0;
+            blk.in_touched[i as usize] = false;
+        }
+        blk.touched.clear();
+        for (j, &b) in beta_local.iter().enumerate() {
+            if b == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.shard.csc.col(j);
+            let bd = b as f64;
+            for (&i, &v) in rows.iter().zip(vals) {
+                let ii = i as usize;
+                blk.dm[ii] += bd * v as f64;
+                if !blk.in_touched[ii] {
+                    blk.in_touched[ii] = true;
+                    blk.touched.push(i);
+                }
             }
         }
+        blk.touched.sort_unstable();
+        out.clear(self.n);
+        for &i in &blk.touched {
+            let v = blk.dm[i as usize];
+            if v != 0.0 {
+                out.push(i, v as f32);
+            }
+        }
+        // leave the scratch clean so the next sweep's incremental reset
+        // (which trusts `touched`) stays consistent
+        for &i in &blk.touched {
+            blk.dm[i as usize] = 0.0;
+            blk.in_touched[i as usize] = false;
+        }
+        blk.touched.clear();
         Ok(())
     }
 
@@ -291,6 +564,57 @@ mod tests {
     }
 
     #[test]
+    fn cov_kernel_warm_caches_match_a_fresh_engine_bitwise() {
+        // warmth-independence: the covariance caches are memoization, not
+        // state — a persistent engine whose Gram/denominator caches are warm
+        // must emit the same bits as a cold engine built mid-path (the
+        // checkpoint-resume / failover-replacement scenario)
+        let ds = synth::webspam_like(250, 300, 8, 5);
+        let kernel = SweepKernel { naive: false, threads: 1, ..Default::default() };
+        let mut persistent =
+            NativeEngine::with_kernel(one_shard(&ds), ds.n_examples(), kernel);
+        let beta = vec![0f32; 300];
+        let margins0 = vec![0f32; ds.n_examples()];
+        let (w0, z0) = stats_of(&ds, &margins0);
+        let first = persistent.sweep_alloc(&w0, &z0, &beta, 0.4, 1e-6).unwrap();
+        assert!(!first.dmargins.is_empty());
+        // same inputs again: caches now hot, result must not move a bit
+        let hot = persistent.sweep_alloc(&w0, &z0, &beta, 0.4, 1e-6).unwrap();
+        assert_eq!(hot.delta_local, first.delta_local);
+        assert_eq!(hot.dmargins, first.dmargins);
+        // shifted weights: warm (invalidating) engine vs cold engine
+        let margins1: Vec<f32> = first.dmargins.to_dense().iter().map(|d| 0.5 * d).collect();
+        let (w1, z1) = stats_of(&ds, &margins1);
+        let warm = persistent.sweep_alloc(&w1, &z1, &beta, 0.4, 1e-6).unwrap();
+        let mut fresh = NativeEngine::with_kernel(one_shard(&ds), ds.n_examples(), kernel);
+        let cold = fresh.sweep_alloc(&w1, &z1, &beta, 0.4, 1e-6).unwrap();
+        assert_eq!(warm.delta_local, cold.delta_local);
+        assert_eq!(warm.dmargins, cold.dmargins);
+    }
+
+    #[test]
+    fn cov_kernel_tracks_naive_to_tolerance() {
+        let ds = synth::webspam_like(250, 300, 8, 5);
+        let mut naive = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let kernel = SweepKernel { naive: false, threads: 1, ..Default::default() };
+        let mut cov = NativeEngine::with_kernel(one_shard(&ds), ds.n_examples(), kernel);
+        let beta = vec![0f32; 300];
+        let margins = vec![0f32; ds.n_examples()];
+        let (w, z) = stats_of(&ds, &margins);
+        let a = naive.sweep_alloc(&w, &z, &beta, 0.3, 1e-6).unwrap();
+        let b = cov.sweep_alloc(&w, &z, &beta, 0.3, 1e-6).unwrap();
+        let (da, db) = (a.delta_local.to_dense(), b.delta_local.to_dense());
+        for j in 0..300 {
+            assert!(
+                (da[j] - db[j]).abs() <= 2e-3 * (1.0 + da[j].abs()),
+                "delta[{j}]: naive {} vs cov {}",
+                da[j],
+                db[j]
+            );
+        }
+    }
+
+    #[test]
     fn lambda_max_local_matches_full_scan_on_one_shard() {
         // a single shard owns every feature, so its local λ_max IS the
         // dataset's — and must match the leader-side scan bit-for-bit
@@ -321,6 +645,26 @@ mod tests {
                 want[i]
             );
         }
+    }
+
+    #[test]
+    fn margins_into_leaves_sweep_state_clean() {
+        // margins_into borrows block 0's Δm scratch; a sweep right after it
+        // must behave exactly as on a fresh engine
+        let ds = synth::webspam_like(200, 300, 8, 11);
+        let mut eng = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let beta: Vec<f32> =
+            (0..300).map(|j| if j % 7 == 0 { 0.05 * (j as f32 + 1.0) } else { 0.0 }).collect();
+        let mut scratch = crate::data::sparse::SparseVec::new(0);
+        eng.margins_into(&beta, &mut scratch).unwrap();
+        let margins = vec![0f32; ds.n_examples()];
+        let (w, z) = stats_of(&ds, &margins);
+        let zero = vec![0f32; 300];
+        let after = eng.sweep_alloc(&w, &z, &zero, 0.3, 1e-6).unwrap();
+        let mut fresh = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let clean = fresh.sweep_alloc(&w, &z, &zero, 0.3, 1e-6).unwrap();
+        assert_eq!(after.delta_local, clean.delta_local);
+        assert_eq!(after.dmargins, clean.dmargins);
     }
 
     #[test]

@@ -144,6 +144,50 @@
 //! warm-starting from the current β — bit-identical to a fresh fit at the
 //! new machine count warm-started from the same β.
 //!
+//! ## Tuning sweep speed — kernels and threads
+//!
+//! The per-iteration hot loop is the worker CD sweep, and
+//! [`engine::NativeEngine`] offers two orthogonal `[engine]` knobs for it
+//! (see the [`engine`] module docs for the full kernel matrix):
+//!
+//! * `naive_sweep` (`--naive-sweep`) — pick the sweep *kernel*. The
+//!   default is the covariance-update kernel ([`engine::cov`]): one light
+//!   O(nnz) correlation pass prices every coordinate, inactive columns are
+//!   skipped without touching their residuals, and active-set Gram columns
+//!   are cached across sweeps. The flag swaps back to the exact naive
+//!   residual-update loop — the ablation escape hatch, bit-identical to
+//!   the pre-kernel trajectories. The two kernels agree to quantization
+//!   tolerance (~1e-3 relative), not bitwise; `tests/engine_equivalence.rs`
+//!   pins the contract.
+//! * `sweep_threads` (`--sweep-threads`, default 1, `0` = host
+//!   parallelism) — sweep a worker's columns on T scoped threads. The
+//!   sub-partition mirrors the machine partition strategy and the
+//!   per-thread results merge through the same deterministic pairwise
+//!   tree the AllReduce uses, so a worker sweeping on T threads is **bit
+//!   for bit** the trajectory of T single-threaded machines — threads
+//!   change wall-clock, never results. Requests wider than the narrowest
+//!   shard fail fast at config validation.
+//!
+//! ```no_run
+//! use dglmnet::config::TrainConfig;
+//! use dglmnet::data::synth;
+//! use dglmnet::solver::DGlmnetSolver;
+//!
+//! let ds = synth::webspam_like(4_000, 10_000, 40, 7);
+//! let cfg = TrainConfig::builder()
+//!     .machines(4)
+//!     .sweep_threads(0) // auto: use what the host offers
+//!     .lambda(0.5)
+//!     .build();
+//! let fit = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap().fit(None).unwrap();
+//! println!("f = {}", fit.objective);
+//! ```
+//!
+//! `cargo bench --bench bench_ablation -- kernels` measures all four
+//! kernel × threading combinations on one shard and emits
+//! `BENCH_ablation.json`; CI gates the speedup ratios so the win cannot
+//! silently erode.
+//!
 //! ## Serve a trained model — `dglmnet serve`
 //!
 //! The paper's models exist to answer live traffic; the [`serve`]

@@ -72,6 +72,8 @@ fn app() -> App {
                 .opt("lambda", "L1 strength (objective scale)", Some("1.0"))
                 .opt("machines", "simulated machines M", Some("4"))
                 .opt("engine", "auto | xla | native", Some("auto"))
+                .opt("sweep-threads", "CD sweep threads per worker (0 = auto: host parallelism)", Some("1"))
+                .flag("naive-sweep", "use the exact naive sweep kernel instead of the covariance-update one")
                 .opt("max-iter", "iteration cap", Some("100"))
                 .opt("tol", "relative-decrease tolerance", Some("1e-5"))
                 .opt("exchange", "auto | reduce-dm | allgather-beta", Some("auto"))
@@ -127,6 +129,8 @@ fn app() -> App {
                 .opt("machines", "cluster size M (must match the leader)", Some("4"))
                 .opt("workers", "alias for --machines", None)
                 .opt("engine", "auto | xla | native", Some("auto"))
+                .opt("sweep-threads", "CD sweep threads (0 = auto: host parallelism)", Some("1"))
+                .flag("naive-sweep", "use the exact naive sweep kernel instead of the covariance-update one")
                 .opt("connect-timeout-secs", "how long to retry reaching the leader", Some("30")),
         )
         .command(
@@ -209,6 +213,12 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     if let Some(e) = args.get_str("engine") {
         cfg.engine = EngineKind::parse(e)
             .ok_or_else(|| DlrError::Cli(format!("unknown engine '{e}'")))?;
+    }
+    if let Some(t) = args.get_usize("sweep-threads")? {
+        cfg.sweep_threads = t;
+    }
+    if args.get_flag("naive-sweep") {
+        cfg.naive_sweep = true;
     }
     if let Some(i) = args.get_usize("max-iter")? {
         cfg.max_iter = i;
@@ -478,6 +488,17 @@ fn finish_train_output(
     solver: &str,
 ) -> Result<()> {
     println!("objective_bits={:016x}", fit.objective.to_bits());
+    if solver == "dglmnet" {
+        // the resolved sweep-kernel choice (what the workers' native
+        // engines actually ran), next to the other machine-readable lines
+        let cfg = train_config(args)?;
+        let kernel = dglmnet::engine::SweepKernel::from_config(&cfg);
+        println!(
+            "sweep_kernel={} sweep_threads={}",
+            kernel.kernel_name(),
+            kernel.threads
+        );
+    }
     println!(
         "leader_peak_rss_bytes={}",
         dglmnet::util::peak_rss_bytes().unwrap_or(0)

@@ -453,6 +453,9 @@ impl DGlmnetSolver {
         mut pool: WorkerPool,
     ) -> Result<Self> {
         pool.set_recv_deadline(recv_deadline(cfg))?;
+        // fail fast on the leader with the actionable message rather than
+        // letting the narrowest worker's engine build error surface later
+        cfg.validate_sweep_threads_for(partition.sizes().iter().copied().min().unwrap_or(0))?;
         let artifacts = default_artifacts_dir();
         let n = y.len();
         let p = partition.n_features();

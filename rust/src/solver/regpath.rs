@@ -15,16 +15,20 @@ use crate::util::timer::Stopwatch;
 /// λ_max: the smallest λ for which β* = 0. At β = 0, p_i = ½, w_i = ¼,
 /// z_i = 2y_i, so the per-feature screening value is
 /// |Σ_i w_i x_ij z_i| = |Σ_i x_ij y_i| / 2.
+///
+/// Computed by-feature over a CSC view with the same unrolled
+/// [`gather_dot4`](crate::util::math::gather_dot4) reduction every engine's
+/// `lambda_max_local` uses, so the distributed max-reduce is bit-identical
+/// to this leader-side scan (a CSC column holds exactly a shard column's
+/// ascending example contributions).
 pub fn lambda_max(ds: &Dataset) -> f64 {
-    let mut grad = vec![0f64; ds.n_features()];
-    for i in 0..ds.n_examples() {
-        let (cols, vals) = ds.x.row(i);
-        let y = ds.y[i] as f64;
-        for (&c, &v) in cols.iter().zip(vals) {
-            grad[c as usize] += v as f64 * y;
-        }
+    let csc = ds.x.to_csc();
+    let mut best = 0f64;
+    for j in 0..csc.n_cols {
+        let (rows, vals) = csc.col(j);
+        best = best.max(crate::util::math::gather_dot4(rows, vals, &ds.y).abs() / 2.0);
     }
-    grad.iter().map(|g| g.abs() / 2.0).fold(0.0, f64::max)
+    best
 }
 
 /// One Figure-1 point.

@@ -88,6 +88,72 @@ pub fn working_stats(y: f64, margin: f64) -> (f64, f64) {
     (w, z)
 }
 
+/// Σ_k vals[k] · dense[rows[k]] with four independent f64 accumulators (the
+/// SIMD-shaped gather-dot on a sparse column). The combine order
+/// `(s0 + s1) + (s2 + s3)` plus a sequential tail is FIXED: `lambda_max_local`
+/// on every engine and the leader-side `regpath::lambda_max` both call this
+/// helper, and their per-feature results are pinned bit-identical.
+#[inline]
+pub fn gather_dot4(rows: &[u32], vals: &[f32], dense: &[f32]) -> f64 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0f64, 0f64, 0f64, 0f64);
+    let chunks = rows.len() / 4;
+    for k in 0..chunks {
+        let b = 4 * k;
+        s0 += vals[b] as f64 * dense[rows[b] as usize] as f64;
+        s1 += vals[b + 1] as f64 * dense[rows[b + 1] as usize] as f64;
+        s2 += vals[b + 2] as f64 * dense[rows[b + 2] as usize] as f64;
+        s3 += vals[b + 3] as f64 * dense[rows[b + 3] as usize] as f64;
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for k in 4 * chunks..rows.len() {
+        acc += vals[k] as f64 * dense[rows[k] as usize] as f64;
+    }
+    acc
+}
+
+/// `gather_dot4` against an f64 gather source (the covariance kernel's
+/// precomputed `w·z` products). Same fixed combine order.
+#[inline]
+pub fn gather_dot4_f64(rows: &[u32], vals: &[f32], dense: &[f64]) -> f64 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0f64, 0f64, 0f64, 0f64);
+    let chunks = rows.len() / 4;
+    for k in 0..chunks {
+        let b = 4 * k;
+        s0 += vals[b] as f64 * dense[rows[b] as usize];
+        s1 += vals[b + 1] as f64 * dense[rows[b + 1] as usize];
+        s2 += vals[b + 2] as f64 * dense[rows[b + 2] as usize];
+        s3 += vals[b + 3] as f64 * dense[rows[b + 3] as usize];
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for k in 4 * chunks..rows.len() {
+        acc += vals[k] as f64 * dense[rows[k] as usize];
+    }
+    acc
+}
+
+/// Σ_k w[rows[k]] · vals[k]² — the weighted squared column norm `Σ w x²`
+/// behind every CD denominator, 4-way unrolled like [`gather_dot4`].
+#[inline]
+pub fn weighted_sq_norm4(rows: &[u32], vals: &[f32], w: &[f32]) -> f64 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0f64, 0f64, 0f64, 0f64);
+    let chunks = rows.len() / 4;
+    for k in 0..chunks {
+        let b = 4 * k;
+        let (x0, x1) = (vals[b] as f64, vals[b + 1] as f64);
+        let (x2, x3) = (vals[b + 2] as f64, vals[b + 3] as f64);
+        s0 += w[rows[b] as usize] as f64 * x0 * x0;
+        s1 += w[rows[b + 1] as usize] as f64 * x1 * x1;
+        s2 += w[rows[b + 2] as usize] as f64 * x2 * x2;
+        s3 += w[rows[b + 3] as usize] as f64 * x3 * x3;
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for k in 4 * chunks..rows.len() {
+        let x = vals[k] as f64;
+        acc += w[rows[k] as usize] as f64 * x * x;
+    }
+    acc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +201,40 @@ mod tests {
         let (w, z) = working_stats(1.0, 100.0);
         assert!(w >= 0.0 && w.is_finite());
         assert!(z.is_finite());
+    }
+
+    #[test]
+    fn unrolled_gather_dots_match_serial_to_fp_tolerance() {
+        // deterministic pseudo-random column (no external RNG in the crate)
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let n = 257usize; // odd tail exercises the remainder loop
+        let dense: Vec<f32> = (0..n).map(|_| (next() - 0.5) as f32).collect();
+        let dense64: Vec<f64> = dense.iter().map(|&v| v as f64).collect();
+        let rows: Vec<u32> = (0..n as u32).step_by(2).collect();
+        let vals: Vec<f32> = rows.iter().map(|_| (next() * 2.0 - 1.0) as f32).collect();
+        let serial: f64 =
+            rows.iter().zip(&vals).map(|(&i, &v)| v as f64 * dense[i as usize] as f64).sum();
+        assert!((gather_dot4(&rows, &vals, &dense) - serial).abs() < 1e-10);
+        assert!((gather_dot4_f64(&rows, &vals, &dense64) - serial).abs() < 1e-10);
+        let w: Vec<f32> = (0..n).map(|_| next() as f32 * 0.25).collect();
+        let serial_sq: f64 = rows
+            .iter()
+            .zip(&vals)
+            .map(|(&i, &v)| w[i as usize] as f64 * v as f64 * v as f64)
+            .sum();
+        assert!((weighted_sq_norm4(&rows, &vals, &w) - serial_sq).abs() < 1e-10);
+        // empty and sub-unroll-width inputs hit only the tail path
+        assert_eq!(gather_dot4(&[], &[], &dense), 0.0);
+        assert_eq!(
+            gather_dot4(&rows[..3], &vals[..3], &dense),
+            (0..3).map(|k| vals[k] as f64 * dense[rows[k] as usize] as f64).sum::<f64>()
+        );
     }
 
     #[test]

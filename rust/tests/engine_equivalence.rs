@@ -1,15 +1,24 @@
-//! XLA (AOT Pallas via PJRT) vs native (sparse rust) engine equivalence at
-//! the *full fit* level — the strongest cross-stack correctness signal: any
-//! divergence in kernel math, padding, tiling or residual threading shows
-//! up as a different optimization trajectory.
+//! Engine equivalence across the sweep-kernel matrix.
 //!
-//! These tests are skipped (with a message) when artifacts are missing.
+//! Three families:
+//! * **XLA vs native** full-fit equivalence (AOT Pallas via PJRT against the
+//!   sparse rust engine) — skipped with a message when artifacts are missing.
+//! * **Covariance vs naive kernel contracts** — the rust ports of
+//!   `python/tests/test_cov_kernel.py`: the Gram-cached sweep must be
+//!   numerically equivalent to the naive sweep (tolerance, not bitwise).
+//! * **Threaded sweep pins** — a `sweep_threads = T` worker must reproduce
+//!   the trajectory of T single-threaded machines *bit for bit* (the
+//!   deterministic pairwise-merge contract).
 
 mod common;
 
 use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::sparse::{CscMatrix, CsrMatrix};
 use dglmnet::data::synth;
+use dglmnet::engine::cov::{cd_block_sweep_cov, cd_block_sweep_naive};
 use dglmnet::solver::{lambda_max, DGlmnetSolver};
+use dglmnet::util::math::working_stats;
+use dglmnet::util::rng::Xoshiro256;
 
 fn artifacts_present() -> bool {
     // the XLA engine needs both the compiled feature and the AOT artifacts
@@ -119,4 +128,238 @@ fn xla_beta_trajectory_matches_native_first_iteration() {
             bx[j]
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Covariance-kernel contracts (ports of python/tests/test_cov_kernel.py)
+// ---------------------------------------------------------------------------
+
+/// Dense n×b block as a CSC matrix, entries drawn from `gen` (row-major
+/// fill, like the numpy generators in the python tests).
+fn dense_block(n: usize, b: usize, gen: &mut impl FnMut(usize, usize) -> f32) -> CscMatrix {
+    let mut m = CsrMatrix::new(b);
+    let mut row = Vec::with_capacity(b);
+    for i in 0..n {
+        row.clear();
+        for j in 0..b {
+            row.push((j as u32, gen(i, j)));
+        }
+        m.push_row(&row);
+    }
+    m.to_csc()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (k, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol + tol * x.abs(), "{what}[{k}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn cov_sweep_matches_naive_oracle_across_shapes_and_lambdas() {
+    for &(n, b) in &[(16usize, 4usize), (128, 16), (500, 64)] {
+        for &lam in &[0.0f32, 0.7, 5.0] {
+            let mut rng = Xoshiro256::new(0xC0F0 + n as u64 * 31 + lam.to_bits() as u64);
+            let nu = 1e-6f32;
+            let x = dense_block(n, b, &mut |_, _| rng.normal() as f32);
+            let margins: Vec<f32> = (0..n).map(|_| 0.5 * rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..n)
+                .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+                .collect();
+            let (mut w, mut z) = (Vec::with_capacity(n), Vec::with_capacity(n));
+            for i in 0..n {
+                let (wi, zi) = working_stats(y[i] as f64, margins[i] as f64);
+                w.push(wi as f32);
+                z.push(zi as f32);
+            }
+            let beta: Vec<f32> = (0..b)
+                .map(|_| {
+                    let v = rng.normal() as f32;
+                    if rng.uniform() < 0.5 { v } else { 0.0 }
+                })
+                .collect();
+            let zero = vec![0f32; b];
+            let (d_naive, r_naive) = cd_block_sweep_naive(&x, &w, &z, &beta, &zero, lam, nu);
+            let (d_cov, r_cov) = cd_block_sweep_cov(&x, &w, &z, &beta, &zero, lam, nu);
+            assert_close(&d_cov, &d_naive, 5e-3, "delta");
+            assert_close(&r_cov, &r_naive, 5e-3, "residual");
+        }
+    }
+}
+
+#[test]
+fn cov_and_naive_agree_on_a_random_block() {
+    let mut rng = Xoshiro256::new(9);
+    let (n, b) = (300usize, 32usize);
+    let x = dense_block(n, b, &mut |_, _| rng.normal() as f32);
+    let w: Vec<f32> = (0..n).map(|_| 0.25 * rng.uniform() as f32).collect();
+    let r: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let beta: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+    let zero = vec![0f32; b];
+    let (d1, r1) = cd_block_sweep_naive(&x, &w, &r, &beta, &zero, 0.3, 1e-6);
+    let (d2, r2) = cd_block_sweep_cov(&x, &w, &r, &beta, &zero, 0.3, 1e-6);
+    assert_close(&d2, &d1, 2e-3, "delta");
+    assert_close(&r2, &r1, 2e-3, "residual");
+}
+
+#[test]
+fn cov_sweep_nonzero_delta_in_carries() {
+    // delta_in != 0 (multi-cycle contract) must be honored identically
+    let mut rng = Xoshiro256::new(11);
+    let (n, b) = (200usize, 8usize);
+    let x = dense_block(n, b, &mut |_, _| rng.normal() as f32);
+    let w = vec![0.25f32; n];
+    let beta: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+    let delta_in: Vec<f32> = (0..b).map(|_| 0.1 * rng.normal() as f32).collect();
+    // r consistent with delta_in: r = z - X @ delta_in
+    let z: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut r: Vec<f64> = z.iter().map(|&v| v as f64).collect();
+    for j in 0..b {
+        let (rows, vals) = x.col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            r[i as usize] -= delta_in[j] as f64 * v as f64;
+        }
+    }
+    let r: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+    let (d1, r1) = cd_block_sweep_naive(&x, &w, &r, &beta, &delta_in, 0.2, 1e-6);
+    let (d2, r2) = cd_block_sweep_cov(&x, &w, &r, &beta, &delta_in, 0.2, 1e-6);
+    assert_close(&d2, &d1, 2e-3, "delta");
+    assert_close(&r2, &r1, 2e-3, "residual");
+}
+
+#[test]
+fn cov_zero_columns_stay_zero() {
+    let mut rng = Xoshiro256::new(12);
+    let (n, b) = (64usize, 16usize);
+    // columns 10.. are identically zero (push_row drops exact zeros, so
+    // they become genuinely empty CSC columns)
+    let x = dense_block(n, b, &mut |_, j| if j >= 10 { 0.0 } else { rng.normal() as f32 });
+    let w = vec![0.25f32; n];
+    let r: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let zero = vec![0f32; b];
+    let (d, _) = cd_block_sweep_cov(&x, &w, &r, &zero, &zero, 0.1, 1e-6);
+    for j in 10..b {
+        assert_eq!(d[j], 0.0, "zero column {j} moved");
+    }
+    let (dn, _) = cd_block_sweep_naive(&x, &w, &r, &zero, &zero, 0.1, 1e-6);
+    for j in 10..b {
+        assert_eq!(dn[j], 0.0, "zero column {j} moved (naive)");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded-sweep pins: T sweep threads ≡ T machines, bit for bit
+// ---------------------------------------------------------------------------
+
+fn fit_bits(
+    ds: &dglmnet::data::Dataset,
+    machines: usize,
+    threads: usize,
+    naive: bool,
+    lam: f64,
+) -> (Vec<u64>, Vec<u32>) {
+    let cfg = TrainConfig::builder()
+        .machines(machines)
+        .sweep_threads(threads)
+        .naive_sweep(naive)
+        .engine(EngineKind::Native)
+        .lambda(lam)
+        .max_iter(12)
+        .build();
+    let mut s = DGlmnetSolver::from_dataset(ds, &cfg).unwrap();
+    let fit = s.fit(None).unwrap();
+    (
+        fit.trace.iter().map(|r| r.objective.to_bits()).collect(),
+        s.beta.iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+#[test]
+fn threaded_sweep_reproduces_the_machine_partition_trajectory_bitwise() {
+    // The tentpole pin: a worker sweeping its shard on T threads must be
+    // indistinguishable — objective trace AND final β, to the bit — from T
+    // single-threaded machines under the matching sub-partition, for both
+    // kernels. Exercises the per-block leaf emission, the pairwise Δm
+    // merge mirroring the AllReduce tree, and the k-way Δβ merge.
+    let cases = [
+        ("dna-like", synth::dna_like(600, 120, 6, 31)),
+        ("webspam-like", synth::webspam_like(400, 500, 12, 33)),
+    ];
+    for (name, ds) in &cases {
+        let lam = lambda_max(ds) / 4.0;
+        for naive in [true, false] {
+            for t in [2usize, 4] {
+                let threaded = fit_bits(ds, 1, t, naive, lam);
+                let machines = fit_bits(ds, t, 1, naive, lam);
+                assert_eq!(
+                    threaded, machines,
+                    "{name}: T={t} threaded run diverged from {t}-machine run (naive={naive})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_sweep_pin_holds_under_nnz_balanced_partition() {
+    // the sub-partition strategy follows the machine partition strategy —
+    // pin the nnz-balanced variant too (different block shapes entirely)
+    let ds = synth::webspam_like(300, 400, 10, 47);
+    let lam = lambda_max(&ds) / 4.0;
+    let mk = |machines: usize, threads: usize| {
+        let cfg = TrainConfig::builder()
+            .machines(machines)
+            .sweep_threads(threads)
+            .partition(dglmnet::cluster::partition::PartitionStrategy::NnzBalanced)
+            .engine(EngineKind::Native)
+            .lambda(lam)
+            .max_iter(10)
+            .build();
+        let mut s = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let fit = s.fit(None).unwrap();
+        let bits: Vec<u64> = fit.trace.iter().map(|r| r.objective.to_bits()).collect();
+        (bits, s.beta.iter().map(|v| v.to_bits()).collect::<Vec<u32>>())
+    };
+    assert_eq!(mk(1, 3), mk(3, 1));
+}
+
+#[test]
+fn sweep_threads_validation_rejects_over_wide_requests() {
+    // 4 machines × 30 features → narrowest shard has 7 columns; asking for
+    // 20 sweep threads must fail fast with the actionable message
+    let ds = synth::dna_like(100, 30, 4, 5);
+    let cfg = TrainConfig::builder()
+        .machines(4)
+        .sweep_threads(20)
+        .engine(EngineKind::Native)
+        .lambda(0.5)
+        .build();
+    let err = match DGlmnetSolver::from_dataset(&ds, &cfg) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected sweep_threads validation to fail"),
+    };
+    assert!(err.contains("sweep_threads"), "unexpected error: {err}");
+    assert!(err.contains("0 = auto"), "unexpected error: {err}");
+    // 0 = auto always passes validation (it clamps instead)
+    let auto = TrainConfig::builder()
+        .machines(4)
+        .sweep_threads(0)
+        .engine(EngineKind::Native)
+        .lambda(0.5)
+        .build();
+    DGlmnetSolver::from_dataset(&ds, &auto).unwrap();
+}
+
+#[test]
+fn threaded_sweeps_are_deterministic_across_repeats() {
+    // same engine, same inputs, three runs: the scoped-thread execution
+    // must not introduce any run-to-run wobble
+    let ds = synth::webspam_like(250, 300, 8, 21);
+    let lam = lambda_max(&ds) / 4.0;
+    let a = fit_bits(&ds, 1, 4, false, lam);
+    let b = fit_bits(&ds, 1, 4, false, lam);
+    let c = fit_bits(&ds, 1, 4, false, lam);
+    assert_eq!(a, b);
+    assert_eq!(b, c);
 }

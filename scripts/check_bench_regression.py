@@ -15,7 +15,10 @@ Fails (exit 1) when:
     actually picked — plus the `auto_` path itself — is gated; the
     non-chosen strategy's bytes are informational, or
   * any `*peak_rss_bytes` counter grows by more than MAX_RSS_REGRESSION
-    (25%) — the leader-memory canary of the out-of-core data plane.
+    (25%) — the leader-memory canary of the out-of-core data plane, or
+  * any `*_speedup_x` ratio (the sweep-kernel ablation in
+    BENCH_ablation.json) erodes by more than MAX_SPEEDUP_EROSION (25%)
+    relative to the baseline — a kernel win must not quietly rot.
 
 Bootstrap mode: when BASELINE does not exist yet, prints instructions and
 exits 0 — commit the fresh file as the baseline to arm the gate.
@@ -32,6 +35,9 @@ MAX_TAIL_REGRESSION = 0.50
 MAX_RSS_REGRESSION = 0.25
 # timings below this are noise-dominated on shared CI runners
 MIN_COMPARABLE_SECS = 50e-6
+# speedup ratios (cov vs naive, threaded vs serial) may shrink this much
+# before the gate trips — they are ratios of two noisy medians
+MAX_SPEEDUP_EROSION = 0.25
 
 
 def load(path):
@@ -97,6 +103,19 @@ def main():
                             f"holding X again?)")
                     else:
                         print(f"  [ok]     {name}.{key}: {cval:.0f} vs {bval:.0f} bytes")
+                    continue
+                if key.endswith("_speedup_x"):
+                    cval = cur.get(key)
+                    if cval is None or bval <= 0:
+                        continue
+                    compared += 1
+                    if cval < bval * (1 - MAX_SPEEDUP_EROSION):
+                        failures.append(
+                            f"{name}.{key}: {cval:.2f}x vs baseline {bval:.2f}x "
+                            f"({(1 - cval / bval) * 100:.1f}% erosion > "
+                            f"{MAX_SPEEDUP_EROSION * 100:.0f}%)")
+                    else:
+                        print(f"  [ok]     {name}.{key}: {cval:.2f}x vs {bval:.2f}x")
                     continue
                 if not key.endswith("comm_bytes"):
                     continue
