@@ -12,6 +12,10 @@
 //!                 one worker shard; emits `BENCH_ablation.json` with
 //!                 per-sweep ns and speedup ratios so the CI regression
 //!                 gate can watch the kernel win across PRs.
+//! * `families`   — per-sweep cost of the GLM families (working stats +
+//!                 sweep) at elastic-net α ∈ {1.0, 0.5}; same shard
+//!                 geometry as `kernels`, merged into `BENCH_ablation.json`
+//!                 for the same regression gate.
 //!
 //! Run: `cargo bench --bench bench_ablation [-- <name>]` (default: all)
 
@@ -24,10 +28,39 @@ use dglmnet::config::{EngineKind, LineSearchConfig, TrainConfig};
 use dglmnet::data::shuffle::{shard_in_memory, shuffle_to_feature_shards};
 use dglmnet::data::synth;
 use dglmnet::engine::{NativeEngine, SubproblemEngine, SweepKernel, SweepResult};
+use dglmnet::family::FamilyKind;
 use dglmnet::report::Table;
 use dglmnet::solver::quadratic::stats_native;
 use dglmnet::solver::{lambda_max, DGlmnetSolver};
 use dglmnet::util::json::Json;
+
+/// Merge `results` in as one named section of `BENCH_ablation.json`,
+/// preserving every other section a previous bench invocation wrote (the
+/// kernels and families ablations run independently — a plain overwrite
+/// would drop whichever ran first).
+fn write_bench_section(section_name: &str, results: BTreeMap<String, Json>) {
+    let path = "BENCH_ablation.json";
+    let mut sections = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| dglmnet::util::json::parse(&text).ok())
+        .and_then(|doc| match doc {
+            Json::Obj(mut top) => match top.remove("results") {
+                Some(Json::Obj(s)) => Some(s),
+                _ => None,
+            },
+            _ => None,
+        })
+        .unwrap_or_default();
+    sections.insert(section_name.to_string(), Json::Obj(results));
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("bench_ablation".into()));
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("results".to_string(), Json::Obj(sections));
+    match std::fs::write(path, format!("{}\n", Json::Obj(top))) {
+        Ok(()) => println!("\nwrote {path} ({section_name} section)"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
 
 fn ablation_shotgun() {
     section("A1: shotgun update conflicts (correlated features)");
@@ -241,7 +274,7 @@ fn ablation_kernels() {
         let mut ne = NativeEngine::with_kernel(shard.clone(), n, kernel);
         let mut out = SweepResult::default();
         let s = bench(label, 2, 12, || {
-            ne.sweep(&w, &z, &beta, lam, 1e-6, &mut out).unwrap();
+            ne.sweep(&w, &z, &beta, lam, 1e-6, 0.0, &mut out).unwrap();
         });
         if key == "naive_t1" {
             naive_median = s.median;
@@ -260,18 +293,54 @@ fn ablation_kernels() {
         }
     }
     t.print();
+    write_bench_section("kernels", results);
+}
 
-    let mut top = BTreeMap::new();
-    top.insert("bench".to_string(), Json::Str("bench_ablation".into()));
-    top.insert("version".to_string(), Json::Num(1.0));
-    let mut sections = BTreeMap::new();
-    sections.insert("kernels".to_string(), Json::Obj(results));
-    top.insert("results".to_string(), Json::Obj(sections));
-    let path = "BENCH_ablation.json";
-    match std::fs::write(path, format!("{}\n", Json::Obj(top))) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+fn ablation_families() {
+    section("families: per-sweep cost of the GLM working stats + elastic net");
+    // the kernels-ablation shard geometry so the numbers are comparable;
+    // labels remapped per family (poisson wants non-negative counts)
+    let ds = synth::webspam_like(3_000, 4_000, 40, 7);
+    let n = ds.n_examples();
+    let part = FeaturePartition::build(PartitionStrategy::RoundRobin, 4_000, 4, None);
+    let shard = shard_in_memory(&ds.x, &part).remove(0);
+    let lam = lambda_max(&ds) / 4.0;
+    let margins = vec![0f32; n];
+    let beta = vec![0f32; shard.csc.n_cols];
+
+    let mut t = Table::new("", &["family", "alpha", "per-sweep ms (stats + sweep)"]);
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    for fam_kind in [FamilyKind::Logistic, FamilyKind::Gaussian, FamilyKind::Poisson] {
+        let fam = fam_kind.family();
+        let y: Vec<f32> = match fam_kind {
+            FamilyKind::Poisson => ds.y.iter().map(|&v| (v + 1.0) / 2.0).collect(),
+            _ => ds.y.clone(),
+        };
+        let (mut w, mut z) = (Vec::new(), Vec::new());
+        for alpha in [1.0f64, 0.5] {
+            let lam1 = (lam * alpha) as f32;
+            let l2 = (lam * (1.0 - alpha)) as f32;
+            let mut ne = NativeEngine::new(shard.clone(), n);
+            let mut out = SweepResult::default();
+            let s = bench(&format!("{} alpha={alpha}", fam_kind.name()), 2, 12, || {
+                fam.working_stats_into(&margins, &y, &mut w, &mut z);
+                ne.sweep(&w, &z, &beta, lam1, 1e-6, l2, &mut out).unwrap();
+            });
+            t.add_row(vec![
+                fam_kind.name().to_string(),
+                format!("{alpha}"),
+                format!("{:.3}", s.median * 1e3),
+            ]);
+            let mut entry = BTreeMap::new();
+            entry.insert("median_secs".to_string(), Json::Num(s.median));
+            results.insert(
+                format!("{}_a{:03}", fam_kind.name(), (alpha * 100.0) as u32),
+                Json::Obj(entry),
+            );
+        }
     }
+    t.print();
+    write_bench_section("families", results);
 }
 
 fn main() {
@@ -298,5 +367,8 @@ fn main() {
     }
     if want("kernels") {
         ablation_kernels();
+    }
+    if want("families") {
+        ablation_families();
     }
 }

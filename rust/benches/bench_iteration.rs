@@ -64,7 +64,7 @@ fn main() {
         let mut ne = NativeEngine::new(shard.clone(), n);
         let mut out = SweepResult::default();
         let s = bench("native sparse sweep (reused buffers)", 2, 10, || {
-            ne.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
+            ne.sweep(&w, &z, &beta, 0.5, 1e-6, 0.0, &mut out).unwrap();
         });
         let (k, v) = record("native_sweep_sparse_shard", &s);
         report.insert(k, v);
@@ -91,7 +91,7 @@ fn main() {
         let mut ne = NativeEngine::with_kernel(shard.clone(), n, kernel);
         let mut out = SweepResult::default();
         let s = bench(label, 2, 10, || {
-            ne.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
+            ne.sweep(&w, &z, &beta, 0.5, 1e-6, 0.0, &mut out).unwrap();
         });
         let (k, v) = record(key, &s);
         report.insert(k, v);
@@ -101,19 +101,19 @@ fn main() {
         let mut naive = XlaEngine::with_kernel(shard.clone(), n, 64, artifacts, true).unwrap();
         let mut out = SweepResult::default();
         let s = bench("xla naive sweep (b=64, per-column)", 2, 10, || {
-            naive.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
+            naive.sweep(&w, &z, &beta, 0.5, 1e-6, 0.0, &mut out).unwrap();
         });
         let (k, v) = record("xla_sweep_naive_b64", &s);
         report.insert(k, v);
         let mut xe = XlaEngine::new(shard.clone(), n, 64, artifacts).unwrap();
         let s = bench("xla cov sweep (b=64, optimized)", 2, 10, || {
-            xe.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
+            xe.sweep(&w, &z, &beta, 0.5, 1e-6, 0.0, &mut out).unwrap();
         });
         let (k, v) = record("xla_sweep_cov_b64", &s);
         report.insert(k, v);
         let mut xe128 = XlaEngine::new(shard.clone(), n, 128, artifacts).unwrap();
         let s = bench("xla cov sweep (b=128, optimized)", 2, 10, || {
-            xe128.sweep(&w, &z, &beta, 0.5, 1e-6, &mut out).unwrap();
+            xe128.sweep(&w, &z, &beta, 0.5, 1e-6, 0.0, &mut out).unwrap();
         });
         let (k, v) = record("xla_sweep_cov_b128", &s);
         report.insert(k, v);
@@ -130,7 +130,7 @@ fn main() {
         let mut ne = NativeEngine::new(dshard.clone(), 3_000);
         let mut out = SweepResult::default();
         let s = bench("native sparse sweep (dense data)", 2, 10, || {
-            ne.sweep(&dw, &dz, &dbeta, 0.5, 1e-6, &mut out).unwrap();
+            ne.sweep(&dw, &dz, &dbeta, 0.5, 1e-6, 0.0, &mut out).unwrap();
         });
         let (k, v) = record("native_sweep_dense_shard", &s);
         report.insert(k, v);
@@ -138,7 +138,7 @@ fn main() {
         if have_artifacts {
             let mut xe = XlaEngine::new(dshard.clone(), 3_000, 64, artifacts).unwrap();
             let s = bench("xla cov sweep (dense data)", 2, 10, || {
-                xe.sweep(&dw, &dz, &dbeta, 0.5, 1e-6, &mut out).unwrap();
+                xe.sweep(&dw, &dz, &dbeta, 0.5, 1e-6, 0.0, &mut out).unwrap();
             });
             let (k, v) = record("xla_sweep_dense_shard", &s);
             report.insert(k, v);
@@ -242,7 +242,7 @@ fn main() {
         .unwrap();
         let mut results = Vec::new();
         let s = bench("pool.sweep_all (4 workers, worker-held state)", 2, 10, || {
-            pool.sweep_all(0.5, 1e-6, &mut results).unwrap();
+            pool.sweep_all(0.5, 1e-6, 0.0, &mut results).unwrap();
         });
         let (k, v) = record("pool_sweep_all_m4", &s);
         report.insert(k, v);

@@ -168,6 +168,9 @@ impl ShotgunEstimator {
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             lambda: self.lambda,
+            // the shotgun baseline is logistic pure-L1 only
+            family: crate::family::FamilyKind::Logistic,
+            enet_alpha: 1.0,
             n: self.margins.len(),
             p: self.beta.len(),
             iter: self.completed_rounds,

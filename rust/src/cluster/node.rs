@@ -39,7 +39,7 @@ use crate::data::sparse::SparseVec;
 use crate::data::store::ShardStore;
 use crate::engine::{build_engine, SubproblemEngine};
 use crate::error::{DlrError, Result};
-use crate::solver::quadratic::stats_native_into;
+use crate::family::FamilyKind;
 
 /// One worker machine as a protocol endpoint.
 pub struct WorkerNode {
@@ -58,9 +58,14 @@ pub struct WorkerNode {
     /// Δβ of the most recent sweep — what an `Apply` without an explicit
     /// merged Δβ scales into `beta_local`.
     last_delta: SparseVec,
+    /// GLM family the node derives its working statistics under — must
+    /// match the leader's (validated at handshake).
+    family: FamilyKind,
     /// Working-statistics scratch (cleared and refilled each sweep).
     w: Vec<f32>,
     z: Vec<f32>,
+    /// λ_max target scratch (families whose targets aren't `y` itself).
+    lm_scratch: Vec<f32>,
 }
 
 impl WorkerNode {
@@ -89,8 +94,10 @@ impl WorkerNode {
             beta_local: vec![0f32; local_p],
             margins: vec![0f32; n],
             last_delta: SparseVec::new(local_p),
+            family: cfg.family,
             w: Vec::new(),
             z: Vec::new(),
+            lm_scratch: Vec::new(),
         })
     }
 
@@ -128,6 +135,7 @@ impl WorkerNode {
             local_features: self.global_cols.len() as u32,
             cols_checksum: crc_u32(&self.global_cols),
             engine: self.engine.name().to_string(),
+            family: self.family.name().to_string(),
         }
     }
 
@@ -135,13 +143,18 @@ impl WorkerNode {
     /// exits cleanly).
     pub fn handle(&mut self, msg: NodeMessage) -> Result<Option<NodeMessage>> {
         match msg {
-            NodeMessage::Sweep { lam, nu, mut recycle } => {
+            NodeMessage::Sweep { lam, nu, l2, mut recycle } => {
                 // stats from the worker-held margins — no leader broadcast
                 let t0 = Instant::now();
-                stats_native_into(&self.margins, &self.y, &mut self.w, &mut self.z);
+                self.family.family().working_stats_into(
+                    &self.margins,
+                    &self.y,
+                    &mut self.w,
+                    &mut self.z,
+                );
                 let stats_secs = t0.elapsed().as_secs_f64();
                 self.engine
-                    .sweep(&self.w, &self.z, &self.beta_local, lam, nu, &mut recycle)?;
+                    .sweep(&self.w, &self.z, &self.beta_local, lam, nu, l2, &mut recycle)?;
                 recycle.compute_secs += stats_secs;
                 // remember Δβ_local for the upcoming Apply
                 self.last_delta.clear(recycle.delta_local.dim);
@@ -207,9 +220,13 @@ impl WorkerNode {
                 beta_local: self.beta_local.clone(),
                 margins_crc: crc_f32(&self.margins),
             })),
-            NodeMessage::LambdaMax => Ok(Some(NodeMessage::LambdaMaxed {
-                value: self.engine.lambda_max_local(&self.y)?,
-            })),
+            NodeMessage::LambdaMax => {
+                let fam = self.family.family();
+                let targets = fam.lambda_max_targets(&self.y, &mut self.lm_scratch);
+                Ok(Some(NodeMessage::LambdaMaxed {
+                    value: self.engine.lambda_max_local(targets, fam.lambda_max_scale())?,
+                }))
+            }
             NodeMessage::Margins { beta_local } => {
                 if beta_local.len() != self.beta_local.len() {
                     return Err(DlrError::Solver(format!(
@@ -240,7 +257,19 @@ impl WorkerNode {
     pub fn serve(&mut self, transport: &mut dyn Transport) -> Result<()> {
         transport.send(self.join_message())?;
         match transport.recv()? {
-            NodeMessage::Welcome => {}
+            NodeMessage::Welcome { family, .. } => {
+                // defense in depth: the leader validates the Join's family
+                // and only welcomes a match, but a worker must never sweep
+                // under the wrong loss even against a buggy leader
+                if family != self.family.name() {
+                    return Err(DlrError::Solver(format!(
+                        "leader runs family '{family}' but worker {} was started \
+                         with '{}' (pass the matching --family to the worker)",
+                        self.machine,
+                        self.family.name()
+                    )));
+                }
+            }
             NodeMessage::Abort { message } => {
                 return Err(DlrError::Solver(format!(
                     "leader rejected worker {}: {message}",
@@ -301,7 +330,12 @@ mod tests {
     fn sweep_apply_keeps_shard_state_consistent() {
         let (mut node, _ds) = node_for(0, 2);
         let reply = node
-            .handle(NodeMessage::Sweep { lam: 0.05, nu: 1e-6, recycle: Default::default() })
+            .handle(NodeMessage::Sweep {
+                lam: 0.05,
+                nu: 1e-6,
+                l2: 0.0,
+                recycle: Default::default(),
+            })
             .unwrap()
             .unwrap();
         let result = match reply {
@@ -339,8 +373,13 @@ mod tests {
         let (mut node, _ds) = node_for(1, 3); // owns global cols 1, 4, 7, ...
         // run one sweep so last_delta is non-empty — the explicit path must
         // ignore it and use the provided merged Δβ instead
-        node.handle(NodeMessage::Sweep { lam: 0.5, nu: 1e-6, recycle: Default::default() })
-            .unwrap();
+        node.handle(NodeMessage::Sweep {
+            lam: 0.5,
+            nu: 1e-6,
+            l2: 0.0,
+            recycle: Default::default(),
+        })
+        .unwrap();
         let mut merged = SparseVec::new(24);
         merged.push(0, 10.0); // not owned
         merged.push(1, 2.0); // owned (local 0)
@@ -402,7 +441,9 @@ mod tests {
     #[test]
     fn unexpected_messages_error() {
         let (mut node, _ds) = node_for(0, 2);
-        assert!(node.handle(NodeMessage::Welcome).is_err());
+        assert!(node
+            .handle(NodeMessage::Welcome { family: "logistic".into(), alpha: 1.0 })
+            .is_err());
         assert!(node.handle(NodeMessage::Ack).is_err());
         assert!(matches!(node.handle(NodeMessage::Shutdown), Ok(None)));
     }
@@ -429,7 +470,15 @@ mod tests {
     fn join_message_carries_shard_identity() {
         let (node, _ds) = node_for(1, 2);
         match node.join_message() {
-            NodeMessage::Join { machine, n, p, local_features, cols_checksum, engine } => {
+            NodeMessage::Join {
+                machine,
+                n,
+                p,
+                local_features,
+                cols_checksum,
+                engine,
+                family,
+            } => {
                 assert_eq!(machine, 1);
                 assert_eq!(n, 120);
                 assert_eq!(p, 24);
@@ -437,6 +486,7 @@ mod tests {
                 let cols: Vec<u32> = (0..24u32).filter(|c| c % 2 == 1).collect();
                 assert_eq!(cols_checksum, crc_u32(&cols));
                 assert_eq!(engine, "native");
+                assert_eq!(family, "logistic");
             }
             other => panic!("expected join, got {}", other.name()),
         }

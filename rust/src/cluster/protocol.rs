@@ -65,8 +65,10 @@ const TAG_PONG: u8 = 17;
 #[derive(Debug)]
 pub enum NodeMessage {
     /// worker → leader: handshake. The leader validates the shard identity
-    /// (machine index, dataset shape, owned-column checksum) before
-    /// admitting the node.
+    /// (machine index, dataset shape, owned-column checksum) and the GLM
+    /// family the worker was configured with before admitting the node — a
+    /// worker deriving (w, z) under a different family would silently
+    /// corrupt the optimization.
     Join {
         machine: u32,
         n: u32,
@@ -74,15 +76,22 @@ pub enum NodeMessage {
         local_features: u32,
         cols_checksum: u64,
         engine: String,
+        family: String,
     },
-    /// leader → worker: handshake accepted.
-    Welcome,
+    /// leader → worker: handshake accepted. Carries the run's GLM family
+    /// and elastic-net α so a socket worker can double-check its own
+    /// configuration against the leader's (the in-process pool constructs
+    /// workers from the same `TrainConfig`, so its nodes skip the check).
+    Welcome { family: String, alpha: f64 },
     /// leader → worker: run one CD sweep over the worker-held shard state.
-    /// `recycle` is an owned-buffer recycling slot for the in-process
-    /// transport (the previous iteration's [`SweepResult`] buffers round
-    /// trip so steady-state sweeps allocate nothing); it is *not* encoded
-    /// on the wire — a socket worker fills a fresh default.
-    Sweep { lam: f32, nu: f32, recycle: SweepResult },
+    /// `lam` is the soft-threshold (L1) strength λ·α and `l2` the ridge
+    /// strength λ·(1−α) added to each coordinate's denominator (0 under the
+    /// default pure-L1 configuration). `recycle` is an owned-buffer
+    /// recycling slot for the in-process transport (the previous
+    /// iteration's [`SweepResult`] buffers round trip so steady-state
+    /// sweeps allocate nothing); it is *not* encoded on the wire — a socket
+    /// worker fills a fresh default.
+    Sweep { lam: f32, nu: f32, l2: f32, recycle: SweepResult },
     /// worker → leader: the sweep's sparse Δβ (shard-local ids) and Δm.
     Swept { result: SweepResult },
     /// leader → worker: line search picked `alpha`; apply `α·Δβ_local` to
@@ -110,7 +119,9 @@ pub enum NodeMessage {
     /// checkpoint.
     State { beta_local: Vec<f32>, margins_crc: u64 },
     /// leader → worker: report this shard's λ_max contribution
-    /// `max_j |Σ_i x_ij y_i| / 2` over its own features — part of the
+    /// `max_j |Σ_i x_ij t_i| · scale` over its own features (targets `t`
+    /// and `scale` come from the node's GLM family; logistic: `t = y`,
+    /// `scale = 1/2`) — part of the
     /// distributed reduce that lets an out-of-core leader find λ_max
     /// without ever holding X (each per-feature f64 sum is bit-identical
     /// to the in-memory scan; the max over disjoint shards is exact).
@@ -309,7 +320,7 @@ impl NodeMessage {
     pub fn name(&self) -> &'static str {
         match self {
             NodeMessage::Join { .. } => "join",
-            NodeMessage::Welcome => "welcome",
+            NodeMessage::Welcome { .. } => "welcome",
             NodeMessage::Sweep { .. } => "sweep",
             NodeMessage::Swept { .. } => "swept",
             NodeMessage::Apply { .. } => "apply",
@@ -333,7 +344,15 @@ impl NodeMessage {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
-            NodeMessage::Join { machine, n, p, local_features, cols_checksum, engine } => {
+            NodeMessage::Join {
+                machine,
+                n,
+                p,
+                local_features,
+                cols_checksum,
+                engine,
+                family,
+            } => {
                 out.push(TAG_JOIN);
                 put_u32(&mut out, *machine);
                 put_u32(&mut out, *n);
@@ -341,13 +360,19 @@ impl NodeMessage {
                 put_u32(&mut out, *local_features);
                 put_u64(&mut out, *cols_checksum);
                 put_str(&mut out, engine);
+                put_str(&mut out, family);
             }
-            NodeMessage::Welcome => out.push(TAG_WELCOME),
-            NodeMessage::Sweep { lam, nu, recycle: _ } => {
+            NodeMessage::Welcome { family, alpha } => {
+                out.push(TAG_WELCOME);
+                put_str(&mut out, family);
+                put_f64(&mut out, *alpha);
+            }
+            NodeMessage::Sweep { lam, nu, l2, recycle: _ } => {
                 // `recycle` is a buffer-recycling slot, not wire state
                 out.push(TAG_SWEEP);
                 put_f32(&mut out, *lam);
                 put_f32(&mut out, *nu);
+                put_f32(&mut out, *l2);
             }
             NodeMessage::Swept { result } => {
                 out.push(TAG_SWEPT);
@@ -417,11 +442,16 @@ impl NodeMessage {
                 local_features: get_u32(bytes, &mut pos)?,
                 cols_checksum: get_u64(bytes, &mut pos)?,
                 engine: get_str(bytes, &mut pos)?,
+                family: get_str(bytes, &mut pos)?,
             },
-            TAG_WELCOME => NodeMessage::Welcome,
+            TAG_WELCOME => NodeMessage::Welcome {
+                family: get_str(bytes, &mut pos)?,
+                alpha: get_f64(bytes, &mut pos)?,
+            },
             TAG_SWEEP => NodeMessage::Sweep {
                 lam: get_f32(bytes, &mut pos)?,
                 nu: get_f32(bytes, &mut pos)?,
+                l2: get_f32(bytes, &mut pos)?,
                 recycle: SweepResult::default(),
             },
             TAG_SWEPT => {
@@ -506,9 +536,15 @@ mod tests {
                 local_features: 10,
                 cols_checksum: 0xDEAD_BEEF,
                 engine: "native".into(),
+                family: "logistic".into(),
             },
-            NodeMessage::Welcome,
-            NodeMessage::Sweep { lam: 0.5, nu: 1e-6, recycle: SweepResult::default() },
+            NodeMessage::Welcome { family: "poisson".into(), alpha: 0.5 },
+            NodeMessage::Sweep {
+                lam: 0.5,
+                nu: 1e-6,
+                l2: 0.25,
+                recycle: SweepResult::default(),
+            },
             NodeMessage::Swept { result },
             NodeMessage::Apply {
                 alpha: 0.75,
@@ -578,11 +614,27 @@ mod tests {
                     assert_eq!(ac, bc);
                 }
                 (
-                    NodeMessage::Join { cols_checksum: a, engine: ae, .. },
-                    NodeMessage::Join { cols_checksum: b, engine: be, .. },
+                    NodeMessage::Join { cols_checksum: a, engine: ae, family: af, .. },
+                    NodeMessage::Join { cols_checksum: b, engine: be, family: bf, .. },
                 ) => {
                     assert_eq!(a, b);
                     assert_eq!(ae, be);
+                    assert_eq!(af, bf);
+                }
+                (
+                    NodeMessage::Welcome { family: af, alpha: aa },
+                    NodeMessage::Welcome { family: bf, alpha: ba },
+                ) => {
+                    assert_eq!(af, bf);
+                    assert_eq!(aa.to_bits(), ba.to_bits());
+                }
+                (
+                    NodeMessage::Sweep { lam: al, nu: an, l2: a2, .. },
+                    NodeMessage::Sweep { lam: bl, nu: bn, l2: b2, .. },
+                ) => {
+                    assert_eq!(al.to_bits(), bl.to_bits());
+                    assert_eq!(an.to_bits(), bn.to_bits());
+                    assert_eq!(a2.to_bits(), b2.to_bits());
                 }
                 (
                     NodeMessage::LambdaMaxed { value: a },

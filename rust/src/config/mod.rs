@@ -8,6 +8,7 @@ use std::path::Path;
 use crate::cluster::network::NetworkModel;
 use crate::cluster::partition::PartitionStrategy;
 use crate::error::{DlrError, Result};
+use crate::family::FamilyKind;
 use toml::TomlDoc;
 
 /// Which subproblem engine workers run (DESIGN.md §3).
@@ -158,6 +159,17 @@ impl FitBudget {
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub lambda: f64,
+    /// GLM loss family (`[train] family` / `--family`): `logistic` (the
+    /// default, bit-identical to the historical hardcoded path), `gaussian`
+    /// (least squares) or `poisson` (log-link counts). Flows through the
+    /// worker handshake, checkpoints and model artifacts.
+    pub family: FamilyKind,
+    /// Elastic-net mixing `α ∈ (0, 1]` (`[train] alpha` / `--alpha`): the
+    /// penalty is `λ(α‖β‖₁ + (1−α)/2·‖β‖₂²)`. `1.0` (the default) is pure
+    /// L1 — the paper's problem, bit-identical to the pre-knob code. Named
+    /// `enet_alpha` in code because `alpha` already names the line-search
+    /// step size.
+    pub enet_alpha: f64,
     /// Ridge term nu added to the block-diagonal Hessian (paper: 1e-6).
     pub nu: f64,
     pub max_iter: usize,
@@ -251,6 +263,8 @@ impl Default for TrainConfig {
     fn default() -> Self {
         Self {
             lambda: 1.0,
+            family: FamilyKind::Logistic,
+            enet_alpha: 1.0,
             nu: 1e-6,
             max_iter: 100,
             tol: 1e-5,
@@ -289,6 +303,26 @@ impl TrainConfig {
     pub fn validate(&self) -> Result<()> {
         if self.lambda < 0.0 {
             return Err(DlrError::Config("lambda must be >= 0".into()));
+        }
+        if !self.enet_alpha.is_finite() || self.enet_alpha <= 0.0 || self.enet_alpha > 1.0 {
+            return Err(DlrError::Config(format!(
+                "[train] alpha = {} is outside (0, 1]: alpha mixes the elastic-net \
+                 penalty λ(α‖β‖₁ + (1−α)/2·‖β‖₂²) — use 1.0 for pure L1 (the default) \
+                 or a smaller positive value to blend in ridge (pure ridge α = 0 is \
+                 not supported: λ_max = λ_max(L1)/α diverges)",
+                self.enet_alpha
+            )));
+        }
+        if self.engine == EngineKind::Xla
+            && (self.family != FamilyKind::Logistic || self.enet_alpha < 1.0)
+        {
+            return Err(DlrError::Config(format!(
+                "engine = xla compiles logistic-only pure-L1 AOT kernels, but family = {} \
+                 with alpha = {} was requested — use engine = native (or auto, which \
+                 resolves to native for non-default families)",
+                self.family.name(),
+                self.enet_alpha
+            )));
         }
         if self.nu <= 0.0 {
             return Err(DlrError::Config(
@@ -432,6 +466,14 @@ impl TrainConfig {
             cfg.engine = EngineKind::parse(s)
                 .ok_or_else(|| DlrError::Config(format!("unknown engine '{s}'")))?;
         }
+        if let Some(s) = doc.get("train", "family").and_then(|v| v.as_str()) {
+            cfg.family = FamilyKind::parse_or_err(s)?;
+        }
+        if let Some(v) = doc.get("train", "alpha") {
+            cfg.enet_alpha = v.as_f64().ok_or_else(|| {
+                DlrError::Config("train.alpha must be a number in (0, 1]".into())
+            })?;
+        }
         if let Some(v) = doc.get("engine", "sweep_threads") {
             cfg.sweep_threads = v.as_usize().ok_or_else(|| {
                 DlrError::Config(
@@ -540,6 +582,14 @@ pub struct TrainConfigBuilder(TrainConfig);
 impl TrainConfigBuilder {
     pub fn lambda(mut self, v: f64) -> Self {
         self.0.lambda = v;
+        self
+    }
+    pub fn family(mut self, v: FamilyKind) -> Self {
+        self.0.family = v;
+        self
+    }
+    pub fn enet_alpha(mut self, v: f64) -> Self {
+        self.0.enet_alpha = v;
         self
     }
     pub fn nu(mut self, v: f64) -> Self {
@@ -1011,6 +1061,55 @@ skip_alpha_init = true
         // auto never fails validation — it clamps at resolution time
         let c = TrainConfig::builder().sweep_threads(0).build();
         assert!(c.validate_sweep_threads_for(1).is_ok());
+    }
+
+    #[test]
+    fn family_and_alpha_load_from_toml_and_are_validated() {
+        // defaults: the paper's problem, untouched
+        let c = TrainConfig::default();
+        assert_eq!(c.family, FamilyKind::Logistic);
+        assert_eq!(c.enet_alpha, 1.0);
+        let doc = toml::parse("[train]\nfamily = \"poisson\"\nalpha = 0.5\n").unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.family, FamilyKind::Poisson);
+        assert_eq!(c.enet_alpha, 0.5);
+        // unknown family strings fail at load with an actionable message
+        let doc = toml::parse("[train]\nfamily = \"tweedie\"\n").unwrap();
+        let err = TrainConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("tweedie") && err.contains("logistic"), "{err}");
+        // alpha outside (0, 1] is rejected: 0, negative, > 1, NaN
+        for bad in ["0.0", "-0.2", "1.5", "nan"] {
+            let doc = toml::parse(&format!("[train]\nalpha = {bad}\n"));
+            let Ok(doc) = doc else { continue };
+            let err = TrainConfig::from_toml(&doc);
+            assert!(err.is_err(), "alpha = {bad} should be rejected");
+        }
+        let err = TrainConfig { enet_alpha: 0.0, ..TrainConfig::default() }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("(0, 1]"), "{err}");
+        // the XLA kernels are logistic-only pure-L1: explicit combinations fail
+        let bad = TrainConfig {
+            engine: EngineKind::Xla,
+            family: FamilyKind::Gaussian,
+            ..TrainConfig::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("native"), "{err}");
+        let bad = TrainConfig {
+            engine: EngineKind::Xla,
+            enet_alpha: 0.5,
+            ..TrainConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        // auto is always fine — it resolves to native for new families
+        let ok = TrainConfig {
+            family: FamilyKind::Poisson,
+            enet_alpha: 0.25,
+            ..TrainConfig::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

@@ -9,6 +9,10 @@
 //! | epsilon       | fully dense, p = 2000            | [`epsilon_like`] |
 //! | webspam       | very sparse, p ≫ n, power-law    | [`webspam_like`] |
 //! | dna           | tiny p, n ≫ p, short rows        | [`dna_like`]    |
+//!
+//! The GLM families get matching generators with the same planted-support
+//! idea on non-logistic responses: [`gaussian_like`] (y = βᵀx + ε) and
+//! [`poisson_like`] (exact Poisson(exp(βᵀx)) counts).
 
 use crate::data::dataset::Dataset;
 use crate::data::sparse::CsrMatrix;
@@ -137,6 +141,78 @@ pub fn dna_like(n: usize, p: usize, nnz_per_row: usize, seed: u64) -> Dataset {
     ds
 }
 
+/// Sparse 0/1-ish rows with a gaussian response `y = βᵀx + ε` on a
+/// planted sparse β — the least-squares analog of [`dna_like`], so the
+/// gaussian family's L1 path has real support to recover.
+pub fn gaussian_like(n: usize, p: usize, nnz_per_row: usize, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256::new(seed);
+    let beta = draw_sparse_beta(&mut rng, p, (p / 10).max(8), 1.0);
+    let mut x = CsrMatrix::new(p);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut idx = rng.sample_indices(p, nnz_per_row.min(p));
+        idx.sort_unstable();
+        let mut margin = 0f64;
+        let entries: Vec<(u32, f32)> = idx
+            .iter()
+            .map(|&j| {
+                let v = rng.uniform_in(0.5, 1.5) as f32;
+                margin += v as f64 * beta[j] as f64;
+                (j as u32, v)
+            })
+            .collect();
+        x.push_row(&entries);
+        y.push((margin + 0.25 * rng.normal()) as f32);
+    }
+    let mut ds = Dataset::new("gaussian_like", x, y);
+    ds.x.n_cols = p;
+    ds
+}
+
+/// Poisson counts with a sparse log-linear rate `μ = exp(βᵀx)`: same
+/// short 0/1 rows as [`dna_like`], with small planted coefficients (and a
+/// clamped margin) so the rates stay in a laptop-friendly range. Labels
+/// are exact Poisson(μ) draws.
+pub fn poisson_like(n: usize, p: usize, nnz_per_row: usize, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256::new(seed);
+    // small |β| keeps exp(Σ β_j) tame for the default nnz_per_row
+    let beta = draw_sparse_beta(&mut rng, p, (p / 10).max(8), 0.35);
+    let mut x = CsrMatrix::new(p);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut idx = rng.sample_indices(p, nnz_per_row.min(p));
+        idx.sort_unstable();
+        let mut margin = 0f64;
+        let entries: Vec<(u32, f32)> = idx
+            .iter()
+            .map(|&j| {
+                margin += beta[j] as f64;
+                (j as u32, 1.0f32)
+            })
+            .collect();
+        x.push_row(&entries);
+        y.push(poisson_draw(&mut rng, margin.clamp(-4.0, 4.0).exp()) as f32);
+    }
+    let mut ds = Dataset::new("poisson_like", x, y);
+    ds.x.n_cols = p;
+    ds
+}
+
+/// Exact Poisson(μ) sample by Knuth inversion — O(μ) uniforms per draw,
+/// fine for the clamped μ ≤ e⁴ these generators produce.
+fn poisson_draw(rng: &mut Xoshiro256, mu: f64) -> u64 {
+    let floor = (-mu).exp();
+    let mut k = 0u64;
+    let mut prod = 1f64;
+    loop {
+        prod *= rng.uniform();
+        if prod <= floor {
+            return k;
+        }
+        k += 1;
+    }
+}
+
 /// The three Table-2 analogs at the default laptop scale used by the
 /// benchmark harness (EXPERIMENTS.md records these shapes).
 pub fn paper_suite(seed: u64) -> Vec<Dataset> {
@@ -178,6 +254,33 @@ mod tests {
         assert!(s.positives > 25, "positives = {}", s.positives);
         // imbalanced: negatives dominate
         assert!(s.positives < 250, "positives = {}", s.positives);
+    }
+
+    #[test]
+    fn gaussian_like_has_continuous_two_sided_labels() {
+        let ds = gaussian_like(300, 60, 8, 5);
+        assert_eq!(ds.n_examples(), 300);
+        assert_eq!(ds.n_features(), 60);
+        let s = ds.summary();
+        assert!((s.avg_nonzeros - 8.0).abs() < 1e-9);
+        // continuous response: both signs, many distinct values
+        assert!(ds.y.iter().any(|&v| v > 0.0) && ds.y.iter().any(|&v| v < 0.0));
+        let mut uniq: Vec<i64> = ds.y.iter().map(|&v| (v as f64 * 1e4) as i64).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() > 100, "only {} distinct labels", uniq.len());
+    }
+
+    #[test]
+    fn poisson_like_labels_are_counts_with_signal() {
+        let ds = poisson_like(500, 80, 6, 6);
+        assert!(ds.y.iter().all(|&v| v >= 0.0 && v.fract() == 0.0));
+        let mean = ds.y.iter().map(|&v| v as f64).sum::<f64>() / 500.0;
+        assert!(mean > 0.1 && mean < 60.0, "mean count = {mean}");
+        // not degenerate: more than one distinct count value
+        assert!(ds.y.iter().any(|&v| v != ds.y[0]));
+        // deterministic like the other generators
+        assert_eq!(ds.y, poisson_like(500, 80, 6, 6).y);
     }
 
     #[test]

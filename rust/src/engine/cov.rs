@@ -265,6 +265,10 @@ impl CovBlock {
 ///
 /// `wz[i]` must hold `w_i as f64 * z_i as f64` (the engine precomputes it
 /// once per sweep and shares it across sweep threads).
+///
+/// `lam` is the L1 strength (λ·α under the elastic net) and `l2` the ridge
+/// strength λ·(1−α); the ridge share enters only the update's denominator
+/// (`l2 = 0` reproduces the pure-L1 kernel bit-for-bit).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn cov_block_compute(
     shard: &FeatureShard,
@@ -277,6 +281,7 @@ pub(crate) fn cov_block_compute(
     beta_local: &[f32],
     lam: f64,
     nu: f64,
+    l2: f64,
     delta_out: &mut SparseVec,
 ) {
     debug_assert_eq!(
@@ -318,7 +323,7 @@ pub(crate) fn cov_block_compute(
             cov.abar_ok[bi] = true;
         }
         let a = nu + cov.abar[bi];
-        let s = soft_threshold(num0 + bj * a, lam) / a;
+        let s = soft_threshold(num0 + bj * a, lam) / (a + l2);
         let step = s - bj;
         if step == 0.0 {
             continue;

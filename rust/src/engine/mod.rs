@@ -152,6 +152,12 @@ pub trait SubproblemEngine {
     /// One cyclic coordinate-descent sweep over the shard, given the shared
     /// working weights `w` and responses `z` (length n) and the *current
     /// shard-local* coefficients `beta_local`. Fills `out` in place.
+    ///
+    /// `lam` is the L1 strength of the per-coordinate soft-threshold (the
+    /// elastic-net λ·α), `l2` the ridge strength λ·(1−α) added to every
+    /// coordinate's quadratic denominator. `l2 = 0` (pure L1, the default
+    /// configuration) is bit-identical to the pre-elastic-net update.
+    #[allow(clippy::too_many_arguments)]
     fn sweep(
         &mut self,
         w: &[f32],
@@ -159,18 +165,25 @@ pub trait SubproblemEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
+        l2: f32,
         out: &mut SweepResult,
     ) -> Result<()>;
 
-    /// Per-shard λ_max contribution: `max_j |Σ_i x_ij y_i| / 2` over the
+    /// Per-shard λ_max contribution: `max_j |Σ_i x_ij t_i| · scale` over the
     /// shard's local features, with each feature's sum accumulated in f64
     /// in ascending example order — **bit-identical** per feature to the
     /// leader-side [`lambda_max`](crate::solver::regpath::lambda_max) scan
     /// of the full dataset (a CSC column stores exactly the CSR row-order
-    /// contributions of that feature). The leader max-reduces these over
-    /// machines, which is exact: max is order-independent and the feature
-    /// partition is disjoint.
-    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64>;
+    /// contributions of that feature). The targets `t` and `scale` come from
+    /// the family ([`GlmFamily::lambda_max_targets`] /
+    /// [`GlmFamily::lambda_max_scale`]; logistic: `t = y`, `scale = 0.5` —
+    /// ×0.5 ≡ the historical ÷2.0 bit-for-bit). The leader max-reduces these
+    /// over machines, which is exact: max is order-independent and the
+    /// feature partition is disjoint.
+    ///
+    /// [`GlmFamily::lambda_max_targets`]: crate::family::GlmFamily::lambda_max_targets
+    /// [`GlmFamily::lambda_max_scale`]: crate::family::GlmFamily::lambda_max_scale
+    fn lambda_max_local(&mut self, targets: &[f32], scale: f64) -> Result<f64>;
 
     /// Sparse shard-local margins product `out_i = Σ_{j ∈ shard} β_j x_ij`
     /// (f64 accumulation per example, emitted as f32). The distributed
@@ -179,7 +192,8 @@ pub trait SubproblemEngine {
     /// X. Not a hot path — one call per warmstart install.
     fn margins_into(&mut self, beta_local: &[f32], out: &mut SparseVec) -> Result<()>;
 
-    /// Allocating convenience wrapper (tests, one-shot callers).
+    /// Allocating convenience wrapper (tests, one-shot callers) — pure L1
+    /// (`l2 = 0`).
     fn sweep_alloc(
         &mut self,
         w: &[f32],
@@ -189,7 +203,7 @@ pub trait SubproblemEngine {
         nu: f32,
     ) -> Result<SweepResult> {
         let mut out = SweepResult::default();
-        self.sweep(w, z, beta_local, lam, nu, &mut out)?;
+        self.sweep(w, z, beta_local, lam, nu, 0.0, &mut out)?;
         Ok(out)
     }
 
@@ -214,6 +228,11 @@ pub fn resolve_engine(
 ) -> EngineKind {
     match cfg.engine {
         EngineKind::Auto => {
+            // the AOT kernels are logistic pure-L1 only — any other family
+            // or elastic-net mix resolves to the native engine
+            if cfg.family != crate::family::FamilyKind::Logistic || cfg.enet_alpha < 1.0 {
+                return EngineKind::Native;
+            }
             let Ok(manifest) = crate::runtime::Manifest::load(artifacts_dir) else {
                 return EngineKind::Native;
             };

@@ -151,6 +151,7 @@ fn sweep_block(
     beta_local: &[f32],
     lam: f64,
     nu: f64,
+    l2: f64,
     wz: &[f64],
     delta_out: &mut SparseVec,
     dm_out: &mut SparseVec,
@@ -176,6 +177,7 @@ fn sweep_block(
                 beta_local,
                 lam,
                 nu,
+                l2,
                 delta_out,
             );
         }
@@ -197,8 +199,11 @@ fn sweep_block(
                     wrx += wi * (z[ii] as f64 - blk.dm[ii]) * x;
                 }
                 let bj = beta_local[j] as f64;
+                // elastic net: the ridge share λ(1−α) enters only the
+                // denominator (a already carries β_j through cnum; l2 = 0
+                // reproduces the pure-L1 update bit-for-bit)
                 let cnum = wrx + bj * a;
-                let s = soft_threshold(cnum, lam) / a;
+                let s = soft_threshold(cnum, lam) / (a + l2);
                 let step = s - bj;
                 if step != 0.0 {
                     delta_out.push(c, step as f32);
@@ -234,6 +239,7 @@ impl SubproblemEngine for NativeEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
+        l2: f32,
         out: &mut SweepResult,
     ) -> Result<()> {
         let t0 = Instant::now();
@@ -242,7 +248,7 @@ impl SubproblemEngine for NativeEngine {
         debug_assert_eq!(z.len(), n);
         let p_local = self.shard.csc.n_cols;
         debug_assert_eq!(beta_local.len(), p_local);
-        let (lam, nu) = (lam as f64, nu as f64);
+        let (lam, nu, l2) = (lam as f64, nu as f64, l2 as f64);
         out.delta_local.clear(p_local);
 
         // cov kernel: every block's c0 pass gathers against the same w·z
@@ -263,6 +269,7 @@ impl SubproblemEngine for NativeEngine {
                 beta_local,
                 lam,
                 nu,
+                l2,
                 &self.wz,
                 &mut out.delta_local,
                 &mut out.dmargins,
@@ -284,14 +291,14 @@ impl SubproblemEngine for NativeEngine {
                         st.0.clear(p_local);
                         st.1.clear(n);
                         sweep_block(
-                            shard, blk, w, z, beta_local, lam, nu, wz, &mut st.0, &mut st.1,
+                            shard, blk, w, z, beta_local, lam, nu, l2, wz, &mut st.0, &mut st.1,
                         );
                     }));
                 }
                 let (blk, st) = work.pop().expect("at least one sweep block");
                 st.0.clear(p_local);
                 st.1.clear(n);
-                sweep_block(shard, blk, w, z, beta_local, lam, nu, wz, &mut st.0, &mut st.1);
+                sweep_block(shard, blk, w, z, beta_local, lam, nu, l2, wz, &mut st.0, &mut st.1);
                 for h in handles {
                     h.join().expect("sweep thread panicked");
                 }
@@ -363,12 +370,12 @@ impl SubproblemEngine for NativeEngine {
         Ok(())
     }
 
-    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64> {
-        debug_assert_eq!(y.len(), self.n);
+    fn lambda_max_local(&mut self, targets: &[f32], scale: f64) -> Result<f64> {
+        debug_assert_eq!(targets.len(), self.n);
         let mut best = 0f64;
         for j in 0..self.shard.csc.n_cols {
             let (rows, vals) = self.shard.csc.col(j);
-            best = best.max(gather_dot4(rows, vals, y).abs() / 2.0);
+            best = best.max(gather_dot4(rows, vals, targets).abs() * scale);
         }
         Ok(best)
     }
@@ -522,10 +529,10 @@ mod tests {
         let (w, z) = stats_of(&ds, &margins);
         let beta = vec![0f32; 500];
         let mut out = SweepResult::default();
-        eng.sweep(&w, &z, &beta, 0.3, 1e-6, &mut out).unwrap();
+        eng.sweep(&w, &z, &beta, 0.3, 1e-6, 0.0, &mut out).unwrap();
         let first = out.delta_local.clone();
         let (cap_d, cap_m) = (out.delta_local.indices.capacity(), out.dmargins.indices.capacity());
-        eng.sweep(&w, &z, &beta, 0.3, 1e-6, &mut out).unwrap();
+        eng.sweep(&w, &z, &beta, 0.3, 1e-6, 0.0, &mut out).unwrap();
         assert_eq!(out.delta_local, first, "sweeps must be deterministic");
         assert_eq!(out.delta_local.indices.capacity(), cap_d);
         assert_eq!(out.dmargins.indices.capacity(), cap_m);
@@ -620,9 +627,38 @@ mod tests {
         // dataset's — and must match the leader-side scan bit-for-bit
         let ds = synth::webspam_like(150, 400, 10, 6);
         let mut eng = NativeEngine::new(one_shard(&ds), ds.n_examples());
-        let got = eng.lambda_max_local(&ds.y).unwrap();
+        let got = eng.lambda_max_local(&ds.y, 0.5).unwrap();
         let want = crate::solver::regpath::lambda_max(&ds);
         assert_eq!(want.to_bits(), got.to_bits());
+    }
+
+    #[test]
+    fn elastic_net_l2_shrinks_the_update() {
+        // same sweep with a ridge share: every stepped coordinate shrinks
+        // toward zero relative to the pure-L1 step (denominator grows by l2)
+        let ds = synth::dna_like(300, 30, 5, 8);
+        let mut eng = NativeEngine::new(one_shard(&ds), ds.n_examples());
+        let margins = vec![0f32; ds.n_examples()];
+        let (w, z) = stats_of(&ds, &margins);
+        let beta = vec![0f32; 30];
+        let mut l1_only = SweepResult::default();
+        eng.sweep(&w, &z, &beta, 0.2, 1e-6, 0.0, &mut l1_only).unwrap();
+        let mut mixed = SweepResult::default();
+        eng.sweep(&w, &z, &beta, 0.2, 1e-6, 5.0, &mut mixed).unwrap();
+        assert!(!l1_only.delta_local.is_empty());
+        // Gauss-Seidel couples coordinates, so compare in aggregate: the
+        // ridge share must strictly shrink the update's mass, and the first
+        // stepped coordinate (which sees identical residuals) exactly.
+        let (a, b) = (l1_only.delta_local.to_dense(), mixed.delta_local.to_dense());
+        let mass = |v: &[f32]| v.iter().map(|&x| (x as f64).abs()).sum::<f64>();
+        assert!(mass(&b) < mass(&a), "{} !< {}", mass(&b), mass(&a));
+        let j0 = l1_only.delta_local.indices[0] as usize;
+        assert!(b[j0].abs() < a[j0].abs(), "first step must shrink: {} vs {}", b[j0], a[j0]);
+        // l2 = 0 is the pure-L1 update bit-for-bit
+        let mut again = SweepResult::default();
+        eng.sweep(&w, &z, &beta, 0.2, 1e-6, 0.0, &mut again).unwrap();
+        assert_eq!(again.delta_local, l1_only.delta_local);
+        assert_eq!(again.dmargins, l1_only.dmargins);
     }
 
     #[test]

@@ -90,6 +90,7 @@ impl SubproblemEngine for StreamingEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
+        l2: f32,
         out: &mut SweepResult,
     ) -> Result<()> {
         let t0 = Instant::now();
@@ -98,7 +99,7 @@ impl SubproblemEngine for StreamingEngine {
         for i in 0..n {
             self.r[i] = z[i] as f64;
         }
-        let (lam, nu) = (lam as f64, nu as f64);
+        let (lam, nu, l2) = (lam as f64, nu as f64, l2 as f64);
         out.delta_local.clear(self.p_local);
 
         let mut file = BufReader::new(std::fs::File::open(&self.path)?);
@@ -131,7 +132,7 @@ impl SubproblemEngine for StreamingEngine {
             }
             let bj = beta_local[j] as f64;
             let c = wrx + bj * a;
-            let s = soft_threshold(c, lam) / a;
+            let s = soft_threshold(c, lam) / (a + l2);
             let step = s - bj;
             if step != 0.0 {
                 // file order is by feature id, but tolerate unordered files:
@@ -155,8 +156,8 @@ impl SubproblemEngine for StreamingEngine {
         Ok(())
     }
 
-    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64> {
-        debug_assert_eq!(y.len(), self.n);
+    fn lambda_max_local(&mut self, targets: &[f32], scale: f64) -> Result<f64> {
+        debug_assert_eq!(targets.len(), self.n);
         let mut best = 0f64;
         let mut file = BufReader::new(std::fs::File::open(&self.path)?);
         let mut line = String::new();
@@ -175,9 +176,9 @@ impl SubproblemEngine for StreamingEngine {
             }
             let mut g = 0f64;
             for &(i, v) in &self.postings {
-                g += v as f64 * y[i as usize] as f64;
+                g += v as f64 * targets[i as usize] as f64;
             }
-            best = best.max(g.abs() / 2.0);
+            best = best.max(g.abs() * scale);
         }
         Ok(best)
     }

@@ -115,8 +115,16 @@ impl SubproblemEngine for XlaEngine {
         beta_local: &[f32],
         lam: f32,
         nu: f32,
+        l2: f32,
         out: &mut SweepResult,
     ) -> Result<()> {
+        if l2 != 0.0 {
+            return Err(DlrError::Solver(
+                "the AOT cd_sweep kernels are pure-L1: elastic-net alpha < 1 requires \
+                 the native engine (set [train] engine = \"native\" or alpha = 1.0)"
+                    .into(),
+            ));
+        }
         let t0 = Instant::now();
         let n = self.n;
         debug_assert_eq!(w.len(), n);
@@ -165,19 +173,19 @@ impl SubproblemEngine for XlaEngine {
         Ok(())
     }
 
-    fn lambda_max_local(&mut self, y: &[f32]) -> Result<f64> {
+    fn lambda_max_local(&mut self, targets: &[f32], scale: f64) -> Result<f64> {
         // plain CPU scan of the retained sparse shard: λ_max is a one-shot
         // setup statistic, not worth a kernel launch, and the f64 column
         // sums must match the native computation bit-for-bit
-        debug_assert_eq!(y.len(), self.n);
+        debug_assert_eq!(targets.len(), self.n);
         let mut best = 0f64;
         for j in 0..self.shard.csc.n_cols {
             let (rows, vals) = self.shard.csc.col(j);
             let mut g = 0f64;
             for (&i, &v) in rows.iter().zip(vals) {
-                g += v as f64 * y[i as usize] as f64;
+                g += v as f64 * targets[i as usize] as f64;
             }
-            best = best.max(g.abs() / 2.0);
+            best = best.max(g.abs() * scale);
         }
         Ok(best)
     }

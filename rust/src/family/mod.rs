@@ -1,0 +1,529 @@
+//! GLM families: the loss-specific seam of d-GLMNET.
+//!
+//! The paper's derivation (§2) touches the loss only through three scalar
+//! functions of one example's label `y` and margin `m = βᵀx`:
+//!
+//! * the loss value ℓ(y, m) (objective, line search),
+//! * its margin derivative ℓ′(y, m) (the directional-derivative term D and
+//!   the gradient at β = 0 behind λ_max),
+//! * the per-example **working statistics** (w, z) of the GLMNET quadratic
+//!   approximation — `w = ℓ″(y, m)` (possibly clamped) and
+//!   `z = −ℓ′(y, m) / w`, so the subproblem minimized by every engine sweep
+//!   is `Σᵢ wᵢ (zᵢ − Δβᵀxᵢ)² / 2 + penalty` regardless of family.
+//!
+//! Everything else in the stack — partitioning, sweeps, Δ-exchange, line
+//! search, checkpoints, failover — is family-agnostic, which is exactly the
+//! observation the authors' follow-up (arXiv 1611.02101) builds on.
+//! [`GlmFamily`] packages those three functions plus the λ_max gradient
+//! scale, the inverse link (`mean`) used by predict/serve, and the family's
+//! wire/artifact identity.
+//!
+//! ## The (w, z) contract
+//!
+//! `working_stats(y, m)` must return `w ≥ 0` finite and `z` finite for every
+//! finite `(y, m)` — engines divide by `Σ w x² + ν` and multiply by `w·z`,
+//! so infinities or NaNs here poison the whole sweep. Families enforce this
+//! with explicit stability clamps:
+//!
+//! * **Logistic** (`y ∈ {−1, +1}`): `w = p(1−p)` underflows to 0 on
+//!   saturated examples, so the division in `z = (ỹ − p)/w` guards with
+//!   `w.max(W_EPS)` (`W_EPS = 1e-10`) — the seed's exact formula, kept
+//!   bit-for-bit.
+//! * **Gaussian**: `w ≡ 1`, `z = y − m` — no clamps needed; the quadratic
+//!   model is exact and a batch fast path skips the per-example dispatch.
+//! * **Poisson** (log link, `y ≥ 0`): `w = exp(m)` is clamped to
+//!   `[POISSON_W_MIN, POISSON_W_MAX]` and the margin entering `exp` to
+//!   `± POISSON_MARGIN_CLAMP`, the standard guard against early-iteration
+//!   margin overshoot blowing up the working weights.
+//!
+//! The default family is [`Logistic`]; the logistic code paths throughout
+//! the crate are pinned bit-identical to the pre-family hardcoded ones
+//! (`tests/estimator_api.rs` seed-exactness pins).
+
+use crate::error::{DlrError, Result};
+use crate::util::math::{log1pexp, sigmoid, working_stats, W_EPS};
+
+/// Poisson working-weight clamp floor/ceiling: `w = exp(m)` outside this
+/// range makes the quadratic model useless (and its reciprocal in `z`
+/// inf-prone), so it is clamped like glmnet's `fmin`/`fmax` guards.
+pub const POISSON_W_MIN: f64 = 1e-6;
+pub const POISSON_W_MAX: f64 = 1e6;
+/// Margin magnitude cap inside Poisson `exp(m)` evaluations (exp(±30) spans
+/// the clamped weight range with headroom; keeps loss/means finite).
+pub const POISSON_MARGIN_CLAMP: f64 = 30.0;
+
+/// Which GLM family a fit runs — the config/wire/artifact identity. The
+/// trait object behind it comes from [`FamilyKind::family`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FamilyKind {
+    /// L1/elastic-net logistic regression on `y ∈ {−1, +1}` — the paper's
+    /// problem and the default (bit-identical to the pre-family code).
+    #[default]
+    Logistic,
+    /// Least squares (identity link): `ℓ = (y − m)²/2`, `w ≡ 1`.
+    Gaussian,
+    /// Poisson regression with log link on counts `y ≥ 0`:
+    /// `ℓ = exp(m) − y·m`.
+    Poisson,
+}
+
+impl FamilyKind {
+    /// Parse a config/CLI/wire family name. Accepts the canonical names
+    /// plus common aliases; returns `None` for anything else.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "logistic" | "binomial" | "logit" => Some(Self::Logistic),
+            "gaussian" | "linear" | "least-squares" | "squared" => Some(Self::Gaussian),
+            "poisson" => Some(Self::Poisson),
+            _ => None,
+        }
+    }
+
+    /// Canonical name — what artifacts, checkpoints and the handshake carry.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Logistic => "logistic",
+            Self::Gaussian => "gaussian",
+            Self::Poisson => "poisson",
+        }
+    }
+
+    /// The static family implementation behind this id.
+    pub fn family(&self) -> &'static dyn GlmFamily {
+        match self {
+            Self::Logistic => &Logistic,
+            Self::Gaussian => &Gaussian,
+            Self::Poisson => &Poisson,
+        }
+    }
+
+    /// Parse with an actionable error naming the offender and the options.
+    pub fn parse_or_err(s: &str) -> Result<Self> {
+        Self::parse(s).ok_or_else(|| {
+            DlrError::Config(format!(
+                "unknown GLM family '{s}' — expected one of logistic (default), \
+                 gaussian, poisson"
+            ))
+        })
+    }
+}
+
+/// A GLM loss family. See the module docs for the (w, z) contract; all
+/// implementations are stateless unit structs, shared as `&'static dyn`.
+pub trait GlmFamily: Sync {
+    fn kind(&self) -> FamilyKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Per-example loss ℓ(y, m) (up to a y-only constant).
+    fn loss(&self, y: f64, margin: f64) -> f64;
+
+    /// ∂ℓ/∂m — the margin derivative driving the smooth part of D.
+    fn dloss(&self, y: f64, margin: f64) -> f64;
+
+    /// GLMNET working statistics (w, z) for one example.
+    fn working_stats(&self, y: f64, margin: f64) -> (f64, f64);
+
+    /// Mean prediction μ = g⁻¹(m): probability (logistic), identity
+    /// (gaussian), exp (poisson). What predict/serve report.
+    fn mean(&self, margin: f64) -> f64;
+
+    /// Scale applied to `max_j |Σ_i x_ij t_i|` to get λ_max, where `t` is
+    /// [`lambda_max_targets`](GlmFamily::lambda_max_targets): the gradient
+    /// of the loss at β = 0 is `−scale⁻¹`-proportional to `Σ x t`.
+    fn lambda_max_scale(&self) -> f64 {
+        1.0
+    }
+
+    /// Per-example gradient-at-zero targets `t` for λ_max. For families
+    /// whose target *is* the label vector (logistic, gaussian) this returns
+    /// `y` itself — zero copies, keeping the default path's buffers and
+    /// bits untouched; Poisson fills `scratch` with `y − 1`.
+    fn lambda_max_targets<'a>(&self, y: &'a [f32], _scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        y
+    }
+
+    /// Validate the label vector at fit setup. The logistic default is
+    /// deliberately permissive (the seed never validated), non-default
+    /// families reject labels their loss cannot handle.
+    fn validate_labels(&self, _y: &[f32]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Batch (w, z) into caller-reused buffers (cleared and refilled;
+    /// capacities persist) plus the loss sum — the per-iteration stats
+    /// computation on leader and workers.
+    fn working_stats_into(
+        &self,
+        margins: &[f32],
+        y: &[f32],
+        w: &mut Vec<f32>,
+        z: &mut Vec<f32>,
+    ) -> f64 {
+        debug_assert_eq!(margins.len(), y.len());
+        w.clear();
+        z.clear();
+        w.reserve(margins.len());
+        z.reserve(margins.len());
+        let mut loss = 0f64;
+        for (&m, &yy) in margins.iter().zip(y) {
+            let (wi, zi) = self.working_stats(yy as f64, m as f64);
+            w.push(wi as f32);
+            z.push(zi as f32);
+            loss += self.loss(yy as f64, m as f64);
+        }
+        loss
+    }
+
+    /// Loss sum over all examples at the given margins.
+    fn loss_sum(&self, margins: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(margins.len(), y.len());
+        margins.iter().zip(y).map(|(&m, &yy)| self.loss(yy as f64, m as f64)).sum()
+    }
+
+    /// Loss sum at margins `m + α·Δm` (the line-search evaluations).
+    fn line_loss_sum(&self, margins: &[f32], dmargins: &[f32], alpha: f64, y: &[f32]) -> f64 {
+        margins
+            .iter()
+            .zip(dmargins)
+            .zip(y)
+            .map(|((&m, &dm), &yy)| self.loss(yy as f64, m as f64 + alpha * dm as f64))
+            .sum()
+    }
+
+    /// ∇L(β)ᵀΔβ = Σ_i ℓ′(y_i, m_i)·Δm_i — the smooth part of D (Alg 3).
+    fn grad_dot_delta(&self, margins: &[f32], dmargins: &[f32], y: &[f32]) -> f64 {
+        debug_assert_eq!(margins.len(), dmargins.len());
+        let mut acc = 0f64;
+        for i in 0..margins.len() {
+            acc += self.dloss(y[i] as f64, margins[i] as f64) * dmargins[i] as f64;
+        }
+        acc
+    }
+
+    /// Per-example (unit) deviance d(y, μ) — includes the conventional
+    /// factor 2, so a total deviance is just Σᵢ d(yᵢ, μᵢ).
+    fn unit_deviance(&self, y: f64, mu: f64) -> f64;
+
+    /// Intercept-only model mean μ̄ (mean response for every family here).
+    fn null_mean(&self, y: &[f32]) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = y.iter().map(|&v| self.mean_response(v as f64)).sum();
+        s / y.len() as f64
+    }
+
+    /// The response on the mean scale — identity except for logistic, where
+    /// labels are ±1 but means are probabilities in [0, 1].
+    fn mean_response(&self, y: f64) -> f64 {
+        y
+    }
+}
+
+/// The paper's family: `ℓ(y, m) = log(1 + exp(−y·m))`, `y ∈ {−1, +1}`.
+pub struct Logistic;
+
+impl GlmFamily for Logistic {
+    fn kind(&self) -> FamilyKind {
+        FamilyKind::Logistic
+    }
+
+    fn loss(&self, y: f64, margin: f64) -> f64 {
+        log1pexp(-y * margin)
+    }
+
+    fn dloss(&self, y: f64, margin: f64) -> f64 {
+        sigmoid(margin) - (y + 1.0) / 2.0
+    }
+
+    fn working_stats(&self, y: f64, margin: f64) -> (f64, f64) {
+        // the seed's exact formula (w = p(1−p), z = (ỹ − p)/max(w, W_EPS))
+        working_stats(y, margin)
+    }
+
+    fn mean(&self, margin: f64) -> f64 {
+        sigmoid(margin)
+    }
+
+    fn lambda_max_scale(&self) -> f64 {
+        // ∂ℓ/∂β_j at β = 0 is −Σ x_ij y_i / 2: scale the |Σ x y| max by ½.
+        // (×0.5 ≡ the historical ÷2.0 bit-for-bit.)
+        0.5
+    }
+
+    fn unit_deviance(&self, y: f64, mu: f64) -> f64 {
+        let p = mu.clamp(1e-15, 1.0 - 1e-15);
+        if y > 0.0 {
+            -2.0 * p.ln()
+        } else {
+            -2.0 * (1.0 - p).ln()
+        }
+    }
+
+    fn mean_response(&self, y: f64) -> f64 {
+        (y + 1.0) / 2.0
+    }
+}
+
+/// Least squares: `ℓ(y, m) = (y − m)²/2`, identity link, exact quadratic.
+pub struct Gaussian;
+
+impl GlmFamily for Gaussian {
+    fn kind(&self) -> FamilyKind {
+        FamilyKind::Gaussian
+    }
+
+    fn loss(&self, y: f64, margin: f64) -> f64 {
+        let r = y - margin;
+        0.5 * r * r
+    }
+
+    fn dloss(&self, y: f64, margin: f64) -> f64 {
+        margin - y
+    }
+
+    fn working_stats(&self, y: f64, margin: f64) -> (f64, f64) {
+        (1.0, y - margin)
+    }
+
+    fn working_stats_into(
+        &self,
+        margins: &[f32],
+        y: &[f32],
+        w: &mut Vec<f32>,
+        z: &mut Vec<f32>,
+    ) -> f64 {
+        // w ≡ 1 fast path: skip the per-example (w, z) dispatch entirely
+        debug_assert_eq!(margins.len(), y.len());
+        w.clear();
+        z.clear();
+        w.resize(margins.len(), 1.0);
+        z.reserve(margins.len());
+        let mut loss = 0f64;
+        for (&m, &yy) in margins.iter().zip(y) {
+            let r = yy as f64 - m as f64;
+            z.push(r as f32);
+            loss += 0.5 * r * r;
+        }
+        loss
+    }
+
+    fn mean(&self, margin: f64) -> f64 {
+        margin
+    }
+
+    fn validate_labels(&self, y: &[f32]) -> Result<()> {
+        if let Some(i) = y.iter().position(|v| !v.is_finite()) {
+            return Err(DlrError::Config(format!(
+                "gaussian family needs finite labels, but y[{i}] = {}",
+                y[i]
+            )));
+        }
+        Ok(())
+    }
+
+    fn unit_deviance(&self, y: f64, mu: f64) -> f64 {
+        let r = y - mu;
+        r * r
+    }
+}
+
+/// Poisson regression with log link on counts: `ℓ(y, m) = exp(m) − y·m`
+/// (the log(y!) term is constant in β and dropped).
+pub struct Poisson;
+
+impl Poisson {
+    #[inline]
+    fn mu(margin: f64) -> f64 {
+        margin.clamp(-POISSON_MARGIN_CLAMP, POISSON_MARGIN_CLAMP).exp()
+    }
+}
+
+impl GlmFamily for Poisson {
+    fn kind(&self) -> FamilyKind {
+        FamilyKind::Poisson
+    }
+
+    fn loss(&self, y: f64, margin: f64) -> f64 {
+        Self::mu(margin) - y * margin
+    }
+
+    fn dloss(&self, y: f64, margin: f64) -> f64 {
+        Self::mu(margin) - y
+    }
+
+    fn working_stats(&self, y: f64, margin: f64) -> (f64, f64) {
+        let mu = Self::mu(margin);
+        let w = mu.clamp(POISSON_W_MIN, POISSON_W_MAX);
+        let z = (y - mu) / w.max(W_EPS);
+        (w, z)
+    }
+
+    fn mean(&self, margin: f64) -> f64 {
+        Self::mu(margin)
+    }
+
+    fn lambda_max_targets<'a>(&self, y: &'a [f32], scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        // ∂ℓ/∂m at β = 0 is exp(0) − y = 1 − y, so the per-feature gradient
+        // magnitude is |Σ x (y − 1)|.
+        scratch.clear();
+        scratch.extend(y.iter().map(|&v| v - 1.0));
+        scratch
+    }
+
+    fn validate_labels(&self, y: &[f32]) -> Result<()> {
+        if let Some(i) = y.iter().position(|v| !v.is_finite() || *v < 0.0) {
+            return Err(DlrError::Config(format!(
+                "poisson family needs non-negative count labels, but y[{i}] = {} — \
+                 did you mean family = \"logistic\" (labels in {{-1, +1}})?",
+                y[i]
+            )));
+        }
+        Ok(())
+    }
+
+    fn unit_deviance(&self, y: f64, mu: f64) -> f64 {
+        let mu = mu.max(1e-15);
+        if y > 0.0 {
+            2.0 * (y * (y / mu).ln() - (y - mu))
+        } else {
+            2.0 * mu
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trips_names_and_aliases() {
+        for k in [FamilyKind::Logistic, FamilyKind::Gaussian, FamilyKind::Poisson] {
+            assert_eq!(FamilyKind::parse(k.name()), Some(k));
+            assert_eq!(k.family().kind(), k);
+        }
+        assert_eq!(FamilyKind::parse("binomial"), Some(FamilyKind::Logistic));
+        assert_eq!(FamilyKind::parse("linear"), Some(FamilyKind::Gaussian));
+        assert_eq!(FamilyKind::parse("least-squares"), Some(FamilyKind::Gaussian));
+        assert_eq!(FamilyKind::parse("gamma"), None);
+        let err = FamilyKind::parse_or_err("tweedie").unwrap_err().to_string();
+        assert!(err.contains("tweedie") && err.contains("poisson"), "{err}");
+        assert_eq!(FamilyKind::default(), FamilyKind::Logistic);
+    }
+
+    #[test]
+    fn logistic_matches_seed_formulas_bitwise() {
+        let fam = FamilyKind::Logistic.family();
+        for &(y, m) in &[(1.0, 0.0), (-1.0, 0.3), (1.0, -40.0), (-1.0, 100.0)] {
+            let (w_old, z_old) = working_stats(y, m);
+            let (w, z) = fam.working_stats(y, m);
+            assert_eq!(w.to_bits(), w_old.to_bits());
+            assert_eq!(z.to_bits(), z_old.to_bits());
+            assert_eq!(fam.loss(y, m).to_bits(), log1pexp(-y * m).to_bits());
+            let d_old = sigmoid(m) - (y + 1.0) / 2.0;
+            assert_eq!(fam.dloss(y, m).to_bits(), d_old.to_bits());
+        }
+        // ×0.5 must equal the historical ÷2.0 exactly
+        for &g in &[3.0f64, 1e-12, 7.25e8, f64::MIN_POSITIVE] {
+            assert_eq!((g * fam.lambda_max_scale()).to_bits(), (g / 2.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_stats_match_per_example_dispatch() {
+        let margins = [0.0f32, 0.5, -1.5, 3.0];
+        for kind in [FamilyKind::Logistic, FamilyKind::Gaussian, FamilyKind::Poisson] {
+            let fam = kind.family();
+            let y: Vec<f32> = match kind {
+                FamilyKind::Poisson => vec![0.0, 1.0, 3.0, 2.0],
+                _ => vec![1.0, -1.0, 1.0, -1.0],
+            };
+            let (mut w, mut z) = (Vec::new(), Vec::new());
+            let loss = fam.working_stats_into(&margins, &y, &mut w, &mut z);
+            let mut want_loss = 0f64;
+            for i in 0..4 {
+                let (wi, zi) = fam.working_stats(y[i] as f64, margins[i] as f64);
+                assert_eq!(w[i].to_bits(), (wi as f32).to_bits(), "{kind:?} w[{i}]");
+                assert_eq!(z[i].to_bits(), (zi as f32).to_bits(), "{kind:?} z[{i}]");
+                want_loss += fam.loss(y[i] as f64, margins[i] as f64);
+            }
+            assert!((loss - want_loss).abs() < 1e-12, "{kind:?}");
+            assert!((fam.loss_sum(&margins, &y) - want_loss).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gaussian_is_exact_quadratic() {
+        let fam = FamilyKind::Gaussian.family();
+        let (w, z) = fam.working_stats(3.0, 1.0);
+        assert_eq!(w, 1.0);
+        assert_eq!(z, 2.0);
+        assert_eq!(fam.loss(3.0, 1.0), 2.0);
+        assert_eq!(fam.dloss(3.0, 1.0), -2.0);
+        assert_eq!(fam.mean(0.7), 0.7);
+        assert_eq!(fam.unit_deviance(3.0, 1.0), 4.0);
+        assert!(fam.validate_labels(&[1.0, -2.5]).is_ok());
+        assert!(fam.validate_labels(&[1.0, f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn poisson_clamps_keep_stats_finite() {
+        let fam = FamilyKind::Poisson.family();
+        for &(y, m) in &[(0.0, -200.0), (5.0, 200.0), (3.0, 0.0), (0.0, 29.0)] {
+            let (w, z) = fam.working_stats(y, m);
+            assert!(w.is_finite() && (POISSON_W_MIN..=POISSON_W_MAX).contains(&w), "w = {w}");
+            assert!(z.is_finite(), "z = {z}");
+            assert!(fam.loss(y, m).is_finite());
+            assert!(fam.dloss(y, m).is_finite());
+        }
+        // λ_max targets are y − 1 (gradient at β = 0)
+        let mut scratch = Vec::new();
+        let t = fam.lambda_max_targets(&[0.0, 1.0, 4.0], &mut scratch);
+        assert_eq!(t, &[-1.0, 0.0, 3.0]);
+        // counts only
+        assert!(fam.validate_labels(&[0.0, 2.0, 7.0]).is_ok());
+        let err = fam.validate_labels(&[1.0, -1.0]).unwrap_err().to_string();
+        assert!(err.contains("non-negative"), "{err}");
+    }
+
+    #[test]
+    fn default_lambda_max_targets_borrow_y_unchanged() {
+        let y = [1.0f32, -1.0, 1.0];
+        let mut scratch = Vec::new();
+        for kind in [FamilyKind::Logistic, FamilyKind::Gaussian] {
+            let t = kind.family().lambda_max_targets(&y, &mut scratch);
+            assert_eq!(t.as_ptr(), y.as_ptr(), "{kind:?} must not copy");
+        }
+    }
+
+    #[test]
+    fn deviance_is_zero_at_perfect_fit_and_positive_off_it() {
+        let log = FamilyKind::Logistic.family();
+        assert!(log.unit_deviance(1.0, 1.0 - 1e-15) < 1e-9);
+        assert!(log.unit_deviance(1.0, 0.5) > 0.0);
+        let poi = FamilyKind::Poisson.family();
+        assert!(poi.unit_deviance(3.0, 3.0).abs() < 1e-12);
+        assert!(poi.unit_deviance(3.0, 1.0) > 0.0);
+        assert!(poi.unit_deviance(0.0, 0.5) > 0.0);
+        // null means live on the mean scale (probability for logistic)
+        assert!((log.null_mean(&[1.0, 1.0, -1.0, -1.0]) - 0.5).abs() < 1e-12);
+        assert!((poi.null_mean(&[0.0, 2.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_dot_matches_hardcoded_logistic() {
+        let margins = [0.1f32, -0.4, 0.0];
+        let dm = [0.3f32, 0.2, -0.1];
+        let y = [1.0f32, -1.0, 1.0];
+        let fam = FamilyKind::Logistic.family();
+        let mut want = 0f64;
+        for i in 0..3 {
+            let p = sigmoid(margins[i] as f64);
+            want += (p - (y[i] as f64 + 1.0) / 2.0) * dm[i] as f64;
+        }
+        assert_eq!(fam.grad_dot_delta(&margins, &dm, &y).to_bits(), want.to_bits());
+    }
+}

@@ -188,6 +188,42 @@
 //! `BENCH_ablation.json`; CI gates the speedup ratios so the win cannot
 //! silently erode.
 //!
+//! ## Fit a GLM / elastic net — the `family` and `alpha` knobs
+//!
+//! The solver is loss-generic: the whole distributed stack touches the loss
+//! only through the [`family::GlmFamily`] seam (per-example (w, z) working
+//! stats, loss sums, the λ_max gradient scale and the prediction link), so
+//! `[train] family` / `--family` swaps the problem being solved without
+//! changing a single code path. `logistic` is the default and bit-identical
+//! to the historical hardcoded behavior; `gaussian` (least squares) and
+//! `poisson` (log-link counts) ride the same sharded store, socket cluster,
+//! checkpoints, failover and serve layers. `[train] alpha` / `--alpha`
+//! (∈ (0, 1], default 1.0 = pure L1) mixes in a ridge term glmnet-style:
+//! the penalty becomes `λ(α‖β‖₁ + (1−α)/2·‖β‖₂²)`, folded into every
+//! per-coordinate soft-threshold/denominator.
+//!
+//! ```no_run
+//! use dglmnet::config::TrainConfig;
+//! use dglmnet::data::synth;
+//! use dglmnet::family::FamilyKind;
+//! use dglmnet::solver::DGlmnetSolver;
+//!
+//! // Poisson counts with a sparse log-linear rate, elastic-net penalty
+//! let ds = synth::poisson_like(4_000, 300, 12, 7);
+//! let cfg = TrainConfig::builder()
+//!     .machines(3)
+//!     .family(FamilyKind::Poisson)
+//!     .enet_alpha(0.5) // half L1, half ridge
+//!     .lambda(0.05)
+//!     .build();
+//! let fit = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap().fit(None).unwrap();
+//! println!("nnz = {}, deviance-minimizing rate model at f = {}", fit.nnz(), fit.objective);
+//! // predictions come back on the mean scale of the family:
+//! //   dglmnet predict emits exp(margin) for poisson, the margin itself for
+//! //   gaussian, and the probability for logistic — and artifacts record
+//! //   family + alpha, so serve/predict refuse a mismatched model.
+//! ```
+//!
 //! ## Serve a trained model — `dglmnet serve`
 //!
 //! The paper's models exist to answer live traffic; the [`serve`]
@@ -233,6 +269,7 @@ pub mod config;
 pub mod data;
 pub mod engine;
 pub mod error;
+pub mod family;
 pub mod metrics;
 pub mod report;
 pub mod runtime;

@@ -21,6 +21,7 @@ use dglmnet::data::shuffle::shuffle_to_store;
 use dglmnet::data::store::ShardStore;
 use dglmnet::data::{dataset::Dataset, libsvm, synth};
 use dglmnet::error::{DlrError, Result};
+use dglmnet::family::FamilyKind;
 use dglmnet::metrics;
 use dglmnet::report::Table;
 use dglmnet::solver::{
@@ -70,6 +71,8 @@ fn app() -> App {
                 .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
                 .opt("solver", "dglmnet | shotgun | truncgrad | online", Some("dglmnet"))
                 .opt("lambda", "L1 strength (objective scale)", Some("1.0"))
+                .opt("family", "GLM family: logistic | gaussian | poisson (dglmnet)", Some("logistic"))
+                .opt("alpha", "elastic-net mix in (0, 1]: 1 = pure L1 (dglmnet)", Some("1.0"))
                 .opt("machines", "simulated machines M", Some("4"))
                 .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("sweep-threads", "CD sweep threads per worker (0 = auto: host parallelism)", Some("1"))
@@ -108,6 +111,8 @@ fn app() -> App {
                 .opt("features", "synthetic features", Some("400"))
                 .opt("nnz-per-row", "non-zeros per row (sparse kinds)", Some("12"))
                 .opt("steps", "lambda halvings", Some("20"))
+                .opt("family", "GLM family: logistic | gaussian | poisson", Some("logistic"))
+                .opt("alpha", "elastic-net mix in (0, 1]: 1 = pure L1", Some("1.0"))
                 .opt("machines", "simulated machines M", Some("4"))
                 .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("max-iter", "per-lambda iteration cap", Some("50"))
@@ -128,6 +133,8 @@ fn app() -> App {
                 .opt("seed", "rng seed (drives the train/test split too)", Some("1"))
                 .opt("machines", "cluster size M (must match the leader)", Some("4"))
                 .opt("workers", "alias for --machines", None)
+                .opt("family", "GLM family (must match the leader)", Some("logistic"))
+                .opt("alpha", "elastic-net mix (must match the leader)", Some("1.0"))
                 .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("sweep-threads", "CD sweep threads (0 = auto: host parallelism)", Some("1"))
                 .flag("naive-sweep", "use the exact naive sweep kernel instead of the covariance-update one")
@@ -151,11 +158,13 @@ fn app() -> App {
             CommandSpec::new("predict", "score a libsvm file offline with a saved model (ndjson; lines are byte-identical to /predict_batch output)")
                 .opt("model", "model artifact path", None)
                 .opt("input", "libsvm input path", None)
+                .opt("family", "assert the artifact's GLM family (errors on mismatch)", None)
                 .opt("out", "write ndjson here instead of stdout", None),
         )
         .command(
             CommandSpec::new("serve", "serve a trained model artifact over HTTP (POST /predict, /predict_batch; hot-swaps when the artifact changes)")
                 .opt("model", "trained model artifact path (watched for hot-swap)", None)
+                .opt("family", "assert the artifact's GLM family (errors on mismatch)", None)
                 .opt("config", "TOML file with a [serve] section", None)
                 .opt("listen", "bind address host:port (port 0 = ephemeral; overrides [serve] listen)", None)
                 .opt("threads", "accept threads (overrides [serve] threads)", None)
@@ -192,6 +201,13 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     if let Some(l) = args.get_f64("lambda")? {
         cfg.lambda = l;
+    }
+    if let Some(f) = args.get_str("family") {
+        cfg.family = FamilyKind::parse_or_err(f)?;
+    }
+    if let Some(a) = args.get_f64("alpha")? {
+        // range-validated by cfg.validate() below (must be in (0, 1])
+        cfg.enet_alpha = a;
     }
     if let Some(m) = args.get_usize("machines")? {
         cfg.machines = m;
@@ -309,9 +325,10 @@ fn cmd_transform(args: &ParsedArgs) -> Result<()> {
 
 fn print_fit(name: &str, lambda: f64, fit: &FitResult, test: &Dataset) {
     let margins = fit.model.predict_margins(&test.x);
+    let family = fit.model.family;
     let mut t = Table::new(
-        format!("{name} fit @ lambda = {lambda:.5}"),
-        &["solver", "iters", "converged", "objective", "nnz", "test AUPRC", "test AUC", "sim comm (s)", "bytes"],
+        format!("{name} fit @ lambda = {lambda:.5} ({} family)", family.name()),
+        &["solver", "iters", "converged", "objective", "nnz", "test AUPRC", "test AUC", "test deviance", "sim comm (s)", "bytes"],
     );
     t.add_row(vec![
         name.to_string(),
@@ -321,6 +338,7 @@ fn print_fit(name: &str, lambda: f64, fit: &FitResult, test: &Dataset) {
         fit.nnz().to_string(),
         format!("{:.4}", metrics::auprc(&margins, &test.y)),
         format!("{:.4}", metrics::roc_auc(&margins, &test.y)),
+        format!("{:.4}", metrics::deviance(&margins, &test.y, family)),
         format!("{:.4}", fit.sim_comm_secs),
         fit.comm_bytes.to_string(),
     ]);
@@ -733,34 +751,60 @@ fn cmd_evaluate(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
+/// `--family` on predict/serve is an assertion, not a conversion: the
+/// artifact must record (or default to) exactly that family, otherwise
+/// scoring would silently reinterpret its margins through the wrong link.
+fn assert_artifact_family(args: &ParsedArgs, model: &SparseModel) -> Result<()> {
+    if let Some(f) = args.get_str("family") {
+        let want = FamilyKind::parse_or_err(f)?;
+        if want != model.family {
+            return Err(DlrError::Cli(format!(
+                "--family {} but the model artifact was fitted as {} — drop the \
+                 flag (or pass --family {}) to score it as fitted, or retrain \
+                 with the family you want",
+                want.name(),
+                model.family.name(),
+                model.family.name()
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Offline scorer: one [`dglmnet::serve::prediction_line`] per input row,
 /// byte-identical to what `/predict_batch` streams for the same examples —
-/// the serve_e2e CI job diffs the two outputs directly.
+/// the serve_e2e CI job diffs the two outputs directly. The `proba` field
+/// is the model family's mean prediction (sigmoid probability for
+/// logistic, identity/exp for gaussian/poisson).
 fn cmd_predict(args: &ParsedArgs) -> Result<()> {
     let model = SparseModel::load(
         args.get_str("model")
             .ok_or_else(|| DlrError::Cli("--model is required".into()))?,
     )?;
+    assert_artifact_family(args, &model)?;
     let ds = libsvm::read_libsvm_file(
         args.get_str("input")
             .ok_or_else(|| DlrError::Cli("--input is required".into()))?,
     )?;
     let margins = model.predict_margins(&ds.x);
+    let fam = model.family.family();
     let mut out: Box<dyn Write> = match args.get_str("out") {
         Some(p) => Box::new(std::io::BufWriter::new(std::fs::File::create(p)?)),
         None => Box::new(std::io::BufWriter::new(std::io::stdout())),
     };
     for (i, &m) in margins.iter().enumerate() {
-        let proba = dglmnet::util::math::sigmoid(m as f64) as f32;
-        writeln!(out, "{}", dglmnet::serve::prediction_line(i, m, proba))?;
+        let mean = fam.mean(m as f64) as f32;
+        writeln!(out, "{}", dglmnet::serve::prediction_line(i, m, mean))?;
     }
     out.flush()?;
     eprintln!(
-        "scored {} examples (model: p = {}, nnz = {}, lambda = {}, version {:016x})",
+        "scored {} examples (model: p = {}, nnz = {}, lambda = {}, family = {}, \
+         version {:016x})",
         margins.len(),
         model.n_features,
         model.nnz(),
         model.lambda,
+        model.family.name(),
         model.checksum()
     );
     Ok(())
@@ -770,6 +814,10 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     let model_path = args
         .get_str("model")
         .ok_or_else(|| DlrError::Cli("--model is required".into()))?;
+    if args.get_str("family").is_some() {
+        // validate the family assertion before binding anything
+        assert_artifact_family(args, &SparseModel::load(model_path)?)?;
+    }
     let mut cfg = match args.get_str("config") {
         Some(path) => dglmnet::config::ServeConfig::from_file(path)?,
         None => dglmnet::config::ServeConfig::default(),
@@ -795,13 +843,14 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     // the machine-readable ready line clients wait for (stdout is
     // line-buffered, so this flushes before the blocking wait)
     println!(
-        "serve_ready addr={} model_version={} p={} nnz={} lambda={} watch={}",
+        "serve_ready addr={} model_version={} p={} nnz={} lambda={} watch={} family={}",
         handle.addr,
         m.version,
         m.model.n_features,
         m.model.nnz(),
         m.model.lambda,
-        cfg.watch
+        cfg.watch,
+        m.model.family.name()
     );
     handle.wait();
     Ok(())

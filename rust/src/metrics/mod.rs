@@ -1,6 +1,10 @@
 //! Evaluation metrics. Figure 1's y-axis is **area under the
 //! Precision-Recall curve**; we also provide ROC-AUC, log-loss and accuracy
-//! for the extended reports.
+//! for the extended reports, plus family-generic [`deviance`] /
+//! [`null_deviance`] for non-logistic GLM fits (the ranking metrics and
+//! [`mean_logloss`] assume logistic ±1 labels).
+
+use crate::family::FamilyKind;
 
 /// Area under the precision-recall curve, computed exactly from the step
 /// curve over the ranked scores (ties handled as a block, trapezoid between
@@ -72,13 +76,38 @@ pub fn roc_auc(scores: &[f32], labels: &[f32]) -> f64 {
     (rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
 }
 
-/// Mean logistic loss log(1 + exp(-y m)) over margins.
+/// Mean **logistic** loss log(1 + exp(-y m)) over margins. Defined only
+/// for logistic fits (labels in {-1, +1}); for gaussian/poisson models
+/// report [`deviance`] instead.
 pub fn mean_logloss(margins: &[f32], labels: &[f32]) -> f64 {
     assert_eq!(margins.len(), labels.len());
     if margins.is_empty() {
         return 0.0;
     }
     crate::util::math::logloss_sum(margins, labels) / margins.len() as f64
+}
+
+/// Total residual deviance Σᵢ d(yᵢ, μᵢ) under a GLM family, with means
+/// μᵢ = g⁻¹(mᵢ) from the margins via the family's inverse link. The
+/// family-generic goodness-of-fit number (for logistic it is twice the
+/// total log-loss up to the deviance clamp).
+pub fn deviance(margins: &[f32], labels: &[f32], family: FamilyKind) -> f64 {
+    assert_eq!(margins.len(), labels.len());
+    let fam = family.family();
+    margins
+        .iter()
+        .zip(labels)
+        .map(|(&m, &y)| fam.unit_deviance(y as f64, fam.mean(m as f64)))
+        .sum()
+}
+
+/// Null (intercept-only) deviance: Σᵢ d(yᵢ, μ̄) at the family's mean
+/// response μ̄ — the denominator of explained-deviance ratios
+/// (`1 - deviance/null_deviance` is the GLM analog of R²).
+pub fn null_deviance(labels: &[f32], family: FamilyKind) -> f64 {
+    let fam = family.family();
+    let mu = fam.null_mean(labels);
+    labels.iter().map(|&y| fam.unit_deviance(y as f64, mu)).sum()
 }
 
 /// 0/1 accuracy at threshold 0.
@@ -151,6 +180,26 @@ mod tests {
         let z = [0f32; 3];
         let l = [1f32, -1.0, 1.0];
         assert!((mean_logloss(&z, &l) - (2f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deviance_per_family() {
+        // logistic at zero margins: each example contributes −2 ln ½
+        let m = [0f32; 4];
+        let y = [1f32, -1.0, 1.0, -1.0];
+        let d = deviance(&m, &y, FamilyKind::Logistic);
+        assert!((d - 8.0 * (2f64).ln()).abs() < 1e-9, "{d}");
+        // ... which is exactly the null deviance at prevalence ½
+        assert!((null_deviance(&y, FamilyKind::Logistic) - d).abs() < 1e-9);
+        // gaussian: squared residuals
+        let m = [1.0f32, 2.0];
+        let y = [3.0f32, 2.0];
+        assert!((deviance(&m, &y, FamilyKind::Gaussian) - 4.0).abs() < 1e-12);
+        // poisson: ~zero at a perfect fit (margin = ln y), positive off it
+        let m = [(3f32).ln(), (1f32).ln()];
+        let y = [3f32, 1.0];
+        assert!(deviance(&m, &y, FamilyKind::Poisson).abs() < 1e-6);
+        assert!(null_deviance(&y, FamilyKind::Poisson) > 0.0);
     }
 
     #[test]

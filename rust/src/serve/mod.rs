@@ -83,13 +83,16 @@ impl ServedModel {
     }
 
     /// Score one canonical example (ascending feature ids) through the
-    /// shared train/serve margin kernel. Returns `(margin, proba)` with
+    /// shared train/serve margin kernel. Returns `(margin, mean)` with
     /// exactly the offline `predict` rounding: f64-accumulated dot,
-    /// rounded to f32, sigmoid of that f32 margin.
+    /// rounded to f32, then the model family's inverse link of that f32
+    /// margin — the sigmoid probability for logistic models
+    /// (bit-identical to the pre-family serve path), the identity for
+    /// gaussian, exp for poisson.
     pub fn score(&self, cols: &[u32], vals: &[f32]) -> (f32, f32) {
         let margin = dot_margin(cols, vals, &self.beta) as f32;
-        let proba = crate::util::math::sigmoid(margin as f64) as f32;
-        (margin, proba)
+        let mean = self.model.family.family().mean(margin as f64) as f32;
+        (margin, mean)
     }
 }
 
@@ -114,7 +117,10 @@ pub fn canonicalize(mut pairs: Vec<(u32, f32)>) -> (Vec<u32>, Vec<f32>) {
 /// The one ndjson result line both the batch endpoint and offline
 /// `dglmnet predict` emit — shared so e2e can diff the two byte-for-byte.
 /// f32 `Display` prints the shortest round-trip representation, so equal
-/// bits always produce equal text.
+/// bits always produce equal text. The `proba` field carries the model
+/// family's mean prediction — an actual probability for logistic models,
+/// the identity/exp mean for gaussian/poisson ones (the key is kept
+/// stable so clients never need to branch on family).
 pub fn prediction_line(id: usize, margin: f32, proba: f32) -> String {
     let mut s = String::with_capacity(48);
     write!(s, "{{\"id\":{id},\"margin\":{margin},\"proba\":{proba}}}").unwrap();

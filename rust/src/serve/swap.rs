@@ -59,7 +59,21 @@ pub fn spawn_watcher(
                 match ServedModel::load(&path) {
                     Ok(m) => {
                         last_seen = Some(fp);
-                        if m.version != slot.get().version {
+                        let live = slot.get();
+                        if m.model.family != live.model.family {
+                            // a family change silently alters what `proba`
+                            // means to every client — never hot-swap across
+                            // it; restart the server on the new artifact
+                            stats.swap_failures.fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "[serve] warning: rejected new artifact at {} \
+                                 (family {} != served {}; restart to change \
+                                 family)",
+                                path.display(),
+                                m.model.family.name(),
+                                live.model.family.name()
+                            );
+                        } else if m.version != live.version {
                             let version = m.version.clone();
                             slot.swap(m);
                             stats.swaps.fetch_add(1, Ordering::Relaxed);

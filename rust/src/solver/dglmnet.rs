@@ -272,6 +272,8 @@ impl DGlmnetSolver {
                     &partition,
                     store.n(),
                     pinned_engine(cfg),
+                    cfg.family,
+                    cfg.enet_alpha,
                     cfg.listen.as_str(),
                     ACCEPT_TIMEOUT,
                 )?;
@@ -319,6 +321,8 @@ impl DGlmnetSolver {
             &partition,
             store.n(),
             pinned_engine(cfg),
+            cfg.family,
+            cfg.enet_alpha,
             listener,
             ACCEPT_TIMEOUT,
         )?;
@@ -375,6 +379,8 @@ impl DGlmnetSolver {
                     &partition,
                     ds.n_examples(),
                     pinned_engine(cfg),
+                    cfg.family,
+                    cfg.enet_alpha,
                     cfg.listen.as_str(),
                     ACCEPT_TIMEOUT,
                 )?;
@@ -399,6 +405,8 @@ impl DGlmnetSolver {
             &partition,
             ds.n_examples(),
             pinned_engine(cfg),
+            cfg.family,
+            cfg.enet_alpha,
             listener,
             ACCEPT_TIMEOUT,
         )?;
@@ -456,6 +464,7 @@ impl DGlmnetSolver {
         // fail fast on the leader with the actionable message rather than
         // letting the narrowest worker's engine build error surface later
         cfg.validate_sweep_threads_for(partition.sizes().iter().copied().min().unwrap_or(0))?;
+        cfg.family.family().validate_labels(y)?;
         let artifacts = default_artifacts_dir();
         let n = y.len();
         let p = partition.n_features();
@@ -588,16 +597,19 @@ impl DGlmnetSolver {
     }
 
     /// λ_max over the training data this cluster was built on: at β = 0
-    /// the per-feature screening value is |Σ_i x_ij y_i| / 2. Computed as a
-    /// **distributed max-reduce of per-shard gradients** over the node
-    /// protocol — the leader holds no X, so each worker scans its own
-    /// feature block and reports its local max. Bit-identical to the
-    /// in-memory [`lambda_max`](crate::solver::regpath::lambda_max) scan
-    /// for any machine count and either transport (each per-feature f64
-    /// sum accumulates in the same ascending-example order; max over the
-    /// disjoint partition is exact), pinned in `tests/store.rs`.
+    /// the per-feature screening value is `max_j |Σ_i x_ij t_i| · scale`
+    /// with the family's gradient targets `t` (logistic: t = y,
+    /// scale = 1/2), divided by the elastic-net α (the L1 share must still
+    /// dominate the zero-gradient). Computed as a **distributed max-reduce
+    /// of per-shard gradients** over the node protocol — the leader holds
+    /// no X, so each worker scans its own feature block and reports its
+    /// local max. Bit-identical to the in-memory
+    /// [`lambda_max_family`](crate::solver::regpath::lambda_max_family)
+    /// scan for any machine count and either transport (each per-feature
+    /// f64 sum accumulates in the same ascending-example order; max over
+    /// the disjoint partition is exact), pinned in `tests/store.rs`.
     pub fn lambda_max_distributed(&mut self) -> Result<f64> {
-        self.pool.lambda_max()
+        Ok(self.pool.lambda_max()? / self.cfg.enet_alpha)
     }
 
     /// Reset warmstart state to β = 0. The worker-held shards are synced
@@ -723,6 +735,7 @@ impl Estimator for DGlmnetSolver {
 
     fn model(&self) -> SparseModel {
         SparseModel::from_dense(&self.beta, self.cfg.lambda)
+            .with_family(self.cfg.family, self.cfg.enet_alpha)
     }
 
     fn reset(&mut self) {

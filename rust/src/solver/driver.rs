@@ -46,11 +46,12 @@ use crate::cluster::comm::{Collective, CommCtx, TaskExecutor};
 use crate::config::ExchangeStrategy;
 use crate::data::sparse::SparseVec;
 use crate::error::{DlrError, Result};
+use crate::family::FamilyKind;
 use crate::solver::dglmnet::{DGlmnetSolver, FitResult, IterationRecord};
 use crate::solver::estimator::{FitControl, FitObserver, FitStep};
 use crate::solver::line_search::{line_search, LineSearchOutcome};
 use crate::solver::model::SparseModel;
-use crate::solver::quadratic::{grad_dot_delta, l1_at_alpha, support_union_into};
+use crate::solver::quadratic::{enet_penalty, penalty_at_alpha, support_union_into};
 use crate::util::json::{self, Json};
 use crate::util::math::l1_norm;
 use crate::util::timer::{PhaseTimer, Stopwatch};
@@ -175,6 +176,21 @@ impl<'a> FitDriver<'a> {
             return Err(DlrError::Solver(format!(
                 "checkpoint is for λ = {} but this driver runs λ = {}",
                 ck.lambda, self.lambda
+            )));
+        }
+        if ck.family != solver.cfg.family {
+            return Err(DlrError::Solver(format!(
+                "checkpoint was captured with family '{}' but this solver runs '{}' — \
+                 set [train] family / --family to match",
+                ck.family.name(),
+                solver.cfg.family.name()
+            )));
+        }
+        if ck.enet_alpha.to_bits() != solver.cfg.enet_alpha.to_bits() {
+            return Err(DlrError::Solver(format!(
+                "checkpoint was captured with alpha = {} but this solver runs alpha = {} — \
+                 set [train] alpha / --alpha to match",
+                ck.enet_alpha, solver.cfg.enet_alpha
             )));
         }
         solver.beta.copy_from_slice(&ck.beta);
@@ -303,6 +319,8 @@ impl<'a> FitDriver<'a> {
         let shards = self.solver.pull_verified_shards()?;
         Ok(Checkpoint {
             lambda: self.lambda,
+            family: self.solver.cfg.family,
+            enet_alpha: self.solver.cfg.enet_alpha,
             n: self.solver.n_examples(),
             p: self.solver.n_features(),
             iter: self.iterations(),
@@ -423,6 +441,8 @@ impl<'a> FitDriver<'a> {
     fn recovery_checkpoint(&self) -> Checkpoint {
         Checkpoint {
             lambda: self.lambda,
+            family: self.solver.cfg.family,
+            enet_alpha: self.solver.cfg.enet_alpha,
             n: self.solver.n_examples(),
             p: self.solver.n_features(),
             iter: self.iterations(),
@@ -490,7 +510,14 @@ impl<'a> FitDriver<'a> {
         let policy = *policy;
         // the ledger is only ever charged through &self (atomics)
         let ledger: &crate::cluster::network::NetworkLedger = ledger;
-        let (lam_f, nu_f) = (lambda as f32, cfg.nu as f32);
+        let enet_alpha = cfg.enet_alpha;
+        let family = cfg.family.family();
+        // elastic-net split of λ: the L1 share λ·α soft-thresholds, the
+        // ridge share λ·(1−α) lands in the sweep's quadratic denominator
+        // (α = 1 reproduces the pure-L1 scalars bit-for-bit: ×1.0 and a
+        // zero l2 term)
+        let (lam_f, nu_f) = ((lambda * enet_alpha) as f32, cfg.nu as f32);
+        let l2_f = (lambda * (1.0 - enet_alpha)) as f32;
         let iter_sw = Stopwatch::start();
         let iter_start_bytes = ledger.total_bytes();
 
@@ -498,14 +525,14 @@ impl<'a> FitDriver<'a> {
         // loss only: the (w, z) working vectors are derived worker-side
         // from each node's own margins, so the leader no longer fills them
         let loss = timers.time("stats", || leader.loss(margins))?;
-        let f0 = loss + lambda * l1_norm(beta);
+        let f0 = loss + enet_penalty(beta, lambda, enet_alpha);
         let f_start = *self.f_prev.get_or_insert(f0);
         debug_assert!((f_start - f0).abs() <= 1e-6 * f0.abs().max(1.0) || iter > 1);
 
         // ---- phase 2: sweep send/recv over the node protocol ------------
         // workers derive (w, z) from their own margins and sweep their own
-        // β shard — the request carries only (λ, ν)
-        timers.time("sweep", || pool.sweep_all(lam_f, nu_f, &mut scratch.results))?;
+        // β shard — the request carries only (λ·α, ν, λ(1−α))
+        timers.time("sweep", || pool.sweep_all(lam_f, nu_f, l2_f, &mut scratch.results))?;
         let max_worker = scratch
             .results
             .iter()
@@ -703,13 +730,14 @@ impl<'a> FitDriver<'a> {
         }
 
         // ---- phase 4: line search ---------------------------------------
-        let grad_dot = grad_dot_delta(margins, &scratch.dmargins, y);
+        let grad_dot = family.grad_dot_delta(margins, &scratch.dmargins, y);
         let beta_ref: &[f32] = beta;
         let delta_ref: &[f32] = &scratch.delta;
         let dmargins_ref: &[f32] = &scratch.dmargins;
         let support_ref: &[u32] = &scratch.support;
-        let l1_at =
-            move |a: f64| l1_at_alpha(beta_ref, delta_ref, support_ref, a, lambda);
+        let l1_at = move |a: f64| {
+            penalty_at_alpha(beta_ref, delta_ref, support_ref, a, lambda, enet_alpha)
+        };
         let margins_ref: &[f32] = margins;
         let mut losses =
             |alphas: &[f64]| leader.line_losses(margins_ref, dmargins_ref, alphas);
@@ -758,12 +786,13 @@ impl<'a> FitDriver<'a> {
                 let loss_full =
                     leader.line_losses(margins, &scratch.dmargins, &[1.0 - alpha])?[0];
                 let f_full = loss_full
-                    + l1_at_alpha(
+                    + penalty_at_alpha(
                         beta,
                         &scratch.delta,
                         &scratch.support,
                         1.0 - alpha,
                         lambda,
+                        enet_alpha,
                     );
                 if f_full <= f_new + cfg.alpha_one_slack * f_new.abs().max(1.0) {
                     let rem = (1.0 - alpha) as f32;
@@ -798,7 +827,12 @@ impl<'a> FitDriver<'a> {
                     let stop = {
                         let lambda = self.lambda;
                         let beta = &self.solver.beta;
-                        let model_fn = move || SparseModel::from_dense(beta, lambda);
+                        let (family, enet_alpha) =
+                            (self.solver.cfg.family, self.solver.cfg.enet_alpha);
+                        let model_fn = move || {
+                            SparseModel::from_dense(beta, lambda)
+                                .with_family(family, enet_alpha)
+                        };
                         let view = FitStep::new(&record, &model_fn);
                         observer.on_iteration(&view) == FitControl::Stop
                     };
@@ -811,7 +845,12 @@ impl<'a> FitDriver<'a> {
                     if let Some(record) = record {
                         let lambda = self.lambda;
                         let beta = &self.solver.beta;
-                        let model_fn = move || SparseModel::from_dense(beta, lambda);
+                        let (family, enet_alpha) =
+                            (self.solver.cfg.family, self.solver.cfg.enet_alpha);
+                        let model_fn = move || {
+                            SparseModel::from_dense(beta, lambda)
+                                .with_family(family, enet_alpha)
+                        };
                         let view = FitStep::new(&record, &model_fn);
                         let _ = observer.on_iteration(&view);
                     }
@@ -831,7 +870,8 @@ impl<'a> FitDriver<'a> {
             objective: self.f_prev.unwrap_or(f64::INFINITY),
             iterations: self.carried_iters + self.trace.len(),
             converged: self.converged,
-            model: SparseModel::from_dense(&self.solver.beta, self.lambda),
+            model: SparseModel::from_dense(&self.solver.beta, self.lambda)
+                .with_family(self.solver.cfg.family, self.solver.cfg.enet_alpha),
             trace: self.trace,
             timers: self.timers,
             sim_compute_secs: self.sim_compute,
@@ -861,6 +901,10 @@ impl<'a> FitDriver<'a> {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub lambda: f64,
+    /// GLM family of the fit (absent in pre-family files → logistic).
+    pub family: FamilyKind,
+    /// Elastic-net mixing α (absent in pre-family files → 1.0, pure L1).
+    pub enet_alpha: f64,
     pub n: usize,
     pub p: usize,
     /// Completed iterations at capture time.
@@ -935,6 +979,9 @@ impl Checkpoint {
         // f64 bit pattern alongside the readable value: bit-exact resume
         // must not depend on decimal round-tripping
         m.insert("lambda_bits".into(), u64_hex(self.lambda.to_bits()));
+        m.insert("family".into(), Json::Str(self.family.name().into()));
+        m.insert("enet_alpha".into(), Json::Num(self.enet_alpha));
+        m.insert("enet_alpha_bits".into(), u64_hex(self.enet_alpha.to_bits()));
         m.insert("n".into(), Json::Num(self.n as f64));
         m.insert("p".into(), Json::Num(self.p as f64));
         m.insert("iter".into(), Json::Num(self.iter as f64));
@@ -997,6 +1044,17 @@ impl Checkpoint {
             Some(bits) => f64::from_bits(u64_from_hex(bits)?),
             None => num("lambda")?,
         };
+        // pre-family checkpoints carry neither key: logistic pure-L1
+        let family = match doc.get("family").and_then(Json::as_str) {
+            Some(name) => FamilyKind::parse(name).ok_or_else(|| {
+                DlrError::parse("checkpoint", format!("unknown family '{name}'"))
+            })?,
+            None => FamilyKind::Logistic,
+        };
+        let enet_alpha = match doc.get("enet_alpha_bits") {
+            Some(bits) => f64::from_bits(u64_from_hex(bits)?),
+            None => 1.0,
+        };
         let f_prev = match doc.get("f_prev_bits") {
             Some(Json::Null) | None => None,
             Some(bits) => Some(f64::from_bits(u64_from_hex(bits)?)),
@@ -1029,6 +1087,8 @@ impl Checkpoint {
         };
         let ck = Self {
             lambda,
+            family,
+            enet_alpha,
             n: num("n")? as usize,
             p: num("p")? as usize,
             iter: num("iter")? as usize,
@@ -1078,6 +1138,8 @@ mod tests {
     fn toy_checkpoint() -> Checkpoint {
         Checkpoint {
             lambda: 0.1 + 0.2, // deliberately non-representable decimal
+            family: FamilyKind::Poisson,
+            enet_alpha: 0.1 + 0.6, // non-representable again
             n: 3,
             p: 2,
             iter: 7,
@@ -1141,6 +1203,25 @@ mod tests {
         let ck = Checkpoint::from_json(&doc).unwrap();
         assert!(ck.shards.is_empty());
         assert!(ck.est_shrink.is_none());
+    }
+
+    #[test]
+    fn pre_family_checkpoint_defaults_to_logistic_pure_l1() {
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("family");
+            m.remove("enet_alpha");
+            m.remove("enet_alpha_bits");
+        }
+        let ck = Checkpoint::from_json(&doc).unwrap();
+        assert_eq!(ck.family, FamilyKind::Logistic);
+        assert_eq!(ck.enet_alpha.to_bits(), 1.0f64.to_bits());
+        // an unknown family name is rejected, not silently defaulted
+        let mut doc = toy_checkpoint().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("family".into(), Json::Str("tweedie".into()));
+        }
+        assert!(Checkpoint::from_json(&doc).is_err());
     }
 
     #[test]

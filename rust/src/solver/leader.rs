@@ -12,14 +12,15 @@
 
 use crate::config::{EngineKind, TrainConfig};
 use crate::error::Result;
+use crate::family::FamilyKind;
 #[cfg(feature = "xla")]
 use crate::runtime::{lit_vec, XlaContext};
-use crate::util::math::log1pexp;
 
 /// Leader compute context.
 pub enum LeaderCompute {
     Native {
         y: Vec<f32>,
+        family: FamilyKind,
     },
     #[cfg(feature = "xla")]
     Xla {
@@ -43,10 +44,13 @@ impl LeaderCompute {
     pub fn new(cfg: &TrainConfig, y: &[f32], artifacts_dir: &std::path::Path) -> Result<Self> {
         // Auto: the leader kernels are plain O(n) elementwise work — use XLA
         // whenever the feature is compiled in, artifacts exist, and n fits a
-        // compiled tile.
+        // compiled tile. The AOT kernels are logistic-only, so any other
+        // family resolves to Native (explicit Xla + non-logistic is already
+        // rejected by TrainConfig::validate).
         let kind = match cfg.engine {
             EngineKind::Auto => {
                 let ok = cfg!(feature = "xla")
+                    && cfg.family == FamilyKind::Logistic
                     && crate::runtime::Manifest::load(artifacts_dir)
                         .and_then(|m| m.pick_n(y.len()))
                         .is_ok();
@@ -60,7 +64,9 @@ impl LeaderCompute {
         };
         match kind {
             EngineKind::Auto => unreachable!(),
-            EngineKind::Native => Ok(LeaderCompute::Native { y: y.to_vec() }),
+            EngineKind::Native => {
+                Ok(LeaderCompute::Native { y: y.to_vec(), family: cfg.family })
+            }
             #[cfg(not(feature = "xla"))]
             EngineKind::Xla => Err(crate::error::DlrError::Artifact(
                 "XLA leader requested but this build has no `xla` feature \
@@ -119,11 +125,9 @@ impl LeaderCompute {
     /// same f64 ops).
     pub fn loss(&mut self, margins: &[f32]) -> Result<f64> {
         match self {
-            LeaderCompute::Native { y } => Ok(margins
-                .iter()
-                .zip(y.iter())
-                .map(|(&m, &yy)| log1pexp(-(yy as f64) * m as f64))
-                .sum()),
+            LeaderCompute::Native { y, family } => {
+                Ok(family.family().loss_sum(margins, y))
+            }
             #[cfg(feature = "xla")]
             LeaderCompute::Xla { .. } => {
                 // the stats kernel returns the loss alongside (w, z)
@@ -153,8 +157,8 @@ impl LeaderCompute {
         z: &mut Vec<f32>,
     ) -> Result<f64> {
         match self {
-            LeaderCompute::Native { y } => {
-                Ok(crate::solver::quadratic::stats_native_into(margins, y, w, z))
+            LeaderCompute::Native { y, family } => {
+                Ok(family.family().working_stats_into(margins, y, w, z))
             }
             #[cfg(feature = "xla")]
             LeaderCompute::Xla { ctx, stats_unit, n, buf_a, y_lit, mask_lit, .. } => {
@@ -183,19 +187,10 @@ impl LeaderCompute {
         alphas: &[f64],
     ) -> Result<Vec<f64>> {
         match self {
-            LeaderCompute::Native { y } => Ok(alphas
-                .iter()
-                .map(|&a| {
-                    margins
-                        .iter()
-                        .zip(dmargins)
-                        .zip(y.iter())
-                        .map(|((&m, &dm), &yy)| {
-                            log1pexp(-(yy as f64) * (m as f64 + a * dm as f64))
-                        })
-                        .sum()
-                })
-                .collect()),
+            LeaderCompute::Native { y, family } => {
+                let fam = family.family();
+                Ok(alphas.iter().map(|&a| fam.line_loss_sum(margins, dmargins, a, y)).collect())
+            }
             #[cfg(feature = "xla")]
             LeaderCompute::Xla {
                 ctx, ls_unit, n, k, buf_a, buf_b, y_lit, mask_lit, ..

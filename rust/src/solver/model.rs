@@ -3,8 +3,9 @@
 //! The on-disk artifact (v2) is the contract between `train`, the offline
 //! `dglmnet predict` scorer, and the `dglmnet serve` hot-swap loop: a
 //! header embedding the model shape (`p`), the training-set size (`n`),
-//! λ, the solver that produced it, the entry count, and an FNV-1a
-//! checksum over the canonical payload bytes (same scheme as
+//! λ, the solver that produced it, the GLM family and elastic-net α when
+//! they differ from the logistic pure-L1 defaults, the entry count, and
+//! an FNV-1a checksum over the canonical payload bytes (same scheme as
 //! `data/store.rs`), followed by one `feature weight` line per non-zero.
 //! [`SparseModel::load`] verifies all of it — a truncated, bit-flipped or
 //! dimension-inconsistent artifact is rejected with an actionable error
@@ -16,6 +17,7 @@ use std::path::Path;
 
 use crate::data::sparse::CsrMatrix;
 use crate::error::{DlrError, Result};
+use crate::family::FamilyKind;
 
 // FNV-1a, the same constants the shard store and wire protocol use.
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -41,6 +43,14 @@ pub struct SparseModel {
     pub n_examples: usize,
     /// Solver that produced the fit (artifact metadata; "" = unknown).
     pub solver: String,
+    /// GLM family the model was fitted as. Recorded in the header (and
+    /// checksummed) only when non-default, so every pre-family artifact —
+    /// and every default logistic one — keeps its exact historical bytes;
+    /// absent on load means logistic.
+    pub family: FamilyKind,
+    /// Elastic-net mix α ∈ (0, 1] the fit used (1.0 = pure L1, the
+    /// default). Same non-default-only persistence rule as `family`.
+    pub enet_alpha: f64,
 }
 
 impl SparseModel {
@@ -56,6 +66,8 @@ impl SparseModel {
             lambda,
             n_examples: 0,
             solver: String::new(),
+            family: FamilyKind::Logistic,
+            enet_alpha: 1.0,
         }
     }
 
@@ -69,6 +81,19 @@ impl SparseModel {
             .map(|c| if c.is_whitespace() { '-' } else { c })
             .collect();
         self
+    }
+
+    /// Record which GLM family and elastic-net mix produced the fit.
+    pub fn with_family(mut self, family: FamilyKind, enet_alpha: f64) -> Self {
+        self.family = family;
+        self.enet_alpha = enet_alpha;
+        self
+    }
+
+    /// True when the fit settings match the pre-family defaults (logistic
+    /// pure L1) — the case whose artifact bytes are pinned to the seed.
+    fn default_family(&self) -> bool {
+        self.family == FamilyKind::Logistic && self.enet_alpha == 1.0
     }
 
     pub fn to_dense(&self) -> Vec<f32> {
@@ -93,6 +118,12 @@ impl SparseModel {
         h = fnv1a(h, &(self.n_examples as u64).to_le_bytes());
         h = fnv1a(h, &self.lambda.to_bits().to_le_bytes());
         h = fnv1a(h, self.solver.as_bytes());
+        if !self.default_family() {
+            // folded only when non-default so default artifacts keep the
+            // exact checksum (and bytes) the seed produced
+            h = fnv1a(h, self.family.name().as_bytes());
+            h = fnv1a(h, &self.enet_alpha.to_bits().to_le_bytes());
+        }
         for &(j, w) in &self.entries {
             h = fnv1a(h, &j.to_le_bytes());
             h = fnv1a(h, &w.to_bits().to_le_bytes());
@@ -112,11 +143,28 @@ impl SparseModel {
         x.margins(&padded)
     }
 
-    /// P(y = +1 | x).
+    /// P(y = +1 | x) — the logistic inverse link, regardless of the
+    /// model's family. For family-aware scoring use [`predict_mean`],
+    /// which is identical for logistic models.
+    ///
+    /// [`predict_mean`]: SparseModel::predict_mean
     pub fn predict_proba(&self, x: &CsrMatrix) -> Vec<f32> {
         self.predict_margins(x)
             .into_iter()
             .map(|m| crate::util::math::sigmoid(m as f64) as f32)
+            .collect()
+    }
+
+    /// Mean predictions μ = g⁻¹(βᵀx) under the model's family:
+    /// probability for logistic (bit-identical to [`predict_proba`]),
+    /// identity for gaussian, exp for poisson.
+    ///
+    /// [`predict_proba`]: SparseModel::predict_proba
+    pub fn predict_mean(&self, x: &CsrMatrix) -> Vec<f32> {
+        let fam = self.family.family();
+        self.predict_margins(x)
+            .into_iter()
+            .map(|m| fam.mean(m as f64) as f32)
             .collect()
     }
 
@@ -149,13 +197,23 @@ impl SparseModel {
     /// that agree bit-for-bit produce `cmp`-equal artifacts.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        // family/alpha tokens appear only on non-default fits: a default
+        // logistic pure-L1 artifact stays byte-for-byte what the seed wrote
+        // (pinned in tests/estimator_api.rs), and old loaders that don't
+        // know the tokens never see them
+        let family_meta = if self.default_family() {
+            String::new()
+        } else {
+            format!(" family={} alpha={}", self.family.name(), self.enet_alpha)
+        };
         writeln!(
             f,
-            "dglmnet-model v2 p={} n={} lambda={} solver={} nnz={} checksum={:016x}",
+            "dglmnet-model v2 p={} n={} lambda={} solver={}{} nnz={} checksum={:016x}",
             self.n_features,
             self.n_examples,
             self.lambda,
             self.solver,
+            family_meta,
             self.entries.len(),
             self.checksum()
         )?;
@@ -183,6 +241,8 @@ impl SparseModel {
         let mut lambda = 0f64;
         let mut n_examples = 0usize;
         let mut solver = String::new();
+        let mut family = FamilyKind::Logistic;
+        let mut enet_alpha = 1.0f64;
         let mut nnz: Option<usize> = None;
         let mut checksum: Option<u64> = None;
         for tok in header.split_whitespace() {
@@ -197,6 +257,23 @@ impl SparseModel {
             }
             if let Some(v) = tok.strip_prefix("solver=") {
                 solver = v.to_string();
+            }
+            if let Some(v) = tok.strip_prefix("family=") {
+                family = FamilyKind::parse(v).ok_or_else(|| {
+                    DlrError::Artifact(format!(
+                        "model artifact names unknown GLM family '{v}' — was it \
+                         written by a newer dglmnet? Known: logistic, gaussian, \
+                         poisson"
+                    ))
+                })?;
+            }
+            if let Some(v) = tok.strip_prefix("alpha=") {
+                enet_alpha = v.parse::<f64>().map_err(|_| {
+                    DlrError::Artifact(format!(
+                        "unreadable elastic-net alpha '{v}' — the artifact header \
+                         is corrupt"
+                    ))
+                })?;
             }
             if let Some(v) = tok.strip_prefix("nnz=") {
                 nnz = v.parse::<usize>().ok();
@@ -228,7 +305,8 @@ impl SparseModel {
                     .map_err(|_| DlrError::parse("model", "bad weight"))?,
             ));
         }
-        let model = Self { n_features, entries, lambda, n_examples, solver };
+        let model =
+            Self { n_features, entries, lambda, n_examples, solver, family, enet_alpha };
         if let Some(want) = nnz {
             if model.entries.len() != want {
                 return Err(DlrError::Artifact(format!(
@@ -362,8 +440,65 @@ mod tests {
         other.solver = "shotgun".into();
         assert_ne!(base.checksum(), other.checksum());
         let mut other = base.clone();
+        other.family = FamilyKind::Gaussian;
+        assert_ne!(base.checksum(), other.checksum());
+        let mut other = base.clone();
+        other.enet_alpha = 0.5;
+        assert_ne!(base.checksum(), other.checksum());
+        let mut other = base.clone();
         other.entries[0].1 = 1.0000001;
         assert_ne!(base.checksum(), other.checksum());
+    }
+
+    #[test]
+    fn family_metadata_roundtrips_and_defaults_write_no_tokens() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dglmnet_model_family_{}.txt", std::process::id()));
+        // default fit: the header carries no family/alpha tokens at all,
+        // so the artifact bytes are exactly what the pre-family code wrote
+        let m = SparseModel::from_dense(&[1.0, 0.0, -0.5], 0.5).with_meta(10, "dglmnet");
+        m.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("family=") && !text.contains("alpha="), "{text}");
+        let loaded = SparseModel::load(&path).unwrap();
+        assert_eq!(loaded.family, FamilyKind::Logistic);
+        assert_eq!(loaded.enet_alpha, 1.0);
+
+        // non-default fit: tokens round-trip exactly (α down to the bits —
+        // 0.1 + 0.6 is not exactly representable)
+        let g = m.clone().with_family(FamilyKind::Poisson, 0.1 + 0.6);
+        g.save(&path).unwrap();
+        let g2 = SparseModel::load(&path).unwrap();
+        assert_eq!(g2.family, FamilyKind::Poisson);
+        assert_eq!(g2.enet_alpha.to_bits(), (0.1f64 + 0.6).to_bits());
+        assert_eq!(g, g2);
+        assert_ne!(g.checksum(), m.checksum());
+
+        // unknown family names are rejected, not silently defaulted
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("family=poisson", "family=tweedie")).unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("unknown GLM family 'tweedie'"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn predict_mean_follows_the_family_link() {
+        let mut x = CsrMatrix::new(2);
+        x.push_row(&[(0, 1.0), (1, 2.0)]);
+        let base = SparseModel::from_dense(&[0.5, 0.25], 0.0);
+        let margin = base.predict_margins(&x)[0];
+        // logistic: mean is the probability, bit-for-bit
+        assert_eq!(
+            base.predict_mean(&x)[0].to_bits(),
+            base.predict_proba(&x)[0].to_bits()
+        );
+        // gaussian: identity link
+        let gau = base.clone().with_family(FamilyKind::Gaussian, 1.0);
+        assert_eq!(gau.predict_mean(&x)[0].to_bits(), margin.to_bits());
+        // poisson: log link
+        let poi = base.clone().with_family(FamilyKind::Poisson, 1.0);
+        assert_eq!(poi.predict_mean(&x)[0], (margin as f64).exp() as f32);
     }
 
     #[test]

@@ -51,6 +51,7 @@ use crate::data::sparse::SparseVec;
 use crate::data::store::ShardStore;
 use crate::engine::SweepResult;
 use crate::error::{DlrError, Result};
+use crate::family::FamilyKind;
 
 /// A deferred worker-node constructor, run *inside* the worker's own thread
 /// (PJRT clients are thread-bound; store-backed nodes read their own shard
@@ -128,6 +129,11 @@ pub struct WorkerPool {
     /// Store-backed in-process pools can rebuild machine k's node from its
     /// shard file; `None` when the shards were consumed at spawn.
     respawner: Option<NodeRespawner>,
+    /// GLM family the fit runs under — every admitted worker's `Join` must
+    /// announce the same one, and the `Welcome` echoes it back.
+    family: FamilyKind,
+    /// Elastic-net α, echoed in the `Welcome` for worker-side sanity checks.
+    enet_alpha: f64,
 }
 
 impl WorkerPool {
@@ -156,7 +162,7 @@ impl WorkerPool {
                     as NodeBuilder
             })
             .collect();
-        Self::spawn_nodes(n, p, global_cols, builders)
+        Self::spawn_nodes(n, p, global_cols, builders, cfg.family, cfg.enet_alpha)
     }
 
     /// Spawn one in-process worker per machine of an on-disk [`ShardStore`]
@@ -194,7 +200,8 @@ impl WorkerPool {
                 }) as NodeBuilder
             })
             .collect();
-        let mut pool = Self::spawn_nodes(n, p, global_cols, builders)?;
+        let mut pool =
+            Self::spawn_nodes(n, p, global_cols, builders, cfg.family, cfg.enet_alpha)?;
         // a store-backed worker can be rebuilt from its shard file at any
         // time, so this pool supports supervisor respawns
         let cfg = cfg.clone();
@@ -221,6 +228,8 @@ impl WorkerPool {
         p: usize,
         global_cols: Vec<Vec<u32>>,
         builders: Vec<NodeBuilder>,
+        family: FamilyKind,
+        enet_alpha: f64,
     ) -> Result<Self> {
         let m = builders.len();
         debug_assert_eq!(global_cols.len(), m);
@@ -259,12 +268,23 @@ impl WorkerPool {
             tasks_done,
             listener: None,
             respawner: None,
+            family,
+            enet_alpha,
         };
         for k in 0..m {
             let expected = &pool.global_cols[k];
             let (jn, jp, features, checksum) =
                 (n as u32, p as u32, expected.len() as u32, crc_u32(expected));
-            let engine = handshake(pool.links[k].as_mut(), k, jn, jp, features, checksum)?;
+            let engine = handshake(
+                pool.links[k].as_mut(),
+                k,
+                jn,
+                jp,
+                features,
+                checksum,
+                family,
+                enet_alpha,
+            )?;
             pool.engine_names[k] = engine;
         }
         Ok(pool)
@@ -284,11 +304,13 @@ impl WorkerPool {
         partition: &FeaturePartition,
         n: usize,
         expected_engine: Option<&str>,
+        family: FamilyKind,
+        enet_alpha: f64,
         addr: impl ToSocketAddrs,
         timeout: Duration,
     ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
-        Self::accept(partition, n, expected_engine, listener, timeout)
+        Self::accept(partition, n, expected_engine, family, enet_alpha, listener, timeout)
     }
 
     /// Admit one remote worker per partition block on an already-bound
@@ -298,6 +320,8 @@ impl WorkerPool {
         partition: &FeaturePartition,
         n: usize,
         expected_engine: Option<&str>,
+        family: FamilyKind,
+        enet_alpha: f64,
         listener: TcpListener,
         timeout: Duration,
     ) -> Result<Self> {
@@ -351,6 +375,7 @@ impl WorkerPool {
                     local_features,
                     cols_checksum,
                     engine,
+                    family: jfam,
                 } => {
                     let k = machine as usize;
                     if k >= m {
@@ -408,7 +433,24 @@ impl WorkerPool {
                             return Err(DlrError::Solver(msg));
                         }
                     }
-                    link.send(NodeMessage::Welcome).map_err(|e| worker_err(k, e))?;
+                    if jfam != family.name() {
+                        let msg = format!(
+                            "worker {k} derives working statistics under the '{jfam}' \
+                             family but the leader runs '{}' — pass the matching \
+                             --family to every worker",
+                            family.name()
+                        );
+                        if let Err(e) = link.send(NodeMessage::Abort { message: msg.clone() })
+                        {
+                            log_lost_abort(k, "admission", &e);
+                        }
+                        return Err(DlrError::Solver(msg));
+                    }
+                    link.send(NodeMessage::Welcome {
+                        family: family.name().to_string(),
+                        alpha: enet_alpha,
+                    })
+                    .map_err(|e| worker_err(k, e))?;
                     // admitted: lift the handshake deadline for fit traffic
                     raw.set_read_timeout(None)?;
                     engine_names[k] = engine;
@@ -446,6 +488,8 @@ impl WorkerPool {
             // retained: the supervisor re-admits replacement workers here
             listener: Some(listener),
             respawner: None,
+            family,
+            enet_alpha,
         })
     }
 
@@ -465,18 +509,31 @@ impl WorkerPool {
     }
 
     /// One parallel sweep across all machines (Alg 4 steps 1–2): a send
-    /// phase (`Sweep { λ, ν }` to every node — the workers derive their
-    /// own `(w, z)` from their margins) followed by a recv phase. Results
-    /// land in `out`, indexed by machine; the caller owns (and should
-    /// reuse) `out` — its sparse buffers round-trip through the in-process
-    /// workers via the `recycle` slot, so steady-state sweeps don't
-    /// allocate.
-    pub fn sweep_all(&mut self, lam: f32, nu: f32, out: &mut Vec<SweepResult>) -> Result<()> {
+    /// phase (`Sweep { λ, ν, l2 }` to every node — the workers derive
+    /// their own `(w, z)` from their margins) followed by a recv phase.
+    /// `lam` is the L1 soft-threshold strength (λ·α under the elastic net)
+    /// and `l2` the ridge strength λ·(1−α); 0 under the default pure-L1
+    /// configuration. Results land in `out`, indexed by machine; the
+    /// caller owns (and should reuse) `out` — its sparse buffers
+    /// round-trip through the in-process workers via the `recycle` slot,
+    /// so steady-state sweeps don't allocate.
+    pub fn sweep_all(
+        &mut self,
+        lam: f32,
+        nu: f32,
+        l2: f32,
+        out: &mut Vec<SweepResult>,
+    ) -> Result<()> {
         let m = self.machines();
         out.resize_with(m, SweepResult::default);
         for (k, link) in self.links.iter_mut().enumerate() {
-            link.send(NodeMessage::Sweep { lam, nu, recycle: std::mem::take(&mut out[k]) })
-                .map_err(|e| worker_err(k, e))?;
+            link.send(NodeMessage::Sweep {
+                lam,
+                nu,
+                l2,
+                recycle: std::mem::take(&mut out[k]),
+            })
+            .map_err(|e| worker_err(k, e))?;
         }
         for (k, link) in self.links.iter_mut().enumerate() {
             match link.recv().map_err(|e| worker_err(k, e))? {
@@ -533,8 +590,9 @@ impl WorkerPool {
         self.expect_acks("apply")
     }
 
-    /// Distributed λ_max: every node reports its shard's
-    /// `max_j |Σ_i x_ij y_i| / 2` and the leader max-reduces over
+    /// Distributed λ_max gradient max: every node reports its shard's
+    /// `max_j |Σ_i x_ij t_i| · scale` with its family's gradient targets
+    /// `t` (logistic: t = y, scale = ½) and the leader max-reduces over
     /// machines. Exact — each per-feature f64 sum is computed in the same
     /// ascending-example order as the in-memory scan, the partition is
     /// disjoint, and max is order-independent — so the result is
@@ -844,6 +902,7 @@ impl WorkerPool {
                     local_features,
                     cols_checksum,
                     engine,
+                    family: jfam,
                 } => {
                     let jm = machine as usize;
                     if jm != k {
@@ -889,8 +948,26 @@ impl WorkerPool {
                         }
                         return Err(DlrError::Solver(msg));
                     }
-                    link.send(NodeMessage::Welcome).map_err(|e| worker_err(k, e))?;
-                    ledger.record_recovery(NodeMessage::Welcome.encode().len() as u64);
+                    if jfam != self.family.name() {
+                        let msg = format!(
+                            "replacement worker {k} derives working statistics under the \
+                             '{jfam}' family but the fit runs '{}' — pass the matching \
+                             --family to the replacement",
+                            self.family.name()
+                        );
+                        if let Err(e) =
+                            link.send(NodeMessage::Abort { message: msg.clone() })
+                        {
+                            log_lost_abort(k, "re-admission", &e);
+                        }
+                        return Err(DlrError::Solver(msg));
+                    }
+                    let welcome = NodeMessage::Welcome {
+                        family: self.family.name().to_string(),
+                        alpha: self.enet_alpha,
+                    };
+                    ledger.record_recovery(welcome.encode().len() as u64);
+                    link.send(welcome).map_err(|e| worker_err(k, e))?;
                     // admitted: lift the handshake deadline for fit traffic
                     raw.set_read_timeout(None)?;
                     return Ok((link, engine));
@@ -945,6 +1022,8 @@ impl WorkerPool {
             self.p as u32,
             expected.len() as u32,
             crc_u32(expected),
+            self.family,
+            self.enet_alpha,
         )?;
         self.engine_names[k] = engine;
         self.links[k] = link;
@@ -1022,7 +1101,7 @@ fn spawn_worker_thread(
                 }
                 // the admission reply of the handshake — the
                 // in-process join can only succeed
-                ThreadMsg::Proto(NodeMessage::Welcome) => {}
+                ThreadMsg::Proto(NodeMessage::Welcome { .. }) => {}
                 ThreadMsg::Proto(msg) => match node.handle(msg) {
                     Ok(Some(reply)) => {
                         if reply_tx.send(reply).is_err() {
@@ -1047,6 +1126,7 @@ fn spawn_worker_thread(
 /// Validate one node's `Join` announcement and admit it. Shared by the
 /// in-process spawn; the socket accept inlines the same checks because it
 /// must first learn *which* machine connected.
+#[allow(clippy::too_many_arguments)]
 fn handshake(
     link: &mut dyn Transport,
     machine: usize,
@@ -1054,6 +1134,8 @@ fn handshake(
     p: u32,
     local_features: u32,
     cols_checksum: u64,
+    family: FamilyKind,
+    enet_alpha: f64,
 ) -> Result<String> {
     match link.recv().map_err(|e| worker_err(machine, e))? {
         NodeMessage::Join {
@@ -1063,26 +1145,33 @@ fn handshake(
             local_features: jf,
             cols_checksum: jc,
             engine,
+            family: jfam,
         } => {
             let ok = jm as usize == machine
                 && jn == n
                 && jp == p
                 && jf == local_features
-                && jc == cols_checksum;
+                && jc == cols_checksum
+                && jfam == family.name();
             if !ok {
                 let msg = format!(
-                    "worker {jm} announced shard (n = {jn}, p = {jp}, features = {jf}) \
-                     but the leader expects machine {machine} with (n = {n}, p = {p}, \
-                     features = {local_features}) — are the worker's data/partition \
-                     flags identical to the leader's?"
+                    "worker {jm} announced shard (n = {jn}, p = {jp}, features = {jf}, \
+                     family = {jfam}) but the leader expects machine {machine} with \
+                     (n = {n}, p = {p}, features = {local_features}, family = {}) — \
+                     are the worker's data/partition/family flags identical to the \
+                     leader's?",
+                    family.name()
                 );
                 if let Err(e) = link.send(NodeMessage::Abort { message: msg.clone() }) {
                     log_lost_abort(machine, "admission", &e);
                 }
                 return Err(DlrError::Solver(msg));
             }
-            link.send(NodeMessage::Welcome)
-                .map_err(|e| worker_err(machine, e))?;
+            link.send(NodeMessage::Welcome {
+                family: family.name().to_string(),
+                alpha: enet_alpha,
+            })
+            .map_err(|e| worker_err(machine, e))?;
             Ok(engine)
         }
         NodeMessage::Abort { message } => Err(DlrError::Solver(format!(
@@ -1215,7 +1304,7 @@ mod tests {
 
         // cold state: workers derive (w, z) from their own zero margins
         let mut results = Vec::new();
-        pool.sweep_all(0.2, 1e-6, &mut results).unwrap();
+        pool.sweep_all(0.2, 1e-6, 0.0, &mut results).unwrap();
         assert_eq!(results.len(), 3);
         // sum of dmargins across machines must equal the full delta margin
         let n = ds.n_examples();
@@ -1297,7 +1386,7 @@ mod tests {
         for _ in 0..5 {
             // no Apply between sweeps: worker state is unchanged, so the
             // recycled buffers must reproduce identical results
-            pool.sweep_all(0.1, 1e-6, &mut results).unwrap();
+            pool.sweep_all(0.1, 1e-6, 0.0, &mut results).unwrap();
             assert_eq!(results.len(), 2);
             match &first {
                 None => first = Some(results.clone()),

@@ -1,7 +1,11 @@
 //! Leader-side O(n + p) pieces of the iteration: working statistics,
-//! objective evaluation and the directional derivative D of Alg 3.
+//! objective evaluation and the directional derivative D of Alg 3. The
+//! loss-specific parts delegate to [`crate::family::GlmFamily`]; the
+//! logistic wrappers here are kept for the baselines and as the historical
+//! names (bit-identical to the pre-family code).
 
-use crate::util::math::{l1_norm, log1pexp, sigmoid, working_stats};
+use crate::family::{FamilyKind, GlmFamily};
+use crate::util::math::{l1_norm, sigmoid, sq_norm};
 
 /// Native (w, z, loss) computation — the leader fallback when not using the
 /// AOT stats kernel; also the reference the XLA path is tested against.
@@ -15,31 +19,46 @@ pub fn stats_native(margins: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, f64) {
 /// [`stats_native`] into caller-reused buffers (cleared and refilled;
 /// capacities persist) — the per-iteration hot path holds these in its
 /// scratch so steady-state stats computations allocate nothing. Returns the
-/// loss sum.
+/// loss sum. Logistic only; family-generic callers go through
+/// [`GlmFamily::working_stats_into`] (which this delegates to).
 pub fn stats_native_into(
     margins: &[f32],
     y: &[f32],
     w: &mut Vec<f32>,
     z: &mut Vec<f32>,
 ) -> f64 {
-    debug_assert_eq!(margins.len(), y.len());
-    w.clear();
-    z.clear();
-    w.reserve(margins.len());
-    z.reserve(margins.len());
-    let mut loss = 0f64;
-    for (&m, &yy) in margins.iter().zip(y) {
-        let (wi, zi) = working_stats(yy as f64, m as f64);
-        w.push(wi as f32);
-        z.push(zi as f32);
-        loss += log1pexp(-(yy as f64) * m as f64);
-    }
-    loss
+    FamilyKind::Logistic.family().working_stats_into(margins, y, w, z)
 }
 
-/// Full objective f(β) = L(margins) + λ‖β‖₁  (paper eq. (2)).
+/// Full objective f(β) = L(margins) + λ‖β‖₁  (paper eq. (2)). Logistic
+/// pure-L1 only — the family/elastic-net generalization is
+/// [`objective_family`].
 pub fn objective(margins: &[f32], y: &[f32], beta: &[f32], lambda: f64) -> f64 {
     crate::util::math::logloss_sum(margins, y) + lambda * l1_norm(beta)
+}
+
+/// Family-generic objective with the elastic-net penalty:
+/// `f(β) = Σᵢ ℓ(yᵢ, mᵢ) + λ(α‖β‖₁ + (1−α)/2·‖β‖₂²)`.
+pub fn objective_family(
+    family: &dyn GlmFamily,
+    margins: &[f32],
+    y: &[f32],
+    beta: &[f32],
+    lambda: f64,
+    enet_alpha: f64,
+) -> f64 {
+    family.loss_sum(margins, y) + enet_penalty(beta, lambda, enet_alpha)
+}
+
+/// The elastic-net penalty `λ(α‖β‖₁ + (1−α)/2·‖β‖₂²)`. The `α = 1` branch
+/// reproduces the historical `λ‖β‖₁` expression bit-for-bit (no dead ‖β‖₂²
+/// pass, no `×1.0` detour).
+pub fn enet_penalty(beta: &[f32], lambda: f64, enet_alpha: f64) -> f64 {
+    if enet_alpha >= 1.0 {
+        lambda * l1_norm(beta)
+    } else {
+        lambda * (enet_alpha * l1_norm(beta) + 0.5 * (1.0 - enet_alpha) * sq_norm(beta))
+    }
 }
 
 /// ∇L(β)ᵀΔβ = Σ_i (p_i - (y_i+1)/2) · Δm_i — the smooth part of D
@@ -81,6 +100,33 @@ pub fn l1_at_alpha(beta: &[f32], delta: &[f32], support: &[u32], alpha: f64, lam
         acc += (beta[j] as f64 + alpha * delta[j] as f64).abs();
     }
     lambda * acc
+}
+
+/// Elastic-net penalty of `β + αΔβ` evaluated over the support union —
+/// the line search's per-α penalty term. The support union contains every
+/// nonzero of β and Δβ, so the sums over it *are* the full norms. The
+/// `enet_alpha = 1` branch is [`l1_at_alpha`] verbatim (bit-identical
+/// default path).
+pub fn penalty_at_alpha(
+    beta: &[f32],
+    delta: &[f32],
+    support: &[u32],
+    alpha: f64,
+    lambda: f64,
+    enet_alpha: f64,
+) -> f64 {
+    if enet_alpha >= 1.0 {
+        return l1_at_alpha(beta, delta, support, alpha, lambda);
+    }
+    let mut l1 = 0f64;
+    let mut l2 = 0f64;
+    for &j in support {
+        let j = j as usize;
+        let b = beta[j] as f64 + alpha * delta[j] as f64;
+        l1 += b.abs();
+        l2 += b * b;
+    }
+    lambda * (enet_alpha * l1 + 0.5 * (1.0 - enet_alpha) * l2)
 }
 
 #[cfg(test)]
@@ -130,5 +176,47 @@ mod tests {
         let beta = [1f32, -3.0];
         let f = objective(&margins, &y, &beta, 0.5);
         assert!((f - (2.0 * (2f64).ln() + 0.5 * 4.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn enet_penalty_defaults_bit_identical_to_l1() {
+        let beta = [0.5f32, 0.0, -2.25, 1e-3];
+        let lambda = 0.7;
+        assert_eq!(
+            enet_penalty(&beta, lambda, 1.0).to_bits(),
+            (lambda * l1_norm(&beta)).to_bits()
+        );
+        // α = 0.5: λ(0.5·‖β‖₁ + 0.25·‖β‖₂²)
+        let want = lambda * (0.5 * l1_norm(&beta) + 0.25 * sq_norm(&beta));
+        assert!((enet_penalty(&beta, lambda, 0.5) - want).abs() < 1e-12);
+        // family-generic objective reduces to the logistic one at defaults
+        let margins = [0f32, 0.3];
+        let y = [1f32, -1.0];
+        let fam = FamilyKind::Logistic.family();
+        assert_eq!(
+            objective_family(fam, &margins, &y, &beta, lambda, 1.0).to_bits(),
+            objective(&margins, &y, &beta, lambda).to_bits()
+        );
+    }
+
+    #[test]
+    fn penalty_at_alpha_matches_full_norms_over_support() {
+        let beta = [0f32, 1.0, 0.0, -2.0];
+        let delta = [0.5f32, 0.0, 0.0, 2.0];
+        let s = support_union(&beta, &delta);
+        // enet_alpha = 1 is l1_at_alpha verbatim
+        assert_eq!(
+            penalty_at_alpha(&beta, &delta, &s, 0.7, 2.0, 1.0).to_bits(),
+            l1_at_alpha(&beta, &delta, &s, 0.7, 2.0).to_bits()
+        );
+        // enet_alpha < 1: compare against dense full-vector norms
+        let step = 0.4;
+        let stepped: Vec<f32> =
+            beta.iter().zip(&delta).map(|(&b, &d)| (b as f64 + step * d as f64) as f32).collect();
+        let lam = 1.3;
+        let ea = 0.6;
+        let want = lam * (ea * l1_norm(&stepped) + 0.5 * (1.0 - ea) * sq_norm(&stepped));
+        let got = penalty_at_alpha(&beta, &delta, &s, step, lam, ea);
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
     }
 }

@@ -6,29 +6,45 @@
 use crate::config::{PathConfig, TrainConfig};
 use crate::data::dataset::Dataset;
 use crate::error::Result;
+use crate::family::FamilyKind;
 use crate::metrics;
 use crate::solver::dglmnet::DGlmnetSolver;
 use crate::solver::estimator::{Estimator, NoopObserver};
 use crate::solver::model::SparseModel;
 use crate::util::timer::Stopwatch;
 
-/// λ_max: the smallest λ for which β* = 0. At β = 0, p_i = ½, w_i = ¼,
-/// z_i = 2y_i, so the per-feature screening value is
-/// |Σ_i w_i x_ij z_i| = |Σ_i x_ij y_i| / 2.
+/// λ_max for logistic pure-L1 (the paper's setting): at β = 0, p_i = ½,
+/// w_i = ¼, z_i = 2y_i, so the per-feature screening value is
+/// |Σ_i w_i x_ij z_i| = |Σ_i x_ij y_i| / 2. The family/elastic-net
+/// generalization is [`lambda_max_family`]; this is its logistic α = 1
+/// case (bit-identical — ×½ and ÷1 are exact).
+pub fn lambda_max(ds: &Dataset) -> f64 {
+    lambda_max_family(ds, FamilyKind::Logistic, 1.0)
+}
+
+/// λ_max for any family and elastic-net mix: the smallest λ at which the
+/// zero-gradient `max_j |Σ_i x_ij t_i| · scale` is dominated by the L1
+/// share λ·α, i.e. that max divided by α. The targets `t` and `scale` come
+/// from the family (logistic: t = y, scale = ½; gaussian: t = y; poisson:
+/// t = y − 1).
 ///
 /// Computed by-feature over a CSC view with the same unrolled
 /// [`gather_dot4`](crate::util::math::gather_dot4) reduction every engine's
 /// `lambda_max_local` uses, so the distributed max-reduce is bit-identical
 /// to this leader-side scan (a CSC column holds exactly a shard column's
 /// ascending example contributions).
-pub fn lambda_max(ds: &Dataset) -> f64 {
+pub fn lambda_max_family(ds: &Dataset, family: FamilyKind, enet_alpha: f64) -> f64 {
+    let fam = family.family();
+    let mut scratch = Vec::new();
+    let targets = fam.lambda_max_targets(&ds.y, &mut scratch);
+    let scale = fam.lambda_max_scale();
     let csc = ds.x.to_csc();
     let mut best = 0f64;
     for j in 0..csc.n_cols {
         let (rows, vals) = csc.col(j);
-        best = best.max(crate::util::math::gather_dot4(rows, vals, &ds.y).abs() / 2.0);
+        best = best.max(crate::util::math::gather_dot4(rows, vals, targets).abs() * scale);
     }
-    best
+    best / enet_alpha
 }
 
 /// One Figure-1 point.

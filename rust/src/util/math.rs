@@ -58,6 +58,11 @@ pub fn l1_norm(v: &[f32]) -> f64 {
     v.iter().map(|&x| (x as f64).abs()).sum()
 }
 
+/// Squared L2 norm ‖v‖₂² in f64 accumulation (the elastic-net ridge term).
+pub fn sq_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64 * x as f64).sum()
+}
+
 /// Number of non-zeros (exact zero; the solver produces exact zeros via
 /// soft-thresholding, so no epsilon is needed).
 pub fn nnz(v: &[f32]) -> usize {

@@ -141,6 +141,70 @@ fn checkpoint_resume_reproduces_uninterrupted_objective_exactly() {
     }
 }
 
+/// The GLM-subsystem seed-exactness pin: a config that *explicitly* asks
+/// for the default family (logistic, pure L1) must be indistinguishable —
+/// objective trace, comm ledger, final β, and the saved artifact's bytes —
+/// from a config that never mentions families at all. Run on both synth
+/// shapes (tall-sparse dna-like, wide webspam-like) so both sweep layouts
+/// are covered.
+#[test]
+fn explicit_logistic_pure_l1_is_bit_identical_to_defaults() {
+    use dglmnet::family::FamilyKind;
+    let cases = [
+        ("dna-like", synth::dna_like(600, 50, 5, 112)),
+        ("webspam-like", synth::webspam_like(300, 1_200, 15, 113)),
+    ];
+    for (name, ds) in &cases {
+        let lam = lambda_max(ds) / 8.0;
+        let mut plain = DGlmnetSolver::from_dataset(ds, &native_cfg(3, lam)).unwrap();
+        let fit_plain = plain.fit_lambda(lam).unwrap();
+        assert!(fit_plain.iterations >= 2, "{name}: need a non-trivial fit");
+
+        let explicit_cfg = TrainConfig::builder()
+            .machines(3)
+            .engine(EngineKind::Native)
+            .lambda(lam)
+            .max_iter(40)
+            .family(FamilyKind::Logistic)
+            .enet_alpha(1.0)
+            .build();
+        let mut explicit = DGlmnetSolver::from_dataset(ds, &explicit_cfg).unwrap();
+        let fit_explicit = explicit.fit_lambda(lam).unwrap();
+
+        assert_eq!(fit_plain.iterations, fit_explicit.iterations, "{name}");
+        assert_eq!(
+            fit_plain.objective.to_bits(),
+            fit_explicit.objective.to_bits(),
+            "{name}: objectives diverged"
+        );
+        assert_eq!(fit_plain.comm_bytes, fit_explicit.comm_bytes, "{name}: comm ledger");
+        assert_eq!(fit_plain.trace.len(), fit_explicit.trace.len());
+        for (a, b) in fit_plain.trace.iter().zip(&fit_explicit.trace) {
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{name} iter {}", a.iter);
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{name} iter {}", a.iter);
+            assert_eq!(a.comm_bytes, b.comm_bytes, "{name} iter {}", a.iter);
+        }
+        for (j, (a, b)) in plain.beta.iter().zip(&explicit.beta).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name} beta[{j}]");
+        }
+
+        // ... and the artifacts both write are the seed's format, byte for
+        // byte: a default fit must carry no family=/alpha= header tokens
+        let pid = std::process::id();
+        let pa = std::env::temp_dir().join(format!("dglmnet_pin_a_{pid}_{name}.model"));
+        let pb = std::env::temp_dir().join(format!("dglmnet_pin_b_{pid}_{name}.model"));
+        fit_plain.model.clone().with_meta(ds.n_examples(), "dglmnet").save(&pa).unwrap();
+        fit_explicit.model.clone().with_meta(ds.n_examples(), "dglmnet").save(&pb).unwrap();
+        let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+        assert_eq!(ba, bb, "{name}: artifact bytes diverged");
+        let text = String::from_utf8_lossy(&ba);
+        assert!(!text.contains("family="), "{name}: default artifact named a family");
+        assert!(!text.contains("alpha="), "{name}: default artifact carried alpha");
+    }
+}
+
 #[test]
 fn checkpoint_rejects_mismatched_solver() {
     let ds = synth::dna_like(200, 20, 4, 104);

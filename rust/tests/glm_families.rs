@@ -1,0 +1,510 @@
+//! Acceptance tests for the GLM family subsystem (PR 9):
+//!
+//! * **Serial-reference convergence** — every family (logistic, gaussian,
+//!   poisson; pure L1 and elastic-net mixes) fit by the distributed solver
+//!   at M ∈ {1, 3} reaches the objective of an *independent* serial
+//!   reference implementation (proximal gradient / ISTA with backtracking,
+//!   written here from the subgradient optimality conditions, sharing no
+//!   code with the solver) within tolerance;
+//! * **Transport equivalence** — a real-TCP socket fit is bit-identical to
+//!   the in-process fit at the same machine count, for non-logistic
+//!   families too (the handshake carries family + alpha);
+//! * **Checkpoint resume** — a gaussian/poisson fit interrupted mid-run and
+//!   resumed in a fresh solver reproduces the uninterrupted final β and
+//!   objective exactly;
+//! * **Supervised failover** — a killed socket worker mid-poisson-fit is
+//!   probed out, replaced, and the completed fit stays bit-identical;
+//! * **Rejection paths** — alpha outside (0, 1], labels a family cannot
+//!   handle, and family/alpha-mismatched checkpoints all fail fast with
+//!   actionable errors instead of silently corrupting a fit.
+
+use std::net::{SocketAddr, TcpListener};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use dglmnet::cluster::transport::{Fault, FaultyTransport, SocketTransport};
+use dglmnet::cluster::WorkerNode;
+use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::data::dataset::Dataset;
+use dglmnet::data::synth;
+use dglmnet::family::FamilyKind;
+use dglmnet::solver::pool::spawn_local_socket_workers;
+use dglmnet::solver::regpath::lambda_max_family;
+use dglmnet::solver::{DGlmnetSolver, FitResult, NoopObserver, StepOutcome};
+
+fn family_cfg(m: usize, lambda: f64, family: FamilyKind, alpha: f64) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(60)
+        .family(family)
+        .enet_alpha(alpha)
+        .build()
+}
+
+// ---------------------------------------------------------------------------
+// The independent serial reference: proximal gradient (ISTA) with
+// backtracking, in f64 throughout. Shares only the family loss definitions
+// with the crate — the optimization path is entirely different from the
+// solver's block-diagonal Newton sweeps, so agreement means both found the
+// same optimum, not the same bugs.
+// ---------------------------------------------------------------------------
+
+fn ref_margins(ds: &Dataset, beta: &[f64]) -> Vec<f64> {
+    (0..ds.n_examples())
+        .map(|i| {
+            let (cols, vals) = ds.x.row(i);
+            cols.iter().zip(vals).map(|(&j, &v)| v as f64 * beta[j as usize]).sum()
+        })
+        .collect()
+}
+
+fn ref_loss(ds: &Dataset, family: FamilyKind, margins: &[f64]) -> f64 {
+    let fam = family.family();
+    margins.iter().zip(&ds.y).map(|(&m, &y)| fam.loss(y as f64, m)).sum()
+}
+
+fn ref_grad(ds: &Dataset, family: FamilyKind, margins: &[f64]) -> Vec<f64> {
+    let fam = family.family();
+    let mut g = vec![0f64; ds.n_features()];
+    for i in 0..ds.n_examples() {
+        let d = fam.dloss(ds.y[i] as f64, margins[i]);
+        let (cols, vals) = ds.x.row(i);
+        for (&j, &v) in cols.iter().zip(vals) {
+            g[j as usize] += d * v as f64;
+        }
+    }
+    g
+}
+
+fn ref_penalty(beta: &[f64], lambda: f64, alpha: f64) -> f64 {
+    let l1: f64 = beta.iter().map(|v| v.abs()).sum();
+    let sq: f64 = beta.iter().map(|v| v * v).sum();
+    lambda * (alpha * l1 + 0.5 * (1.0 - alpha) * sq)
+}
+
+/// Elastic-net proximal operator of the gradient step `v = β_j − t·g_j`:
+/// soft-threshold by tλα, then shrink by the ridge term.
+fn ref_prox(v: f64, t: f64, lambda: f64, alpha: f64) -> f64 {
+    let s = v.abs() - t * lambda * alpha;
+    let soft = if s > 0.0 { v.signum() * s } else { 0.0 };
+    soft / (1.0 + t * lambda * (1.0 - alpha))
+}
+
+/// Minimize Σᵢ ℓ(yᵢ, βᵀxᵢ) + λ(α‖β‖₁ + (1−α)/2·‖β‖₂²) by ISTA with
+/// backtracking line search; returns the optimal objective value.
+fn reference_objective(ds: &Dataset, family: FamilyKind, lambda: f64, alpha: f64) -> f64 {
+    let p = ds.n_features();
+    let mut beta = vec![0f64; p];
+    let mut t = 1.0f64;
+    let mut prev_obj = f64::INFINITY;
+    for _ in 0..5_000 {
+        let m = ref_margins(ds, &beta);
+        let l0 = ref_loss(ds, family, &m);
+        let g = ref_grad(ds, family, &m);
+        // backtrack until the quadratic upper bound holds at step t
+        let next = loop {
+            let cand: Vec<f64> = beta
+                .iter()
+                .zip(&g)
+                .map(|(&b, &gj)| ref_prox(b - t * gj, t, lambda, alpha))
+                .collect();
+            let gd: f64 =
+                g.iter().zip(&cand).zip(&beta).map(|((&gj, &c), &b)| gj * (c - b)).sum();
+            let sq: f64 = cand.iter().zip(&beta).map(|(&c, &b)| (c - b) * (c - b)).sum();
+            let l_c = ref_loss(ds, family, &ref_margins(ds, &cand));
+            if l_c <= l0 + gd + sq / (2.0 * t) + 1e-12 {
+                break cand;
+            }
+            t *= 0.5;
+            assert!(t > 1e-18, "reference backtracking collapsed");
+        };
+        beta = next;
+        let obj = ref_loss(ds, family, &ref_margins(ds, &beta))
+            + ref_penalty(&beta, lambda, alpha);
+        if (prev_obj - obj).abs() <= 1e-10 * obj.abs().max(1.0) {
+            return obj;
+        }
+        prev_obj = obj;
+        t *= 1.5; // let the step recover between iterations
+    }
+    prev_obj
+}
+
+struct Case {
+    name: &'static str,
+    ds: Dataset,
+    family: FamilyKind,
+    alpha: f64,
+}
+
+fn cases() -> Vec<Case> {
+    vec![
+        Case {
+            name: "logistic-l1",
+            ds: synth::dna_like(400, 40, 5, 903),
+            family: FamilyKind::Logistic,
+            alpha: 1.0,
+        },
+        Case {
+            name: "gaussian-l1",
+            ds: synth::gaussian_like(400, 60, 6, 901),
+            family: FamilyKind::Gaussian,
+            alpha: 1.0,
+        },
+        Case {
+            name: "gaussian-enet",
+            ds: synth::gaussian_like(350, 50, 6, 904),
+            family: FamilyKind::Gaussian,
+            alpha: 0.5,
+        },
+        Case {
+            name: "poisson-l1",
+            ds: synth::poisson_like(400, 60, 6, 902),
+            family: FamilyKind::Poisson,
+            alpha: 1.0,
+        },
+        Case {
+            name: "poisson-enet",
+            ds: synth::poisson_like(300, 40, 6, 905),
+            family: FamilyKind::Poisson,
+            alpha: 0.6,
+        },
+    ]
+}
+
+/// Relative objective agreement between a solver fit and the serial
+/// reference. The solver runs f32 margins/β, the reference pure f64, and
+/// both stop on their own tolerances — 2e-3 relative covers that without
+/// hiding a wrong-optimum bug (block-diagonal mistakes move objectives by
+/// orders of magnitude more).
+fn assert_near_reference(name: &str, m: usize, fit: &FitResult, want: f64) {
+    let got = fit.objective;
+    let rel = (got - want).abs() / want.abs().max(1.0);
+    assert!(
+        rel < 2e-3,
+        "{name} (M = {m}): solver objective {got} vs reference {want} (rel {rel:.2e})"
+    );
+}
+
+#[test]
+fn families_converge_to_the_serial_reference_in_process() {
+    for case in cases() {
+        let lam = lambda_max_family(&case.ds, case.family, case.alpha) / 8.0;
+        let want = reference_objective(&case.ds, case.family, lam, case.alpha);
+        assert!(want.is_finite(), "{}: reference diverged", case.name);
+        for m in [1usize, 3] {
+            let cfg = family_cfg(m, lam, case.family, case.alpha);
+            let mut solver = DGlmnetSolver::from_dataset(&case.ds, &cfg).unwrap();
+            let fit = solver.fit_lambda(lam).unwrap();
+            assert!(fit.iterations >= 1, "{}", case.name);
+            assert_near_reference(case.name, m, &fit, want);
+            // the fitted model records its family + alpha for downstream
+            // artifact/serve validation
+            assert_eq!(fit.model.family, case.family, "{}", case.name);
+            assert_eq!(fit.model.enet_alpha.to_bits(), case.alpha.to_bits(), "{}", case.name);
+        }
+    }
+}
+
+/// Run one fit over real TCP sockets with well-behaved workers.
+fn socket_fit(ds: &Dataset, cfg: &TrainConfig, lambda: f64) -> (FitResult, Vec<f32>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers = spawn_local_socket_workers(cfg, ds, addr);
+    let mut solver = DGlmnetSolver::from_dataset_socket(ds, cfg, listener).unwrap();
+    let fit = solver.fit_lambda(lambda).unwrap();
+    let beta = solver.beta.clone();
+    drop(solver); // sends Shutdown to every node
+    for h in workers {
+        h.join().expect("worker thread panicked").unwrap();
+    }
+    (fit, beta)
+}
+
+fn assert_bit_identical(a: &FitResult, beta_a: &[f32], b: &FitResult, beta_b: &[f32]) {
+    assert_eq!(a.iterations, b.iterations, "iteration counts diverged");
+    assert_eq!(
+        a.objective.to_bits(),
+        b.objective.to_bits(),
+        "objectives diverged: {} vs {}",
+        a.objective,
+        b.objective
+    );
+    assert_eq!(a.comm_bytes, b.comm_bytes, "charged comm ledger diverged");
+    assert_eq!(a.trace.len(), b.trace.len());
+    for (x, y) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "iter {}", x.iter);
+        assert_eq!(x.alpha.to_bits(), y.alpha.to_bits(), "iter {}", x.iter);
+        assert_eq!(x.comm_bytes, y.comm_bytes, "iter {}", x.iter);
+    }
+    assert_eq!(beta_a.len(), beta_b.len());
+    for (j, (x, y)) in beta_a.iter().zip(beta_b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "beta[{j}]");
+    }
+}
+
+/// The socket transport must be invisible to the math for every family:
+/// same machine count, same bits — margins, (w, z) stats, and the Δβ
+/// exchange all ride the wire without perturbation, and the handshake's
+/// family/alpha fields admit the workers.
+#[test]
+fn socket_fits_are_bit_identical_to_in_process_for_every_family() {
+    for case in [
+        Case {
+            name: "gaussian-l1",
+            ds: synth::gaussian_like(300, 40, 6, 911),
+            family: FamilyKind::Gaussian,
+            alpha: 1.0,
+        },
+        Case {
+            name: "poisson-enet",
+            ds: synth::poisson_like(300, 40, 6, 912),
+            family: FamilyKind::Poisson,
+            alpha: 0.7,
+        },
+    ] {
+        let lam = lambda_max_family(&case.ds, case.family, case.alpha) / 8.0;
+        let cfg = family_cfg(2, lam, case.family, case.alpha);
+
+        let mut local = DGlmnetSolver::from_dataset(&case.ds, &cfg).unwrap();
+        let fit_local = local.fit_lambda(lam).unwrap();
+        assert!(fit_local.iterations >= 2, "{}: fit too short to mean much", case.name);
+
+        let (fit_socket, beta_socket) = socket_fit(&case.ds, &cfg, lam);
+        assert_bit_identical(&fit_local, &local.beta, &fit_socket, &beta_socket);
+
+        // and the socket run sits at the reference optimum too
+        let want = reference_objective(&case.ds, case.family, lam, case.alpha);
+        assert_near_reference(case.name, 2, &fit_socket, want);
+    }
+}
+
+/// Checkpoint/resume is family-aware: interrupt a non-logistic fit, resume
+/// in a fresh solver (as a fresh process would), and the final β and
+/// objective are exactly the uninterrupted run's.
+#[test]
+fn non_logistic_checkpoint_resume_is_exact() {
+    for (name, ds, family, alpha) in [
+        (
+            "gaussian",
+            synth::gaussian_like(350, 50, 6, 921),
+            FamilyKind::Gaussian,
+            1.0f64,
+        ),
+        (
+            "poisson",
+            synth::poisson_like(350, 50, 6, 922),
+            FamilyKind::Poisson,
+            0.8,
+        ),
+    ] {
+        let lam = lambda_max_family(&ds, family, alpha) / 32.0;
+        let cfg = family_cfg(3, lam, family, alpha);
+
+        let mut whole = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let fit_whole = whole.fit_lambda(lam).unwrap();
+        assert!(fit_whole.iterations > 3, "{name}: need a fit long enough to interrupt");
+
+        let mut partial = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let ck = {
+            let mut driver = partial.driver(lam);
+            for _ in 0..2 {
+                match driver.step().unwrap() {
+                    StepOutcome::Progress(_) => {}
+                    StepOutcome::Finished { .. } => panic!("{name}: finished early"),
+                }
+            }
+            driver.checkpoint().unwrap()
+        };
+        assert_eq!(ck.family, family, "{name}");
+        assert_eq!(ck.enet_alpha.to_bits(), alpha.to_bits(), "{name}");
+
+        // round-trip through disk so the JSON family/alpha encoding is on
+        // the path, then resume in a fresh solver
+        let path = std::env::temp_dir()
+            .join(format!("dglmnet_glm_resume_{}_{name}.json", std::process::id()));
+        ck.save(&path).unwrap();
+        let loaded = dglmnet::solver::Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ck, loaded);
+
+        let mut fresh = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+        let fit_resumed = fresh
+            .driver_from_checkpoint(&loaded)
+            .unwrap()
+            .run(&mut NoopObserver)
+            .unwrap();
+
+        assert_eq!(
+            fit_whole.objective.to_bits(),
+            fit_resumed.objective.to_bits(),
+            "{name}: resumed objective must be exact"
+        );
+        assert_eq!(fit_whole.iterations, fit_resumed.iterations, "{name}");
+        for (j, (a, b)) in whole.beta.iter().zip(&fresh.beta).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name} beta[{j}]");
+        }
+    }
+}
+
+/// A well-behaved socket worker thread for one machine.
+fn good_worker(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    machine: usize,
+    addr: SocketAddr,
+) -> JoinHandle<()> {
+    let shard = DGlmnetSolver::shard_for(ds, cfg, machine);
+    let y = std::sync::Arc::new(ds.y.clone());
+    let p = ds.n_features();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let mut node =
+            WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
+                .unwrap();
+        let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
+        let _ = node.serve(&mut t);
+    })
+}
+
+/// A worker whose transport dies on its `dies_at`-th recv — `kill -9`
+/// mid-fit, seen from the worker side.
+fn doomed_worker(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    machine: usize,
+    addr: SocketAddr,
+    dies_at: usize,
+) -> JoinHandle<()> {
+    let shard = DGlmnetSolver::shard_for(ds, cfg, machine);
+    let y = std::sync::Arc::new(ds.y.clone());
+    let p = ds.n_features();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let mut node =
+            WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
+                .unwrap();
+        let socket = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
+        let mut t = FaultyTransport::new(Box::new(socket), Fault::Drop, dies_at);
+        let _ = node.serve(&mut t);
+    })
+}
+
+/// Supervised failover holds for non-logistic fits: kill a socket worker
+/// mid-poisson-fit, let the supervisor probe it out and re-admit a
+/// replacement, and the completed fit reproduces the undisturbed run's
+/// final β, trajectory, and charged comm ledger exactly.
+#[test]
+fn killed_socket_worker_replacement_is_exact_for_poisson() {
+    let ds = synth::poisson_like(350, 50, 6, 931);
+    let family = FamilyKind::Poisson;
+    let lam = lambda_max_family(&ds, family, 1.0) / 64.0; // small λ ⇒ plenty to kill
+    let cfg = TrainConfig::builder()
+        .machines(2)
+        .engine(EngineKind::Native)
+        .lambda(lam)
+        .max_iter(60)
+        .family(family)
+        .supervise(true)
+        .heartbeat_timeout_secs(2.0)
+        .build();
+
+    let (fit_ref, beta_ref) = socket_fit(&ds, &cfg, lam);
+    assert!(fit_ref.iterations >= 4, "need a fit long enough to kill");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let good = good_worker(&ds, &cfg, 0, addr);
+    let doomed = doomed_worker(&ds, &cfg, 1, addr, 5);
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    // the stand-in waits in the listener backlog until re-admission
+    let replacement = good_worker(&ds, &cfg, 1, addr);
+
+    let fit_chaos = solver.fit_lambda(lam).unwrap();
+    assert!(
+        solver.recovery_comm_bytes() > 0,
+        "the supervisor must have probed and re-admitted"
+    );
+    let beta_chaos = solver.beta.clone();
+    assert_bit_identical(&fit_ref, &beta_ref, &fit_chaos, &beta_chaos);
+    drop(solver);
+    doomed.join().unwrap();
+    replacement.join().unwrap();
+    good.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Rejection paths: misconfiguration fails fast, never silently
+// ---------------------------------------------------------------------------
+
+#[test]
+fn alpha_outside_unit_interval_is_rejected() {
+    let ds = synth::dna_like(100, 20, 4, 941);
+    for bad in [0.0f64, -0.3, 1.5, f64::NAN] {
+        let cfg = family_cfg(2, 0.5, FamilyKind::Logistic, bad);
+        let err = match DGlmnetSolver::from_dataset(&ds, &cfg) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("alpha = {bad} must be rejected"),
+        };
+        assert!(err.contains("alpha"), "alpha = {bad}: {err}");
+        assert!(err.contains("(0, 1]"), "alpha = {bad}: {err}");
+    }
+}
+
+#[test]
+fn poisson_rejects_signed_labels_at_setup() {
+    // ±1 classification labels handed to a count model: fail at setup with
+    // a pointer to the right family, not NaNs ten iterations in
+    let ds = synth::dna_like(100, 20, 4, 942);
+    let cfg = family_cfg(2, 0.5, FamilyKind::Poisson, 1.0);
+    let err = match DGlmnetSolver::from_dataset(&ds, &cfg) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("poisson on ±1 labels must be rejected"),
+    };
+    assert!(err.contains("non-negative"), "{err}");
+    assert!(err.contains("logistic"), "{err}");
+}
+
+#[test]
+fn gaussian_rejects_non_finite_labels_at_setup() {
+    let mut ds = synth::gaussian_like(100, 20, 4, 943);
+    ds.y[17] = f32::INFINITY;
+    let cfg = family_cfg(2, 0.5, FamilyKind::Gaussian, 1.0);
+    let err = match DGlmnetSolver::from_dataset(&ds, &cfg) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("non-finite labels must be rejected"),
+    };
+    assert!(err.contains("finite"), "{err}");
+}
+
+#[test]
+fn checkpoints_reject_family_and_alpha_mismatches() {
+    let ds = synth::gaussian_like(150, 20, 4, 944);
+    let lam = 0.5;
+    let cfg = family_cfg(2, lam, FamilyKind::Gaussian, 1.0);
+    let mut solver = DGlmnetSolver::from_dataset(&ds, &cfg).unwrap();
+    let ck = solver.driver(lam).checkpoint().unwrap();
+
+    // same dataset, wrong family: actionable rejection
+    let mut wrong_family =
+        DGlmnetSolver::from_dataset(&ds, &family_cfg(2, lam, FamilyKind::Logistic, 1.0))
+            .unwrap();
+    let err = match wrong_family.driver_from_checkpoint(&ck) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("family mismatch must be rejected"),
+    };
+    assert!(err.contains("family"), "{err}");
+    assert!(err.contains("gaussian") && err.contains("logistic"), "{err}");
+
+    // right family, wrong alpha: same contract
+    let mut wrong_alpha =
+        DGlmnetSolver::from_dataset(&ds, &family_cfg(2, lam, FamilyKind::Gaussian, 0.5))
+            .unwrap();
+    let err = match wrong_alpha.driver_from_checkpoint(&ck) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("alpha mismatch must be rejected"),
+    };
+    assert!(err.contains("alpha"), "{err}");
+}

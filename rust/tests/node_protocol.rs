@@ -253,6 +253,7 @@ fn join_body(ds: &Dataset, cfg: &TrainConfig, machine: usize) -> Vec<u8> {
         local_features: cols.len() as u32,
         cols_checksum: crc_u32(&cols),
         engine: "native".into(),
+        family: "logistic".into(),
     }
     .encode()
 }

@@ -90,6 +90,23 @@ def main():
             if chosen is not None:
                 gated = {f"{chosen}_comm_bytes", "auto_comm_bytes"}
             for key, bval in sorted(base.items()):
+                if isinstance(bval, dict) and "median_secs" in bval:
+                    # a timing entry nested one level down (the families
+                    # section of BENCH_ablation.json): same median gate as
+                    # top-level timings
+                    cval = cur.get(key)
+                    if not isinstance(cval, dict) or "median_secs" not in cval:
+                        continue
+                    b, c = bval["median_secs"], cval["median_secs"]
+                    compared += 1
+                    if b >= MIN_COMPARABLE_SECS and c > b * (1 + MAX_TIME_REGRESSION):
+                        failures.append(
+                            f"{name}.{key}: median {c:.6g}s vs baseline {b:.6g}s "
+                            f"(+{(c / b - 1) * 100:.1f}% > "
+                            f"{MAX_TIME_REGRESSION * 100:.0f}%)")
+                    else:
+                        print(f"  [ok]     {name}.{key}: {c:.6g}s vs {b:.6g}s")
+                    continue
                 if key.endswith("peak_rss_bytes"):
                     cval = cur.get(key)
                     if cval is None or bval <= 0:
