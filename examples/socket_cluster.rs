@@ -72,7 +72,7 @@ fn worker_main(machine: usize, addr: &str) -> Result<(), Box<dyn std::error::Err
         std::process::id()
     );
     let mut transport = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
-    node.serve(&mut transport)?;
+    node.serve(&mut transport, None)?;
     println!("[worker {machine}] pid {}: shutdown", std::process::id());
     Ok(())
 }
@@ -95,7 +95,7 @@ fn worker_store_main(
         std::process::id()
     );
     let mut transport = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
-    node.serve(&mut transport)?;
+    node.serve(&mut transport, None)?;
     println!("[store worker {machine}] pid {}: shutdown", std::process::id());
     Ok(())
 }

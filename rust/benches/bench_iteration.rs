@@ -1,8 +1,11 @@
 //! P1 — hot-path micro benchmarks: one worker sweep (XLA vs native), leader
 //! stats, batched line-search evaluation, the simulated tree AllReduce
-//! (dense vs sparse wire format), and a solver-level sparse-vs-dense
-//! communication comparison. Emits `BENCH_iteration.json` so the perf
-//! trajectory across PRs starts from a machine-readable baseline.
+//! (dense vs sparse wire format), a solver-level sparse-vs-dense
+//! communication comparison, and the topology section — measured leader vs
+//! max-worker bytes on the wire, star vs tree, M ∈ {4, 8} (the tree's
+//! leader-byte M-ratio is the O(1)-leader-bandwidth gate). Emits
+//! `BENCH_iteration.json` so the perf trajectory across PRs starts from a
+//! machine-readable baseline.
 //!
 //! Run: `cargo bench --bench bench_iteration`
 
@@ -12,7 +15,7 @@ use dglmnet::bench_harness::{bench, section, BenchStats};
 use dglmnet::cluster::allreduce::{AllReduceScratch, TreeAllReduce};
 use dglmnet::cluster::network::{NetworkLedger, NetworkModel};
 use dglmnet::cluster::partition::{FeaturePartition, PartitionStrategy};
-use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
+use dglmnet::config::{EngineKind, ExchangeStrategy, TopologyKind, TrainConfig};
 use dglmnet::data::shuffle::shard_in_memory;
 use dglmnet::data::sparse::SparseVec;
 use dglmnet::data::synth;
@@ -420,6 +423,81 @@ fn main() {
         );
         m.insert("objective".into(), Json::Num(fit_local.objective));
         report.insert("fit_transport_comparison".into(), Json::Obj(m));
+    }
+
+    // ---- topology: measured leader vs worker bandwidth, star vs tree ----
+    // The O(1)-leader-bandwidth claim, measured at the transport: under the
+    // star the leader's per-iteration bytes grow linearly in M, under the
+    // tree they are pinned to the root edge. check_bench_regression.py
+    // gates the tree's M-ratio near 1.
+    section("topology: leader bytes on the wire, star vs tree (M ∈ {4, 8})");
+    {
+        let ds = synth::webspam_like(800, 8_000, 12, 13);
+        let lam = lambda_max(&ds) / 4.0;
+        let mut m = BTreeMap::new();
+        let mut leader_per_iter = BTreeMap::new();
+        for (topology, tname) in
+            [(TopologyKind::Star, "star"), (TopologyKind::Tree, "tree")]
+        {
+            for machines in [4usize, 8] {
+                let cfg = TrainConfig::builder()
+                    .machines(machines)
+                    .engine(EngineKind::Native)
+                    .lambda(lam)
+                    .max_iter(15)
+                    .topology(topology)
+                    .build();
+                let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap();
+                let (workers, counters) =
+                    dglmnet::solver::pool::spawn_local_socket_workers_counted(
+                        &cfg, &ds, addr,
+                    );
+                let mut solver =
+                    DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+                let fit = solver.fit(None).unwrap();
+                let (sent, recv) = solver.leader_wire_bytes();
+                drop(solver);
+                for h in workers {
+                    h.join().expect("worker thread panicked").unwrap();
+                }
+                let iters = fit.iterations.max(1) as f64;
+                let leader = (sent + recv) as f64 / iters;
+                let worker_max = counters
+                    .iter()
+                    .map(|c| {
+                        let (s, r) = c.totals();
+                        s + r
+                    })
+                    .max()
+                    .unwrap_or(0) as f64
+                    / iters;
+                println!(
+                    "{tname} M = {machines}: leader {leader:.0} B/iter, \
+                     busiest worker {worker_max:.0} B/iter ({} iters, obj {:.6})",
+                    fit.iterations, fit.objective
+                );
+                leader_per_iter.insert((tname, machines), leader);
+                m.insert(
+                    format!("{tname}_m{machines}_leader_bytes_per_iter"),
+                    Json::Num(leader),
+                );
+                m.insert(
+                    format!("{tname}_m{machines}_max_worker_bytes_per_iter"),
+                    Json::Num(worker_max),
+                );
+            }
+        }
+        for tname in ["star", "tree"] {
+            let ratio = leader_per_iter[&(tname, 8usize)]
+                / leader_per_iter[&(tname, 4usize)].max(1.0);
+            println!("{tname} leader-byte ratio M=8 / M=4: {ratio:.2}x");
+            m.insert(
+                format!("leader_byte_ratio_m8_over_m4_{tname}"),
+                Json::Num(ratio),
+            );
+        }
+        report.insert("fit_topology".into(), Json::Obj(m));
     }
 
     // ---- leader-process peak RSS ----------------------------------------

@@ -396,6 +396,24 @@ impl CodecPolicy {
         }
         (best, cost)
     }
+
+    /// Byte cost of one message knowing only its nnz — the leader-side
+    /// replay of a physical-tree exchange charges edges from the senders'
+    /// nnz metadata without ever seeing the index lists. Only valid when
+    /// the class is f16-ineligible under this policy (the delta-varint
+    /// cost depends on the actual index gaps): returns `None` when f16 is
+    /// allowed, which is why `topology = tree` requires the lossless
+    /// policy at config validation.
+    pub fn cost_from_nnz(&self, nnz: usize, dim: usize, class: MessageClass) -> Option<u64> {
+        if self.allows_f16(class) {
+            return None;
+        }
+        let dense = dense_wire_bytes(dim);
+        if self.force_dense {
+            return Some(dense);
+        }
+        Some(dense.min(sparse_wire_bytes(nnz)))
+    }
 }
 
 #[cfg(test)]
@@ -466,5 +484,29 @@ mod tests {
             forced.pick(&sparse_msg.indices, dim, MessageClass::Margins),
             (WireCodec::DenseF32, 400)
         );
+    }
+
+    #[test]
+    fn cost_from_nnz_matches_pick_when_lossless() {
+        let dim = 100usize;
+        let sparse_msg = SparseVec::from_dense(
+            &(0..dim).map(|i| if i % 10 == 0 { 1.0 } else { 0.0 }).collect::<Vec<f32>>(),
+        );
+        let dense_msg = SparseVec::from_dense(&vec![1.0f32; dim]);
+        for policy in [
+            CodecPolicy::lossless(),
+            CodecPolicy { force_dense: true, ..CodecPolicy::default() },
+        ] {
+            for msg in [&sparse_msg, &dense_msg] {
+                for class in [MessageClass::Margins, MessageClass::Beta] {
+                    let (_, cost) = policy.pick(&msg.indices, dim, class);
+                    assert_eq!(policy.cost_from_nnz(msg.nnz(), dim, class), Some(cost));
+                }
+            }
+        }
+        // f16-eligible classes cannot be replayed from nnz alone
+        let lossy = CodecPolicy { f16_margins: true, ..CodecPolicy::default() };
+        assert_eq!(lossy.cost_from_nnz(sparse_msg.nnz(), dim, MessageClass::Margins), None);
+        assert!(lossy.cost_from_nnz(sparse_msg.nnz(), dim, MessageClass::Beta).is_some());
     }
 }

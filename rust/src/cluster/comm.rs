@@ -16,6 +16,7 @@ use crate::cluster::codec::{dense_wire_bytes, sparse_wire_bytes, CodecPolicy, Me
 use crate::cluster::network::{NetworkLedger, NetworkModel};
 use crate::cluster::TreeAllReduce;
 use crate::data::sparse::SparseVec;
+use crate::error::{DlrError, Result};
 
 /// One unit of off-thread work (a tree-node merge).
 pub type Job = Box<dyn FnOnce() + Send>;
@@ -132,6 +133,130 @@ impl Collective for AllGather {
     fn name(&self) -> &'static str {
         "allgather"
     }
+}
+
+/// The deterministic pairwise merge bracket over `m` machines, as a
+/// parent/children forest: `children[a]` lists the machines whose
+/// accumulated payloads machine `a` merges, **in merge (round) order** —
+/// the exact pairing [`run_sparse_exchange`] walks (machine `2k` absorbs
+/// `2k+1`, odd survivor promoted). Machine 0 is always the root. A machine
+/// finishes all of its own merges before the round in which it is absorbed,
+/// so a physical tree that ships each machine's accumulated payload once,
+/// then folds children in this order, reproduces the staged engine's f64
+/// sums bit for bit. This is the tree the leader hands out as
+/// [`crate::cluster::protocol::Topology`].
+pub fn bracket_children(m: usize) -> Vec<Vec<u32>> {
+    let mut children: Vec<Vec<u32>> = vec![Vec::new(); m];
+    if m < 2 {
+        return children;
+    }
+    let mut active: Vec<u32> = (0..m as u32).collect();
+    let mut next: Vec<u32> = Vec::new();
+    while active.len() > 1 {
+        let pairs = active.len() / 2;
+        next.clear();
+        for t in 0..pairs {
+            let a = active[2 * t];
+            let b = active[2 * t + 1];
+            children[a as usize].push(b);
+            next.push(a);
+        }
+        if active.len() % 2 == 1 {
+            next.push(*active.last().unwrap());
+        }
+        std::mem::swap(&mut active, &mut next);
+    }
+    children
+}
+
+/// Bracket parent of every machine (`None` for the root, machine 0).
+pub fn bracket_parent(m: usize) -> Vec<Option<u32>> {
+    let mut parent = vec![None; m];
+    for (a, kids) in bracket_children(m).iter().enumerate() {
+        for &b in kids {
+            parent[b as usize] = Some(a as u32);
+        }
+    }
+    parent
+}
+
+/// Leader-side ledger replay of one physical-tree exchange: walk the exact
+/// bracket [`run_sparse_exchange`] walks and charge every reduce edge (and
+/// optionally the per-edge root broadcast) from nnz metadata instead of
+/// staged payloads. `edge_nnz(into, from)` reports the nnz of the
+/// accumulated payload machine `from` shipped to machine `into` (carried up
+/// the tree as [`crate::cluster::protocol::EdgeStat`]s); `root_nnz` is the
+/// merged root payload's nnz. Valid only under policies whose per-message
+/// cost depends on nnz alone (no f16 for the class — guaranteed by config
+/// validation for `topology = tree`): then every charge, and hence the
+/// `comm_bytes` ledger, is bit-identical to the staged engine's.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_tree_charges(
+    model: &NetworkModel,
+    m: usize,
+    dim: usize,
+    ledger: &NetworkLedger,
+    policy: &CodecPolicy,
+    class: MessageClass,
+    charge: bool,
+    broadcast: bool,
+    edge_nnz: &mut dyn FnMut(u32, u32) -> Result<usize>,
+    root_nnz: usize,
+) -> Result<AllReduceOutcome> {
+    let cost_of = |nnz: usize| {
+        policy.cost_from_nnz(nnz, dim, class).ok_or_else(|| {
+            DlrError::Solver(
+                "tree-topology charge replay requires an nnz-only wire cost \
+                 (no f16 for this message class)"
+                    .into(),
+            )
+        })
+    };
+    if m <= 1 {
+        return Ok(AllReduceOutcome { rounds: 0, bytes_moved: 0, simulated_secs: 0.0 });
+    }
+    let mut active: Vec<u32> = (0..m as u32).collect();
+    let mut next: Vec<u32> = Vec::new();
+    let mut pairs_per_round: Vec<usize> = Vec::new();
+    let mut rounds = 0usize;
+    let mut bytes = 0u64;
+    let mut secs_total = 0f64;
+    while active.len() > 1 {
+        rounds += 1;
+        let mut round_secs = 0f64;
+        next.clear();
+        let pairs = active.len() / 2;
+        pairs_per_round.push(pairs);
+        for t in 0..pairs {
+            let a = active[2 * t];
+            let b = active[2 * t + 1];
+            if charge {
+                let cost = cost_of(edge_nnz(a, b)?)?;
+                let t_secs = ledger.record(model, cost);
+                bytes += cost;
+                round_secs = round_secs.max(t_secs);
+            }
+            next.push(a);
+        }
+        if active.len() % 2 == 1 {
+            next.push(*active.last().unwrap());
+        }
+        std::mem::swap(&mut active, &mut next);
+        secs_total += round_secs;
+    }
+    if charge && broadcast {
+        let cost = cost_of(root_nnz)?;
+        for &pairs in pairs_per_round.iter().rev() {
+            let mut round_secs = 0f64;
+            for _ in 0..pairs {
+                let t = ledger.record(model, cost);
+                bytes += cost;
+                round_secs = round_secs.max(t);
+            }
+            secs_total += round_secs;
+        }
+    }
+    Ok(AllReduceOutcome { rounds, bytes_moved: bytes, simulated_secs: secs_total })
 }
 
 /// Per-message cost under the lossless codecs, optionally admitting the
@@ -374,6 +499,141 @@ mod tests {
         // payload denser than 50%: dense cost caps every message
         let capped = estimate_tree_bytes(&mut vec![90, 90], 100);
         assert_eq!(capped, 400 + 400); // one reduce edge + one broadcast edge
+    }
+
+    #[test]
+    fn bracket_forest_and_charge_replay_match_the_staged_engine() {
+        use crate::cluster::allreduce::merge_sorted_into;
+        use crate::cluster::network::NetworkLedger;
+        use std::collections::HashMap;
+        for m in [2usize, 3, 5, 8] {
+            let dim = 4_000usize;
+            // overlapping supports: merged nnz < summed nnz, so the replay
+            // genuinely needs the per-edge accumulated sizes
+            let contribs: Vec<SparseVec> = (0..m)
+                .map(|k| {
+                    SparseVec::from_dense(
+                        &(0..dim)
+                            .map(|i| {
+                                if (i + k) % 13 == 0 { (i + 2 * k) as f32 * 0.5 } else { 0.0 }
+                            })
+                            .collect::<Vec<f32>>(),
+                    )
+                })
+                .collect();
+            let refs: Vec<&SparseVec> = contribs.iter().collect();
+            let ar = TreeAllReduce::new(NetworkModel::gigabit());
+            let staged_ledger = NetworkLedger::new();
+            let mut scratch = AllReduceScratch::default();
+            let mut out = SparseVec::new(0);
+            let ctx = CommCtx {
+                ledger: &staged_ledger,
+                policy: CodecPolicy::lossless(),
+                class: MessageClass::Margins,
+                exec: &SerialExecutor,
+                charge: true,
+                broadcast: true,
+            };
+            let o = ar.exchange(m, &|k| refs[k], dim, &ctx, &mut scratch, &mut out);
+
+            // simulate the physical tree: every machine folds its bracket
+            // children's accumulated payloads in merge order; children are
+            // always higher-numbered than their parent, so a descending
+            // sweep folds every subtree before its edge fires
+            let children = bracket_children(m);
+            let parent = bracket_parent(m);
+            assert_eq!(parent[0], None);
+            for (a, kids) in children.iter().enumerate() {
+                for &b in kids {
+                    assert!(b as usize > a, "child {b} must outnumber parent {a}");
+                    assert_eq!(parent[b as usize], Some(a as u32));
+                }
+            }
+            let mut acc_idx: Vec<Vec<u32>> =
+                contribs.iter().map(|c| c.indices.clone()).collect();
+            let mut acc_val: Vec<Vec<f64>> = contribs
+                .iter()
+                .map(|c| c.values.iter().map(|&v| v as f64).collect())
+                .collect();
+            let mut edge_nnzs: HashMap<(u32, u32), usize> = HashMap::new();
+            for a in (0..m).rev() {
+                for &b in &children[a] {
+                    edge_nnzs.insert((a as u32, b), acc_idx[b as usize].len());
+                    let (mut oi, mut ov) = (Vec::new(), Vec::new());
+                    let (ai, av) = (&acc_idx[a], &acc_val[a]);
+                    merge_sorted_into(
+                        ai,
+                        av,
+                        &acc_idx[b as usize],
+                        &acc_val[b as usize],
+                        &mut oi,
+                        &mut ov,
+                    );
+                    acc_idx[a] = oi;
+                    acc_val[a] = ov;
+                }
+            }
+            assert_eq!(edge_nnzs.len(), m - 1, "one edge per non-root machine");
+            let mut root_sv = SparseVec::new(dim);
+            for (i, &x) in acc_idx[0].iter().zip(&acc_val[0]) {
+                root_sv.push(*i, x as f32);
+            }
+            assert_eq!(root_sv, out, "m={m}: physical merges must match staged root");
+
+            // the nnz-metadata replay reproduces the staged ledger exactly
+            let replay_ledger = NetworkLedger::new();
+            let r = replay_tree_charges(
+                &NetworkModel::gigabit(),
+                m,
+                dim,
+                &replay_ledger,
+                &CodecPolicy::lossless(),
+                MessageClass::Margins,
+                true,
+                true,
+                &mut |a, b| Ok(edge_nnzs[&(a, b)]),
+                acc_idx[0].len(),
+            )
+            .unwrap();
+            assert_eq!(r.bytes_moved, o.bytes_moved, "m={m}");
+            assert_eq!(r.rounds, o.rounds);
+            assert_eq!(replay_ledger.total_bytes(), staged_ledger.total_bytes());
+            assert_eq!(replay_ledger.total_messages(), staged_ledger.total_messages());
+            assert_eq!(r.simulated_secs.to_bits(), o.simulated_secs.to_bits());
+
+            // gather-only (broadcast = false) drops exactly the retrace
+            let gather_ledger = NetworkLedger::new();
+            let g = replay_tree_charges(
+                &NetworkModel::gigabit(),
+                m,
+                dim,
+                &gather_ledger,
+                &CodecPolicy::lossless(),
+                MessageClass::Beta,
+                true,
+                false,
+                &mut |a, b| Ok(edge_nnzs[&(a, b)]),
+                acc_idx[0].len(),
+            )
+            .unwrap();
+            assert!(g.bytes_moved < r.bytes_moved);
+
+            // an f16-eligible class cannot be replayed from nnz alone
+            let lossy = CodecPolicy { f16_margins: true, ..CodecPolicy::default() };
+            assert!(replay_tree_charges(
+                &NetworkModel::gigabit(),
+                m,
+                dim,
+                &NetworkLedger::new(),
+                &lossy,
+                MessageClass::Margins,
+                true,
+                true,
+                &mut |a, b| Ok(edge_nnzs[&(a, b)]),
+                acc_idx[0].len(),
+            )
+            .is_err());
+        }
     }
 
     #[test]

@@ -38,6 +38,38 @@
 //!   [`comm::TaskExecutor`] (the solver plugs its `WorkerPool` in), and
 //!   [`comm::TreeByteEstimator`] — an EWMA-sharpened dry-walk cost model —
 //!   drives the automatic reduce-Δm vs allgather-Δβ strategy pick.
+//!
+//!   **Topology matrix.** The merge *bracket* — ascending machine ids,
+//!   pairwise rounds, survivor in the lower slot — is fixed; what varies
+//!   is where its edges physically run ([`comm::bracket_children`] /
+//!   [`comm::bracket_parent`] derive the forest both sides use):
+//!
+//!   | transport   | `topology = star` (default)     | `topology = tree`              |
+//!   |-------------|---------------------------------|--------------------------------|
+//!   | in-process  | leader-staged merges            | leader-staged merges           |
+//!   | socket      | leader-staged merges            | **peer-to-peer tree merges**   |
+//!
+//!   Leader-staged: every worker ships its raw contribution to the
+//!   leader, which runs the bracket on its task pool and *simulates* the
+//!   per-edge byte charges. Peer-to-peer: workers open direct
+//!   worker↔worker links (epoch-fenced, shard-identity-validated — see
+//!   [`transport::PeerTable`]), each folds its bracket children's payloads
+//!   through the same pairwise-f64 merge and forwards one message to its
+//!   parent, so the leader's data-plane traffic per iteration is O(1) in
+//!   M: one `Sweep` down and one pre-merged `TreeSwept` up on the root
+//!   edge ([`protocol::TreeSwept`] carries per-origin/per-edge nnz
+//!   metadata; [`comm::replay_tree_charges`] replays the identical ledger
+//!   charges from it).
+//!
+//!   **Bit-identity pins.** All four cells produce bit-identical fits —
+//!   objective trajectory, β bits, and the charged comm ledger: the merge
+//!   order is the same bracket, interior tree edges carry exact f64
+//!   intermediates (f32-framed only when every value round-trips —
+//!   [`protocol::TreePayload`]), and machine 0 applies the bracket root's
+//!   f32 rounding at exactly the point the staged engine does. Pinned in
+//!   `tests/wire_codec.rs` (tree vs star vs in-process trajectories,
+//!   measured-vs-charged bytes per edge) and `tests/failover.rs`
+//!   (supervised recovery under both topologies).
 //! * [`node`] — **stateful endpoints.** A [`node::WorkerNode`] owns its
 //!   feature shard, its engine, **its β shard, and its margins copy**: a
 //!   `Sweep` request carries only `(λ, ν)` (the node derives `(w, z)` from
@@ -82,10 +114,13 @@ pub mod transport;
 pub use allreduce::TreeAllReduce;
 pub use codec::{CodecPolicy, MessageClass, WireCodec};
 pub use comm::{
-    AllGather, ByteEstimate, Collective, SerialExecutor, TaskExecutor, TreeByteEstimator,
+    bracket_children, bracket_parent, replay_tree_charges, AllGather, ByteEstimate,
+    Collective, SerialExecutor, TaskExecutor, TreeByteEstimator,
 };
 pub use network::{NetworkLedger, NetworkModel};
 pub use node::WorkerNode;
 pub use partition::{FeaturePartition, PartitionStrategy};
-pub use protocol::NodeMessage;
-pub use transport::{Fault, FaultyTransport, SocketTransport, Transport};
+pub use protocol::{EdgeStat, NodeMessage, OriginStat, PeerInfo, Topology, TreeSwept};
+pub use transport::{
+    Fault, FaultyTransport, PeerTable, SocketTransport, Transport, WireCounters,
+};

@@ -16,6 +16,17 @@
 //! CLI subcommand runs `serve` over a [`SocketTransport`] in a separate
 //! process.
 //!
+//! **Tree topology.** When the `Welcome` carries a
+//! [`Topology`](crate::cluster::protocol::Topology), the node switches to
+//! peer-to-peer serving: it builds direct worker↔worker links from a
+//! [`PeerTable`], receives `Sweep`/`Apply` from its bracket parent (machine
+//! 0: from the leader), relays them verbatim to its bracket children, folds
+//! the children's [`TreeSwept`] payloads into its own f64 accumulators in
+//! bracket order — the exact merges the leader-staged engine would run —
+//! and ships one merged message to its parent. The leader control link
+//! stays responsive throughout (pings are answered mid-collective), so
+//! supervision works unchanged.
+//!
 //! **Bit-exactness contract.** The leader applies the merged update as
 //! `β[j] += α·Δβ[j]` / `margins[i] += α·Δm[i]` in f32. The node applies
 //! the identical operations to its shard: the feature partition is
@@ -29,17 +40,74 @@
 //! [`SocketTransport`]: crate::cluster::transport::SocketTransport
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::cluster::protocol::{crc_f32, crc_u32, NodeMessage};
-use crate::cluster::transport::Transport;
+use crate::cluster::allreduce::merge_sorted_into;
+use crate::cluster::protocol::{
+    crc_f32, crc_u32, EdgeStat, NodeMessage, OriginStat, Topology, TreePayload, TreeSwept,
+};
+use crate::cluster::transport::{PeerTable, SocketTransport, Transport};
 use crate::config::TrainConfig;
 use crate::data::shuffle::FeatureShard;
 use crate::data::sparse::SparseVec;
 use crate::data::store::ShardStore;
-use crate::engine::{build_engine, SubproblemEngine};
+use crate::engine::{build_engine, SubproblemEngine, SweepResult};
 use crate::error::{DlrError, Result};
 use crate::family::FamilyKind;
+
+/// Poll quantum for peer links while a collective is in flight.
+const PEER_POLL: Duration = Duration::from_millis(25);
+/// Poll quantum for the leader control link while awaiting a peer — short,
+/// so peer traffic latency stays dominated by `PEER_POLL`.
+const CTL_POLL: Duration = Duration::from_millis(1);
+/// Poll quantum of the idle tree serve loop (leader link, then parent).
+const SERVE_POLL: Duration = Duration::from_millis(25);
+
+/// How a tree collective concluded on this node.
+enum TreeFlow {
+    /// Finished; the merged result / ack went up the arrival link.
+    Done,
+    /// A leader-link message (topology refresh, rollback, shutdown)
+    /// interrupted the collective — the serve loop must process it as if
+    /// freshly received, and owes the collective nothing.
+    Deferred(NodeMessage),
+}
+
+/// What a peer-link wait produced.
+enum PeerRecv {
+    Msg(NodeMessage),
+    Deferred(NodeMessage),
+}
+
+/// Wait for one message on a peer link while keeping the leader control
+/// link responsive: pings are answered inline, any other leader message
+/// interrupts the wait and is handed back for the serve loop.
+fn recv_from_peer(
+    peer_machine: u32,
+    kind: &str,
+    peer: &mut SocketTransport,
+    leader: &mut dyn Transport,
+    timeout: Option<Duration>,
+) -> Result<PeerRecv> {
+    let start = Instant::now();
+    loop {
+        if let Some(msg) = peer.recv_poll(PEER_POLL)? {
+            return Ok(PeerRecv::Msg(msg));
+        }
+        match leader.recv_poll(CTL_POLL)? {
+            Some(NodeMessage::Ping) => leader.send(NodeMessage::Pong)?,
+            Some(other) => return Ok(PeerRecv::Deferred(other)),
+            None => {}
+        }
+        if let Some(t) = timeout {
+            if start.elapsed() > t {
+                return Err(DlrError::Solver(format!(
+                    "timed out waiting for tree {kind} {peer_machine}"
+                )));
+            }
+        }
+    }
+}
 
 /// One worker machine as a protocol endpoint.
 pub struct WorkerNode {
@@ -127,7 +195,9 @@ impl WorkerNode {
     }
 
     /// The handshake announcement the leader validates on accept.
-    pub fn join_message(&self) -> NodeMessage {
+    /// `listen_addr` is the worker's peer-listener address for tree runs
+    /// (empty when the worker binds none).
+    pub fn join_message(&self, listen_addr: &str) -> NodeMessage {
         NodeMessage::Join {
             machine: self.machine as u32,
             n: self.n as u32,
@@ -136,35 +206,51 @@ impl WorkerNode {
             cols_checksum: crc_u32(&self.global_cols),
             engine: self.engine.name().to_string(),
             family: self.family.name().to_string(),
+            listen_addr: listen_addr.to_string(),
         }
+    }
+
+    /// One CD sweep over the worker-held shard state: derive `(w, z)` from
+    /// the worker's margins, sweep the engine, remember `Δβ_local` for the
+    /// upcoming `Apply`. Shared by the star reply path and the tree
+    /// collective.
+    fn run_sweep(
+        &mut self,
+        lam: f32,
+        nu: f32,
+        l2: f32,
+        mut recycle: SweepResult,
+    ) -> Result<SweepResult> {
+        // stats from the worker-held margins — no leader broadcast
+        let t0 = Instant::now();
+        self.family.family().working_stats_into(
+            &self.margins,
+            &self.y,
+            &mut self.w,
+            &mut self.z,
+        );
+        let stats_secs = t0.elapsed().as_secs_f64();
+        self.engine
+            .sweep(&self.w, &self.z, &self.beta_local, lam, nu, l2, &mut recycle)?;
+        recycle.compute_secs += stats_secs;
+        // remember Δβ_local for the upcoming Apply
+        self.last_delta.clear(recycle.delta_local.dim);
+        self.last_delta
+            .indices
+            .extend_from_slice(&recycle.delta_local.indices);
+        self.last_delta
+            .values
+            .extend_from_slice(&recycle.delta_local.values);
+        Ok(recycle)
     }
 
     /// Process one request; `Ok(None)` means shutdown (the serve loop
     /// exits cleanly).
     pub fn handle(&mut self, msg: NodeMessage) -> Result<Option<NodeMessage>> {
         match msg {
-            NodeMessage::Sweep { lam, nu, l2, mut recycle } => {
-                // stats from the worker-held margins — no leader broadcast
-                let t0 = Instant::now();
-                self.family.family().working_stats_into(
-                    &self.margins,
-                    &self.y,
-                    &mut self.w,
-                    &mut self.z,
-                );
-                let stats_secs = t0.elapsed().as_secs_f64();
-                self.engine
-                    .sweep(&self.w, &self.z, &self.beta_local, lam, nu, l2, &mut recycle)?;
-                recycle.compute_secs += stats_secs;
-                // remember Δβ_local for the upcoming Apply
-                self.last_delta.clear(recycle.delta_local.dim);
-                self.last_delta
-                    .indices
-                    .extend_from_slice(&recycle.delta_local.indices);
-                self.last_delta
-                    .values
-                    .extend_from_slice(&recycle.delta_local.values);
-                Ok(Some(NodeMessage::Swept { result: recycle }))
+            NodeMessage::Sweep { lam, nu, l2, recycle } => {
+                let result = self.run_sweep(lam, nu, l2, recycle)?;
+                Ok(Some(NodeMessage::Swept { result }))
             }
             NodeMessage::Apply { alpha, dmargins, delta } => {
                 if dmargins.dim != self.n {
@@ -254,10 +340,22 @@ impl WorkerNode {
     /// Run the node over a transport: announce, await admission, then
     /// request/reply until `Shutdown` (or a transport/engine failure,
     /// which is reported to the leader as an `Abort` before returning).
-    pub fn serve(&mut self, transport: &mut dyn Transport) -> Result<()> {
-        transport.send(self.join_message())?;
+    ///
+    /// `peers` is the worker's peer-link table for tree-topology runs;
+    /// `None` serves star-only. When the leader's `Welcome` (or a later
+    /// [`NodeMessage::Topology`]) carries a topology, the node builds its
+    /// peer links and switches to the tree serve loop.
+    pub fn serve(
+        &mut self,
+        transport: &mut dyn Transport,
+        mut peers: Option<&mut PeerTable>,
+    ) -> Result<()> {
+        let listen_addr =
+            peers.as_ref().map(|p| p.advertised_addr().to_string()).unwrap_or_default();
+        transport.send(self.join_message(&listen_addr))?;
+        let mut topo: Option<Topology> = None;
         match transport.recv()? {
-            NodeMessage::Welcome { family, .. } => {
+            NodeMessage::Welcome { family, topology, .. } => {
                 // defense in depth: the leader validates the Join's family
                 // and only welcomes a match, but a worker must never sweep
                 // under the wrong loss even against a buggy leader
@@ -268,6 +366,17 @@ impl WorkerNode {
                         self.machine,
                         self.family.name()
                     )));
+                }
+                if let Some(t) = topology {
+                    let table = peers.as_deref_mut().ok_or_else(|| {
+                        DlrError::Solver(format!(
+                            "leader runs the tree topology but worker {} has no peer \
+                             listener (start it with --topology tree)",
+                            self.machine
+                        ))
+                    })?;
+                    table.rebuild(&t, self.machine as u32, crc_u32(&self.global_cols))?;
+                    topo = Some(t);
                 }
             }
             NodeMessage::Abort { message } => {
@@ -283,25 +392,354 @@ impl WorkerNode {
                 )))
             }
         }
-        loop {
-            let msg = transport.recv()?;
-            match self.handle(msg) {
-                Ok(Some(reply)) => transport.send(reply)?,
-                Ok(None) => return Ok(()),
-                Err(e) => {
-                    if let Err(send_err) =
-                        transport.send(NodeMessage::Abort { message: e.to_string() })
-                    {
-                        crate::cluster::protocol::log_lost_abort(
-                            self.machine,
-                            "serve",
-                            &send_err,
-                        );
+        // with a peer table the node always runs the tree loop: a welcome
+        // without a topology (a re-admitted replacement, or a tree worker
+        // joining a star leader) idles at epoch 0 — answering everything
+        // star-style — until a `Topology` message installs the tree
+        if let Some(peers) = peers {
+            return self.serve_tree(transport, peers, topo.unwrap_or_default());
+        }
+        match topo {
+            Some(_) => unreachable!("topology admission requires a peer table"),
+            None => loop {
+                let msg = transport.recv()?;
+                match self.handle(msg) {
+                    Ok(Some(reply)) => transport.send(reply)?,
+                    Ok(None) => return Ok(()),
+                    Err(e) => {
+                        if let Err(send_err) =
+                            transport.send(NodeMessage::Abort { message: e.to_string() })
+                        {
+                            crate::cluster::protocol::log_lost_abort(
+                                self.machine,
+                                "serve",
+                                &send_err,
+                            );
+                        }
+                        return Err(e);
                     }
-                    return Err(e);
+                }
+            },
+        }
+    }
+
+    /// The tree serve loop: poll the leader control link, then the bracket
+    /// parent link. Data traffic (`Sweep`/`Apply`) arrives from the parent
+    /// (machine 0: from the leader) and is answered up the same link;
+    /// everything else is leader control.
+    ///
+    /// Collective failures (a dead or wedged peer) are **not** fatal: the
+    /// node reports an `Abort` up its arrival link and keeps serving — the
+    /// supervisor rolls the run back and re-issues a fresh-epoch topology,
+    /// which tears down every peer link (discarding any stale in-flight
+    /// payloads with them) and rebuilds the tree.
+    fn serve_tree(
+        &mut self,
+        transport: &mut dyn Transport,
+        peers: &mut PeerTable,
+        mut topo: Topology,
+    ) -> Result<()> {
+        let mut pending: Option<NodeMessage> = None;
+        loop {
+            // 1. leader link: a message deferred out of a collective, or
+            //    freshly polled control traffic
+            let lmsg = match pending.take() {
+                Some(m) => Some(m),
+                None => transport.recv_poll(SERVE_POLL)?,
+            };
+            if let Some(msg) = lmsg {
+                match msg {
+                    NodeMessage::Topology(t) => {
+                        peers.rebuild(&t, self.machine as u32, crc_u32(&self.global_cols))?;
+                        topo = t;
+                    }
+                    // epoch 0 = no topology installed yet (a freshly
+                    // re-admitted replacement): data traffic falls through
+                    // to `handle` and is answered star-style until the
+                    // supervisor re-issues the tree
+                    NodeMessage::Sweep { lam, nu, l2, .. } if topo.epoch > 0 => {
+                        match self.tree_sweep(lam, nu, l2, &topo, peers, transport) {
+                            Ok(TreeFlow::Done) => {}
+                            Ok(TreeFlow::Deferred(m)) => pending = Some(m),
+                            Err(e) => {
+                                // leader is the arrival link — if even the
+                                // abort can't travel, the leader is gone
+                                if transport
+                                    .send(NodeMessage::Abort { message: e.to_string() })
+                                    .is_err()
+                                {
+                                    return Err(e);
+                                }
+                            }
+                        }
+                    }
+                    NodeMessage::Apply { alpha, dmargins, delta } if topo.epoch > 0 => {
+                        match self.tree_apply(alpha, dmargins, delta, &topo, peers, transport)
+                        {
+                            Ok(TreeFlow::Done) => transport.send(NodeMessage::Ack)?,
+                            Ok(TreeFlow::Deferred(m)) => pending = Some(m),
+                            Err(e) => {
+                                if transport
+                                    .send(NodeMessage::Abort { message: e.to_string() })
+                                    .is_err()
+                                {
+                                    return Err(e);
+                                }
+                            }
+                        }
+                    }
+                    other => match self.handle(other) {
+                        Ok(Some(reply)) => transport.send(reply)?,
+                        Ok(None) => return Ok(()),
+                        Err(e) => {
+                            if let Err(send_err) =
+                                transport.send(NodeMessage::Abort { message: e.to_string() })
+                            {
+                                crate::cluster::protocol::log_lost_abort(
+                                    self.machine,
+                                    "serve-tree",
+                                    &send_err,
+                                );
+                            }
+                            return Err(e);
+                        }
+                    },
+                }
+                continue;
+            }
+            // 2. parent link: tree data traffic relayed down the bracket
+            let pmsg = match peers.parent_mut() {
+                Some(link) => match link.recv_poll(SERVE_POLL) {
+                    Ok(m) => m,
+                    Err(_) => {
+                        // parent hung up — drop every peer link and keep
+                        // serving the leader, which will re-issue a topology
+                        peers.drop_links();
+                        None
+                    }
+                },
+                None => None,
+            };
+            if let Some(msg) = pmsg {
+                let flow = match msg {
+                    NodeMessage::Sweep { lam, nu, l2, .. } => {
+                        self.tree_sweep(lam, nu, l2, &topo, peers, transport)
+                    }
+                    NodeMessage::Apply { alpha, dmargins, delta } => self
+                        .tree_apply(alpha, dmargins, delta, &topo, peers, transport)
+                        .map(|flow| {
+                            if let TreeFlow::Done = flow {
+                                if let Some(link) = peers.parent_mut() {
+                                    if link.send(NodeMessage::Ack).is_err() {
+                                        peers.drop_links();
+                                    }
+                                }
+                            }
+                            flow
+                        }),
+                    other => Err(DlrError::Solver(format!(
+                        "worker {} received unexpected {} on its tree parent link",
+                        self.machine,
+                        other.name()
+                    ))),
+                };
+                match flow {
+                    Ok(TreeFlow::Done) => {}
+                    Ok(TreeFlow::Deferred(m)) => pending = Some(m),
+                    Err(e) => {
+                        // report up the arrival (parent) link and survive —
+                        // the supervisor heals the tree
+                        if let Some(link) = peers.parent_mut() {
+                            if link
+                                .send(NodeMessage::Abort { message: e.to_string() })
+                                .is_err()
+                            {
+                                peers.drop_links();
+                            }
+                        }
+                    }
                 }
             }
         }
+    }
+
+    /// The tree sweep collective on this node: relay the sweep to every
+    /// bracket child, run the local sweep, remap `Δβ_local` to global ids,
+    /// fold the children's merged payloads into f64 accumulators in bracket
+    /// order, and ship one [`TreeSwept`] up the arrival link — to the
+    /// bracket parent, or (machine 0) the f32-rounded root result to the
+    /// leader, rounded exactly where the leader-staged engine rounds.
+    fn tree_sweep(
+        &mut self,
+        lam: f32,
+        nu: f32,
+        l2: f32,
+        topo: &Topology,
+        peers: &mut PeerTable,
+        leader: &mut dyn Transport,
+    ) -> Result<TreeFlow> {
+        let timeout = if topo.peer_timeout_secs > 0.0 {
+            Some(Duration::from_secs_f64(topo.peer_timeout_secs))
+        } else {
+            None
+        };
+        // fan out first so the subtree computes while this node sweeps
+        for (_, link) in peers.children_mut().iter_mut() {
+            link.send(NodeMessage::Sweep { lam, nu, l2, recycle: SweepResult::default() })?;
+        }
+        let result = self.run_sweep(lam, nu, l2, SweepResult::default())?;
+        // own contribution, shard-local → global ids (global_cols ascends,
+        // so the remapped indices stay sorted), f32 → f64 exactly as the
+        // staged engine lifts contributions into its tree accumulators
+        let mut db_idx: Vec<u32> = result
+            .delta_local
+            .indices
+            .iter()
+            .map(|&j| self.global_cols[j as usize])
+            .collect();
+        let mut db_val: Vec<f64> =
+            result.delta_local.values.iter().map(|&v| v as f64).collect();
+        let mut dm_idx: Vec<u32> = result.dmargins.indices.clone();
+        let mut dm_val: Vec<f64> = result.dmargins.values.iter().map(|&v| v as f64).collect();
+        let mut origins = vec![OriginStat {
+            machine: self.machine as u32,
+            compute_secs: result.compute_secs,
+            db_nnz: db_idx.len() as u32,
+            dm_nnz: dm_idx.len() as u32,
+        }];
+        let mut edges: Vec<EdgeStat> = Vec::new();
+        let (mut mi, mut mv) = (Vec::new(), Vec::new());
+        let nchild = peers.children_mut().len();
+        for slot in 0..nchild {
+            let (child_machine, received) = {
+                let (cm, link) = &mut peers.children_mut()[slot];
+                let cm = *cm;
+                (cm, recv_from_peer(cm, "child", link, leader, timeout)?)
+            };
+            let swept = match received {
+                PeerRecv::Deferred(m) => return Ok(TreeFlow::Deferred(m)),
+                PeerRecv::Msg(NodeMessage::TreeSwept(swept)) => swept,
+                PeerRecv::Msg(NodeMessage::Abort { message }) => {
+                    return Err(DlrError::Solver(format!(
+                        "tree child {child_machine} aborted: {message}"
+                    )))
+                }
+                PeerRecv::Msg(other) => {
+                    return Err(DlrError::Solver(format!(
+                        "expected tree-swept from child {child_machine}, got {}",
+                        other.name()
+                    )))
+                }
+            };
+            if swept.db.dim as usize != self.p || swept.dm.dim as usize != self.n {
+                return Err(DlrError::Solver(format!(
+                    "tree child {child_machine} sent payload dims ({}, {}) but the \
+                     problem is ({}, {})",
+                    swept.db.dim, swept.dm.dim, self.p, self.n
+                )));
+            }
+            // this node's accumulator is the bracket's lower (surviving)
+            // slot: it is the `a` side of the pairwise merge, the child the
+            // `b` side — the a+b summation order of the staged engine
+            merge_sorted_into(&db_idx, &db_val, &swept.db.indices, &swept.db.values, &mut mi, &mut mv);
+            std::mem::swap(&mut db_idx, &mut mi);
+            std::mem::swap(&mut db_val, &mut mv);
+            merge_sorted_into(&dm_idx, &dm_val, &swept.dm.indices, &swept.dm.values, &mut mi, &mut mv);
+            std::mem::swap(&mut dm_idx, &mut mi);
+            std::mem::swap(&mut dm_val, &mut mv);
+            origins.extend_from_slice(&swept.origins);
+            edges.extend_from_slice(&swept.edges);
+        }
+        let mut swept = TreeSwept {
+            db: TreePayload { dim: self.p as u32, indices: db_idx, values: db_val },
+            dm: TreePayload { dim: self.n as u32, indices: dm_idx, values: dm_val },
+            origins,
+            edges,
+        };
+        match topo.parent.as_ref() {
+            Some(parent) => {
+                // charge metadata for the leader's ledger replay: the
+                // accumulated nnz this edge actually carries
+                swept.edges.push(EdgeStat {
+                    into: parent.machine,
+                    from: self.machine as u32,
+                    db_nnz: swept.db.nnz() as u32,
+                    dm_nnz: swept.dm.nnz() as u32,
+                });
+                let link = peers.parent_mut().ok_or_else(|| {
+                    DlrError::Solver(format!(
+                        "worker {} has no live link to tree parent {}",
+                        self.machine, parent.machine
+                    ))
+                })?;
+                link.send(NodeMessage::TreeSwept(swept))?;
+            }
+            None => {
+                // bracket root: round both payloads to f32 — the exact
+                // `v as f32` the staged engine applies when it reads the
+                // root accumulator out as the merged result
+                for v in swept.db.values.iter_mut() {
+                    *v = (*v as f32) as f64;
+                }
+                for v in swept.dm.values.iter_mut() {
+                    *v = (*v as f32) as f64;
+                }
+                leader.send(NodeMessage::TreeSwept(swept))?;
+            }
+        }
+        Ok(TreeFlow::Done)
+    }
+
+    /// The tree apply collective: relay the `Apply` verbatim to every
+    /// bracket child, apply locally, await the children's acks. The caller
+    /// sends the single aggregated `Ack` up the arrival link.
+    fn tree_apply(
+        &mut self,
+        alpha: f32,
+        dmargins: Arc<SparseVec>,
+        delta: Option<Arc<SparseVec>>,
+        topo: &Topology,
+        peers: &mut PeerTable,
+        leader: &mut dyn Transport,
+    ) -> Result<TreeFlow> {
+        let timeout = if topo.peer_timeout_secs > 0.0 {
+            Some(Duration::from_secs_f64(topo.peer_timeout_secs))
+        } else {
+            None
+        };
+        for (_, link) in peers.children_mut().iter_mut() {
+            link.send(NodeMessage::Apply {
+                alpha,
+                dmargins: Arc::clone(&dmargins),
+                delta: delta.clone(),
+            })?;
+        }
+        let reply = self.handle(NodeMessage::Apply { alpha, dmargins, delta })?;
+        debug_assert!(matches!(reply, Some(NodeMessage::Ack)));
+        let nchild = peers.children_mut().len();
+        for slot in 0..nchild {
+            let (child_machine, received) = {
+                let (cm, link) = &mut peers.children_mut()[slot];
+                let cm = *cm;
+                (cm, recv_from_peer(cm, "child", link, leader, timeout)?)
+            };
+            match received {
+                PeerRecv::Deferred(m) => return Ok(TreeFlow::Deferred(m)),
+                PeerRecv::Msg(NodeMessage::Ack) => {}
+                PeerRecv::Msg(NodeMessage::Abort { message }) => {
+                    return Err(DlrError::Solver(format!(
+                        "tree child {child_machine} aborted the apply: {message}"
+                    )))
+                }
+                PeerRecv::Msg(other) => {
+                    return Err(DlrError::Solver(format!(
+                        "expected ack from tree child {child_machine}, got {}",
+                        other.name()
+                    )))
+                }
+            }
+        }
+        Ok(TreeFlow::Done)
     }
 }
 
@@ -442,7 +880,11 @@ mod tests {
     fn unexpected_messages_error() {
         let (mut node, _ds) = node_for(0, 2);
         assert!(node
-            .handle(NodeMessage::Welcome { family: "logistic".into(), alpha: 1.0 })
+            .handle(NodeMessage::Welcome {
+                family: "logistic".into(),
+                alpha: 1.0,
+                topology: None,
+            })
             .is_err());
         assert!(node.handle(NodeMessage::Ack).is_err());
         assert!(matches!(node.handle(NodeMessage::Shutdown), Ok(None)));
@@ -469,7 +911,7 @@ mod tests {
     #[test]
     fn join_message_carries_shard_identity() {
         let (node, _ds) = node_for(1, 2);
-        match node.join_message() {
+        match node.join_message("10.0.0.7:41000") {
             NodeMessage::Join {
                 machine,
                 n,
@@ -478,6 +920,7 @@ mod tests {
                 cols_checksum,
                 engine,
                 family,
+                listen_addr,
             } => {
                 assert_eq!(machine, 1);
                 assert_eq!(n, 120);
@@ -487,6 +930,7 @@ mod tests {
                 assert_eq!(cols_checksum, crc_u32(&cols));
                 assert_eq!(engine, "native");
                 assert_eq!(family, "logistic");
+                assert_eq!(listen_addr, "10.0.0.7:41000");
             }
             other => panic!("expected join, got {}", other.name()),
         }

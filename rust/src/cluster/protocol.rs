@@ -10,14 +10,33 @@
 //! policy the bytes a [`SocketTransport`] actually writes for a Δ-payload
 //! equal the codec cost functions the simulated `comm_bytes` ledger
 //! charges per tree edge — the wire and the ledger agree byte-for-byte on
-//! payload encoding. (The ledger models *tree-edge* traffic of the
-//! collectives; transport-level control frames and the leader-star
-//! topology of a small deployment are deliberately not charged — see the
-//! accounting contract in [`crate::cluster`]. With the opt-in lossy
-//! `wire_f16_*` knobs the ledger charges the delta-varint f16 cost while
-//! these frames stay losslessly encoded — the values are already
-//! quantized inside the collective, so trajectories are unaffected and
-//! the socket frames are an upper bound on the charged bytes.)
+//! payload encoding.
+//!
+//! **Topology matrix.** The socket cluster routes collective traffic under
+//! one of two physical topologies (`[cluster] topology = star | tree`):
+//!
+//! * **star** — every worker talks only to the leader; the leader stages
+//!   all M sweep payloads and runs the tree merges itself. Leader
+//!   bytes-on-wire grow O(M) per iteration.
+//! * **tree** — [`NodeMessage::Welcome`] hands each worker a [`Topology`]
+//!   (its bracket parent/children plus listen addresses); workers dial each
+//!   other directly (shard-identity-validated [`NodeMessage::PeerHello`]
+//!   handshake, mirroring the leader-join path) and relay `Sweep`/`Apply`
+//!   down the physical tree while merging sweep results up it through the
+//!   exact pairwise-f64 brackets of [`crate::cluster::allreduce`]
+//!   ([`NodeMessage::TreeSwept`]). The leader touches only its O(1) root
+//!   edge (machine 0) per iteration.
+//!
+//! **Bit-identity pins.** Both topologies and the in-process pool produce
+//! bit-identical trajectories, β, and comm ledgers: the tree relays f64
+//! merge intermediates exactly ([`TreePayload`] keeps raw f64 values on
+//! interior edges whenever rounding would lose bits, and the bracket root
+//! rounds to f32 exactly where the star-side engine does), and the leader
+//! replays the per-edge ledger charges from nnz metadata carried up the
+//! tree — the ledger already modeled tree edges, so it is unchanged. (With
+//! the opt-in lossy `wire_f16_*` knobs the ledger charges the delta-varint
+//! f16 cost while frames stay losslessly encoded; the tree topology
+//! requires the default lossless policy, enforced at config validation.)
 //!
 //! [`SocketTransport`]: crate::cluster::transport::SocketTransport
 //!
@@ -53,6 +72,127 @@ const TAG_MARGINS: u8 = 14;
 const TAG_MARGINS_PART: u8 = 15;
 const TAG_PING: u8 = 16;
 const TAG_PONG: u8 = 17;
+const TAG_TOPOLOGY: u8 = 18;
+const TAG_PEER_HELLO: u8 = 19;
+const TAG_TREE_SWEPT: u8 = 20;
+
+/// One peer a worker must link to under the tree topology: the machine
+/// index it must identify as, the address its worker↔worker listener is
+/// bound on, and the owned-column checksum its [`NodeMessage::PeerHello`]
+/// must present (the same shard identity the leader validated at join).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeerInfo {
+    pub machine: u32,
+    pub addr: String,
+    pub cols_checksum: u64,
+}
+
+/// A worker's view of the physical collective tree, handed out in
+/// [`NodeMessage::Welcome`] at admission and re-issued as a standalone
+/// [`NodeMessage::Topology`] after every supervised repair (replacements
+/// listen on fresh addresses, so every worker rebuilds its peer links).
+///
+/// The tree is exactly the deterministic pairwise merge bracket of
+/// [`crate::cluster::allreduce`]: `children` are listed in bracket round
+/// order, which **is** the merge order — a worker folds child payloads
+/// into its f64 accumulator in this order, so the physical tree reproduces
+/// the leader-staged merges bit for bit. Machine 0 is always the bracket
+/// root; its parent is the leader (`parent = None`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Bumped by the leader on every (re-)issue; peers reject stale-epoch
+    /// hellos so a link left over from a previous tree cannot be confused
+    /// with a rebuilt one.
+    pub epoch: u32,
+    /// The worker's bracket parent, or `None` when the parent is the
+    /// leader (machine 0 only).
+    pub parent: Option<PeerInfo>,
+    /// Bracket children in merge (round) order.
+    pub children: Vec<PeerInfo>,
+    /// Per-hop recv deadline for peer traffic, seconds; `0` = no deadline
+    /// (mirrors the leader's `recv_timeout_secs`).
+    pub peer_timeout_secs: f64,
+}
+
+/// One sparse payload relayed on a tree edge. Interior reduce edges carry
+/// genuine f64 merge intermediates; to keep trajectories bit-identical to
+/// the leader-staged engine the values are framed as f32 (the exact codec
+/// framing the ledger charges) **iff every value round-trips f32 bit-for-
+/// bit** — true by construction for merged Δβ (disjoint feature supports
+/// only interleave) and for leaf/root Δm — and as raw f64 otherwise
+/// (overlapping Δm sums on interior edges).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TreePayload {
+    pub dim: u32,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl TreePayload {
+    /// Is every value exactly representable as f32 (bit-level check, so
+    /// `-0.0` survives)? Decides the f32-codec vs raw-f64 wire mode.
+    pub fn is_f32_exact(&self) -> bool {
+        self.values.iter().all(|v| ((*v as f32) as f64).to_bits() == v.to_bits())
+    }
+
+    /// Round to the f32 sparse vector the leader consumes — exactly the
+    /// `v as f32` rounding the staged engine applies at the bracket root.
+    pub fn to_sparse_f32(&self) -> SparseVec {
+        let mut out = SparseVec::new(self.dim as usize);
+        for (i, v) in self.indices.iter().zip(&self.values) {
+            out.push(*i, *v as f32);
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Per-origin sweep metadata carried up the tree so the leader can pick
+/// the exchange strategy and observe the byte estimators exactly as the
+/// star path does (it needs every worker's raw contribution nnz).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OriginStat {
+    pub machine: u32,
+    pub compute_secs: f64,
+    /// nnz of this worker's raw (pre-merge) global Δβ contribution.
+    pub db_nnz: u32,
+    /// nnz of this worker's raw (pre-merge) Δm contribution.
+    pub dm_nnz: u32,
+}
+
+/// Per-edge merge metadata: the accumulated payload sizes worker `from`
+/// shipped to worker `into`. The leader replays the bracket with these to
+/// charge the ledger the identical per-edge costs the staged engine would.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeStat {
+    pub into: u32,
+    pub from: u32,
+    /// nnz of the sender's accumulated Δβ at send time.
+    pub db_nnz: u32,
+    /// nnz of the sender's accumulated Δm at send time.
+    pub dm_nnz: u32,
+}
+
+/// The merged sweep result a worker ships to its tree parent: its
+/// subtree's merged Δβ (global ids) and Δm plus the origin/edge metadata
+/// accumulated below it. Machine 0 sends the bracket root's f32-rounded
+/// result to the leader.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TreeSwept {
+    pub db: TreePayload,
+    pub dm: TreePayload,
+    pub origins: Vec<OriginStat>,
+    pub edges: Vec<EdgeStat>,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Self { epoch: 0, parent: None, children: Vec::new(), peer_timeout_secs: 0.0 }
+    }
+}
 
 /// One protocol message between the leader and a worker node.
 ///
@@ -77,12 +217,17 @@ pub enum NodeMessage {
         cols_checksum: u64,
         engine: String,
         family: String,
+        /// Address of the worker's peer listener for tree-topology runs
+        /// (workers dial each other from the [`Topology`] the leader hands
+        /// out); empty when the worker runs star-only and binds none.
+        listen_addr: String,
     },
     /// leader → worker: handshake accepted. Carries the run's GLM family
     /// and elastic-net α so a socket worker can double-check its own
     /// configuration against the leader's (the in-process pool constructs
-    /// workers from the same `TrainConfig`, so its nodes skip the check).
-    Welcome { family: String, alpha: f64 },
+    /// workers from the same `TrainConfig`, so its nodes skip the check),
+    /// plus — under the tree topology — the worker's [`Topology`].
+    Welcome { family: String, alpha: f64, topology: Option<Topology> },
     /// leader → worker: run one CD sweep over the worker-held shard state.
     /// `lam` is the soft-threshold (L1) strength λ·α and `l2` the ridge
     /// strength λ·(1−α) added to each coordinate's denominator (0 under the
@@ -144,6 +289,19 @@ pub enum NodeMessage {
     Ping,
     /// worker → leader: the heartbeat answer.
     Pong,
+    /// leader → worker: a fresh tree [`Topology`] (after a supervised
+    /// repair re-admitted a replacement on a new listen address). The
+    /// worker drops every peer link and rebuilds from this view; the
+    /// bumped epoch fences out connections from the previous tree.
+    Topology(Topology),
+    /// worker → worker: peer-link handshake, the tree-edge mirror of
+    /// [`NodeMessage::Join`]. The accepting parent validates the machine
+    /// index, the epoch, and the owned-column checksum against the
+    /// [`PeerInfo`] in its own topology before acking the link.
+    PeerHello { machine: u32, epoch: u32, cols_checksum: u64 },
+    /// worker → {parent worker | leader}: the subtree's merged sweep
+    /// result plus replay metadata (tree topology's up-path framing).
+    TreeSwept(TreeSwept),
     /// worker → leader: acknowledgement of an `Apply` / `SetState`.
     Ack,
     /// either direction: the peer failed; the message is the error.
@@ -311,6 +469,158 @@ fn get_sparse(bytes: &[u8], pos: &mut usize) -> Result<SparseVec> {
     codec.decode(payload, dim)
 }
 
+/// Tree-edge payload framing: mode byte `0` = f32 codec framing (the exact
+/// [`put_sparse`] section the ledger's cost functions describe — legal only
+/// when every value is f32-bit-exact), mode `1` = raw `(u32 idx, f64 val)`
+/// pairs for genuine f64 merge intermediates.
+fn put_tree_payload(out: &mut Vec<u8>, p: &TreePayload, class: MessageClass) {
+    if p.is_f32_exact() {
+        out.push(0);
+        put_sparse(out, &p.to_sparse_f32(), class);
+    } else {
+        out.push(1);
+        put_u32(out, p.dim);
+        put_u32(out, p.indices.len() as u32);
+        for &i in &p.indices {
+            put_u32(out, i);
+        }
+        for &v in &p.values {
+            put_f64(out, v);
+        }
+    }
+}
+
+fn get_tree_payload(bytes: &[u8], pos: &mut usize) -> Result<TreePayload> {
+    match get_u8(bytes, pos)? {
+        0 => {
+            let sv = get_sparse(bytes, pos)?;
+            Ok(TreePayload {
+                dim: sv.dim as u32,
+                values: sv.values.iter().map(|&v| v as f64).collect(),
+                indices: sv.indices,
+            })
+        }
+        1 => {
+            let dim = get_u32(bytes, pos)?;
+            let len = get_u32(bytes, pos)? as usize;
+            // bounds-check the whole section before allocating (a lying
+            // length prefix must error, not trigger a giant allocation)
+            let idx_bytes = take(bytes, pos, len.checked_mul(4).unwrap_or(usize::MAX))?;
+            let mut indices = Vec::with_capacity(len);
+            for c in idx_bytes.chunks_exact(4) {
+                let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                if i >= dim {
+                    return Err(DlrError::parse("wire", format!("index {i} >= dim {dim}")));
+                }
+                if indices.last().is_some_and(|&last| last >= i) {
+                    return Err(DlrError::parse("wire", "indices not strictly ascending"));
+                }
+                indices.push(i);
+            }
+            let val_bytes = take(bytes, pos, len.checked_mul(8).unwrap_or(usize::MAX))?;
+            let values = val_bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                .collect();
+            Ok(TreePayload { dim, indices, values })
+        }
+        other => Err(DlrError::parse("wire", format!("bad tree payload mode {other}"))),
+    }
+}
+
+fn put_peer_info(out: &mut Vec<u8>, p: &PeerInfo) {
+    put_u32(out, p.machine);
+    put_str(out, &p.addr);
+    put_u64(out, p.cols_checksum);
+}
+
+fn get_peer_info(bytes: &[u8], pos: &mut usize) -> Result<PeerInfo> {
+    Ok(PeerInfo {
+        machine: get_u32(bytes, pos)?,
+        addr: get_str(bytes, pos)?,
+        cols_checksum: get_u64(bytes, pos)?,
+    })
+}
+
+fn put_topology(out: &mut Vec<u8>, t: &Topology) {
+    put_u32(out, t.epoch);
+    match &t.parent {
+        Some(p) => {
+            out.push(1);
+            put_peer_info(out, p);
+        }
+        None => out.push(0),
+    }
+    put_u32(out, t.children.len() as u32);
+    for c in &t.children {
+        put_peer_info(out, c);
+    }
+    put_f64(out, t.peer_timeout_secs);
+}
+
+fn get_topology(bytes: &[u8], pos: &mut usize) -> Result<Topology> {
+    let epoch = get_u32(bytes, pos)?;
+    let parent = match get_u8(bytes, pos)? {
+        0 => None,
+        1 => Some(get_peer_info(bytes, pos)?),
+        other => {
+            return Err(DlrError::parse("wire", format!("bad option flag {other} in topology")))
+        }
+    };
+    let n_children = get_u32(bytes, pos)? as usize;
+    let mut children = Vec::with_capacity(n_children.min((bytes.len() - *pos) / 16));
+    for _ in 0..n_children {
+        children.push(get_peer_info(bytes, pos)?);
+    }
+    let peer_timeout_secs = get_f64(bytes, pos)?;
+    Ok(Topology { epoch, parent, children, peer_timeout_secs })
+}
+
+fn put_tree_swept(out: &mut Vec<u8>, t: &TreeSwept) {
+    put_tree_payload(out, &t.db, MessageClass::Beta);
+    put_tree_payload(out, &t.dm, MessageClass::Margins);
+    put_u32(out, t.origins.len() as u32);
+    for o in &t.origins {
+        put_u32(out, o.machine);
+        put_f64(out, o.compute_secs);
+        put_u32(out, o.db_nnz);
+        put_u32(out, o.dm_nnz);
+    }
+    put_u32(out, t.edges.len() as u32);
+    for e in &t.edges {
+        put_u32(out, e.into);
+        put_u32(out, e.from);
+        put_u32(out, e.db_nnz);
+        put_u32(out, e.dm_nnz);
+    }
+}
+
+fn get_tree_swept(bytes: &[u8], pos: &mut usize) -> Result<TreeSwept> {
+    let db = get_tree_payload(bytes, pos)?;
+    let dm = get_tree_payload(bytes, pos)?;
+    let n_origins = get_u32(bytes, pos)? as usize;
+    let mut origins = Vec::with_capacity(n_origins.min((bytes.len() - *pos) / 20));
+    for _ in 0..n_origins {
+        origins.push(OriginStat {
+            machine: get_u32(bytes, pos)?,
+            compute_secs: get_f64(bytes, pos)?,
+            db_nnz: get_u32(bytes, pos)?,
+            dm_nnz: get_u32(bytes, pos)?,
+        });
+    }
+    let n_edges = get_u32(bytes, pos)? as usize;
+    let mut edges = Vec::with_capacity(n_edges.min((bytes.len() - *pos) / 16));
+    for _ in 0..n_edges {
+        edges.push(EdgeStat {
+            into: get_u32(bytes, pos)?,
+            from: get_u32(bytes, pos)?,
+            db_nnz: get_u32(bytes, pos)?,
+            dm_nnz: get_u32(bytes, pos)?,
+        });
+    }
+    Ok(TreeSwept { db, dm, origins, edges })
+}
+
 // ---------------------------------------------------------------------------
 // Message (en/de)coding
 // ---------------------------------------------------------------------------
@@ -333,6 +643,9 @@ impl NodeMessage {
             NodeMessage::MarginsPart { .. } => "margins-part",
             NodeMessage::Ping => "ping",
             NodeMessage::Pong => "pong",
+            NodeMessage::Topology(_) => "topology",
+            NodeMessage::PeerHello { .. } => "peer-hello",
+            NodeMessage::TreeSwept(_) => "tree-swept",
             NodeMessage::Ack => "ack",
             NodeMessage::Abort { .. } => "abort",
             NodeMessage::Shutdown => "shutdown",
@@ -352,6 +665,7 @@ impl NodeMessage {
                 cols_checksum,
                 engine,
                 family,
+                listen_addr,
             } => {
                 out.push(TAG_JOIN);
                 put_u32(&mut out, *machine);
@@ -361,11 +675,19 @@ impl NodeMessage {
                 put_u64(&mut out, *cols_checksum);
                 put_str(&mut out, engine);
                 put_str(&mut out, family);
+                put_str(&mut out, listen_addr);
             }
-            NodeMessage::Welcome { family, alpha } => {
+            NodeMessage::Welcome { family, alpha, topology } => {
                 out.push(TAG_WELCOME);
                 put_str(&mut out, family);
                 put_f64(&mut out, *alpha);
+                match topology {
+                    Some(t) => {
+                        out.push(1);
+                        put_topology(&mut out, t);
+                    }
+                    None => out.push(0),
+                }
             }
             NodeMessage::Sweep { lam, nu, l2, recycle: _ } => {
                 // `recycle` is a buffer-recycling slot, not wire state
@@ -418,6 +740,20 @@ impl NodeMessage {
             }
             NodeMessage::Ping => out.push(TAG_PING),
             NodeMessage::Pong => out.push(TAG_PONG),
+            NodeMessage::Topology(t) => {
+                out.push(TAG_TOPOLOGY);
+                put_topology(&mut out, t);
+            }
+            NodeMessage::PeerHello { machine, epoch, cols_checksum } => {
+                out.push(TAG_PEER_HELLO);
+                put_u32(&mut out, *machine);
+                put_u32(&mut out, *epoch);
+                put_u64(&mut out, *cols_checksum);
+            }
+            NodeMessage::TreeSwept(t) => {
+                out.push(TAG_TREE_SWEPT);
+                put_tree_swept(&mut out, t);
+            }
             NodeMessage::Ack => out.push(TAG_ACK),
             NodeMessage::Abort { message } => {
                 out.push(TAG_ABORT);
@@ -443,10 +779,21 @@ impl NodeMessage {
                 cols_checksum: get_u64(bytes, &mut pos)?,
                 engine: get_str(bytes, &mut pos)?,
                 family: get_str(bytes, &mut pos)?,
+                listen_addr: get_str(bytes, &mut pos)?,
             },
             TAG_WELCOME => NodeMessage::Welcome {
                 family: get_str(bytes, &mut pos)?,
                 alpha: get_f64(bytes, &mut pos)?,
+                topology: match get_u8(bytes, &mut pos)? {
+                    0 => None,
+                    1 => Some(get_topology(bytes, &mut pos)?),
+                    other => {
+                        return Err(DlrError::parse(
+                            "wire",
+                            format!("bad option flag {other} in welcome"),
+                        ))
+                    }
+                },
             },
             TAG_SWEEP => NodeMessage::Sweep {
                 lam: get_f32(bytes, &mut pos)?,
@@ -496,6 +843,13 @@ impl NodeMessage {
             }
             TAG_PING => NodeMessage::Ping,
             TAG_PONG => NodeMessage::Pong,
+            TAG_TOPOLOGY => NodeMessage::Topology(get_topology(bytes, &mut pos)?),
+            TAG_PEER_HELLO => NodeMessage::PeerHello {
+                machine: get_u32(bytes, &mut pos)?,
+                epoch: get_u32(bytes, &mut pos)?,
+                cols_checksum: get_u64(bytes, &mut pos)?,
+            },
+            TAG_TREE_SWEPT => NodeMessage::TreeSwept(get_tree_swept(bytes, &mut pos)?),
             TAG_ACK => NodeMessage::Ack,
             TAG_ABORT => NodeMessage::Abort { message: get_str(bytes, &mut pos)? },
             TAG_SHUTDOWN => NodeMessage::Shutdown,
@@ -537,8 +891,51 @@ mod tests {
                 cols_checksum: 0xDEAD_BEEF,
                 engine: "native".into(),
                 family: "logistic".into(),
+                listen_addr: "127.0.0.1:40123".into(),
             },
-            NodeMessage::Welcome { family: "poisson".into(), alpha: 0.5 },
+            NodeMessage::Welcome { family: "poisson".into(), alpha: 0.5, topology: None },
+            NodeMessage::Welcome {
+                family: "logistic".into(),
+                alpha: 1.0,
+                topology: Some(Topology {
+                    epoch: 2,
+                    parent: Some(PeerInfo {
+                        machine: 0,
+                        addr: "127.0.0.1:41000".into(),
+                        cols_checksum: 7,
+                    }),
+                    children: vec![PeerInfo {
+                        machine: 3,
+                        addr: "127.0.0.1:41003".into(),
+                        cols_checksum: 9,
+                    }],
+                    peer_timeout_secs: 2.5,
+                }),
+            },
+            NodeMessage::Topology(Topology {
+                epoch: 5,
+                parent: None,
+                children: vec![
+                    PeerInfo { machine: 1, addr: "a:1".into(), cols_checksum: 1 },
+                    PeerInfo { machine: 2, addr: "b:2".into(), cols_checksum: 2 },
+                ],
+                peer_timeout_secs: 0.0,
+            }),
+            NodeMessage::PeerHello { machine: 6, epoch: 3, cols_checksum: 0xFEED },
+            NodeMessage::TreeSwept(TreeSwept {
+                db: TreePayload { dim: 40, indices: vec![1, 7], values: vec![0.5, -2.25] },
+                dm: TreePayload {
+                    dim: 100,
+                    indices: vec![0, 3, 9],
+                    // middle value is NOT f32-exact: forces the raw-f64 mode
+                    values: vec![1.0, 0.1f64 + 0.2f64, -0.5],
+                },
+                origins: vec![
+                    OriginStat { machine: 1, compute_secs: 0.25, db_nnz: 2, dm_nnz: 3 },
+                    OriginStat { machine: 3, compute_secs: 0.5, db_nnz: 0, dm_nnz: 1 },
+                ],
+                edges: vec![EdgeStat { into: 1, from: 3, db_nnz: 2, dm_nnz: 3 }],
+            }),
             NodeMessage::Sweep {
                 lam: 0.5,
                 nu: 1e-6,
@@ -622,11 +1019,28 @@ mod tests {
                     assert_eq!(af, bf);
                 }
                 (
-                    NodeMessage::Welcome { family: af, alpha: aa },
-                    NodeMessage::Welcome { family: bf, alpha: ba },
+                    NodeMessage::Welcome { family: af, alpha: aa, topology: at },
+                    NodeMessage::Welcome { family: bf, alpha: ba, topology: bt },
                 ) => {
                     assert_eq!(af, bf);
                     assert_eq!(aa.to_bits(), ba.to_bits());
+                    assert_eq!(at, bt);
+                }
+                (NodeMessage::Topology(a), NodeMessage::Topology(b)) => assert_eq!(a, b),
+                (
+                    NodeMessage::PeerHello { machine: am, epoch: ae, cols_checksum: ac },
+                    NodeMessage::PeerHello { machine: bm, epoch: be, cols_checksum: bc },
+                ) => {
+                    assert_eq!((am, ae, ac), (bm, be, bc));
+                }
+                (NodeMessage::TreeSwept(a), NodeMessage::TreeSwept(b)) => {
+                    assert_eq!(a.db, b.db);
+                    for (x, y) in a.dm.values.iter().zip(&b.dm.values) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "dm values must survive bit-exactly");
+                    }
+                    assert_eq!(a.dm.indices, b.dm.indices);
+                    assert_eq!(a.origins, b.origins);
+                    assert_eq!(a.edges, b.edges);
                 }
                 (
                     NodeMessage::Sweep { lam: al, nu: an, l2: a2, .. },
@@ -699,6 +1113,71 @@ mod tests {
         let mut pos = 0;
         let back = get_sparse(&out, &mut pos).unwrap();
         assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn tree_payload_picks_f32_framing_iff_values_are_exact() {
+        // f32-exact values (every merged Δβ, every leaf/root Δm): the wire
+        // section is the codec framing whose payload bytes equal the
+        // ledger's charged cost function — mode byte + [dim|codec|len|payload]
+        let exact = TreePayload {
+            dim: 1_000,
+            indices: vec![3, 17, 512],
+            values: vec![1.5, -0.25, 2.0f32 as f64],
+        };
+        assert!(exact.is_f32_exact());
+        let mut out = Vec::new();
+        put_tree_payload(&mut out, &exact, MessageClass::Beta);
+        let sv = exact.to_sparse_f32();
+        let (_, cost) = CodecPolicy::lossless().pick(&sv.indices, sv.dim, MessageClass::Beta);
+        assert_eq!(out.len() as u64, 1 + 9 + cost, "mode0 payload bytes = charged cost");
+        let mut pos = 0;
+        let back = get_tree_payload(&out, &mut pos).unwrap();
+        assert_eq!(back, exact);
+
+        // a genuine f64 merge intermediate keeps every bit through the wire
+        let inexact = TreePayload {
+            dim: 10,
+            indices: vec![2, 5],
+            values: vec![0.1 + 0.2, 1.0],
+        };
+        assert!(!inexact.is_f32_exact());
+        let mut out = Vec::new();
+        put_tree_payload(&mut out, &inexact, MessageClass::Margins);
+        assert_eq!(out[0], 1, "overlapping f64 sums must use the raw mode");
+        let mut pos = 0;
+        let back = get_tree_payload(&out, &mut pos).unwrap();
+        for (x, y) in back.values.iter().zip(&inexact.values) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // -0.0 is not "exactly representable as 0.0": the bit check keeps it
+        let signed_zero =
+            TreePayload { dim: 4, indices: vec![1], values: vec![-0.0f64] };
+        assert!(signed_zero.is_f32_exact());
+        assert_eq!(signed_zero.to_sparse_f32().values[0].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn tree_swept_frames_reject_truncation() {
+        let msg = NodeMessage::TreeSwept(TreeSwept {
+            db: TreePayload { dim: 8, indices: vec![1], values: vec![2.0] },
+            dm: TreePayload { dim: 8, indices: vec![0, 2], values: vec![0.1 + 0.2, 1.0] },
+            origins: vec![OriginStat { machine: 0, compute_secs: 0.0, db_nnz: 1, dm_nnz: 2 }],
+            edges: vec![],
+        });
+        let bytes = msg.encode();
+        for cut in 0..bytes.len() {
+            assert!(NodeMessage::decode(&bytes[..cut]).is_err(), "prefix {cut}");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(NodeMessage::decode(&padded).is_err());
+        // a malformed raw-f64 section (unsorted indices) is rejected
+        let raw = TreePayload { dim: 8, indices: vec![5, 2], values: vec![0.1 + 0.2, 0.3 + 0.4] };
+        let mut out = Vec::new();
+        put_tree_payload(&mut out, &raw, MessageClass::Margins);
+        let mut pos = 0;
+        assert!(get_tree_payload(&out, &mut pos).is_err());
     }
 
     #[test]

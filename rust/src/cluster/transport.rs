@@ -23,12 +23,32 @@
 //! (garbage tags, lying length prefixes, truncated payloads) error through
 //! the protocol decoder like the codec truncation tests.
 
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{IpAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cluster::protocol::{NodeMessage, MAX_FRAME_BODY};
+use crate::cluster::protocol::{NodeMessage, PeerInfo, Topology, MAX_FRAME_BODY};
 use crate::error::{DlrError, Result};
+
+/// Shared bytes-on-wire totals one process accumulates across all of its
+/// links (leader link + every peer link). The physical-topology bench reads
+/// these to compare measured leader vs worker bandwidth; counts are *frame*
+/// bytes (body + 4-byte length prefix), i.e. exactly what crossed the TCP
+/// stream. The in-process links count the frame their message would encode
+/// to, so star-topology reports are comparable across transports.
+#[derive(Debug, Default)]
+pub struct WireCounters {
+    pub sent: AtomicU64,
+    pub recv: AtomicU64,
+}
+
+impl WireCounters {
+    pub fn totals(&self) -> (u64, u64) {
+        (self.sent.load(Ordering::Relaxed), self.recv.load(Ordering::Relaxed))
+    }
+}
 
 /// An ordered, reliable, bidirectional message stream to one peer node.
 pub trait Transport: Send {
@@ -38,6 +58,29 @@ pub trait Transport: Send {
     /// Block for the peer's next message. Errors (promptly, without
     /// hanging) if the peer is gone or sends a malformed frame.
     fn recv(&mut self) -> Result<NodeMessage>;
+
+    /// Wait up to `wait` for the peer's next message without disturbing the
+    /// stream: `Ok(None)` when no frame *started* within the window,
+    /// `Ok(Some(..))` once a frame arrives (the remainder of a started
+    /// frame is read under the configured recv deadline, so a short poll
+    /// window never desyncs mid-frame). Tree workers alternate polls over
+    /// their leader and parent links with this.
+    fn recv_poll(&mut self, wait: Duration) -> Result<Option<NodeMessage>> {
+        let _ = wait;
+        Err(DlrError::Solver(format!(
+            "recv_poll is not supported by the {} transport",
+            self.kind()
+        )))
+    }
+
+    /// Total frame bytes this link has sent / received since creation.
+    /// Transports that do not meter themselves report zero.
+    fn bytes_sent(&self) -> u64 {
+        0
+    }
+    fn bytes_recv(&self) -> u64 {
+        0
+    }
 
     /// Bound every subsequent [`recv`](Transport::recv): a peer that stays
     /// silent past the deadline errors with a "timed out" message instead
@@ -66,6 +109,10 @@ pub trait Transport: Send {
 pub struct SocketTransport {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    deadline: Option<Duration>,
+    sent: u64,
+    recv: u64,
+    shared: Option<Arc<WireCounters>>,
 }
 
 impl SocketTransport {
@@ -74,7 +121,19 @@ impl SocketTransport {
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
         let writer = BufWriter::new(stream);
-        Ok(Self { reader, writer })
+        Ok(Self { reader, writer, deadline: None, sent: 0, recv: 0, shared: None })
+    }
+
+    /// Also accumulate this link's frame bytes into a process-wide
+    /// [`WireCounters`] (per-node totals across leader + peer links).
+    pub fn share_counters(&mut self, counters: Arc<WireCounters>) {
+        self.shared = Some(counters);
+    }
+
+    /// The local IP this socket is bound on — a tree worker advertises its
+    /// peer listener on the same interface it reached the leader through.
+    pub fn local_ip(&self) -> Result<IpAddr> {
+        Ok(self.reader.get_ref().local_addr()?.ip())
     }
 
     /// Connect to a listening leader.
@@ -122,6 +181,11 @@ impl Transport for SocketTransport {
         self.writer.write_all(&(body.len() as u32).to_le_bytes())?;
         self.writer.write_all(&body)?;
         self.writer.flush()?;
+        let frame = body.len() as u64 + 4;
+        self.sent += frame;
+        if let Some(c) = &self.shared {
+            c.sent.fetch_add(frame, Ordering::Relaxed);
+        }
         Ok(())
     }
 
@@ -137,11 +201,53 @@ impl Transport for SocketTransport {
         }
         let mut body = vec![0u8; len];
         self.reader.read_exact(&mut body).map_err(hangup)?;
+        let frame = len as u64 + 4;
+        self.recv += frame;
+        if let Some(c) = &self.shared {
+            c.recv.fetch_add(frame, Ordering::Relaxed);
+        }
         NodeMessage::decode(&body)
+    }
+
+    fn recv_poll(&mut self, wait: Duration) -> Result<Option<NodeMessage>> {
+        // a zero read-timeout is rejected by the OS; clamp the poll window
+        self.reader.get_ref().set_read_timeout(Some(wait.max(Duration::from_millis(1))))?;
+        let started = match self.reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => Err(hangup(std::io::Error::from(
+                std::io::ErrorKind::UnexpectedEof,
+            ))),
+            Ok(_) => Ok(true),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                Ok(false)
+            }
+            Err(e) => Err(hangup(e)),
+        };
+        // restore the configured deadline before finishing (or skipping)
+        // the frame, so a started frame reads under the normal recv rules
+        self.reader.get_ref().set_read_timeout(self.deadline)?;
+        if started? {
+            self.recv().map(Some)
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_recv(&self) -> u64 {
+        self.recv
     }
 
     fn set_recv_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
         self.reader.get_ref().set_read_timeout(deadline)?;
+        self.deadline = deadline;
         Ok(())
     }
 
@@ -166,6 +272,225 @@ fn hangup(e: std::io::Error) -> DlrError {
 }
 
 // ---------------------------------------------------------------------------
+// Worker↔worker peer links (tree topology)
+// ---------------------------------------------------------------------------
+
+/// A tree worker's side of the physical collective topology: the listener
+/// its peers dial, the link to its bracket parent, and one link per bracket
+/// child — rebuilt from every [`Topology`] the leader issues.
+///
+/// The rebuild handshake mirrors the leader-join path: the dialing child
+/// sends a [`NodeMessage::PeerHello`] carrying its machine index, the
+/// topology epoch, and its owned-column checksum; the accepting parent
+/// validates all three against the [`PeerInfo`] in its own topology before
+/// acking the link. Hellos from a stale epoch (links left over from a
+/// previous tree) are dropped without an ack, so a replaced worker's old
+/// peers can never leak into the rebuilt tree.
+///
+/// The cascade is deadlock-free by induction on bracket depth: a worker
+/// dials its parent *before* accepting its own children, the TCP accept
+/// backlog holds those children's connects in the meantime, and machine 0
+/// (no worker parent) accepts immediately.
+pub struct PeerTable {
+    listener: TcpListener,
+    advertised: String,
+    counters: Option<Arc<WireCounters>>,
+    epoch: u32,
+    parent: Option<SocketTransport>,
+    children: Vec<(u32, SocketTransport)>,
+}
+
+impl PeerTable {
+    /// Bind the peer listener on an ephemeral port of `ip` (the interface
+    /// the worker reached the leader through — see
+    /// [`SocketTransport::local_ip`]). The advertised address travels to
+    /// the leader in `Join.listen_addr`.
+    pub fn bind(ip: IpAddr) -> Result<Self> {
+        let listener = TcpListener::bind((ip, 0))?;
+        let advertised = listener.local_addr()?.to_string();
+        Ok(Self {
+            listener,
+            advertised,
+            counters: None,
+            epoch: 0,
+            parent: None,
+            children: Vec::new(),
+        })
+    }
+
+    /// Accumulate all peer-link frame bytes into `counters` (shared with
+    /// the worker's leader link for per-node totals).
+    pub fn share_counters(&mut self, counters: Arc<WireCounters>) {
+        self.counters = Some(counters);
+    }
+
+    /// The `ip:port` peers dial, as advertised in `Join.listen_addr`.
+    pub fn advertised_addr(&self) -> &str {
+        &self.advertised
+    }
+
+    /// Epoch of the topology the current links were built from.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// The link toward the bracket parent (`None` on machine 0, whose
+    /// parent is the leader).
+    pub fn parent_mut(&mut self) -> Option<&mut SocketTransport> {
+        self.parent.as_mut()
+    }
+
+    /// Child links in bracket merge order, keyed by machine index.
+    pub fn children_mut(&mut self) -> &mut [(u32, SocketTransport)] {
+        &mut self.children
+    }
+
+    /// Drop every peer link (a repair is starting; the next [`Topology`]
+    /// rebuilds them).
+    pub fn drop_links(&mut self) {
+        self.parent = None;
+        self.children.clear();
+    }
+
+    /// Tear down and re-establish every peer link from a fresh topology
+    /// view: dial the parent (hello → ack), then accept each expected
+    /// child (hello → validate → ack). Identity-validation failures drop
+    /// the offending connection and keep waiting; only the deadline errors.
+    pub fn rebuild(&mut self, topo: &Topology, machine: u32, cols_checksum: u64) -> Result<()> {
+        self.drop_links();
+        self.epoch = topo.epoch;
+        let timeout = if topo.peer_timeout_secs > 0.0 {
+            Duration::from_secs_f64(topo.peer_timeout_secs)
+        } else {
+            Duration::from_secs(30)
+        };
+        let link_deadline = (topo.peer_timeout_secs > 0.0)
+            .then(|| Duration::from_secs_f64(topo.peer_timeout_secs));
+        if let Some(parent) = &topo.parent {
+            let mut link = SocketTransport::connect_retry(parent.addr.as_str(), timeout)
+                .map_err(|e| {
+                    DlrError::Solver(format!(
+                        "could not dial tree parent {} at {}: {e}",
+                        parent.machine, parent.addr
+                    ))
+                })?;
+            if let Some(c) = &self.counters {
+                link.share_counters(Arc::clone(c));
+            }
+            link.set_recv_deadline(Some(timeout))?;
+            link.send(NodeMessage::PeerHello { machine, epoch: topo.epoch, cols_checksum })?;
+            match link.recv() {
+                Ok(NodeMessage::Ack) => {}
+                Ok(NodeMessage::Abort { message }) => {
+                    return Err(DlrError::Solver(format!(
+                        "tree parent {} rejected the peer link: {message}",
+                        parent.machine
+                    )))
+                }
+                Ok(other) => {
+                    return Err(DlrError::Solver(format!(
+                        "tree parent {} answered the peer hello with {}",
+                        parent.machine,
+                        other.name()
+                    )))
+                }
+                Err(e) => {
+                    return Err(DlrError::Solver(format!(
+                        "no ack from tree parent {}: {e}",
+                        parent.machine
+                    )))
+                }
+            }
+            link.set_recv_deadline(link_deadline)?;
+            self.parent = Some(link);
+        }
+        if topo.children.is_empty() {
+            return Ok(());
+        }
+        let deadline = Instant::now() + timeout;
+        let mut slots: Vec<Option<SocketTransport>> =
+            topo.children.iter().map(|_| None).collect();
+        self.listener.set_nonblocking(true)?;
+        let outcome = loop {
+            if slots.iter().all(|s| s.is_some()) {
+                break Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if let Some((slot, link)) =
+                        self.admit_child(stream, topo, link_deadline, timeout)
+                    {
+                        // a retrying dialer replaces its own earlier link
+                        slots[slot] = Some(link);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        let missing: Vec<u32> = topo
+                            .children
+                            .iter()
+                            .zip(&slots)
+                            .filter(|(_, s)| s.is_none())
+                            .map(|(c, _)| c.machine)
+                            .collect();
+                        break Err(DlrError::Solver(format!(
+                            "timed out waiting for tree children {missing:?} \
+                             (epoch {})",
+                            topo.epoch
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => break Err(DlrError::Io(e)),
+            }
+        };
+        self.listener.set_nonblocking(false)?;
+        outcome?;
+        self.children = topo
+            .children
+            .iter()
+            .zip(slots)
+            .map(|(c, s)| (c.machine, s.expect("all child slots filled")))
+            .collect();
+        Ok(())
+    }
+
+    /// Handshake one accepted connection; `None` drops it (stale epoch,
+    /// unknown machine, dead dialer) and `rebuild` keeps waiting.
+    fn admit_child(
+        &self,
+        stream: TcpStream,
+        topo: &Topology,
+        link_deadline: Option<Duration>,
+        timeout: Duration,
+    ) -> Option<(usize, SocketTransport)> {
+        stream.set_nonblocking(false).ok()?;
+        let mut link = SocketTransport::from_stream(stream).ok()?;
+        if let Some(c) = &self.counters {
+            link.share_counters(Arc::clone(c));
+        }
+        link.set_recv_deadline(Some(timeout)).ok()?;
+        let NodeMessage::PeerHello { machine, epoch, cols_checksum } = link.recv().ok()?
+        else {
+            return None;
+        };
+        if epoch != topo.epoch {
+            return None; // stale dialer from a previous tree
+        }
+        let slot = topo.children.iter().position(|c| c.machine == machine)?;
+        if topo.children[slot].cols_checksum != cols_checksum {
+            let _ = link.send(NodeMessage::Abort {
+                message: format!("peer hello shard checksum mismatch for machine {machine}"),
+            });
+            return None;
+        }
+        link.send(NodeMessage::Ack).ok()?;
+        link.set_recv_deadline(link_deadline).ok()?;
+        Some((slot, link))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fault injection
 // ---------------------------------------------------------------------------
 
@@ -185,8 +510,11 @@ pub enum Fault {
 }
 
 /// Fault-injection wrapper for tests and chaos harnesses: passes every
-/// call through to the wrapped transport except the `at`-th recv
-/// (1-based), which it injures with the configured [`Fault`].
+/// call through to the wrapped transport except the `at`-th received
+/// message (1-based, counted across blocking `recv`s and delivering
+/// `recv_poll`s alike — a tree worker's polled serve loop is injurable
+/// the same as a star worker's blocking one), which it injures with the
+/// configured [`Fault`].
 /// `Truncate`/`Corrupt` consume the peer's real reply before substituting
 /// damaged bytes, so the peer itself stays healthy and in protocol — a
 /// corrupted link, not a dead process.
@@ -228,6 +556,42 @@ impl Transport for FaultyTransport {
                 NodeMessage::decode(&[77, 1, 2])
             }
         }
+    }
+
+    fn recv_poll(&mut self, wait: Duration) -> Result<Option<NodeMessage>> {
+        // empty polls don't count — only delivered messages advance the
+        // trigger, keeping `at` meaningful under a polling serve loop
+        match self.inner.recv_poll(wait)? {
+            None => Ok(None),
+            Some(msg) => {
+                self.seen += 1;
+                if self.seen != self.at {
+                    return Ok(Some(msg));
+                }
+                match self.fault {
+                    Fault::Drop => {
+                        Err(DlrError::Solver("peer node hung up mid-frame".into()))
+                    }
+                    Fault::Delay(d) => {
+                        std::thread::sleep(d);
+                        Ok(Some(msg))
+                    }
+                    Fault::Truncate => {
+                        let body = msg.encode();
+                        NodeMessage::decode(&body[..body.len() - 1]).map(Some)
+                    }
+                    Fault::Corrupt => NodeMessage::decode(&[77, 1, 2]).map(Some),
+                }
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn bytes_recv(&self) -> u64 {
+        self.inner.bytes_recv()
     }
 
     fn set_recv_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
@@ -362,6 +726,132 @@ mod tests {
         assert!(err.contains("timed out"), "{err}");
         done_tx.send(()).unwrap();
         peer.join().unwrap();
+    }
+
+    #[test]
+    fn byte_counters_meter_exact_frame_bytes_on_both_sides() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = SocketTransport::from_stream(stream).unwrap();
+            let msg = t.recv().unwrap();
+            t.send(msg).unwrap();
+            (t.bytes_sent(), t.bytes_recv())
+        });
+        let shared = Arc::new(WireCounters::default());
+        let mut t = SocketTransport::connect(addr).unwrap();
+        t.share_counters(Arc::clone(&shared));
+        let msg = NodeMessage::Abort { message: "counted".into() };
+        let frame = msg.encode().len() as u64 + 4;
+        t.send(msg).unwrap();
+        t.recv().unwrap();
+        assert_eq!(t.bytes_sent(), frame);
+        assert_eq!(t.bytes_recv(), frame);
+        assert_eq!(shared.totals(), (frame, frame));
+        let (peer_sent, peer_recv) = peer.join().unwrap();
+        assert_eq!(peer_sent, frame);
+        assert_eq!(peer_recv, frame);
+    }
+
+    #[test]
+    fn recv_poll_times_out_quietly_and_delivers_when_data_arrives() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let peer = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = SocketTransport::from_stream(stream).unwrap();
+            go_rx.recv().unwrap();
+            t.send(NodeMessage::Ping).unwrap();
+            go_rx.recv().unwrap(); // hold the stream open until released
+        });
+        let mut t = SocketTransport::connect(addr).unwrap();
+        t.set_recv_deadline(Some(Duration::from_secs(5))).unwrap();
+        // nothing on the wire yet: poll returns None, stream stays in sync
+        assert!(t.recv_poll(Duration::from_millis(20)).unwrap().is_none());
+        go_tx.send(()).unwrap();
+        let mut got = None;
+        for _ in 0..200 {
+            got = t.recv_poll(Duration::from_millis(25)).unwrap();
+            if got.is_some() {
+                break;
+            }
+        }
+        assert!(matches!(got, Some(NodeMessage::Ping)));
+        go_tx.send(()).unwrap();
+        peer.join().unwrap();
+        // peer gone: poll reports the hangup instead of spinning forever
+        let err = loop {
+            match t.recv_poll(Duration::from_millis(25)) {
+                Ok(None) => continue,
+                Ok(Some(m)) => panic!("unexpected {}", m.name()),
+                Err(e) => break e,
+            }
+        };
+        assert!(err.to_string().contains("hung up"), "{err}");
+    }
+
+    #[test]
+    fn peer_table_builds_a_chain_and_rejects_bad_identity() {
+        use crate::cluster::protocol::{PeerInfo, Topology};
+        let ip: IpAddr = "127.0.0.1".parse().unwrap();
+        // machine 1 (parent end) accepts machine 3 (child end)
+        let mut parent_table = PeerTable::bind(ip).unwrap();
+        let mut child_table = PeerTable::bind(ip).unwrap();
+        let parent_addr = parent_table.advertised_addr().to_string();
+        let child_info =
+            PeerInfo { machine: 3, addr: child_table.advertised_addr().into(), cols_checksum: 9 };
+        let parent_topo = Topology {
+            epoch: 4,
+            parent: None,
+            children: vec![child_info],
+            peer_timeout_secs: 5.0,
+        };
+        let child_topo = Topology {
+            epoch: 4,
+            parent: Some(PeerInfo { machine: 1, addr: parent_addr.clone(), cols_checksum: 7 }),
+            children: vec![],
+            peer_timeout_secs: 5.0,
+        };
+        let child = std::thread::spawn(move || {
+            child_table.rebuild(&child_topo, 3, 9).unwrap();
+            // send one message up the fresh parent link
+            child_table.parent_mut().unwrap().send(NodeMessage::Pong).unwrap();
+            child_table
+        });
+        parent_table.rebuild(&parent_topo, 1, 7).unwrap();
+        assert_eq!(parent_table.epoch(), 4);
+        let children = parent_table.children_mut();
+        assert_eq!(children.len(), 1);
+        assert_eq!(children[0].0, 3);
+        assert!(matches!(children[0].1.recv().unwrap(), NodeMessage::Pong));
+        child.join().unwrap();
+
+        // a dialer presenting the wrong shard checksum is rejected with an
+        // abort, and the parent times out still waiting for the real child
+        let mut parent_table = PeerTable::bind(ip).unwrap();
+        let parent_addr = parent_table.advertised_addr().to_string();
+        let bad_topo = Topology {
+            epoch: 5,
+            parent: Some(PeerInfo { machine: 1, addr: parent_addr, cols_checksum: 7 }),
+            children: vec![],
+            peer_timeout_secs: 0.4,
+        };
+        let expect = Topology {
+            epoch: 5,
+            parent: None,
+            children: vec![PeerInfo { machine: 3, addr: "unused".into(), cols_checksum: 9 }],
+            peer_timeout_secs: 0.4,
+        };
+        let mut liar = PeerTable::bind(ip).unwrap();
+        let child = std::thread::spawn(move || {
+            let err = liar.rebuild(&bad_topo, 3, 1234).unwrap_err().to_string();
+            assert!(err.contains("checksum mismatch"), "{err}");
+        });
+        let err = parent_table.rebuild(&expect, 1, 7).unwrap_err().to_string();
+        assert!(err.contains("timed out waiting for tree children"), "{err}");
+        child.join().unwrap();
     }
 
     #[test]

@@ -98,6 +98,41 @@ impl TransportKind {
     }
 }
 
+/// Physical routing of the collective traffic (`[cluster] topology` /
+/// `--topology`). Trajectories, β and the comm ledger are bit-identical
+/// under both — the ledger always charged tree edges; the knob decides
+/// whether the wire makes them physical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Every worker talks only to the leader; the leader stages all M
+    /// sweep payloads and runs the tree merges itself (the default).
+    /// Leader bytes-on-wire grow O(M) per iteration.
+    Star,
+    /// Workers dial each other from the topology handed out in `Welcome`
+    /// and relay sweep/apply traffic on the physical merge tree; the
+    /// leader touches only its O(1) root edge. Socket transport only —
+    /// the in-process pool has no wire, so the setting is accepted and
+    /// routing stays leader-staged (bit-identical by the pins above).
+    Tree,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "star" | "leader-star" => Some(Self::Star),
+            "tree" | "p2p" | "peer-to-peer" => Some(Self::Tree),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Star => "star",
+            Self::Tree => "tree",
+        }
+    }
+}
+
 /// Line-search constants of Alg 3. Paper: b = 0.5, sigma = 0.01, gamma = 0.
 #[derive(Debug, Clone, Copy)]
 pub struct LineSearchConfig {
@@ -221,6 +256,13 @@ pub struct TrainConfig {
     pub transport: TransportKind,
     /// Leader bind address for `transport = socket` (`[cluster] listen`).
     pub listen: String,
+    /// Physical routing of collective traffic (`[cluster] topology` /
+    /// `--topology`): `star` (leader-staged, default) or `tree` (workers
+    /// relay sweep/apply traffic peer-to-peer on the merge bracket; the
+    /// leader keeps O(1) bytes-on-wire per iteration). Bit-identical
+    /// trajectories and ledgers either way; `tree` requires the default
+    /// lossless wire policy.
+    pub topology: TopologyKind,
     /// PR-3-compat accounting ablation: charge the broadcast phase of the
     /// Δβ exchange as if workers still received the merged Δβ. Under
     /// worker-held β shards that broadcast no longer exists, so the
@@ -282,6 +324,7 @@ impl Default for TrainConfig {
             store: None,
             transport: TransportKind::InProcess,
             listen: "127.0.0.1:4801".into(),
+            topology: TopologyKind::Star,
             charge_beta_broadcast: false,
             supervise: false,
             heartbeat_timeout_secs: 5.0,
@@ -368,6 +411,17 @@ impl TrainConfig {
         if self.transport == TransportKind::Socket && self.listen.is_empty() {
             return Err(DlrError::Config(
                 "transport = socket needs a [cluster] listen = \"host:port\" address".into(),
+            ));
+        }
+        if self.topology == TopologyKind::Tree
+            && (self.wire_f16_margins || self.wire_f16_beta)
+        {
+            return Err(DlrError::Config(
+                "topology = tree requires the default lossless wire policy: peer-relayed \
+                 merges ship exact payloads, and the lossy wire_f16_* charging model \
+                 quantizes inside the leader-staged collective — use topology = star \
+                 for the f16 ablations"
+                    .into(),
             ));
         }
         if !self.heartbeat_timeout_secs.is_finite() || self.heartbeat_timeout_secs <= 0.0 {
@@ -524,6 +578,10 @@ impl TrainConfig {
         if let Some(s) = doc.get("cluster", "listen").and_then(|v| v.as_str()) {
             cfg.listen = s.to_string();
         }
+        if let Some(s) = doc.get("cluster", "topology").and_then(|v| v.as_str()) {
+            cfg.topology = TopologyKind::parse(s)
+                .ok_or_else(|| DlrError::Config(format!("unknown topology '{s}'")))?;
+        }
         if let Some(v) = doc.get("cluster", "charge_beta_broadcast").and_then(|v| v.as_bool())
         {
             cfg.charge_beta_broadcast = v;
@@ -656,6 +714,11 @@ impl TrainConfigBuilder {
         self.0.transport = v;
         self
     }
+    pub fn topology(mut self, v: TopologyKind) -> Self {
+        self.0.topology = v;
+        self
+    }
+
     pub fn listen(mut self, v: impl Into<String>) -> Self {
         self.0.listen = v.into();
         self
@@ -947,6 +1010,27 @@ skip_alpha_init = true
         assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Socket));
         assert_eq!(TransportKind::parse("threads"), Some(TransportKind::InProcess));
         assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        // topology: default star, tree loads from toml, aliases parse
+        assert_eq!(TrainConfig::default().topology, TopologyKind::Star);
+        let c = TrainConfig::from_toml(
+            &toml::parse("[cluster]\ntransport = \"socket\"\ntopology = \"tree\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.topology, TopologyKind::Tree);
+        assert_eq!(TopologyKind::parse("p2p"), Some(TopologyKind::Tree));
+        assert_eq!(TopologyKind::parse("leader-star"), Some(TopologyKind::Star));
+        assert_eq!(TopologyKind::parse("ring"), None);
+        assert!(TrainConfig::from_toml(
+            &toml::parse("[cluster]\ntopology = \"ring\"\n").unwrap()
+        )
+        .is_err());
+        // the tree topology requires the lossless wire policy
+        let mut bad = TrainConfig::default();
+        bad.topology = TopologyKind::Tree;
+        bad.wire_f16_margins = true;
+        assert!(bad.validate().is_err());
+        bad.wire_f16_margins = false;
+        assert!(bad.validate().is_ok());
         let doc = toml::parse("[cluster]\ntransport = \"udp\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
         // socket transport with an empty listen address is rejected

@@ -144,6 +144,40 @@
 //! warm-starting from the current β — bit-identical to a fresh fit at the
 //! new machine count warm-started from the same β.
 //!
+//! ## Scaling out — the peer-to-peer tree topology
+//!
+//! By default a socket cluster is a **star**: every worker ships its raw
+//! sweep result to the leader, which runs the deterministic pairwise
+//! merge bracket itself — simple, but the leader's bandwidth bill grows
+//! linearly with the worker count M. `[cluster] topology = "tree"`
+//! (`--topology tree` on **both** `train` and every `worker`) moves the
+//! bracket's edges onto direct worker↔worker links: each worker folds its
+//! bracket children's payloads into its own and forwards one pre-merged
+//! message to its parent, so the leader's per-iteration data traffic is
+//! **O(1) in M** — one `Sweep` down and one merged `TreeSwept` up, on the
+//! root edge only (measure it: `leader_wire_bytes_sent/recv` in the train
+//! output, next to `leader_peak_rss_bytes`).
+//!
+//! ```text
+//! dglmnet shard --kind webspam --machines 8 --out store/
+//! dglmnet train  --store store/ --workers 8 --transport socket --topology tree
+//! dglmnet worker --store store/ --machine <k> --connect 127.0.0.1:4801 --topology tree
+//! ```
+//!
+//! When to pick it: many workers, or a leader whose NIC (not the workers'
+//! sweeps) is the iteration bottleneck. For small M the star is just as
+//! fast and has fewer moving parts. The trajectory is **bit-identical**
+//! either way — same merge bracket, exact f64 intermediates on interior
+//! edges, the same f32 rounding at the bracket root — and so is the
+//! charged comm ledger, which the leader replays from the nnz metadata
+//! the merge carries up (see [`cluster`]'s topology matrix). Constraints:
+//! tree requires the default lossless wire (`wire_f16_*` is rejected at
+//! config validation), and `topology = tree` with the in-process
+//! transport is accepted but stays leader-staged (there is no wire to
+//! save). Supervision composes: a dead worker's recovery re-issues the
+//! topology to every worker under a fresh epoch, tearing down and
+//! rebuilding the peer links before the fit resumes.
+//!
 //! ## Tuning sweep speed — kernels and threads
 //!
 //! The per-iteration hot loop is the worker CD sweep, and

@@ -14,9 +14,11 @@ use dglmnet::baselines::{
 };
 use dglmnet::cli::{App, CommandSpec, ParsedArgs};
 use dglmnet::cluster::partition::PartitionStrategy;
-use dglmnet::cluster::transport::SocketTransport;
+use dglmnet::cluster::transport::{PeerTable, SocketTransport};
 use dglmnet::cluster::WorkerNode;
-use dglmnet::config::{EngineKind, ExchangeStrategy, PathConfig, TrainConfig, TransportKind};
+use dglmnet::config::{
+    EngineKind, ExchangeStrategy, PathConfig, TopologyKind, TrainConfig, TransportKind,
+};
 use dglmnet::data::shuffle::shuffle_to_store;
 use dglmnet::data::store::ShardStore;
 use dglmnet::data::{dataset::Dataset, libsvm, synth};
@@ -83,6 +85,7 @@ fn app() -> App {
                 .opt("workers", "alias for --machines (worker node count)", None)
                 .opt("transport", "in-process | socket", Some("in-process"))
                 .opt("listen", "leader bind address for --transport socket", Some("127.0.0.1:4801"))
+                .opt("topology", "star | tree — collective routing for --transport socket (tree: peer-to-peer merges, O(1) leader bandwidth)", Some("star"))
                 .flag("supervise", "detect dead workers mid-fit, roll back to the last recovery checkpoint, and re-admit replacements")
                 .opt("heartbeat-timeout-secs", "per-link Ping deadline when probing workers", Some("5"))
                 .opt("recv-timeout-secs", "socket recv deadline in seconds (0 = wait forever)", Some("0"))
@@ -138,6 +141,7 @@ fn app() -> App {
                 .opt("engine", "auto | xla | native", Some("auto"))
                 .opt("sweep-threads", "CD sweep threads (0 = auto: host parallelism)", Some("1"))
                 .flag("naive-sweep", "use the exact naive sweep kernel instead of the covariance-update one")
+                .opt("topology", "star | tree (must match the leader's --topology)", Some("star"))
                 .opt("connect-timeout-secs", "how long to retry reaching the leader", Some("30")),
         )
         .command(
@@ -225,6 +229,10 @@ fn train_config(args: &ParsedArgs) -> Result<TrainConfig> {
     }
     if let Some(l) = args.get_str("listen") {
         cfg.listen = l.to_string();
+    }
+    if let Some(t) = args.get_str("topology") {
+        cfg.topology = TopologyKind::parse(t)
+            .ok_or_else(|| DlrError::Cli(format!("unknown topology '{t}'")))?;
     }
     if let Some(e) = args.get_str("engine") {
         cfg.engine = EngineKind::parse(e)
@@ -390,18 +398,19 @@ fn drive_stepwise(args: &ParsedArgs, solver: &mut DGlmnetSolver) -> Result<FitRe
     Ok(driver.finish())
 }
 
-fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
+fn train_dglmnet(args: &ParsedArgs, train: &Dataset) -> Result<(FitResult, (u64, u64))> {
     let cfg = train_config(args)?;
     announce_socket(&cfg);
     let mut solver = DGlmnetSolver::from_dataset(train, &cfg)?;
-    drive_stepwise(args, &mut solver)
+    let fit = drive_stepwise(args, &mut solver)?;
+    Ok((fit, solver.leader_wire_bytes()))
 }
 
 /// Out-of-core train path: every worker self-loads its shard file from the
 /// store named by `cfg.store` and the leader touches only the manifest,
 /// the shard headers and `y.bin` — it never constructs a matrix of X.
 /// Returns the fit plus the store's example count (artifact metadata).
-fn train_dglmnet_from_store(args: &ParsedArgs) -> Result<(FitResult, usize)> {
+fn train_dglmnet_from_store(args: &ParsedArgs) -> Result<(FitResult, usize, (u64, u64))> {
     let cfg = train_config(args)?;
     let dir = cfg.store.clone().ok_or_else(|| {
         DlrError::Cli("the store train path needs --store <dir>".into())
@@ -417,7 +426,9 @@ fn train_dglmnet_from_store(args: &ParsedArgs) -> Result<(FitResult, usize)> {
     announce_socket(&cfg);
     let n = store.n();
     let mut solver = DGlmnetSolver::from_store(&store, &cfg)?;
-    Ok((drive_stepwise(args, &mut solver)?, n))
+    let fit = drive_stepwise(args, &mut solver)?;
+    let wire = solver.leader_wire_bytes();
+    Ok((fit, n, wire))
 }
 
 fn train_baseline(kind: &str, args: &ParsedArgs, train: &Dataset) -> Result<FitResult> {
@@ -470,7 +481,7 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
                     .into(),
             ));
         }
-        let (fit, n_examples) = train_dglmnet_from_store(args)?;
+        let (fit, n_examples, wire) = train_dglmnet_from_store(args)?;
         println!(
             "store fit @ lambda = {:.5}: f = {:.6}, nnz = {}, {} iters, converged = {}, \
              {} comm bytes",
@@ -481,17 +492,20 @@ fn cmd_train(args: &ParsedArgs) -> Result<()> {
             fit.converged,
             fit.comm_bytes
         );
-        finish_train_output(args, &fit, n_examples, &kind)?;
+        finish_train_output(args, &fit, n_examples, &kind, Some(wire))?;
         return Ok(());
     }
     let ds = load_or_generate(args)?;
     let split = ds.split(0.8, args.get_u64("seed")?.unwrap_or(1))?;
-    let fit = match kind.as_str() {
-        "dglmnet" => train_dglmnet(args, &split.train)?,
-        other => train_baseline(other, args, &split.train)?,
+    let (fit, wire) = match kind.as_str() {
+        "dglmnet" => {
+            let (fit, wire) = train_dglmnet(args, &split.train)?;
+            (fit, Some(wire))
+        }
+        other => (train_baseline(other, args, &split.train)?, None),
     };
     print_fit(&kind, fit.lambda, &fit, &split.test);
-    finish_train_output(args, &fit, split.train.n_examples(), &kind)?;
+    finish_train_output(args, &fit, split.train.n_examples(), &kind, wire)?;
     Ok(())
 }
 
@@ -504,6 +518,7 @@ fn finish_train_output(
     fit: &FitResult,
     n_examples: usize,
     solver: &str,
+    wire: Option<(u64, u64)>,
 ) -> Result<()> {
     println!("objective_bits={:016x}", fit.objective.to_bits());
     if solver == "dglmnet" {
@@ -521,6 +536,13 @@ fn finish_train_output(
         "leader_peak_rss_bytes={}",
         dglmnet::util::peak_rss_bytes().unwrap_or(0)
     );
+    if let Some((sent, recv)) = wire {
+        // measured at the leader's own worker links (frame bytes, both
+        // directions; the in-process pool counts what its messages would
+        // frame to) — under `--topology tree` the data-plane share stays
+        // O(1) in the worker count
+        println!("leader_wire_bytes_sent={sent} leader_wire_bytes_recv={recv}");
+    }
     if let Some(path) = args.get_str("model-out") {
         // embed the artifact metadata (training-set size, solver) the
         // serve/predict loaders surface and checksum over
@@ -647,7 +669,15 @@ fn cmd_worker(args: &ParsedArgs) -> Result<()> {
     );
     let mut transport =
         SocketTransport::connect_retry(connect.as_str(), Duration::from_secs(timeout))?;
-    node.serve(&mut transport)?;
+    // under the tree topology the worker listens for its bracket peers on
+    // an ephemeral port of the same interface that reaches the leader; the
+    // Join announces it and the Welcome's topology wires up the links
+    let mut peers = if cfg.topology == TopologyKind::Tree {
+        Some(PeerTable::bind(transport.local_ip()?)?)
+    } else {
+        None
+    };
+    node.serve(&mut transport, peers.as_mut())?;
     println!("worker {machine}: leader finished, shutting down");
     Ok(())
 }

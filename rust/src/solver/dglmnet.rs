@@ -274,6 +274,8 @@ impl DGlmnetSolver {
                     pinned_engine(cfg),
                     cfg.family,
                     cfg.enet_alpha,
+                    cfg.topology,
+                    cfg.recv_timeout_secs,
                     cfg.listen.as_str(),
                     ACCEPT_TIMEOUT,
                 )?;
@@ -323,6 +325,8 @@ impl DGlmnetSolver {
             pinned_engine(cfg),
             cfg.family,
             cfg.enet_alpha,
+            cfg.topology,
+            cfg.recv_timeout_secs,
             listener,
             ACCEPT_TIMEOUT,
         )?;
@@ -381,6 +385,8 @@ impl DGlmnetSolver {
                     pinned_engine(cfg),
                     cfg.family,
                     cfg.enet_alpha,
+                    cfg.topology,
+                    cfg.recv_timeout_secs,
                     cfg.listen.as_str(),
                     ACCEPT_TIMEOUT,
                 )?;
@@ -407,6 +413,8 @@ impl DGlmnetSolver {
             pinned_engine(cfg),
             cfg.family,
             cfg.enet_alpha,
+            cfg.topology,
+            cfg.recv_timeout_secs,
             listener,
             ACCEPT_TIMEOUT,
         )?;
@@ -514,6 +522,21 @@ impl DGlmnetSolver {
     /// (1.0 until the auto strategy pick has observed an exchange).
     pub fn comm_estimator_shrink(&self) -> (f64, f64) {
         (self.est_dm.shrink(), self.est_db.shrink())
+    }
+
+    /// `(sent, received)` frame bytes measured at the leader's worker
+    /// links — the leader's whole bandwidth bill. Under `topology = tree`
+    /// the data-plane share is O(1) in the worker count (one Sweep down
+    /// and one merged result up per iteration, on the root edge only).
+    pub fn leader_wire_bytes(&self) -> (u64, u64) {
+        self.pool.wire_bytes()
+    }
+
+    /// Current tree-topology epoch (0 = star, or no topology issued yet);
+    /// bumped on every supervised re-issue, so tests can assert that a
+    /// recovery rebuilt the peer links.
+    pub fn topology_epoch(&self) -> u32 {
+        self.pool.topology_epoch()
     }
 
     /// Probe every worker link and replace the dead ones — the supervisor's

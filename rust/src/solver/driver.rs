@@ -42,7 +42,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::cluster::codec::MessageClass;
-use crate::cluster::comm::{Collective, CommCtx, TaskExecutor};
+use crate::cluster::comm::{replay_tree_charges, Collective, CommCtx, TaskExecutor};
 use crate::config::ExchangeStrategy;
 use crate::data::sparse::SparseVec;
 use crate::error::{DlrError, Result};
@@ -430,6 +430,11 @@ impl<'a> FitDriver<'a> {
             self.next_iter, ck.iter
         );
         self.solver.repair_workers()?;
+        // under a physical tree every recovery re-issues the topology to
+        // all workers under a bumped epoch: peer links are torn down
+        // (discarding any stale in-flight payloads) and rebuilt, and the
+        // replacement — welcomed without a topology — joins the tree here
+        self.solver.pool.reissue_topology(&self.solver.ledger)?;
         self.restore_from(&ck)
     }
 
@@ -529,159 +534,314 @@ impl<'a> FitDriver<'a> {
         let f_start = *self.f_prev.get_or_insert(f0);
         debug_assert!((f_start - f0).abs() <= 1e-6 * f0.abs().max(1.0) || iter > 1);
 
-        // ---- phase 2: sweep send/recv over the node protocol ------------
-        // workers derive (w, z) from their own margins and sweep their own
-        // β shard — the request carries only (λ·α, ν, λ(1−α))
-        timers.time("sweep", || pool.sweep_all(lam_f, nu_f, l2_f, &mut scratch.results))?;
-        let max_worker = scratch
-            .results
-            .iter()
-            .map(|r| r.compute_secs)
-            .fold(0f64, f64::max);
-        self.sim_compute += max_worker;
-
-        // ---- phase 3: exchange Δβ and Δm (cluster::comm) ----------------
-        // remap shard-local Δβ to global feature ids — O(nnz) per machine;
-        // both strategies gather Δβ (timed under "allreduce": it's
-        // comm-path staging work)
-        timers.time("allreduce", || {
-            scratch
-                .db_contribs
-                .resize_with(scratch.results.len(), Default::default);
-            for (k, r) in scratch.results.iter().enumerate() {
-                pool.delta_to_global(k, &r.delta_local, p, &mut scratch.db_contribs[k]);
-            }
-        });
-        // strategy choice: allgather-Δβ when gathering the Δβ shards is
-        // estimated cheaper than reducing the example-space Δm (ROADMAP's
-        // "kill the O(n) wire term"). Deliberately NOT "whenever Δm is
-        // non-empty": the simulation charges the allgather path's local Δm
-        // recombination zero bytes, which a real cluster cannot match, so
-        // the Δβ-vs-Δm comparison keeps reduce-Δm in the regime where Δm
-        // is the cheaper payload anyway. Both sides go through the
-        // EWMA-sharpened `TreeByteEstimator` (observed overlap + codec
-        // effects), with the Δβ side modeled as the gather it now is.
-        // Forced strategies and the dense ablation bypass the estimate.
-        let mut auto_pick = false;
-        let mut dm_upper = 0u64;
-        let mut db_upper = 0u64;
-        let strategy = if cfg.dense_allreduce || cfg.wire_f16_beta {
-            // wire_f16_beta implies reduce-Δm: the allgather path's exact
-            // leader-side Δm recombination is incompatible with a
-            // quantized Δβ wire (validate() rejects forcing both)
-            ExchangeStrategy::ReduceDm
-        } else {
-            match cfg.exchange {
-                ExchangeStrategy::Auto => {
-                    auto_pick = true;
-                    scratch.est_nnz.clear();
-                    scratch.est_nnz.extend(scratch.results.iter().map(|r| r.dmargins.nnz()));
-                    let dm_est = est_dm.estimate(&mut scratch.est_nnz, n, policy.f16_margins);
-                    scratch.est_nnz.clear();
-                    scratch.est_nnz.extend(scratch.db_contribs.iter().map(|c| c.nnz()));
-                    let db_est = est_db.estimate(&mut scratch.est_nnz, p, policy.f16_beta);
-                    dm_upper = dm_est.upper;
-                    db_upper = db_est.upper;
-                    if db_est.predicted < dm_est.predicted {
-                        ExchangeStrategy::AllGatherBeta
-                    } else {
-                        ExchangeStrategy::ReduceDm
-                    }
-                }
-                s => s,
-            }
-        };
+        // ---- phases 2–3: sweep, then exchange Δβ and Δm -----------------
+        // Two physical routes, one algorithm. The staged route runs the
+        // merge bracket on the leader's task pool; the physical tree
+        // (`--topology tree` over sockets) ships the *same* bracket over
+        // worker↔worker links — the leader receives one pre-merged result
+        // from machine 0 and replays the per-edge byte charges from the
+        // nnz metadata the merge carried up. β, objective, and the comm
+        // ledger are bit-identical either way.
         let machines = pool.machines();
-        let exec: &dyn TaskExecutor = &*pool;
         // the Δβ broadcast no longer exists (workers apply α·Δβ_local from
         // their own state); `charge_beta_broadcast` is the PR-3-compat
         // accounting ablation that pretends it still does
         let beta_bcast = cfg.charge_beta_broadcast;
-        let (comm_secs, dm_actual, db_actual) = timers.time("allreduce", || {
-            let dm_refs: Vec<&SparseVec> =
-                scratch.results.iter().map(|r| &r.dmargins).collect();
-            let db_refs: Vec<&SparseVec> = scratch.db_contribs.iter().collect();
-            match strategy {
-                ExchangeStrategy::AllGatherBeta => {
-                    let ctx_beta = CommCtx {
-                        ledger,
-                        policy,
-                        class: MessageClass::Beta,
-                        exec,
-                        charge: true,
-                        broadcast: beta_bcast,
+        let physical_tree = pool.is_physical_tree();
+        let mut auto_pick = false;
+        let mut dm_upper = 0u64;
+        let mut db_upper = 0u64;
+        let max_worker: f64;
+        let strategy: ExchangeStrategy;
+        let comm_secs: f64;
+        let dm_actual: Option<u64>;
+        let db_actual: u64;
+        if physical_tree {
+            // ---- phase 2: one Sweep down the root edge, one pre-merged
+            // TreeSwept back up — the leader's per-iteration data traffic
+            // no longer scales with M
+            let swept = timers.time("sweep", || pool.sweep_all_tree(lam_f, nu_f, l2_f))?;
+            max_worker =
+                swept.origins.iter().map(|o| o.compute_secs).fold(0f64, f64::max);
+            // ---- phase 3: strategy pick + charge replay from metadata.
+            // The origins carry every worker's raw contribution nnz (in
+            // machine order after the scatter below) — the exact inputs
+            // the staged path feeds the byte estimators — and the edges
+            // carry each bracket pair's accumulated nnz at send time, so
+            // the replay charges the identical per-edge codec costs.
+            let (s, secs, dm_b, db_b) = timers.time(
+                "allreduce",
+                || -> Result<(ExchangeStrategy, f64, Option<u64>, u64)> {
+                    let mut dm_nnz = vec![0usize; machines];
+                    let mut db_nnz = vec![0usize; machines];
+                    for o in &swept.origins {
+                        dm_nnz[o.machine as usize] = o.dm_nnz as usize;
+                        db_nnz[o.machine as usize] = o.db_nnz as usize;
+                    }
+                    let strategy = if cfg.dense_allreduce || cfg.wire_f16_beta {
+                        ExchangeStrategy::ReduceDm
+                    } else {
+                        match cfg.exchange {
+                            ExchangeStrategy::Auto => {
+                                auto_pick = true;
+                                scratch.est_nnz.clear();
+                                scratch.est_nnz.extend_from_slice(&dm_nnz);
+                                let dm_est = est_dm.estimate(
+                                    &mut scratch.est_nnz,
+                                    n,
+                                    policy.f16_margins,
+                                );
+                                scratch.est_nnz.clear();
+                                scratch.est_nnz.extend_from_slice(&db_nnz);
+                                let db_est = est_db.estimate(
+                                    &mut scratch.est_nnz,
+                                    p,
+                                    policy.f16_beta,
+                                );
+                                dm_upper = dm_est.upper;
+                                db_upper = db_est.upper;
+                                if db_est.predicted < dm_est.predicted {
+                                    ExchangeStrategy::AllGatherBeta
+                                } else {
+                                    ExchangeStrategy::ReduceDm
+                                }
+                            }
+                            s => s,
+                        }
                     };
-                    let o_beta = allgather.exchange(
-                        machines,
-                        &|k| db_refs[k],
-                        p,
-                        &ctx_beta,
-                        &mut scratch.ar,
-                        Arc::make_mut(&mut scratch.delta_sp),
-                    );
-                    // Δm never crosses the wire: every worker already owns
-                    // its shard's Δβᵀx product, and the leader combines them
-                    // in the same pairwise tree order as the charged reduce
-                    // — bit-identical sums, zero bytes
-                    let ctx_dm = CommCtx {
-                        ledger,
-                        policy,
-                        class: MessageClass::Margins,
-                        exec,
-                        charge: false,
-                        broadcast: false,
+                    let edge_nnz = |class: MessageClass, a: u32, b: u32| -> Result<usize> {
+                        swept
+                            .edges
+                            .iter()
+                            .find(|e| e.into == a && e.from == b)
+                            .map(|e| match class {
+                                MessageClass::Beta => e.db_nnz as usize,
+                                _ => e.dm_nnz as usize,
+                            })
+                            .ok_or_else(|| {
+                                DlrError::Solver(format!(
+                                    "tree sweep metadata is missing the {a}←{b} merge edge"
+                                ))
+                            })
                     };
-                    allreduce.exchange(
-                        machines,
-                        &|k| dm_refs[k],
-                        n,
-                        &ctx_dm,
-                        &mut scratch.ar,
-                        Arc::make_mut(&mut scratch.dmargins_sp),
-                    );
-                    (o_beta.simulated_secs, None, o_beta.bytes_moved)
+                    match strategy {
+                        ExchangeStrategy::AllGatherBeta => {
+                            let o_beta = replay_tree_charges(
+                                &allgather.model,
+                                machines,
+                                p,
+                                ledger,
+                                &policy,
+                                MessageClass::Beta,
+                                true,
+                                beta_bcast,
+                                &mut |a, b| edge_nnz(MessageClass::Beta, a, b),
+                                swept.db.nnz(),
+                            )?;
+                            // Δm is charged zero bytes on this path (the
+                            // staged engine's local recombination) even
+                            // though the physical tree did move it
+                            Ok((strategy, o_beta.simulated_secs, None, o_beta.bytes_moved))
+                        }
+                        _ => {
+                            let o1 = replay_tree_charges(
+                                &allreduce.model,
+                                machines,
+                                n,
+                                ledger,
+                                &policy,
+                                MessageClass::Margins,
+                                true,
+                                true,
+                                &mut |a, b| edge_nnz(MessageClass::Margins, a, b),
+                                swept.dm.nnz(),
+                            )?;
+                            let o2 = replay_tree_charges(
+                                &allreduce.model,
+                                machines,
+                                p,
+                                ledger,
+                                &policy,
+                                MessageClass::Beta,
+                                true,
+                                beta_bcast,
+                                &mut |a, b| edge_nnz(MessageClass::Beta, a, b),
+                                swept.db.nnz(),
+                            )?;
+                            Ok((
+                                strategy,
+                                o1.simulated_secs + o2.simulated_secs,
+                                Some(o1.bytes_moved),
+                                o2.bytes_moved,
+                            ))
+                        }
+                    }
+                },
+            )?;
+            // machine 0 already applied the bracket root's f32 rounding,
+            // so these land bit-identical to the staged merge outputs
+            *Arc::make_mut(&mut scratch.dmargins_sp) = swept.dm.to_sparse_f32();
+            *Arc::make_mut(&mut scratch.delta_sp) = swept.db.to_sparse_f32();
+            strategy = s;
+            comm_secs = secs;
+            dm_actual = dm_b;
+            db_actual = db_b;
+        } else {
+            // ---- phase 2: sweep send/recv over the node protocol --------
+            // workers derive (w, z) from their own margins and sweep their
+            // own β shard — the request carries only (λ·α, ν, λ(1−α))
+            timers.time("sweep", || pool.sweep_all(lam_f, nu_f, l2_f, &mut scratch.results))?;
+            max_worker = scratch
+                .results
+                .iter()
+                .map(|r| r.compute_secs)
+                .fold(0f64, f64::max);
+
+            // ---- phase 3: exchange Δβ and Δm (cluster::comm) ------------
+            // remap shard-local Δβ to global feature ids — O(nnz) per
+            // machine; both strategies gather Δβ (timed under "allreduce":
+            // it's comm-path staging work)
+            timers.time("allreduce", || {
+                scratch
+                    .db_contribs
+                    .resize_with(scratch.results.len(), Default::default);
+                for (k, r) in scratch.results.iter().enumerate() {
+                    pool.delta_to_global(k, &r.delta_local, p, &mut scratch.db_contribs[k]);
                 }
-                _ => {
-                    let ctx_dm = CommCtx {
-                        ledger,
-                        policy,
-                        class: MessageClass::Margins,
-                        exec,
-                        charge: true,
-                        broadcast: true,
-                    };
-                    let o1 = allreduce.exchange(
-                        machines,
-                        &|k| dm_refs[k],
-                        n,
-                        &ctx_dm,
-                        &mut scratch.ar,
-                        Arc::make_mut(&mut scratch.dmargins_sp),
-                    );
-                    let ctx_beta = CommCtx {
-                        ledger,
-                        policy,
-                        class: MessageClass::Beta,
-                        exec,
-                        charge: true,
-                        broadcast: beta_bcast,
-                    };
-                    let o2 = allreduce.exchange(
-                        machines,
-                        &|k| db_refs[k],
-                        p,
-                        &ctx_beta,
-                        &mut scratch.ar,
-                        Arc::make_mut(&mut scratch.delta_sp),
-                    );
-                    (
-                        o1.simulated_secs + o2.simulated_secs,
-                        Some(o1.bytes_moved),
-                        o2.bytes_moved,
-                    )
+            });
+            // strategy choice: allgather-Δβ when gathering the Δβ shards is
+            // estimated cheaper than reducing the example-space Δm (ROADMAP's
+            // "kill the O(n) wire term"). Deliberately NOT "whenever Δm is
+            // non-empty": the simulation charges the allgather path's local Δm
+            // recombination zero bytes, which a real cluster cannot match, so
+            // the Δβ-vs-Δm comparison keeps reduce-Δm in the regime where Δm
+            // is the cheaper payload anyway. Both sides go through the
+            // EWMA-sharpened `TreeByteEstimator` (observed overlap + codec
+            // effects), with the Δβ side modeled as the gather it now is.
+            // Forced strategies and the dense ablation bypass the estimate.
+            strategy = if cfg.dense_allreduce || cfg.wire_f16_beta {
+                // wire_f16_beta implies reduce-Δm: the allgather path's exact
+                // leader-side Δm recombination is incompatible with a
+                // quantized Δβ wire (validate() rejects forcing both)
+                ExchangeStrategy::ReduceDm
+            } else {
+                match cfg.exchange {
+                    ExchangeStrategy::Auto => {
+                        auto_pick = true;
+                        scratch.est_nnz.clear();
+                        scratch
+                            .est_nnz
+                            .extend(scratch.results.iter().map(|r| r.dmargins.nnz()));
+                        let dm_est =
+                            est_dm.estimate(&mut scratch.est_nnz, n, policy.f16_margins);
+                        scratch.est_nnz.clear();
+                        scratch
+                            .est_nnz
+                            .extend(scratch.db_contribs.iter().map(|c| c.nnz()));
+                        let db_est =
+                            est_db.estimate(&mut scratch.est_nnz, p, policy.f16_beta);
+                        dm_upper = dm_est.upper;
+                        db_upper = db_est.upper;
+                        if db_est.predicted < dm_est.predicted {
+                            ExchangeStrategy::AllGatherBeta
+                        } else {
+                            ExchangeStrategy::ReduceDm
+                        }
+                    }
+                    s => s,
                 }
-            }
-        });
+            };
+            let exec: &dyn TaskExecutor = &*pool;
+            let (secs, dm_b, db_b) = timers.time("allreduce", || {
+                let dm_refs: Vec<&SparseVec> =
+                    scratch.results.iter().map(|r| &r.dmargins).collect();
+                let db_refs: Vec<&SparseVec> = scratch.db_contribs.iter().collect();
+                match strategy {
+                    ExchangeStrategy::AllGatherBeta => {
+                        let ctx_beta = CommCtx {
+                            ledger,
+                            policy,
+                            class: MessageClass::Beta,
+                            exec,
+                            charge: true,
+                            broadcast: beta_bcast,
+                        };
+                        let o_beta = allgather.exchange(
+                            machines,
+                            &|k| db_refs[k],
+                            p,
+                            &ctx_beta,
+                            &mut scratch.ar,
+                            Arc::make_mut(&mut scratch.delta_sp),
+                        );
+                        // Δm never crosses the wire: every worker already owns
+                        // its shard's Δβᵀx product, and the leader combines them
+                        // in the same pairwise tree order as the charged reduce
+                        // — bit-identical sums, zero bytes
+                        let ctx_dm = CommCtx {
+                            ledger,
+                            policy,
+                            class: MessageClass::Margins,
+                            exec,
+                            charge: false,
+                            broadcast: false,
+                        };
+                        allreduce.exchange(
+                            machines,
+                            &|k| dm_refs[k],
+                            n,
+                            &ctx_dm,
+                            &mut scratch.ar,
+                            Arc::make_mut(&mut scratch.dmargins_sp),
+                        );
+                        (o_beta.simulated_secs, None, o_beta.bytes_moved)
+                    }
+                    _ => {
+                        let ctx_dm = CommCtx {
+                            ledger,
+                            policy,
+                            class: MessageClass::Margins,
+                            exec,
+                            charge: true,
+                            broadcast: true,
+                        };
+                        let o1 = allreduce.exchange(
+                            machines,
+                            &|k| dm_refs[k],
+                            n,
+                            &ctx_dm,
+                            &mut scratch.ar,
+                            Arc::make_mut(&mut scratch.dmargins_sp),
+                        );
+                        let ctx_beta = CommCtx {
+                            ledger,
+                            policy,
+                            class: MessageClass::Beta,
+                            exec,
+                            charge: true,
+                            broadcast: beta_bcast,
+                        };
+                        let o2 = allreduce.exchange(
+                            machines,
+                            &|k| db_refs[k],
+                            p,
+                            &ctx_beta,
+                            &mut scratch.ar,
+                            Arc::make_mut(&mut scratch.delta_sp),
+                        );
+                        (
+                            o1.simulated_secs + o2.simulated_secs,
+                            Some(o1.bytes_moved),
+                            o2.bytes_moved,
+                        )
+                    }
+                }
+            });
+            comm_secs = secs;
+            dm_actual = dm_b;
+            db_actual = db_b;
+        }
+        self.sim_compute += max_worker;
         self.sim_comm += comm_secs;
         if auto_pick {
             // sharpen the estimators with what the charged exchanges
@@ -755,7 +915,13 @@ impl<'a> FitDriver<'a> {
         scratch.delta_sp.add_scaled_into(beta, af);
         scratch.dmargins_sp.add_scaled_into(margins, af);
         let delta_wire = if policy.f16_beta { Some(&scratch.delta_sp) } else { None };
-        timers.time("apply", || pool.apply_all(af, &scratch.dmargins_sp, delta_wire))?;
+        timers.time("apply", || {
+            if physical_tree {
+                pool.apply_all_tree(af, &scratch.dmargins_sp, delta_wire)
+            } else {
+                pool.apply_all(af, &scratch.dmargins_sp, delta_wire)
+            }
+        })?;
 
         let record = IterationRecord {
             iter,
@@ -800,7 +966,11 @@ impl<'a> FitDriver<'a> {
                     scratch.dmargins_sp.add_scaled_into(margins, rem);
                     let delta_wire =
                         if policy.f16_beta { Some(&scratch.delta_sp) } else { None };
-                    pool.apply_all(rem, &scratch.dmargins_sp, delta_wire)?;
+                    if physical_tree {
+                        pool.apply_all_tree(rem, &scratch.dmargins_sp, delta_wire)?;
+                    } else {
+                        pool.apply_all(rem, &scratch.dmargins_sp, delta_wire)?;
+                    }
                     self.f_prev = Some(f_full);
                 }
             }

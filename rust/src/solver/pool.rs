@@ -38,13 +38,17 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::cluster::comm::{Job, TaskExecutor};
+use crate::cluster::comm::{bracket_children, bracket_parent, Job, TaskExecutor};
 use crate::cluster::network::NetworkLedger;
 use crate::cluster::node::WorkerNode;
 use crate::cluster::partition::FeaturePartition;
-use crate::cluster::protocol::{crc_u32, log_lost_abort, NodeMessage};
-use crate::cluster::transport::{Fault, FaultyTransport, SocketTransport, Transport};
-use crate::config::TrainConfig;
+use crate::cluster::protocol::{
+    crc_u32, log_lost_abort, NodeMessage, PeerInfo, Topology, TreeSwept,
+};
+use crate::cluster::transport::{
+    Fault, FaultyTransport, PeerTable, SocketTransport, Transport, WireCounters,
+};
+use crate::config::{TopologyKind, TrainConfig};
 use crate::data::dataset::Dataset;
 use crate::data::shuffle::{shard_in_memory, FeatureShard};
 use crate::data::sparse::SparseVec;
@@ -73,22 +77,63 @@ enum ThreadMsg {
 
 /// Leader-side endpoint of one in-process worker: protocol messages are
 /// wrapped in [`ThreadMsg`] on the way down, replies come back plain.
+/// Byte counters meter the frame each message *would* occupy on a real
+/// wire (encoded body + 4-byte length prefix), so per-link traffic reports
+/// are comparable across transports.
 struct LeaderLink {
     tx: mpsc::Sender<ThreadMsg>,
     rx: mpsc::Receiver<NodeMessage>,
+    sent: u64,
+    recv: u64,
+}
+
+impl LeaderLink {
+    fn new(tx: mpsc::Sender<ThreadMsg>, rx: mpsc::Receiver<NodeMessage>) -> Self {
+        Self { tx, rx, sent: 0, recv: 0 }
+    }
+}
+
+/// The frame a message would occupy on a socket: encoded body + prefix.
+fn wire_frame_len(msg: &NodeMessage) -> u64 {
+    msg.encode().len() as u64 + 4
 }
 
 impl Transport for LeaderLink {
     fn send(&mut self, msg: NodeMessage) -> Result<()> {
+        self.sent += wire_frame_len(&msg);
         self.tx
             .send(ThreadMsg::Proto(msg))
             .map_err(|_| DlrError::Solver("worker thread hung up".into()))
     }
 
     fn recv(&mut self) -> Result<NodeMessage> {
-        self.rx
+        let msg = self
+            .rx
             .recv()
-            .map_err(|_| DlrError::Solver("worker thread hung up".into()))
+            .map_err(|_| DlrError::Solver("worker thread hung up".into()))?;
+        self.recv += wire_frame_len(&msg);
+        Ok(msg)
+    }
+
+    fn recv_poll(&mut self, wait: Duration) -> Result<Option<NodeMessage>> {
+        match self.rx.recv_timeout(wait) {
+            Ok(msg) => {
+                self.recv += wire_frame_len(&msg);
+                Ok(Some(msg))
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(DlrError::Solver("worker thread hung up".into()))
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_recv(&self) -> u64 {
+        self.recv
     }
 
     fn kind(&self) -> &'static str {
@@ -134,6 +179,20 @@ pub struct WorkerPool {
     family: FamilyKind,
     /// Elastic-net α, echoed in the `Welcome` for worker-side sanity checks.
     enet_alpha: f64,
+    /// Tree topology active: collective traffic routes over physical
+    /// worker↔worker links and the leader talks to machine 0 only. Only a
+    /// socket pool routes physically; an in-process pool under a tree
+    /// config stays leader-staged (the staged engine already *is* the
+    /// bracket, and there is no wire to relieve).
+    tree: bool,
+    /// Current topology epoch: bumped on every re-issue so peers can
+    /// reject stale hellos. 0 = never issued.
+    topo_epoch: u32,
+    /// Per-hop peer recv deadline handed out in every [`Topology`].
+    peer_timeout_secs: f64,
+    /// Peer-listener address each worker announced in its `Join` (empty
+    /// for star workers); re-learned whenever a replacement is admitted.
+    listen_addrs: Vec<String>,
 }
 
 impl WorkerPool {
@@ -243,7 +302,7 @@ impl WorkerPool {
             let (tx, rx) = mpsc::channel::<ThreadMsg>();
             let (reply_tx, reply_rx) = mpsc::channel::<NodeMessage>();
             task_txs.push(tx.clone());
-            links.push(Box::new(LeaderLink { tx, rx: reply_rx }));
+            links.push(Box::new(LeaderLink::new(tx, reply_rx)));
             handles.push(spawn_worker_thread(
                 machine,
                 build,
@@ -270,6 +329,10 @@ impl WorkerPool {
             respawner: None,
             family,
             enet_alpha,
+            tree: false,
+            topo_epoch: 0,
+            peer_timeout_secs: 0.0,
+            listen_addrs: vec![String::new(); m],
         };
         for k in 0..m {
             let expected = &pool.global_cols[k];
@@ -300,35 +363,61 @@ impl WorkerPool {
     /// joins from a retry race — are rejected and the leader keeps
     /// waiting; a *valid worker* announcing a mismatched shard or a
     /// startup failure is a hard error. Gives up after `timeout`.
+    ///
+    /// Under `TopologyKind::Tree` every worker must announce a peer
+    /// listener in its `Join`; admission is *batched* — the `Welcome`s
+    /// (each carrying that worker's [`Topology`]) go out only once all M
+    /// workers have joined, because the tree addresses aren't known before
+    /// that. `peer_timeout_secs` is the per-hop peer recv deadline handed
+    /// out in every topology (0 disables it).
+    #[allow(clippy::too_many_arguments)]
     pub fn listen_and_accept(
         partition: &FeaturePartition,
         n: usize,
         expected_engine: Option<&str>,
         family: FamilyKind,
         enet_alpha: f64,
+        topology: TopologyKind,
+        peer_timeout_secs: f64,
         addr: impl ToSocketAddrs,
         timeout: Duration,
     ) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
-        Self::accept(partition, n, expected_engine, family, enet_alpha, listener, timeout)
+        Self::accept(
+            partition,
+            n,
+            expected_engine,
+            family,
+            enet_alpha,
+            topology,
+            peer_timeout_secs,
+            listener,
+            timeout,
+        )
     }
 
     /// Admit one remote worker per partition block on an already-bound
     /// listener (lets callers bind port 0 and hand the concrete address to
     /// the workers first).
+    #[allow(clippy::too_many_arguments)]
     pub fn accept(
         partition: &FeaturePartition,
         n: usize,
         expected_engine: Option<&str>,
         family: FamilyKind,
         enet_alpha: f64,
+        topology: TopologyKind,
+        peer_timeout_secs: f64,
         listener: TcpListener,
         timeout: Duration,
     ) -> Result<Self> {
         let m = partition.machines();
         let p = partition.n_features();
+        let tree = topology == TopologyKind::Tree;
         let global_cols: Vec<Vec<u32>> = (0..m).map(|k| partition.features_of(k)).collect();
         let mut links: Vec<Option<Box<dyn Transport>>> = (0..m).map(|_| None).collect();
+        let mut raws: Vec<Option<std::net::TcpStream>> = (0..m).map(|_| None).collect();
+        let mut listen_addrs = vec![String::new(); m];
         let mut engine_names = vec![String::new(); m];
         listener.set_nonblocking(true)?;
         let deadline = Instant::now() + timeout;
@@ -376,6 +465,7 @@ impl WorkerPool {
                     cols_checksum,
                     engine,
                     family: jfam,
+                    listen_addr,
                 } => {
                     let k = machine as usize;
                     if k >= m {
@@ -446,14 +536,22 @@ impl WorkerPool {
                         }
                         return Err(DlrError::Solver(msg));
                     }
-                    link.send(NodeMessage::Welcome {
-                        family: family.name().to_string(),
-                        alpha: enet_alpha,
-                    })
-                    .map_err(|e| worker_err(k, e))?;
-                    // admitted: lift the handshake deadline for fit traffic
-                    raw.set_read_timeout(None)?;
+                    if tree && listen_addr.is_empty() {
+                        let msg = format!(
+                            "worker {k} announced no peer listener but the leader runs \
+                             the tree topology — start every worker with --topology tree"
+                        );
+                        if let Err(e) = link.send(NodeMessage::Abort { message: msg.clone() })
+                        {
+                            log_lost_abort(k, "admission", &e);
+                        }
+                        return Err(DlrError::Solver(msg));
+                    }
+                    // admitted; the welcome (and, under the tree topology,
+                    // this worker's Topology) goes out once all M joined
                     engine_names[k] = engine;
+                    listen_addrs[k] = listen_addr;
+                    raws[k] = Some(raw);
                     links[k] = Some(link);
                     admitted += 1;
                 }
@@ -471,8 +569,27 @@ impl WorkerPool {
                 }
             }
         }
-        let links: Vec<Box<dyn Transport>> =
+        let mut links: Vec<Box<dyn Transport>> =
             links.into_iter().map(|l| l.expect("all machines admitted")).collect();
+        // every shard is connected: release the batched welcomes, each
+        // carrying its worker's tree view when the topology asks for one
+        let topo_epoch = if tree { 1 } else { 0 };
+        for (k, link) in links.iter_mut().enumerate() {
+            let topo = tree.then(|| {
+                build_topology(k, topo_epoch, peer_timeout_secs, &listen_addrs, &global_cols)
+            });
+            link.send(NodeMessage::Welcome {
+                family: family.name().to_string(),
+                alpha: enet_alpha,
+                topology: topo,
+            })
+            .map_err(|e| worker_err(k, e))?;
+            // admitted: lift the handshake deadline for fit traffic
+            raws[k]
+                .as_ref()
+                .expect("all machines admitted")
+                .set_read_timeout(None)?;
+        }
         Ok(Self {
             links,
             global_cols,
@@ -490,6 +607,10 @@ impl WorkerPool {
             respawner: None,
             family,
             enet_alpha,
+            tree,
+            topo_epoch,
+            peer_timeout_secs,
+            listen_addrs,
         })
     }
 
@@ -506,6 +627,140 @@ impl WorkerPool {
     /// leader-offload regression tests assert this grows during fits.
     pub fn tasks_executed(&self) -> u64 {
         self.tasks_done.load(Ordering::Relaxed)
+    }
+
+    /// Does collective traffic route over physical worker↔worker links?
+    /// True only for a socket pool admitted under the tree topology — an
+    /// in-process pool under a tree config stays leader-staged.
+    pub fn is_physical_tree(&self) -> bool {
+        self.tree && self.transport == "socket"
+    }
+
+    /// Current topology epoch (0 = no topology ever issued).
+    pub fn topology_epoch(&self) -> u32 {
+        self.topo_epoch
+    }
+
+    /// Total frame bytes the leader has moved over all of its worker links
+    /// `(sent, received)` — measured at the transport, so under the tree
+    /// topology this is the leader's whole bandwidth bill.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        let mut sent = 0u64;
+        let mut recv = 0u64;
+        for link in &self.links {
+            sent += link.bytes_sent();
+            recv += link.bytes_recv();
+        }
+        (sent, recv)
+    }
+
+    /// Re-issue the tree topology to every worker under a bumped epoch —
+    /// the supervisor calls this after any recovery so all peer links are
+    /// torn down (discarding stale in-flight payloads) and rebuilt against
+    /// the current listener addresses (replacements bind fresh ones).
+    /// Charged to the ledger's recovery bucket. No-op for star pools.
+    pub fn reissue_topology(&mut self, ledger: &NetworkLedger) -> Result<()> {
+        if !self.is_physical_tree() {
+            return Ok(());
+        }
+        self.topo_epoch += 1;
+        for k in 0..self.links.len() {
+            let msg = NodeMessage::Topology(build_topology(
+                k,
+                self.topo_epoch,
+                self.peer_timeout_secs,
+                &self.listen_addrs,
+                &self.global_cols,
+            ));
+            ledger.record_recovery(msg.encode().len() as u64);
+            self.links[k].send(msg).map_err(|e| worker_err(k, e))?;
+        }
+        Ok(())
+    }
+
+    /// One tree-collective sweep: the leader sends a single `Sweep` down
+    /// its machine-0 link and receives the bracket root's merged
+    /// [`TreeSwept`] back — O(1) leader traffic per iteration, regardless
+    /// of M. The payload's origin/edge metadata is validated to cover
+    /// every machine (so strategy picks and ledger replays see the same
+    /// facts the staged engine would).
+    pub fn sweep_all_tree(&mut self, lam: f32, nu: f32, l2: f32) -> Result<TreeSwept> {
+        let m = self.machines();
+        self.links[0]
+            .send(NodeMessage::Sweep { lam, nu, l2, recycle: SweepResult::default() })
+            .map_err(|e| worker_err(0, e))?;
+        let swept = match self.links[0].recv().map_err(|e| worker_err(0, e))? {
+            NodeMessage::TreeSwept(swept) => swept,
+            NodeMessage::Abort { message } => {
+                return Err(DlrError::Solver(format!(
+                    "tree sweep failed: {message}"
+                )))
+            }
+            other => {
+                return Err(DlrError::Solver(format!(
+                    "expected tree-swept from machine 0, got {}",
+                    other.name()
+                )))
+            }
+        };
+        if swept.db.dim as usize != self.p || swept.dm.dim as usize != self.n {
+            return Err(DlrError::Solver(format!(
+                "tree sweep returned payload dims ({}, {}) but the problem is ({}, {})",
+                swept.db.dim, swept.dm.dim, self.p, self.n
+            )));
+        }
+        let mut seen = vec![false; m];
+        for o in &swept.origins {
+            let k = o.machine as usize;
+            if k >= m || seen[k] {
+                return Err(DlrError::Solver(format!(
+                    "tree sweep origin metadata names machine {k} twice (or out of \
+                     range for M = {m})"
+                )));
+            }
+            seen[k] = true;
+        }
+        if swept.origins.len() != m {
+            return Err(DlrError::Solver(format!(
+                "tree sweep covered {} of {m} machines",
+                swept.origins.len()
+            )));
+        }
+        if swept.edges.len() != m - 1 {
+            return Err(DlrError::Solver(format!(
+                "tree sweep reported {} merge edges but an M = {m} bracket has {}",
+                swept.edges.len(),
+                m - 1
+            )));
+        }
+        Ok(swept)
+    }
+
+    /// The tree apply: one `Apply` down the machine-0 link, relayed along
+    /// the tree, answered by a single aggregated `Ack`.
+    pub fn apply_all_tree(
+        &mut self,
+        alpha: f32,
+        dmargins: &Arc<SparseVec>,
+        delta: Option<&Arc<SparseVec>>,
+    ) -> Result<()> {
+        self.links[0]
+            .send(NodeMessage::Apply {
+                alpha,
+                dmargins: Arc::clone(dmargins),
+                delta: delta.cloned(),
+            })
+            .map_err(|e| worker_err(0, e))?;
+        match self.links[0].recv().map_err(|e| worker_err(0, e))? {
+            NodeMessage::Ack => Ok(()),
+            NodeMessage::Abort { message } => Err(DlrError::Solver(format!(
+                "tree apply failed: {message}"
+            ))),
+            other => Err(DlrError::Solver(format!(
+                "expected the aggregated tree ack, got {}",
+                other.name()
+            ))),
+        }
     }
 
     /// One parallel sweep across all machines (Alg 4 steps 1–2): a send
@@ -840,9 +1095,12 @@ impl WorkerPool {
             })?;
             let admitted = self.admit_replacement(&listener, k, window, ledger);
             self.listener = Some(listener);
-            let (link, engine) = admitted?;
+            let (link, engine, listen_addr) = admitted?;
             self.links[k] = link;
             self.engine_names[k] = engine;
+            // a replacement binds a fresh peer listener; the next
+            // topology re-issue points its peers at it
+            self.listen_addrs[k] = listen_addr;
             Ok(())
         } else {
             self.respawn_in_process(k)
@@ -859,7 +1117,7 @@ impl WorkerPool {
         k: usize,
         window: Duration,
         ledger: &NetworkLedger,
-    ) -> Result<(Box<dyn Transport>, String)> {
+    ) -> Result<(Box<dyn Transport>, String, String)> {
         let expected = &self.global_cols[k];
         let (n, p) = (self.n, self.p);
         let deadline = Instant::now() + window;
@@ -903,6 +1161,7 @@ impl WorkerPool {
                     cols_checksum,
                     engine,
                     family: jfam,
+                    listen_addr,
                 } => {
                     let jm = machine as usize;
                     if jm != k {
@@ -962,15 +1221,32 @@ impl WorkerPool {
                         }
                         return Err(DlrError::Solver(msg));
                     }
+                    if self.tree && listen_addr.is_empty() {
+                        let msg = format!(
+                            "replacement worker {k} announced no peer listener but the \
+                             fit runs the tree topology — start it with --topology tree"
+                        );
+                        if let Err(e) =
+                            link.send(NodeMessage::Abort { message: msg.clone() })
+                        {
+                            log_lost_abort(k, "re-admission", &e);
+                        }
+                        return Err(DlrError::Solver(msg));
+                    }
+                    // the replacement's welcome never carries a topology:
+                    // a worker with a peer table idles (answering control
+                    // traffic star-style) until the supervisor re-issues
+                    // the tree to *every* worker under a fresh epoch
                     let welcome = NodeMessage::Welcome {
                         family: self.family.name().to_string(),
                         alpha: self.enet_alpha,
+                        topology: None,
                     };
                     ledger.record_recovery(welcome.encode().len() as u64);
                     link.send(welcome).map_err(|e| worker_err(k, e))?;
                     // admitted: lift the handshake deadline for fit traffic
                     raw.set_read_timeout(None)?;
-                    return Ok((link, engine));
+                    return Ok((link, engine, listen_addr));
                 }
                 NodeMessage::Abort { message } => {
                     return Err(DlrError::Solver(format!(
@@ -1013,7 +1289,7 @@ impl WorkerPool {
             Arc::clone(&self.tasks_done),
         ));
         let mut link: Box<dyn Transport> =
-            Box::new(LeaderLink { tx: tx.clone(), rx: reply_rx });
+            Box::new(LeaderLink::new(tx.clone(), reply_rx));
         let expected = &self.global_cols[k];
         let engine = handshake(
             link.as_mut(),
@@ -1037,6 +1313,31 @@ impl WorkerPool {
     pub fn wrap_link(&mut self, k: usize, fault: Fault, at: usize) {
         let inner = self.links.remove(k);
         self.links.insert(k, Box::new(FaultyTransport::new(inner, fault, at)));
+    }
+}
+
+/// Build machine `k`'s view of the collective tree: its bracket parent and
+/// children (from the deterministic pairwise merge bracket — see
+/// [`bracket_children`]) resolved to the peer addresses and shard
+/// checksums the workers announced at admission.
+fn build_topology(
+    k: usize,
+    epoch: u32,
+    peer_timeout_secs: f64,
+    listen_addrs: &[String],
+    global_cols: &[Vec<u32>],
+) -> Topology {
+    let m = listen_addrs.len();
+    let info = |j: u32| PeerInfo {
+        machine: j,
+        addr: listen_addrs[j as usize].clone(),
+        cols_checksum: crc_u32(&global_cols[j as usize]),
+    };
+    Topology {
+        epoch,
+        parent: bracket_parent(m)[k].map(&info),
+        children: bracket_children(m)[k].iter().map(|&c| info(c)).collect(),
+        peer_timeout_secs,
     }
 }
 
@@ -1087,7 +1388,7 @@ fn spawn_worker_thread(
                 return;
             }
         };
-        if reply_tx.send(node.join_message()).is_err() {
+        if reply_tx.send(node.join_message("")).is_err() {
             return;
         }
         while let Ok(req) = rx.recv() {
@@ -1146,6 +1447,7 @@ fn handshake(
             cols_checksum: jc,
             engine,
             family: jfam,
+            listen_addr: _,
         } => {
             let ok = jm as usize == machine
                 && jn == n
@@ -1170,6 +1472,7 @@ fn handshake(
             link.send(NodeMessage::Welcome {
                 family: family.name().to_string(),
                 alpha: enet_alpha,
+                topology: None,
             })
             .map_err(|e| worker_err(machine, e))?;
             Ok(engine)
@@ -1236,23 +1539,47 @@ pub fn spawn_local_socket_workers(
     ds: &Dataset,
     addr: std::net::SocketAddr,
 ) -> Vec<JoinHandle<Result<()>>> {
+    spawn_local_socket_workers_counted(cfg, ds, addr).0
+}
+
+/// [`spawn_local_socket_workers`], additionally returning each worker's
+/// shared [`WireCounters`] (indexed by machine) — every byte the worker
+/// moves, over its leader link *and* its peer links, lands in its counter.
+/// The topology bench reads these to compare leader vs worker bandwidth.
+pub fn spawn_local_socket_workers_counted(
+    cfg: &TrainConfig,
+    ds: &Dataset,
+    addr: std::net::SocketAddr,
+) -> (Vec<JoinHandle<Result<()>>>, Vec<Arc<WireCounters>>) {
     let partition = crate::solver::dglmnet::DGlmnetSolver::partition_for(ds, cfg);
     let shards = shard_in_memory(&ds.x, &partition);
     let p = ds.n_features();
     let y = Arc::new(ds.y.clone());
-    shards
+    let counters: Vec<Arc<WireCounters>> =
+        (0..shards.len()).map(|_| Arc::new(WireCounters::default())).collect();
+    let handles = shards
         .into_iter()
         .map(|shard| {
             let cfg = cfg.clone();
             let y = Arc::clone(&y);
+            let counters = Arc::clone(&counters[shard.machine]);
             std::thread::spawn(move || {
                 let artifacts = crate::runtime::default_artifacts_dir();
                 let mut node = WorkerNode::from_shard(&cfg, shard, y, p, &artifacts)?;
                 let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
-                node.serve(&mut t)
+                t.share_counters(Arc::clone(&counters));
+                let mut peers = if cfg.topology == TopologyKind::Tree {
+                    let mut table = PeerTable::bind(t.local_ip()?)?;
+                    table.share_counters(Arc::clone(&counters));
+                    Some(table)
+                } else {
+                    None
+                };
+                node.serve(&mut t, peers.as_mut())
             })
         })
-        .collect()
+        .collect();
+    (handles, counters)
 }
 
 /// Launch one socket worker *thread* per machine of an on-disk store, each
@@ -1274,7 +1601,12 @@ pub fn spawn_local_socket_workers_from_store(
                 let artifacts = crate::runtime::default_artifacts_dir();
                 let mut node = WorkerNode::from_store(&cfg, &store, k, &artifacts)?;
                 let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(30))?;
-                node.serve(&mut t)
+                let mut peers = if cfg.topology == TopologyKind::Tree {
+                    Some(PeerTable::bind(t.local_ip()?)?)
+                } else {
+                    None
+                };
+                node.serve(&mut t, peers.as_mut())
             })
         })
         .collect()

@@ -14,7 +14,12 @@
 //!   actionable error, never silently admitted;
 //! * elastic join/leave: resharding a store M → M−1 between λ steps and
 //!   continuing from the current β reproduces a fresh fit at the new
-//!   machine count warm-started from the same β, bit for bit.
+//!   machine count warm-started from the same β, bit for bit;
+//! * the whole matrix holds under `topology = tree` too: a killed tree
+//!   worker is replaced and the topology re-issued to every worker under a
+//!   fresh epoch (the completed fit stays bit-identical to the undisturbed
+//!   tree run), a wedged tree root trips the recv deadline cleanly, and
+//!   elastic resharding composes with the tree knob.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -23,9 +28,9 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use dglmnet::cluster::protocol::{crc_u32, NodeMessage};
-use dglmnet::cluster::transport::{Fault, FaultyTransport, SocketTransport};
+use dglmnet::cluster::transport::{Fault, FaultyTransport, PeerTable, SocketTransport};
 use dglmnet::cluster::WorkerNode;
-use dglmnet::config::{EngineKind, TrainConfig};
+use dglmnet::config::{EngineKind, TopologyKind, TrainConfig};
 use dglmnet::data::dataset::Dataset;
 use dglmnet::data::store::ShardStore;
 use dglmnet::data::synth;
@@ -115,7 +120,7 @@ fn good_worker(
             WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
                 .unwrap();
         let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
-        let _ = node.serve(&mut t);
+        let _ = node.serve(&mut t, None);
     })
 }
 
@@ -139,7 +144,7 @@ fn doomed_worker(
                 .unwrap();
         let socket = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
         let mut t = FaultyTransport::new(Box::new(socket), Fault::Drop, dies_at);
-        let _ = node.serve(&mut t);
+        let _ = node.serve(&mut t, None);
     })
 }
 
@@ -168,6 +173,7 @@ fn join_body(ds: &Dataset, cfg: &TrainConfig, machine: usize) -> Vec<u8> {
         cols_checksum: crc_u32(&cols),
         engine: "native".into(),
         family: "logistic".into(),
+        listen_addr: String::new(),
     }
     .encode()
 }
@@ -294,6 +300,176 @@ fn a_replacement_with_a_mismatched_shard_is_rejected() {
     rogue.join().unwrap();
     doomed.join().unwrap();
     good.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// the same chaos matrix under topology = tree
+// ---------------------------------------------------------------------------
+
+/// A well-behaved tree worker: binds a peer listener and serves with it.
+fn tree_good_worker(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    machine: usize,
+    addr: SocketAddr,
+) -> JoinHandle<()> {
+    let shard = DGlmnetSolver::shard_for(ds, cfg, machine);
+    let y = std::sync::Arc::new(ds.y.clone());
+    let p = ds.n_features();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let mut node =
+            WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
+                .unwrap();
+        let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
+        let mut peers = PeerTable::bind(t.local_ip().unwrap()).unwrap();
+        let _ = node.serve(&mut t, Some(&mut peers));
+    })
+}
+
+/// A tree worker whose **leader link** is injured on its `at`-th delivered
+/// message — kill or wedge the bracket root mid-fit while its peer links
+/// stay healthy.
+fn tree_faulty_worker(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    machine: usize,
+    addr: SocketAddr,
+    fault: Fault,
+    at: usize,
+) -> JoinHandle<()> {
+    let shard = DGlmnetSolver::shard_for(ds, cfg, machine);
+    let y = std::sync::Arc::new(ds.y.clone());
+    let p = ds.n_features();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let mut node =
+            WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
+                .unwrap();
+        let socket = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
+        let mut peers = PeerTable::bind(socket.local_ip().unwrap()).unwrap();
+        let mut t = FaultyTransport::new(Box::new(socket), fault, at);
+        let _ = node.serve(&mut t, Some(&mut peers));
+    })
+}
+
+/// The tree tentpole chaos pin: kill the bracket root (machine 0 — the one
+/// worker whose leader link carries the whole data plane) mid-fit. The
+/// supervisor probes it out, re-admits a replacement (welcomed *without* a
+/// topology — it idles at epoch 0 answering star-style), re-issues the
+/// tree to **every** worker under a bumped epoch, and the completed fit
+/// reproduces the undisturbed tree run bit for bit.
+#[test]
+fn killed_tree_worker_is_replaced_and_the_fit_stays_bit_identical() {
+    let ds = synth::dna_like(400, 40, 5, 806);
+    let lam = lambda_max(&ds) / 64.0;
+    let mut cfg = supervised_cfg(3, lam, 40);
+    cfg.topology = TopologyKind::Tree;
+
+    let (fit_ref, beta_ref) = socket_fit(&ds, &cfg, lam);
+    assert!(fit_ref.iterations >= 4, "need a fit long enough to kill");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let w1 = tree_good_worker(&ds, &cfg, 1, addr);
+    let w2 = tree_good_worker(&ds, &cfg, 2, addr);
+    let doomed = tree_faulty_worker(&ds, &cfg, 0, addr, Fault::Drop, 5);
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    assert_eq!(solver.topology_epoch(), 1, "admission installs the first epoch");
+    // connects only after admission closed; waits in the listener backlog
+    // until the supervisor re-admits machine 0
+    let replacement = tree_good_worker(&ds, &cfg, 0, addr);
+
+    let fit_chaos = solver.fit_lambda(lam).unwrap();
+    assert!(
+        solver.recovery_comm_bytes() > 0,
+        "the supervisor must have probed and re-admitted"
+    );
+    assert!(
+        solver.topology_epoch() >= 2,
+        "recovery must re-issue the tree under a fresh epoch, got {}",
+        solver.topology_epoch()
+    );
+    let beta_chaos = solver.beta.clone();
+    assert_bit_identical(&fit_ref, &beta_ref, &fit_chaos, &beta_chaos);
+    drop(solver); // sends Shutdown to the survivors
+    doomed.join().unwrap();
+    replacement.join().unwrap();
+    w1.join().unwrap();
+    w2.join().unwrap();
+}
+
+/// A wedged tree root — alive at the TCP level but sitting on the leader's
+/// request — must trip the configured recv deadline as a clean, prompt,
+/// attributable error, exactly like the star case.
+#[test]
+fn wedged_tree_root_trips_the_recv_deadline_instead_of_hanging() {
+    let ds = synth::dna_like(200, 20, 4, 807);
+    let cfg = TrainConfig::builder()
+        .machines(3)
+        .engine(EngineKind::Native)
+        .lambda(0.2)
+        .max_iter(10)
+        .recv_timeout_secs(1.0)
+        .topology(TopologyKind::Tree)
+        .build();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let w1 = tree_good_worker(&ds, &cfg, 1, addr);
+    let w2 = tree_good_worker(&ds, &cfg, 2, addr);
+    let wedged = tree_faulty_worker(
+        &ds,
+        &cfg,
+        0,
+        addr,
+        Fault::Delay(Duration::from_secs(4)),
+        2,
+    );
+
+    let mut solver = DGlmnetSolver::from_dataset_socket(&ds, &cfg, listener).unwrap();
+    let err = solver.fit_lambda(0.2).unwrap_err().to_string();
+    assert!(err.contains("worker 0"), "{err}");
+    assert!(err.contains("timed out"), "{err}");
+    drop(solver); // closes the links, unblocking every serve loop
+    wedged.join().unwrap();
+    w1.join().unwrap();
+    w2.join().unwrap();
+}
+
+/// Elastic resharding composes with the tree knob: under an in-process
+/// transport `topology = tree` stays leader-staged, so the resized
+/// continuation must still match a fresh fit at the new machine count
+/// bit for bit.
+#[test]
+fn elastic_resize_under_a_tree_config_matches_a_fresh_fit() {
+    let ds = synth::dna_like(400, 40, 5, 808);
+    let lam = lambda_max(&ds);
+    let (lam1, lam2) = (lam / 8.0, lam / 32.0);
+    let mut cfg3 = native_cfg(3, lam1, 40);
+    cfg3.topology = TopologyKind::Tree;
+
+    let dir3 = tmp_dir("elastic_tree_src");
+    let partition3 = DGlmnetSolver::partition_for(&ds, &cfg3);
+    let store3 = ShardStore::create(&dir3, &ds, &partition3, "round-robin").unwrap();
+    let mut s3 = DGlmnetSolver::from_store(&store3, &cfg3).unwrap();
+    s3.fit_lambda(lam1).unwrap();
+    let warm = s3.beta.clone();
+
+    let dir2 = tmp_dir("elastic_tree_dst");
+    let mut resized = s3.elastic_resize(&store3, 2, &dir2).unwrap();
+    let fit_resized = resized.fit_lambda(lam2).unwrap();
+    assert!(fit_resized.iterations >= 2, "need a non-trivial continuation");
+
+    let mut cfg2 = native_cfg(2, lam2, 40);
+    cfg2.topology = TopologyKind::Tree;
+    let mut fresh = DGlmnetSolver::from_dataset(&ds, &cfg2).unwrap();
+    fresh.set_beta(&warm).unwrap();
+    let fit_fresh = fresh.fit_lambda(lam2).unwrap();
+
+    assert_bit_identical(&fit_fresh, &fresh.beta, &fit_resized, &resized.beta);
+    for d in [dir3, dir2] {
+        std::fs::remove_dir_all(&d).ok();
+    }
 }
 
 /// Elastic join/leave between λ steps: reshard the store 3 → 2, continue

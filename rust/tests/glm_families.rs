@@ -365,7 +365,7 @@ fn good_worker(
             WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
                 .unwrap();
         let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
-        let _ = node.serve(&mut t);
+        let _ = node.serve(&mut t, None);
     })
 }
 
@@ -388,7 +388,7 @@ fn doomed_worker(
                 .unwrap();
         let socket = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
         let mut t = FaultyTransport::new(Box::new(socket), Fault::Drop, dies_at);
-        let _ = node.serve(&mut t);
+        let _ = node.serve(&mut t, None);
     })
 }
 

@@ -225,7 +225,7 @@ fn good_worker(
             WorkerNode::from_shard(&cfg, shard, y, p, std::path::Path::new("artifacts"))
                 .unwrap();
         let mut t = SocketTransport::connect_retry(addr, Duration::from_secs(20)).unwrap();
-        let _ = node.serve(&mut t);
+        let _ = node.serve(&mut t, None);
     })
 }
 
@@ -254,6 +254,7 @@ fn join_body(ds: &Dataset, cfg: &TrainConfig, machine: usize) -> Vec<u8> {
         cols_checksum: crc_u32(&cols),
         engine: "native".into(),
         family: "logistic".into(),
+        listen_addr: String::new(),
     }
     .encode()
 }

@@ -1,18 +1,29 @@
 //! Wire-codec property tests: lossless codecs round-trip bit-exactly, the
 //! f16 codec's error is bounded, charged bytes equal encoded length for
-//! every codec, and the allgather-Δβ exchange reproduces the reduce-Δm
-//! objective trajectory exactly on dna-like and webspam-like problems.
+//! every codec, the allgather-Δβ exchange reproduces the reduce-Δm
+//! objective trajectory exactly on dna-like and webspam-like problems, and
+//! the physical peer-to-peer tree topology is pinned: tree-edge frames
+//! carry exactly the bytes the ledger charges, and a tree-socket fit is
+//! bit-identical — trajectory, β, and charged ledger — to star-socket and
+//! in-process at M ∈ {3, 8} while the leader moves strictly fewer bytes.
 
 mod common;
+
+use std::net::TcpListener;
 
 use common::prop_check;
 use dglmnet::cluster::codec::{
     f16_round_trip, CodecPolicy, MessageClass, WireCodec,
 };
-use dglmnet::config::{EngineKind, ExchangeStrategy, TrainConfig};
+use dglmnet::cluster::protocol::{
+    EdgeStat, NodeMessage, OriginStat, TreePayload, TreeSwept,
+};
+use dglmnet::config::{EngineKind, ExchangeStrategy, TopologyKind, TrainConfig};
+use dglmnet::data::dataset::Dataset;
 use dglmnet::data::sparse::SparseVec;
 use dglmnet::data::synth;
-use dglmnet::solver::{lambda_max, DGlmnetSolver};
+use dglmnet::solver::pool::spawn_local_socket_workers_counted;
+use dglmnet::solver::{lambda_max, DGlmnetSolver, FitResult};
 use dglmnet::util::rng::Xoshiro256;
 
 /// Random sparse message with nonzero values in the f16 normal range
@@ -172,6 +183,170 @@ fn allgather_beta_reproduces_reduce_dm_trajectory() {
             fg.comm_bytes,
             fr.comm_bytes
         );
+    }
+}
+
+/// Satellite pin: the bytes a tree edge frames for an f32-exact payload
+/// equal the ledger's charged codec cost **byte-for-byte** under the
+/// default lossless policy — the payload section is exactly the charged
+/// cost plus the fixed 10-byte mode/header envelope the accounting
+/// contract excludes (mode byte + `[u32 dim][u8 codec][u32 len]`). A
+/// genuine f64 merge intermediate frames in raw mode with a fully
+/// predictable size too: `1 + 8 + 12·nnz` bytes — wider than the f32
+/// framing the model charges, which is why only interior Δm edges (whose
+/// overlapping sums don't round-trip f32) ever pay it.
+#[test]
+fn prop_tree_edge_frames_cost_exactly_what_the_ledger_charges() {
+    prop_check("tree-edge-frame-cost", 100, |rng, _| {
+        let policy = CodecPolicy::lossless();
+        let db_sv = random_message(rng);
+        let dm_sv = random_message(rng);
+        let widen = |sv: &SparseVec| TreePayload {
+            dim: sv.dim as u32,
+            indices: sv.indices.clone(),
+            values: sv.values.iter().map(|&v| v as f64).collect(),
+        };
+        let (db, dm) = (widen(&db_sv), widen(&dm_sv));
+        assert!(db.is_f32_exact() && dm.is_f32_exact());
+        let origins = vec![
+            OriginStat { machine: 1, compute_secs: 0.5, db_nnz: 3, dm_nnz: 4 },
+            OriginStat { machine: 2, compute_secs: 0.25, db_nnz: 1, dm_nnz: 9 },
+        ];
+        let edges = vec![EdgeStat { into: 1, from: 2, db_nnz: 1, dm_nnz: 9 }];
+
+        let body = NodeMessage::TreeSwept(TreeSwept {
+            db,
+            dm,
+            origins: origins.clone(),
+            edges: edges.clone(),
+        })
+        .encode();
+
+        let (_, db_cost) = policy.pick(&db_sv.indices, db_sv.dim, MessageClass::Beta);
+        let (_, dm_cost) = policy.pick(&dm_sv.indices, dm_sv.dim, MessageClass::Margins);
+        let db_sec = 10 + db_cost as usize;
+        let dm_sec = 10 + dm_cost as usize;
+        let meta = 4 + 20 * origins.len() + 4 + 16 * edges.len();
+        assert_eq!(
+            body.len(),
+            1 + db_sec + dm_sec + meta,
+            "f32-exact tree payload must frame exactly the charged bytes"
+        );
+
+        // force a non-f32-exact Δm (an interior-edge merge sum) and pin the
+        // raw-f64 section size: mode byte + dim + len + (u32 idx, f64 val)
+        if dm_sv.nnz() > 0 {
+            let mut raw = widen(&dm_sv);
+            for v in &mut raw.values {
+                *v += 1e-12;
+            }
+            assert!(!raw.is_f32_exact());
+            let raw_sec = 1 + 8 + 12 * raw.nnz();
+            let body_raw = NodeMessage::TreeSwept(TreeSwept {
+                db: widen(&db_sv),
+                dm: raw,
+                origins: origins.clone(),
+                edges: edges.clone(),
+            })
+            .encode();
+            assert_eq!(body_raw.len(), body.len() - dm_sec + raw_sec);
+        }
+    });
+}
+
+fn topology_cfg(m: usize, lambda: f64, topology: TopologyKind) -> TrainConfig {
+    TrainConfig::builder()
+        .machines(m)
+        .engine(EngineKind::Native)
+        .lambda(lambda)
+        .max_iter(12)
+        .topology(topology)
+        .build()
+}
+
+/// One socket fit at the configured topology; returns the fit, the final
+/// β, and the leader's measured bytes on the wire (sent, received).
+fn socket_fit(ds: &Dataset, cfg: &TrainConfig, lambda: f64) -> (FitResult, Vec<f32>, (u64, u64)) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (workers, _counters) = spawn_local_socket_workers_counted(cfg, ds, addr);
+    let mut solver = DGlmnetSolver::from_dataset_socket(ds, cfg, listener).unwrap();
+    let fit = solver.fit_lambda(lambda).unwrap();
+    let beta = solver.beta.clone();
+    let wire = solver.leader_wire_bytes();
+    drop(solver); // sends Shutdown to every node
+    for h in workers {
+        h.join().expect("worker thread panicked").unwrap();
+    }
+    (fit, beta, wire)
+}
+
+/// The tentpole acceptance pin: routing the merge bracket's edges over
+/// physical worker↔worker links must not change a single bit — objective
+/// trajectory, per-iteration records (including the auto strategy pick),
+/// the charged comm ledger, and the final β all match the star-socket and
+/// in-process runs exactly, on both dataset shapes at M ∈ {3, 8} — while
+/// the leader's measured bytes on the wire strictly drop (its data plane
+/// shrinks to the O(1) root edge).
+#[test]
+fn physical_tree_is_bit_identical_to_star_and_in_process() {
+    let problems = [
+        ("dna-like", synth::dna_like(900, 80, 6, 640)),
+        ("webspam-like", synth::webspam_like(400, 6_000, 10, 641)),
+    ];
+    for (name, ds) in &problems {
+        let lam = lambda_max(ds) / 4.0;
+        for m in [3usize, 8] {
+            let cfg_star = topology_cfg(m, lam, TopologyKind::Star);
+            let cfg_tree = topology_cfg(m, lam, TopologyKind::Tree);
+
+            let mut local = DGlmnetSolver::from_dataset(ds, &cfg_star).unwrap();
+            let fit_local = local.fit_lambda(lam).unwrap();
+            let (fit_star, beta_star, wire_star) = socket_fit(ds, &cfg_star, lam);
+            let (fit_tree, beta_tree, wire_tree) = socket_fit(ds, &cfg_tree, lam);
+            assert!(fit_local.iterations >= 2, "{name} M={m}: need a non-trivial fit");
+
+            for (fit, beta, kind) in
+                [(&fit_star, &beta_star, "star"), (&fit_tree, &beta_tree, "tree")]
+            {
+                assert_eq!(fit_local.iterations, fit.iterations, "{name} M={m} {kind}");
+                assert_eq!(
+                    fit_local.objective.to_bits(),
+                    fit.objective.to_bits(),
+                    "{name} M={m} {kind}: objective diverged"
+                );
+                assert_eq!(
+                    fit_local.comm_bytes, fit.comm_bytes,
+                    "{name} M={m} {kind}: charged ledger diverged"
+                );
+                assert_eq!(fit_local.trace.len(), fit.trace.len(), "{name} M={m} {kind}");
+                for (a, b) in fit_local.trace.iter().zip(&fit.trace) {
+                    assert_eq!(
+                        a.objective.to_bits(),
+                        b.objective.to_bits(),
+                        "{name} M={m} {kind} iter {}",
+                        a.iter
+                    );
+                    assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{name} M={m} {kind}");
+                    assert_eq!(a.comm_bytes, b.comm_bytes, "{name} M={m} {kind}");
+                    assert_eq!(a.exchange, b.exchange, "{name} M={m} {kind}");
+                }
+                for (j, (a, b)) in local.beta.iter().zip(beta).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name} M={m} {kind} beta[{j}]");
+                }
+            }
+
+            // the leader's *measured* traffic must strictly drop under the
+            // tree: its per-iteration data plane is one Sweep↓ + one merged
+            // TreeSwept↑ + one Apply↓ + one Ack↑ on the root edge, vs M of
+            // each under the star
+            let (star_total, tree_total) =
+                (wire_star.0 + wire_star.1, wire_tree.0 + wire_tree.1);
+            assert!(
+                tree_total < star_total,
+                "{name} M={m}: tree leader must move fewer bytes ({tree_total} vs {star_total})"
+            );
+        }
     }
 }
 

@@ -18,10 +18,16 @@ Fails (exit 1) when:
     (25%) — the leader-memory canary of the out-of-core data plane, or
   * any `*_speedup_x` ratio (the sweep-kernel ablation in
     BENCH_ablation.json) erodes by more than MAX_SPEEDUP_EROSION (25%)
-    relative to the baseline — a kernel win must not quietly rot.
+    relative to the baseline — a kernel win must not quietly rot, or
+  * the tree topology's `leader_byte_ratio_m8_over_m4_tree` exceeds
+    MAX_TREE_LEADER_RATIO (1.15) — an *absolute* gate, checked even in
+    bootstrap mode: the peer-to-peer tree's leader bytes per iteration
+    must stay independent of M (the star's ratio sits near 2 and is
+    informational only).
 
 Bootstrap mode: when BASELINE does not exist yet, prints instructions and
-exits 0 — commit the fresh file as the baseline to arm the gate.
+exits 0 (absolute gates still apply) — commit the fresh file as the
+baseline to arm the relative gates.
 """
 
 import json
@@ -38,6 +44,30 @@ MIN_COMPARABLE_SECS = 50e-6
 # speedup ratios (cov vs naive, threaded vs serial) may shrink this much
 # before the gate trips — they are ratios of two noisy medians
 MAX_SPEEDUP_EROSION = 0.25
+# absolute ceiling on the tree topology's leader-byte M-scaling: per-fit
+# admission traffic is O(M) but amortizes over the iterations, so the
+# measured M=8 / M=4 per-iteration ratio sits near 1.0 when the leader's
+# data plane is truly pinned to the root edge
+MAX_TREE_LEADER_RATIO = 1.15
+
+
+def tree_leader_failures(fresh):
+    """Absolute (baseline-free) gate on the tree leader-byte M-ratio."""
+    out = []
+    for name, entry in sorted(fresh.items()):
+        if not isinstance(entry, dict):
+            continue
+        ratio = entry.get("leader_byte_ratio_m8_over_m4_tree")
+        if ratio is None:
+            continue
+        if ratio > MAX_TREE_LEADER_RATIO:
+            out.append(
+                f"{name}.leader_byte_ratio_m8_over_m4_tree: {ratio:.2f}x > "
+                f"{MAX_TREE_LEADER_RATIO:.2f}x (tree leader bytes must be O(1) in M)")
+        else:
+            print(f"  [ok]     {name}.leader_byte_ratio_m8_over_m4_tree: "
+                  f"{ratio:.2f}x <= {MAX_TREE_LEADER_RATIO:.2f}x")
+    return out
 
 
 def load(path):
@@ -51,14 +81,20 @@ def main():
         return 2
     fresh_path, baseline_path = sys.argv[1], sys.argv[2]
     fresh = load(fresh_path)
+    absolute = tree_leader_failures(fresh)
     try:
         baseline = load(baseline_path)
     except FileNotFoundError:
         print(f"no committed baseline at {baseline_path} — bootstrap mode.")
         print(f"to arm the regression gate:  cp {fresh_path} {baseline_path}  and commit it.")
+        if absolute:
+            print(f"\n{len(absolute)} absolute-gate failure(s):")
+            for f in absolute:
+                print(f"  FAIL  {f}")
+            return 1
         return 0
 
-    failures = []
+    failures = absolute
     compared = 0
     for name, base in sorted(baseline.items()):
         cur = fresh.get(name)
